@@ -1,0 +1,117 @@
+//! End-to-end driver: the full three-layer stack on a real small workload.
+//!
+//! Proves all layers compose: synthetic DP-mixture data (the paper's §4
+//! workload) → **L3** Rust OCC coordinator (BSP epochs, master validation)
+//! → **L2/L1** AOT-compiled JAX+Pallas artifacts executed through PJRT
+//! (when `artifacts/` exists; falls back to the native backend with a
+//! warning otherwise) → headline metrics: rejections vs the Thm 3.3 bound,
+//! per-epoch scaling behaviour, objective vs the serial baseline.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use occml::algorithms::objective::dp_objective;
+use occml::config::{Algo, BackendKind, RunConfig};
+use occml::coordinator::{driver, Model};
+use occml::data::generators::{dp_clusters, GenConfig};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> occml::Result<()> {
+    let n = 131_072; // 2^17 points (paper: 2^27; scaled for this 1-core box)
+    let dim = 16;
+    let lambda = 4.0; // λ² = 16 > typical within-cluster ‖x−y‖² = 8 ⇒ K ≈ K_N
+    let seed = 2013; // the year the paper appeared
+
+    println!("=== occml end-to-end pipeline ===");
+    println!("[1/5] generating workload: {n} points, dim {dim}, DP stick-breaking θ=1");
+    let data = Arc::new(dp_clusters(&GenConfig { n, dim, theta: 1.0, seed }));
+    let k_latent = data.distinct_components(n).unwrap();
+    println!("      latent clusters K_N = {k_latent}");
+
+    let use_xla = Path::new("artifacts/manifest.json").exists();
+    let backend_kind = if use_xla { BackendKind::Xla } else { BackendKind::Native };
+    if !use_xla {
+        eprintln!("      WARNING: artifacts/ missing — falling back to native backend.");
+        eprintln!("      Run `make artifacts` to exercise the XLA/PJRT path.");
+    }
+
+    let cfg = RunConfig {
+        algo: Algo::DpMeans,
+        lambda,
+        procs: 8,
+        block: 1024, // P·b = 8192 per epoch → 32 epochs per pass
+        iterations: 3,
+        bootstrap_div: 16,
+        backend: backend_kind,
+        n,
+        dim,
+        seed,
+        ..RunConfig::default()
+    };
+
+    println!(
+        "[2/5] running OCC DP-means: P={} b={} ({} epochs/pass), backend={}",
+        cfg.procs,
+        cfg.block,
+        n / cfg.points_per_epoch(),
+        cfg.backend.name()
+    );
+    let backend = driver::make_backend(&cfg)?;
+    let out = driver::run_with(&cfg, data.clone(), backend)?;
+    let Model::Dp(model) = &out.model else { unreachable!() };
+
+    println!("[3/5] per-iteration summary:");
+    println!("      iter  epochs  proposed  accepted  rejected      time");
+    for it in 0..out.summary.iterations() {
+        let (mut ne, mut pr, mut ac, mut rj) = (0usize, 0usize, 0usize, 0usize);
+        for e in out.summary.epochs.iter().filter(|e| e.iteration == it && e.epoch != usize::MAX) {
+            ne += 1;
+            pr += e.proposed;
+            ac += e.accepted;
+            rj += e.rejected;
+        }
+        println!(
+            "      {it:>4}  {ne:>6}  {pr:>8}  {ac:>8}  {rj:>8}  {:>8.2?}",
+            out.summary.iteration_time(it)
+        );
+    }
+
+    println!("[4/5] validating against the paper's claims:");
+    // Thm 3.3: per-pass master traffic ≤ Pb + K (expectation; we allow 2×).
+    let pass0: usize = out
+        .summary
+        .epochs
+        .iter()
+        .filter(|e| e.iteration == 0 && e.epoch != usize::MAX)
+        .map(|e| e.proposed)
+        .sum();
+    let bound = cfg.points_per_epoch() + model.centers.rows;
+    println!("      master traffic pass 0: {pass0} (Thm 3.3 bound Pb+K = {bound})");
+    assert!(pass0 <= 2 * bound, "master traffic {pass0} blows the Thm 3.3 bound {bound}");
+
+    // Serializability sanity: same run at P=1 (identical Pb) is identical.
+    let cfg_p1 = RunConfig { procs: 1, block: cfg.points_per_epoch(), ..cfg.clone() };
+    let backend1 = driver::make_backend(&cfg_p1)?;
+    let out1 = driver::run_with(&cfg_p1, data.clone(), backend1)?;
+    let Model::Dp(m1) = &out1.model else { unreachable!() };
+    assert_eq!(m1.centers.data, model.centers.data, "P-dependence detected!");
+    println!("      P=8 result identical to P=1 result ✓ (serializability)");
+
+    // Objective vs serial DP-means.
+    let serial = occml::algorithms::dpmeans::serial_dp_means(&data, lambda, 3);
+    let js = dp_objective(&data, &serial.centers, lambda);
+    let jo = out.summary.objective.unwrap();
+    println!("      objective: OCC {jo:.1} vs serial {js:.1} (ratio {:.3})", jo / js);
+    assert!(jo <= 1.25 * js, "OCC objective more than 25% off serial");
+
+    println!("[5/5] headline:");
+    println!("      clusters: {} (latent {k_latent})", model.centers.rows);
+    println!("      total rejections: {} (≤ {} per pass by Thm 3.3)", out.summary.total_rejected(), cfg.points_per_epoch());
+    println!("      wall clock: {:.2?} on backend `{}`", out.summary.total_time, cfg.backend.name());
+    println!("=== e2e OK ===");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Latent feature learning with OCC BP-means.
+//!
+//! The §2.3 use case: points are *sums* of latent features (not exclusive
+//! clusters — e.g. objects in images, topics in documents). We generate a
+//! Beta-process workload, learn binary features with distributed BP-means,
+//! and report reconstruction error against the ground-truth generator.
+
+use occml::algorithms::bpmeans::representation_error;
+use occml::config::{Algo, RunConfig};
+use occml::coordinator::{driver, Model};
+use occml::data::generators::{bp_features, GenConfig};
+use std::sync::Arc;
+
+fn main() -> occml::Result<()> {
+    let n = 8_192;
+    let data = Arc::new(bp_features(&GenConfig { n, dim: 16, theta: 1.0, seed: 11 }));
+
+    let cfg = RunConfig {
+        algo: Algo::BpMeans,
+        lambda: 1.0,
+        procs: 8,
+        block: 128,
+        iterations: 4,
+        n,
+        seed: 11,
+        ..RunConfig::default()
+    };
+    let out = driver::run_with(&cfg, data.clone(), Arc::new(occml::runtime::native::NativeBackend::new()))?;
+    let Model::Bp(m) = &out.model else { unreachable!() };
+
+    println!("features learned : {}", m.features.rows);
+    println!("iterations       : {} (converged: {})", m.iterations, m.converged);
+    println!("objective        : {:.2}", out.summary.objective.unwrap());
+
+    let err = representation_error(&data, m);
+    // Noise floor: x = Σ z f + ε with ε per-coord std ½ ⇒ E‖ε‖² = 4 (D=16).
+    println!("mean sq. representation error : {err:.3} (noise floor ≈ 4.0)");
+    assert!(err < 8.0, "representation error {err} far above noise floor");
+
+    // Feature-usage histogram: how many points use k features.
+    let mut usage = std::collections::BTreeMap::new();
+    for z in &m.assignments {
+        *usage.entry(z.iter().filter(|&&b| b).count()).or_insert(0usize) += 1;
+    }
+    println!("feature-count histogram:");
+    for (k, count) in usage {
+        println!("  {k:>2} features: {count:>6} points");
+    }
+
+    // OCC accounting: creations happen in epoch bursts, rejections bounded.
+    println!(
+        "proposals {} / accepted {} / rejected {}",
+        out.summary.total_proposed(),
+        out.summary.total_accepted(),
+        out.summary.total_rejected()
+    );
+    Ok(())
+}

@@ -1,0 +1,98 @@
+"""AOT pipeline: lower the L2 entry points to HLO text + manifest.json.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the `xla` crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Env:    OCCML_DIM  — dimensionality to compile for (default 16)
+
+Shape-bucket grid (DESIGN.md §2): the Rust runtime pads each live call up
+to the smallest compiled bucket. Buckets must be multiples of the kernels'
+TILE_B (128).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (block bucket b, center bucket k) grids per entry point. The BP descent
+# kernel carries a k-length sequential loop, so its k buckets stay smaller.
+DP_ASSIGN_BUCKETS = [(256, 64), (256, 256), (1024, 64), (1024, 256), (1024, 1024)]
+SUFFSTATS_BUCKETS = [(256, 64), (256, 256), (1024, 64), (1024, 256), (1024, 1024)]
+BP_BUCKETS = [(256, 64), (256, 256), (1024, 64), (1024, 256)]
+
+
+def to_hlo_text(lowered):
+    """Convert a jax lowering to HLO text with a tuple root."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(kind, b, k, d):
+    """Lower one (kind, b, k) bucket; returns HLO text."""
+    xs = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    if kind == "dp_assign":
+        cs = jax.ShapeDtypeStruct((k, d), jnp.float32)
+        lowered = jax.jit(lambda x, c: model.dp_assign(x, c)).lower(xs, cs)
+    elif kind == "suffstats":
+        zs = jax.ShapeDtypeStruct((b,), jnp.int32)
+        fn = model.make_suffstats(k)
+        lowered = jax.jit(fn).lower(xs, zs)
+    elif kind == "bp_descend":
+        fs = jax.ShapeDtypeStruct((k, d), jnp.float32)
+        lowered = jax.jit(lambda x, f: model.bp_descend_model(x, f)).lower(xs, fs)
+    else:
+        raise ValueError(f"unknown kind {kind}")
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy alias
+    ap.add_argument("--dim", type=int, default=int(os.environ.get("OCCML_DIM", "16")))
+    ap.add_argument(
+        "--quick", action="store_true", help="only the smallest bucket per kind (CI smoke)"
+    )
+    args = ap.parse_args()
+    out_dir = args.out_dir if args.out is None else os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    grids = {
+        "dp_assign": DP_ASSIGN_BUCKETS,
+        "suffstats": SUFFSTATS_BUCKETS,
+        "bp_descend": BP_BUCKETS,
+    }
+    if args.quick:
+        grids = {kind: buckets[:1] for kind, buckets in grids.items()}
+
+    entries = []
+    for kind, buckets in grids.items():
+        for b, k in buckets:
+            name = f"{kind}_b{b}_k{k}_d{args.dim}.hlo.txt"
+            path = os.path.join(out_dir, name)
+            text = lower_entry(kind, b, k, args.dim)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append({"kind": kind, "b": b, "k": k, "d": args.dim, "file": name})
+            print(f"lowered {kind:<11} b={b:<5} k={k:<5} -> {name} ({len(text)} chars)")
+
+    manifest = {"version": 1, "dim": args.dim, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} entries, dim={args.dim} -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: BP-means binary coordinate descent.
+
+For each point of a tile, greedily choose the binary feature combination
+minimizing the residual: sweep features in index order (twice), turning
+feature j on iff `2·⟨r_wo, f_j⟩ > ‖f_j‖²`. The sweep is inherently
+sequential in j (each decision updates the residual), so the kernel keeps
+the j-loop as a `fori_loop` carrying (r, z) in VMEM while the b axis stays
+fully vectorized — on TPU the per-step work is a (TB,)·(d,) rank-1 update
+on the VPU plus a (TB × d)·(d,) matvec, with the point tile resident in
+VMEM across the whole loop (no HBM traffic per step).
+
+Matches `descend_z` in `rust/src/algorithms/bpmeans.rs` and
+`ref.ref_bp_descend` bit-for-bit on the decision sequence; all-zero
+(padded) feature rows are never taken.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+SWEEPS = 2
+
+
+def _bp_kernel(x_ref, f_ref, z_ref, r_ref, r2_ref):
+    """One grid step: coordinate descent for a (TILE_B, d) point tile."""
+    x = x_ref[...]  # (TB, d)
+    f = f_ref[...]  # (k, d)
+    tb, d = x.shape
+    k = f.shape[0]
+    fn2 = jnp.sum(f * f, axis=1)  # (k,)
+
+    def body(j, carry):
+        r, z = carry
+        fj = jax.lax.dynamic_slice(f, (j, 0), (1, d))[0]  # (d,)
+        fn2j = fn2[j]
+        zj = jax.lax.dynamic_slice(z, (0, j), (tb, 1))[:, 0]  # (TB,)
+        r_wo_dot = r @ fj + zj * fn2j
+        want = jnp.where(fn2j > 0.0, (2.0 * r_wo_dot > fn2j).astype(x.dtype), 0.0)
+        delta = want - zj
+        r = r - delta[:, None] * fj[None, :]
+        z = jax.lax.dynamic_update_slice(z, want[:, None], (0, j))
+        return r, z
+
+    r = x
+    z = jnp.zeros((tb, k), dtype=x.dtype)
+    for _ in range(SWEEPS):
+        r, z = jax.lax.fori_loop(0, k, body, (r, z))
+    z_ref[...] = z
+    r_ref[...] = r
+    r2_ref[...] = jnp.sum(r * r, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bp_descend(x, f, interpret=True):
+    """Binary coordinate descent for a block.
+
+    Args:
+      x: (b, d) points; b must be a multiple of TILE_B.
+      f: (k, d) features (padded rows all-zero).
+      interpret: run the Pallas interpreter (required on CPU).
+
+    Returns:
+      (z f32 (b, k) in {0,1}, residuals f32 (b, d), r2 f32 (b,)).
+    """
+    b, d = x.shape
+    k = f.shape[0]
+    assert b % TILE_B == 0, f"block {b} not a multiple of {TILE_B}"
+    grid = (b // TILE_B,)
+    return pl.pallas_call(
+        _bp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B, d), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, f)

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: tiled pairwise squared distance + fused argmin.
+
+The compute hot-spot of every algorithm in the paper: for a block of points
+and the current centers, find the nearest center and its squared distance.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the point axis;
+each grid step holds a (TB, d) point tile and the full (k, d) center panel
+in VMEM and computes the cross term `x @ cᵀ` as a single matmul — on real
+TPU hardware that is an MXU systolic-array op while the rank-1 norm
+corrections ride the VPU. For k ≤ 1024, d ≤ 64 the working set is
+(TB·d + k·d + TB·k)·4B ≈ 0.6 MiB at TB=128 — far inside the ~16 MiB VMEM
+budget, leaving room for double buffering.
+
+On this CPU-only image the kernel must be lowered with `interpret=True`
+(real TPU lowering emits a Mosaic custom-call the CPU PJRT client cannot
+run); interpret mode traces the same tile program into plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Point-axis tile. 128 keeps the cross-term matmul MXU-shaped (128×d·d×k).
+TILE_B = 128
+
+
+def _dist_argmin_kernel(x_ref, c_ref, idx_ref, d2_ref):
+    """One grid step: nearest center for a (TILE_B, d) point tile."""
+    x = x_ref[...]  # (TB, d)
+    c = c_ref[...]  # (k, d)
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (TB, 1)   VPU
+    cn = jnp.sum(c * c, axis=1)[None, :]  # (1, k)    VPU
+    cross = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TB, k)  MXU
+    d2 = jnp.maximum(xn - 2.0 * cross + cn, 0.0)
+    idx_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    d2_ref[...] = jnp.min(d2, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dist_argmin(x, c, interpret=True):
+    """Nearest-center assignment for a block.
+
+    Args:
+      x: (b, d) points; b must be a multiple of TILE_B (aot.py pads).
+      c: (k, d) centers.
+      interpret: run the Pallas interpreter (required on CPU).
+
+    Returns:
+      (idx int32 (b,), d2 f32 (b,)).
+    """
+    b, d = x.shape
+    k = c.shape[0]
+    assert b % TILE_B == 0, f"block {b} not a multiple of {TILE_B}"
+    grid = (b // TILE_B,)
+    return pl.pallas_call(
+        _dist_argmin_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_B,), lambda i: (i,)),
+            pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, c)

@@ -1,0 +1,89 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact pure-`jax.numpy`
+counterpart here; `python/tests/test_kernels.py` sweeps shapes with
+hypothesis and asserts allclose. The oracles are also what the L2 model
+semantics are defined against, and they match the Rust native backend
+(`rust/src/runtime/native.rs`) operation-for-operation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_dist_argmin(x, c):
+    """Nearest-center assignment.
+
+    Args:
+      x: (b, d) points.
+      c: (k, d) centers (padded rows use a large sentinel, see literal.rs).
+
+    Returns:
+      (idx int32 (b,), d2 f32 (b,)): index and squared distance of the
+      nearest center, computed via the ‖x‖² − 2xᵀc + ‖c‖² decomposition
+      (clamped at 0 against cancellation).
+    """
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (b, 1)
+    cn = jnp.sum(c * c, axis=1)[None, :]  # (1, k)
+    cross = x @ c.T  # (b, k)
+    d2 = jnp.maximum(xn - 2.0 * cross + cn, 0.0)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return idx, jnp.min(d2, axis=1)
+
+
+def ref_suffstats(x, z, k):
+    """Per-center sums and counts (the DP-means mean-recompute reduction).
+
+    Args:
+      x: (b, d) points.
+      z: (b,) int32 assignments; values outside [0, k) contribute nothing
+         (that is how padded block rows are masked out).
+      k: static number of centers.
+
+    Returns:
+      (sums f32 (k, d), counts f32 (k,)).
+    """
+    onehot = (z[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)  # (b, k)
+    sums = onehot.T @ x
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts
+
+
+def ref_bp_descend(x, f, sweeps=2):
+    """BP-means binary coordinate descent (matches `descend_z` in Rust).
+
+    Starting from z = 0, sweep the features in index order `sweeps` times;
+    feature j is turned on iff `2·⟨r_wo, f_j⟩ > ‖f_j‖²` where `r_wo` is the
+    residual with feature j removed. All-zero (padded) features are never
+    taken.
+
+    Args:
+      x: (b, d) points.
+      f: (k, d) features (padded rows are all-zero).
+      sweeps: in-order coordinate sweeps.
+
+    Returns:
+      (z f32 (b, k) in {0,1}, residuals f32 (b, d), r2 f32 (b,)).
+    """
+    b, d = x.shape
+    k = f.shape[0]
+    fn2 = jnp.sum(f * f, axis=1)  # (k,)
+
+    def body(j, carry):
+        r, z = carry
+        fj = jax.lax.dynamic_slice(f, (j, 0), (1, d))[0]  # (d,)
+        fn2j = fn2[j]
+        zj = jax.lax.dynamic_slice(z, (0, j), (b, 1))[:, 0]  # (b,)
+        r_wo_dot = r @ fj + zj * fn2j  # (b,)
+        want = jnp.where(fn2j > 0.0, (2.0 * r_wo_dot > fn2j).astype(x.dtype), 0.0)
+        delta = want - zj
+        r = r - delta[:, None] * fj[None, :]
+        z = jax.lax.dynamic_update_slice(z, want[:, None], (0, j))
+        return r, z
+
+    r = x
+    z = jnp.zeros((b, k), dtype=x.dtype)
+    for _ in range(max(1, sweeps)):
+        r, z = jax.lax.fori_loop(0, k, body, (r, z))
+    r2 = jnp.sum(r * r, axis=1)
+    return z, r, r2

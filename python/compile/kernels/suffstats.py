@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: sufficient statistics as a one-hot matmul.
+
+The DP-means mean-recompute needs per-center sums and counts. A serial
+scatter-add is hostile to the MXU; the TPU-idiomatic recast (DESIGN.md
+§Hardware-Adaptation) is `sums = onehot(z)ᵀ @ x` — a (k × TB)·(TB × d)
+matmul per tile, accumulated across the grid in the output block (the
+revisiting-output pattern: every grid step maps to the same output tile and
+adds its contribution; step 0 initializes).
+
+Out-of-range assignments (padded block rows use `z = k`) one-hot-encode to a
+zero column and contribute nothing — the same masking rule the Rust native
+backend and the L2 model use.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+
+
+def _suffstats_kernel(x_ref, z_ref, sums_ref, counts_ref):
+    """One grid step: accumulate a (TILE_B,) tile into the (k, d) output."""
+    i = pl.program_id(0)
+    x = x_ref[...]  # (TB, d)
+    z = z_ref[...]  # (TB,)
+    k = sums_ref.shape[0]
+    onehot = (z[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]).astype(x.dtype)  # (TB, k)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sums_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (k, d)  MXU
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def suffstats(x, z, k, interpret=True):
+    """Per-center sums/counts for a block.
+
+    Args:
+      x: (b, d) points; b must be a multiple of TILE_B.
+      z: (b,) int32 assignments; out-of-range values are ignored.
+      k: static center count.
+      interpret: run the Pallas interpreter (required on CPU).
+
+    Returns:
+      (sums f32 (k, d), counts f32 (k,)).
+    """
+    b, d = x.shape
+    assert b % TILE_B == 0, f"block {b} not a multiple of {TILE_B}"
+    grid = (b // TILE_B,)
+    return pl.pallas_call(
+        _suffstats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, d), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, z)

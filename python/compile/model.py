@@ -1,0 +1,49 @@
+"""L2: the per-epoch compute graph, built on the L1 Pallas kernels.
+
+These are the functions the Rust coordinator executes every epoch through
+the AOT artifacts — Python never runs at serve time. Each entry point is a
+pure jitted function over statically-shaped (bucketed) operands:
+
+* `dp_assign(x, c)`        → worker assignment step for DP-means / OFL
+* `make_suffstats(k)(x,z)` → phase-2 mean-recompute reduction
+* `bp_descend_model(x, f)` → BP-means worker step
+
+The semantics contract (padding rules, masking, tie-breaking) is defined by
+`kernels/ref.py`, mirrored by the Rust native backend, and pinned by
+`tests/test_model.py`.
+"""
+
+from compile.kernels import bp, distance, suffstats
+
+
+def dp_assign(x, c, interpret=True):
+    """Nearest-center index + squared distance for a block.
+
+    The caller (Rust runtime) pads `c` to the bucket's k with a large
+    sentinel so padded centers never win the argmin, and pads `x` rows with
+    zeros whose results it discards.
+    """
+    return distance.dist_argmin(x, c, interpret=interpret)
+
+
+def make_suffstats(k, interpret=True):
+    """Build the suffstats entry point for a static center bucket `k`.
+
+    The returned `fn(x, z)` computes per-center sums/counts; `z` values
+    equal to `k` (the padding id the Rust runtime uses for padded rows and
+    unassigned points) contribute nothing.
+    """
+
+    def fn(x, z):
+        return suffstats.suffstats(x, z, k=k, interpret=interpret)
+
+    return fn
+
+
+def bp_descend_model(x, f, interpret=True):
+    """BP coordinate descent for a block: (z, residuals, r²).
+
+    `f` is padded with all-zero rows up to the bucket's k; zero features are
+    never selected by the descent rule.
+    """
+    return bp.bp_descend(x, f, interpret=interpret)

@@ -1,0 +1,60 @@
+"""AOT emission: lowering produces loadable HLO text + a valid manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def test_to_hlo_text_contains_entry():
+    import jax
+    import jax.numpy as jnp
+
+    lowered = jax.jit(lambda x: (x + 1.0,)).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[4]" in text
+
+
+@pytest.mark.parametrize("kind,b,k", [("dp_assign", 256, 64), ("suffstats", 256, 64)])
+def test_lower_entry_shapes_in_text(kind, b, k):
+    text = aot.lower_entry(kind, b, k, 16)
+    assert "ENTRY" in text
+    assert f"f32[{b},16]" in text
+
+
+def test_quick_aot_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    proc = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--quick", "--dim", "8"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert manifest["dim"] == 8
+    assert len(manifest["entries"]) == 3
+    for e in manifest["entries"]:
+        path = out / e["file"]
+        assert path.exists()
+        head = path.read_text()[:200000]
+        assert "ENTRY" in head
+        assert e["d"] == 8
+
+
+def test_bucket_grid_is_tile_aligned():
+    from compile.kernels.distance import TILE_B
+
+    for buckets in (aot.DP_ASSIGN_BUCKETS, aot.SUFFSTATS_BUCKETS, aot.BP_BUCKETS):
+        for b, k in buckets:
+            assert b % TILE_B == 0
+            assert k >= 1

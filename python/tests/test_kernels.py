@@ -1,0 +1,175 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps).
+
+The kernels require the block axis to be a multiple of TILE_B (the Rust
+runtime always pads to a bucket), so strategies draw the number of *tiles*
+and scale up.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bp, distance, ref, suffstats
+
+TB = distance.TILE_B
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype("float32"))
+
+
+@st.composite
+def dist_case(draw):
+    tiles = draw(st.integers(1, 3))
+    k = draw(st.integers(1, 70))
+    d = draw(st.sampled_from([1, 2, 8, 16, 32]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return tiles * TB, k, d, seed
+
+
+@given(dist_case())
+@settings(max_examples=25, deadline=None)
+def test_dist_argmin_matches_ref(case):
+    b, k, d, seed = case
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    c = _rand(rng, k, d)
+    i1, d1 = distance.dist_argmin(x, c)
+    i2, d2 = ref.ref_dist_argmin(x, c)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-5, atol=1e-5)
+
+
+def test_dist_argmin_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    x = np.asarray(_rand(rng, TB, 16))
+    c = np.asarray(_rand(rng, 13, 16))
+    i1, d1 = distance.dist_argmin(jnp.asarray(x), jnp.asarray(c))
+    # Brute force in float64.
+    d2_full = ((x[:, None, :].astype("float64") - c[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_array_equal(np.asarray(i1), d2_full.argmin(1))
+    np.testing.assert_allclose(np.asarray(d1), d2_full.min(1), rtol=1e-4, atol=1e-4)
+
+
+def test_dist_argmin_sentinel_padding_never_wins():
+    # Padded center rows use a large sentinel (see rust literal.rs).
+    rng = np.random.default_rng(1)
+    x = _rand(rng, TB, 16)
+    real = np.asarray(_rand(rng, 5, 16))
+    padded = np.full((64, 16), 1e9, dtype="float32")
+    padded[:5] = real
+    idx, _ = distance.dist_argmin(x, jnp.asarray(padded))
+    assert np.asarray(idx).max() < 5
+
+
+@st.composite
+def suff_case(draw):
+    tiles = draw(st.integers(1, 3))
+    k = draw(st.integers(1, 40))
+    d = draw(st.sampled_from([1, 4, 16]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return tiles * TB, k, d, seed
+
+
+@given(suff_case())
+@settings(max_examples=25, deadline=None)
+def test_suffstats_matches_ref(case):
+    b, k, d, seed = case
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    # Include out-of-range ids (k == padding id) to pin the masking rule.
+    z = jnp.asarray(rng.integers(0, k + 1, size=(b,)).astype("int32"))
+    s1, c1 = suffstats.suffstats(x, z, k=k)
+    s2, c2 = ref.ref_suffstats(x, z, k)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2))
+
+
+def test_suffstats_counts_partition_points():
+    rng = np.random.default_rng(2)
+    b, k = 2 * TB, 7
+    x = _rand(rng, b, 8)
+    z = jnp.asarray(rng.integers(0, k, size=(b,)).astype("int32"))
+    _, counts = suffstats.suffstats(x, z, k=k)
+    assert float(jnp.sum(counts)) == b
+
+
+def test_suffstats_means_recoverable():
+    # sums/counts reproduce the exact mean of each group.
+    rng = np.random.default_rng(3)
+    x = np.asarray(_rand(rng, TB, 4))
+    z = np.asarray(rng.integers(0, 3, size=(TB,)).astype("int32"))
+    sums, counts = suffstats.suffstats(jnp.asarray(x), jnp.asarray(z), k=3)
+    for j in range(3):
+        sel = x[z == j]
+        if len(sel):
+            np.testing.assert_allclose(
+                np.asarray(sums)[j] / np.asarray(counts)[j], sel.mean(0), rtol=1e-4, atol=1e-5
+            )
+
+
+@st.composite
+def bp_case(draw):
+    tiles = draw(st.integers(1, 2))
+    k = draw(st.integers(1, 24))
+    d = draw(st.sampled_from([2, 8, 16]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return tiles * TB, k, d, seed
+
+
+@given(bp_case())
+@settings(max_examples=15, deadline=None)
+def test_bp_descend_matches_ref(case):
+    b, k, d, seed = case
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    f = _rand(rng, k, d)
+    z1, r1, q1 = bp.bp_descend(x, f)
+    z2, r2, q2 = ref.ref_bp_descend(x, f, sweeps=bp.SWEEPS)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-4, atol=1e-4)
+
+
+def test_bp_descend_zero_features_never_selected():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, TB, 8)
+    f = np.zeros((6, 8), dtype="float32")
+    f[0] = np.asarray(_rand(rng, 8))
+    z, _, _ = bp.bp_descend(x, jnp.asarray(f))
+    assert float(np.asarray(z)[:, 1:].max(initial=0.0)) == 0.0
+
+
+def test_bp_descend_residual_consistent():
+    # residual == x − z @ f exactly.
+    rng = np.random.default_rng(5)
+    x = _rand(rng, TB, 16)
+    f = _rand(rng, 9, 16)
+    z, r, r2 = bp.bp_descend(x, f)
+    recon = np.asarray(z) @ np.asarray(f)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(x) - recon, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(r2), (np.asarray(r) ** 2).sum(1), rtol=1e-4, atol=1e-4)
+
+
+def test_bp_descend_perfect_representation():
+    # Points that ARE feature sums descend to (near-)zero residual.
+    f = np.zeros((2, 4), dtype="float32")
+    f[0, 0] = 3.0
+    f[1, 1] = 4.0
+    x = np.zeros((TB, 4), dtype="float32")
+    x[0] = f[0]
+    x[1] = f[1]
+    x[2] = f[0] + f[1]
+    z, _, r2 = bp.bp_descend(jnp.asarray(x), jnp.asarray(f))
+    z = np.asarray(z)
+    assert z[0].tolist() == [1.0, 0.0]
+    assert z[1].tolist() == [0.0, 1.0]
+    assert z[2].tolist() == [1.0, 1.0]
+    assert float(np.asarray(r2)[:3].max()) < 1e-8
+
+
+def test_block_not_multiple_of_tile_rejected():
+    rng = np.random.default_rng(6)
+    with pytest.raises(AssertionError):
+        distance.dist_argmin(_rand(rng, TB + 1, 8), _rand(rng, 4, 8))

@@ -1,0 +1,118 @@
+"""L2 semantics: the model entry points against numpy serial references.
+
+These pin the *contract* the Rust runtime relies on: padding rules (center
+sentinel, assignment padding id, zero-feature rows) and the exact
+first-pass DP-means / BP-means step semantics.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.distance import TILE_B
+
+SENTINEL = 1e9  # matches rust/src/runtime/literal.rs PAD_SENTINEL
+
+
+def _pad_rows(a, rows, fill):
+    out = np.full((rows, a.shape[1]), fill, dtype="float32")
+    out[: a.shape[0]] = a
+    return out
+
+
+def test_dp_assign_with_runtime_padding():
+    """Exactly what XlaBackend::nearest does: pad points with zeros, centers
+    with the sentinel; results for pad rows are discarded."""
+    rng = np.random.default_rng(0)
+    n, k, d = 100, 9, 16
+    x = rng.normal(size=(n, d)).astype("float32")
+    c = rng.normal(size=(k, d)).astype("float32")
+    xp = _pad_rows(x, TILE_B, 0.0)
+    cp = _pad_rows(c, 64, SENTINEL)
+    idx, d2 = model.dp_assign(jnp.asarray(xp), jnp.asarray(cp))
+    idx = np.asarray(idx)[:n]
+    d2 = np.asarray(d2)[:n]
+    brute = ((x[:, None, :].astype("float64") - c[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_array_equal(idx, brute.argmin(1))
+    np.testing.assert_allclose(d2, brute.min(1), rtol=1e-4, atol=1e-4)
+
+
+def test_suffstats_with_runtime_padding():
+    """Pad rows carry assignment id == k and contribute nothing."""
+    rng = np.random.default_rng(1)
+    n, k, d = 90, 5, 16
+    x = rng.normal(size=(n, d)).astype("float32")
+    z = rng.integers(0, k, size=(n,)).astype("int32")
+    xp = _pad_rows(x, TILE_B, 0.0)
+    zp = np.full((TILE_B,), k, dtype="int32")
+    zp[:n] = z
+    fn = model.make_suffstats(k)
+    sums, counts = fn(jnp.asarray(xp), jnp.asarray(zp))
+    sums = np.asarray(sums)
+    counts = np.asarray(counts)
+    assert counts.sum() == n
+    for j in range(k):
+        np.testing.assert_allclose(sums[j], x[z == j].sum(0), rtol=1e-4, atol=1e-4)
+
+
+def test_bp_descend_with_runtime_padding():
+    """Features pad with zero rows; padded z columns come back 0."""
+    rng = np.random.default_rng(2)
+    n, k, d = 70, 4, 16
+    x = rng.normal(size=(n, d)).astype("float32")
+    f = rng.normal(size=(k, d)).astype("float32")
+    xp = _pad_rows(x, TILE_B, 0.0)
+    fp = _pad_rows(f, 64, 0.0)
+    z, r, r2 = model.bp_descend_model(jnp.asarray(xp), jnp.asarray(fp))
+    z = np.asarray(z)
+    assert z[:, k:].max(initial=0.0) == 0.0
+    # Serial scalar reference for the first few points.
+    for i in range(5):
+        zi = np.zeros(k)
+        ri = x[i].astype("float64").copy()
+        for _ in range(2):
+            for j in range(k):
+                fj = f[j].astype("float64")
+                fn2 = (fj**2).sum()
+                r_wo = ri @ fj + zi[j] * fn2
+                want = 1.0 if 2 * r_wo > fn2 else 0.0
+                ri -= (want - zi[j]) * fj
+                zi[j] = want
+        np.testing.assert_array_equal(z[i, :k], zi)
+        np.testing.assert_allclose(np.asarray(r)[i], ri, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(r2)[:n], (np.asarray(r)[:n] ** 2).sum(1), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_dp_first_pass_semantics_end_to_end():
+    """Simulate one serial DP-means first pass through the model entry point
+    exactly as the coordinator would (one point at a time, centers grow)."""
+    rng = np.random.default_rng(3)
+    n, d, lam2 = 40, 16, 4.0
+    pts = rng.normal(size=(n, d)).astype("float32") * 2.0
+    centers = []
+    assign = []
+    for i in range(n):
+        if centers:
+            c = np.stack(centers)
+            cp = _pad_rows(c, 64, SENTINEL)
+            xp = _pad_rows(pts[i : i + 1], TILE_B, 0.0)
+            idx, d2 = model.dp_assign(jnp.asarray(xp), jnp.asarray(cp))
+            if float(np.asarray(d2)[0]) > lam2:
+                centers.append(pts[i])
+                assign.append(len(centers) - 1)
+            else:
+                assign.append(int(np.asarray(idx)[0]))
+        else:
+            centers.append(pts[i])
+            assign.append(0)
+    # Invariant: every point within λ² of its center (centers = data points).
+    c = np.stack(centers)
+    for i in range(n):
+        d2i = ((pts[i] - c[assign[i]]) ** 2).sum()
+        assert d2i <= lam2 + 1e-4 or assign[i] == len(centers) - 1 or (pts[i] == c[assign[i]]).all()
+    # And all centers are pairwise > λ apart (DP-means invariant).
+    for a in range(len(centers)):
+        for b_ in range(a):
+            assert ((c[a] - c[b_]) ** 2).sum() > lam2

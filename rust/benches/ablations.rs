@@ -1,0 +1,193 @@
+//! Ablations: concurrency-control strategy and design-choice comparisons.
+//!
+//! 1. **Strategy** (§ intro / §5): OCC vs mutual exclusion vs
+//!    coordination-free vs divide-and-conquer on the same workload —
+//!    runtime, cluster counts, duplicates, objective J(C).
+//! 2. **Bootstrap** (§4.2): bootstrap on/off — epoch-1 master traffic.
+//! 3. **Epoch size**: Pb sweep — rejection/communication trade-off
+//!    (larger epochs = more optimism = more rejections, fewer barriers).
+
+use occml::algorithms::objective::dp_objective;
+use occml::baselines::{coordfree, dnc, mutex};
+use occml::benchlib::{fmt_duration, time_fn, BenchArgs, Table};
+use occml::config::{Algo, RunConfig};
+use occml::coordinator::driver;
+use occml::data::generators::{dp_clusters, GenConfig};
+use occml::runtime::native::NativeBackend;
+use std::sync::Arc;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let n: usize = args.get_or("n", 1 << 15);
+    let procs: usize = args.get_or("procs", 8);
+    let iters: usize = args.get_or("iters", 3);
+    let lambda = 2.0;
+
+    let data = Arc::new(dp_clusters(&GenConfig { n, dim: 16, theta: 1.0, seed: 8 }));
+    let backend = Arc::new(NativeBackend::new());
+
+    // -----------------------------------------------------------------
+    println!("\n=== strategy ablation: first pass, N={n}, P={procs}, λ={lambda} ===");
+    let mut table = Table::new(&["strategy", "time", "centers", "duplicates", "J(C)", "serializable"]);
+
+    let cfg = RunConfig {
+        algo: Algo::DpMeans,
+        lambda,
+        procs,
+        block: 1024,
+        iterations: 1,
+        bootstrap_div: 16,
+        n,
+        seed: 8,
+        ..RunConfig::default()
+    };
+    let mut occ_out = None;
+    let occ_t = time_fn(1, iters, || {
+        occ_out = Some(driver::run_with(&cfg, data.clone(), backend.clone()).unwrap());
+    });
+    let occ = occ_out.unwrap();
+    let occml::coordinator::Model::Dp(om) = &occ.model else { panic!() };
+    table.row(vec![
+        "OCC (ours)".into(),
+        fmt_duration(occ_t.mean),
+        om.centers.rows.to_string(),
+        "0".into(),
+        format!("{:.0}", occ.summary.objective.unwrap()),
+        "yes (deterministic)".into(),
+    ]);
+
+    let mut mx_res = None;
+    let mx_t = time_fn(1, iters, || {
+        mx_res = Some(mutex::dp_first_pass_mutex(&data, lambda, procs));
+    });
+    let mx = mx_res.unwrap();
+    table.row(vec![
+        "mutual exclusion".into(),
+        fmt_duration(mx_t.mean),
+        mx.centers.rows.to_string(),
+        "0".into(),
+        format!("{:.0}", dp_objective(&data, &mx.centers, lambda)),
+        "yes (nondeterministic)".into(),
+    ]);
+
+    let mut cf_res = None;
+    let cf_t = time_fn(1, iters, || {
+        cf_res = Some(coordfree::dp_first_pass_coordfree(&data, lambda, procs));
+    });
+    let cf = cf_res.unwrap();
+    table.row(vec![
+        "coordination-free".into(),
+        fmt_duration(cf_t.mean),
+        cf.centers.rows.to_string(),
+        cf.duplicates.to_string(),
+        format!("{:.0}", dp_objective(&data, &cf.centers, lambda)),
+        "no".into(),
+    ]);
+
+    let mut dc_res = None;
+    let dc_t = time_fn(1, iters, || {
+        dc_res = Some(dnc::dp_divide_and_conquer(&data, lambda, procs));
+    });
+    let dc = dc_res.unwrap();
+    table.row(vec![
+        format!("divide-and-conquer ({} shipped)", dc.intermediate_centers),
+        fmt_duration(dc_t.mean),
+        dc.centers.rows.to_string(),
+        "0".into(),
+        format!("{:.0}", dp_objective(&data, &dc.centers, lambda)),
+        "no (2-level factor)".into(),
+    ]);
+    table.print();
+    let _ = table.write_csv(std::path::Path::new("target/bench-results/ablation_strategy.csv"));
+
+    // -----------------------------------------------------------------
+    println!("\n=== bootstrap ablation (§4.2): epoch-1 master traffic ===");
+    let mut table = Table::new(&["bootstrap", "epoch0 proposed", "total rejected", "centers"]);
+    for &div in &[0usize, 16] {
+        let cfg = RunConfig { bootstrap_div: div, ..cfg.clone() };
+        let out = driver::run_with(&cfg, data.clone(), backend.clone()).unwrap();
+        let first = out
+            .summary
+            .epochs
+            .iter()
+            .find(|e| e.epoch != usize::MAX)
+            .map(|e| e.proposed)
+            .unwrap_or(0);
+        table.row(vec![
+            if div == 0 { "off".into() } else { format!("Pb/{div}") },
+            first.to_string(),
+            out.summary.total_rejected().to_string(),
+            out.model.k().to_string(),
+        ]);
+    }
+    table.print();
+
+    // -----------------------------------------------------------------
+    println!("\n=== epoch-size ablation: rejections vs barriers (first pass) ===");
+    let mut table = Table::new(&["Pb", "epochs", "proposed", "rejected", "time"]);
+    for &pb in &[512usize, 2048, 8192, 32768] {
+        let cfg = RunConfig {
+            block: pb / procs,
+            bootstrap_div: 0,
+            ..cfg.clone()
+        };
+        let mut out = None;
+        let t = time_fn(0, iters.min(3), || {
+            out = Some(driver::run_with(&cfg, data.clone(), backend.clone()).unwrap());
+        });
+        let out = out.unwrap();
+        let epochs = out.summary.epochs.iter().filter(|e| e.epoch != usize::MAX).count();
+        table.row(vec![
+            pb.to_string(),
+            epochs.to_string(),
+            out.summary.total_proposed().to_string(),
+            out.summary.total_rejected().to_string(),
+            fmt_duration(t.mean),
+        ]);
+    }
+    table.print();
+    let _ = table.write_csv(std::path::Path::new("target/bench-results/ablation_epoch.csv"));
+
+    // -----------------------------------------------------------------
+    println!("\n=== §6 soft-knob sweep: serializability ↔ coordination-free ===");
+    // Replay the epoch structure with the soft validator at several knob
+    // settings; slack=0 is exact OCC, slack=1/accept=1 is coordination-free.
+    use occml::coordinator::soft::{dp_validate_soft, SoftKnob};
+    use occml::coordinator::validator::DpProposal;
+    use occml::rng::Pcg64;
+    let mut table = Table::new(&["slack", "p_accept", "centers", "rejected", "J(C)"]);
+    let pb = 1024 * procs;
+    for &(slack, pa) in &[(0.0, 0.0), (0.25, 0.5), (0.5, 0.5), (1.0, 0.5), (1.0, 1.0)] {
+        let knob = SoftKnob { slack, slack_accept: pa };
+        let mut rng = Pcg64::new(99);
+        let lambda2 = (lambda * lambda) as f32;
+        let mut centers = occml::linalg::Matrix::zeros(0, 16);
+        let mut rejected = 0usize;
+        let mut t = 0;
+        while t * pb < n {
+            let lo = t * pb;
+            let hi = ((t + 1) * pb).min(n);
+            let base = centers.rows;
+            let mut props = Vec::new();
+            for i in lo..hi {
+                let (_, d2) = occml::linalg::nearest(data.point(i), &centers);
+                if d2 > lambda2 {
+                    props.push(DpProposal { idx: i as u32, center: data.point(i).to_vec() });
+                }
+            }
+            let out = dp_validate_soft(&mut centers, base, &props, lambda, knob, &mut rng);
+            rejected += out.rejected;
+            t += 1;
+        }
+        table.row(vec![
+            format!("{slack:.2}"),
+            format!("{pa:.2}"),
+            centers.rows.to_string(),
+            rejected.to_string(),
+            format!("{:.0}", dp_objective(&data, &centers, lambda)),
+        ]);
+    }
+    table.print();
+    println!("(slack 0 = exact OCC; slack 1 / p 1 = coordination-free merge)");
+    let _ = table.write_csv(std::path::Path::new("target/bench-results/ablation_soft.csv"));
+}

@@ -1,0 +1,115 @@
+//! Backend throughput: native Rust kernels vs AOT XLA artifacts (PJRT).
+//!
+//! Measures the three hot-path primitives per (block, centers) bucket.
+//! This is the L1/L3 perf evidence for EXPERIMENTS.md §Perf: the native
+//! backend is the CPU roofline reference; the XLA numbers include the
+//! pad-copy + literal transfer overhead the bucket design trades for AOT
+//! simplicity. Skips XLA when artifacts are missing.
+
+use occml::benchlib::{fmt_duration, time_fn, BenchArgs, Table};
+use occml::linalg::Matrix;
+use occml::rng::Pcg64;
+use occml::runtime::native::NativeBackend;
+use occml::runtime::xla::XlaBackend;
+use occml::runtime::{Block, ComputeBackend};
+use std::path::Path;
+
+fn random_matrix(rng: &mut Pcg64, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let iters: usize = args.get_or("iters", 20);
+    let d = 16usize;
+    let mut rng = Pcg64::new(99);
+
+    let native = NativeBackend::new();
+    let xla = XlaBackend::load(Path::new("artifacts"))
+        .map_err(|e| eprintln!("xla backend unavailable: {e}"))
+        .ok();
+    if let Some(x) = &xla {
+        x.warmup().expect("warmup");
+    }
+
+    let shapes = [(256usize, 64usize), (256, 256), (1024, 64), (1024, 256), (1024, 1024)];
+
+    println!("\n=== nearest (dp_assign): b points × k centers, d={d} ===");
+    let mut table = Table::new(&["b", "k", "native", "xla", "native Melem/s", "xla/native"]);
+    for &(b, k) in &shapes {
+        let pts = random_matrix(&mut rng, b, d);
+        let ctr = random_matrix(&mut rng, k, d);
+        let block = Block::of(&pts, 0..b);
+        let mut idx = vec![0u32; b];
+        let mut d2 = vec![0.0f32; b];
+        let ns = time_fn(3, iters, || {
+            native.nearest(block, &ctr, &mut idx, &mut d2).unwrap();
+        });
+        let (xs_str, ratio) = if let Some(x) = &xla {
+            let xs = time_fn(3, iters, || {
+                x.nearest(block, &ctr, &mut idx, &mut d2).unwrap();
+            });
+            (fmt_duration(xs.mean), format!("{:.2}x", xs.mean.as_secs_f64() / ns.mean.as_secs_f64()))
+        } else {
+            ("n/a".into(), "n/a".into())
+        };
+        let melems = (b * k) as f64 / ns.mean.as_secs_f64() / 1e6;
+        table.row(vec![
+            b.to_string(),
+            k.to_string(),
+            fmt_duration(ns.mean),
+            xs_str,
+            format!("{melems:.0}"),
+            ratio,
+        ]);
+    }
+    table.print();
+
+    println!("\n=== suffstats: b points into k centers, d={d} ===");
+    let mut table = Table::new(&["b", "k", "native", "xla", "xla/native"]);
+    for &(b, k) in &shapes {
+        let pts = random_matrix(&mut rng, b, d);
+        let idx: Vec<u32> = (0..b).map(|_| rng.next_below(k as u64) as u32).collect();
+        let block = Block::of(&pts, 0..b);
+        let mut sums = Matrix::zeros(k, d);
+        let mut counts = vec![0u64; k];
+        let ns = time_fn(3, iters, || {
+            sums.data.fill(0.0);
+            counts.fill(0);
+            native.suffstats(block, &idx, &mut sums, &mut counts).unwrap();
+        });
+        let (xs_str, ratio) = if let Some(x) = &xla {
+            let xs = time_fn(3, iters, || {
+                sums.data.fill(0.0);
+                counts.fill(0);
+                x.suffstats(block, &idx, &mut sums, &mut counts).unwrap();
+            });
+            (fmt_duration(xs.mean), format!("{:.2}x", xs.mean.as_secs_f64() / ns.mean.as_secs_f64()))
+        } else {
+            ("n/a".into(), "n/a".into())
+        };
+        table.row(vec![b.to_string(), k.to_string(), fmt_duration(ns.mean), xs_str, ratio]);
+    }
+    table.print();
+
+    println!("\n=== bp_descend: b points × k features, d={d}, 2 sweeps ===");
+    let mut table = Table::new(&["b", "k", "native", "xla", "xla/native"]);
+    for &(b, k) in &[(256usize, 64usize), (256, 256), (1024, 64), (1024, 256)] {
+        let pts = random_matrix(&mut rng, b, d);
+        let feats = random_matrix(&mut rng, k, d);
+        let block = Block::of(&pts, 0..b);
+        let ns = time_fn(2, iters.min(10), || {
+            native.bp_descend(block, &feats, 2).unwrap();
+        });
+        let (xs_str, ratio) = if let Some(x) = &xla {
+            let xs = time_fn(2, iters.min(10), || {
+                x.bp_descend(block, &feats, 2).unwrap();
+            });
+            (fmt_duration(xs.mean), format!("{:.2}x", xs.mean.as_secs_f64() / ns.mean.as_secs_f64()))
+        } else {
+            ("n/a".into(), "n/a".into())
+        };
+        table.row(vec![b.to_string(), k.to_string(), fmt_duration(ns.mean), xs_str, ratio]);
+    }
+    table.print();
+}

@@ -1,0 +1,86 @@
+//! Figure 3 (+ Figure 6 / Thm 3.3) — rejections are independent of N.
+//!
+//! Regenerates the paper's §4.1 simulated experiment: the first iteration
+//! of OCC DP-means (3a), OFL (3b) and BP-means (3c), with N swept 256..2560
+//! (step 256) and Pb ∈ {16, 32, 64, 128, 256}, measuring the empirical mean
+//! of `M_N − k_N` (proposed but not accepted) over many repeats. Fig 6 is
+//! the same sweep on the separable-cluster generator of App C.1, where the
+//! Thm 3.3 bound `rejections ≤ Pb` holds surely.
+//!
+//! Paper shape to reproduce: for each Pb, the curve is FLAT in N and sits
+//! at or below Pb. Repeats default to 25 (paper: 400) to keep single-core
+//! runtime in minutes; pass `--reps=400` for the paper-exact count.
+
+use occml::benchlib::{BenchArgs, Table};
+use occml::data::generators::{bp_features, dp_clusters, separable_clusters, GenConfig};
+use occml::sim;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let reps: usize = args.get_or("reps", 25);
+    let ns: Vec<usize> = (1..=10).map(|i| i * 256).collect();
+    let pbs = [16usize, 32, 64, 128, 256];
+
+    let experiments: &[(&str, &str)] = &[
+        ("fig3a", "OCC DP-means, DP-mixture data"),
+        ("fig3b", "OCC OFL, DP-mixture data"),
+        ("fig3c", "OCC BP-means, BP-feature data"),
+        ("fig6", "OCC DP-means, separable data (Thm 3.3 regime)"),
+        ("fig6-ofl", "OCC OFL, separable data"),
+    ];
+
+    for (exp, desc) in experiments {
+        println!("\n=== {exp}: {desc} — E[M_N − k_N] over {reps} reps ===");
+        let mut table = Table::new(&["N", "Pb=16", "Pb=32", "Pb=64", "Pb=128", "Pb=256"]);
+        let mut worst_ratio = 0.0f64; // max over cells of rejections / Pb
+        for &n in &ns {
+            let mut cells = vec![n.to_string()];
+            for &pb in &pbs {
+                let mut rej = 0.0f64;
+                for rep in 0..reps {
+                    let seed = (rep as u64) * 7919 + n as u64 * 13 + pb as u64;
+                    let gen = GenConfig { n, dim: 16, theta: 1.0, seed };
+                    let r = match *exp {
+                        "fig3a" => sim::sim_dpmeans(&dp_clusters(&gen), 1.0, pb),
+                        "fig3b" => sim::sim_ofl(&dp_clusters(&gen), 1.0, pb, seed ^ 0xF1),
+                        "fig3c" => sim::sim_bpmeans(&bp_features(&gen), 1.0, pb),
+                        "fig6" => sim::sim_dpmeans(&separable_clusters(&gen), 1.0, pb),
+                        "fig6-ofl" => sim::sim_ofl(&separable_clusters(&gen), 1.0, pb, seed ^ 0xF1),
+                        _ => unreachable!(),
+                    };
+                    rej += r.rejections() as f64;
+                }
+                let mean = rej / reps as f64;
+                worst_ratio = worst_ratio.max(mean / pb as f64);
+                cells.push(format!("{mean:.1}"));
+            }
+            table.row(cells);
+        }
+        table.print();
+        println!("max E[M_N − k_N] / Pb across the sweep: {worst_ratio:.3} (paper: ≤ 1, flat in N)");
+        let csv = format!("target/bench-results/{exp}.csv");
+        if table.write_csv(std::path::Path::new(&csv)).is_ok() {
+            println!("csv: {csv}");
+        }
+    }
+
+    // Thm 3.3 strict check on the separable regime.
+    println!("\n=== Thm 3.3 strict bound check (separable, sure bound) ===");
+    let mut violations = 0usize;
+    let mut checks = 0usize;
+    for rep in 0..reps.min(50) {
+        for &pb in &pbs {
+            let n = 1024;
+            let gen = GenConfig { n, dim: 16, theta: 1.0, seed: rep as u64 * 31 + pb as u64 };
+            let data = separable_clusters(&gen);
+            let k_latent = data.distinct_components(n).unwrap();
+            let r = sim::sim_dpmeans(&data, 1.0, pb);
+            checks += 1;
+            if r.master_points > pb + k_latent {
+                violations += 1;
+            }
+        }
+    }
+    println!("master_points ≤ Pb + K_N in {}/{checks} runs", checks - violations);
+    assert_eq!(violations, 0, "Thm 3.3 bound violated on separable data");
+}

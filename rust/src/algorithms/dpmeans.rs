@@ -1,0 +1,186 @@
+//! Serial DP-means (Algorithm 1, Kulis & Jordan 2012).
+//!
+//! Alternates between (1) a pass over the data assigning each point to its
+//! nearest center, creating a new center at the point whenever the nearest
+//! center is farther than λ, and (2) recomputing each center as the mean of
+//! its assigned points. Iterates until assignments stop changing (or an
+//! iteration cap).
+//!
+//! **Distance convention.** Throughout `occml`, λ thresholds *squared*
+//! Euclidean distances against λ² (the DP-means objective Eq. 5 is in
+//! squared distances); `‖x−μ‖ > λ  ⇔  ‖x−μ‖² > λ²` for λ > 0, so this is
+//! exactly the paper's rule with fewer square roots.
+
+use crate::data::Dataset;
+use crate::linalg::{blocked, Matrix};
+
+/// Result of a DP-means run.
+#[derive(Debug, Clone)]
+pub struct DpModel {
+    /// Cluster centers, `K × d`.
+    pub centers: Matrix,
+    /// Assignment of each point to a center index.
+    pub assignments: Vec<u32>,
+    /// Number of full passes executed.
+    pub iterations: usize,
+    /// Whether assignments converged before the iteration cap.
+    pub converged: bool,
+    /// Points that triggered new-cluster creation, per pass (serial DP-means
+    /// "proposes" exactly as many as it accepts; recorded for the harnesses).
+    pub created_per_pass: Vec<usize>,
+}
+
+/// Run serial DP-means with threshold `lambda` for at most `max_iters`
+/// passes. Matches Algorithm 1: within a pass, newly created centers are
+/// immediately visible to subsequent points; centers are re-estimated at the
+/// end of each pass.
+pub fn serial_dp_means(data: &Dataset, lambda: f64, max_iters: usize) -> DpModel {
+    let n = data.len();
+    let d = data.dim();
+    let lambda2 = (lambda * lambda) as f32;
+    let mut centers = Matrix::zeros(0, d);
+    let mut assignments = vec![u32::MAX; n];
+    let mut created_per_pass = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for _pass in 0..max_iters {
+        iterations += 1;
+        let mut changed = false;
+        let mut created = 0usize;
+        // Phase 1: assignments with on-the-fly cluster creation.
+        for i in 0..n {
+            let x = data.point(i);
+            let (k, d2) = crate::linalg::nearest(x, &centers);
+            let a = if d2 > lambda2 {
+                centers.push_row(x);
+                created += 1;
+                (centers.rows - 1) as u32
+            } else {
+                k as u32
+            };
+            if assignments[i] != a {
+                changed = true;
+                assignments[i] = a;
+            }
+        }
+        created_per_pass.push(created);
+        // Phase 2: recompute centers as means.
+        let mut sums = Matrix::zeros(centers.rows, d);
+        let mut counts = vec![0u64; centers.rows];
+        blocked::suffstats_accumulate(&data.points, &assignments, &mut sums, &mut counts);
+        blocked::finalize_means(&sums, &counts, &mut centers);
+        if !changed {
+            converged = true;
+            break;
+        }
+    }
+
+    DpModel { centers, assignments, iterations, converged, created_per_pass }
+}
+
+/// One *first-pass only* execution of serial DP-means cluster creation
+/// (no mean recompute) — the quantity simulated in §4.1: returns the set of
+/// centers created from scratch on one pass of the data.
+pub fn serial_dp_first_pass(data: &Dataset, lambda: f64) -> Matrix {
+    let lambda2 = (lambda * lambda) as f32;
+    let mut centers = Matrix::zeros(0, data.dim());
+    for i in 0..data.len() {
+        let x = data.point(i);
+        let (_, d2) = crate::linalg::nearest(x, &centers);
+        if d2 > lambda2 {
+            centers.push_row(x);
+        }
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{dp_clusters, separable_clusters, GenConfig};
+    use crate::linalg::sqdist;
+
+    fn tiny_dataset() -> Dataset {
+        // Two obvious clusters around (0,0) and (10,10).
+        let pts = vec![
+            0.0, 0.0, 0.1, 0.0, 0.0, 0.1, //
+            10.0, 10.0, 10.1, 10.0, 10.0, 10.1,
+        ];
+        Dataset { points: Matrix::from_vec(6, 2, pts), labels: None }
+    }
+
+    #[test]
+    fn finds_two_clusters_on_separated_data() {
+        let ds = tiny_dataset();
+        let m = serial_dp_means(&ds, 2.0, 20);
+        assert_eq!(m.centers.rows, 2);
+        assert!(m.converged);
+        // First three points share a cluster; last three share the other.
+        assert_eq!(m.assignments[0], m.assignments[1]);
+        assert_eq!(m.assignments[1], m.assignments[2]);
+        assert_eq!(m.assignments[3], m.assignments[4]);
+        assert_ne!(m.assignments[0], m.assignments[3]);
+        // Centers are near the means.
+        let c0 = m.centers.row(m.assignments[0] as usize);
+        assert!(sqdist(c0, &[0.033, 0.033]) < 0.01);
+    }
+
+    #[test]
+    fn tiny_lambda_gives_singletons() {
+        let ds = tiny_dataset();
+        let m = serial_dp_means(&ds, 1e-4, 5);
+        assert_eq!(m.centers.rows, 6);
+    }
+
+    #[test]
+    fn huge_lambda_gives_one_cluster() {
+        let ds = tiny_dataset();
+        let m = serial_dp_means(&ds, 100.0, 5);
+        assert_eq!(m.centers.rows, 1);
+        // Center is the grand mean.
+        assert!(sqdist(m.centers.row(0), &[5.033333, 5.033333]) < 1e-3);
+    }
+
+    #[test]
+    fn separable_data_recovers_latent_clusters() {
+        // App C.1 regime: λ=1 exactly separates the latent balls, so K
+        // found equals K_N.
+        let cfg = GenConfig { n: 400, dim: 8, theta: 1.0, seed: 5 };
+        let ds = separable_clusters(&cfg);
+        let k_latent = ds.distinct_components(400).unwrap();
+        let m = serial_dp_means(&ds, 1.0, 10);
+        assert_eq!(m.centers.rows, k_latent);
+    }
+
+    #[test]
+    fn all_points_within_lambda_after_first_pass_assignment() {
+        // Invariant of phase 1: every point is ≤ λ from the center it was
+        // assigned to *at assignment time*; after re-estimation distances can
+        // grow slightly, but K on a second pass never explodes.
+        let cfg = GenConfig { n: 300, dim: 16, theta: 1.0, seed: 1 };
+        let ds = dp_clusters(&cfg);
+        let m = serial_dp_means(&ds, 1.0, 1);
+        let first = serial_dp_first_pass(&ds, 1.0);
+        assert_eq!(m.created_per_pass[0], first.rows);
+    }
+
+    #[test]
+    fn objective_decreases_across_iterations() {
+        let cfg = GenConfig { n: 256, dim: 16, theta: 1.0, seed: 2 };
+        let ds = dp_clusters(&cfg);
+        let m1 = serial_dp_means(&ds, 1.0, 1);
+        let m5 = serial_dp_means(&ds, 1.0, 8);
+        let j1 = crate::algorithms::objective::dp_objective(&ds, &m1.centers, 1.0);
+        let j5 = crate::algorithms::objective::dp_objective(&ds, &m5.centers, 1.0);
+        assert!(j5 <= j1 + 1e-3, "j1={j1} j5={j5}");
+    }
+
+    #[test]
+    fn empty_dataset() {
+        let ds = Dataset { points: Matrix::zeros(0, 4), labels: None };
+        let m = serial_dp_means(&ds, 1.0, 3);
+        assert_eq!(m.centers.rows, 0);
+        assert!(m.converged);
+    }
+}

@@ -1,0 +1,16 @@
+//! Serial reference algorithms.
+//!
+//! These are the paper's Algorithm 1 (DP-means), Meyerson's online facility
+//! location, and Algorithm 7 (BP-means), implemented exactly as written.
+//! They are the ground truth the OCC coordinator is validated against
+//! (Theorem 3.1 serializability tests) and the single-processor baseline in
+//! the scaling benches.
+
+pub mod bpmeans;
+pub mod dpmeans;
+pub mod objective;
+pub mod ofl;
+
+pub use bpmeans::{serial_bp_means, BpModel};
+pub use dpmeans::{serial_dp_means, DpModel};
+pub use ofl::{serial_ofl, OflModel};

@@ -1,0 +1,90 @@
+//! Objective functions (Eq. 5 and the BP-means analogue).
+//!
+//! `J(C) = Σ_x min_{μ∈C} ‖x − μ‖² + λ² |C|` — shared by DP-means and
+//! facility location (§2.2). The BP objective replaces the first term with
+//! the representation error under binary feature combinations.
+
+use crate::data::Dataset;
+use crate::linalg::{blocked, Matrix};
+
+/// DP-means / facility-location objective `J(C)` (Eq. 5).
+pub fn dp_objective(data: &Dataset, centers: &Matrix, lambda: f64) -> f64 {
+    if centers.rows == 0 {
+        return if data.is_empty() { 0.0 } else { f64::INFINITY };
+    }
+    let mut idx = vec![0u32; data.len()];
+    let mut d2 = vec![0.0f32; data.len()];
+    blocked::nearest_blocked(&data.points, centers, &mut idx, &mut d2);
+    let service: f64 = d2.iter().map(|&v| v as f64).sum();
+    service + lambda * lambda * centers.rows as f64
+}
+
+/// BP-means objective `Σ_i ‖x_i − Σ_k z_ik f_k‖² + λ² K`.
+pub fn bp_objective(
+    data: &Dataset,
+    features: &Matrix,
+    assignments: &[Vec<bool>],
+    lambda: f64,
+) -> f64 {
+    let d = data.dim();
+    let mut recon = vec![0.0f32; d];
+    let mut service = 0.0f64;
+    for i in 0..data.len() {
+        recon.fill(0.0);
+        for (k, &on) in assignments[i].iter().enumerate() {
+            if on {
+                crate::linalg::axpy(1.0, features.row(k), &mut recon);
+            }
+        }
+        service += crate::linalg::sqdist(data.point(i), &recon) as f64;
+    }
+    service + lambda * lambda * features.rows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn ds() -> Dataset {
+        Dataset {
+            points: Matrix::from_vec(3, 2, vec![0.0, 0.0, 2.0, 0.0, 0.0, 2.0]),
+            labels: None,
+        }
+    }
+
+    #[test]
+    fn dp_objective_hand_computed() {
+        let mut c = Matrix::zeros(0, 2);
+        c.push_row(&[0.0, 0.0]);
+        // service = 0 + 4 + 4 = 8; penalty = λ²·1 = 4.
+        assert!((dp_objective(&ds(), &c, 2.0) - 12.0).abs() < 1e-6);
+        c.push_row(&[2.0, 0.0]);
+        // service = 0 + 0 + 4; penalty = 8.
+        assert!((dp_objective(&ds(), &c, 2.0) - 12.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dp_objective_empty_cases() {
+        let empty = Dataset { points: Matrix::zeros(0, 2), labels: None };
+        assert_eq!(dp_objective(&empty, &Matrix::zeros(0, 2), 1.0), 0.0);
+        assert!(dp_objective(&ds(), &Matrix::zeros(0, 2), 1.0).is_infinite());
+    }
+
+    #[test]
+    fn bp_objective_hand_computed() {
+        let data = Dataset {
+            points: Matrix::from_vec(2, 2, vec![1.0, 0.0, 1.0, 1.0]),
+            labels: None,
+        };
+        let mut f = Matrix::zeros(0, 2);
+        f.push_row(&[1.0, 0.0]);
+        f.push_row(&[0.0, 1.0]);
+        let asg = vec![vec![true, false], vec![true, true]];
+        // Perfect reconstruction: objective = λ²·2.
+        assert!((bp_objective(&data, &f, &asg, 1.5) - 4.5).abs() < 1e-6);
+        // Breaking an assignment costs its residual.
+        let asg_bad = vec![vec![false, false], vec![true, true]];
+        assert!((bp_objective(&data, &f, &asg_bad, 1.5) - (1.0 + 4.5)).abs() < 1e-6);
+    }
+}

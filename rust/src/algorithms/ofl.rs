@@ -1,0 +1,153 @@
+//! Serial Online Facility Location (Meyerson, FOCS 2001) as used in §2.2.
+//!
+//! A single pass: each point `x` opens a new facility with probability
+//! `min(1, d²/λ²)` where `d²` is the squared distance to the closest open
+//! facility, otherwise it is assigned to that facility. With randomly
+//! ordered data this gives a constant-factor approximation to the DP-means
+//! objective (Lemma 3.2).
+//!
+//! The RNG is threaded explicitly so the OCC version can replay the *exact*
+//! same acceptance decisions — that is how the serializability test works.
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// Result of an OFL run.
+#[derive(Debug, Clone)]
+pub struct OflModel {
+    /// Open facilities, `K × d`.
+    pub centers: Matrix,
+    /// Assignment of each point to a facility (points that opened one are
+    /// assigned to it).
+    pub assignments: Vec<u32>,
+    /// Index (into the data order) of each point that opened a facility.
+    pub opened_by: Vec<u32>,
+}
+
+/// Run serial OFL over the dataset in its natural order.
+///
+/// `uniform(i)` must return the uniform draw used for point `i`'s facility
+/// decision — threading the randomness through a function makes the
+/// distributed algorithm exactly replayable (serializability, Thm 3.1).
+pub fn serial_ofl_with(data: &Dataset, lambda: f64, mut uniform: impl FnMut(usize) -> f64) -> OflModel {
+    let n = data.len();
+    let d = data.dim();
+    let lambda2 = lambda * lambda;
+    let mut centers = Matrix::zeros(0, d);
+    let mut assignments = vec![u32::MAX; n];
+    let mut opened_by = Vec::new();
+
+    for i in 0..n {
+        let x = data.point(i);
+        let (k, d2) = crate::linalg::nearest(x, &centers);
+        let p_open = if centers.rows == 0 { 1.0 } else { (d2 as f64 / lambda2).min(1.0) };
+        if uniform(i) < p_open {
+            centers.push_row(x);
+            assignments[i] = (centers.rows - 1) as u32;
+            opened_by.push(i as u32);
+        } else {
+            assignments[i] = k as u32;
+        }
+    }
+    OflModel { centers, assignments, opened_by }
+}
+
+/// Run serial OFL with a fresh RNG (one uniform per point, drawn in order).
+pub fn serial_ofl(data: &Dataset, lambda: f64, seed: u64) -> OflModel {
+    let mut rng = Pcg64::with_stream(seed, 0x0F1);
+    // Pre-draw one uniform per point so randomness is indexed by point id,
+    // not by consumption order — the OCC run consumes the same values.
+    let draws: Vec<f64> = (0..data.len()).map(|_| rng.next_f64()).collect();
+    serial_ofl_with(data, lambda, |i| draws[i])
+}
+
+/// The per-point uniform draws OFL uses, indexed by point id. Exposed so the
+/// distributed implementation consumes identical randomness.
+pub fn ofl_draws(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::with_stream(seed, 0x0F1);
+    (0..n).map(|_| rng.next_f64()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{separable_clusters, GenConfig};
+    use crate::data::Dataset;
+    use crate::linalg::sqdist;
+
+    #[test]
+    fn first_point_always_opens() {
+        let ds = Dataset { points: Matrix::from_vec(1, 2, vec![3.0, 4.0]), labels: None };
+        let m = serial_ofl_with(&ds, 1.0, |_| 0.999_999);
+        assert_eq!(m.centers.rows, 1);
+        assert_eq!(m.opened_by, vec![0]);
+    }
+
+    #[test]
+    fn far_points_always_open() {
+        // Distances >> λ force p_open = 1 regardless of draws.
+        let pts = vec![0.0, 0.0, 100.0, 0.0, 0.0, 100.0];
+        let ds = Dataset { points: Matrix::from_vec(3, 2, pts), labels: None };
+        let m = serial_ofl_with(&ds, 1.0, |_| 0.999_999);
+        assert_eq!(m.centers.rows, 3);
+    }
+
+    #[test]
+    fn near_duplicates_rarely_open() {
+        // Second point at distance 0 never opens (p = 0).
+        let pts = vec![1.0, 1.0, 1.0, 1.0];
+        let ds = Dataset { points: Matrix::from_vec(2, 2, pts), labels: None };
+        let m = serial_ofl_with(&ds, 1.0, |_| 0.0000001);
+        // First opens; second has d²=0 → p=0 → cannot open even with tiny u.
+        assert_eq!(m.centers.rows, 1);
+        assert_eq!(m.assignments[1], 0);
+    }
+
+    #[test]
+    fn acceptance_probability_is_distance_scaled() {
+        // A point at squared distance 0.25·λ² opens iff u < 0.25.
+        let pts = vec![0.0, 0.0, 0.5, 0.0];
+        let ds = Dataset { points: Matrix::from_vec(2, 2, pts), labels: None };
+        let opened = serial_ofl_with(&ds, 1.0, |i| if i == 0 { 0.0 } else { 0.24 });
+        assert_eq!(opened.centers.rows, 2);
+        let not_opened = serial_ofl_with(&ds, 1.0, |i| if i == 0 { 0.0 } else { 0.26 });
+        assert_eq!(not_opened.centers.rows, 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = separable_clusters(&GenConfig { n: 500, dim: 8, theta: 1.0, seed: 2 });
+        let a = serial_ofl(&ds, 1.0, 7);
+        let b = serial_ofl(&ds, 1.0, 7);
+        assert_eq!(a.centers.data, b.centers.data);
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn separable_data_opens_at_least_k_latent() {
+        // Each latent ball is ≥ distance 1 from the others, so the first
+        // point of each ball always opens (d² > λ² with λ=1): K ≥ K_latent.
+        let ds = separable_clusters(&GenConfig { n: 600, dim: 8, theta: 1.0, seed: 3 });
+        let k_latent = ds.distinct_components(600).unwrap();
+        let m = serial_ofl(&ds, 1.0, 1);
+        assert!(m.centers.rows >= k_latent, "{} < {k_latent}", m.centers.rows);
+        // Facilities are actual data points.
+        for (ci, &pi) in m.opened_by.iter().enumerate() {
+            assert_eq!(
+                sqdist(m.centers.row(ci), ds.point(pi as usize)),
+                0.0,
+                "facility {ci} is not its opening point"
+            );
+        }
+    }
+
+    #[test]
+    fn assignments_point_at_open_facilities() {
+        let ds = separable_clusters(&GenConfig { n: 200, dim: 4, theta: 1.0, seed: 4 });
+        let m = serial_ofl(&ds, 1.0, 9);
+        for (i, &a) in m.assignments.iter().enumerate() {
+            assert!((a as usize) < m.centers.rows, "point {i} unassigned");
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Coordination-free baseline (the Hogwild!-style [21]/[1] approach).
+//!
+//! Workers process their partitions with *no* validation: each worker
+//! creates clusters locally against its own replica, and replicas are
+//! merged only at the end by concatenation. Fast and embarrassingly
+//! parallel — but the merged state contains duplicate (λ-overlapping)
+//! clusters, i.e. exactly the data corruption OCC's validation prevents.
+//! The ablation bench reports the duplicate count and the objective gap.
+
+use crate::data::Dataset;
+use crate::linalg::{sqdist, Matrix};
+use std::sync::Arc;
+
+/// Result of the coordination-free DP-means first pass.
+#[derive(Debug, Clone)]
+pub struct CoordFreeDpResult {
+    /// Concatenated centers from all workers (may contain duplicates).
+    pub centers: Matrix,
+    /// Per-point assignment into the merged center list.
+    pub assignments: Vec<u32>,
+    /// Number of merged centers within λ of an earlier merged center —
+    /// the "corruption" the approach admits.
+    pub duplicates: usize,
+}
+
+/// One DP-means first pass with `procs` fully independent workers and a
+/// concatenation merge.
+pub fn dp_first_pass_coordfree(data: &Arc<Dataset>, lambda: f64, procs: usize) -> CoordFreeDpResult {
+    let n = data.len();
+    let d = data.dim();
+    let lambda2 = (lambda * lambda) as f32;
+    let chunk = n.div_ceil(procs.max(1));
+
+    // Each worker builds (local centers, local assignments into them).
+    let mut partials: Vec<(Matrix, Vec<u32>, usize)> = Vec::with_capacity(procs);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for p in 0..procs {
+            let lo = (p * chunk).min(n);
+            let hi = ((p + 1) * chunk).min(n);
+            let data = data.clone();
+            handles.push(scope.spawn(move || {
+                let mut centers = Matrix::zeros(0, d);
+                let mut asg = Vec::with_capacity(hi - lo);
+                for i in lo..hi {
+                    let x = data.point(i);
+                    let (k, d2) = crate::linalg::nearest(x, &centers);
+                    if d2 > lambda2 {
+                        centers.push_row(x);
+                        asg.push((centers.rows - 1) as u32);
+                    } else {
+                        asg.push(k as u32);
+                    }
+                }
+                (centers, asg, lo)
+            }));
+        }
+        for h in handles {
+            partials.push(h.join().expect("worker panicked"));
+        }
+    });
+    partials.sort_by_key(|(_, _, lo)| *lo);
+
+    // Merge by concatenation (no validation — the point of this baseline).
+    let mut centers = Matrix::zeros(0, d);
+    let mut assignments = vec![u32::MAX; n];
+    for (local, asg, lo) in &partials {
+        let offset = centers.rows as u32;
+        for k in 0..local.rows {
+            centers.push_row(local.row(k));
+        }
+        for (off, &a) in asg.iter().enumerate() {
+            assignments[lo + off] = offset + a;
+        }
+    }
+
+    // Count λ-duplicates among merged centers.
+    let mut duplicates = 0;
+    for i in 0..centers.rows {
+        for j in 0..i {
+            if sqdist(centers.row(i), centers.row(j)) <= lambda2 {
+                duplicates += 1;
+                break;
+            }
+        }
+    }
+
+    CoordFreeDpResult { centers, assignments, duplicates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{separable_clusters, GenConfig};
+
+    #[test]
+    fn single_worker_has_no_duplicates() {
+        let data = Arc::new(separable_clusters(&GenConfig { n: 200, dim: 8, theta: 1.0, seed: 1 }));
+        let out = dp_first_pass_coordfree(&data, 1.0, 1);
+        assert_eq!(out.duplicates, 0);
+        let k_latent = data.distinct_components(200).unwrap();
+        assert_eq!(out.centers.rows, k_latent);
+    }
+
+    #[test]
+    fn many_workers_create_duplicates_on_shared_clusters() {
+        // Separable data with few clusters and many workers: every worker
+        // rediscovers (roughly) every cluster → ~P×K centers, (P−1)×K dupes.
+        let data = Arc::new(separable_clusters(&GenConfig { n: 400, dim: 8, theta: 0.5, seed: 2 }));
+        let k_latent = data.distinct_components(400).unwrap();
+        let out = dp_first_pass_coordfree(&data, 1.0, 8);
+        assert!(
+            out.centers.rows > k_latent,
+            "coordination-free should over-create: {} vs {k_latent}",
+            out.centers.rows
+        );
+        assert!(out.duplicates > 0);
+        // And the duplicates account exactly for the excess.
+        assert_eq!(out.centers.rows - out.duplicates, k_latent);
+    }
+
+    #[test]
+    fn assignments_are_dense_and_valid() {
+        let data = Arc::new(separable_clusters(&GenConfig { n: 97, dim: 4, theta: 1.0, seed: 3 }));
+        let out = dp_first_pass_coordfree(&data, 1.0, 3);
+        assert!(out.assignments.iter().all(|&a| (a as usize) < out.centers.rows));
+    }
+}

@@ -1,0 +1,8 @@
+//! Concurrency-control baselines the paper positions OCC against (§ intro,
+//! §5): mutual exclusion, coordination-free execution, and streaming
+//! divide-and-conquer. Used by the `ablations` bench to reproduce the
+//! paper's qualitative comparison (correct-and-fast vs fast-or-correct).
+
+pub mod coordfree;
+pub mod dnc;
+pub mod mutex;

@@ -1,0 +1,96 @@
+//! Mutual-exclusion baseline (the [12]/[16] approach).
+//!
+//! Workers take a global lock around every state-reading/creating
+//! transaction, so the execution is trivially serializable — at the price
+//! of serializing exactly the part of the computation OCC keeps parallel.
+//! For DP-means, the *entire* assign-or-create step must hold the lock
+//! (the read of `C` and the conditional append must be atomic), so the
+//! first pass is effectively serial plus locking overhead; that is the
+//! contrast the ablation bench quantifies.
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use std::sync::{Arc, Mutex};
+
+/// Result of the lock-based DP-means first pass.
+#[derive(Debug, Clone)]
+pub struct MutexDpResult {
+    /// Cluster centers created.
+    pub centers: Matrix,
+    /// Per-point assignment.
+    pub assignments: Vec<u32>,
+    /// Number of lock acquisitions (== N; reported for the bench).
+    pub lock_acquisitions: usize,
+}
+
+/// One DP-means assignment pass with `procs` threads and a global mutex
+/// around each transaction. Serializable by construction; the interleaving
+/// (and hence the exact clusters) depends on the scheduler, which is the
+/// fundamental observability difference from OCC's deterministic output.
+pub fn dp_first_pass_mutex(data: &Arc<Dataset>, lambda: f64, procs: usize) -> MutexDpResult {
+    let n = data.len();
+    let d = data.dim();
+    let lambda2 = (lambda * lambda) as f32;
+    let state = Arc::new(Mutex::new((Matrix::zeros(0, d), vec![u32::MAX; n])));
+    let chunk = n.div_ceil(procs.max(1));
+
+    std::thread::scope(|scope| {
+        for p in 0..procs {
+            let lo = (p * chunk).min(n);
+            let hi = ((p + 1) * chunk).min(n);
+            let data = data.clone();
+            let state = state.clone();
+            scope.spawn(move || {
+                for i in lo..hi {
+                    let x = data.point(i);
+                    // The whole read-check-append transaction holds the lock.
+                    let mut guard = state.lock().expect("poisoned");
+                    let (centers, assignments) = &mut *guard;
+                    let (k, d2) = crate::linalg::nearest(x, centers);
+                    assignments[i] = if d2 > lambda2 {
+                        centers.push_row(x);
+                        (centers.rows - 1) as u32
+                    } else {
+                        k as u32
+                    };
+                }
+            });
+        }
+    });
+
+    let (centers, assignments) =
+        Arc::try_unwrap(state).expect("threads joined").into_inner().expect("poisoned");
+    MutexDpResult { centers, assignments, lock_acquisitions: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{separable_clusters, GenConfig};
+
+    #[test]
+    fn serializable_output_covers_all_points() {
+        let data = Arc::new(separable_clusters(&GenConfig { n: 300, dim: 8, theta: 1.0, seed: 1 }));
+        let out = dp_first_pass_mutex(&data, 1.0, 4);
+        // On separable data with λ=1 the number of clusters is exactly K_N
+        // for ANY serializable order — a strong correctness check that holds
+        // despite scheduler nondeterminism.
+        let k_latent = data.distinct_components(300).unwrap();
+        assert_eq!(out.centers.rows, k_latent);
+        assert!(out.assignments.iter().all(|&a| (a as usize) < out.centers.rows));
+        // Every point within λ of its center at creation time ⇒ ≤ λ of some
+        // center now (centers are data points here, not re-estimated).
+        for i in 0..data.len() {
+            let (_, d2) = crate::linalg::nearest(data.point(i), &out.centers);
+            assert!(d2 <= 1.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_thread_matches_serial_first_pass() {
+        let data = Arc::new(separable_clusters(&GenConfig { n: 100, dim: 4, theta: 1.0, seed: 2 }));
+        let out = dp_first_pass_mutex(&data, 1.0, 1);
+        let serial = crate::algorithms::dpmeans::serial_dp_first_pass(&data, 1.0);
+        assert_eq!(out.centers.data, serial.data);
+    }
+}

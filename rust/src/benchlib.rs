@@ -1,0 +1,197 @@
+//! Benchmark harness (no `criterion` offline).
+//!
+//! `cargo bench` runs each `[[bench]]` target with `harness = false`; the
+//! targets use this module for warmup + repeated timing, robust statistics,
+//! aligned table rendering and CSV output (so figures can be re-plotted).
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+/// Summary statistics of repeated timings.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    /// Mean wall-clock per iteration.
+    pub mean: Duration,
+    /// Minimum.
+    pub min: Duration,
+    /// Maximum.
+    pub max: Duration,
+    /// Sample standard deviation.
+    pub std: Duration,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl Stats {
+    /// From raw samples.
+    pub fn from_samples(samples: &[Duration]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|s| (s.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>()
+            / n.max(2).saturating_sub(1) as f64;
+        Stats {
+            mean,
+            min: *samples.iter().min().unwrap(),
+            max: *samples.iter().max().unwrap(),
+            std: Duration::from_secs_f64(var.sqrt()),
+            iters: n,
+        }
+    }
+}
+
+/// Time `f` for `iters` measured iterations after `warmup` unmeasured ones.
+pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// An aligned console table + CSV sink for bench results.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with headers.
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+    /// Append a row.
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+    /// Render aligned to stdout.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let render = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", render(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", render(row));
+        }
+    }
+    /// Write as CSV.
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        f.flush()
+    }
+}
+
+/// Parse trailing bench args of the form `--key=value`, returning lookups.
+pub struct BenchArgs {
+    args: Vec<String>,
+}
+
+impl BenchArgs {
+    /// From `std::env::args` (skips the `--bench` flag cargo passes).
+    pub fn from_env() -> BenchArgs {
+        BenchArgs { args: std::env::args().skip(1).filter(|a| a != "--bench").collect() }
+    }
+    /// Value of `--key=value`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        let prefix = format!("--{key}=");
+        self.args.iter().find_map(|a| a.strip_prefix(&prefix))
+    }
+    /// Parsed value with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    /// Boolean switch `--key`.
+    pub fn has(&self, key: &str) -> bool {
+        let flag = format!("--{key}");
+        self.args.iter().any(|a| a == &flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_samples() {
+        let s = Stats::from_samples(&[
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ]);
+        assert_eq!(s.mean, Duration::from_millis(20));
+        assert_eq!(s.min, Duration::from_millis(10));
+        assert_eq!(s.max, Duration::from_millis(30));
+        assert_eq!(s.iters, 3);
+        assert!(s.std > Duration::from_millis(5));
+    }
+
+    #[test]
+    fn time_fn_counts_iterations() {
+        let mut count = 0;
+        let s = time_fn(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn fmt_covers_ranges() {
+        assert!(fmt_duration(Duration::from_secs(2)).contains("s"));
+        assert!(fmt_duration(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_duration(Duration::from_micros(7)).contains("µs"));
+    }
+
+    #[test]
+    fn table_renders_and_saves_csv() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+        let mut p = std::env::temp_dir();
+        p.push(format!("occml-bench-{}.csv", std::process::id()));
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,bb\n1,2\n");
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,249 @@
+//! Minimal CLI argument framework (no `clap` offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches
+//! and positional arguments, with generated `--help` text. Just enough for
+//! `occd` and the bench binaries, with proper error messages.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Specification of one flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    /// Long name without the leading `--`.
+    pub name: &'static str,
+    /// Help text.
+    pub help: &'static str,
+    /// True if the flag takes no value.
+    pub is_switch: bool,
+    /// Default value rendered in help (informational only).
+    pub default: Option<&'static str>,
+}
+
+/// A parsed command line: flag values and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    flags: BTreeMap<String, String>,
+    /// Positional arguments in order.
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    /// String flag value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+    /// Parsed typed flag value.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::config(format!("--{name}: cannot parse `{s}`"))),
+        }
+    }
+    /// True if a boolean switch was given.
+    pub fn switch(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+/// A subcommand definition.
+#[derive(Debug, Clone)]
+pub struct Command {
+    /// Subcommand name.
+    pub name: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Accepted flags.
+    pub flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    /// New command with no flags.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, flags: Vec::new() }
+    }
+    /// Add a value-taking flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.flags.push(FlagSpec { name, help, is_switch: false, default });
+        self
+    }
+    /// Add a boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, is_switch: true, default: None });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self, prog: &str) -> String {
+        let mut s = format!("{prog} {} — {}\n\nFlags:\n", self.name, self.about);
+        for f in &self.flags {
+            let def = f.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+            let val = if f.is_switch { "" } else { " <value>" };
+            s.push_str(&format!("  --{}{val}\n      {}{def}\n", f.name, f.help));
+        }
+        s
+    }
+
+    /// Parse this command's arguments.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut out = Parsed::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| Error::config(format!("unknown flag --{name} for `{}`", self.name)))?;
+                let value = if spec.is_switch {
+                    if inline.is_some() {
+                        return Err(Error::config(format!("--{name} takes no value")));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| Error::config(format!("--{name} needs a value")))?
+                };
+                out.flags.insert(name.to_string(), value);
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+/// An application: a set of subcommands.
+#[derive(Debug, Default)]
+pub struct App {
+    /// Program name for help output.
+    pub prog: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Subcommands.
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    /// New application.
+    pub fn new(prog: &'static str, about: &'static str) -> Self {
+        App { prog, about, commands: Vec::new() }
+    }
+    /// Register a subcommand.
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+    /// Top-level help.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nCommands:\n", self.prog, self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str("\nUse `");
+        s.push_str(self.prog);
+        s.push_str(" <command> --help` for flags.\n");
+        s
+    }
+
+    /// Dispatch: returns the matched command and its parsed args, or `None`
+    /// if help was requested (help text is returned in the error-free side
+    /// channel `HelpRequested`).
+    pub fn dispatch(&self, argv: &[String]) -> Result<Dispatch<'_>> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Ok(Dispatch::Help(self.help()));
+        }
+        let name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == name.as_str())
+            .ok_or_else(|| Error::config(format!("unknown command `{name}`\n\n{}", self.help())))?;
+        let rest = &argv[1..];
+        if rest.iter().any(|a| a == "--help" || a == "-h") {
+            return Ok(Dispatch::Help(cmd.help(self.prog)));
+        }
+        let parsed = cmd.parse(rest)?;
+        Ok(Dispatch::Run(cmd, parsed))
+    }
+}
+
+/// Result of CLI dispatch.
+pub enum Dispatch<'a> {
+    /// Print this help text and exit 0.
+    Help(String),
+    /// Run the matched command with parsed args.
+    Run(&'a Command, Parsed),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("occd", "test app").command(
+            Command::new("run", "run an algorithm")
+                .flag("algo", "algorithm", Some("dpmeans"))
+                .flag("n", "points", None)
+                .switch("verbose", "print more"),
+        )
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        let a = app();
+        match a.dispatch(&argv(&["run", "--algo", "ofl", "--n=42", "--verbose", "pos1"])).unwrap() {
+            Dispatch::Run(cmd, p) => {
+                assert_eq!(cmd.name, "run");
+                assert_eq!(p.get("algo"), Some("ofl"));
+                assert_eq!(p.get_parse::<usize>("n").unwrap(), Some(42));
+                assert!(p.switch("verbose"));
+                assert_eq!(p.positionals, vec!["pos1"]);
+            }
+            _ => panic!("expected run"),
+        }
+    }
+
+    #[test]
+    fn help_paths() {
+        let a = app();
+        assert!(matches!(a.dispatch(&argv(&[])).unwrap(), Dispatch::Help(_)));
+        assert!(matches!(a.dispatch(&argv(&["--help"])).unwrap(), Dispatch::Help(_)));
+        match a.dispatch(&argv(&["run", "--help"])).unwrap() {
+            Dispatch::Help(h) => assert!(h.contains("--algo")),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn errors() {
+        let a = app();
+        assert!(a.dispatch(&argv(&["nope"])).is_err());
+        assert!(a.dispatch(&argv(&["run", "--bogus", "1"])).is_err());
+        assert!(a.dispatch(&argv(&["run", "--n"])).is_err());
+        assert!(a.dispatch(&argv(&["run", "--verbose=1"])).is_err());
+        match a.dispatch(&argv(&["run", "--n", "abc"])) {
+            Ok(Dispatch::Run(_, p)) => {
+                assert!(p.get_parse::<usize>("n").is_err());
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Typed configuration for `occml` runs.
+//!
+//! Configs are loaded from a TOML-subset file (see [`toml`]) and/or set by
+//! CLI flags; [`RunConfig::from_doc`] performs the typed extraction with
+//! validation, and `occd` merges flag overrides on top.
+
+pub mod toml;
+
+use crate::error::{Error, Result};
+use std::path::PathBuf;
+
+/// Which algorithm a run executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// DP-means clustering (Alg 1 / Alg 3).
+    DpMeans,
+    /// Online facility location (Alg 4, Meyerson).
+    Ofl,
+    /// BP-means latent features (Alg 7 / Alg 6).
+    BpMeans,
+}
+
+impl Algo {
+    /// Parse an algorithm name.
+    pub fn parse(s: &str) -> Result<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "dpmeans" | "dp-means" | "dp" => Ok(Algo::DpMeans),
+            "ofl" | "facility" => Ok(Algo::Ofl),
+            "bpmeans" | "bp-means" | "bp" => Ok(Algo::BpMeans),
+            other => Err(Error::config(format!("unknown algo `{other}` (dpmeans|ofl|bpmeans)"))),
+        }
+    }
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::DpMeans => "dpmeans",
+            Algo::Ofl => "ofl",
+            Algo::BpMeans => "bpmeans",
+        }
+    }
+}
+
+/// Which numeric backend executes the per-epoch hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust blocked kernels.
+    Native,
+    /// AOT-compiled XLA artifacts via PJRT.
+    Xla,
+}
+
+impl BackendKind {
+    /// Parse a backend name.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "rust" => Ok(BackendKind::Native),
+            "xla" | "pjrt" => Ok(BackendKind::Xla),
+            other => Err(Error::config(format!("unknown backend `{other}` (native|xla)"))),
+        }
+    }
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Data source for a run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataSource {
+    /// Synthetic DP-mixture clusters (§4 "Clustering").
+    DpClusters,
+    /// Synthetic BP latent features (§4 "Feature modeling").
+    BpFeatures,
+    /// Separable clusters (App C.1).
+    Separable,
+    /// Load from an `.occb` file.
+    File(PathBuf),
+}
+
+impl DataSource {
+    /// Parse a source spec: generator name or `file:<path>`.
+    pub fn parse(s: &str) -> Result<DataSource> {
+        if let Some(path) = s.strip_prefix("file:") {
+            return Ok(DataSource::File(PathBuf::from(path)));
+        }
+        match s.to_ascii_lowercase().as_str() {
+            "dp" | "dp-clusters" | "clusters" => Ok(DataSource::DpClusters),
+            "bp" | "bp-features" | "features" => Ok(DataSource::BpFeatures),
+            "separable" => Ok(DataSource::Separable),
+            other => Err(Error::config(format!(
+                "unknown data source `{other}` (dp|bp|separable|file:<path>)"
+            ))),
+        }
+    }
+}
+
+/// Full configuration for one `occd run`.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Algorithm to run.
+    pub algo: Algo,
+    /// Distance threshold λ (paper: 1 or 2 depending on experiment).
+    pub lambda: f64,
+    /// Number of worker "processors" P.
+    pub procs: usize,
+    /// Points per processor per epoch, `b`.
+    pub block: usize,
+    /// Passes over the data (DP/BP; OFL is single-pass).
+    pub iterations: usize,
+    /// Bootstrap: pre-process `first Pb / bootstrap_div` points serially
+    /// before epoch 1 (§4.2 uses 16). `0` disables bootstrapping.
+    pub bootstrap_div: usize,
+    /// Numeric backend for the hot path.
+    pub backend: BackendKind,
+    /// Directory holding AOT artifacts (XLA backend).
+    pub artifacts_dir: PathBuf,
+    /// RNG seed.
+    pub seed: u64,
+    /// Data source.
+    pub source: DataSource,
+    /// Number of points (generators only).
+    pub n: usize,
+    /// Dimensionality (generators only).
+    pub dim: usize,
+    /// Stick-breaking concentration θ.
+    pub theta: f64,
+    /// Where to write JSONL metrics (stdout if `None`).
+    pub metrics_path: Option<PathBuf>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            algo: Algo::DpMeans,
+            lambda: 1.0,
+            procs: 4,
+            block: 256,
+            iterations: 3,
+            bootstrap_div: 16,
+            backend: BackendKind::Native,
+            artifacts_dir: PathBuf::from("artifacts"),
+            seed: 0,
+            source: DataSource::DpClusters,
+            n: 16_384,
+            dim: 16,
+            theta: 1.0,
+            metrics_path: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Extract a run config from a parsed document (keys under `[run]` and
+    /// `[data]`), starting from defaults.
+    pub fn from_doc(doc: &toml::Document) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(s) = doc.get_str("run.algo") {
+            cfg.algo = Algo::parse(s)?;
+        }
+        if let Some(v) = doc.get_float("run.lambda") {
+            cfg.lambda = v;
+        }
+        if let Some(v) = doc.get_int("run.procs") {
+            cfg.procs = usize::try_from(v).map_err(|_| Error::config("run.procs must be ≥ 0"))?;
+        }
+        if let Some(v) = doc.get_int("run.block") {
+            cfg.block = usize::try_from(v).map_err(|_| Error::config("run.block must be ≥ 0"))?;
+        }
+        if let Some(v) = doc.get_int("run.iterations") {
+            cfg.iterations = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get_int("run.bootstrap_div") {
+            cfg.bootstrap_div = v.max(0) as usize;
+        }
+        if let Some(s) = doc.get_str("run.backend") {
+            cfg.backend = BackendKind::parse(s)?;
+        }
+        if let Some(s) = doc.get_str("run.artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(v) = doc.get_int("run.seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(s) = doc.get_str("run.metrics") {
+            cfg.metrics_path = Some(PathBuf::from(s));
+        }
+        if let Some(s) = doc.get_str("data.source") {
+            cfg.source = DataSource::parse(s)?;
+        }
+        if let Some(v) = doc.get_int("data.n") {
+            cfg.n = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get_int("data.dim") {
+            cfg.dim = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get_float("data.theta") {
+            cfg.theta = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate invariants that would otherwise surface as panics deep in a run.
+    pub fn validate(&self) -> Result<()> {
+        if self.lambda <= 0.0 {
+            return Err(Error::config(format!("lambda must be > 0, got {}", self.lambda)));
+        }
+        if self.procs == 0 {
+            return Err(Error::config("procs must be ≥ 1"));
+        }
+        if self.block == 0 {
+            return Err(Error::config("block must be ≥ 1"));
+        }
+        if self.dim == 0 || self.dim > 4096 {
+            return Err(Error::config(format!("dim out of range: {}", self.dim)));
+        }
+        Ok(())
+    }
+
+    /// Points per epoch, `P·b`.
+    pub fn points_per_epoch(&self) -> usize {
+        self.procs * self.block
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_enums() {
+        assert_eq!(Algo::parse("DP-Means").unwrap(), Algo::DpMeans);
+        assert_eq!(Algo::parse("ofl").unwrap(), Algo::Ofl);
+        assert_eq!(Algo::parse("bp").unwrap(), Algo::BpMeans);
+        assert!(Algo::parse("kmeans").is_err());
+        assert_eq!(BackendKind::parse("XLA").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("gpu").is_err());
+        assert_eq!(
+            DataSource::parse("file:/tmp/a.occb").unwrap(),
+            DataSource::File(PathBuf::from("/tmp/a.occb"))
+        );
+    }
+
+    #[test]
+    fn from_doc_extracts_and_validates() {
+        let doc = toml::parse(
+            r#"
+            [run]
+            algo = "ofl"
+            lambda = 2.0
+            procs = 8
+            block = 512
+            backend = "native"
+            seed = 9
+
+            [data]
+            source = "separable"
+            n = 4096
+            dim = 16
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.algo, Algo::Ofl);
+        assert_eq!(cfg.lambda, 2.0);
+        assert_eq!(cfg.procs, 8);
+        assert_eq!(cfg.block, 512);
+        assert_eq!(cfg.source, DataSource::Separable);
+        assert_eq!(cfg.points_per_epoch(), 8 * 512);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let doc = toml::parse("[run]\nlambda = -1.0\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = toml::parse("[run]\nprocs = 0\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = toml::parse("[run]\nalgo = \"nope\"\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+}

@@ -1,0 +1,289 @@
+//! A TOML-subset parser (no external crates are available offline).
+//!
+//! Supported syntax — everything `occml` config files use:
+//!
+//! * `[table]` and `[table.subtable]` headers
+//! * `key = value` with string (`"…"`), integer, float, boolean and
+//!   homogeneous-array (`[1, 2, 3]`) values
+//! * `#` comments and blank lines
+//!
+//! Values are stored flat under dotted keys (`"run.lambda"`), which is all
+//! the typed-config layer needs.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// 64-bit integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous or mixed array.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As string, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// As integer (floats with zero fraction qualify).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+    /// As float (integers coerce).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    /// As boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// As array.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: flat map from dotted key to value.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    /// Dotted-key → value map.
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Document {
+    /// Fetch a value by dotted key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+    /// String by key.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+    /// Integer by key.
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_int)
+    }
+    /// Float by key.
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_float)
+    }
+    /// Boolean by key.
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document> {
+    let mut doc = Document::default();
+    let mut prefix = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated table header"))?
+                .trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-') {
+                return Err(err(lineno, "invalid table name"));
+            }
+            prefix = format!("{name}.");
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err(lineno, "expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+            return Err(err(lineno, &format!("invalid key `{key}`")));
+        }
+        let vtext = line[eq + 1..].trim();
+        let value = parse_value(vtext).map_err(|m| err(lineno, &m))?;
+        let full = format!("{prefix}{key}");
+        if doc.values.contains_key(&full) {
+            return Err(err(lineno, &format!("duplicate key `{full}`")));
+        }
+        doc.values.insert(full, value);
+    }
+    Ok(doc)
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside a quoted string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> std::result::Result<Value, String> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = t.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string (escapes unsupported)".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = t.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    let clean = t.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{t}`"))
+}
+
+/// Split on commas that are not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_tables_and_arrays() {
+        let doc = parse(
+            r#"
+            # top-level
+            name = "dpmeans"
+            n = 1_024
+            lambda = 1.5
+            verbose = true
+
+            [run]
+            procs = 8
+            buckets = [256, 1024, 4096]
+            tags = ["a", "b"]
+
+            [run.inner]
+            x = -3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("dpmeans"));
+        assert_eq!(doc.get_int("n"), Some(1024));
+        assert_eq!(doc.get_float("lambda"), Some(1.5));
+        assert_eq!(doc.get_bool("verbose"), Some(true));
+        assert_eq!(doc.get_int("run.procs"), Some(8));
+        assert_eq!(doc.get_int("run.inner.x"), Some(-3));
+        let arr = doc.get("run.buckets").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_int(), Some(1024));
+        assert_eq!(
+            doc.get("run.tags").unwrap().as_array().unwrap()[0].as_str(),
+            Some("a")
+        );
+    }
+
+    #[test]
+    fn int_float_coercions() {
+        let doc = parse("a = 3\nb = 2.0\n").unwrap();
+        assert_eq!(doc.get_float("a"), Some(3.0));
+        assert_eq!(doc.get_int("b"), Some(2));
+        assert_eq!(doc.get_int("a"), Some(3));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = parse("s = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken\n").unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("k = \"unterminated\n").is_err());
+        assert!(parse("k = [1, 2\n").is_err());
+        assert!(parse("k = nonsense\n").is_err());
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+        // Same key in different tables is fine.
+        assert!(parse("[x]\na = 1\n[y]\na = 2\n").is_ok());
+    }
+
+    #[test]
+    fn empty_array_ok() {
+        let doc = parse("a = []\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_array().unwrap().len(), 0);
+    }
+}

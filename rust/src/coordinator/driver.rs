@@ -1,0 +1,669 @@
+//! Full OCC runs: Alg 3 (DP-means), Alg 4 (OFL), Alg 6 (BP-means).
+//!
+//! The driver owns the global state and the epoch loop; workers compute, the
+//! master validates (in point-index order — the Thm 3.1 serial order) and
+//! replicates state by handing the next epoch an updated snapshot.
+//!
+//! Epoch structure (Fig 5): epoch `t` covers the contiguous index range
+//! `[start + t·P·b, start + (t+1)·P·b)`; each worker gets a contiguous
+//! block of it. Because proposals are merged and validated by point index,
+//! the result is identical for every worker count `P` at fixed `P·b`.
+
+use super::engine::{split_range, split_range_chunked, Job, JobOutput, WorkerPool};
+use super::validator::{
+    bp_validate, dp_validate, ofl_validate, BpProposal, DpProposal, OflProposal,
+};
+use crate::algorithms::bpmeans::{descend_z, BpModel, RIDGE_EPS};
+use crate::algorithms::dpmeans::DpModel;
+use crate::algorithms::objective;
+use crate::algorithms::ofl::{ofl_draws, OflModel};
+use crate::config::{Algo, BackendKind, DataSource, RunConfig};
+use crate::data::{generators, Dataset};
+use crate::error::{Error, Result};
+use crate::linalg::{blocked, cholesky, Matrix};
+use crate::metrics::{EpochRecord, MetricsSink, RunSummary, Stopwatch};
+use crate::runtime::{native::NativeBackend, xla::XlaBackend, ComputeBackend};
+use std::sync::Arc;
+
+/// The learned model, by algorithm.
+#[derive(Debug, Clone)]
+pub enum Model {
+    /// DP-means output.
+    Dp(DpModel),
+    /// OFL output.
+    Ofl(OflModel),
+    /// BP-means output.
+    Bp(BpModel),
+}
+
+impl Model {
+    /// Number of clusters / facilities / features.
+    pub fn k(&self) -> usize {
+        match self {
+            Model::Dp(m) => m.centers.rows,
+            Model::Ofl(m) => m.centers.rows,
+            Model::Bp(m) => m.features.rows,
+        }
+    }
+}
+
+/// A complete run result.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    /// Metrics summary (per-epoch records, objective, totals).
+    pub summary: RunSummary,
+    /// The learned model.
+    pub model: Model,
+}
+
+/// Generate or load the dataset a config names.
+pub fn load_or_generate(cfg: &RunConfig) -> Result<Dataset> {
+    let gen = generators::GenConfig { n: cfg.n, dim: cfg.dim, theta: cfg.theta, seed: cfg.seed };
+    match &cfg.source {
+        DataSource::DpClusters => Ok(generators::dp_clusters(&gen)),
+        DataSource::BpFeatures => Ok(generators::bp_features(&gen)),
+        DataSource::Separable => Ok(generators::separable_clusters(&gen)),
+        DataSource::File(path) => crate::data::io::read_occb(path),
+    }
+}
+
+/// Build the configured compute backend.
+pub fn make_backend(cfg: &RunConfig) -> Result<Arc<dyn ComputeBackend>> {
+    match cfg.backend {
+        BackendKind::Native => Ok(Arc::new(NativeBackend::new())),
+        BackendKind::Xla => Ok(Arc::new(XlaBackend::load(&cfg.artifacts_dir)?)),
+    }
+}
+
+/// Run the configured algorithm end to end (data + backend from config).
+pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
+    let data = Arc::new(load_or_generate(cfg)?);
+    let backend = make_backend(cfg)?;
+    run_with(cfg, data, backend)
+}
+
+/// Run with an explicit dataset and backend (the embedding API used by the
+/// examples, benches and tests).
+pub fn run_with(
+    cfg: &RunConfig,
+    data: Arc<Dataset>,
+    backend: Arc<dyn ComputeBackend>,
+) -> Result<RunOutput> {
+    cfg.validate()?;
+    let mut sink = MetricsSink::open(cfg.metrics_path.as_deref())?;
+    let out = match cfg.algo {
+        Algo::DpMeans => run_dpmeans(cfg, data, backend, &mut sink),
+        Algo::Ofl => run_ofl(cfg, data, backend, &mut sink),
+        Algo::BpMeans => run_bpmeans(cfg, data, backend, &mut sink),
+    };
+    sink.flush();
+    out
+}
+
+/// Bootstrap size (§4.2): 1/`bootstrap_div` of the first `P·b` points,
+/// clamped to the dataset.
+fn bootstrap_size(cfg: &RunConfig, n: usize) -> usize {
+    if cfg.bootstrap_div == 0 {
+        0
+    } else {
+        (cfg.points_per_epoch() / cfg.bootstrap_div).min(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OCC DP-means (Alg 3)
+// ---------------------------------------------------------------------------
+
+/// Distributed DP-means.
+pub fn run_dpmeans(
+    cfg: &RunConfig,
+    data: Arc<Dataset>,
+    backend: Arc<dyn ComputeBackend>,
+    sink: &mut MetricsSink,
+) -> Result<RunOutput> {
+    let n = data.len();
+    let d = data.dim();
+    let lambda2 = (cfg.lambda * cfg.lambda) as f32;
+    let pool = WorkerPool::spawn(data.clone(), backend, cfg.procs);
+    let total = Stopwatch::start();
+
+    let mut centers = Matrix::zeros(0, d);
+    let mut assignments = vec![u32::MAX; n];
+    let mut epochs_log = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+    let mut created_per_pass = Vec::new();
+
+    // Bootstrap: serially pre-process the first Pb/div points (first pass
+    // only). They are the first points of the serial order, so this
+    // preserves serializability.
+    let boot_n = bootstrap_size(cfg, n);
+    for i in 0..boot_n {
+        let x = data.point(i);
+        let (k, d2) = crate::linalg::nearest(x, &centers);
+        assignments[i] = if d2 > lambda2 {
+            centers.push_row(x);
+            (centers.rows - 1) as u32
+        } else {
+            k as u32
+        };
+    }
+
+    for pass in 0..cfg.iterations {
+        iterations += 1;
+        let start = if pass == 0 { boot_n } else { 0 };
+        let mut changed = boot_n > 0 && pass == 0; // bootstrap assigned points
+        let mut created = if pass == 0 { centers.rows } else { 0 };
+
+        let per_epoch = cfg.points_per_epoch();
+        let num_epochs = (n - start).div_ceil(per_epoch).max(1);
+        for t in 0..num_epochs {
+            let epoch_sw = Stopwatch::start();
+            let lo = start + t * per_epoch;
+            let hi = (lo + per_epoch).min(n);
+            if lo >= hi {
+                continue;
+            }
+            let snapshot = Arc::new(centers.clone());
+            let base = snapshot.rows;
+            let ranges = split_range(lo..hi, cfg.procs);
+            let jobs: Vec<Job> = ranges
+                .iter()
+                .map(|r| Job::Nearest { range: r.clone(), centers: snapshot.clone() })
+                .collect();
+            let (outs, worker_time) = pool.scatter_gather(jobs)?;
+
+            // Merge results by index; collect proposals in index order.
+            let mut proposals = Vec::new();
+            for (w, out) in outs.iter().enumerate() {
+                let JobOutput::Nearest { idx, d2 } = out else {
+                    return Err(Error::Coordinator("unexpected job output".into()));
+                };
+                for (off, i) in ranges[w].clone().enumerate() {
+                    if d2[off] > lambda2 {
+                        proposals.push(DpProposal { idx: i as u32, center: data.point(i).to_vec() });
+                    } else if assignments[i] != idx[off] {
+                        assignments[i] = idx[off];
+                        changed = true;
+                    }
+                }
+            }
+            proposals.sort_by_key(|p| p.idx);
+
+            // Serial validation at the master.
+            let master_sw = Stopwatch::start();
+            let outcome = dp_validate(&mut centers, base, &proposals, lambda2);
+            for (i, c) in &outcome.resolved {
+                if assignments[*i as usize] != *c {
+                    assignments[*i as usize] = *c;
+                    changed = true;
+                }
+            }
+            created += outcome.accepted;
+            let master_time = master_sw.elapsed();
+
+            let rec = EpochRecord {
+                iteration: pass,
+                epoch: t,
+                points: hi - lo,
+                proposed: proposals.len(),
+                accepted: outcome.accepted,
+                rejected: outcome.rejected,
+                centers: centers.rows,
+                worker_time,
+                master_time,
+                total_time: epoch_sw.elapsed(),
+            };
+            sink.emit(&rec);
+            epochs_log.push(rec);
+        }
+        created_per_pass.push(created);
+
+        // Phase 2: recompute centers as means (parallel suffstats).
+        let recompute_sw = Stopwatch::start();
+        let k = centers.rows;
+        if k > 0 {
+            let shared = Arc::new(assignments.clone());
+            let jobs: Vec<Job> = split_range_chunked(0..n, cfg.procs)
+                .into_iter()
+                .map(|range| Job::SuffStats { range, assignments: shared.clone(), k })
+                .collect();
+            let (outs, worker_time) = pool.scatter_gather(jobs)?;
+            // Deterministic reduce: combine per-chunk partials in global
+            // chunk order, independent of the worker count.
+            let mut all_chunks = Vec::new();
+            for out in outs {
+                let JobOutput::SuffStats { chunks } = out else {
+                    return Err(Error::Coordinator("unexpected job output".into()));
+                };
+                all_chunks.extend(chunks);
+            }
+            all_chunks.sort_by_key(|(id, _, _)| *id);
+            let mut sums = Matrix::zeros(k, d);
+            let mut counts = vec![0u64; k];
+            for (_, s, c) in &all_chunks {
+                for kk in 0..k {
+                    counts[kk] += c[kk];
+                    crate::linalg::axpy(1.0, s.row(kk), sums.row_mut(kk));
+                }
+            }
+            blocked::finalize_means(&sums, &counts, &mut centers);
+            let rec = EpochRecord {
+                iteration: pass,
+                epoch: usize::MAX, // convention: the recompute "epoch"
+                points: n,
+                centers: k,
+                worker_time,
+                total_time: recompute_sw.elapsed(),
+                ..Default::default()
+            };
+            sink.emit(&rec);
+            epochs_log.push(rec);
+        }
+
+        if !changed {
+            converged = true;
+            break;
+        }
+    }
+
+    let model = DpModel {
+        centers: centers.clone(),
+        assignments,
+        iterations,
+        converged,
+        created_per_pass,
+    };
+    let summary = RunSummary {
+        epochs: epochs_log,
+        final_centers: centers.rows,
+        objective: Some(objective::dp_objective(&data, &centers, cfg.lambda)),
+        total_time: total.elapsed(),
+    };
+    Ok(RunOutput { summary, model: Model::Dp(model) })
+}
+
+// ---------------------------------------------------------------------------
+// OCC OFL (Alg 4)
+// ---------------------------------------------------------------------------
+
+/// Distributed online facility location. Single pass, no bootstrap (§4.2);
+/// stochastic proposals and validation share per-point uniform draws with
+/// the serial algorithm, making the returned facilities bit-identical to
+/// [`crate::algorithms::ofl::serial_ofl`] with the same seed.
+pub fn run_ofl(
+    cfg: &RunConfig,
+    data: Arc<Dataset>,
+    backend: Arc<dyn ComputeBackend>,
+    sink: &mut MetricsSink,
+) -> Result<RunOutput> {
+    let n = data.len();
+    let d = data.dim();
+    let lambda2 = cfg.lambda * cfg.lambda;
+    let pool = WorkerPool::spawn(data.clone(), backend, cfg.procs);
+    let total = Stopwatch::start();
+
+    let draws = ofl_draws(n, cfg.seed);
+    let mut centers = Matrix::zeros(0, d);
+    let mut assignments = vec![u32::MAX; n];
+    let mut opened_by = Vec::new();
+    let mut epochs_log = Vec::new();
+
+    let per_epoch = cfg.points_per_epoch();
+    let num_epochs = n.div_ceil(per_epoch).max(1);
+    for t in 0..num_epochs {
+        let epoch_sw = Stopwatch::start();
+        let lo = t * per_epoch;
+        let hi = (lo + per_epoch).min(n);
+        if lo >= hi {
+            continue;
+        }
+        let snapshot = Arc::new(centers.clone());
+        let base = snapshot.rows;
+        let ranges = split_range(lo..hi, cfg.procs);
+        let jobs: Vec<Job> = ranges
+            .iter()
+            .map(|r| Job::Nearest { range: r.clone(), centers: snapshot.clone() })
+            .collect();
+        let (outs, worker_time) = pool.scatter_gather(jobs)?;
+
+        let mut proposals = Vec::new();
+        for (w, out) in outs.iter().enumerate() {
+            let JobOutput::Nearest { idx, d2 } = out else {
+                return Err(Error::Coordinator("unexpected job output".into()));
+            };
+            for (off, i) in ranges[w].clone().enumerate() {
+                let d2_prev = if base == 0 { f32::INFINITY } else { d2[off] };
+                let p_send =
+                    if d2_prev.is_infinite() { 1.0 } else { (d2_prev as f64 / lambda2).min(1.0) };
+                if draws[i] < p_send {
+                    proposals.push(OflProposal {
+                        idx: i as u32,
+                        center: data.point(i).to_vec(),
+                        d2_prev,
+                        idx_prev: idx[off],
+                    });
+                } else {
+                    assignments[i] = idx[off];
+                }
+            }
+        }
+        proposals.sort_by_key(|p| p.idx);
+
+        let master_sw = Stopwatch::start();
+        let outcome = ofl_validate(&mut centers, base, &proposals, lambda2, |i| draws[i as usize]);
+        for (i, c) in &outcome.resolved {
+            assignments[*i as usize] = *c;
+        }
+        opened_by.extend_from_slice(&outcome.opened);
+        let master_time = master_sw.elapsed();
+
+        let rec = EpochRecord {
+            iteration: 0,
+            epoch: t,
+            points: hi - lo,
+            proposed: proposals.len(),
+            accepted: outcome.accepted,
+            rejected: outcome.rejected,
+            centers: centers.rows,
+            worker_time,
+            master_time,
+            total_time: epoch_sw.elapsed(),
+        };
+        sink.emit(&rec);
+        epochs_log.push(rec);
+    }
+
+    let model = OflModel { centers: centers.clone(), assignments, opened_by };
+    let summary = RunSummary {
+        epochs: epochs_log,
+        final_centers: centers.rows,
+        objective: Some(objective::dp_objective(&data, &centers, cfg.lambda)),
+        total_time: total.elapsed(),
+    };
+    Ok(RunOutput { summary, model: Model::Ofl(model) })
+}
+
+// ---------------------------------------------------------------------------
+// OCC BP-means (Alg 6)
+// ---------------------------------------------------------------------------
+
+/// Pad-aware equality of binary assignment vectors (trailing `false`s are
+/// insignificant).
+fn z_eq(a: &[bool], b: &[bool]) -> bool {
+    let n = a.len().max(b.len());
+    (0..n).all(|i| a.get(i).copied().unwrap_or(false) == b.get(i).copied().unwrap_or(false))
+}
+
+/// Distributed BP-means.
+pub fn run_bpmeans(
+    cfg: &RunConfig,
+    data: Arc<Dataset>,
+    backend: Arc<dyn ComputeBackend>,
+    sink: &mut MetricsSink,
+) -> Result<RunOutput> {
+    let n = data.len();
+    let d = data.dim();
+    let lambda2 = (cfg.lambda * cfg.lambda) as f32;
+    let sweeps = 2;
+    let pool = WorkerPool::spawn(data.clone(), backend, cfg.procs);
+    let total = Stopwatch::start();
+
+    // Init (Alg 7): one feature = grand mean, z_i,0 = 1 for all i.
+    let mut features = Matrix::zeros(0, d);
+    let mut assignments: Vec<Vec<bool>> = vec![Vec::new(); n];
+    if n > 0 {
+        let mut mean = vec![0.0f32; d];
+        for i in 0..n {
+            crate::linalg::axpy(1.0, data.point(i), &mut mean);
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f32;
+        }
+        features.push_row(&mean);
+        for z in assignments.iter_mut() {
+            z.push(true);
+        }
+    }
+
+    let mut epochs_log = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+    let mut created_per_pass = Vec::new();
+    let mut scratch_resid = vec![0.0f32; d];
+
+    // Bootstrap: serial first-pass BP over the first Pb/div points.
+    let boot_n = bootstrap_size(cfg, n);
+    for i in 0..boot_n {
+        let x = data.point(i);
+        let mut z = vec![false; features.rows];
+        let r2 = descend_z(x, &features, &mut z, &mut scratch_resid, sweeps);
+        if r2 > lambda2 {
+            features.push_row(&scratch_resid);
+            z.push(true);
+        }
+        assignments[i] = z;
+    }
+
+    for pass in 0..cfg.iterations {
+        iterations += 1;
+        let start = if pass == 0 { boot_n } else { 0 };
+        let mut changed = boot_n > 0 && pass == 0;
+        let mut created = if pass == 0 { features.rows.saturating_sub(1) } else { 0 };
+
+        let per_epoch = cfg.points_per_epoch();
+        let num_epochs = (n - start).div_ceil(per_epoch).max(1);
+        for t in 0..num_epochs {
+            let epoch_sw = Stopwatch::start();
+            let lo = start + t * per_epoch;
+            let hi = (lo + per_epoch).min(n);
+            if lo >= hi {
+                continue;
+            }
+            let snapshot = Arc::new(features.clone());
+            let base = snapshot.rows;
+            let ranges = split_range(lo..hi, cfg.procs);
+            let jobs: Vec<Job> = ranges
+                .iter()
+                .map(|r| Job::BpDescend { range: r.clone(), features: snapshot.clone(), sweeps })
+                .collect();
+            let (outs, worker_time) = pool.scatter_gather(jobs)?;
+
+            let mut proposals = Vec::new();
+            let mut new_z: Vec<(usize, Vec<bool>)> = Vec::new();
+            for (w, out) in outs.iter().enumerate() {
+                let JobOutput::BpDescend { z, k, residuals, r2 } = out else {
+                    return Err(Error::Coordinator("unexpected job output".into()));
+                };
+                for (off, i) in ranges[w].clone().enumerate() {
+                    let zi = z[off * k..(off + 1) * k].to_vec();
+                    if r2[off] > lambda2 {
+                        proposals.push(BpProposal {
+                            idx: i as u32,
+                            residual: residuals[off * d..(off + 1) * d].to_vec(),
+                        });
+                    }
+                    new_z.push((i, zi));
+                }
+            }
+            proposals.sort_by_key(|p| p.idx);
+
+            let master_sw = Stopwatch::start();
+            let outcome = bp_validate(&mut features, base, &proposals, lambda2, sweeps);
+            let master_time = master_sw.elapsed();
+
+            // Apply worker assignments, then overlay validation resolutions.
+            for (i, zi) in new_z {
+                if !z_eq(&assignments[i], &zi) {
+                    changed = true;
+                }
+                assignments[i] = zi;
+            }
+            for r in &outcome.resolved {
+                let zi = &mut assignments[r.idx as usize];
+                zi.resize(features.rows, false);
+                for &f in &r.extra_features {
+                    zi[f as usize] = true;
+                }
+                if let Some(f) = r.own_feature {
+                    zi[f as usize] = true;
+                }
+                changed = true;
+            }
+            created += outcome.accepted;
+
+            let rec = EpochRecord {
+                iteration: pass,
+                epoch: t,
+                points: hi - lo,
+                proposed: proposals.len(),
+                accepted: outcome.accepted,
+                rejected: outcome.rejected,
+                centers: features.rows,
+                worker_time,
+                master_time,
+                total_time: epoch_sw.elapsed(),
+            };
+            sink.emit(&rec);
+            epochs_log.push(rec);
+        }
+        created_per_pass.push(created);
+
+        // Phase 2: F ← (ZᵀZ + εI)⁻¹ ZᵀX via parallel partials.
+        let recompute_sw = Stopwatch::start();
+        let k = features.rows;
+        if k > 0 {
+            let shared = Arc::new(assignments.clone());
+            let jobs: Vec<Job> = split_range_chunked(0..n, cfg.procs)
+                .into_iter()
+                .map(|range| Job::BpStats { range, z: shared.clone(), k })
+                .collect();
+            let (outs, worker_time) = pool.scatter_gather(jobs)?;
+            // Deterministic reduce in global chunk order (see SuffStats).
+            let mut all_chunks = Vec::new();
+            for out in outs {
+                let JobOutput::BpStats { chunks } = out else {
+                    return Err(Error::Coordinator("unexpected job output".into()));
+                };
+                all_chunks.extend(chunks);
+            }
+            all_chunks.sort_by_key(|(id, _, _)| *id);
+            let mut ztz = Matrix::zeros(k, k);
+            let mut ztx = Matrix::zeros(k, d);
+            for (_, a, b) in &all_chunks {
+                for i in 0..k * k {
+                    ztz.data[i] += a.data[i];
+                }
+                for i in 0..k * d {
+                    ztx.data[i] += b.data[i];
+                }
+            }
+            features = cholesky::solve_ridge(&ztz, &ztx, RIDGE_EPS)?;
+            let rec = EpochRecord {
+                iteration: pass,
+                epoch: usize::MAX,
+                points: n,
+                centers: k,
+                worker_time,
+                total_time: recompute_sw.elapsed(),
+                ..Default::default()
+            };
+            sink.emit(&rec);
+            epochs_log.push(rec);
+        }
+
+        if !changed {
+            converged = true;
+            break;
+        }
+    }
+
+    // Normalize assignment lengths.
+    for z in assignments.iter_mut() {
+        z.resize(features.rows, false);
+    }
+    let model = BpModel {
+        features: features.clone(),
+        assignments: assignments.clone(),
+        iterations,
+        converged,
+        created_per_pass,
+    };
+    let summary = RunSummary {
+        epochs: epochs_log,
+        final_centers: features.rows,
+        objective: Some(objective::bp_objective(&data, &features, &assignments, cfg.lambda)),
+        total_time: total.elapsed(),
+    };
+    Ok(RunOutput { summary, model: Model::Bp(model) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::data::generators::{dp_clusters, GenConfig};
+
+    fn cfg(algo: Algo, n: usize, procs: usize, block: usize) -> RunConfig {
+        RunConfig {
+            algo,
+            n,
+            procs,
+            block,
+            iterations: 2,
+            bootstrap_div: 16,
+            seed: 3,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn dpmeans_end_to_end_native() {
+        let c = cfg(Algo::DpMeans, 512, 4, 32);
+        let data = Arc::new(dp_clusters(&GenConfig { n: 512, dim: 16, theta: 1.0, seed: 3 }));
+        let out = run_with(&c, data.clone(), Arc::new(NativeBackend::new())).unwrap();
+        let Model::Dp(m) = &out.model else { panic!() };
+        assert!(m.centers.rows >= 1);
+        assert_eq!(m.assignments.len(), 512);
+        assert!(m.assignments.iter().all(|&a| (a as usize) < m.centers.rows));
+        assert!(out.summary.objective.unwrap().is_finite());
+        // Every epoch: accepted + rejected == proposed.
+        for e in &out.summary.epochs {
+            assert_eq!(e.accepted + e.rejected, e.proposed);
+        }
+    }
+
+    #[test]
+    fn ofl_end_to_end_native() {
+        let c = cfg(Algo::Ofl, 300, 3, 25);
+        let data = Arc::new(dp_clusters(&GenConfig { n: 300, dim: 16, theta: 1.0, seed: 4 }));
+        let out = run_with(&c, data, Arc::new(NativeBackend::new())).unwrap();
+        let Model::Ofl(m) = &out.model else { panic!() };
+        assert!(m.centers.rows >= 1);
+        assert!(m.assignments.iter().all(|&a| (a as usize) < m.centers.rows));
+    }
+
+    #[test]
+    fn bpmeans_end_to_end_native() {
+        let c = cfg(Algo::BpMeans, 256, 4, 16);
+        let data = Arc::new(crate::data::generators::bp_features(&GenConfig {
+            n: 256,
+            dim: 16,
+            theta: 1.0,
+            seed: 5,
+        }));
+        let out = run_with(&c, data, Arc::new(NativeBackend::new())).unwrap();
+        let Model::Bp(m) = &out.model else { panic!() };
+        assert!(m.features.rows >= 1);
+        assert!(m.assignments.iter().all(|z| z.len() == m.features.rows));
+    }
+
+    #[test]
+    fn empty_block_epoch_handles() {
+        // n not divisible by Pb and smaller than one epoch.
+        let c = cfg(Algo::DpMeans, 10, 4, 8);
+        let data = Arc::new(dp_clusters(&GenConfig { n: 10, dim: 4, theta: 1.0, seed: 6 }));
+        let out = run_with(&c, data, Arc::new(NativeBackend::new())).unwrap();
+        assert!(out.model.k() >= 1);
+    }
+}

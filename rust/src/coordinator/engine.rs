@@ -1,0 +1,467 @@
+//! The bulk-synchronous worker pool.
+//!
+//! P persistent worker threads each own a handle to the shared dataset and
+//! the compute backend. Every epoch (or mean-recompute phase) the master
+//! scatters one [`Job`] per worker and gathers one [`JobReply`] per worker —
+//! the gather is the BSP barrier. Channels are `std::sync::mpsc`; the
+//! per-epoch coordination cost is two sends per worker, negligible next to
+//! the numeric work.
+//!
+//! Workers never touch global state: they read an immutable snapshot
+//! (`Arc<Matrix>`) of the epoch's centers/features — the paper's
+//! "replicated view of the global state" — and return pure data. All
+//! mutation happens in the master (driver + validators), which is what
+//! makes the execution serializable.
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::runtime::{Block, ComputeBackend};
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One unit of scattered work.
+pub enum Job {
+    /// Nearest-center assignment for a block against a state snapshot.
+    Nearest {
+        /// Global point range.
+        range: Range<usize>,
+        /// Snapshot of `C^{t-1}`.
+        centers: Arc<Matrix>,
+    },
+    /// Partial sufficient statistics (sums/counts) for the mean recompute.
+    /// Computed per fixed-size chunk (see [`REDUCE_CHUNK`]) so the master
+    /// can reduce in a P-independent deterministic order.
+    SuffStats {
+        /// Global point range.
+        range: Range<usize>,
+        /// Snapshot of all assignments.
+        assignments: Arc<Vec<u32>>,
+        /// Number of centers.
+        k: usize,
+    },
+    /// BP-means coordinate descent for a block against a feature snapshot.
+    BpDescend {
+        /// Global point range.
+        range: Range<usize>,
+        /// Snapshot of `F^{t-1}`.
+        features: Arc<Matrix>,
+        /// Coordinate-descent sweeps.
+        sweeps: usize,
+    },
+    /// Partial `ZᵀZ` / `ZᵀX` for the BP feature re-estimate.
+    BpStats {
+        /// Global point range.
+        range: Range<usize>,
+        /// Snapshot of all binary assignments (row-padded to `k`).
+        z: Arc<Vec<Vec<bool>>>,
+        /// Number of features.
+        k: usize,
+    },
+    /// Terminate the worker thread.
+    Shutdown,
+}
+
+/// Fixed reduction chunk: float sums are accumulated per chunk of this many
+/// points and combined at the master in global chunk order, making the
+/// result *bit-identical for every worker count* (f32 addition is not
+/// associative; P-dependent partial boundaries would leak into the state).
+pub const REDUCE_CHUNK: usize = 4096;
+
+/// Result payload of one job.
+pub enum JobOutput {
+    /// Nearest-center results for the job's range.
+    Nearest {
+        /// Per-point nearest center index (into the snapshot).
+        idx: Vec<u32>,
+        /// Per-point squared distance.
+        d2: Vec<f32>,
+    },
+    /// Partial sums/counts, one entry per [`REDUCE_CHUNK`]-aligned chunk
+    /// (chunk id = start index / REDUCE_CHUNK).
+    SuffStats {
+        /// `(chunk id, per-center sums, per-center counts)` per chunk.
+        chunks: Vec<(usize, Matrix, Vec<u64>)>,
+    },
+    /// BP descent results for the job's range.
+    BpDescend {
+        /// Row-major `n × k` binary assignments.
+        z: Vec<bool>,
+        /// Feature count the z rows are against.
+        k: usize,
+        /// Row-major `n × d` residuals.
+        residuals: Vec<f32>,
+        /// Per-point squared residual norms.
+        r2: Vec<f32>,
+    },
+    /// Partial normal-equation blocks, one entry per chunk (like SuffStats).
+    BpStats {
+        /// `(chunk id, ZᵀZ partial (k×k), ZᵀX partial (k×d))` per chunk.
+        chunks: Vec<(usize, Matrix, Matrix)>,
+    },
+}
+
+/// A worker's reply: its id, the output (or error), and its busy time.
+pub struct JobReply {
+    /// Worker id.
+    pub worker: usize,
+    /// Output or failure.
+    pub output: Result<JobOutput>,
+    /// Time the worker spent on the job.
+    pub busy: Duration,
+}
+
+/// Persistent BSP worker pool.
+pub struct WorkerPool {
+    senders: Vec<Sender<Job>>,
+    replies: Receiver<JobReply>,
+    handles: Vec<JoinHandle<()>>,
+    /// Number of workers.
+    pub procs: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `procs` workers over a shared dataset and backend.
+    pub fn spawn(data: Arc<Dataset>, backend: Arc<dyn ComputeBackend>, procs: usize) -> WorkerPool {
+        assert!(procs >= 1);
+        let (reply_tx, replies) = channel::<JobReply>();
+        let mut senders = Vec::with_capacity(procs);
+        let mut handles = Vec::with_capacity(procs);
+        for w in 0..procs {
+            let (tx, rx) = channel::<Job>();
+            senders.push(tx);
+            let data = data.clone();
+            let backend = backend.clone();
+            let reply_tx = reply_tx.clone();
+            handles.push(std::thread::spawn(move || worker_loop(w, data, backend, rx, reply_tx)));
+        }
+        WorkerPool { senders, replies, handles, procs }
+    }
+
+    /// Scatter one job per worker (jobs.len() must equal procs) and gather
+    /// all replies. Returns replies sorted by worker id plus the maximum
+    /// per-worker busy time (the critical-path worker time for metrics).
+    pub fn scatter_gather(&self, jobs: Vec<Job>) -> Result<(Vec<JobOutput>, Duration)> {
+        assert_eq!(jobs.len(), self.procs);
+        for (tx, job) in self.senders.iter().zip(jobs) {
+            tx.send(job)
+                .map_err(|_| Error::Coordinator("worker channel closed".into()))?;
+        }
+        let mut outputs: Vec<Option<JobOutput>> = (0..self.procs).map(|_| None).collect();
+        let mut max_busy = Duration::ZERO;
+        for _ in 0..self.procs {
+            let reply = self
+                .replies
+                .recv()
+                .map_err(|_| Error::Coordinator("reply channel closed".into()))?;
+            max_busy = max_busy.max(reply.busy);
+            outputs[reply.worker] = Some(reply.output?);
+        }
+        Ok((outputs.into_iter().map(|o| o.expect("worker replied")).collect(), max_busy))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Job::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    id: usize,
+    data: Arc<Dataset>,
+    backend: Arc<dyn ComputeBackend>,
+    rx: Receiver<Job>,
+    reply_tx: Sender<JobReply>,
+) {
+    while let Ok(job) = rx.recv() {
+        let start = Instant::now();
+        let output = match job {
+            Job::Shutdown => return,
+            Job::Nearest { range, centers } => run_nearest(&data, &backend, range, &centers),
+            Job::SuffStats { range, assignments, k } => {
+                run_suffstats(&data, &backend, range, &assignments, k)
+            }
+            Job::BpDescend { range, features, sweeps } => {
+                run_bp_descend(&data, &backend, range, &features, sweeps)
+            }
+            Job::BpStats { range, z, k } => run_bp_stats(&data, range, &z, k),
+        };
+        let busy = start.elapsed();
+        if reply_tx.send(JobReply { worker: id, output, busy }).is_err() {
+            return; // master gone
+        }
+    }
+}
+
+fn run_nearest(
+    data: &Dataset,
+    backend: &Arc<dyn ComputeBackend>,
+    range: Range<usize>,
+    centers: &Matrix,
+) -> Result<JobOutput> {
+    let n = range.end - range.start;
+    let mut idx = vec![0u32; n];
+    let mut d2 = vec![0.0f32; n];
+    if n > 0 {
+        backend.nearest(Block::of(&data.points, range), centers, &mut idx, &mut d2)?;
+    }
+    Ok(JobOutput::Nearest { idx, d2 })
+}
+
+fn run_suffstats(
+    data: &Dataset,
+    backend: &Arc<dyn ComputeBackend>,
+    range: Range<usize>,
+    assignments: &Arc<Vec<u32>>,
+    k: usize,
+) -> Result<JobOutput> {
+    // One partial per globally-aligned REDUCE_CHUNK so the master's
+    // combination order is P-independent (range is chunk-aligned by
+    // split_range_chunked).
+    let mut chunks = Vec::new();
+    let mut lo = range.start;
+    while lo < range.end {
+        let hi = ((lo / REDUCE_CHUNK + 1) * REDUCE_CHUNK).min(range.end);
+        let mut sums = Matrix::zeros(k, data.dim());
+        let mut counts = vec![0u64; k];
+        backend.suffstats(
+            Block::of(&data.points, lo..hi),
+            &assignments[lo..hi],
+            &mut sums,
+            &mut counts,
+        )?;
+        chunks.push((lo / REDUCE_CHUNK, sums, counts));
+        lo = hi;
+    }
+    Ok(JobOutput::SuffStats { chunks })
+}
+
+fn run_bp_descend(
+    data: &Dataset,
+    backend: &Arc<dyn ComputeBackend>,
+    range: Range<usize>,
+    features: &Matrix,
+    sweeps: usize,
+) -> Result<JobOutput> {
+    let n = range.end - range.start;
+    if n == 0 {
+        return Ok(JobOutput::BpDescend { z: vec![], k: features.rows, residuals: vec![], r2: vec![] });
+    }
+    let out = backend.bp_descend(Block::of(&data.points, range), features, sweeps)?;
+    Ok(JobOutput::BpDescend { z: out.z, k: features.rows, residuals: out.residuals, r2: out.r2 })
+}
+
+fn run_bp_stats(
+    data: &Dataset,
+    range: Range<usize>,
+    z: &Arc<Vec<Vec<bool>>>,
+    k: usize,
+) -> Result<JobOutput> {
+    let d = data.dim();
+    let mut chunks = Vec::new();
+    let mut lo = range.start;
+    while lo < range.end {
+        let hi = ((lo / REDUCE_CHUNK + 1) * REDUCE_CHUNK).min(range.end);
+        let mut ztz = Matrix::zeros(k, k);
+        let mut ztx = Matrix::zeros(k, d);
+        for i in lo..hi {
+            let zi = &z[i];
+            let x = data.point(i);
+            for a in 0..zi.len().min(k) {
+                if !zi[a] {
+                    continue;
+                }
+                crate::linalg::axpy(1.0, x, ztx.row_mut(a));
+                for b in a..zi.len().min(k) {
+                    if zi[b] {
+                        let v = ztz.get(a, b) + 1.0;
+                        ztz.set(a, b, v);
+                        if a != b {
+                            ztz.set(b, a, v);
+                        }
+                    }
+                }
+            }
+        }
+        chunks.push((lo / REDUCE_CHUNK, ztz, ztx));
+        lo = hi;
+    }
+    Ok(JobOutput::BpStats { chunks })
+}
+
+/// Split `range` into `procs` near-equal contiguous chunks (first chunks get
+/// the remainder) — used for the worker-block scatter within an epoch.
+pub fn split_range(range: Range<usize>, procs: usize) -> Vec<Range<usize>> {
+    let n = range.end - range.start;
+    let base = n / procs;
+    let rem = n % procs;
+    let mut out = Vec::with_capacity(procs);
+    let mut at = range.start;
+    for p in 0..procs {
+        let len = base + usize::from(p < rem);
+        out.push(at..at + len);
+        at += len;
+    }
+    out
+}
+
+/// Split `range` into `procs` contiguous pieces whose boundaries fall on
+/// global [`REDUCE_CHUNK`] multiples — every chunk is computed wholly by one
+/// worker, so per-chunk float partials are identical for every `procs`.
+/// Used for the phase-2 reduction scatter.
+pub fn split_range_chunked(range: Range<usize>, procs: usize) -> Vec<Range<usize>> {
+    let n_chunks = (range.end - range.start).div_ceil(REDUCE_CHUNK);
+    let base = n_chunks / procs;
+    let rem = n_chunks % procs;
+    let mut out = Vec::with_capacity(procs);
+    let mut at = range.start;
+    for p in 0..procs {
+        let len_chunks = base + usize::from(p < rem);
+        let end = (at + len_chunks * REDUCE_CHUNK).min(range.end);
+        out.push(at..end);
+        at = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{dp_clusters, GenConfig};
+    use crate::runtime::native::NativeBackend;
+
+    fn pool(n: usize, procs: usize) -> (Arc<Dataset>, WorkerPool) {
+        let data = Arc::new(dp_clusters(&GenConfig { n, dim: 8, theta: 1.0, seed: 1 }));
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+        let pool = WorkerPool::spawn(data.clone(), backend, procs);
+        (data, pool)
+    }
+
+    #[test]
+    fn scatter_gather_nearest_matches_direct() {
+        let (data, pool) = pool(100, 4);
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        centers.push_row(data.point(50));
+        let centers = Arc::new(centers);
+        let ranges = split_range(0..100, 4);
+        let jobs: Vec<Job> = ranges
+            .iter()
+            .map(|r| Job::Nearest { range: r.clone(), centers: centers.clone() })
+            .collect();
+        let (outs, busy) = pool.scatter_gather(jobs).unwrap();
+        assert!(busy > Duration::ZERO);
+        for (w, out) in outs.iter().enumerate() {
+            if let JobOutput::Nearest { idx, d2 } = out {
+                for (off, i) in ranges[w].clone().enumerate() {
+                    let (bi, bd) = crate::linalg::nearest(data.point(i), &centers);
+                    assert_eq!(idx[off], bi as u32);
+                    assert!((d2[off] - bd).abs() < 1e-4);
+                }
+            } else {
+                panic!("wrong output kind");
+            }
+        }
+    }
+
+    #[test]
+    fn suffstats_partials_sum_to_full() {
+        let (data, pool) = pool(100, 3);
+        let assignments = Arc::new((0..100u32).map(|i| i % 4).collect::<Vec<_>>());
+        let jobs: Vec<Job> = split_range_chunked(0..100, 3)
+            .into_iter()
+            .map(|range| Job::SuffStats { range, assignments: assignments.clone(), k: 4 })
+            .collect();
+        let (outs, _) = pool.scatter_gather(jobs).unwrap();
+        let mut sums = Matrix::zeros(4, 8);
+        let mut counts = vec![0u64; 4];
+        for out in outs {
+            if let JobOutput::SuffStats { chunks } = out {
+                for (_, s, c) in chunks {
+                    for k in 0..4 {
+                        counts[k] += c[k];
+                        crate::linalg::axpy(1.0, s.row(k), sums.row_mut(k));
+                    }
+                }
+            }
+        }
+        assert_eq!(counts, vec![25, 25, 25, 25]);
+        // Direct computation.
+        let mut dsums = Matrix::zeros(4, 8);
+        let mut dcounts = vec![0u64; 4];
+        crate::linalg::blocked::suffstats_accumulate(&data.points, &assignments, &mut dsums, &mut dcounts);
+        assert_eq!(counts, dcounts);
+        crate::testing::assert_allclose(&sums.data, &dsums.data, 1e-3, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn split_range_chunked_aligns_to_reduce_chunks() {
+        let parts = split_range_chunked(0..REDUCE_CHUNK * 5 + 17, 3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].start, 0);
+        assert_eq!(parts.last().unwrap().end, REDUCE_CHUNK * 5 + 17);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+            assert_eq!(w[0].end % REDUCE_CHUNK, 0, "boundary not chunk-aligned");
+        }
+        // More workers than chunks: trailing workers get empty ranges.
+        let parts = split_range_chunked(0..10, 4);
+        assert_eq!(parts.iter().map(|r| r.end - r.start).sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn split_range_covers_exactly() {
+        for &(s, e, p) in &[(0usize, 10usize, 3usize), (5, 5, 2), (0, 7, 7), (2, 103, 8)] {
+            let parts = split_range(s..e, p);
+            assert_eq!(parts.len(), p);
+            assert_eq!(parts[0].start, s);
+            assert_eq!(parts.last().unwrap().end, e);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn bp_stats_partials_match_direct() {
+        let (data, pool) = pool(60, 2);
+        let z: Vec<Vec<bool>> = (0..60).map(|i| vec![i % 2 == 0, i % 3 == 0]).collect();
+        let z = Arc::new(z);
+        let jobs: Vec<Job> = split_range_chunked(0..60, 2)
+            .into_iter()
+            .map(|range| Job::BpStats { range, z: z.clone(), k: 2 })
+            .collect();
+        let (outs, _) = pool.scatter_gather(jobs).unwrap();
+        let mut ztz = Matrix::zeros(2, 2);
+        for out in outs {
+            if let JobOutput::BpStats { chunks } = out {
+                for (_, a, _) in chunks {
+                    for i in 0..4 {
+                        ztz.data[i] += a.data[i];
+                    }
+                }
+            }
+        }
+        // z0 count = 30, z1 count = 20, overlap (i % 6 == 0) = 10.
+        assert_eq!(ztz.get(0, 0), 30.0);
+        assert_eq!(ztz.get(1, 1), 20.0);
+        assert_eq!(ztz.get(0, 1), 10.0);
+        assert_eq!(ztz.get(1, 0), 10.0);
+        let _ = data;
+    }
+
+    #[test]
+    fn pool_shutdown_clean() {
+        let (_, pool) = pool(10, 2);
+        drop(pool); // must not hang
+    }
+}

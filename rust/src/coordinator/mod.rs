@@ -1,0 +1,34 @@
+//! The OCC coordinator — the paper's system contribution (L3).
+//!
+//! Implements the OCC pattern of §1.1 as a bulk-synchronous master/worker
+//! engine:
+//!
+//! * [`engine`] — a persistent pool of P worker threads; each epoch the
+//!   master scatters per-block jobs (nearest-center assignment, BP
+//!   coordinate descent, sufficient statistics) and gathers results at the
+//!   epoch barrier. Workers run the numeric hot path through a
+//!   [`crate::runtime::ComputeBackend`] (native kernels or AOT XLA
+//!   artifacts) — *optimistic transactions*.
+//! * [`validator`] — the serial validation step executed by the master at
+//!   each epoch boundary: `DPValidate` (Alg 2), `OFLValidate` (Alg 5) and
+//!   `BPValidate` (Alg 8). Proposals are validated in point-index order,
+//!   which realizes exactly the serial permutation of Theorem 3.1 /
+//!   Appendix B.
+//! * [`driver`] — assembles epochs, validation, the §4.2 bootstrap, the
+//!   mean-recompute phases and metrics into full runs of OCC DP-means
+//!   (Alg 3), OCC OFL (Alg 4) and OCC BP-means (Alg 6).
+//!
+//! ## Determinism
+//!
+//! For a fixed dataset, seed, and epoch size `P·b`, the result is
+//! *identical for every worker count `P`* — proposals are merged and
+//! validated in point-index order, and block boundaries depend only on
+//! `P·b`. This is the practical content of serializability and is enforced
+//! by `rust/tests/serializability.rs`.
+
+pub mod driver;
+pub mod engine;
+pub mod soft;
+pub mod validator;
+
+pub use driver::{run, run_with, Model, RunOutput};

@@ -1,0 +1,163 @@
+//! Soft (relaxed) conflict detection — the §6 "control knob".
+//!
+//! The paper's discussion proposes treating the conflict-detection
+//! mechanism as a knob that "softly switch[es] between stable,
+//! theoretically sound algorithms and potentially faster coordination-free
+//! algorithms". This module implements that extension for DP-means:
+//! validation accepts a proposal that lands within `(1 − slack)·λ … λ` of an
+//! already-accepted center with probability `slack_accept` — deliberately
+//! admitting *bounded* non-serializable acceptances in exchange for less
+//! correcting computation.
+//!
+//! * `slack = 0` → exact `DPValidate` (Alg 2): fully serializable.
+//! * `slack = 1, slack_accept = 1` → accept everything the workers propose:
+//!   exactly the coordination-free merge.
+//!
+//! The invariant that survives relaxation (tested below): every accepted
+//! pair of centers is separated by at least `(1 − slack)·λ`, so the
+//! objective degradation is bounded by the λ-penalty of the extra centers —
+//! the "laws of large numbers" style argument §6 anticipates.
+
+use super::validator::{DpOutcome, DpProposal};
+use crate::linalg::{sqdist, Matrix};
+use crate::rng::Pcg64;
+
+/// Knob configuration for soft validation.
+#[derive(Debug, Clone, Copy)]
+pub struct SoftKnob {
+    /// Fraction of λ the separation requirement is relaxed by, in [0, 1].
+    pub slack: f64,
+    /// Probability of accepting a proposal inside the relaxed band.
+    pub slack_accept: f64,
+}
+
+impl SoftKnob {
+    /// The exact-OCC setting (no relaxation).
+    pub fn exact() -> Self {
+        SoftKnob { slack: 0.0, slack_accept: 0.0 }
+    }
+    /// The coordination-free extreme (accept everything).
+    pub fn coordination_free() -> Self {
+        SoftKnob { slack: 1.0, slack_accept: 1.0 }
+    }
+}
+
+/// `DPValidate` with the §6 soft knob. With [`SoftKnob::exact`] this is
+/// byte-for-byte the behaviour of [`super::validator::dp_validate`].
+pub fn dp_validate_soft(
+    centers: &mut Matrix,
+    base: usize,
+    proposals: &[DpProposal],
+    lambda: f64,
+    knob: SoftKnob,
+    rng: &mut Pcg64,
+) -> DpOutcome {
+    let lambda2 = (lambda * lambda) as f32;
+    let hard2 = ((1.0 - knob.slack) * lambda).powi(2) as f32;
+    let mut out = DpOutcome::default();
+    for p in proposals {
+        let mut best = f32::INFINITY;
+        let mut best_k = usize::MAX;
+        for k in base..centers.rows {
+            let d = sqdist(&p.center, centers.row(k));
+            if d < best {
+                best = d;
+                best_k = k;
+            }
+        }
+        let accept = if best >= lambda2 {
+            true // no conflict at all
+        } else if best >= hard2 {
+            // Inside the relaxed band: probabilistically admit the
+            // non-serializable acceptance.
+            knob.slack_accept > 0.0 && rng.next_f64() < knob.slack_accept
+        } else {
+            false // hard conflict: always correct
+        };
+        if accept {
+            centers.push_row(&p.center);
+            out.resolved.push((p.idx, (centers.rows - 1) as u32));
+            out.accepted += 1;
+        } else {
+            out.resolved.push((p.idx, best_k as u32));
+            out.rejected += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::validator::dp_validate;
+
+    fn proposals(points: &[(f32, f32)]) -> Vec<DpProposal> {
+        points
+            .iter()
+            .enumerate()
+            .map(|(i, &(x, y))| DpProposal { idx: i as u32, center: vec![x, y] })
+            .collect()
+    }
+
+    #[test]
+    fn zero_slack_equals_exact_validation() {
+        let props = proposals(&[(0.0, 0.0), (0.5, 0.0), (2.0, 0.0), (2.3, 0.0), (9.0, 0.0)]);
+        let mut rng = Pcg64::new(1);
+        let mut soft_c = Matrix::zeros(0, 2);
+        let soft = dp_validate_soft(&mut soft_c, 0, &props, 1.0, SoftKnob::exact(), &mut rng);
+        let mut hard_c = Matrix::zeros(0, 2);
+        let hard = dp_validate(&mut hard_c, 0, &props, 1.0);
+        assert_eq!(soft.resolved, hard.resolved);
+        assert_eq!(soft_c.data, hard_c.data);
+    }
+
+    #[test]
+    fn coordination_free_extreme_accepts_everything() {
+        let props = proposals(&[(0.0, 0.0), (0.1, 0.0), (0.2, 0.0)]);
+        let mut rng = Pcg64::new(2);
+        let mut c = Matrix::zeros(0, 2);
+        let out =
+            dp_validate_soft(&mut c, 0, &props, 1.0, SoftKnob::coordination_free(), &mut rng);
+        assert_eq!(out.accepted, 3);
+        assert_eq!(out.rejected, 0);
+    }
+
+    #[test]
+    fn relaxed_band_respects_hard_floor() {
+        // slack = 0.5: conflicts closer than 0.5·λ are ALWAYS corrected,
+        // conflicts in [0.5λ, λ) are admitted with probability 1 here.
+        let knob = SoftKnob { slack: 0.5, slack_accept: 1.0 };
+        let props = proposals(&[
+            (0.0, 0.0),
+            (0.7, 0.0),  // d = 0.7 ∈ [0.5, 1) → admitted
+            (0.1, 0.0),  // d = 0.1 < 0.5 → corrected
+        ]);
+        let mut rng = Pcg64::new(3);
+        let mut c = Matrix::zeros(0, 2);
+        let out = dp_validate_soft(&mut c, 0, &props, 1.0, knob, &mut rng);
+        assert_eq!(out.accepted, 2);
+        assert_eq!(out.rejected, 1);
+        // Separation invariant: all accepted pairs ≥ (1−slack)·λ apart.
+        for a in 0..c.rows {
+            for b in 0..a {
+                assert!(sqdist(c.row(a), c.row(b)) >= 0.25 - 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn intermediate_slack_accept_is_probabilistic() {
+        let knob = SoftKnob { slack: 1.0, slack_accept: 0.5 };
+        let mut admitted = 0;
+        let trials = 2000;
+        let mut rng = Pcg64::new(4);
+        for _ in 0..trials {
+            let props = proposals(&[(0.0, 0.0), (0.5, 0.0)]);
+            let mut c = Matrix::zeros(0, 2);
+            let out = dp_validate_soft(&mut c, 0, &props, 1.0, knob, &mut rng);
+            admitted += out.accepted - 1; // first always accepted
+        }
+        let rate = admitted as f64 / trials as f64;
+        assert!((rate - 0.5).abs() < 0.05, "rate={rate}");
+    }
+}

@@ -1,0 +1,356 @@
+//! Serial validation — the master's epoch-boundary step.
+//!
+//! Each validator consumes the epoch's proposals *in point-index order*
+//! (the serial order of Thm 3.1 / App B) and mutates the global state by
+//! appending accepted centers/features. Rejected proposals are *corrected*:
+//! the validator resolves the proposing point's assignment to the already-
+//! accepted center that covers it (the paper's `Ref`).
+
+use crate::algorithms::bpmeans::descend_z;
+use crate::linalg::{sqdist, Matrix};
+
+/// A DP-means proposal: point `idx` (global) wants to open a cluster at its
+/// own coordinates (the worker certified `d² > λ²` against `C^{t-1}`).
+#[derive(Debug, Clone)]
+pub struct DpProposal {
+    /// Global point index (defines validation order).
+    pub idx: u32,
+    /// The proposed center coordinates (= the point).
+    pub center: Vec<f32>,
+}
+
+/// Outcome of validating one epoch's DP proposals.
+#[derive(Debug, Clone, Default)]
+pub struct DpOutcome {
+    /// `(point, global center index)` assignment for every proposal.
+    pub resolved: Vec<(u32, u32)>,
+    /// Number of proposals accepted as new centers.
+    pub accepted: usize,
+    /// Number rejected (covered by a newly accepted center).
+    pub rejected: usize,
+}
+
+/// `DPValidate` (Alg 2). `centers[base..]` is the epoch's accepted set `Ĉ`
+/// (starts empty: `base == centers.rows` on entry); accepted proposals are
+/// appended to `centers`. Proposals must be sorted by `idx`.
+pub fn dp_validate(centers: &mut Matrix, base: usize, proposals: &[DpProposal], lambda2: f32) -> DpOutcome {
+    debug_assert!(proposals.windows(2).all(|w| w[0].idx < w[1].idx));
+    let mut out = DpOutcome::default();
+    for p in proposals {
+        // Nearest among the *newly accepted* centers only — the worker
+        // already certified distance > λ against C^{t-1}.
+        let mut best = f32::INFINITY;
+        let mut best_k = usize::MAX;
+        for k in base..centers.rows {
+            let d = sqdist(&p.center, centers.row(k));
+            if d < best {
+                best = d;
+                best_k = k;
+            }
+        }
+        if best < lambda2 {
+            // Reject: Ref(x) ← nearest accepted center.
+            out.resolved.push((p.idx, best_k as u32));
+            out.rejected += 1;
+        } else {
+            centers.push_row(&p.center);
+            out.resolved.push((p.idx, (centers.rows - 1) as u32));
+            out.accepted += 1;
+        }
+    }
+    out
+}
+
+/// An OFL proposal: point `idx` was sent to the master with probability
+/// `min(1, d²_prev/λ²)` using its pre-drawn uniform.
+#[derive(Debug, Clone)]
+pub struct OflProposal {
+    /// Global point index (defines validation order).
+    pub idx: u32,
+    /// The point's coordinates (candidate facility).
+    pub center: Vec<f32>,
+    /// Squared distance to the nearest center of `C^{t-1}` (`+inf` if none).
+    pub d2_prev: f32,
+    /// Index of that nearest center (`u32::MAX` if none).
+    pub idx_prev: u32,
+}
+
+/// Outcome of validating one epoch's OFL proposals.
+#[derive(Debug, Clone, Default)]
+pub struct OflOutcome {
+    /// `(point, global facility index)` for every proposal.
+    pub resolved: Vec<(u32, u32)>,
+    /// Facilities opened.
+    pub accepted: usize,
+    /// Proposals assigned to an existing facility instead.
+    pub rejected: usize,
+    /// The point that opened each accepted facility, in acceptance order
+    /// (parallel to the appended center rows).
+    pub opened: Vec<u32>,
+}
+
+/// `OFLValidate` (Alg 5), with the telescoped acceptance probability of the
+/// Thm 3.1 proof: accept with probability `min(1, d²_full/λ²) /
+/// min(1, d²_prev/λ²)`, realized by re-using the point's own uniform draw
+/// `draw(idx)` — this makes the distributed run *bit-identical* to the
+/// serial OFL pass with the same per-point draws.
+pub fn ofl_validate(
+    centers: &mut Matrix,
+    base: usize,
+    proposals: &[OflProposal],
+    lambda2: f64,
+    mut draw: impl FnMut(u32) -> f64,
+) -> OflOutcome {
+    debug_assert!(proposals.windows(2).all(|w| w[0].idx < w[1].idx));
+    let mut out = OflOutcome::default();
+    for p in proposals {
+        // Nearest among this epoch's accepted facilities Ĉ.
+        let mut best_new = f32::INFINITY;
+        let mut best_new_k = usize::MAX;
+        for k in base..centers.rows {
+            let d = sqdist(&p.center, centers.row(k));
+            if d < best_new {
+                best_new = d;
+                best_new_k = k;
+            }
+        }
+        let d2_full = p.d2_prev.min(best_new) as f64;
+        let p_acc = if d2_full.is_infinite() { 1.0 } else { (d2_full / lambda2).min(1.0) };
+        if draw(p.idx) < p_acc {
+            centers.push_row(&p.center);
+            out.resolved.push((p.idx, (centers.rows - 1) as u32));
+            out.opened.push(p.idx);
+            out.accepted += 1;
+        } else {
+            // Assign to the nearest open facility (old or newly accepted).
+            let target = if best_new < p.d2_prev { best_new_k as u32 } else { p.idx_prev };
+            out.resolved.push((p.idx, target));
+            out.rejected += 1;
+        }
+    }
+    out
+}
+
+/// A BP-means proposal: point `idx`'s residual after coordinate descent
+/// over `F^{t-1}` exceeded λ².
+#[derive(Debug, Clone)]
+pub struct BpProposal {
+    /// Global point index (defines validation order).
+    pub idx: u32,
+    /// The residual `x − Σ z f` proposed as a new feature.
+    pub residual: Vec<f32>,
+}
+
+/// Resolution of one BP proposal.
+#[derive(Debug, Clone)]
+pub struct BpResolution {
+    /// Proposing point.
+    pub idx: u32,
+    /// Global indices of newly-accepted features the residual was
+    /// re-represented with (the `Ref` combination, `z_i ⊕ Ref(f_new)`).
+    pub extra_features: Vec<u32>,
+    /// Global index of the point's own accepted feature, if any.
+    pub own_feature: Option<u32>,
+}
+
+/// Outcome of validating one epoch's BP proposals.
+#[derive(Debug, Clone, Default)]
+pub struct BpOutcome {
+    /// Per-proposal resolution, in order.
+    pub resolved: Vec<BpResolution>,
+    /// Features accepted.
+    pub accepted: usize,
+    /// Proposals fully represented by earlier-accepted features.
+    pub rejected: usize,
+}
+
+/// `BPValidate` (Alg 8). Re-represents each proposed residual over the
+/// epoch's accepted feature set `features[base..]`; if the re-representation
+/// error still exceeds λ², the *remaining* residual is accepted as a new
+/// feature. Proposals must be sorted by `idx`.
+pub fn bp_validate(
+    features: &mut Matrix,
+    base: usize,
+    proposals: &[BpProposal],
+    lambda2: f32,
+    sweeps: usize,
+) -> BpOutcome {
+    debug_assert!(proposals.windows(2).all(|w| w[0].idx < w[1].idx));
+    let mut out = BpOutcome::default();
+    let d = features.cols;
+    let mut residual = vec![0.0f32; d];
+    for p in proposals {
+        // View of the newly accepted features only.
+        let new_k = features.rows - base;
+        let mut z = vec![false; new_k];
+        let r2 = if new_k == 0 {
+            residual.copy_from_slice(&p.residual);
+            crate::linalg::norm2(&residual)
+        } else {
+            // Build a temporary matrix over the accepted slice (cheap: K_new
+            // is small — it is bounded by the epoch's acceptances).
+            let view = Matrix {
+                rows: new_k,
+                cols: d,
+                data: features.data[base * d..].to_vec(),
+            };
+            descend_z(&p.residual, &view, &mut z, &mut residual, sweeps)
+        };
+        let extra: Vec<u32> =
+            z.iter().enumerate().filter(|(_, &on)| on).map(|(j, _)| (base + j) as u32).collect();
+        if r2 > lambda2 {
+            features.push_row(&residual);
+            out.resolved.push(BpResolution {
+                idx: p.idx,
+                extra_features: extra,
+                own_feature: Some((features.rows - 1) as u32),
+            });
+            out.accepted += 1;
+        } else {
+            out.resolved.push(BpResolution { idx: p.idx, extra_features: extra, own_feature: None });
+            out.rejected += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: &[&[f32]]) -> Matrix {
+        let cols = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut m = Matrix::zeros(0, cols);
+        for r in rows {
+            m.push_row(r);
+        }
+        m
+    }
+
+    #[test]
+    fn dp_validate_accepts_spread_rejects_covered() {
+        let mut centers = mat(&[&[100.0, 100.0]]); // pre-existing center (ignored)
+        let proposals = vec![
+            DpProposal { idx: 1, center: vec![0.0, 0.0] },
+            DpProposal { idx: 3, center: vec![0.5, 0.0] },   // within λ of first → reject
+            DpProposal { idx: 7, center: vec![10.0, 0.0] },  // far → accept
+        ];
+        let out = dp_validate(&mut centers, 1, &proposals, 1.0);
+        assert_eq!(out.accepted, 2);
+        assert_eq!(out.rejected, 1);
+        assert_eq!(centers.rows, 3);
+        assert_eq!(out.resolved[0], (1, 1)); // own new center
+        assert_eq!(out.resolved[1], (3, 1)); // Ref → first accepted
+        assert_eq!(out.resolved[2], (7, 2));
+    }
+
+    #[test]
+    fn dp_validate_ignores_preexisting_centers() {
+        // The worker certified distance to C^{t-1}; validation must not
+        // re-check it (a proposal near an old center is still accepted —
+        // matches Alg 2 where C starts empty).
+        let mut centers = mat(&[&[0.0, 0.0]]);
+        let proposals = vec![DpProposal { idx: 0, center: vec![0.1, 0.0] }];
+        let out = dp_validate(&mut centers, 1, &proposals, 1.0);
+        assert_eq!(out.accepted, 1);
+        assert_eq!(centers.rows, 2);
+    }
+
+    #[test]
+    fn dp_validate_boundary_exactly_lambda() {
+        // d² == λ² is NOT < λ² → accepted (worker-side rule is d² > λ²,
+        // so the pair is consistent: both use strict comparisons).
+        let mut centers = Matrix::zeros(0, 1);
+        let proposals = vec![
+            DpProposal { idx: 0, center: vec![0.0] },
+            DpProposal { idx: 1, center: vec![1.0] }, // d² = 1 = λ²
+        ];
+        let out = dp_validate(&mut centers, 0, &proposals, 1.0);
+        assert_eq!(out.accepted, 2);
+    }
+
+    #[test]
+    fn ofl_validate_first_epoch_behaves_serially() {
+        // Empty prior state: d2_prev = inf. With draws forcing open/skip we
+        // can script the outcome.
+        let mut centers = Matrix::zeros(0, 1);
+        let proposals = vec![
+            OflProposal { idx: 0, center: vec![0.0], d2_prev: f32::INFINITY, idx_prev: u32::MAX },
+            OflProposal { idx: 1, center: vec![0.5], d2_prev: f32::INFINITY, idx_prev: u32::MAX },
+            OflProposal { idx: 2, center: vec![10.0], d2_prev: f32::INFINITY, idx_prev: u32::MAX },
+        ];
+        // Point 0: p_acc = 1 → opens. Point 1: d2_full = 0.25 → p = 0.25;
+        // draw 0.5 → assigned to facility 0. Point 2: d2_full = 90.25 → p=1.
+        let draws = [0.9, 0.5, 0.3];
+        let out = ofl_validate(&mut centers, 0, &proposals, 1.0, |i| draws[i as usize]);
+        assert_eq!(out.accepted, 2);
+        assert_eq!(out.rejected, 1);
+        assert_eq!(out.resolved[1], (1, 0));
+        assert_eq!(centers.rows, 2);
+    }
+
+    #[test]
+    fn ofl_validate_telescoped_probability() {
+        // Worker sent with p_send = min(1, d2_prev/λ²); master must accept
+        // iff draw < min(1, d2_full/λ²). d2_full ≤ d2_prev so acceptance is
+        // a subset of sends — check the boundary.
+        let mut centers = mat(&[&[0.0]]); // facility accepted this epoch
+        let proposals = vec![OflProposal {
+            idx: 5,
+            center: vec![0.6], // d² to new facility = 0.36; d2_prev = 0.81
+            d2_prev: 0.81,
+            idx_prev: 7,
+        }];
+        // draw = 0.5: sent (0.5 < 0.81) but NOT accepted (0.5 ≥ 0.36) →
+        // assigned to the closer, newly accepted facility 0.
+        let out = ofl_validate(&mut centers, 0, &proposals, 1.0, |_| 0.5);
+        assert_eq!(out.rejected, 1);
+        assert_eq!(out.resolved[0], (5, 0));
+        // draw = 0.3: accepted.
+        let mut centers2 = mat(&[&[0.0]]);
+        let proposals2 = vec![OflProposal { idx: 5, center: vec![0.6], d2_prev: 0.81, idx_prev: 7 }];
+        let out2 = ofl_validate(&mut centers2, 0, &proposals2, 1.0, |_| 0.3);
+        assert_eq!(out2.accepted, 1);
+    }
+
+    #[test]
+    fn ofl_rejected_points_keep_old_facility_when_closer() {
+        let mut centers = mat(&[&[10.0]]); // new facility far away
+        let proposals = vec![OflProposal { idx: 2, center: vec![0.5], d2_prev: 0.25, idx_prev: 3 }];
+        let out = ofl_validate(&mut centers, 0, &proposals, 1.0, |_| 0.9);
+        assert_eq!(out.resolved[0], (2, 3)); // old facility 3 is closer
+    }
+
+    #[test]
+    fn bp_validate_accepts_and_rerepresents() {
+        let mut features = Matrix::zeros(0, 2);
+        let proposals = vec![
+            BpProposal { idx: 0, residual: vec![2.0, 0.0] },
+            BpProposal { idx: 1, residual: vec![2.0, 0.0] }, // fully covered → reject
+            BpProposal { idx: 2, residual: vec![2.0, 2.0] }, // partially covered → accept remainder
+        ];
+        let out = bp_validate(&mut features, 0, &proposals, 0.01, 2);
+        assert_eq!(out.accepted, 2);
+        assert_eq!(out.rejected, 1);
+        assert_eq!(features.rows, 2);
+        // Proposal 1: represented by feature 0, no own feature.
+        assert_eq!(out.resolved[1].extra_features, vec![0]);
+        assert!(out.resolved[1].own_feature.is_none());
+        // Proposal 2: uses feature 0, contributes the remainder (0, 2).
+        assert_eq!(out.resolved[2].extra_features, vec![0]);
+        assert_eq!(out.resolved[2].own_feature, Some(1));
+        assert_eq!(features.row(1), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn bp_validate_small_residuals_rejected_against_nothing() {
+        // No accepted features yet, residual norm² ≤ λ² — cannot happen from
+        // a correct worker (it only proposes when r² > λ²), but validation
+        // must still behave sanely: accepts iff r² > λ².
+        let mut features = Matrix::zeros(0, 2);
+        let proposals = vec![BpProposal { idx: 0, residual: vec![0.1, 0.0] }];
+        let out = bp_validate(&mut features, 0, &proposals, 1.0, 2);
+        assert_eq!(out.rejected, 1);
+        assert_eq!(features.rows, 0);
+    }
+}

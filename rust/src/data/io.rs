@@ -1,0 +1,172 @@
+//! Dataset (de)serialization.
+//!
+//! `.occb` is a tiny little-endian binary format:
+//!
+//! ```text
+//! magic  "OCCB1\0\0\0"   (8 bytes)
+//! n      u64            number of points
+//! d      u64            dimensionality
+//! flags  u64            bit 0: labels present
+//! data   n*d f32        row-major points
+//! labels n   u32        (iff flag bit 0)
+//! ```
+//!
+//! CSV export is provided for plotting / external tooling.
+
+use super::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"OCCB1\0\0\0";
+
+/// Write a dataset to `path` in `.occb` format.
+pub fn write_occb(ds: &Dataset, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(ds.len() as u64).to_le_bytes())?;
+    w.write_all(&(ds.dim() as u64).to_le_bytes())?;
+    let flags: u64 = if ds.labels.is_some() { 1 } else { 0 };
+    w.write_all(&flags.to_le_bytes())?;
+    for &v in &ds.points.data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    if let Some(labels) = &ds.labels {
+        for &l in labels {
+            w.write_all(&l.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read a dataset from `path` in `.occb` format.
+pub fn read_occb(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Data(format!("{}: bad magic", path.display())));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let d = read_u64(&mut r)? as usize;
+    let flags = read_u64(&mut r)?;
+    if n.checked_mul(d).is_none() || n * d > (1 << 33) {
+        return Err(Error::Data(format!("{}: implausible size {n}x{d}", path.display())));
+    }
+    let mut data = vec![0.0f32; n * d];
+    let mut buf = [0u8; 4];
+    for v in data.iter_mut() {
+        r.read_exact(&mut buf)?;
+        *v = f32::from_le_bytes(buf);
+    }
+    let labels = if flags & 1 != 0 {
+        let mut ls = vec![0u32; n];
+        for l in ls.iter_mut() {
+            r.read_exact(&mut buf)?;
+            *l = u32::from_le_bytes(buf);
+        }
+        Some(ls)
+    } else {
+        None
+    };
+    Ok(Dataset { points: Matrix::from_vec(n, d, data), labels })
+}
+
+/// Export points (and labels, if any) as CSV with a header row.
+pub fn write_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let d = ds.dim();
+    for j in 0..d {
+        if j > 0 {
+            write!(w, ",")?;
+        }
+        write!(w, "x{j}")?;
+    }
+    if ds.labels.is_some() {
+        write!(w, ",label")?;
+    }
+    writeln!(w)?;
+    for i in 0..ds.len() {
+        let row = ds.point(i);
+        for (j, v) in row.iter().enumerate() {
+            if j > 0 {
+                write!(w, ",")?;
+            }
+            write!(w, "{v}")?;
+        }
+        if let Some(labels) = &ds.labels {
+            write!(w, ",{}", labels[i])?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{dp_clusters, GenConfig};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("occml-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn occb_roundtrip_with_labels() {
+        let ds = dp_clusters(&GenConfig { n: 37, dim: 5, theta: 1.0, seed: 1 });
+        let p = tmpfile("rt.occb");
+        write_occb(&ds, &p).unwrap();
+        let rd = read_occb(&p).unwrap();
+        assert_eq!(rd.len(), 37);
+        assert_eq!(rd.dim(), 5);
+        assert_eq!(rd.points.data, ds.points.data);
+        assert_eq!(rd.labels, ds.labels);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn occb_roundtrip_without_labels() {
+        let mut ds = dp_clusters(&GenConfig { n: 8, dim: 3, theta: 1.0, seed: 2 });
+        ds.labels = None;
+        let p = tmpfile("rt2.occb");
+        write_occb(&ds, &p).unwrap();
+        let rd = read_occb(&p).unwrap();
+        assert!(rd.labels.is_none());
+        assert_eq!(rd.points.data, ds.points.data);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmpfile("bad.occb");
+        std::fs::write(&p, b"NOTOCCB1aaaaaaaaaaaaaaaaaaaaaaaa").unwrap();
+        assert!(read_occb(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let ds = dp_clusters(&GenConfig { n: 4, dim: 2, theta: 1.0, seed: 3 });
+        let p = tmpfile("out.csv");
+        write_csv(&ds, &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert!(lines[0].starts_with("x0,x1,label"));
+        std::fs::remove_file(&p).ok();
+    }
+}

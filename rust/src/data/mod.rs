@@ -1,0 +1,125 @@
+//! Datasets and block partitioning.
+//!
+//! A [`Dataset`] is a dense row-major point matrix plus (optionally) the
+//! ground-truth component each point was generated from — kept around so the
+//! experiment harnesses can report `K_N` (the number of *distinct latent*
+//! clusters in the first `N` points, the quantity in Theorem 3.3).
+//!
+//! [`partition`] implements the paper's processor-epoch blocks `B(p, t)`:
+//! the first `b` points go to processor 1, the next `b` to processor 2, …,
+//! cycling through processors epoch by epoch (App B.3, Figure 5). This exact
+//! layout is what makes the serial-equivalence proofs (and our replay tests)
+//! work.
+
+pub mod generators;
+pub mod io;
+
+use crate::linalg::Matrix;
+
+/// A dense dataset of `n` points in `d` dimensions.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `n × d` row-major points.
+    pub points: Matrix,
+    /// Ground-truth latent component per point (generator metadata), if known.
+    pub labels: Option<Vec<u32>>,
+}
+
+impl Dataset {
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.points.rows
+    }
+
+    /// True if the dataset has no points.
+    pub fn is_empty(&self) -> bool {
+        self.points.rows == 0
+    }
+
+    /// Dimensionality.
+    pub fn dim(&self) -> usize {
+        self.points.cols
+    }
+
+    /// Borrow point `i`.
+    pub fn point(&self, i: usize) -> &[f32] {
+        self.points.row(i)
+    }
+
+    /// Number of distinct latent components among the first `n` points
+    /// (`K_N` in Theorem 3.3). `None` when labels are unknown.
+    pub fn distinct_components(&self, n: usize) -> Option<usize> {
+        let labels = self.labels.as_ref()?;
+        let mut seen = std::collections::HashSet::new();
+        for &l in labels.iter().take(n) {
+            seen.insert(l);
+        }
+        Some(seen.len())
+    }
+}
+
+/// The block `B(p, t)` of data indices for processor `p` in epoch `t`
+/// (both 0-based), with `P` processors and `b` points per processor-epoch.
+///
+/// Epoch `t` covers the contiguous range `[t·P·b, (t+1)·P·b)`, split into
+/// `P` consecutive blocks of `b` — processor `p` gets
+/// `[t·P·b + p·b, t·P·b + (p+1)·b)`, clamped to `n`.
+pub fn block(n: usize, p_procs: usize, b: usize, p: usize, t: usize) -> std::ops::Range<usize> {
+    let start = t * p_procs * b + p * b;
+    let end = (start + b).min(n);
+    start.min(n)..end
+}
+
+/// Number of epochs needed to cover `n` points with `P` processors × `b`.
+pub fn num_epochs(n: usize, p_procs: usize, b: usize) -> usize {
+    let per_epoch = p_procs * b;
+    n.div_ceil(per_epoch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_tile_the_dataset_exactly_once() {
+        for &(n, p_procs, b) in &[(100, 4, 10), (97, 4, 10), (16, 2, 16), (5, 8, 4)] {
+            let epochs = num_epochs(n, p_procs, b);
+            let mut seen = vec![0u32; n];
+            for t in 0..epochs {
+                for p in 0..p_procs {
+                    for i in block(n, p_procs, b, p, t) {
+                        seen[i] += 1;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "n={n} P={p_procs} b={b}");
+        }
+    }
+
+    #[test]
+    fn block_layout_matches_figure5() {
+        // P=2, b=3, n=12: epoch 0 → p0 gets 0..3, p1 gets 3..6;
+        // epoch 1 → p0 gets 6..9, p1 gets 9..12.
+        assert_eq!(block(12, 2, 3, 0, 0), 0..3);
+        assert_eq!(block(12, 2, 3, 1, 0), 3..6);
+        assert_eq!(block(12, 2, 3, 0, 1), 6..9);
+        assert_eq!(block(12, 2, 3, 1, 1), 9..12);
+    }
+
+    #[test]
+    fn clamped_final_block() {
+        assert_eq!(block(10, 2, 3, 1, 1), 9..10);
+        assert_eq!(block(10, 2, 3, 0, 2), 10..10); // past the end → empty
+    }
+
+    #[test]
+    fn distinct_components_counts_prefix() {
+        let ds = Dataset {
+            points: Matrix::zeros(5, 1),
+            labels: Some(vec![0, 0, 1, 2, 1]),
+        };
+        assert_eq!(ds.distinct_components(1), Some(1));
+        assert_eq!(ds.distinct_components(3), Some(2));
+        assert_eq!(ds.distinct_components(5), Some(3));
+    }
+}

@@ -1,0 +1,76 @@
+//! Crate-wide error type.
+//!
+//! `occml` uses a single [`Error`] enum for everything that can fail at the
+//! library boundary; internal hot paths are written to be infallible.
+
+use thiserror::Error;
+
+/// Crate-wide error type for `occml`.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Configuration file / CLI flag problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Malformed or unsupported data file.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// Dimension / shape mismatch between operands.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// The XLA/PJRT runtime failed (artifact missing, compile error, ...).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Numerical failure (singular system, NaN in state, ...).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// A worker or master thread failed / a channel was disconnected.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand for a config error with formatted message.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    /// Shorthand for a shape error with formatted message.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    /// Shorthand for a runtime error with formatted message.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        let e = Error::config("bad key");
+        assert_eq!(e.to_string(), "config error: bad key");
+        let e = Error::shape("2 != 3");
+        assert_eq!(e.to_string(), "shape error: 2 != 3");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(e.to_string().contains("nope"));
+    }
+}

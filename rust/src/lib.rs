@@ -1,0 +1,47 @@
+//! # occml — Optimistic Concurrency Control for Distributed Unsupervised Learning
+//!
+//! A production-quality reproduction of Pan, Gonzalez, Jegelka, Broderick &
+//! Jordan, *Optimistic Concurrency Control for Distributed Unsupervised
+//! Learning* (NIPS 2013), as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the OCC coordinator: bulk-synchronous epochs,
+//!   optimistic worker transactions, serial master validation
+//!   ([`coordinator`]), plus serial reference algorithms ([`algorithms`]),
+//!   baselines ([`baselines`]), simulators ([`sim`]), synthetic workloads
+//!   ([`data`]) and every substrate they need ([`rng`], [`linalg`],
+//!   [`config`], [`cli`], [`metrics`], [`testing`], [`benchlib`]).
+//! * **L2/L1 (python/, build-time only)** — the numeric hot path (nearest-
+//!   center assignment, sufficient statistics, BP-means coordinate descent)
+//!   written in JAX calling Pallas kernels, AOT-lowered to HLO text.
+//! * **Runtime bridge** ([`runtime`]) — loads the AOT artifacts via the PJRT
+//!   CPU client (`xla` crate) and serves them on the coordinator's hot path;
+//!   a pure-Rust [`runtime::native`] backend provides the same interface for
+//!   artifact-free runs and as the roofline baseline.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use occml::config::RunConfig;
+//! use occml::coordinator::driver;
+//!
+//! let cfg = RunConfig::default();
+//! let out = driver::run(&cfg).unwrap();
+//! println!("clusters: {}", out.summary.final_centers);
+//! ```
+
+pub mod algorithms;
+pub mod baselines;
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+
+pub use error::{Error, Result};

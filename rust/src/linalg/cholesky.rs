@@ -1,0 +1,150 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! Used by BP-means' feature re-estimate `F ← (ZᵀZ + εI)⁻¹ ZᵀX` (Alg 6/7's
+//! second phase). `ZᵀZ` is symmetric positive semi-definite; we add a small
+//! ridge `ε` to guarantee positive definiteness when features are unused.
+
+use super::Matrix;
+use crate::error::{Error, Result};
+
+/// In-place lower-Cholesky of a symmetric positive-definite `n×n` matrix
+/// given in row-major `a`. Returns the lower factor `L` (upper left as-is is
+/// overwritten; upper triangle zeroed).
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    if a.rows != a.cols {
+        return Err(Error::shape(format!("cholesky needs square, got {}x{}", a.rows, a.cols)));
+    }
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j) as f64;
+            for k in 0..j {
+                sum -= l.get(i, k) as f64 * l.get(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(Error::Numerical(format!(
+                        "cholesky: non-positive pivot {sum} at {i}"
+                    )));
+                }
+                l.set(i, j, sum.sqrt() as f32);
+            } else {
+                l.set(i, j, (sum / l.get(j, j) as f64) as f32);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A · X = B` for SPD `A` via Cholesky, where `B` is `n×m` row-major.
+/// Returns `X` (`n×m`).
+pub fn solve_spd(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if a.rows != b.rows {
+        return Err(Error::shape(format!("solve: A is {}x{}, B has {} rows", a.rows, a.cols, b.rows)));
+    }
+    let l = cholesky(a)?;
+    let n = a.rows;
+    let m = b.cols;
+    let mut x = b.clone();
+    // Forward: L y = b (column-wise over all rhs simultaneously).
+    for i in 0..n {
+        for c in 0..m {
+            let mut v = x.get(i, c) as f64;
+            for k in 0..i {
+                v -= l.get(i, k) as f64 * x.get(k, c) as f64;
+            }
+            x.set(i, c, (v / l.get(i, i) as f64) as f32);
+        }
+    }
+    // Backward: Lᵀ x = y.
+    for i in (0..n).rev() {
+        for c in 0..m {
+            let mut v = x.get(i, c) as f64;
+            for k in i + 1..n {
+                v -= l.get(k, i) as f64 * x.get(k, c) as f64;
+            }
+            x.set(i, c, (v / l.get(i, i) as f64) as f32);
+        }
+    }
+    Ok(x)
+}
+
+/// Solve the ridge-regularized normal equations `(G + εI) X = B`.
+/// This is the entry point BP-means uses; `ε` keeps unused features benign.
+pub fn solve_ridge(g: &Matrix, b: &Matrix, eps: f32) -> Result<Matrix> {
+    let mut a = g.clone();
+    for i in 0..a.rows.min(a.cols) {
+        let v = a.get(i, i) + eps;
+        a.set(i, i, v);
+    }
+    solve_spd(&a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_identity() {
+        let mut a = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            a.set(i, i, 1.0);
+        }
+        let l = cholesky(&a).unwrap();
+        assert_eq!(l, a);
+    }
+
+    #[test]
+    fn cholesky_known_factor() {
+        // A = [[4,2],[2,3]] → L = [[2,0],[1,sqrt(2)]]
+        let a = Matrix::from_vec(2, 2, vec![4.0, 2.0, 2.0, 3.0]);
+        let l = cholesky(&a).unwrap();
+        assert!((l.get(0, 0) - 2.0).abs() < 1e-6);
+        assert!((l.get(1, 0) - 1.0).abs() < 1e-6);
+        assert!((l.get(1, 1) - 2f32.sqrt()).abs() < 1e-6);
+        assert_eq!(l.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // indefinite
+        assert!(cholesky(&a).is_err());
+        let r = Matrix::from_vec(2, 3, vec![0.0; 6]);
+        assert!(cholesky(&r).is_err());
+    }
+
+    #[test]
+    fn solve_recovers_solution() {
+        // A x = b with known x.
+        let a = Matrix::from_vec(3, 3, vec![4.0, 1.0, 0.0, 1.0, 3.0, 1.0, 0.0, 1.0, 2.0]);
+        let x_true = Matrix::from_vec(3, 2, vec![1.0, -1.0, 2.0, 0.5, -1.0, 3.0]);
+        // b = A · x_true (A symmetric, row-major mult).
+        let mut b = Matrix::zeros(3, 2);
+        for i in 0..3 {
+            for c in 0..2 {
+                let mut v = 0.0;
+                for k in 0..3 {
+                    v += a.get(i, k) * x_true.get(k, c);
+                }
+                b.set(i, c, v);
+            }
+        }
+        let x = solve_spd(&a, &b).unwrap();
+        for i in 0..3 {
+            for c in 0..2 {
+                assert!((x.get(i, c) - x_true.get(i, c)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn ridge_handles_singular() {
+        // G singular (zero row/col — an unused feature).
+        let g = Matrix::from_vec(2, 2, vec![2.0, 0.0, 0.0, 0.0]);
+        let b = Matrix::from_vec(2, 1, vec![2.0, 0.0]);
+        let x = solve_ridge(&g, &b, 1e-6).unwrap();
+        assert!((x.get(0, 0) - 1.0).abs() < 1e-3);
+        assert!(x.get(1, 0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,230 @@
+//! Dense linear algebra substrate.
+//!
+//! Everything the algorithms need and nothing more: a row-major `f32`
+//! [`Matrix`], squared-distance kernels (scalar and blocked — the native
+//! backend's hot path), and a Cholesky solver for the BP-means feature
+//! re-estimate `F ← (ZᵀZ + εI)⁻¹ ZᵀX`.
+
+pub mod blocked;
+pub mod cholesky;
+
+/// Row-major dense `f32` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major storage, `rows * cols` long.
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from existing row-major storage.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "storage length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Append a row (grows the matrix).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols);
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// `self · otherᵀ` — rows of both operands are treated as vectors.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "inner dims differ");
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a = self.row(i);
+            let orow = out.row_mut(i);
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot(a, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Dot product of two equal-length slices (f64 accumulator).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    // 4-way unrolled: the compiler auto-vectorizes this reliably.
+    let mut i = 0;
+    let n = a.len();
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    while i + 4 <= n {
+        acc0 += a[i] * b[i];
+        acc1 += a[i + 1] * b[i + 1];
+        acc2 += a[i + 2] * b[i + 2];
+        acc3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    while i < n {
+        acc += a[i] * b[i];
+        i += 1;
+    }
+    acc + acc0 + acc1 + acc2 + acc3
+}
+
+/// Squared Euclidean distance between two vectors.
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut i = 0;
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    while i + 4 <= n {
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        acc0 += d0 * d0;
+        acc1 += d1 * d1;
+        acc2 += d2 * d2;
+        acc3 += d3 * d3;
+        i += 4;
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    while i < n {
+        let d = a[i] - b[i];
+        acc += d * d;
+        i += 1;
+    }
+    acc
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm2(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// Nearest row of `centers` to `x`: returns `(index, squared distance)`.
+/// `centers.rows == 0` returns `(usize::MAX, f32::INFINITY)`.
+#[inline]
+pub fn nearest(x: &[f32], centers: &Matrix) -> (usize, f32) {
+    let mut best = usize::MAX;
+    let mut best_d = f32::INFINITY;
+    for k in 0..centers.rows {
+        let d = sqdist(x, centers.row(k));
+        if d < best_d {
+            best_d = d;
+            best = k;
+        }
+    }
+    (best, best_d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_sqdist_match_naive() {
+        let a: Vec<f32> = (0..19).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..19).map(|i| (i as f32).sin()).collect();
+        let nd: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - nd).abs() < 1e-3);
+        let ns: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((sqdist(&a, &b) - ns).abs() < 1e-3);
+    }
+
+    #[test]
+    fn matrix_rows_and_push() {
+        let mut m = Matrix::zeros(0, 3);
+        m.push_row(&[1.0, 2.0, 3.0]);
+        m.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.get(0, 2), 3.0);
+    }
+
+    #[test]
+    fn matmul_nt_small() {
+        // a = [[1,2],[3,4]]; b = [[1,0],[0,1],[1,1]] (rows as vectors)
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul_nt(&b);
+        assert_eq!(c.rows, 2);
+        assert_eq!(c.cols, 3);
+        assert_eq!(c.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.row(1), &[3.0, 4.0, 7.0]);
+    }
+
+    #[test]
+    fn nearest_picks_minimum() {
+        let mut c = Matrix::zeros(0, 2);
+        c.push_row(&[0.0, 0.0]);
+        c.push_row(&[10.0, 0.0]);
+        c.push_row(&[0.0, 3.0]);
+        let (k, d) = nearest(&[0.5, 2.9], &c);
+        assert_eq!(k, 2);
+        assert!((d - (0.25 + 0.01)).abs() < 1e-4);
+        let empty = Matrix::zeros(0, 2);
+        let (k, d) = nearest(&[0.0, 0.0], &empty);
+        assert_eq!(k, usize::MAX);
+        assert!(d.is_infinite());
+    }
+
+    #[test]
+    fn axpy_works() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut y = vec![10.0f32, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 14.0, 16.0]);
+    }
+}

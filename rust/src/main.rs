@@ -1,0 +1,336 @@
+//! `occd` — the occml command-line launcher.
+//!
+//! Subcommands:
+//!
+//! * `run`       — run OCC DP-means / OFL / BP-means end to end
+//! * `gen-data`  — generate a synthetic dataset to an `.occb` file
+//! * `simulate`  — the §4.1 first-iteration rejection sweeps (Fig 3 / 6)
+//! * `scaling`   — the §4.2 normalized-runtime scaling experiment (Fig 4)
+//! * `info`      — show backend/artifact status
+//!
+//! `occd <cmd> --help` lists flags. Flags override `--config <file>` values.
+
+use occml::algorithms::objective;
+use occml::cli::{App, Command, Dispatch, Parsed};
+use occml::config::{toml, Algo, BackendKind, DataSource, RunConfig};
+use occml::coordinator::{driver, Model};
+use occml::data::generators::{self, GenConfig};
+use occml::error::{Error, Result};
+use occml::{benchlib, sim};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match real_main(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("occd: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn app() -> App {
+    App::new("occd", "optimistic concurrency control for distributed unsupervised learning")
+        .command(
+            Command::new("run", "run an OCC algorithm end to end")
+                .flag("config", "TOML config file", None)
+                .flag("algo", "dpmeans | ofl | bpmeans", Some("dpmeans"))
+                .flag("lambda", "distance threshold λ", Some("1.0"))
+                .flag("procs", "worker processors P", Some("4"))
+                .flag("block", "points per processor per epoch b", Some("256"))
+                .flag("iterations", "passes over the data", Some("3"))
+                .flag("bootstrap-div", "bootstrap divisor (0 = off)", Some("16"))
+                .flag("backend", "native | xla", Some("native"))
+                .flag("artifacts", "artifacts directory", Some("artifacts"))
+                .flag("data", "dp | bp | separable | file:<path>", Some("dp"))
+                .flag("n", "points to generate", Some("16384"))
+                .flag("dim", "dimensionality", Some("16"))
+                .flag("theta", "stick-breaking concentration", Some("1.0"))
+                .flag("seed", "RNG seed", Some("0"))
+                .flag("metrics", "metrics JSONL path (- for stdout)", None)
+                .switch("quiet", "suppress the run report"),
+        )
+        .command(
+            Command::new("gen-data", "generate a synthetic dataset")
+                .flag("data", "dp | bp | separable", Some("dp"))
+                .flag("n", "points", Some("16384"))
+                .flag("dim", "dimensionality", Some("16"))
+                .flag("theta", "stick-breaking concentration", Some("1.0"))
+                .flag("seed", "RNG seed", Some("0"))
+                .flag("out", "output .occb path", Some("data.occb"))
+                .flag("csv", "also export CSV here", None),
+        )
+        .command(
+            Command::new("simulate", "first-iteration rejection sweeps (Fig 3 / Fig 6)")
+                .flag("exp", "fig3a | fig3b | fig3c | fig6", Some("fig3a"))
+                .flag("reps", "repetitions per point", Some("400"))
+                .flag("out", "CSV output path", None),
+        )
+        .command(
+            Command::new("scaling", "normalized-runtime scaling (Fig 4)")
+                .flag("algo", "dpmeans | ofl | bpmeans", Some("dpmeans"))
+                .flag("n", "points", Some("131072"))
+                .flag("pb", "points per epoch (P·b, held constant)", Some("8192"))
+                .flag("procs", "comma-separated worker counts", Some("1,2,4,8"))
+                .flag("iterations", "passes (dp/bp)", Some("3"))
+                .flag("backend", "native | xla", Some("native"))
+                .flag("seed", "RNG seed", Some("0")),
+        )
+        .command(
+            Command::new("info", "backend / artifact status")
+                .flag("artifacts", "artifacts directory", Some("artifacts")),
+        )
+}
+
+fn real_main(argv: &[String]) -> Result<i32> {
+    let app = app();
+    match app.dispatch(argv)? {
+        Dispatch::Help(text) => {
+            println!("{text}");
+            Ok(0)
+        }
+        Dispatch::Run(cmd, parsed) => match cmd.name {
+            "run" => cmd_run(&parsed),
+            "gen-data" => cmd_gen_data(&parsed),
+            "simulate" => cmd_simulate(&parsed),
+            "scaling" => cmd_scaling(&parsed),
+            "info" => cmd_info(&parsed),
+            other => Err(Error::config(format!("unhandled command {other}"))),
+        },
+    }
+}
+
+fn build_config(p: &Parsed) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = p.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        RunConfig::from_doc(&toml::parse(&text)?)?
+    } else {
+        RunConfig::default()
+    };
+    if let Some(v) = p.get("algo") {
+        cfg.algo = Algo::parse(v)?;
+    }
+    if let Some(v) = p.get_parse::<f64>("lambda")? {
+        cfg.lambda = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("procs")? {
+        cfg.procs = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("block")? {
+        cfg.block = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("iterations")? {
+        cfg.iterations = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("bootstrap-div")? {
+        cfg.bootstrap_div = v;
+    }
+    if let Some(v) = p.get("backend") {
+        cfg.backend = BackendKind::parse(v)?;
+    }
+    if let Some(v) = p.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(v);
+    }
+    if let Some(v) = p.get("data") {
+        cfg.source = DataSource::parse(v)?;
+    }
+    if let Some(v) = p.get_parse::<usize>("n")? {
+        cfg.n = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("dim")? {
+        cfg.dim = v;
+    }
+    if let Some(v) = p.get_parse::<f64>("theta")? {
+        cfg.theta = v;
+    }
+    if let Some(v) = p.get_parse::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = p.get("metrics") {
+        cfg.metrics_path = Some(PathBuf::from(v));
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(p: &Parsed) -> Result<i32> {
+    let cfg = build_config(p)?;
+    let out = driver::run(&cfg)?;
+    if !p.switch("quiet") {
+        let kind = match &out.model {
+            Model::Dp(_) => "clusters",
+            Model::Ofl(_) => "facilities",
+            Model::Bp(_) => "features",
+        };
+        println!("algo        : {}", cfg.algo.name());
+        println!("backend     : {}", cfg.backend.name());
+        println!("points      : {}", cfg.n);
+        println!("P x b       : {} x {} = {} per epoch", cfg.procs, cfg.block, cfg.points_per_epoch());
+        println!("{kind:<12}: {}", out.model.k());
+        println!("proposed    : {}", out.summary.total_proposed());
+        println!("accepted    : {}", out.summary.total_accepted());
+        println!("rejected    : {}", out.summary.total_rejected());
+        if let Some(j) = out.summary.objective {
+            println!("objective J : {j:.4}");
+        }
+        println!("wall clock  : {}", benchlib::fmt_duration(out.summary.total_time));
+    }
+    Ok(0)
+}
+
+fn cmd_gen_data(p: &Parsed) -> Result<i32> {
+    let gen = GenConfig {
+        n: p.get_parse("n")?.unwrap_or(16384),
+        dim: p.get_parse("dim")?.unwrap_or(16),
+        theta: p.get_parse("theta")?.unwrap_or(1.0),
+        seed: p.get_parse("seed")?.unwrap_or(0),
+    };
+    let source = DataSource::parse(p.get("data").unwrap_or("dp"))?;
+    let ds = match source {
+        DataSource::DpClusters => generators::dp_clusters(&gen),
+        DataSource::BpFeatures => generators::bp_features(&gen),
+        DataSource::Separable => generators::separable_clusters(&gen),
+        DataSource::File(_) => return Err(Error::config("gen-data needs a generator source")),
+    };
+    let out = PathBuf::from(p.get("out").unwrap_or("data.occb"));
+    occml::data::io::write_occb(&ds, &out)?;
+    println!("wrote {} points (dim {}) to {}", ds.len(), ds.dim(), out.display());
+    if let Some(csv) = p.get("csv") {
+        occml::data::io::write_csv(&ds, &PathBuf::from(csv))?;
+        println!("csv: {csv}");
+    }
+    Ok(0)
+}
+
+fn cmd_simulate(p: &Parsed) -> Result<i32> {
+    let exp = p.get("exp").unwrap_or("fig3a").to_string();
+    let reps = p.get_parse::<usize>("reps")?.unwrap_or(400);
+    let mut table = benchlib::Table::new(&["exp", "N", "Pb", "mean_rejections", "mean_accepted", "bound_Pb"]);
+    let ns: Vec<usize> = (1..=10).map(|i| i * 256).collect();
+    let pbs = [16usize, 32, 64, 128, 256];
+    for &n in &ns {
+        for &pb in &pbs {
+            let (mut rej, mut acc) = (0.0f64, 0.0f64);
+            for rep in 0..reps {
+                let seed = (rep as u64) * 7919 + n as u64;
+                let gen = GenConfig { n, dim: 16, theta: 1.0, seed };
+                let r = match exp.as_str() {
+                    "fig3a" => sim::sim_dpmeans(&generators::dp_clusters(&gen), 1.0, pb),
+                    "fig3b" => sim::sim_ofl(&generators::dp_clusters(&gen), 1.0, pb, seed ^ 0xF1),
+                    "fig3c" => sim::sim_bpmeans(&generators::bp_features(&gen), 1.0, pb),
+                    "fig6" => sim::sim_dpmeans(&generators::separable_clusters(&gen), 1.0, pb),
+                    other => return Err(Error::config(format!("unknown exp `{other}`"))),
+                };
+                rej += r.rejections() as f64;
+                acc += r.accepted as f64;
+            }
+            table.row(vec![
+                exp.clone(),
+                n.to_string(),
+                pb.to_string(),
+                format!("{:.2}", rej / reps as f64),
+                format!("{:.2}", acc / reps as f64),
+                pb.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    if let Some(out) = p.get("out") {
+        table.write_csv(std::path::Path::new(out))?;
+        println!("csv: {out}");
+    }
+    Ok(0)
+}
+
+fn cmd_scaling(p: &Parsed) -> Result<i32> {
+    let algo = Algo::parse(p.get("algo").unwrap_or("dpmeans"))?;
+    let n = p.get_parse::<usize>("n")?.unwrap_or(131072);
+    let pb = p.get_parse::<usize>("pb")?.unwrap_or(8192);
+    let iters = p.get_parse::<usize>("iterations")?.unwrap_or(3);
+    let backend = BackendKind::parse(p.get("backend").unwrap_or("native"))?;
+    let seed = p.get_parse::<u64>("seed")?.unwrap_or(0);
+    let procs: Vec<usize> = p
+        .get("procs")
+        .unwrap_or("1,2,4,8")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|_| Error::config("bad --procs")))
+        .collect::<Result<_>>()?;
+
+    let source = match algo {
+        Algo::BpMeans => DataSource::BpFeatures,
+        _ => DataSource::DpClusters,
+    };
+    let base_cfg = RunConfig {
+        algo,
+        lambda: 2.0,
+        iterations: if algo == Algo::Ofl { 1 } else { iters },
+        backend,
+        seed,
+        source,
+        n,
+        ..RunConfig::default()
+    };
+    let data = Arc::new(driver::load_or_generate(&base_cfg)?);
+    let be = driver::make_backend(&base_cfg)?;
+
+    let mut table =
+        benchlib::Table::new(&["algo", "P", "b", "iteration", "time", "normalized_vs_P1"]);
+    let mut baseline: Vec<f64> = Vec::new();
+    for &p_count in &procs {
+        let cfg = RunConfig { procs: p_count, block: pb / p_count, ..base_cfg.clone() };
+        let out = driver::run_with(&cfg, data.clone(), be.clone())?;
+        for it in 0..out.summary.iterations() {
+            let t = out.summary.iteration_time(it).as_secs_f64();
+            if p_count == procs[0] {
+                baseline.push(t);
+            }
+            let norm = baseline.get(it).map(|b| t / b).unwrap_or(f64::NAN);
+            table.row(vec![
+                algo.name().into(),
+                p_count.to_string(),
+                (pb / p_count).to_string(),
+                it.to_string(),
+                benchlib::fmt_duration(std::time::Duration::from_secs_f64(t)),
+                format!("{norm:.3}"),
+            ]);
+        }
+    }
+    table.print();
+    Ok(0)
+}
+
+fn cmd_info(p: &Parsed) -> Result<i32> {
+    let dir = PathBuf::from(p.get("artifacts").unwrap_or("artifacts"));
+    println!("occml {} — backends:", env!("CARGO_PKG_VERSION"));
+    println!("  native: available");
+    match occml::runtime::manifest::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("  xla   : {} artifacts (dim {}) in {}", m.entries.len(), m.dim, dir.display());
+            for e in &m.entries {
+                println!("    {:<11} b={:<5} k={:<5} {}", e.kind.name(), e.b, e.k, e.file.display());
+            }
+        }
+        Err(e) => println!("  xla   : unavailable — {e}"),
+    }
+    // Smoke the PJRT client.
+    match xla_smoke() {
+        Ok(msg) => println!("  pjrt  : {msg}"),
+        Err(e) => println!("  pjrt  : failed — {e}"),
+    }
+    Ok(0)
+}
+
+fn xla_smoke() -> Result<String> {
+    let client =
+        xla::PjRtClient::cpu().map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e:?}")))?;
+    Ok(format!("{} ({} devices)", client.platform_name(), client.device_count()))
+}
+
+/// Objective helper re-exported for integration smoke (keeps the import used
+/// in all build configurations).
+#[allow(dead_code)]
+fn _objective_touch(data: &occml::data::Dataset, m: &occml::linalg::Matrix) -> f64 {
+    objective::dp_objective(data, m, 1.0)
+}

@@ -1,0 +1,233 @@
+//! Run metrics: counters, timers, per-epoch records, JSONL emission.
+//!
+//! The coordinator produces one [`EpochRecord`] per epoch — this is the raw
+//! material for every figure in the paper's evaluation (proposal counts →
+//! Fig 3/6; wall-clock per epoch/iteration → Fig 4). A [`MetricsSink`]
+//! serializes records as JSON lines to a file or stdout.
+
+pub mod json;
+
+use json::{obj, Json};
+use std::io::Write;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// What happened in one bulk-synchronous epoch.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EpochRecord {
+    /// Pass (iteration) index, 0-based.
+    pub iteration: usize,
+    /// Epoch index within the pass, 0-based.
+    pub epoch: usize,
+    /// Points processed by workers this epoch.
+    pub points: usize,
+    /// Proposals sent to the master (`M` contributions).
+    pub proposed: usize,
+    /// Proposals accepted as new clusters / features.
+    pub accepted: usize,
+    /// Proposals rejected (corrected to existing centers).
+    pub rejected: usize,
+    /// Global number of centers/features after the epoch.
+    pub centers: usize,
+    /// Wall-clock the workers spent (max over workers, i.e. critical path).
+    pub worker_time: Duration,
+    /// Wall-clock the master spent validating.
+    pub master_time: Duration,
+    /// Total epoch wall-clock (barrier to barrier).
+    pub total_time: Duration,
+}
+
+impl EpochRecord {
+    /// Render as a JSON object.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("iteration", Json::Num(self.iteration as f64)),
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("points", Json::Num(self.points as f64)),
+            ("proposed", Json::Num(self.proposed as f64)),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("centers", Json::Num(self.centers as f64)),
+            ("worker_ms", Json::Num(self.worker_time.as_secs_f64() * 1e3)),
+            ("master_ms", Json::Num(self.master_time.as_secs_f64() * 1e3)),
+            ("total_ms", Json::Num(self.total_time.as_secs_f64() * 1e3)),
+        ])
+    }
+}
+
+/// Aggregated run summary.
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    /// Per-epoch records in execution order.
+    pub epochs: Vec<EpochRecord>,
+    /// Final number of centers / features.
+    pub final_centers: usize,
+    /// Final objective value J(C), if computed.
+    pub objective: Option<f64>,
+    /// Total wall-clock.
+    pub total_time: Duration,
+}
+
+impl RunSummary {
+    /// Total proposals across epochs.
+    pub fn total_proposed(&self) -> usize {
+        self.epochs.iter().map(|e| e.proposed).sum()
+    }
+    /// Total rejections across epochs (`M_N − k_N` in §4.1).
+    pub fn total_rejected(&self) -> usize {
+        self.epochs.iter().map(|e| e.rejected).sum()
+    }
+    /// Total accepted across epochs.
+    pub fn total_accepted(&self) -> usize {
+        self.epochs.iter().map(|e| e.accepted).sum()
+    }
+    /// Wall-clock of one iteration (sum of its epochs' total_time).
+    pub fn iteration_time(&self, iteration: usize) -> Duration {
+        self.epochs
+            .iter()
+            .filter(|e| e.iteration == iteration)
+            .map(|e| e.total_time)
+            .sum()
+    }
+    /// Number of iterations present.
+    pub fn iterations(&self) -> usize {
+        self.epochs.iter().map(|e| e.iteration + 1).max().unwrap_or(0)
+    }
+}
+
+/// Where metrics lines go.
+pub enum MetricsSink {
+    /// Silently drop (benchmarks).
+    Null,
+    /// Write to stdout.
+    Stdout,
+    /// Append to a file.
+    File(std::io::BufWriter<std::fs::File>),
+}
+
+impl MetricsSink {
+    /// Open a sink for an optional path (`None` → Null).
+    pub fn open(path: Option<&Path>) -> crate::error::Result<Self> {
+        match path {
+            None => Ok(MetricsSink::Null),
+            Some(p) if p.as_os_str() == "-" => Ok(MetricsSink::Stdout),
+            Some(p) => {
+                let f = std::fs::File::create(p)?;
+                Ok(MetricsSink::File(std::io::BufWriter::new(f)))
+            }
+        }
+    }
+
+    /// Emit one record as a JSON line.
+    pub fn emit(&mut self, rec: &EpochRecord) {
+        let line = rec.to_json().to_string_compact();
+        match self {
+            MetricsSink::Null => {}
+            MetricsSink::Stdout => println!("{line}"),
+            MetricsSink::File(w) => {
+                let _ = writeln!(w, "{line}");
+            }
+        }
+    }
+
+    /// Flush buffered output.
+    pub fn flush(&mut self) {
+        if let MetricsSink::File(w) = self {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Simple scoped stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing.
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+    /// Elapsed since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(it: usize, ep: usize, prop: usize, acc: usize) -> EpochRecord {
+        EpochRecord {
+            iteration: it,
+            epoch: ep,
+            points: 100,
+            proposed: prop,
+            accepted: acc,
+            rejected: prop - acc,
+            centers: acc,
+            worker_time: Duration::from_millis(5),
+            master_time: Duration::from_millis(1),
+            total_time: Duration::from_millis(7),
+        }
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let s = RunSummary {
+            epochs: vec![rec(0, 0, 10, 4), rec(0, 1, 6, 2), rec(1, 0, 3, 0)],
+            final_centers: 6,
+            objective: Some(12.5),
+            total_time: Duration::from_millis(21),
+        };
+        assert_eq!(s.total_proposed(), 19);
+        assert_eq!(s.total_accepted(), 6);
+        assert_eq!(s.total_rejected(), 13);
+        assert_eq!(s.iterations(), 2);
+        assert_eq!(s.iteration_time(0), Duration::from_millis(14));
+    }
+
+    #[test]
+    fn epoch_record_json_fields() {
+        let j = rec(1, 2, 5, 3).to_json();
+        assert_eq!(j.get("iteration").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("epoch").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("proposed").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("rejected").unwrap().as_usize(), Some(2));
+        assert!(j.get("total_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn file_sink_writes_jsonl() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("occml-metrics-{}.jsonl", std::process::id()));
+        {
+            let mut sink = MetricsSink::open(Some(&p)).unwrap();
+            sink.emit(&rec(0, 0, 1, 1));
+            sink.emit(&rec(0, 1, 2, 0));
+            sink.flush();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            json::parse(line).unwrap();
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,245 @@
+//! Samplers for the distributions the paper's synthetic workloads need
+//! (§4 and App C.1): isotropic normals for cluster/feature means and noise,
+//! Beta for stick-breaking (Dirichlet- and Beta-process weights), Gamma as
+//! the Beta building block, and uniform-in-ball for the separable-cluster
+//! generator of Appendix C.1.
+
+use super::Pcg64;
+
+/// Standard normal via the Marsaglia polar method. Caches the spare value.
+#[derive(Debug, Clone, Default)]
+pub struct Normal {
+    spare: Option<f64>,
+}
+
+impl Normal {
+    /// New sampler with empty cache.
+    pub fn new() -> Self {
+        Normal { spare: None }
+    }
+
+    /// Draw one N(0, 1) sample.
+    pub fn sample(&mut self, rng: &mut Pcg64) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// Fill `out` with iid N(mean, std²) samples.
+    pub fn fill(&mut self, rng: &mut Pcg64, mean: f64, std: f64, out: &mut [f32]) {
+        for o in out.iter_mut() {
+            *o = (mean + std * self.sample(rng)) as f32;
+        }
+    }
+}
+
+/// Draw one N(0,1) sample without a cache (convenience).
+pub fn standard_normal(rng: &mut Pcg64) -> f64 {
+    Normal::new().sample(rng)
+}
+
+/// Gamma(shape α, scale 1) via Marsaglia–Tsang (2000); boosts α < 1.
+pub fn gamma(rng: &mut Pcg64, alpha: f64) -> f64 {
+    debug_assert!(alpha > 0.0);
+    if alpha < 1.0 {
+        // Boost: Gamma(α) = Gamma(α+1) · U^{1/α}.
+        let g = gamma(rng, alpha + 1.0);
+        let u = rng.next_f64().max(f64::MIN_POSITIVE);
+        return g * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    let mut normal = Normal::new();
+    loop {
+        let x = normal.sample(rng);
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.next_f64();
+        let x2 = x * x;
+        if u < 1.0 - 0.0331 * x2 * x2 {
+            return d * v;
+        }
+        if u.ln() < 0.5 * x2 + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// Beta(a, b) via two Gammas.
+pub fn beta(rng: &mut Pcg64, a: f64, b: f64) -> f64 {
+    let x = gamma(rng, a);
+    let y = gamma(rng, b);
+    if x + y == 0.0 {
+        return 0.5;
+    }
+    x / (x + y)
+}
+
+/// Uniform point inside the D-ball of radius `r` centred at `center`,
+/// written into `out` (rejection-free: direction × radius^(1/D) scaling).
+pub fn uniform_in_ball(rng: &mut Pcg64, center: &[f32], r: f64, out: &mut [f32]) {
+    debug_assert_eq!(center.len(), out.len());
+    let d = out.len();
+    let mut normal = Normal::new();
+    // Random direction.
+    let mut norm2 = 0.0f64;
+    for o in out.iter_mut() {
+        let g = normal.sample(rng);
+        *o = g as f32;
+        norm2 += g * g;
+    }
+    let norm = norm2.sqrt().max(f64::MIN_POSITIVE);
+    // Radius with density ∝ ρ^{D-1}.
+    let radius = r * rng.next_f64().powf(1.0 / d as f64);
+    let scale = (radius / norm) as f32;
+    for (o, c) in out.iter_mut().zip(center) {
+        *o = c + *o * scale;
+    }
+}
+
+/// One draw from a categorical distribution given (unnormalised) weights.
+pub fn categorical(rng: &mut Pcg64, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.next_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// Poisson(λ) via inversion for small λ, PTRS-like normal approx fallback.
+pub fn poisson(rng: &mut Pcg64, lambda: f64) -> u64 {
+    debug_assert!(lambda >= 0.0);
+    if lambda < 30.0 {
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+    // Normal approximation with continuity correction — adequate for the
+    // generator use-cases (λ is a dataset-size-scale quantity there).
+    let g = standard_normal(rng);
+    let v = lambda + lambda.sqrt() * g + 0.5;
+    if v < 0.0 {
+        0
+    } else {
+        v as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_var(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n;
+        (m, v)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(1);
+        let mut n = Normal::new();
+        let xs: Vec<f64> = (0..200_000).map(|_| n.sample(&mut rng)).collect();
+        let (m, v) = mean_var(&xs);
+        assert!(m.abs() < 0.01, "mean={m}");
+        assert!((v - 1.0).abs() < 0.02, "var={v}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Pcg64::new(2);
+        for &alpha in &[0.5, 1.0, 2.5, 9.0] {
+            let xs: Vec<f64> = (0..100_000).map(|_| gamma(&mut rng, alpha)).collect();
+            let (m, v) = mean_var(&xs);
+            assert!((m - alpha).abs() < 0.1 * alpha.max(1.0), "alpha={alpha} mean={m}");
+            assert!((v - alpha).abs() < 0.15 * alpha.max(1.0), "alpha={alpha} var={v}");
+        }
+    }
+
+    #[test]
+    fn beta_moments() {
+        let mut rng = Pcg64::new(3);
+        let (a, b) = (2.0, 5.0);
+        let xs: Vec<f64> = (0..100_000).map(|_| beta(&mut rng, a, b)).collect();
+        let (m, _) = mean_var(&xs);
+        let expect = a / (a + b);
+        assert!((m - expect).abs() < 0.01, "mean={m} expect={expect}");
+        assert!(xs.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn beta_1_theta_matches_stick_breaking_mean() {
+        // Beta(1, θ) has mean 1/(1+θ); θ=1 → 0.5. This is the DP stick draw.
+        let mut rng = Pcg64::new(4);
+        let xs: Vec<f64> = (0..50_000).map(|_| beta(&mut rng, 1.0, 1.0)).collect();
+        let (m, _) = mean_var(&xs);
+        assert!((m - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn ball_samples_inside_and_fill_radius() {
+        let mut rng = Pcg64::new(5);
+        let center = vec![1.0f32; 16];
+        let mut out = vec![0.0f32; 16];
+        let mut max_r = 0.0f64;
+        for _ in 0..5_000 {
+            uniform_in_ball(&mut rng, &center, 0.5, &mut out);
+            let r2: f64 = out
+                .iter()
+                .zip(&center)
+                .map(|(x, c)| ((x - c) as f64).powi(2))
+                .sum();
+            let r = r2.sqrt();
+            assert!(r <= 0.5 + 1e-6, "r={r}");
+            max_r = max_r.max(r);
+        }
+        // In 16-d almost all mass is near the boundary.
+        assert!(max_r > 0.45, "max_r={max_r}");
+    }
+
+    #[test]
+    fn categorical_matches_weights() {
+        let mut rng = Pcg64::new(6);
+        let w = [1.0, 2.0, 7.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..100_000 {
+            counts[categorical(&mut rng, &w)] += 1;
+        }
+        assert!((counts[2] as f64 / 100_000.0 - 0.7).abs() < 0.01);
+        assert!((counts[1] as f64 / 100_000.0 - 0.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut rng = Pcg64::new(7);
+        for &lam in &[2.0, 50.0] {
+            let xs: Vec<f64> = (0..50_000).map(|_| poisson(&mut rng, lam) as f64).collect();
+            let (m, _) = mean_var(&xs);
+            assert!((m - lam).abs() < 0.05 * lam, "lam={lam} mean={m}");
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Conversions between Rust buffers and `xla::Literal` values, with the
+//! padding helpers the shape-bucket dispatch needs.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+/// Sentinel coordinate value for padded center rows: far enough that a
+/// padded center can never win an argmin against any real data (distances
+/// become ~1e18), small enough that squaring stays finite in f32.
+pub const PAD_SENTINEL: f32 = 1e9;
+
+/// Build an `f32[rows, cols]` literal from a row-major slice, padding with
+/// `pad_value` up to `(pad_rows, cols)`.
+pub fn f32_matrix_padded(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    pad_rows: usize,
+    pad_value: f32,
+) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    debug_assert!(pad_rows >= rows);
+    let mut buf = Vec::with_capacity(pad_rows * cols);
+    buf.extend_from_slice(data);
+    buf.resize(pad_rows * cols, pad_value);
+    let lit = xla::Literal::vec1(&buf);
+    lit.reshape(&[pad_rows as i64, cols as i64])
+        .map_err(|e| Error::runtime(format!("reshape literal: {e:?}")))
+}
+
+/// Build an `f32[pad_rows, cols]` literal from a matrix, padding rows with
+/// `pad_value`.
+pub fn matrix_literal_padded(m: &Matrix, pad_rows: usize, pad_value: f32) -> Result<xla::Literal> {
+    f32_matrix_padded(&m.data, m.rows, m.cols, pad_rows, pad_value)
+}
+
+/// Build an `i32[pad_len]` literal from a `u32` slice, padding with `pad`.
+pub fn i32_vec_padded(data: &[u32], pad_len: usize, pad: i32) -> Result<xla::Literal> {
+    let mut buf: Vec<i32> = Vec::with_capacity(pad_len);
+    buf.extend(data.iter().map(|&v| v as i32));
+    buf.resize(pad_len, pad);
+    Ok(xla::Literal::vec1(&buf))
+}
+
+/// Read an `f32` literal into a Vec.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| Error::runtime(format!("literal to_vec<f32>: {e:?}")))
+}
+
+/// Read an `i32` literal into a Vec.
+pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>()
+        .map_err(|e| Error::runtime(format!("literal to_vec<i32>: {e:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_padding_roundtrip() {
+        let lit = f32_matrix_padded(&[1.0, 2.0, 3.0, 4.0], 2, 2, 4, 9.0).unwrap();
+        let v = to_f32_vec(&lit).unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0, 9.0, 9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn i32_padding_roundtrip() {
+        let lit = i32_vec_padded(&[7, 8], 5, -1).unwrap();
+        let v = to_i32_vec(&lit).unwrap();
+        assert_eq!(v, vec![7, 8, -1, -1, -1]);
+    }
+
+    #[test]
+    fn matrix_literal_shape() {
+        let m = Matrix::from_vec(2, 3, vec![0.0; 6]);
+        let lit = matrix_literal_padded(&m, 4, PAD_SENTINEL).unwrap();
+        assert_eq!(lit.element_count(), 12);
+    }
+}

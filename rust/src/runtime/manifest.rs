@@ -1,0 +1,208 @@
+//! AOT artifact manifest.
+//!
+//! `python/compile/aot.py` lowers each L2 entry point for a grid of shape
+//! buckets and writes `artifacts/manifest.json` describing what exists:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "dim": 16,
+//!   "entries": [
+//!     {"kind": "dp_assign", "b": 256, "k": 64, "d": 16,
+//!      "file": "dp_assign_b256_k64_d16.hlo.txt"},
+//!     ...
+//!   ]
+//! }
+//! ```
+//!
+//! The runtime picks, per call, the smallest bucket that fits the live
+//! block/center shapes and pads inputs up to it.
+
+use crate::error::{Error, Result};
+use crate::metrics::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// Kinds of AOT-compiled entry points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EntryKind {
+    /// Nearest-center assignment: `(X[b,d], C[k,d]) → (idx i32[b], d2 f32[b])`.
+    DpAssign,
+    /// Sufficient statistics: `(X[b,d], z i32[b]) → (sums f32[k,d], counts f32[k])`.
+    SuffStats,
+    /// BP coordinate descent: `(X[b,d], F[k,d]) → (z f32[b,k], resid f32[b,d], r2 f32[b])`.
+    BpDescend,
+}
+
+impl EntryKind {
+    /// Parse the manifest `kind` string.
+    pub fn parse(s: &str) -> Result<EntryKind> {
+        match s {
+            "dp_assign" => Ok(EntryKind::DpAssign),
+            "suffstats" => Ok(EntryKind::SuffStats),
+            "bp_descend" => Ok(EntryKind::BpDescend),
+            other => Err(Error::runtime(format!("manifest: unknown entry kind `{other}`"))),
+        }
+    }
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EntryKind::DpAssign => "dp_assign",
+            EntryKind::SuffStats => "suffstats",
+            EntryKind::BpDescend => "bp_descend",
+        }
+    }
+}
+
+/// One AOT-compiled shape bucket.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// Entry point kind.
+    pub kind: EntryKind,
+    /// Block-size bucket (points per call).
+    pub b: usize,
+    /// Center/feature-count bucket.
+    pub k: usize,
+    /// Dimensionality (fixed per artifact set).
+    pub d: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifacts directory (resolved).
+    pub dir: PathBuf,
+    /// Dimensionality all entries share.
+    pub dim: usize,
+    /// Available buckets.
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::runtime(format!("{}: {e} (run `make artifacts`)", path.display())))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = json::parse(text)?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::runtime("manifest: missing version"))?;
+        if version != 1 {
+            return Err(Error::runtime(format!("manifest: unsupported version {version}")));
+        }
+        let dim = root
+            .get("dim")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::runtime("manifest: missing dim"))?;
+        let raw = root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::runtime("manifest: missing entries"))?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for (i, e) in raw.iter().enumerate() {
+            let get_usize = |k: &str| {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::runtime(format!("manifest entry {i}: missing {k}")))
+            };
+            let kind = EntryKind::parse(
+                e.get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::runtime(format!("manifest entry {i}: missing kind")))?,
+            )?;
+            let entry = Entry {
+                kind,
+                b: get_usize("b")?,
+                k: get_usize("k")?,
+                d: get_usize("d")?,
+                file: PathBuf::from(
+                    e.get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| Error::runtime(format!("manifest entry {i}: missing file")))?,
+                ),
+            };
+            if entry.d != dim {
+                return Err(Error::runtime(format!(
+                    "manifest entry {i}: d={} but manifest dim={dim}",
+                    entry.d
+                )));
+            }
+            entries.push(entry);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), dim, entries })
+    }
+
+    /// The smallest bucket of `kind` that fits `b` points × `k` centers
+    /// (ties broken toward fewer padded elements).
+    pub fn pick(&self, kind: EntryKind, b: usize, k: usize) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.b >= b && e.k >= k)
+            .min_by_key(|e| e.b * e.k)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEXT: &str = r#"{
+        "version": 1, "dim": 16,
+        "entries": [
+            {"kind": "dp_assign", "b": 256, "k": 64, "d": 16, "file": "a.hlo.txt"},
+            {"kind": "dp_assign", "b": 1024, "k": 64, "d": 16, "file": "b.hlo.txt"},
+            {"kind": "dp_assign", "b": 1024, "k": 1024, "d": 16, "file": "c.hlo.txt"},
+            {"kind": "suffstats", "b": 1024, "k": 64, "d": 16, "file": "s.hlo.txt"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_picks_smallest_fit() {
+        let m = Manifest::parse(Path::new("/tmp/artifacts"), TEXT).unwrap();
+        assert_eq!(m.dim, 16);
+        assert_eq!(m.entries.len(), 4);
+        let e = m.pick(EntryKind::DpAssign, 100, 10).unwrap();
+        assert_eq!((e.b, e.k), (256, 64));
+        let e = m.pick(EntryKind::DpAssign, 300, 10).unwrap();
+        assert_eq!((e.b, e.k), (1024, 64));
+        let e = m.pick(EntryKind::DpAssign, 300, 100).unwrap();
+        assert_eq!((e.b, e.k), (1024, 1024));
+        assert!(m.pick(EntryKind::DpAssign, 5000, 10).is_none());
+        assert!(m.pick(EntryKind::BpDescend, 1, 1).is_none());
+        assert_eq!(
+            m.path_of(m.pick(EntryKind::SuffStats, 1, 1).unwrap()),
+            PathBuf::from("/tmp/artifacts/s.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        let d = Path::new("/tmp");
+        assert!(Manifest::parse(d, "{}").is_err());
+        assert!(Manifest::parse(d, r#"{"version": 2, "dim": 16, "entries": []}"#).is_err());
+        assert!(Manifest::parse(
+            d,
+            r#"{"version": 1, "dim": 16, "entries": [{"kind": "nope", "b": 1, "k": 1, "d": 16, "file": "x"}]}"#
+        )
+        .is_err());
+        // Entry dim must match manifest dim.
+        assert!(Manifest::parse(
+            d,
+            r#"{"version": 1, "dim": 16, "entries": [{"kind": "dp_assign", "b": 1, "k": 1, "d": 8, "file": "x"}]}"#
+        )
+        .is_err());
+    }
+}

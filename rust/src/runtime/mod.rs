@@ -1,0 +1,106 @@
+//! Numeric backends for the per-epoch hot path.
+//!
+//! The coordinator is backend-agnostic: workers call [`ComputeBackend`] for
+//! the three numeric primitives every epoch needs —
+//!
+//! * [`ComputeBackend::nearest`] — nearest-center assignment for a block
+//!   (the dominant compute: `b · K · D` flops per worker per epoch),
+//! * [`ComputeBackend::suffstats`] — per-center sums/counts for the DP-means
+//!   mean-recompute phase,
+//! * [`ComputeBackend::bp_descend`] — BP-means binary coordinate descent.
+//!
+//! Two implementations exist: [`native::NativeBackend`] (pure-Rust blocked
+//! kernels, always available) and [`xla::XlaBackend`] (AOT artifacts
+//! compiled from the L2 JAX model / L1 Pallas kernels, executed via the
+//! PJRT CPU client). Both are deterministic and must agree to float
+//! tolerance — `rust/tests/backend_parity.rs` enforces it.
+
+pub mod literal;
+pub mod manifest;
+pub mod native;
+pub mod xla;
+
+use crate::error::Result;
+use crate::linalg::Matrix;
+
+/// A borrowed block of points: `n` contiguous rows of width `d`.
+#[derive(Debug, Clone, Copy)]
+pub struct Block<'a> {
+    /// Row-major point storage, `n * d` long.
+    pub data: &'a [f32],
+    /// Number of points.
+    pub n: usize,
+    /// Dimensionality.
+    pub d: usize,
+}
+
+impl<'a> Block<'a> {
+    /// Block over rows `range` of a matrix.
+    pub fn of(m: &'a Matrix, range: std::ops::Range<usize>) -> Self {
+        Block {
+            data: &m.data[range.start * m.cols..range.end * m.cols],
+            n: range.end - range.start,
+            d: m.cols,
+        }
+    }
+    /// Row accessor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+}
+
+/// Output of one BP coordinate-descent block call.
+#[derive(Debug, Clone)]
+pub struct BpDescendOut {
+    /// Binary assignment per point over the feature set (`n × K`, row-major).
+    pub z: Vec<bool>,
+    /// Residual `x − Σ z f` per point (`n × d`, row-major).
+    pub residuals: Vec<f32>,
+    /// Squared residual norm per point.
+    pub r2: Vec<f32>,
+}
+
+/// The numeric backend interface used by coordinator workers.
+pub trait ComputeBackend: Send + Sync {
+    /// Human-readable backend name (for metrics/logs).
+    fn name(&self) -> &'static str;
+
+    /// For each point of `block`, the index and squared distance of the
+    /// nearest row of `centers`. `centers.rows == 0` yields `u32::MAX`/+inf.
+    fn nearest(
+        &self,
+        block: Block<'_>,
+        centers: &Matrix,
+        out_idx: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> Result<()>;
+
+    /// Accumulate per-center sums and counts for `block` under `idx`
+    /// (values `>= sums.rows` are skipped). Adds into `sums`/`counts`.
+    fn suffstats(
+        &self,
+        block: Block<'_>,
+        idx: &[u32],
+        sums: &mut Matrix,
+        counts: &mut [u64],
+    ) -> Result<()>;
+
+    /// BP-means binary coordinate descent of each point in `block` against
+    /// `features`, `sweeps` in-order sweeps, starting from all-zero z.
+    fn bp_descend(&self, block: Block<'_>, features: &Matrix, sweeps: usize)
+        -> Result<BpDescendOut>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_views_rows() {
+        let m = Matrix::from_vec(4, 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let b = Block::of(&m, 1..3);
+        assert_eq!(b.n, 2);
+        assert_eq!(b.row(0), &[2.0, 3.0]);
+        assert_eq!(b.row(1), &[4.0, 5.0]);
+    }
+}

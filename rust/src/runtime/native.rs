@@ -1,0 +1,128 @@
+//! Pure-Rust compute backend: blocked kernels from [`crate::linalg`].
+//!
+//! Always available (no artifacts needed), bit-deterministic, and the
+//! roofline reference the XLA artifacts are compared against in the
+//! `backends` bench.
+
+use super::{Block, BpDescendOut, ComputeBackend};
+use crate::algorithms::bpmeans::descend_z;
+use crate::error::Result;
+use crate::linalg::{blocked, Matrix};
+
+/// The native (pure-Rust) backend. Zero-sized; cheap to share.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    /// Construct.
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn nearest(
+        &self,
+        block: Block<'_>,
+        centers: &Matrix,
+        out_idx: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> Result<()> {
+        blocked::nearest_blocked_raw(block.data, block.n, block.d, centers, out_idx, out_d2);
+        Ok(())
+    }
+
+    fn suffstats(
+        &self,
+        block: Block<'_>,
+        idx: &[u32],
+        sums: &mut Matrix,
+        counts: &mut [u64],
+    ) -> Result<()> {
+        debug_assert_eq!(idx.len(), block.n);
+        let k = sums.rows as u32;
+        for (i, &a) in idx.iter().enumerate() {
+            if a >= k {
+                continue;
+            }
+            counts[a as usize] += 1;
+            crate::linalg::axpy(1.0, block.row(i), sums.row_mut(a as usize));
+        }
+        Ok(())
+    }
+
+    fn bp_descend(
+        &self,
+        block: Block<'_>,
+        features: &Matrix,
+        sweeps: usize,
+    ) -> Result<BpDescendOut> {
+        let k = features.rows;
+        let mut z = vec![false; block.n * k];
+        let mut residuals = vec![0.0f32; block.n * block.d];
+        let mut r2 = vec![0.0f32; block.n];
+        for i in 0..block.n {
+            let zi = &mut z[i * k..(i + 1) * k];
+            let ri = &mut residuals[i * block.d..(i + 1) * block.d];
+            r2[i] = descend_z(block.row(i), features, zi, ri, sweeps);
+        }
+        Ok(BpDescendOut { z, residuals, r2 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_matrix(rng: &mut Pcg64, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+    }
+
+    #[test]
+    fn nearest_matches_scalar() {
+        let mut rng = Pcg64::new(1);
+        let pts = random_matrix(&mut rng, 50, 8);
+        let ctr = random_matrix(&mut rng, 7, 8);
+        let be = NativeBackend::new();
+        let mut idx = vec![0u32; 20];
+        let mut d2 = vec![0.0f32; 20];
+        be.nearest(Block::of(&pts, 10..30), &ctr, &mut idx, &mut d2).unwrap();
+        for (off, i) in (10..30).enumerate() {
+            let (_, bd) = crate::linalg::nearest(pts.row(i), &ctr);
+            assert!((d2[off] - bd).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn suffstats_on_subblock() {
+        let pts = Matrix::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let be = NativeBackend::new();
+        let mut sums = Matrix::zeros(2, 1);
+        let mut counts = vec![0u64; 2];
+        be.suffstats(Block::of(&pts, 1..4), &[0, 1, u32::MAX], &mut sums, &mut counts).unwrap();
+        assert_eq!(counts, vec![1, 1]);
+        assert_eq!(sums.get(0, 0), 2.0);
+        assert_eq!(sums.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn bp_descend_block_matches_scalar() {
+        let mut rng = Pcg64::new(2);
+        let pts = random_matrix(&mut rng, 12, 6);
+        let feats = random_matrix(&mut rng, 4, 6);
+        let be = NativeBackend::new();
+        let out = be.bp_descend(Block::of(&pts, 0..12), &feats, 2).unwrap();
+        let mut r = vec![0.0f32; 6];
+        for i in 0..12 {
+            let mut z = vec![false; 4];
+            let r2 = descend_z(pts.row(i), &feats, &mut z, &mut r, 2);
+            assert_eq!(&out.z[i * 4..(i + 1) * 4], z.as_slice());
+            assert!((out.r2[i] - r2).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! XLA/PJRT backend: executes AOT artifacts compiled from the L2 JAX model.
+//!
+//! Loading path (see `/opt/xla-example/load_hlo/` and DESIGN.md §2):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::cpu().compile` → `execute`. HLO *text* is the interchange
+//! format (jax ≥ 0.5 serialized protos are rejected by xla_extension 0.5.1).
+//!
+//! ## Shape buckets & padding
+//!
+//! XLA executables are static-shape. Each call pads the live block to the
+//! smallest compiled bucket: points pad with zeros (results for pad rows are
+//! discarded), centers pad with [`literal::PAD_SENTINEL`] (can never win an
+//! argmin), suffstats assignments pad with `k` (maps to an all-zero one-hot
+//! row in the kernel), BP features pad with zero rows (a zero feature is
+//! never taken by the descent rule `2⟨r,f⟩ > ‖f‖²`).
+//!
+//! ## Thread-safety
+//!
+//! The `xla` crate does not mark its PJRT wrappers `Send`/`Sync` (they hold
+//! raw pointers), but the PJRT C API guarantees `Execute` and host-literal
+//! transfers are thread-safe, and the CPU client dispatches concurrent
+//! executions internally. We therefore wrap the compiled executables in a
+//! [`SharedExec`] newtype with explicit `unsafe impl Send + Sync`;
+//! compilation (the only mutating phase) is serialized behind a `Mutex`.
+
+use super::literal::{self, PAD_SENTINEL};
+use super::manifest::{Entry, EntryKind, Manifest};
+use super::{Block, BpDescendOut, ComputeBackend};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// `Send`/`Sync` wrapper for a compiled PJRT executable — see module docs
+/// for the safety argument (PJRT `Execute` is thread-safe; the wrapper is
+/// only constructed under the compile lock).
+struct SharedExec(xla::PjRtLoadedExecutable);
+// SAFETY: PJRT's C API specifies PJRT_LoadedExecutable_Execute (and buffer
+// host transfers) as thread-safe; the CPU plugin serializes internal state.
+// The Rust wrapper adds no thread-affine state of its own.
+unsafe impl Send for SharedExec {}
+unsafe impl Sync for SharedExec {}
+
+/// Client wrapper with the same justification.
+struct SharedClient(xla::PjRtClient);
+// SAFETY: see SharedExec.
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+/// The XLA/PJRT compute backend.
+pub struct XlaBackend {
+    manifest: Manifest,
+    client: SharedClient,
+    /// Compiled executables by (kind, b, k). Compiles lazily on first use.
+    cache: Mutex<HashMap<(EntryKind, usize, usize), std::sync::Arc<SharedExec>>>,
+}
+
+impl XlaBackend {
+    /// Load the manifest and create the PJRT CPU client. Executables are
+    /// compiled lazily per bucket on first use.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e:?}")))?;
+        Ok(XlaBackend { manifest, client: SharedClient(client), cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// The manifest this backend serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Eagerly compile every bucket (useful before timing-sensitive runs).
+    pub fn warmup(&self) -> Result<()> {
+        let entries: Vec<Entry> = self.manifest.entries.clone();
+        for e in entries {
+            self.executable(&e)?;
+        }
+        Ok(())
+    }
+
+    fn executable(&self, entry: &Entry) -> Result<std::sync::Arc<SharedExec>> {
+        let key = (entry.kind, entry.b, entry.k);
+        let mut cache = self.cache.lock().expect("xla cache poisoned");
+        if let Some(e) = cache.get(&key) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::runtime("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| Error::runtime(format!("load {}: {e:?}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile {}: {e:?}", path.display())))?;
+        let arc = std::sync::Arc::new(SharedExec(exe));
+        cache.insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    /// Largest block bucket available for `kind` at center bucket ≥ k —
+    /// used to split oversized blocks into multiple executions.
+    fn max_block_bucket(&self, kind: EntryKind, k: usize) -> Option<usize> {
+        self.manifest
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind && e.k >= k)
+            .map(|e| e.b)
+            .max()
+    }
+
+    fn pick(&self, kind: EntryKind, b: usize, k: usize) -> Result<Entry> {
+        self.manifest
+            .pick(kind, b, k)
+            .cloned()
+            .ok_or_else(|| {
+                Error::runtime(format!(
+                    "no {} bucket for b={b} k={k} (have: {:?}); re-run `make artifacts` with larger buckets",
+                    kind.name(),
+                    self.manifest
+                        .entries
+                        .iter()
+                        .filter(|e| e.kind == kind)
+                        .map(|e| (e.b, e.k))
+                        .collect::<Vec<_>>()
+                ))
+            })
+    }
+
+    fn execute(&self, entry: &Entry, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(entry)?;
+        let bufs = exe
+            .0
+            .execute::<xla::Literal>(args)
+            .map_err(|e| Error::runtime(format!("execute {}: {e:?}", entry.kind.name())))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("fetch result: {e:?}")))?;
+        // aot.py lowers with return_tuple=True: the output is always a tuple.
+        lit.to_tuple()
+            .map_err(|e| Error::runtime(format!("untuple result: {e:?}")))
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn nearest(
+        &self,
+        block: Block<'_>,
+        centers: &Matrix,
+        out_idx: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> Result<()> {
+        debug_assert_eq!(out_idx.len(), block.n);
+        debug_assert_eq!(out_d2.len(), block.n);
+        if centers.rows == 0 || block.n == 0 {
+            out_idx.fill(u32::MAX);
+            out_d2.fill(f32::INFINITY);
+            return Ok(());
+        }
+        if block.d != self.manifest.dim {
+            return Err(Error::shape(format!(
+                "xla backend compiled for d={}, got d={}",
+                self.manifest.dim, block.d
+            )));
+        }
+        // Blocks larger than the biggest compiled bucket run as several
+        // bucket-sized executions.
+        if let Some(maxb) = self.max_block_bucket(EntryKind::DpAssign, centers.rows) {
+            if block.n > maxb {
+                let mut lo = 0;
+                while lo < block.n {
+                    let hi = (lo + maxb).min(block.n);
+                    let sub = Block {
+                        data: &block.data[lo * block.d..hi * block.d],
+                        n: hi - lo,
+                        d: block.d,
+                    };
+                    self.nearest(sub, centers, &mut out_idx[lo..hi], &mut out_d2[lo..hi])?;
+                    lo = hi;
+                }
+                return Ok(());
+            }
+        }
+        let entry = self.pick(EntryKind::DpAssign, block.n, centers.rows)?;
+        let x = literal::f32_matrix_padded(block.data, block.n, block.d, entry.b, 0.0)?;
+        let c = literal::matrix_literal_padded(centers, entry.k, PAD_SENTINEL)?;
+        let out = self.execute(&entry, &[x, c])?;
+        if out.len() != 2 {
+            return Err(Error::runtime(format!("dp_assign returned {} outputs", out.len())));
+        }
+        let idx = literal::to_i32_vec(&out[0])?;
+        let d2 = literal::to_f32_vec(&out[1])?;
+        for i in 0..block.n {
+            out_idx[i] = idx[i] as u32;
+            out_d2[i] = d2[i].max(0.0);
+        }
+        Ok(())
+    }
+
+    fn suffstats(
+        &self,
+        block: Block<'_>,
+        idx: &[u32],
+        sums: &mut Matrix,
+        counts: &mut [u64],
+    ) -> Result<()> {
+        debug_assert_eq!(idx.len(), block.n);
+        if block.n == 0 || sums.rows == 0 {
+            return Ok(());
+        }
+        let k = sums.rows;
+        if let Some(maxb) = self.max_block_bucket(EntryKind::SuffStats, k) {
+            if block.n > maxb {
+                let mut lo = 0;
+                while lo < block.n {
+                    let hi = (lo + maxb).min(block.n);
+                    let sub = Block {
+                        data: &block.data[lo * block.d..hi * block.d],
+                        n: hi - lo,
+                        d: block.d,
+                    };
+                    self.suffstats(sub, &idx[lo..hi], sums, counts)?;
+                    lo = hi;
+                }
+                return Ok(());
+            }
+        }
+        let entry = self.pick(EntryKind::SuffStats, block.n, k)?;
+        let x = literal::f32_matrix_padded(block.data, block.n, block.d, entry.b, 0.0)?;
+        // Remap out-of-range (unassigned) ids and pad rows to entry.k, which
+        // one-hot-encodes to a zero row in the kernel.
+        let clean: Vec<u32> =
+            idx.iter().map(|&a| if (a as usize) < k { a } else { entry.k as u32 }).collect();
+        let z = literal::i32_vec_padded(&clean, entry.b, entry.k as i32)?;
+        let out = self.execute(&entry, &[x, z])?;
+        if out.len() != 2 {
+            return Err(Error::runtime(format!("suffstats returned {} outputs", out.len())));
+        }
+        let s = literal::to_f32_vec(&out[0])?;
+        let c = literal::to_f32_vec(&out[1])?;
+        for kk in 0..k {
+            counts[kk] += c[kk] as u64;
+            let row = sums.row_mut(kk);
+            for (dst, src) in row.iter_mut().zip(&s[kk * block.d..(kk + 1) * block.d]) {
+                *dst += src;
+            }
+        }
+        Ok(())
+    }
+
+    fn bp_descend(
+        &self,
+        block: Block<'_>,
+        features: &Matrix,
+        _sweeps: usize,
+    ) -> Result<BpDescendOut> {
+        let k = features.rows;
+        if k == 0 || block.n == 0 {
+            // No features: residual = x.
+            let mut r2 = vec![0.0f32; block.n];
+            for i in 0..block.n {
+                r2[i] = crate::linalg::norm2(block.row(i));
+            }
+            return Ok(BpDescendOut { z: vec![], residuals: block.data.to_vec(), r2 });
+        }
+        if let Some(maxb) = self.max_block_bucket(EntryKind::BpDescend, k) {
+            if block.n > maxb {
+                let mut out = BpDescendOut {
+                    z: Vec::with_capacity(block.n * k),
+                    residuals: Vec::with_capacity(block.n * block.d),
+                    r2: Vec::with_capacity(block.n),
+                };
+                let mut lo = 0;
+                while lo < block.n {
+                    let hi = (lo + maxb).min(block.n);
+                    let sub = Block {
+                        data: &block.data[lo * block.d..hi * block.d],
+                        n: hi - lo,
+                        d: block.d,
+                    };
+                    let part = self.bp_descend(sub, features, _sweeps)?;
+                    out.z.extend(part.z);
+                    out.residuals.extend(part.residuals);
+                    out.r2.extend(part.r2);
+                    lo = hi;
+                }
+                return Ok(out);
+            }
+        }
+        let entry = self.pick(EntryKind::BpDescend, block.n, k)?;
+        let x = literal::f32_matrix_padded(block.data, block.n, block.d, entry.b, 0.0)?;
+        let f = literal::matrix_literal_padded(features, entry.k, 0.0)?;
+        let out = self.execute(&entry, &[x, f])?;
+        if out.len() != 3 {
+            return Err(Error::runtime(format!("bp_descend returned {} outputs", out.len())));
+        }
+        let zf = literal::to_f32_vec(&out[0])?;
+        let rf = literal::to_f32_vec(&out[1])?;
+        let r2f = literal::to_f32_vec(&out[2])?;
+        let mut z = vec![false; block.n * k];
+        for i in 0..block.n {
+            for j in 0..k {
+                z[i * k + j] = zf[i * entry.k + j] > 0.5;
+            }
+        }
+        let mut residuals = vec![0.0f32; block.n * block.d];
+        for i in 0..block.n {
+            residuals[i * block.d..(i + 1) * block.d]
+                .copy_from_slice(&rf[i * block.d..(i + 1) * block.d]);
+        }
+        Ok(BpDescendOut { z, residuals, r2: r2f[..block.n].iter().map(|&v| v.max(0.0)).collect() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests that need no artifacts; end-to-end XLA tests live in
+    //! `rust/tests/xla_runtime.rs` and skip when artifacts are missing.
+    use super::*;
+
+    #[test]
+    fn load_fails_cleanly_without_artifacts() {
+        let msg = match XlaBackend::load(Path::new("/nonexistent-artifacts")) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("load should fail without artifacts"),
+        };
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,225 @@
+//! First-iteration simulator (§4.1).
+//!
+//! Reproduces the paper's MATLAB experiment: simulate one complete pass of
+//! each OCC algorithm (where most clusters/features are created and the
+//! most coordination happens), with `P·b` points per bulk-synchronous
+//! epoch, and count `M_N` (proposals) and `k_N` (acceptances). The paper's
+//! Figures 3 and 6 plot the empirical mean of `M_N − k_N` over 400 repeats
+//! against N for several `P·b` — flat in N and bounded by `P·b` (Thm 3.3).
+//!
+//! The simulator is single-threaded: only epoch *semantics* matter for
+//! these counts (the thread pool would produce byte-identical numbers, see
+//! the determinism tests), so sweeps run at full speed.
+//!
+//! [`modeled`] extends the simulator with *measured per-block timings* for
+//! the Fig 4 scaling experiment on this single-core host.
+
+pub mod modeled;
+
+use crate::algorithms::bpmeans::descend_z;
+use crate::algorithms::ofl::ofl_draws;
+use crate::coordinator::validator::{
+    bp_validate, dp_validate, ofl_validate, BpProposal, DpProposal, OflProposal,
+};
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+
+/// Proposal/acceptance counts of one simulated first iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimResult {
+    /// `M_N`: points proposed to the master.
+    pub proposed: usize,
+    /// `k_N`: proposals accepted as new clusters/features.
+    pub accepted: usize,
+    /// Points the master *processed* (== proposed; Thm 3.3's bound is on
+    /// this quantity).
+    pub master_points: usize,
+}
+
+impl SimResult {
+    /// `M_N − k_N`, the rejection count plotted in Fig 3/6.
+    pub fn rejections(&self) -> usize {
+        self.proposed - self.accepted
+    }
+}
+
+/// Simulate the first pass of OCC DP-means with `pb` points per epoch.
+pub fn sim_dpmeans(data: &Dataset, lambda: f64, pb: usize) -> SimResult {
+    let n = data.len();
+    let lambda2 = (lambda * lambda) as f32;
+    let mut centers = Matrix::zeros(0, data.dim());
+    let mut result = SimResult::default();
+    let mut t = 0;
+    while t * pb < n {
+        let lo = t * pb;
+        let hi = ((t + 1) * pb).min(n);
+        let base = centers.rows;
+        // Workers: evaluate against C^{t-1} (centers before this epoch).
+        let mut proposals = Vec::new();
+        for i in lo..hi {
+            let x = data.point(i);
+            let mut far = true;
+            for k in 0..base {
+                if crate::linalg::sqdist(x, centers.row(k)) <= lambda2 {
+                    far = false;
+                    break;
+                }
+            }
+            if far {
+                proposals.push(DpProposal { idx: i as u32, center: x.to_vec() });
+            }
+        }
+        let outcome = dp_validate(&mut centers, base, &proposals, lambda2);
+        result.proposed += proposals.len();
+        result.master_points += proposals.len();
+        result.accepted += outcome.accepted;
+        t += 1;
+    }
+    result
+}
+
+/// Simulate the (single-pass) OCC OFL with `pb` points per epoch.
+pub fn sim_ofl(data: &Dataset, lambda: f64, pb: usize, seed: u64) -> SimResult {
+    let n = data.len();
+    let lambda2 = lambda * lambda;
+    let draws = ofl_draws(n, seed);
+    let mut centers = Matrix::zeros(0, data.dim());
+    let mut result = SimResult::default();
+    let mut t = 0;
+    while t * pb < n {
+        let lo = t * pb;
+        let hi = ((t + 1) * pb).min(n);
+        let base = centers.rows;
+        let mut proposals = Vec::new();
+        for i in lo..hi {
+            let x = data.point(i);
+            let mut d2_prev = f32::INFINITY;
+            let mut idx_prev = u32::MAX;
+            for k in 0..base {
+                let d = crate::linalg::sqdist(x, centers.row(k));
+                if d < d2_prev {
+                    d2_prev = d;
+                    idx_prev = k as u32;
+                }
+            }
+            let p_send = if d2_prev.is_infinite() { 1.0 } else { (d2_prev as f64 / lambda2).min(1.0) };
+            if draws[i] < p_send {
+                proposals.push(OflProposal { idx: i as u32, center: x.to_vec(), d2_prev, idx_prev });
+            }
+        }
+        let outcome = ofl_validate(&mut centers, base, &proposals, lambda2, |i| draws[i as usize]);
+        result.proposed += proposals.len();
+        result.master_points += proposals.len();
+        result.accepted += outcome.accepted;
+        t += 1;
+    }
+    result
+}
+
+/// Simulate the first pass of OCC BP-means with `pb` points per epoch.
+/// Starts from the Alg-7 initial feature (grand mean).
+pub fn sim_bpmeans(data: &Dataset, lambda: f64, pb: usize) -> SimResult {
+    let n = data.len();
+    let d = data.dim();
+    let lambda2 = (lambda * lambda) as f32;
+    let sweeps = 2;
+    let mut features = Matrix::zeros(0, d);
+    if n > 0 {
+        let mut mean = vec![0.0f32; d];
+        for i in 0..n {
+            crate::linalg::axpy(1.0, data.point(i), &mut mean);
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f32;
+        }
+        features.push_row(&mean);
+    }
+    let mut result = SimResult::default();
+    let mut residual = vec![0.0f32; d];
+    let mut t = 0;
+    while t * pb < n {
+        let lo = t * pb;
+        let hi = ((t + 1) * pb).min(n);
+        let base = features.rows;
+        let snapshot = features.clone();
+        let mut proposals = Vec::new();
+        for i in lo..hi {
+            let x = data.point(i);
+            let mut z = vec![false; snapshot.rows];
+            let r2 = descend_z(x, &snapshot, &mut z, &mut residual, sweeps);
+            if r2 > lambda2 {
+                proposals.push(BpProposal { idx: i as u32, residual: residual.clone() });
+            }
+        }
+        let outcome = bp_validate(&mut features, base, &proposals, lambda2, sweeps);
+        result.proposed += proposals.len();
+        result.master_points += proposals.len();
+        result.accepted += outcome.accepted;
+        t += 1;
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{bp_features, dp_clusters, separable_clusters, GenConfig};
+
+    #[test]
+    fn dp_sim_rejections_bounded_by_pb_on_separable_data() {
+        // Thm 3.3 regime (App C.1): master points ≤ Pb + K_N exactly.
+        for seed in 0..5 {
+            let data =
+                separable_clusters(&GenConfig { n: 1024, dim: 16, theta: 1.0, seed });
+            let k_latent = data.distinct_components(1024).unwrap();
+            for &pb in &[16usize, 64, 256] {
+                let r = sim_dpmeans(&data, 1.0, pb);
+                assert!(
+                    r.master_points <= pb + k_latent,
+                    "seed={seed} pb={pb}: {} > {} + {k_latent}",
+                    r.master_points,
+                    pb
+                );
+                assert_eq!(r.accepted, k_latent, "separable ⇒ k == K_N");
+            }
+        }
+    }
+
+    #[test]
+    fn dp_sim_epoch_size_n_proposes_everything_far() {
+        // One epoch: every point is checked against the empty prior state,
+        // so all points are proposed; acceptance dedups.
+        let data = dp_clusters(&GenConfig { n: 64, dim: 16, theta: 1.0, seed: 1 });
+        let r = sim_dpmeans(&data, 1.0, 64);
+        assert_eq!(r.proposed, 64);
+        assert!(r.accepted <= 64);
+    }
+
+    #[test]
+    fn ofl_sim_counts_consistent() {
+        let data = dp_clusters(&GenConfig { n: 512, dim: 16, theta: 1.0, seed: 2 });
+        let r = sim_ofl(&data, 1.0, 64, 7);
+        assert!(r.accepted <= r.proposed);
+        assert!(r.proposed <= 512);
+        assert!(r.accepted >= 1);
+    }
+
+    #[test]
+    fn ofl_sim_matches_serial_centers() {
+        // The simulated distributed OFL must produce exactly as many
+        // facilities as the serial algorithm with the same draws (Thm 3.1).
+        let data = dp_clusters(&GenConfig { n: 300, dim: 16, theta: 1.0, seed: 3 });
+        let serial = crate::algorithms::ofl::serial_ofl(&data, 1.0, 11);
+        for &pb in &[16usize, 50, 300] {
+            let r = sim_ofl(&data, 1.0, pb, 11);
+            assert_eq!(r.accepted, serial.centers.rows, "pb={pb}");
+        }
+    }
+
+    #[test]
+    fn bp_sim_counts_consistent() {
+        let data = bp_features(&GenConfig { n: 256, dim: 16, theta: 1.0, seed: 4 });
+        let r = sim_bpmeans(&data, 1.0, 32);
+        assert!(r.accepted <= r.proposed);
+    }
+}

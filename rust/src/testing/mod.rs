@@ -1,0 +1,218 @@
+//! A miniature property-based testing framework (no `proptest` offline).
+//!
+//! Usage (`no_run` in rustdoc: doctest binaries miss the xla rpath):
+//!
+//! ```no_run
+//! use occml::testing::{Prop, Arbitrary};
+//! Prop::new("sum is commutative")
+//!     .cases(64)
+//!     .check(|g| {
+//!         let a = g.usize_in(0, 100);
+//!         let b = g.usize_in(0, 100);
+//!         if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//!     });
+//! ```
+//!
+//! On failure it reports the failing case's seed so the exact inputs can be
+//! replayed with `Prop::replay(seed, f)`. A size-ramping schedule makes early
+//! cases small (cheap shrink substitute: the smallest failing size is
+//! reported first).
+
+use crate::rng::Pcg64;
+
+/// Per-case value generator handed to properties.
+pub struct Gen {
+    rng: Pcg64,
+    /// Current size hint in [0, 1]; early cases are small.
+    pub size: f64,
+}
+
+impl Gen {
+    /// Underlying RNG (for custom generators).
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+    /// Uniform usize in [lo, hi] (inclusive), scaled by the size ramp so
+    /// early cases stay near `lo`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.next_below(span as u64 + 1) as usize
+    }
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+    /// Coin flip.
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    /// A vector of values from `f`.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+}
+
+/// Trait for types with a canonical generator.
+pub trait Arbitrary: Sized {
+    /// Generate one value.
+    fn arbitrary(g: &mut Gen) -> Self;
+}
+
+impl Arbitrary for f32 {
+    fn arbitrary(g: &mut Gen) -> Self {
+        g.f32_in(-100.0, 100.0)
+    }
+}
+
+impl Arbitrary for usize {
+    fn arbitrary(g: &mut Gen) -> Self {
+        g.usize_in(0, 1 << 16)
+    }
+}
+
+/// A named property check.
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    seed: u64,
+}
+
+impl Prop {
+    /// New property with default 100 cases.
+    pub fn new(name: &'static str) -> Self {
+        // Honor OCCML_PROP_SEED for reproducing CI failures.
+        let seed = std::env::var("OCCML_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA11CE);
+        Prop { name, cases: 100, seed }
+    }
+    /// Set the number of cases.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    /// Set the base seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Run the property; panics with seed + message on the first failure.
+    pub fn check(self, mut f: impl FnMut(&mut Gen) -> Result<(), String>) {
+        for case in 0..self.cases {
+            let case_seed = self
+                .seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(case as u64);
+            // Ramp sizes: first quarter tiny, growing to full size.
+            let size = ((case + 1) as f64 / (self.cases as f64 * 0.75)).min(1.0);
+            let mut g = Gen { rng: Pcg64::with_stream(case_seed, 0x7e57), size };
+            if let Err(msg) = f(&mut g) {
+                panic!(
+                    "property `{}` failed on case {case} (replay: Prop::replay({case_seed:#x}, f)):\n  {msg}",
+                    self.name
+                );
+            }
+        }
+    }
+
+    /// Re-run a single failing case by seed (full size).
+    pub fn replay(case_seed: u64, mut f: impl FnMut(&mut Gen) -> Result<(), String>) {
+        let mut g = Gen { rng: Pcg64::with_stream(case_seed, 0x7e57), size: 1.0 };
+        if let Err(msg) = f(&mut g) {
+            panic!("replayed case {case_seed:#x} failed:\n  {msg}");
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol && !(x.is_nan() && y.is_nan()) {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new("add commutes").cases(50).check(|g| {
+            let a = g.usize_in(0, 1000);
+            let b = g.usize_in(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_seed() {
+        Prop::new("always fails").cases(5).check(|_| Err("boom".into()));
+    }
+
+    #[test]
+    fn size_ramp_starts_small() {
+        let mut max_early = 0usize;
+        let mut saw_large = false;
+        let collected = std::cell::RefCell::new(Vec::new());
+        Prop::new("sizes").cases(100).check(|g| {
+            collected.borrow_mut().push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let sizes = collected.into_inner();
+        for &s in &sizes[..10] {
+            max_early = max_early.max(s);
+        }
+        for &s in &sizes[50..] {
+            if s > 500 {
+                saw_large = true;
+            }
+        }
+        assert!(max_early <= 200, "early sizes too big: {max_early}");
+        assert!(saw_large, "never generated large cases");
+    }
+
+    #[test]
+    fn allclose_checks() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-5, 1e-5).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-5).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first = Vec::new();
+        Prop::new("det").cases(10).seed(99).check(|g| {
+            first.push(g.usize_in(0, 1 << 20));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        Prop::new("det").cases(10).seed(99).check(|g| {
+            second.push(g.usize_in(0, 1 << 20));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,132 @@
+//! CLI + config integration: the `occd` binary surface.
+
+use occml::cli::{App, Command, Dispatch};
+use occml::config::{toml, Algo, BackendKind, DataSource, RunConfig};
+
+#[test]
+fn full_config_file_roundtrip() {
+    let text = r#"
+        # occml run config — exercised by cli_config.rs
+        [run]
+        algo = "bpmeans"
+        lambda = 1.5
+        procs = 6
+        block = 128
+        iterations = 4
+        bootstrap_div = 8
+        backend = "native"
+        artifacts_dir = "artifacts"
+        seed = 77
+        metrics = "/tmp/occml-metrics.jsonl"
+
+        [data]
+        source = "bp"
+        n = 2048
+        dim = 32
+        theta = 0.5
+    "#;
+    let cfg = RunConfig::from_doc(&toml::parse(text).unwrap()).unwrap();
+    assert_eq!(cfg.algo, Algo::BpMeans);
+    assert_eq!(cfg.lambda, 1.5);
+    assert_eq!(cfg.procs, 6);
+    assert_eq!(cfg.block, 128);
+    assert_eq!(cfg.iterations, 4);
+    assert_eq!(cfg.bootstrap_div, 8);
+    assert_eq!(cfg.backend, BackendKind::Native);
+    assert_eq!(cfg.seed, 77);
+    assert_eq!(cfg.source, DataSource::BpFeatures);
+    assert_eq!(cfg.n, 2048);
+    assert_eq!(cfg.dim, 32);
+    assert_eq!(cfg.theta, 0.5);
+    assert!(cfg.metrics_path.is_some());
+}
+
+#[test]
+fn partial_config_keeps_defaults() {
+    let cfg = RunConfig::from_doc(&toml::parse("[run]\nalgo = \"ofl\"\n").unwrap()).unwrap();
+    assert_eq!(cfg.algo, Algo::Ofl);
+    let d = RunConfig::default();
+    assert_eq!(cfg.procs, d.procs);
+    assert_eq!(cfg.block, d.block);
+    assert_eq!(cfg.lambda, d.lambda);
+}
+
+#[test]
+fn app_dispatch_behaves_like_occd() {
+    // Mirror the occd app surface enough to validate flag handling.
+    let app = App::new("occd", "test").command(
+        Command::new("run", "run")
+            .flag("algo", "algorithm", Some("dpmeans"))
+            .flag("lambda", "threshold", Some("1.0"))
+            .flag("procs", "P", Some("4"))
+            .switch("quiet", "quiet"),
+    );
+    let argv: Vec<String> =
+        ["run", "--algo=ofl", "--lambda", "2.5", "--quiet"].iter().map(|s| s.to_string()).collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(cmd, p) => {
+            assert_eq!(cmd.name, "run");
+            assert_eq!(p.get("algo"), Some("ofl"));
+            assert_eq!(p.get_parse::<f64>("lambda").unwrap(), Some(2.5));
+            assert!(p.switch("quiet"));
+        }
+        _ => panic!("expected run dispatch"),
+    }
+}
+
+#[test]
+fn run_config_validation_cascades_through_doc() {
+    for bad in [
+        "[run]\nlambda = 0.0\n",
+        "[run]\nprocs = 0\n",
+        "[run]\nblock = 0\n",
+        "[run]\nbackend = \"cuda\"\n",
+        "[data]\nsource = \"hdfs\"\n",
+    ] {
+        assert!(RunConfig::from_doc(&toml::parse(bad).unwrap()).is_err(), "{bad}");
+    }
+}
+
+#[test]
+fn shipped_configs_parse_and_validate() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("configs/ missing") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let cfg = RunConfig::from_doc(&toml::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        cfg.validate().unwrap();
+        seen += 1;
+    }
+    assert!(seen >= 3, "expected the three shipped configs, found {seen}");
+}
+
+#[test]
+fn metrics_jsonl_written_by_run() {
+    use occml::coordinator::driver;
+    use std::sync::Arc;
+    let mut path = std::env::temp_dir();
+    path.push(format!("occml-run-metrics-{}.jsonl", std::process::id()));
+    let cfg = RunConfig {
+        n: 128,
+        procs: 2,
+        block: 16,
+        iterations: 1,
+        metrics_path: Some(path.clone()),
+        ..RunConfig::default()
+    };
+    let data = Arc::new(driver::load_or_generate(&cfg).unwrap());
+    driver::run_with(&cfg, data, Arc::new(occml::runtime::native::NativeBackend::new())).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.lines().count() >= 1);
+    for line in text.lines() {
+        let j = occml::metrics::json::parse(line).unwrap();
+        assert!(j.get("epoch").is_some());
+        assert!(j.get("total_ms").is_some());
+    }
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,213 @@
+//! Property-based tests of coordinator invariants (our `testing` framework).
+
+use occml::config::{Algo, RunConfig};
+use occml::coordinator::{driver, Model};
+use occml::data::generators::{bp_features, dp_clusters, separable_clusters, GenConfig};
+use occml::runtime::native::NativeBackend;
+use occml::testing::Prop;
+use std::sync::Arc;
+
+fn run_cfg(algo: Algo, n: usize, procs: usize, block: usize, iters: usize, seed: u64) -> RunConfig {
+    RunConfig {
+        algo,
+        lambda: 1.0,
+        procs,
+        block,
+        iterations: iters,
+        bootstrap_div: 16,
+        seed,
+        n,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn prop_dp_every_point_within_lambda_of_created_center_set() {
+    // After phase 1 of any pass, every point is within λ of the center it
+    // referenced *at decision time*; since centers only get appended during
+    // a pass, every point is within λ of SOME created center before the
+    // recompute. We check the recorded creation-time invariant via the
+    // simulator (validator-identical code path).
+    Prop::new("dp coverage").cases(30).check(|g| {
+        let n = g.usize_in(16, 600).max(16);
+        let pb = g.usize_in(4, 128).max(4);
+        let seed = g.rng().next_u64();
+        let data = dp_clusters(&GenConfig { n, dim: 8, theta: 1.0, seed });
+        let r = occml::sim::sim_dpmeans(&data, 1.0, pb);
+        if r.accepted > r.proposed {
+            return Err(format!("accepted {} > proposed {}", r.accepted, r.proposed));
+        }
+        if r.accepted == 0 && n > 0 {
+            return Err("no clusters created on nonempty data".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_thm33_master_bound_on_separable_data() {
+    // Thm 3.3: E[master points] ≤ Pb + K_N. On separable data the bound
+    // holds surely, not just in expectation (App C.1 / Fig 6).
+    Prop::new("thm 3.3 bound").cases(25).check(|g| {
+        let n = g.usize_in(64, 1200).max(64);
+        let pb = *g.choose(&[16usize, 32, 64, 128, 256]);
+        let seed = g.rng().next_u64();
+        let data = separable_clusters(&GenConfig { n, dim: 8, theta: 1.0, seed });
+        let k_latent = data.distinct_components(n).unwrap();
+        let r = occml::sim::sim_dpmeans(&data, 1.0, pb);
+        if r.master_points > pb + k_latent {
+            return Err(format!(
+                "master saw {} > Pb({pb}) + K_N({k_latent}) [n={n}]",
+                r.master_points
+            ));
+        }
+        if r.accepted != k_latent {
+            return Err(format!("accepted {} != K_N {k_latent}", r.accepted));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dp_centers_pairwise_separated_after_creation() {
+    // DPValidate guarantees the *created* centers of a pass are pairwise
+    // > λ apart when restricted to the same epoch, and across epochs the
+    // worker check guarantees distance > λ to all earlier centers. So the
+    // whole created set is pairwise ≥ λ separated (strictly > except
+    // boundary ties).
+    Prop::new("dp separation").cases(20).check(|g| {
+        let n = g.usize_in(32, 400).max(32);
+        let pb = g.usize_in(8, 64).max(8);
+        let seed = g.rng().next_u64();
+        let data = dp_clusters(&GenConfig { n, dim: 8, theta: 1.0, seed });
+        // Reconstruct the created set with the simulator + replay logic.
+        let lambda2 = 1.0f32;
+        let mut centers = occml::linalg::Matrix::zeros(0, 8);
+        let mut t = 0;
+        while t * pb < n {
+            let lo = t * pb;
+            let hi = ((t + 1) * pb).min(n);
+            let base = centers.rows;
+            let mut proposals = Vec::new();
+            for i in lo..hi {
+                let mut covered = false;
+                for k in 0..base {
+                    if occml::linalg::sqdist(data.point(i), centers.row(k)) <= lambda2 {
+                        covered = true;
+                        break;
+                    }
+                }
+                if !covered {
+                    proposals.push(occml::coordinator::validator::DpProposal {
+                        idx: i as u32,
+                        center: data.point(i).to_vec(),
+                    });
+                }
+            }
+            occml::coordinator::validator::dp_validate(&mut centers, base, &proposals, lambda2);
+            t += 1;
+        }
+        for a in 0..centers.rows {
+            for b in 0..a {
+                let d2 = occml::linalg::sqdist(centers.row(a), centers.row(b));
+                if d2 < lambda2 {
+                    return Err(format!("centers {a},{b} at d²={d2} < λ²"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ofl_distributed_equals_serial_for_random_configs() {
+    Prop::new("ofl ≡ serial").cases(20).check(|g| {
+        let n = g.usize_in(16, 500).max(16);
+        let procs = g.usize_in(1, 8).max(1);
+        let block = g.usize_in(1, 64).max(1);
+        let seed = g.rng().next_u64();
+        let data = Arc::new(dp_clusters(&GenConfig { n, dim: 8, theta: 1.0, seed }));
+        let serial = occml::algorithms::ofl::serial_ofl(&data, 1.0, seed);
+        let cfg = RunConfig {
+            bootstrap_div: 0,
+            dim: 8,
+            ..run_cfg(Algo::Ofl, n, procs, block, 1, seed)
+        };
+        let out = driver::run_with(&cfg, data, Arc::new(NativeBackend::new()))
+            .map_err(|e| e.to_string())?;
+        let Model::Ofl(m) = &out.model else { return Err("wrong model".into()) };
+        if m.centers.data != serial.centers.data {
+            return Err(format!(
+                "facilities differ: {} vs {} (n={n} P={procs} b={block})",
+                m.centers.rows, serial.centers.rows
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bp_assignments_have_valid_shape_and_coverage() {
+    Prop::new("bp shapes").cases(12).check(|g| {
+        let n = g.usize_in(32, 300).max(32);
+        let procs = g.usize_in(1, 4).max(1);
+        let block = g.usize_in(8, 64).max(8);
+        let seed = g.rng().next_u64();
+        let data = Arc::new(bp_features(&GenConfig { n, dim: 8, theta: 1.0, seed }));
+        let cfg = RunConfig { dim: 8, ..run_cfg(Algo::BpMeans, n, procs, block, 2, seed) };
+        let out = driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new()))
+            .map_err(|e| e.to_string())?;
+        let Model::Bp(m) = &out.model else { return Err("wrong model".into()) };
+        if m.assignments.len() != n {
+            return Err("assignment count".into());
+        }
+        for (i, z) in m.assignments.iter().enumerate() {
+            if z.len() != m.features.rows {
+                return Err(format!("point {i}: z len {} != K {}", z.len(), m.features.rows));
+            }
+        }
+        // Objective is finite and ≥ λ²·K.
+        let j = out.summary.objective.unwrap();
+        if !j.is_finite() || j < m.features.rows as f64 - 1e-6 {
+            return Err(format!("objective {j} vs K {}", m.features.rows));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_metrics_accounting_consistent() {
+    // accepted + rejected == proposed per epoch; Σ accepted == created;
+    // centers monotone nondecreasing within a pass.
+    Prop::new("metrics accounting").cases(15).check(|g| {
+        let n = g.usize_in(32, 400).max(32);
+        let procs = g.usize_in(1, 6).max(1);
+        let block = g.usize_in(4, 64).max(4);
+        let seed = g.rng().next_u64();
+        let algo = *g.choose(&[Algo::DpMeans, Algo::Ofl, Algo::BpMeans]);
+        let data: Arc<_> = match algo {
+            Algo::BpMeans => Arc::new(bp_features(&GenConfig { n, dim: 8, theta: 1.0, seed })),
+            _ => Arc::new(dp_clusters(&GenConfig { n, dim: 8, theta: 1.0, seed })),
+        };
+        let cfg = RunConfig { dim: 8, ..run_cfg(algo, n, procs, block, 2, seed) };
+        let out = driver::run_with(&cfg, data, Arc::new(NativeBackend::new()))
+            .map_err(|e| e.to_string())?;
+        let mut last_centers = 0usize;
+        for e in &out.summary.epochs {
+            if e.epoch == usize::MAX {
+                continue; // recompute record
+            }
+            if e.accepted + e.rejected != e.proposed {
+                return Err(format!("epoch {}: {}+{} != {}", e.epoch, e.accepted, e.rejected, e.proposed));
+            }
+            if e.epoch == 0 {
+                last_centers = e.centers;
+            } else if e.centers < last_centers {
+                return Err("centers decreased within a pass".into());
+            } else {
+                last_centers = e.centers;
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,168 @@
+//! End-to-end tests of the XLA/PJRT backend against the AOT artifacts.
+//!
+//! These tests need `artifacts/manifest.json` (run `make artifacts`); when
+//! absent they print a notice and pass vacuously, so `cargo test` stays
+//! green on a fresh clone.
+
+use occml::data::generators::{bp_features, dp_clusters, GenConfig};
+use occml::linalg::Matrix;
+use occml::rng::Pcg64;
+use occml::runtime::native::NativeBackend;
+use occml::runtime::xla::XlaBackend;
+use occml::runtime::{Block, ComputeBackend};
+use std::path::Path;
+
+fn backend() -> Option<XlaBackend> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match XlaBackend::load(&dir) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("SKIP xla tests: {e}");
+            None
+        }
+    }
+}
+
+fn random_matrix(rng: &mut Pcg64, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.next_f32() * 4.0 - 2.0).collect())
+}
+
+#[test]
+fn xla_nearest_matches_native() {
+    let Some(xla) = backend() else { return };
+    let native = NativeBackend::new();
+    let mut rng = Pcg64::new(1);
+    let d = xla.manifest().dim;
+    for &(n, k) in &[(1usize, 1usize), (17, 5), (128, 33), (256, 64), (200, 60)] {
+        let pts = random_matrix(&mut rng, n, d);
+        let ctr = random_matrix(&mut rng, k, d);
+        let block = Block::of(&pts, 0..n);
+        let (mut xi, mut xd) = (vec![0u32; n], vec![0f32; n]);
+        let (mut ni, mut nd) = (vec![0u32; n], vec![0f32; n]);
+        xla.nearest(block, &ctr, &mut xi, &mut xd).unwrap();
+        native.nearest(block, &ctr, &mut ni, &mut nd).unwrap();
+        for i in 0..n {
+            assert!(
+                (xd[i] - nd[i]).abs() < 1e-3 * (1.0 + nd[i].abs()),
+                "n={n} k={k} i={i}: xla {} native {}",
+                xd[i],
+                nd[i]
+            );
+            // Indices may differ only on exact ties; check via distances.
+            let via_x = occml::linalg::sqdist(pts.row(i), ctr.row(xi[i] as usize));
+            assert!((via_x - nd[i]).abs() < 1e-3 * (1.0 + nd[i].abs()));
+        }
+    }
+}
+
+#[test]
+fn xla_nearest_empty_centers() {
+    let Some(xla) = backend() else { return };
+    let pts = Matrix::from_vec(3, xla.manifest().dim, vec![0.0; 3 * xla.manifest().dim]);
+    let ctr = Matrix::zeros(0, xla.manifest().dim);
+    let (mut i, mut d) = (vec![0u32; 3], vec![0f32; 3]);
+    xla.nearest(Block::of(&pts, 0..3), &ctr, &mut i, &mut d).unwrap();
+    assert!(i.iter().all(|&v| v == u32::MAX));
+    assert!(d.iter().all(|v| v.is_infinite()));
+}
+
+#[test]
+fn xla_suffstats_matches_native() {
+    let Some(xla) = backend() else { return };
+    let native = NativeBackend::new();
+    let mut rng = Pcg64::new(2);
+    let d = xla.manifest().dim;
+    for &(n, k) in &[(64usize, 5usize), (256, 16), (100, 3)] {
+        let pts = random_matrix(&mut rng, n, d);
+        let idx: Vec<u32> =
+            (0..n).map(|_| rng.next_below(k as u64 + 1) as u32).collect(); // includes k = unassigned
+        let block = Block::of(&pts, 0..n);
+        let mut xs = Matrix::zeros(k, d);
+        let mut xc = vec![0u64; k];
+        xla.suffstats(block, &idx, &mut xs, &mut xc).unwrap();
+        let mut ns = Matrix::zeros(k, d);
+        let mut nc = vec![0u64; k];
+        native.suffstats(block, &idx, &mut ns, &mut nc).unwrap();
+        assert_eq!(xc, nc, "n={n} k={k}");
+        occml::testing::assert_allclose(&xs.data, &ns.data, 1e-3, 1e-4).unwrap();
+    }
+}
+
+#[test]
+fn xla_bp_descend_matches_native() {
+    let Some(xla) = backend() else { return };
+    let native = NativeBackend::new();
+    let mut rng = Pcg64::new(3);
+    let d = xla.manifest().dim;
+    for &(n, k) in &[(32usize, 4usize), (128, 9), (256, 16)] {
+        let pts = random_matrix(&mut rng, n, d);
+        let feats = random_matrix(&mut rng, k, d);
+        let block = Block::of(&pts, 0..n);
+        let xout = xla.bp_descend(block, &feats, 2).unwrap();
+        let nout = native.bp_descend(block, &feats, 2).unwrap();
+        assert_eq!(xout.z, nout.z, "n={n} k={k} z mismatch");
+        occml::testing::assert_allclose(&xout.r2, &nout.r2, 1e-3, 1e-3).unwrap();
+        occml::testing::assert_allclose(&xout.residuals, &nout.residuals, 1e-3, 1e-3).unwrap();
+    }
+}
+
+#[test]
+fn xla_full_dpmeans_run_matches_native_run() {
+    let Some(_) = backend() else { return };
+    use occml::config::{Algo, BackendKind, RunConfig};
+    use occml::coordinator::driver;
+    use std::sync::Arc;
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let data = Arc::new(dp_clusters(&GenConfig { n: 600, dim: 16, theta: 1.0, seed: 9 }));
+    let cfg = RunConfig {
+        algo: Algo::DpMeans,
+        lambda: 2.0,
+        procs: 2,
+        block: 100,
+        iterations: 2,
+        artifacts_dir: dir,
+        backend: BackendKind::Xla,
+        ..RunConfig::default()
+    };
+    let xla_backend = driver::make_backend(&cfg).unwrap();
+    let out_x = driver::run_with(&cfg, data.clone(), xla_backend).unwrap();
+    let out_n =
+        driver::run_with(&cfg, data, Arc::new(occml::runtime::native::NativeBackend::new()))
+            .unwrap();
+    // Identical decisions ⇒ identical cluster counts and assignments.
+    assert_eq!(out_x.model.k(), out_n.model.k());
+    let (occml::coordinator::Model::Dp(mx), occml::coordinator::Model::Dp(mn)) =
+        (&out_x.model, &out_n.model)
+    else {
+        panic!()
+    };
+    assert_eq!(mx.assignments, mn.assignments);
+}
+
+#[test]
+fn xla_full_bpmeans_run_matches_native_run() {
+    let Some(_) = backend() else { return };
+    use occml::config::{Algo, BackendKind, RunConfig};
+    use occml::coordinator::driver;
+    use std::sync::Arc;
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let data = Arc::new(bp_features(&GenConfig { n: 400, dim: 16, theta: 1.0, seed: 10 }));
+    let cfg = RunConfig {
+        algo: Algo::BpMeans,
+        lambda: 2.0,
+        procs: 2,
+        block: 100,
+        iterations: 2,
+        artifacts_dir: dir,
+        backend: BackendKind::Xla,
+        ..RunConfig::default()
+    };
+    let xla_backend = driver::make_backend(&cfg).unwrap();
+    let out_x = driver::run_with(&cfg, data.clone(), xla_backend).unwrap();
+    let out_n =
+        driver::run_with(&cfg, data, Arc::new(occml::runtime::native::NativeBackend::new()))
+            .unwrap();
+    assert_eq!(out_x.model.k(), out_n.model.k());
+}
