@@ -1,0 +1,123 @@
+//! BSP vs pipelined scheduler: wall-clock on the fig3-style workloads.
+//!
+//! Runs each algorithm end to end on its §4 synthetic workload under both
+//! epoch schedulers and reports total wall-clock, the master-validation
+//! time that overlapped worker compute (`validate_overlap_ms` summed over
+//! epochs), and BP-means' speculative respins. Before reporting, the bench
+//! *asserts* the two schedulers produced bit-identical models — the
+//! speedup is only meaningful because the answer is unchanged.
+//!
+//! Defaults keep single-machine runtime in seconds; pass `--n=…`, `--pb=…`,
+//! `--procs=…`, `--reps=…` to scale up.
+
+use occml::benchlib::{fmt_duration, BenchArgs, Table};
+use occml::config::{Algo, DataSource, RunConfig, SchedulerKind};
+use occml::coordinator::{driver, Model};
+use occml::runtime::native::NativeBackend;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn models_identical(a: &Model, b: &Model) -> bool {
+    match (a, b) {
+        (Model::Dp(x), Model::Dp(y)) => {
+            x.centers.data == y.centers.data && x.assignments == y.assignments
+        }
+        (Model::Ofl(x), Model::Ofl(y)) => {
+            x.centers.data == y.centers.data
+                && x.assignments == y.assignments
+                && x.opened_by == y.opened_by
+        }
+        (Model::Bp(x), Model::Bp(y)) => {
+            x.features.data == y.features.data && x.assignments == y.assignments
+        }
+        _ => false,
+    }
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let n: usize = args.get_or("n", 16_384);
+    let pb: usize = args.get_or("pb", 1024);
+    let procs: usize = args.get_or("procs", 4);
+    let reps: usize = args.get_or("reps", 3);
+    let block = (pb / procs).max(1);
+
+    let experiments: &[(&str, Algo, DataSource, f64, usize)] = &[
+        ("dpmeans", Algo::DpMeans, DataSource::DpClusters, 2.0, 3),
+        ("ofl", Algo::Ofl, DataSource::DpClusters, 2.0, 1),
+        ("bpmeans", Algo::BpMeans, DataSource::BpFeatures, 1.0, 3),
+    ];
+
+    println!(
+        "\n=== scheduler comparison: N={n}, P={procs}, b={block} (Pb={}) — best of {reps} ===",
+        procs * block
+    );
+    let mut table = Table::new(&[
+        "algo",
+        "bsp",
+        "pipelined",
+        "speedup",
+        "overlap_ms",
+        "respins",
+        "identical",
+    ]);
+
+    for (name, algo, source, lambda, iterations) in experiments {
+        let base = RunConfig {
+            algo: *algo,
+            lambda: *lambda,
+            procs,
+            block,
+            iterations: *iterations,
+            bootstrap_div: if *algo == Algo::Ofl { 0 } else { 16 },
+            source: source.clone(),
+            n,
+            seed: 12,
+            ..RunConfig::default()
+        };
+        let data = Arc::new(driver::load_or_generate(&base).expect("generate"));
+
+        let run_best = |kind: SchedulerKind| {
+            let cfg = RunConfig { scheduler: kind, ..base.clone() };
+            let mut best: Option<driver::RunOutput> = None;
+            for _ in 0..reps {
+                let out = driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new()))
+                    .expect("run");
+                let better = match &best {
+                    None => true,
+                    Some(b) => out.summary.total_time < b.summary.total_time,
+                };
+                if better {
+                    best = Some(out);
+                }
+            }
+            best.expect("at least one rep")
+        };
+
+        let bsp = run_best(SchedulerKind::Bsp);
+        let pip = run_best(SchedulerKind::Pipelined);
+        let identical = models_identical(&bsp.model, &pip.model);
+        assert!(identical, "{name}: schedulers disagree — pipelining broke serializability");
+
+        let tb = bsp.summary.total_time;
+        let tp = pip.summary.total_time;
+        let overlap: Duration = pip.summary.total_overlap();
+        table.row(vec![
+            (*name).to_string(),
+            fmt_duration(tb),
+            fmt_duration(tp),
+            format!("{:.2}x", tb.as_secs_f64() / tp.as_secs_f64().max(1e-12)),
+            format!("{:.1}", overlap.as_secs_f64() * 1e3),
+            pip.summary.total_respins().to_string(),
+            identical.to_string(),
+        ]);
+    }
+    table.print();
+    let csv = "target/bench-results/schedulers.csv";
+    if table.write_csv(std::path::Path::new(csv)).is_ok() {
+        println!("csv: {csv}");
+    }
+    println!(
+        "(identical=true is asserted: both schedulers validate in the same Thm 3.1 serial order)"
+    );
+}

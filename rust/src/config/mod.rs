@@ -67,6 +67,42 @@ impl BackendKind {
     }
 }
 
+/// Which epoch-scheduling policy the coordinator uses.
+///
+/// Both policies produce bit-identical models (the pipelined scheduler
+/// preserves the Theorem 3.1 serial order exactly — see
+/// [`crate::coordinator::scheduler`]); they differ only in how much of the
+/// master's validation work overlaps worker compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Bulk-synchronous (the paper's Fig 5 structure): workers idle while
+    /// the master validates, and vice versa.
+    Bsp,
+    /// Software-pipelined: epoch `t+1`'s worker compute overlaps epoch `t`'s
+    /// master-side validation, with a bounded two-deep pipeline.
+    Pipelined,
+}
+
+impl SchedulerKind {
+    /// Parse a scheduler name.
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "bsp" | "barrier" => Ok(SchedulerKind::Bsp),
+            "pipelined" | "pipeline" => Ok(SchedulerKind::Pipelined),
+            other => {
+                Err(Error::config(format!("unknown scheduler `{other}` (bsp|pipelined)")))
+            }
+        }
+    }
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Bsp => "bsp",
+            SchedulerKind::Pipelined => "pipelined",
+        }
+    }
+}
+
 /// Data source for a run.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DataSource {
@@ -115,6 +151,8 @@ pub struct RunConfig {
     pub bootstrap_div: usize,
     /// Numeric backend for the hot path.
     pub backend: BackendKind,
+    /// Epoch scheduling policy (BSP barrier vs pipelined validation).
+    pub scheduler: SchedulerKind,
     /// Directory holding AOT artifacts (XLA backend).
     pub artifacts_dir: PathBuf,
     /// RNG seed.
@@ -141,6 +179,7 @@ impl Default for RunConfig {
             iterations: 3,
             bootstrap_div: 16,
             backend: BackendKind::Native,
+            scheduler: SchedulerKind::Bsp,
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 0,
             source: DataSource::DpClusters,
@@ -177,6 +216,9 @@ impl RunConfig {
         }
         if let Some(s) = doc.get_str("run.backend") {
             cfg.backend = BackendKind::parse(s)?;
+        }
+        if let Some(s) = doc.get_str("run.scheduler") {
+            cfg.scheduler = SchedulerKind::parse(s)?;
         }
         if let Some(s) = doc.get_str("run.artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(s);
@@ -238,6 +280,9 @@ mod tests {
         assert!(Algo::parse("kmeans").is_err());
         assert_eq!(BackendKind::parse("XLA").unwrap(), BackendKind::Xla);
         assert!(BackendKind::parse("gpu").is_err());
+        assert_eq!(SchedulerKind::parse("BSP").unwrap(), SchedulerKind::Bsp);
+        assert_eq!(SchedulerKind::parse("pipelined").unwrap(), SchedulerKind::Pipelined);
+        assert!(SchedulerKind::parse("speculative").is_err());
         assert_eq!(
             DataSource::parse("file:/tmp/a.occb").unwrap(),
             DataSource::File(PathBuf::from("/tmp/a.occb"))

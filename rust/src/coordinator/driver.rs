@@ -1,17 +1,23 @@
 //! Full OCC runs: Alg 3 (DP-means), Alg 4 (OFL), Alg 6 (BP-means).
 //!
-//! The driver owns the global state and the epoch loop; workers compute, the
-//! master validates (in point-index order — the Thm 3.1 serial order) and
-//! replicates state by handing the next epoch an updated snapshot.
+//! The driver owns the global state and the per-pass structure; the epoch
+//! loop itself is driven by a [`scheduler::Scheduler`] (BSP barrier or
+//! pipelined — see `cfg.scheduler`), which calls back into per-algorithm
+//! [`EpochAlgo`] hooks for job construction, merging, and validation.
+//! Workers compute, the master validates (in point-index order — the
+//! Thm 3.1 serial order) and replicates state by handing later epochs an
+//! updated snapshot.
 //!
 //! Epoch structure (Fig 5): epoch `t` covers the contiguous index range
 //! `[start + t·P·b, start + (t+1)·P·b)`; each worker gets a contiguous
 //! block of it. Because proposals are merged and validated by point index,
-//! the result is identical for every worker count `P` at fixed `P·b`.
+//! the result is identical for every worker count `P` at fixed `P·b` — and
+//! identical across schedulers (`rust/tests/scheduler_equivalence.rs`).
 
-use super::engine::{split_range, split_range_chunked, Job, JobOutput, WorkerPool};
+use super::engine::{split_range_chunked, Job, JobOutput, WorkerPool};
+use super::scheduler::{self, EpochAlgo, EpochCounts, Scheduler};
 use super::validator::{
-    bp_validate, dp_validate, ofl_validate, BpProposal, DpProposal, OflProposal,
+    bp_validate, dp_validate_sharded, ofl_validate_sharded, BpProposal, DpProposal, OflProposal,
 };
 use crate::algorithms::bpmeans::{descend_z, BpModel, RIDGE_EPS};
 use crate::algorithms::dpmeans::DpModel;
@@ -22,7 +28,8 @@ use crate::data::{generators, Dataset};
 use crate::error::{Error, Result};
 use crate::linalg::{blocked, cholesky, Matrix};
 use crate::metrics::{EpochRecord, MetricsSink, RunSummary, Stopwatch};
-use crate::runtime::{native::NativeBackend, xla::XlaBackend, ComputeBackend};
+use crate::runtime::{native::NativeBackend, xla::XlaBackend, Block, ComputeBackend};
+use std::ops::Range;
 use std::sync::Arc;
 
 /// The learned model, by algorithm.
@@ -110,9 +117,169 @@ fn bootstrap_size(cfg: &RunConfig, n: usize) -> usize {
     }
 }
 
+/// Contiguous non-empty epoch ranges covering `[start, n)` in `per_epoch`
+/// steps.
+fn epoch_ranges(start: usize, n: usize, per_epoch: usize) -> Vec<Range<usize>> {
+    assert!(per_epoch > 0, "points per epoch (P·b) must be ≥ 1");
+    let mut out = Vec::new();
+    let mut lo = start;
+    while lo < n {
+        let hi = (lo + per_epoch).min(n);
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+/// Patch per-point nearest-center outputs computed against the first
+/// `stale_rows` committed rows so they equal a fresh scan of the full
+/// committed set, bit for bit: query the delta rows and fold with the
+/// kernel's first-minimum tie-break (delta rows sit at strictly higher
+/// indices, so they win only on strictly smaller d²). See
+/// [`scheduler`](super::scheduler) for why this preserves Thm 3.1.
+fn patch_nearest(
+    data: &Dataset,
+    backend: &Arc<dyn ComputeBackend>,
+    centers: &Matrix,
+    stale_rows: usize,
+    outs: &mut [JobOutput],
+    ranges: &[Range<usize>],
+) -> Result<()> {
+    let committed = centers.rows;
+    debug_assert!(stale_rows < committed);
+    let d = centers.cols;
+    let delta = Matrix {
+        rows: committed - stale_rows,
+        cols: d,
+        data: centers.data[stale_rows * d..committed * d].to_vec(),
+    };
+    for (w, out) in outs.iter_mut().enumerate() {
+        let JobOutput::Nearest { idx, d2 } = out else {
+            return Err(Error::Coordinator("unexpected job output".into()));
+        };
+        let range = ranges[w].clone();
+        if range.is_empty() {
+            continue;
+        }
+        let n = range.len();
+        let mut di = vec![0u32; n];
+        let mut dd = vec![0.0f32; n];
+        backend.nearest(Block::of(&data.points, range), &delta, &mut di, &mut dd)?;
+        for off in 0..n {
+            if stale_rows > 0 && (d2[off] == 0.0 || dd[off] == 0.0) {
+                // A zero here may be the kernel clamping a
+                // cancellation-negative running best (it clamps per center
+                // tile), which erases the sub-zero ordering a single full
+                // scan would have seen across the stale/delta boundary.
+                // Re-query this one point against the full committed set —
+                // the exact BSP computation, tile geometry and clamping
+                // included. Only reachable when the point coincides with a
+                // center to within f32 cancellation error, so the re-query
+                // is rare and cheap.
+                let i = range.start + off;
+                let mut one_i = [u32::MAX; 1];
+                let mut one_d = [f32::INFINITY; 1];
+                backend.nearest(Block::of(&data.points, i..i + 1), centers, &mut one_i, &mut one_d)?;
+                idx[off] = one_i[0];
+                d2[off] = one_d[0];
+            } else if dd[off] < d2[off] {
+                d2[off] = dd[off];
+                idx[off] = (stale_rows as u32) + di[off];
+            }
+        }
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // OCC DP-means (Alg 3)
 // ---------------------------------------------------------------------------
+
+/// One DP-means pass's mutable state, driven by a scheduler.
+struct DpPass<'a> {
+    data: &'a Dataset,
+    backend: &'a Arc<dyn ComputeBackend>,
+    centers: &'a mut Matrix,
+    assignments: &'a mut [u32],
+    lambda2: f32,
+    shards: usize,
+    changed: bool,
+    created: usize,
+}
+
+impl EpochAlgo for DpPass<'_> {
+    fn snapshot(&self) -> Arc<Matrix> {
+        Arc::new(self.centers.clone())
+    }
+
+    fn committed_rows(&self) -> usize {
+        self.centers.rows
+    }
+
+    fn make_jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job> {
+        ranges
+            .iter()
+            .map(|r| Job::Nearest { range: r.clone(), centers: snap.clone() })
+            .collect()
+    }
+
+    fn can_patch(&self) -> bool {
+        true
+    }
+
+    fn patch(
+        &mut self,
+        outs: &mut [JobOutput],
+        ranges: &[Range<usize>],
+        stale_rows: usize,
+    ) -> Result<()> {
+        patch_nearest(self.data, self.backend, self.centers, stale_rows, outs, ranges)
+    }
+
+    fn validate(&mut self, outs: &[JobOutput], ranges: &[Range<usize>]) -> Result<EpochCounts> {
+        let base = self.centers.rows;
+        // Merge results by index; collect proposals (with their conflict
+        // key: the proposing point's nearest committed center) in index
+        // order.
+        let mut pairs: Vec<(DpProposal, u32)> = Vec::new();
+        for (w, out) in outs.iter().enumerate() {
+            let JobOutput::Nearest { idx, d2 } = out else {
+                return Err(Error::Coordinator("unexpected job output".into()));
+            };
+            for (off, i) in ranges[w].clone().enumerate() {
+                if d2[off] > self.lambda2 {
+                    pairs.push((
+                        DpProposal { idx: i as u32, center: self.data.point(i).to_vec() },
+                        idx[off],
+                    ));
+                } else if self.assignments[i] != idx[off] {
+                    self.assignments[i] = idx[off];
+                    self.changed = true;
+                }
+            }
+        }
+        pairs.sort_by_key(|(p, _)| p.idx);
+        let (proposals, keys): (Vec<DpProposal>, Vec<u32>) = pairs.into_iter().unzip();
+
+        // Validation at the master: sharded conflict pre-computation, then
+        // the serial point-index-order merge.
+        let outcome =
+            dp_validate_sharded(self.centers, base, &proposals, &keys, self.lambda2, self.shards);
+        for (i, c) in &outcome.resolved {
+            if self.assignments[*i as usize] != *c {
+                self.assignments[*i as usize] = *c;
+                self.changed = true;
+            }
+        }
+        self.created += outcome.accepted;
+        Ok(EpochCounts {
+            proposed: proposals.len(),
+            accepted: outcome.accepted,
+            rejected: outcome.rejected,
+            state_rows: self.centers.rows,
+        })
+    }
+}
 
 /// Distributed DP-means.
 pub fn run_dpmeans(
@@ -124,7 +291,8 @@ pub fn run_dpmeans(
     let n = data.len();
     let d = data.dim();
     let lambda2 = (cfg.lambda * cfg.lambda) as f32;
-    let pool = WorkerPool::spawn(data.clone(), backend, cfg.procs);
+    let pool = WorkerPool::spawn(data.clone(), backend.clone(), cfg.procs);
+    let sched = scheduler::make(cfg.scheduler);
     let total = Stopwatch::start();
 
     let mut centers = Matrix::zeros(0, d);
@@ -152,72 +320,23 @@ pub fn run_dpmeans(
     for pass in 0..cfg.iterations {
         iterations += 1;
         let start = if pass == 0 { boot_n } else { 0 };
-        let mut changed = boot_n > 0 && pass == 0; // bootstrap assigned points
-        let mut created = if pass == 0 { centers.rows } else { 0 };
+        let changed0 = boot_n > 0 && pass == 0; // bootstrap assigned points
+        let created0 = if pass == 0 { centers.rows } else { 0 };
 
-        let per_epoch = cfg.points_per_epoch();
-        let num_epochs = (n - start).div_ceil(per_epoch).max(1);
-        for t in 0..num_epochs {
-            let epoch_sw = Stopwatch::start();
-            let lo = start + t * per_epoch;
-            let hi = (lo + per_epoch).min(n);
-            if lo >= hi {
-                continue;
-            }
-            let snapshot = Arc::new(centers.clone());
-            let base = snapshot.rows;
-            let ranges = split_range(lo..hi, cfg.procs);
-            let jobs: Vec<Job> = ranges
-                .iter()
-                .map(|r| Job::Nearest { range: r.clone(), centers: snapshot.clone() })
-                .collect();
-            let (outs, worker_time) = pool.scatter_gather(jobs)?;
-
-            // Merge results by index; collect proposals in index order.
-            let mut proposals = Vec::new();
-            for (w, out) in outs.iter().enumerate() {
-                let JobOutput::Nearest { idx, d2 } = out else {
-                    return Err(Error::Coordinator("unexpected job output".into()));
-                };
-                for (off, i) in ranges[w].clone().enumerate() {
-                    if d2[off] > lambda2 {
-                        proposals.push(DpProposal { idx: i as u32, center: data.point(i).to_vec() });
-                    } else if assignments[i] != idx[off] {
-                        assignments[i] = idx[off];
-                        changed = true;
-                    }
-                }
-            }
-            proposals.sort_by_key(|p| p.idx);
-
-            // Serial validation at the master.
-            let master_sw = Stopwatch::start();
-            let outcome = dp_validate(&mut centers, base, &proposals, lambda2);
-            for (i, c) in &outcome.resolved {
-                if assignments[*i as usize] != *c {
-                    assignments[*i as usize] = *c;
-                    changed = true;
-                }
-            }
-            created += outcome.accepted;
-            let master_time = master_sw.elapsed();
-
-            let rec = EpochRecord {
-                iteration: pass,
-                epoch: t,
-                points: hi - lo,
-                proposed: proposals.len(),
-                accepted: outcome.accepted,
-                rejected: outcome.rejected,
-                centers: centers.rows,
-                worker_time,
-                master_time,
-                total_time: epoch_sw.elapsed(),
-            };
-            sink.emit(&rec);
-            epochs_log.push(rec);
-        }
-        created_per_pass.push(created);
+        let epochs = epoch_ranges(start, n, cfg.points_per_epoch());
+        let mut st = DpPass {
+            data: &data,
+            backend: &backend,
+            centers: &mut centers,
+            assignments: &mut assignments,
+            lambda2,
+            shards: cfg.procs,
+            changed: changed0,
+            created: created0,
+        };
+        sched.run_pass(&pool, &mut st, &epochs, pass, sink, &mut epochs_log)?;
+        let changed = st.changed;
+        created_per_pass.push(st.created);
 
         // Phase 2: recompute centers as means (parallel suffstats).
         let recompute_sw = Stopwatch::start();
@@ -287,6 +406,102 @@ pub fn run_dpmeans(
 // OCC OFL (Alg 4)
 // ---------------------------------------------------------------------------
 
+/// The OFL single pass's mutable state, driven by a scheduler.
+struct OflPass<'a> {
+    data: &'a Dataset,
+    backend: &'a Arc<dyn ComputeBackend>,
+    centers: &'a mut Matrix,
+    assignments: &'a mut [u32],
+    opened_by: &'a mut Vec<u32>,
+    draws: &'a [f64],
+    lambda2: f64,
+    shards: usize,
+}
+
+impl EpochAlgo for OflPass<'_> {
+    fn snapshot(&self) -> Arc<Matrix> {
+        Arc::new(self.centers.clone())
+    }
+
+    fn committed_rows(&self) -> usize {
+        self.centers.rows
+    }
+
+    fn make_jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job> {
+        ranges
+            .iter()
+            .map(|r| Job::Nearest { range: r.clone(), centers: snap.clone() })
+            .collect()
+    }
+
+    fn can_patch(&self) -> bool {
+        true
+    }
+
+    fn patch(
+        &mut self,
+        outs: &mut [JobOutput],
+        ranges: &[Range<usize>],
+        stale_rows: usize,
+    ) -> Result<()> {
+        patch_nearest(self.data, self.backend, self.centers, stale_rows, outs, ranges)
+    }
+
+    fn validate(&mut self, outs: &[JobOutput], ranges: &[Range<usize>]) -> Result<EpochCounts> {
+        let base = self.centers.rows;
+        let mut pairs: Vec<(OflProposal, u32)> = Vec::new();
+        for (w, out) in outs.iter().enumerate() {
+            let JobOutput::Nearest { idx, d2 } = out else {
+                return Err(Error::Coordinator("unexpected job output".into()));
+            };
+            for (off, i) in ranges[w].clone().enumerate() {
+                let d2_prev = if base == 0 { f32::INFINITY } else { d2[off] };
+                let p_send = if d2_prev.is_infinite() {
+                    1.0
+                } else {
+                    (d2_prev as f64 / self.lambda2).min(1.0)
+                };
+                if self.draws[i] < p_send {
+                    pairs.push((
+                        OflProposal {
+                            idx: i as u32,
+                            center: self.data.point(i).to_vec(),
+                            d2_prev,
+                            idx_prev: idx[off],
+                        },
+                        idx[off],
+                    ));
+                } else {
+                    self.assignments[i] = idx[off];
+                }
+            }
+        }
+        pairs.sort_by_key(|(p, _)| p.idx);
+        let (proposals, keys): (Vec<OflProposal>, Vec<u32>) = pairs.into_iter().unzip();
+
+        let draws = self.draws;
+        let outcome = ofl_validate_sharded(
+            self.centers,
+            base,
+            &proposals,
+            &keys,
+            self.lambda2,
+            |i| draws[i as usize],
+            self.shards,
+        );
+        for (i, c) in &outcome.resolved {
+            self.assignments[*i as usize] = *c;
+        }
+        self.opened_by.extend_from_slice(&outcome.opened);
+        Ok(EpochCounts {
+            proposed: proposals.len(),
+            accepted: outcome.accepted,
+            rejected: outcome.rejected,
+            state_rows: self.centers.rows,
+        })
+    }
+}
+
 /// Distributed online facility location. Single pass, no bootstrap (§4.2);
 /// stochastic proposals and validation share per-point uniform draws with
 /// the serial algorithm, making the returned facilities bit-identical to
@@ -300,7 +515,8 @@ pub fn run_ofl(
     let n = data.len();
     let d = data.dim();
     let lambda2 = cfg.lambda * cfg.lambda;
-    let pool = WorkerPool::spawn(data.clone(), backend, cfg.procs);
+    let pool = WorkerPool::spawn(data.clone(), backend.clone(), cfg.procs);
+    let sched = scheduler::make(cfg.scheduler);
     let total = Stopwatch::start();
 
     let draws = ofl_draws(n, cfg.seed);
@@ -309,70 +525,18 @@ pub fn run_ofl(
     let mut opened_by = Vec::new();
     let mut epochs_log = Vec::new();
 
-    let per_epoch = cfg.points_per_epoch();
-    let num_epochs = n.div_ceil(per_epoch).max(1);
-    for t in 0..num_epochs {
-        let epoch_sw = Stopwatch::start();
-        let lo = t * per_epoch;
-        let hi = (lo + per_epoch).min(n);
-        if lo >= hi {
-            continue;
-        }
-        let snapshot = Arc::new(centers.clone());
-        let base = snapshot.rows;
-        let ranges = split_range(lo..hi, cfg.procs);
-        let jobs: Vec<Job> = ranges
-            .iter()
-            .map(|r| Job::Nearest { range: r.clone(), centers: snapshot.clone() })
-            .collect();
-        let (outs, worker_time) = pool.scatter_gather(jobs)?;
-
-        let mut proposals = Vec::new();
-        for (w, out) in outs.iter().enumerate() {
-            let JobOutput::Nearest { idx, d2 } = out else {
-                return Err(Error::Coordinator("unexpected job output".into()));
-            };
-            for (off, i) in ranges[w].clone().enumerate() {
-                let d2_prev = if base == 0 { f32::INFINITY } else { d2[off] };
-                let p_send =
-                    if d2_prev.is_infinite() { 1.0 } else { (d2_prev as f64 / lambda2).min(1.0) };
-                if draws[i] < p_send {
-                    proposals.push(OflProposal {
-                        idx: i as u32,
-                        center: data.point(i).to_vec(),
-                        d2_prev,
-                        idx_prev: idx[off],
-                    });
-                } else {
-                    assignments[i] = idx[off];
-                }
-            }
-        }
-        proposals.sort_by_key(|p| p.idx);
-
-        let master_sw = Stopwatch::start();
-        let outcome = ofl_validate(&mut centers, base, &proposals, lambda2, |i| draws[i as usize]);
-        for (i, c) in &outcome.resolved {
-            assignments[*i as usize] = *c;
-        }
-        opened_by.extend_from_slice(&outcome.opened);
-        let master_time = master_sw.elapsed();
-
-        let rec = EpochRecord {
-            iteration: 0,
-            epoch: t,
-            points: hi - lo,
-            proposed: proposals.len(),
-            accepted: outcome.accepted,
-            rejected: outcome.rejected,
-            centers: centers.rows,
-            worker_time,
-            master_time,
-            total_time: epoch_sw.elapsed(),
-        };
-        sink.emit(&rec);
-        epochs_log.push(rec);
-    }
+    let epochs = epoch_ranges(0, n, cfg.points_per_epoch());
+    let mut st = OflPass {
+        data: &data,
+        backend: &backend,
+        centers: &mut centers,
+        assignments: &mut assignments,
+        opened_by: &mut opened_by,
+        draws: &draws,
+        lambda2,
+        shards: cfg.procs,
+    };
+    sched.run_pass(&pool, &mut st, &epochs, 0, sink, &mut epochs_log)?;
 
     let model = OflModel { centers: centers.clone(), assignments, opened_by };
     let summary = RunSummary {
@@ -395,6 +559,107 @@ fn z_eq(a: &[bool], b: &[bool]) -> bool {
     (0..n).all(|i| a.get(i).copied().unwrap_or(false) == b.get(i).copied().unwrap_or(false))
 }
 
+/// One BP-means pass's mutable state, driven by a scheduler.
+///
+/// BP outputs cannot be patched after the fact (`can_patch` = false):
+/// coordinate descent over `F^{t}` is a joint optimization, not a per-row
+/// reduction of per-feature terms, so the pipelined scheduler redoes the
+/// epoch when speculation conflicts with newly-accepted features.
+struct BpPass<'a> {
+    data: &'a Dataset,
+    features: &'a mut Matrix,
+    assignments: &'a mut Vec<Vec<bool>>,
+    lambda2: f32,
+    sweeps: usize,
+    changed: bool,
+    created: usize,
+}
+
+impl EpochAlgo for BpPass<'_> {
+    fn snapshot(&self) -> Arc<Matrix> {
+        Arc::new(self.features.clone())
+    }
+
+    fn committed_rows(&self) -> usize {
+        self.features.rows
+    }
+
+    fn make_jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job> {
+        ranges
+            .iter()
+            .map(|r| Job::BpDescend {
+                range: r.clone(),
+                features: snap.clone(),
+                sweeps: self.sweeps,
+            })
+            .collect()
+    }
+
+    fn can_patch(&self) -> bool {
+        false
+    }
+
+    fn patch(
+        &mut self,
+        _outs: &mut [JobOutput],
+        _ranges: &[Range<usize>],
+        _stale_rows: usize,
+    ) -> Result<()> {
+        Err(Error::Coordinator("BP-means outputs cannot be patched".into()))
+    }
+
+    fn validate(&mut self, outs: &[JobOutput], ranges: &[Range<usize>]) -> Result<EpochCounts> {
+        let base = self.features.rows;
+        let d = self.features.cols;
+        let mut proposals = Vec::new();
+        let mut new_z: Vec<(usize, Vec<bool>)> = Vec::new();
+        for (w, out) in outs.iter().enumerate() {
+            let JobOutput::BpDescend { z, k, residuals, r2 } = out else {
+                return Err(Error::Coordinator("unexpected job output".into()));
+            };
+            for (off, i) in ranges[w].clone().enumerate() {
+                let zi = z[off * k..(off + 1) * k].to_vec();
+                if r2[off] > self.lambda2 {
+                    proposals.push(BpProposal {
+                        idx: i as u32,
+                        residual: residuals[off * d..(off + 1) * d].to_vec(),
+                    });
+                }
+                new_z.push((i, zi));
+            }
+        }
+        proposals.sort_by_key(|p| p.idx);
+
+        let outcome = bp_validate(self.features, base, &proposals, self.lambda2, self.sweeps);
+
+        // Apply worker assignments, then overlay validation resolutions.
+        for (i, zi) in new_z {
+            if !z_eq(&self.assignments[i], &zi) {
+                self.changed = true;
+            }
+            self.assignments[i] = zi;
+        }
+        for r in &outcome.resolved {
+            let zi = &mut self.assignments[r.idx as usize];
+            zi.resize(self.features.rows, false);
+            for &f in &r.extra_features {
+                zi[f as usize] = true;
+            }
+            if let Some(f) = r.own_feature {
+                zi[f as usize] = true;
+            }
+            self.changed = true;
+        }
+        self.created += outcome.accepted;
+        Ok(EpochCounts {
+            proposed: proposals.len(),
+            accepted: outcome.accepted,
+            rejected: outcome.rejected,
+            state_rows: self.features.rows,
+        })
+    }
+}
+
 /// Distributed BP-means.
 pub fn run_bpmeans(
     cfg: &RunConfig,
@@ -406,7 +671,8 @@ pub fn run_bpmeans(
     let d = data.dim();
     let lambda2 = (cfg.lambda * cfg.lambda) as f32;
     let sweeps = 2;
-    let pool = WorkerPool::spawn(data.clone(), backend, cfg.procs);
+    let pool = WorkerPool::spawn(data.clone(), backend.clone(), cfg.procs);
+    let sched = scheduler::make(cfg.scheduler);
     let total = Stopwatch::start();
 
     // Init (Alg 7): one feature = grand mean, z_i,0 = 1 for all i.
@@ -448,86 +714,22 @@ pub fn run_bpmeans(
     for pass in 0..cfg.iterations {
         iterations += 1;
         let start = if pass == 0 { boot_n } else { 0 };
-        let mut changed = boot_n > 0 && pass == 0;
-        let mut created = if pass == 0 { features.rows.saturating_sub(1) } else { 0 };
+        let changed0 = boot_n > 0 && pass == 0;
+        let created0 = if pass == 0 { features.rows.saturating_sub(1) } else { 0 };
 
-        let per_epoch = cfg.points_per_epoch();
-        let num_epochs = (n - start).div_ceil(per_epoch).max(1);
-        for t in 0..num_epochs {
-            let epoch_sw = Stopwatch::start();
-            let lo = start + t * per_epoch;
-            let hi = (lo + per_epoch).min(n);
-            if lo >= hi {
-                continue;
-            }
-            let snapshot = Arc::new(features.clone());
-            let base = snapshot.rows;
-            let ranges = split_range(lo..hi, cfg.procs);
-            let jobs: Vec<Job> = ranges
-                .iter()
-                .map(|r| Job::BpDescend { range: r.clone(), features: snapshot.clone(), sweeps })
-                .collect();
-            let (outs, worker_time) = pool.scatter_gather(jobs)?;
-
-            let mut proposals = Vec::new();
-            let mut new_z: Vec<(usize, Vec<bool>)> = Vec::new();
-            for (w, out) in outs.iter().enumerate() {
-                let JobOutput::BpDescend { z, k, residuals, r2 } = out else {
-                    return Err(Error::Coordinator("unexpected job output".into()));
-                };
-                for (off, i) in ranges[w].clone().enumerate() {
-                    let zi = z[off * k..(off + 1) * k].to_vec();
-                    if r2[off] > lambda2 {
-                        proposals.push(BpProposal {
-                            idx: i as u32,
-                            residual: residuals[off * d..(off + 1) * d].to_vec(),
-                        });
-                    }
-                    new_z.push((i, zi));
-                }
-            }
-            proposals.sort_by_key(|p| p.idx);
-
-            let master_sw = Stopwatch::start();
-            let outcome = bp_validate(&mut features, base, &proposals, lambda2, sweeps);
-            let master_time = master_sw.elapsed();
-
-            // Apply worker assignments, then overlay validation resolutions.
-            for (i, zi) in new_z {
-                if !z_eq(&assignments[i], &zi) {
-                    changed = true;
-                }
-                assignments[i] = zi;
-            }
-            for r in &outcome.resolved {
-                let zi = &mut assignments[r.idx as usize];
-                zi.resize(features.rows, false);
-                for &f in &r.extra_features {
-                    zi[f as usize] = true;
-                }
-                if let Some(f) = r.own_feature {
-                    zi[f as usize] = true;
-                }
-                changed = true;
-            }
-            created += outcome.accepted;
-
-            let rec = EpochRecord {
-                iteration: pass,
-                epoch: t,
-                points: hi - lo,
-                proposed: proposals.len(),
-                accepted: outcome.accepted,
-                rejected: outcome.rejected,
-                centers: features.rows,
-                worker_time,
-                master_time,
-                total_time: epoch_sw.elapsed(),
-            };
-            sink.emit(&rec);
-            epochs_log.push(rec);
-        }
-        created_per_pass.push(created);
+        let epochs = epoch_ranges(start, n, cfg.points_per_epoch());
+        let mut st = BpPass {
+            data: &data,
+            features: &mut features,
+            assignments: &mut assignments,
+            lambda2,
+            sweeps,
+            changed: changed0,
+            created: created0,
+        };
+        sched.run_pass(&pool, &mut st, &epochs, pass, sink, &mut epochs_log)?;
+        let changed = st.changed;
+        created_per_pass.push(st.created);
 
         // Phase 2: F ← (ZᵀZ + εI)⁻¹ ZᵀX via parallel partials.
         let recompute_sw = Stopwatch::start();
@@ -601,7 +803,7 @@ pub fn run_bpmeans(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::RunConfig;
+    use crate::config::{RunConfig, SchedulerKind};
     use crate::data::generators::{dp_clusters, GenConfig};
 
     fn cfg(algo: Algo, n: usize, procs: usize, block: usize) -> RunConfig {
@@ -665,5 +867,30 @@ mod tests {
         let data = Arc::new(dp_clusters(&GenConfig { n: 10, dim: 4, theta: 1.0, seed: 6 }));
         let out = run_with(&c, data, Arc::new(NativeBackend::new())).unwrap();
         assert!(out.model.k() >= 1);
+    }
+
+    #[test]
+    fn pipelined_end_to_end_all_algorithms() {
+        for algo in [Algo::DpMeans, Algo::Ofl, Algo::BpMeans] {
+            let c = RunConfig {
+                scheduler: SchedulerKind::Pipelined,
+                ..cfg(algo, 400, 4, 20)
+            };
+            let data = Arc::new(load_or_generate(&RunConfig {
+                source: if algo == Algo::BpMeans {
+                    DataSource::BpFeatures
+                } else {
+                    DataSource::DpClusters
+                },
+                ..c.clone()
+            })
+            .unwrap());
+            let out = run_with(&c, data, Arc::new(NativeBackend::new())).unwrap();
+            assert!(out.model.k() >= 1, "{algo:?}");
+            // Pipelined epochs report their queue depth; at least the
+            // non-final epochs of a multi-epoch pass ran two deep.
+            let deep = out.summary.epochs.iter().filter(|e| e.queue_depth == 2).count();
+            assert!(deep >= 1, "{algo:?}: no overlapped epochs recorded");
+        }
     }
 }

@@ -114,13 +114,23 @@ pub struct JobReply {
     pub busy: Duration,
 }
 
-/// Persistent BSP worker pool.
+/// Persistent worker pool.
+///
+/// The classic use is bulk-synchronous ([`WorkerPool::scatter_gather`]);
+/// schedulers that overlap master-side validation with worker compute use
+/// the split [`WorkerPool::scatter`] / [`WorkerPool::gather`] pair instead:
+/// scatter the next epoch, do master work, then gather. At most one wave may
+/// be outstanding — `gather` is the backpressure point that bounds the
+/// pipeline at two epochs in flight (one computing here, one being
+/// validated at the master).
 pub struct WorkerPool {
     senders: Vec<Sender<Job>>,
     replies: Receiver<JobReply>,
     handles: Vec<JoinHandle<()>>,
     /// Number of workers.
     pub procs: usize,
+    /// Waves scattered but not yet gathered (0 or 1).
+    in_flight: std::cell::Cell<usize>,
 }
 
 impl WorkerPool {
@@ -138,29 +148,54 @@ impl WorkerPool {
             let reply_tx = reply_tx.clone();
             handles.push(std::thread::spawn(move || worker_loop(w, data, backend, rx, reply_tx)));
         }
-        WorkerPool { senders, replies, handles, procs }
+        WorkerPool { senders, replies, handles, procs, in_flight: std::cell::Cell::new(0) }
     }
 
-    /// Scatter one job per worker (jobs.len() must equal procs) and gather
-    /// all replies. Returns replies sorted by worker id plus the maximum
-    /// per-worker busy time (the critical-path worker time for metrics).
-    pub fn scatter_gather(&self, jobs: Vec<Job>) -> Result<(Vec<JobOutput>, Duration)> {
+    /// Scatter one job per worker (jobs.len() must equal procs) without
+    /// waiting for results. At most one wave may be outstanding; a matching
+    /// [`WorkerPool::gather`] must run before the next scatter.
+    pub fn scatter(&self, jobs: Vec<Job>) -> Result<()> {
         assert_eq!(jobs.len(), self.procs);
+        assert_eq!(self.in_flight.get(), 0, "scatter with a wave still outstanding");
         for (tx, job) in self.senders.iter().zip(jobs) {
             tx.send(job)
                 .map_err(|_| Error::Coordinator("worker channel closed".into()))?;
         }
+        self.in_flight.set(1);
+        Ok(())
+    }
+
+    /// Gather the outstanding wave: one reply per worker, sorted by worker
+    /// id, plus the maximum per-worker busy time (the critical-path worker
+    /// time for metrics). On a worker failure the whole wave is still
+    /// drained before the error is returned, so the pool stays usable.
+    pub fn gather(&self) -> Result<(Vec<JobOutput>, Duration)> {
+        assert_eq!(self.in_flight.get(), 1, "gather without a scattered wave");
         let mut outputs: Vec<Option<JobOutput>> = (0..self.procs).map(|_| None).collect();
         let mut max_busy = Duration::ZERO;
+        let mut first_err = None;
         for _ in 0..self.procs {
-            let reply = self
-                .replies
-                .recv()
-                .map_err(|_| Error::Coordinator("reply channel closed".into()))?;
+            let Ok(reply) = self.replies.recv() else {
+                self.in_flight.set(0);
+                return Err(Error::Coordinator("reply channel closed".into()));
+            };
             max_busy = max_busy.max(reply.busy);
-            outputs[reply.worker] = Some(reply.output?);
+            match reply.output {
+                Ok(out) => outputs[reply.worker] = Some(out),
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        self.in_flight.set(0);
+        if let Some(e) = first_err {
+            return Err(e);
         }
         Ok((outputs.into_iter().map(|o| o.expect("worker replied")).collect(), max_busy))
+    }
+
+    /// Scatter one job per worker and gather all replies — the BSP barrier.
+    pub fn scatter_gather(&self, jobs: Vec<Job>) -> Result<(Vec<JobOutput>, Duration)> {
+        self.scatter(jobs)?;
+        self.gather()
     }
 }
 
@@ -463,5 +498,41 @@ mod tests {
     fn pool_shutdown_clean() {
         let (_, pool) = pool(10, 2);
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn split_scatter_gather_matches_barrier_call() {
+        // The pipelined scheduler's split path must return exactly what the
+        // BSP barrier call returns for the same jobs.
+        let (data, pool) = pool(80, 3);
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        let centers = Arc::new(centers);
+        let mk = || -> Vec<Job> {
+            split_range(0..80, 3)
+                .into_iter()
+                .map(|range| Job::Nearest { range, centers: centers.clone() })
+                .collect()
+        };
+        pool.scatter(mk()).unwrap();
+        // Master-side work would happen here, overlapped with the wave.
+        let (split_outs, _) = pool.gather().unwrap();
+        let (barrier_outs, _) = pool.scatter_gather(mk()).unwrap();
+        for (a, b) in split_outs.iter().zip(&barrier_outs) {
+            let (JobOutput::Nearest { idx: ia, d2: da }, JobOutput::Nearest { idx: ib, d2: db }) =
+                (a, b)
+            else {
+                panic!("wrong output kind");
+            };
+            assert_eq!(ia, ib);
+            assert_eq!(da, db);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gather without a scattered wave")]
+    fn gather_without_scatter_panics() {
+        let (_, pool) = pool(10, 2);
+        let _ = pool.gather();
     }
 }

@@ -17,6 +17,10 @@
 //! * [`driver`] — assembles epochs, validation, the §4.2 bootstrap, the
 //!   mean-recompute phases and metrics into full runs of OCC DP-means
 //!   (Alg 3), OCC OFL (Alg 4) and OCC BP-means (Alg 6).
+//! * [`scheduler`] — epoch scheduling policies: the classic BSP barrier
+//!   and a pipelined schedule that overlaps epoch `t+1`'s worker compute
+//!   with epoch `t`'s master-side validation while preserving the Thm 3.1
+//!   serial order bit for bit.
 //!
 //! ## Determinism
 //!
@@ -24,10 +28,13 @@
 //! *identical for every worker count `P`* — proposals are merged and
 //! validated in point-index order, and block boundaries depend only on
 //! `P·b`. This is the practical content of serializability and is enforced
-//! by `rust/tests/serializability.rs`.
+//! by `rust/tests/serializability.rs`. The same invariant holds across
+//! scheduling policies: `rust/tests/scheduler_equivalence.rs` checks that
+//! BSP and pipelined runs produce bit-identical models.
 
 pub mod driver;
 pub mod engine;
+pub mod scheduler;
 pub mod soft;
 pub mod validator;
 

@@ -1,0 +1,437 @@
+//! Epoch scheduling policies: when workers compute and when the master
+//! validates.
+//!
+//! The driver owns *what* an epoch does (jobs, merge, validation — the
+//! [`EpochAlgo`] hooks); a [`Scheduler`] owns *when* those steps run
+//! relative to each other. Two policies are provided:
+//!
+//! * [`Bsp`] — the paper's bulk-synchronous structure (Fig 5): scatter
+//!   epoch `t`, barrier, validate epoch `t`, repeat. The master idles while
+//!   workers compute and the workers idle while the master validates.
+//! * [`Pipelined`] — software pipelining of the epoch loop: while the
+//!   master validates epoch `t`, the workers already compute epoch `t+1`
+//!   against the *stale* snapshot `C^{t-1}`. The pipeline is bounded at two
+//!   epochs in flight (one at the workers, one at the master); the bound
+//!   falls out of [`WorkerPool::gather`] being the only way to retire a
+//!   wave, which is the backpressure point.
+//!
+//! ## Why pipelining preserves Theorem 3.1
+//!
+//! Thm 3.1 says the distributed execution equals a serial one because all
+//! state mutation happens at the master, in point-index order. The
+//! pipelined scheduler does not move any mutation: validation still runs
+//! serially per epoch, in epoch order, in point-index order within the
+//! epoch. What changes is only that epoch `t+1`'s *optimistic transactions*
+//! execute against `C^{t-1}` instead of `C^{t}`. Before epoch `t+1` is
+//! validated, the scheduler restores the exact BSP-visible state:
+//!
+//! * **Patchable algorithms** (DP-means, OFL — per-point nearest-center
+//!   queries): the master computes each point's nearest center among the
+//!   *delta* rows `C^{t} \ C^{t-1}` and folds it into the stale result with
+//!   a strict `<` comparison. Per-(point, center) distances in the blocked
+//!   kernel depend only on the pair — not on which other centers share the
+//!   call — and the fold mirrors the kernel's first-minimum tie-break
+//!   (delta rows have strictly higher indices and win only on strictly
+//!   smaller distance), so the patched `(idx, d²)` equals a fresh scan of
+//!   `C^{t}` *bit for bit*. Validation then sees byte-identical inputs in
+//!   the identical order, and Thm 3.1's serial equivalence carries over
+//!   unchanged. (The patch itself runs on the master, overlapped with the
+//!   next wave's compute.)
+//! * **Unpatchable algorithms** (BP-means — coordinate descent is a joint
+//!   optimization over the feature set, not a per-row reduction): the
+//!   speculative result is only used when the previous epoch committed
+//!   nothing (the delta is empty, so the "stale" snapshot *is* `C^{t}`).
+//!   Otherwise the scheduler redoes the epoch against the committed
+//!   snapshot — a pipeline bubble, counted in
+//!   [`EpochRecord::respins`] — which is literally the BSP computation.
+//!   Acceptances decay geometrically over a run (Thm 3.2 / Fig 3), so late
+//!   epochs overlap at full efficiency.
+//!
+//! In both cases the inputs reaching each validation call, and the order of
+//! validation calls, are exactly those of the BSP schedule — so the models
+//! produced are bit-identical (`rust/tests/scheduler_equivalence.rs`
+//! enforces this across algorithms, worker counts and block sizes).
+//!
+//! Within an epoch, validation itself is sharded by conflict key
+//! ([`super::validator::dp_validate_sharded`]): same-key proposal pairs get
+//! their conflict distances precomputed in parallel, and a final serial
+//! merge in point-index order replays the exact Thm 3.1 serial decision
+//! sequence from cached (bit-identical) distances.
+
+use super::engine::{split_range, Job, JobOutput, WorkerPool};
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::metrics::{EpochRecord, MetricsSink, Stopwatch};
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What one epoch's validation reported back to the scheduler.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpochCounts {
+    /// Proposals the merge extracted from worker outputs.
+    pub proposed: usize,
+    /// Proposals accepted as new centers/features.
+    pub accepted: usize,
+    /// Proposals rejected (corrected to existing state).
+    pub rejected: usize,
+    /// Global state rows after this epoch committed.
+    pub state_rows: usize,
+}
+
+/// Algorithm-specific hooks one pass's epochs are driven through.
+///
+/// Implementations own the committed global state (centers/features and
+/// assignments) and all merge/validation logic; schedulers only decide when
+/// each hook runs and against which snapshot.
+pub trait EpochAlgo {
+    /// Clone of the committed global state, to ship to workers.
+    fn snapshot(&self) -> Arc<Matrix>;
+
+    /// Rows of the committed global state (cheap; used to detect staleness).
+    fn committed_rows(&self) -> usize;
+
+    /// One worker job per range, against snapshot `snap`.
+    fn make_jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job>;
+
+    /// Whether outputs computed against a stale snapshot can be patched at
+    /// the master into exactly what a fresh compute would return (DP/OFL
+    /// nearest-center queries: yes; BP coordinate descent: no).
+    fn can_patch(&self) -> bool;
+
+    /// Patch `outs` (computed against the first `stale_rows` committed
+    /// rows) to equal, bit for bit, a compute against the full committed
+    /// state. Only called when `can_patch()` and the state actually grew.
+    fn patch(
+        &mut self,
+        outs: &mut [JobOutput],
+        ranges: &[Range<usize>],
+        stale_rows: usize,
+    ) -> Result<()>;
+
+    /// Merge worker outputs and validate the epoch's proposals in
+    /// point-index order, mutating the committed state.
+    fn validate(&mut self, outs: &[JobOutput], ranges: &[Range<usize>]) -> Result<EpochCounts>;
+}
+
+/// An epoch scheduling policy.
+pub trait Scheduler {
+    /// Policy name (metrics / logs).
+    fn name(&self) -> &'static str;
+
+    /// Drive one pass's epochs (contiguous point ranges, in order) through
+    /// `algo` on `pool`, emitting one [`EpochRecord`] per epoch.
+    fn run_pass(
+        &self,
+        pool: &WorkerPool,
+        algo: &mut dyn EpochAlgo,
+        epochs: &[Range<usize>],
+        pass: usize,
+        sink: &mut MetricsSink,
+        log: &mut Vec<EpochRecord>,
+    ) -> Result<()>;
+}
+
+/// Build the scheduler a config names.
+pub fn make(kind: crate::config::SchedulerKind) -> Box<dyn Scheduler> {
+    match kind {
+        crate::config::SchedulerKind::Bsp => Box::new(Bsp),
+        crate::config::SchedulerKind::Pipelined => Box::new(Pipelined),
+    }
+}
+
+/// Scatter one epoch against the current committed snapshot; returns the
+/// per-worker ranges and the snapshot's row count (for staleness checks).
+fn scatter_epoch(
+    pool: &WorkerPool,
+    algo: &dyn EpochAlgo,
+    epoch: &Range<usize>,
+) -> Result<(Vec<Range<usize>>, usize)> {
+    let snap = algo.snapshot();
+    let ranges = split_range(epoch.clone(), pool.procs);
+    pool.scatter(algo.make_jobs(&snap, &ranges))?;
+    Ok((ranges, snap.rows))
+}
+
+/// The bulk-synchronous schedule (the seed's behavior, extracted).
+pub struct Bsp;
+
+impl Scheduler for Bsp {
+    fn name(&self) -> &'static str {
+        "bsp"
+    }
+
+    fn run_pass(
+        &self,
+        pool: &WorkerPool,
+        algo: &mut dyn EpochAlgo,
+        epochs: &[Range<usize>],
+        pass: usize,
+        sink: &mut MetricsSink,
+        log: &mut Vec<EpochRecord>,
+    ) -> Result<()> {
+        for (t, epoch) in epochs.iter().enumerate() {
+            let epoch_sw = Stopwatch::start();
+            let (ranges, _) = scatter_epoch(pool, &*algo, epoch)?;
+            let (outs, worker_time) = pool.gather()?;
+            let master_sw = Stopwatch::start();
+            let counts = algo.validate(&outs, &ranges)?;
+            let master_time = master_sw.elapsed();
+            let rec = EpochRecord {
+                iteration: pass,
+                epoch: t,
+                points: epoch.len(),
+                proposed: counts.proposed,
+                accepted: counts.accepted,
+                rejected: counts.rejected,
+                centers: counts.state_rows,
+                worker_time,
+                master_time,
+                total_time: epoch_sw.elapsed(),
+                overlap_time: Duration::ZERO,
+                queue_depth: 1,
+                respins: 0,
+            };
+            sink.emit(&rec);
+            log.push(rec);
+        }
+        Ok(())
+    }
+}
+
+/// The pipelined schedule: overlap epoch `t`'s validation with epoch
+/// `t+1`'s compute. See the module docs for the equivalence argument.
+pub struct Pipelined;
+
+impl Scheduler for Pipelined {
+    fn name(&self) -> &'static str {
+        "pipelined"
+    }
+
+    fn run_pass(
+        &self,
+        pool: &WorkerPool,
+        algo: &mut dyn EpochAlgo,
+        epochs: &[Range<usize>],
+        pass: usize,
+        sink: &mut MetricsSink,
+        log: &mut Vec<EpochRecord>,
+    ) -> Result<()> {
+        if epochs.is_empty() {
+            return Ok(());
+        }
+        let mut inflight = Some(scatter_epoch(pool, &*algo, &epochs[0])?);
+        for (t, epoch) in epochs.iter().enumerate() {
+            let epoch_sw = Stopwatch::start();
+            let (ranges, stale_rows) = inflight.take().expect("pipeline wave missing");
+            let (mut outs, mut worker_time) = pool.gather()?;
+            let stale = stale_rows < algo.committed_rows();
+            let mut respins = 0;
+            // Single-wave compute time, for the overlap estimate below
+            // (worker_time itself accumulates the redo wave on a respin).
+            let mut wave_time = worker_time;
+            if stale && !algo.can_patch() {
+                // Speculation conflict on an unpatchable algorithm: redo
+                // the epoch against the committed snapshot (the BSP
+                // computation) before anything else enters the queue.
+                respins = 1;
+                let snap = algo.snapshot();
+                pool.scatter(algo.make_jobs(&snap, &ranges))?;
+                let (fresh, wt) = pool.gather()?;
+                outs = fresh;
+                worker_time += wt;
+                wave_time = wt;
+            }
+            // Speculative scatter of epoch t+1 against the still-uncommitted
+            // state — this is what overlaps the master work below.
+            let speculating = t + 1 < epochs.len();
+            if speculating {
+                inflight = Some(scatter_epoch(pool, &*algo, &epochs[t + 1])?);
+            }
+            let master_sw = Stopwatch::start();
+            if stale && algo.can_patch() {
+                algo.patch(&mut outs, &ranges, stale_rows)?;
+            }
+            let counts = algo.validate(&outs, &ranges)?;
+            let master_time = master_sw.elapsed();
+            let rec = EpochRecord {
+                iteration: pass,
+                epoch: t,
+                points: epoch.len(),
+                proposed: counts.proposed,
+                accepted: counts.accepted,
+                rejected: counts.rejected,
+                centers: counts.state_rows,
+                worker_time,
+                master_time,
+                total_time: epoch_sw.elapsed(),
+                // Master work hidden behind the in-flight wave. The next
+                // wave's completion time isn't known yet, so estimate
+                // conservatively with this epoch's single-wave critical-path
+                // compute time (waves are homogeneous in size): validation
+                // beyond that likely ran against an already-drained pool.
+                overlap_time: if speculating {
+                    master_time.min(wave_time)
+                } else {
+                    Duration::ZERO
+                },
+                queue_depth: 1 + usize::from(speculating),
+                respins,
+            };
+            sink.emit(&rec);
+            log.push(rec);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic EpochAlgo that records the exact call sequence and
+    /// snapshot rows it was driven with, growing its "state" by one row per
+    /// validated epoch so staleness is exercised.
+    struct Scripted {
+        state: Matrix,
+        calls: Vec<String>,
+        patchable: bool,
+        grow_on_validate: bool,
+    }
+
+    impl Scripted {
+        fn new(patchable: bool, grow_on_validate: bool) -> Scripted {
+            Scripted {
+                state: Matrix::zeros(0, 2),
+                calls: Vec::new(),
+                patchable,
+                grow_on_validate,
+            }
+        }
+    }
+
+    impl EpochAlgo for Scripted {
+        fn snapshot(&self) -> Arc<Matrix> {
+            Arc::new(self.state.clone())
+        }
+        fn committed_rows(&self) -> usize {
+            self.state.rows
+        }
+        fn make_jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job> {
+            ranges
+                .iter()
+                .map(|r| Job::Nearest { range: r.clone(), centers: snap.clone() })
+                .collect()
+        }
+        fn can_patch(&self) -> bool {
+            self.patchable
+        }
+        fn patch(
+            &mut self,
+            _outs: &mut [JobOutput],
+            _ranges: &[Range<usize>],
+            stale_rows: usize,
+        ) -> Result<()> {
+            self.calls.push(format!("patch({stale_rows}->{})", self.state.rows));
+            Ok(())
+        }
+        fn validate(
+            &mut self,
+            _outs: &[JobOutput],
+            _ranges: &[Range<usize>],
+        ) -> Result<EpochCounts> {
+            self.calls.push(format!("validate(rows={})", self.state.rows));
+            if self.grow_on_validate {
+                self.state.push_row(&[self.state.rows as f32, 0.0]);
+            }
+            Ok(EpochCounts {
+                proposed: 1,
+                accepted: usize::from(self.grow_on_validate),
+                rejected: usize::from(!self.grow_on_validate),
+                state_rows: self.state.rows,
+            })
+        }
+    }
+
+    fn pool2() -> WorkerPool {
+        let data = Arc::new(crate::data::generators::dp_clusters(
+            &crate::data::generators::GenConfig { n: 64, dim: 2, theta: 1.0, seed: 1 },
+        ));
+        let backend: Arc<dyn crate::runtime::ComputeBackend> =
+            Arc::new(crate::runtime::native::NativeBackend::new());
+        WorkerPool::spawn(data, backend, 2)
+    }
+
+    fn drive(sched: &dyn Scheduler, algo: &mut Scripted) -> Vec<EpochRecord> {
+        let pool = pool2();
+        let epochs = vec![0..16, 16..32, 32..48, 48..64];
+        let mut sink = MetricsSink::Null;
+        let mut log = Vec::new();
+        sched.run_pass(&pool, algo, &epochs, 0, &mut sink, &mut log).unwrap();
+        log
+    }
+
+    #[test]
+    fn bsp_validates_every_epoch_without_overlap() {
+        let mut algo = Scripted::new(true, true);
+        let log = drive(&Bsp, &mut algo);
+        assert_eq!(log.len(), 4);
+        assert!(log.iter().all(|r| r.overlap_time == Duration::ZERO && r.queue_depth == 1));
+        // BSP never sees a stale snapshot, so never patches.
+        assert!(algo.calls.iter().all(|c| c.starts_with("validate")));
+    }
+
+    #[test]
+    fn pipelined_patches_stale_epochs_and_reports_overlap() {
+        let mut algo = Scripted::new(true, true);
+        let log = drive(&Pipelined, &mut algo);
+        assert_eq!(log.len(), 4);
+        // Epoch 0 ran against the fresh initial state; epochs 1..3 were
+        // computed one commit behind and must have been patched.
+        let patches = algo.calls.iter().filter(|c| c.starts_with("patch")).count();
+        assert_eq!(patches, 3, "calls: {:?}", algo.calls);
+        // Patch always precedes the epoch's validate.
+        assert!(algo.calls[0].starts_with("validate"));
+        assert!(algo.calls[1].starts_with("patch"));
+        // All but the last epoch validated with the next wave in flight.
+        assert!(log[..3].iter().all(|r| r.queue_depth == 2));
+        assert_eq!(log[3].queue_depth, 1);
+        assert!(log.iter().all(|r| r.respins == 0));
+    }
+
+    #[test]
+    fn pipelined_respins_unpatchable_epochs_on_conflict() {
+        let mut algo = Scripted::new(false, true);
+        let log = drive(&Pipelined, &mut algo);
+        // Every epoch after the first hits a grown state and must respin.
+        assert_eq!(log.iter().map(|r| r.respins).sum::<usize>(), 3);
+        assert!(algo.calls.iter().all(|c| c.starts_with("validate")), "{:?}", algo.calls);
+    }
+
+    #[test]
+    fn pipelined_speculation_hits_when_state_is_quiet() {
+        // No acceptances ⇒ snapshots never go stale ⇒ no patches, no
+        // respins, full overlap.
+        let mut algo = Scripted::new(false, false);
+        let log = drive(&Pipelined, &mut algo);
+        assert_eq!(log.iter().map(|r| r.respins).sum::<usize>(), 0);
+        assert!(algo.calls.iter().all(|c| c.starts_with("validate")));
+        assert!(log[..3].iter().all(|r| r.queue_depth == 2));
+    }
+
+    #[test]
+    fn empty_pass_is_a_noop() {
+        let pool = pool2();
+        let mut algo = Scripted::new(true, true);
+        let mut sink = MetricsSink::Null;
+        let mut log = Vec::new();
+        Pipelined.run_pass(&pool, &mut algo, &[], 0, &mut sink, &mut log).unwrap();
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn factory_maps_config_kinds() {
+        assert_eq!(make(crate::config::SchedulerKind::Bsp).name(), "bsp");
+        assert_eq!(make(crate::config::SchedulerKind::Pipelined).name(), "pipelined");
+    }
+}

@@ -1,13 +1,31 @@
-//! Serial validation — the master's epoch-boundary step.
+//! Validation — the master's epoch-boundary step.
 //!
 //! Each validator consumes the epoch's proposals *in point-index order*
 //! (the serial order of Thm 3.1 / App B) and mutates the global state by
 //! appending accepted centers/features. Rejected proposals are *corrected*:
 //! the validator resolves the proposing point's assignment to the already-
 //! accepted center that covers it (the paper's `Ref`).
+//!
+//! ## Sharded validation
+//!
+//! [`dp_validate_sharded`] and [`ofl_validate_sharded`] split the expensive
+//! half of validation — proposal-pair distances — across threads without
+//! touching the serial order. Proposals are partitioned by *conflict key*
+//! (the proposing point's nearest committed center/facility: points that
+//! would collide tend to come from the same region of state space);
+//! same-key pair distances are precomputed in parallel, then a serial merge
+//! walks all proposals in point-index order, reading a cached distance when
+//! one exists and computing it inline otherwise. Because a cached
+//! `sqdist(a, b)` is bit-identical to the inline one, the merge's
+//! accept/reject decisions — and therefore the appended state — are
+//! bit-for-bit those of the serial validator for *any* key assignment and
+//! shard count. BP-means has no sharded variant: its accepted features are
+//! *derived* residuals (each depends on the re-representation against all
+//! earlier acceptances), so there is no pairwise quantity to precompute.
 
 use crate::algorithms::bpmeans::descend_z;
 use crate::linalg::{sqdist, Matrix};
+use std::collections::HashMap;
 
 /// A DP-means proposal: point `idx` (global) wants to open a cluster at its
 /// own coordinates (the worker certified `d² > λ²` against `C^{t-1}`).
@@ -30,22 +48,32 @@ pub struct DpOutcome {
     pub rejected: usize,
 }
 
-/// `DPValidate` (Alg 2). `centers[base..]` is the epoch's accepted set `Ĉ`
-/// (starts empty: `base == centers.rows` on entry); accepted proposals are
-/// appended to `centers`. Proposals must be sorted by `idx`.
-pub fn dp_validate(centers: &mut Matrix, base: usize, proposals: &[DpProposal], lambda2: f32) -> DpOutcome {
+/// The single DP merge loop both the serial and the sharded entry points
+/// share: walk proposals in point-index order, resolving each against the
+/// epoch's accepted set via `dist(a, j)` — the squared distance between
+/// accepted proposal `a` and proposal `j` (global positions). The provider
+/// is the only thing that varies (inline `sqdist` vs the shard cache), so
+/// the two paths cannot drift apart.
+fn dp_merge(
+    centers: &mut Matrix,
+    base: usize,
+    proposals: &[DpProposal],
+    lambda2: f32,
+    mut dist: impl FnMut(u32, u32) -> f32,
+) -> DpOutcome {
     debug_assert!(proposals.windows(2).all(|w| w[0].idx < w[1].idx));
     let mut out = DpOutcome::default();
-    for p in proposals {
+    let mut accepted: Vec<u32> = Vec::new(); // positions of accepted proposals
+    for (j, p) in proposals.iter().enumerate() {
         // Nearest among the *newly accepted* centers only — the worker
         // already certified distance > λ against C^{t-1}.
         let mut best = f32::INFINITY;
         let mut best_k = usize::MAX;
-        for k in base..centers.rows {
-            let d = sqdist(&p.center, centers.row(k));
+        for (a_i, &a) in accepted.iter().enumerate() {
+            let d = dist(a, j as u32);
             if d < best {
                 best = d;
-                best_k = k;
+                best_k = base + a_i;
             }
         }
         if best < lambda2 {
@@ -54,11 +82,168 @@ pub fn dp_validate(centers: &mut Matrix, base: usize, proposals: &[DpProposal], 
             out.rejected += 1;
         } else {
             centers.push_row(&p.center);
+            accepted.push(j as u32);
             out.resolved.push((p.idx, (centers.rows - 1) as u32));
             out.accepted += 1;
         }
     }
     out
+}
+
+/// `DPValidate` (Alg 2). `centers[base..]` is the epoch's accepted set `Ĉ`
+/// (starts empty: `base == centers.rows` on entry); accepted proposals are
+/// appended to `centers`. Proposals must be sorted by `idx`.
+pub fn dp_validate(centers: &mut Matrix, base: usize, proposals: &[DpProposal], lambda2: f32) -> DpOutcome {
+    dp_merge(centers, base, proposals, lambda2, |a, j| {
+        sqdist(&proposals[a as usize].center, &proposals[j as usize].center)
+    })
+}
+
+/// Minimum proposal count for the sharded path; below this the pair-cache
+/// setup costs more than the serial scan it saves.
+const SHARD_MIN_PROPOSALS: usize = 48;
+
+/// Pair-cache budget for the sharded path: the cache is `O(Σ M_s²)` and
+/// stops paying for itself once an epoch's same-key pair count explodes
+/// (e.g. a cold-start epoch where every point proposes under one key).
+const SHARD_MAX_PAIRS: usize = 1 << 20;
+
+/// True when sharding `keys` across `shards` buckets is worth the cache:
+/// at least two non-trivial shards (degenerate keys — e.g. all `u32::MAX`
+/// on a cold start — serialize the pre-computation AND pay the cache) and
+/// a bounded total pair count.
+fn sharding_profitable(shard_lists: &[Vec<u32>]) -> bool {
+    let nontrivial = shard_lists.iter().filter(|s| s.len() >= 2).count();
+    let pairs: usize =
+        shard_lists.iter().map(|s| s.len() * s.len().saturating_sub(1) / 2).sum();
+    nontrivial >= 2 && pairs <= SHARD_MAX_PAIRS
+}
+
+/// Partition positions `0..keys.len()` into `shards` buckets by conflict
+/// key. Iteration order is preserved, so two proposals with the same key
+/// land in the same bucket *in their original (point-index) order* — the
+/// invariant the pair cache relies on.
+pub fn shard_positions(keys: &[u32], shards: usize) -> Vec<Vec<u32>> {
+    let s = shards.max(1);
+    let mut out = vec![Vec::new(); s];
+    for (pos, &k) in keys.iter().enumerate() {
+        out[(k as usize) % s].push(pos as u32);
+    }
+    out
+}
+
+/// Pairwise squared distances between all proposals of one shard, keyed by
+/// `(earlier position, later position)` in the global proposal list.
+fn shard_pair_cache(vectors: &[&[f32]], shard: &[u32]) -> Vec<(u32, u32, f32)> {
+    let mut out = Vec::with_capacity(shard.len().saturating_sub(1) * shard.len() / 2);
+    for (i, &a) in shard.iter().enumerate() {
+        for &b in &shard[i + 1..] {
+            out.push((a, b, sqdist(vectors[a as usize], vectors[b as usize])));
+        }
+    }
+    out
+}
+
+/// Build the cross-proposal distance cache: same-key pairs in parallel.
+///
+/// Threads are capped at half the shard count (≥ 1): under the pipelined
+/// scheduler this precompute runs while all `P` workers are busy on the
+/// next epoch's speculative wave, so claiming a full `P` threads here would
+/// oversubscribe the machine during exactly the window the overlap exists
+/// to exploit.
+fn build_pair_cache(vectors: &[&[f32]], shard_lists: &[Vec<u32>]) -> HashMap<(u32, u32), f32> {
+    let work: Vec<&Vec<u32>> = shard_lists.iter().filter(|s| s.len() >= 2).collect();
+    let threads = (shard_lists.len() / 2).clamp(1, work.len().max(1));
+    let per_thread = work.len().div_ceil(threads);
+    let mut cache = HashMap::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = work
+            .chunks(per_thread)
+            .map(|group| {
+                let group = group.to_vec();
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    for shard in group {
+                        out.extend(shard_pair_cache(vectors, shard));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (a, b, d) in h.join().expect("shard thread panicked") {
+                cache.insert((a, b), d);
+            }
+        }
+    });
+    cache
+}
+
+/// Distance from proposal `j` to accepted proposal `a` (`a < j` in the
+/// global order): cache hit when they shared a conflict key, inline
+/// `sqdist` otherwise — bit-identical either way.
+#[inline]
+fn pair_d2(cache: &HashMap<(u32, u32), f32>, vectors: &[&[f32]], a: u32, j: u32) -> f32 {
+    match cache.get(&(a, j)) {
+        Some(&d) => d,
+        None => sqdist(vectors[a as usize], vectors[j as usize]),
+    }
+}
+
+/// `DPValidate` with sharded conflict pre-computation. Produces the exact
+/// [`dp_validate`] outcome (same resolutions, same appended rows, same
+/// bits) for any `keys`/`shards`; `keys[i]` is proposal `i`'s conflict key
+/// (e.g. its nearest committed center, `u32::MAX` when none).
+pub fn dp_validate_sharded(
+    centers: &mut Matrix,
+    base: usize,
+    proposals: &[DpProposal],
+    keys: &[u32],
+    lambda2: f32,
+    shards: usize,
+) -> DpOutcome {
+    debug_assert_eq!(proposals.len(), keys.len());
+    // shards < 4 would leave build_pair_cache with a single thread (it caps
+    // at shards/2): all cache cost, no parallelism — serial wins there.
+    if shards < 4 || proposals.len() < SHARD_MIN_PROPOSALS {
+        return dp_validate(centers, base, proposals, lambda2);
+    }
+    let shard_lists = shard_positions(keys, shards);
+    if !sharding_profitable(&shard_lists) {
+        return dp_validate(centers, base, proposals, lambda2);
+    }
+    let vectors: Vec<&[f32]> = proposals.iter().map(|p| p.center.as_slice()).collect();
+    let cache = build_pair_cache(&vectors, &shard_lists);
+    // Same merge loop as the serial path, fed from the cache — the Thm 3.1
+    // point-index order, bit-for-bit.
+    dp_merge(centers, base, proposals, lambda2, |a, j| pair_d2(&cache, &vectors, a, j))
+}
+
+/// `OFLValidate` with sharded conflict pre-computation — the exact
+/// [`ofl_validate`] outcome for any `keys`/`shards` (see
+/// [`dp_validate_sharded`]).
+pub fn ofl_validate_sharded(
+    centers: &mut Matrix,
+    base: usize,
+    proposals: &[OflProposal],
+    keys: &[u32],
+    lambda2: f64,
+    draw: impl FnMut(u32) -> f64,
+    shards: usize,
+) -> OflOutcome {
+    debug_assert_eq!(proposals.len(), keys.len());
+    // shards < 4 would leave build_pair_cache with a single thread (it caps
+    // at shards/2): all cache cost, no parallelism — serial wins there.
+    if shards < 4 || proposals.len() < SHARD_MIN_PROPOSALS {
+        return ofl_validate(centers, base, proposals, lambda2, draw);
+    }
+    let shard_lists = shard_positions(keys, shards);
+    if !sharding_profitable(&shard_lists) {
+        return ofl_validate(centers, base, proposals, lambda2, draw);
+    }
+    let vectors: Vec<&[f32]> = proposals.iter().map(|p| p.center.as_slice()).collect();
+    let cache = build_pair_cache(&vectors, &shard_lists);
+    ofl_merge(centers, base, proposals, lambda2, draw, |a, j| pair_d2(&cache, &vectors, a, j))
 }
 
 /// An OFL proposal: point `idx` was sent to the master with probability
@@ -89,35 +274,36 @@ pub struct OflOutcome {
     pub opened: Vec<u32>,
 }
 
-/// `OFLValidate` (Alg 5), with the telescoped acceptance probability of the
-/// Thm 3.1 proof: accept with probability `min(1, d²_full/λ²) /
-/// min(1, d²_prev/λ²)`, realized by re-using the point's own uniform draw
-/// `draw(idx)` — this makes the distributed run *bit-identical* to the
-/// serial OFL pass with the same per-point draws.
-pub fn ofl_validate(
+/// The single OFL merge loop both the serial and the sharded entry points
+/// share (see [`dp_merge`] for the pattern): `dist(a, j)` provides the
+/// squared distance between accepted proposal `a` and proposal `j`.
+fn ofl_merge(
     centers: &mut Matrix,
     base: usize,
     proposals: &[OflProposal],
     lambda2: f64,
     mut draw: impl FnMut(u32) -> f64,
+    mut dist: impl FnMut(u32, u32) -> f32,
 ) -> OflOutcome {
     debug_assert!(proposals.windows(2).all(|w| w[0].idx < w[1].idx));
     let mut out = OflOutcome::default();
-    for p in proposals {
+    let mut accepted: Vec<u32> = Vec::new();
+    for (j, p) in proposals.iter().enumerate() {
         // Nearest among this epoch's accepted facilities Ĉ.
         let mut best_new = f32::INFINITY;
         let mut best_new_k = usize::MAX;
-        for k in base..centers.rows {
-            let d = sqdist(&p.center, centers.row(k));
+        for (a_i, &a) in accepted.iter().enumerate() {
+            let d = dist(a, j as u32);
             if d < best_new {
                 best_new = d;
-                best_new_k = k;
+                best_new_k = base + a_i;
             }
         }
         let d2_full = p.d2_prev.min(best_new) as f64;
         let p_acc = if d2_full.is_infinite() { 1.0 } else { (d2_full / lambda2).min(1.0) };
         if draw(p.idx) < p_acc {
             centers.push_row(&p.center);
+            accepted.push(j as u32);
             out.resolved.push((p.idx, (centers.rows - 1) as u32));
             out.opened.push(p.idx);
             out.accepted += 1;
@@ -129,6 +315,23 @@ pub fn ofl_validate(
         }
     }
     out
+}
+
+/// `OFLValidate` (Alg 5), with the telescoped acceptance probability of the
+/// Thm 3.1 proof: accept with probability `min(1, d²_full/λ²) /
+/// min(1, d²_prev/λ²)`, realized by re-using the point's own uniform draw
+/// `draw(idx)` — this makes the distributed run *bit-identical* to the
+/// serial OFL pass with the same per-point draws.
+pub fn ofl_validate(
+    centers: &mut Matrix,
+    base: usize,
+    proposals: &[OflProposal],
+    lambda2: f64,
+    draw: impl FnMut(u32) -> f64,
+) -> OflOutcome {
+    ofl_merge(centers, base, proposals, lambda2, draw, |a, j| {
+        sqdist(&proposals[a as usize].center, &proposals[j as usize].center)
+    })
 }
 
 /// A BP-means proposal: point `idx`'s residual after coordinate descent
@@ -340,6 +543,164 @@ mod tests {
         assert_eq!(out.resolved[2].extra_features, vec![0]);
         assert_eq!(out.resolved[2].own_feature, Some(1));
         assert_eq!(features.row(1), &[0.0, 2.0]);
+    }
+
+    // -----------------------------------------------------------------
+    // Sharded validation: partition/merge invariants + exact equivalence
+    // on seeded adversarial interleavings.
+    // -----------------------------------------------------------------
+
+    use crate::rng::Pcg64;
+
+    /// Clustered proposal set: points drawn near a few tight modes so that
+    /// conflicts are plentiful, with *sparse, shuffled* global indices so
+    /// the merge has real interleaving to restore.
+    fn adversarial_proposals(seed: u64, n: usize, modes: usize) -> (Vec<DpProposal>, Vec<u32>) {
+        let mut rng = Pcg64::new(seed);
+        // Sparse strictly-increasing global indices.
+        let mut idx = 0u32;
+        let mut proposals = Vec::with_capacity(n);
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            idx += 1 + (rng.next_below(7) as u32);
+            let mode = rng.next_below(modes as u64) as usize;
+            let cx = mode as f32 * 10.0 + rng.next_f32() * 0.8;
+            let cy = rng.next_f32() * 0.8;
+            proposals.push(DpProposal { idx, center: vec![cx, cy] });
+            // Adversarial keys: *uncorrelated* with geometry, so conflicts
+            // routinely straddle shards and the merge's inline-distance
+            // fallback is exercised. u32::MAX mixed in like a cold start.
+            keys.push(if rng.next_u64() & 3 == 0 { u32::MAX } else { rng.next_below(5) as u32 });
+        }
+        (proposals, keys)
+    }
+
+    #[test]
+    fn shard_positions_never_reorders_same_key_pairs() {
+        let mut rng = Pcg64::new(7);
+        let keys: Vec<u32> =
+            (0..500).map(|_| if rng.next_u64() & 1 == 0 { u32::MAX } else { rng.next_below(9) as u32 }).collect();
+        for shards in [1usize, 2, 3, 8, 64] {
+            let lists = shard_positions(&keys, shards);
+            // Every position appears exactly once.
+            let mut seen = vec![false; keys.len()];
+            for list in &lists {
+                // Within a shard, positions are strictly increasing — two
+                // proposals with the same key can never swap order.
+                assert!(list.windows(2).all(|w| w[0] < w[1]), "shard reordered positions");
+                for &p in list {
+                    assert!(!seen[p as usize], "position {p} duplicated");
+                    seen[p as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "positions dropped");
+            // Same key ⇒ same shard.
+            let mut shard_of = vec![usize::MAX; keys.len()];
+            for (s, list) in lists.iter().enumerate() {
+                for &p in list {
+                    shard_of[p as usize] = s;
+                }
+            }
+            let mut key_shard: std::collections::HashMap<u32, usize> = Default::default();
+            for (i, &k) in keys.iter().enumerate() {
+                let s = *key_shard.entry(k).or_insert(shard_of[i]);
+                assert_eq!(s, shard_of[i], "same-key pair split across shards");
+            }
+        }
+    }
+
+    #[test]
+    fn dp_sharded_merge_restores_point_index_order() {
+        let (proposals, keys) = adversarial_proposals(11, 120, 4);
+        let mut centers = Matrix::zeros(0, 2);
+        let out = dp_validate_sharded(&mut centers, 0, &proposals, &keys, 1.0, 4);
+        // Resolutions come back in exact point-index order regardless of
+        // how proposals were sharded.
+        let resolved_idx: Vec<u32> = out.resolved.iter().map(|(i, _)| *i).collect();
+        let proposal_idx: Vec<u32> = proposals.iter().map(|p| p.idx).collect();
+        assert_eq!(resolved_idx, proposal_idx);
+    }
+
+    #[test]
+    fn dp_sharded_equals_serial_on_adversarial_interleavings() {
+        for seed in [1u64, 2, 3, 4, 5] {
+            let (proposals, keys) = adversarial_proposals(seed, 200, 5);
+            let mut serial_c = mat(&[&[500.0, 500.0]]); // pre-existing row
+            let serial = dp_validate(&mut serial_c, 1, &proposals, 1.0);
+            // 2 exercises the serial fallback (< 4 shards), 4 and 8 the
+            // parallel cache path.
+            for shards in [2usize, 4, 8] {
+                let mut sharded_c = mat(&[&[500.0, 500.0]]);
+                let sharded =
+                    dp_validate_sharded(&mut sharded_c, 1, &proposals, &keys, 1.0, shards);
+                assert_eq!(sharded.resolved, serial.resolved, "seed={seed} shards={shards}");
+                assert_eq!(sharded.accepted, serial.accepted);
+                assert_eq!(sharded.rejected, serial.rejected);
+                assert_eq!(sharded_c.data, serial_c.data, "appended state diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn ofl_sharded_equals_serial_on_adversarial_interleavings() {
+        for seed in [21u64, 22, 23] {
+            let (dp_props, keys) = adversarial_proposals(seed, 160, 4);
+            let mut rng = Pcg64::new(seed ^ 0xBEEF);
+            let proposals: Vec<OflProposal> = dp_props
+                .into_iter()
+                .map(|p| {
+                    let far = rng.next_u64() & 3 == 0;
+                    OflProposal {
+                        idx: p.idx,
+                        center: p.center,
+                        d2_prev: if far { f32::INFINITY } else { 0.3 + rng.next_f32() },
+                        idx_prev: if far { u32::MAX } else { rng.next_below(7) as u32 },
+                    }
+                })
+                .collect();
+            // Deterministic per-point draws shared by both paths.
+            let draw = |i: u32| ((i as u64).wrapping_mul(0x9E37_79B9) % 1000) as f64 / 1000.0;
+            let mut serial_c = Matrix::zeros(0, 2);
+            let serial = ofl_validate(&mut serial_c, 0, &proposals, 1.0, draw);
+            for shards in [2usize, 4] {
+                let mut sharded_c = Matrix::zeros(0, 2);
+                let sharded =
+                    ofl_validate_sharded(&mut sharded_c, 0, &proposals, &keys, 1.0, draw, shards);
+                assert_eq!(sharded.resolved, serial.resolved, "seed={seed} shards={shards}");
+                assert_eq!(sharded.opened, serial.opened);
+                assert_eq!(sharded_c.data, serial_c.data);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_keys_fall_back_to_serial_and_stay_exact() {
+        // Cold-start shape: every proposal carries the same key (u32::MAX —
+        // no committed centers), so sharding would serialize the pair
+        // pre-computation; the entry point must skip the cache and still
+        // produce the exact serial outcome.
+        let (proposals, _) = adversarial_proposals(41, 200, 5);
+        let keys = vec![u32::MAX; proposals.len()];
+        assert!(!sharding_profitable(&shard_positions(&keys, 8)));
+        let mut a = Matrix::zeros(0, 2);
+        let mut b = Matrix::zeros(0, 2);
+        let serial = dp_validate(&mut a, 0, &proposals, 1.0);
+        let sharded = dp_validate_sharded(&mut b, 0, &proposals, &keys, 1.0, 8);
+        assert_eq!(serial.resolved, sharded.resolved);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn sharded_small_input_falls_back_to_serial() {
+        // Below SHARD_MIN_PROPOSALS the sharded entry point must still be
+        // exact (it delegates to the serial validator).
+        let (proposals, keys) = adversarial_proposals(31, 10, 2);
+        let mut a = Matrix::zeros(0, 2);
+        let mut b = Matrix::zeros(0, 2);
+        let serial = dp_validate(&mut a, 0, &proposals, 1.0);
+        let sharded = dp_validate_sharded(&mut b, 0, &proposals, &keys, 1.0, 8);
+        assert_eq!(serial.resolved, sharded.resolved);
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

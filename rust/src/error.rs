@@ -1,40 +1,64 @@
 //! Crate-wide error type.
 //!
 //! `occml` uses a single [`Error`] enum for everything that can fail at the
-//! library boundary; internal hot paths are written to be infallible.
+//! library boundary; internal hot paths are written to be infallible. The
+//! `Display`/`std::error::Error` impls are hand-rolled so the crate builds
+//! with zero dependencies (no `thiserror` offline).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide error type for `occml`.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / CLI flag problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Malformed or unsupported data file.
-    #[error("data error: {0}")]
     Data(String),
 
     /// Dimension / shape mismatch between operands.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// The XLA/PJRT runtime failed (artifact missing, compile error, ...).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Numerical failure (singular system, NaN in state, ...).
-    #[error("numerical error: {0}")]
     Numerical(String),
 
     /// A worker or master thread failed / a channel was disconnected.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -72,5 +96,13 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = ioe.into();
         assert!(e.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn io_error_exposes_source() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert!(e.source().is_some());
+        assert!(Error::config("x").source().is_none());
     }
 }

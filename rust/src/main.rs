@@ -12,7 +12,7 @@
 
 use occml::algorithms::objective;
 use occml::cli::{App, Command, Dispatch, Parsed};
-use occml::config::{toml, Algo, BackendKind, DataSource, RunConfig};
+use occml::config::{toml, Algo, BackendKind, DataSource, RunConfig, SchedulerKind};
 use occml::coordinator::{driver, Model};
 use occml::data::generators::{self, GenConfig};
 use occml::error::{Error, Result};
@@ -43,6 +43,7 @@ fn app() -> App {
                 .flag("iterations", "passes over the data", Some("3"))
                 .flag("bootstrap-div", "bootstrap divisor (0 = off)", Some("16"))
                 .flag("backend", "native | xla", Some("native"))
+                .flag("scheduler", "bsp | pipelined", Some("bsp"))
                 .flag("artifacts", "artifacts directory", Some("artifacts"))
                 .flag("data", "dp | bp | separable | file:<path>", Some("dp"))
                 .flag("n", "points to generate", Some("16384"))
@@ -76,6 +77,7 @@ fn app() -> App {
                 .flag("procs", "comma-separated worker counts", Some("1,2,4,8"))
                 .flag("iterations", "passes (dp/bp)", Some("3"))
                 .flag("backend", "native | xla", Some("native"))
+                .flag("scheduler", "bsp | pipelined", Some("bsp"))
                 .flag("seed", "RNG seed", Some("0")),
         )
         .command(
@@ -130,6 +132,9 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     if let Some(v) = p.get("backend") {
         cfg.backend = BackendKind::parse(v)?;
     }
+    if let Some(v) = p.get("scheduler") {
+        cfg.scheduler = SchedulerKind::parse(v)?;
+    }
     if let Some(v) = p.get("artifacts") {
         cfg.artifacts_dir = PathBuf::from(v);
     }
@@ -166,6 +171,7 @@ fn cmd_run(p: &Parsed) -> Result<i32> {
         };
         println!("algo        : {}", cfg.algo.name());
         println!("backend     : {}", cfg.backend.name());
+        println!("scheduler   : {}", cfg.scheduler.name());
         println!("points      : {}", cfg.n);
         println!("P x b       : {} x {} = {} per epoch", cfg.procs, cfg.block, cfg.points_per_epoch());
         println!("{kind:<12}: {}", out.model.k());
@@ -250,6 +256,7 @@ fn cmd_scaling(p: &Parsed) -> Result<i32> {
     let pb = p.get_parse::<usize>("pb")?.unwrap_or(8192);
     let iters = p.get_parse::<usize>("iterations")?.unwrap_or(3);
     let backend = BackendKind::parse(p.get("backend").unwrap_or("native"))?;
+    let scheduler = SchedulerKind::parse(p.get("scheduler").unwrap_or("bsp"))?;
     let seed = p.get_parse::<u64>("seed")?.unwrap_or(0);
     let procs: Vec<usize> = p
         .get("procs")
@@ -267,6 +274,7 @@ fn cmd_scaling(p: &Parsed) -> Result<i32> {
         lambda: 2.0,
         iterations: if algo == Algo::Ofl { 1 } else { iters },
         backend,
+        scheduler,
         seed,
         source,
         n,
@@ -322,10 +330,16 @@ fn cmd_info(p: &Parsed) -> Result<i32> {
     Ok(0)
 }
 
+#[cfg(feature = "xla")]
 fn xla_smoke() -> Result<String> {
     let client =
         xla::PjRtClient::cpu().map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e:?}")))?;
     Ok(format!("{} ({} devices)", client.platform_name(), client.device_count()))
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_smoke() -> Result<String> {
+    Err(Error::runtime("built without the `xla` feature"))
 }
 
 /// Objective helper re-exported for integration smoke (keeps the import used

@@ -33,8 +33,22 @@ pub struct EpochRecord {
     pub worker_time: Duration,
     /// Wall-clock the master spent validating.
     pub master_time: Duration,
-    /// Total epoch wall-clock (barrier to barrier).
+    /// Total epoch wall-clock (barrier to barrier; with the pipelined
+    /// scheduler epochs overlap, so these may sum to more than the run's
+    /// wall-clock).
     pub total_time: Duration,
+    /// Estimated portion of `master_time` that ran while a later epoch's
+    /// worker compute was in flight: min(validation time, the wave's
+    /// critical-path compute time). Pipelined scheduler only; zero under
+    /// BSP, where the master and the workers strictly alternate.
+    pub overlap_time: Duration,
+    /// Epochs resident in the pipeline while this epoch validated: 1 under
+    /// BSP, 2 when the pipelined scheduler had the next epoch in flight.
+    pub queue_depth: usize,
+    /// Extra compute waves this epoch needed because a speculative result
+    /// (computed against a stale snapshot) could not be patched and had to
+    /// be redone (BP-means under the pipelined scheduler).
+    pub respins: usize,
 }
 
 impl EpochRecord {
@@ -51,6 +65,9 @@ impl EpochRecord {
             ("worker_ms", Json::Num(self.worker_time.as_secs_f64() * 1e3)),
             ("master_ms", Json::Num(self.master_time.as_secs_f64() * 1e3)),
             ("total_ms", Json::Num(self.total_time.as_secs_f64() * 1e3)),
+            ("validate_overlap_ms", Json::Num(self.overlap_time.as_secs_f64() * 1e3)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("respins", Json::Num(self.respins as f64)),
         ])
     }
 }
@@ -92,6 +109,14 @@ impl RunSummary {
     /// Number of iterations present.
     pub fn iterations(&self) -> usize {
         self.epochs.iter().map(|e| e.iteration + 1).max().unwrap_or(0)
+    }
+    /// Total validation time that overlapped worker compute (pipelined).
+    pub fn total_overlap(&self) -> Duration {
+        self.epochs.iter().map(|e| e.overlap_time).sum()
+    }
+    /// Total speculative recomputes across epochs (pipelined BP-means).
+    pub fn total_respins(&self) -> usize {
+        self.epochs.iter().map(|e| e.respins).sum()
     }
 }
 
@@ -177,6 +202,9 @@ mod tests {
             worker_time: Duration::from_millis(5),
             master_time: Duration::from_millis(1),
             total_time: Duration::from_millis(7),
+            overlap_time: Duration::from_millis(1),
+            queue_depth: 2,
+            respins: 0,
         }
     }
 
@@ -193,6 +221,8 @@ mod tests {
         assert_eq!(s.total_rejected(), 13);
         assert_eq!(s.iterations(), 2);
         assert_eq!(s.iteration_time(0), Duration::from_millis(14));
+        assert_eq!(s.total_overlap(), Duration::from_millis(3));
+        assert_eq!(s.total_respins(), 0);
     }
 
     #[test]
@@ -203,6 +233,9 @@ mod tests {
         assert_eq!(j.get("proposed").unwrap().as_usize(), Some(5));
         assert_eq!(j.get("rejected").unwrap().as_usize(), Some(2));
         assert!(j.get("total_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("validate_overlap_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("queue_depth").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("respins").unwrap().as_usize(), Some(0));
     }
 
     #[test]

@@ -15,9 +15,14 @@
 //! PJRT CPU client). Both are deterministic and must agree to float
 //! tolerance — `rust/tests/backend_parity.rs` enforces it.
 
+#[cfg(feature = "xla")]
 pub mod literal;
 pub mod manifest;
 pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla;
+#[cfg(not(feature = "xla"))]
+#[path = "xla_stub.rs"]
 pub mod xla;
 
 use crate::error::Result;

@@ -1,0 +1,88 @@
+//! Stub XLA backend for builds without the `xla` feature.
+//!
+//! The real backend (`src/runtime/xla.rs`) needs the `xla` crate
+//! (xla_extension / PJRT bindings), which is not available offline. This
+//! stub presents the same API surface — [`XlaBackend::load`],
+//! [`XlaBackend::manifest`], [`XlaBackend::warmup`] and the
+//! [`ComputeBackend`] impl — but `load` always fails with a runtime error,
+//! so every caller (driver, benches, tests) takes its artifact-missing
+//! fallback path and the rest of the system works unchanged.
+
+use super::manifest::Manifest;
+use super::{Block, BpDescendOut, ComputeBackend};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use std::path::Path;
+
+const DISABLED: &str =
+    "occml was built without the `xla` feature; rebuild with `--features xla` \
+     (requires the vendored `xla` crate) to use AOT artifacts";
+
+/// Placeholder for the PJRT-backed XLA backend. Never constructible in this
+/// build configuration: [`XlaBackend::load`] always errors.
+pub struct XlaBackend {
+    manifest: Manifest,
+}
+
+impl XlaBackend {
+    /// Always fails in `xla`-less builds.
+    pub fn load(_artifacts_dir: &Path) -> Result<Self> {
+        Err(Error::runtime(DISABLED))
+    }
+
+    /// Manifest accessor (unreachable: `load` never succeeds).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Warmup (unreachable: `load` never succeeds).
+    pub fn warmup(&self) -> Result<()> {
+        Err(Error::runtime(DISABLED))
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla (disabled)"
+    }
+
+    fn nearest(
+        &self,
+        _block: Block<'_>,
+        _centers: &Matrix,
+        _out_idx: &mut [u32],
+        _out_d2: &mut [f32],
+    ) -> Result<()> {
+        Err(Error::runtime(DISABLED))
+    }
+
+    fn suffstats(
+        &self,
+        _block: Block<'_>,
+        _idx: &[u32],
+        _sums: &mut Matrix,
+        _counts: &mut [u64],
+    ) -> Result<()> {
+        Err(Error::runtime(DISABLED))
+    }
+
+    fn bp_descend(
+        &self,
+        _block: Block<'_>,
+        _features: &Matrix,
+        _sweeps: usize,
+    ) -> Result<BpDescendOut> {
+        Err(Error::runtime(DISABLED))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_disabled_feature() {
+        let e = XlaBackend::load(Path::new("artifacts")).err().unwrap();
+        assert!(e.to_string().contains("xla"), "{e}");
+    }
+}

@@ -1,7 +1,7 @@
 //! CLI + config integration: the `occd` binary surface.
 
 use occml::cli::{App, Command, Dispatch};
-use occml::config::{toml, Algo, BackendKind, DataSource, RunConfig};
+use occml::config::{toml, Algo, BackendKind, DataSource, RunConfig, SchedulerKind};
 
 #[test]
 fn full_config_file_roundtrip() {
@@ -81,10 +81,78 @@ fn run_config_validation_cascades_through_doc() {
         "[run]\nprocs = 0\n",
         "[run]\nblock = 0\n",
         "[run]\nbackend = \"cuda\"\n",
+        "[run]\nscheduler = \"warp\"\n",
         "[data]\nsource = \"hdfs\"\n",
     ] {
         assert!(RunConfig::from_doc(&toml::parse(bad).unwrap()).is_err(), "{bad}");
     }
+}
+
+#[test]
+fn scheduler_knob_defaults_to_bsp() {
+    // Absent from both TOML and flags → BSP (the conservative barrier).
+    let cfg = RunConfig::from_doc(&toml::parse("[run]\nalgo = \"dpmeans\"\n").unwrap()).unwrap();
+    assert_eq!(cfg.scheduler, SchedulerKind::Bsp);
+    assert_eq!(RunConfig::default().scheduler, SchedulerKind::Bsp);
+}
+
+#[test]
+fn scheduler_knob_parses_from_toml() {
+    let cfg = RunConfig::from_doc(
+        &toml::parse("[run]\nalgo = \"ofl\"\nscheduler = \"pipelined\"\n").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(cfg.scheduler, SchedulerKind::Pipelined);
+    let cfg =
+        RunConfig::from_doc(&toml::parse("[run]\nscheduler = \"bsp\"\n").unwrap()).unwrap();
+    assert_eq!(cfg.scheduler, SchedulerKind::Bsp);
+}
+
+#[test]
+fn scheduler_knob_rejects_unknown_values_with_useful_error() {
+    let err = SchedulerKind::parse("warp-speed").unwrap_err().to_string();
+    assert!(err.contains("warp-speed"), "error names the bad value: {err}");
+    assert!(err.contains("bsp") && err.contains("pipelined"), "error lists choices: {err}");
+    let err = RunConfig::from_doc(&toml::parse("[run]\nscheduler = \"warp\"\n").unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("scheduler"), "{err}");
+}
+
+#[test]
+fn scheduler_flag_parses_through_cli() {
+    // Mirror the occd `run` surface: `--scheduler` flows through the flag
+    // parser and SchedulerKind::parse, case-insensitively.
+    let app = App::new("occd", "test").command(
+        Command::new("run", "run").flag("scheduler", "bsp | pipelined", Some("bsp")),
+    );
+    let argv: Vec<String> =
+        ["run", "--scheduler=PIPELINED"].iter().map(|s| s.to_string()).collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(_, p) => {
+            let kind = SchedulerKind::parse(p.get("scheduler").unwrap()).unwrap();
+            assert_eq!(kind, SchedulerKind::Pipelined);
+        }
+        _ => panic!("expected run dispatch"),
+    }
+    let argv: Vec<String> =
+        ["run", "--scheduler", "tachyon"].iter().map(|s| s.to_string()).collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(_, p) => {
+            assert!(SchedulerKind::parse(p.get("scheduler").unwrap()).is_err());
+        }
+        _ => panic!("expected run dispatch"),
+    }
+}
+
+#[test]
+fn shipped_pipelined_config_selects_pipelined_scheduler() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs")
+        .join("dpmeans_pipelined.toml");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let cfg = RunConfig::from_doc(&toml::parse(&text).unwrap()).unwrap();
+    assert_eq!(cfg.scheduler, SchedulerKind::Pipelined);
 }
 
 #[test]
