@@ -14,7 +14,7 @@
 //! ```
 
 use occml::algorithms::objective::dp_objective;
-use occml::config::{Algo, BackendKind, RunConfig};
+use occml::config::{Algo, BackendKind, RunConfig, TransportKind};
 use occml::coordinator::{driver, Model};
 use occml::data::generators::{dp_clusters, GenConfig};
 use std::path::Path;
@@ -27,7 +27,7 @@ fn main() -> occml::Result<()> {
     let seed = 2013; // the year the paper appeared
 
     println!("=== occml end-to-end pipeline ===");
-    println!("[1/5] generating workload: {n} points, dim {dim}, DP stick-breaking θ=1");
+    println!("[1/6] generating workload: {n} points, dim {dim}, DP stick-breaking θ=1");
     let data = Arc::new(dp_clusters(&GenConfig { n, dim, theta: 1.0, seed }));
     let k_latent = data.distinct_components(n).unwrap();
     println!("      latent clusters K_N = {k_latent}");
@@ -47,6 +47,7 @@ fn main() -> occml::Result<()> {
         iterations: 3,
         bootstrap_div: 16,
         backend: backend_kind,
+        transport: TransportKind::InProc,
         n,
         dim,
         seed,
@@ -54,17 +55,18 @@ fn main() -> occml::Result<()> {
     };
 
     println!(
-        "[2/5] running OCC DP-means: P={} b={} ({} epochs/pass), backend={}",
+        "[2/6] running OCC DP-means: P={} b={} ({} epochs/pass), backend={}, transport={}",
         cfg.procs,
         cfg.block,
         n / cfg.points_per_epoch(),
-        cfg.backend.name()
+        cfg.backend.name(),
+        cfg.transport.name()
     );
     let backend = driver::make_backend(&cfg)?;
     let out = driver::run_with(&cfg, data.clone(), backend)?;
     let Model::Dp(model) = &out.model else { unreachable!() };
 
-    println!("[3/5] per-iteration summary:");
+    println!("[3/6] per-iteration summary:");
     println!("      iter  epochs  proposed  accepted  rejected      time");
     for it in 0..out.summary.iterations() {
         let (mut ne, mut pr, mut ac, mut rj) = (0usize, 0usize, 0usize, 0usize);
@@ -80,7 +82,7 @@ fn main() -> occml::Result<()> {
         );
     }
 
-    println!("[4/5] validating against the paper's claims:");
+    println!("[4/6] validating against the paper's claims:");
     // Thm 3.3: per-pass master traffic ≤ Pb + K (expectation; we allow 2×).
     let pass0: usize = out
         .summary
@@ -108,7 +110,39 @@ fn main() -> occml::Result<()> {
     println!("      objective: OCC {jo:.1} vs serial {js:.1} (ratio {:.3})", jo / js);
     assert!(jo <= 1.25 * js, "OCC objective more than 25% off serial");
 
-    println!("[5/5] headline:");
+    // Transport parity: the same workload at reduced scale over loopback
+    // TCP — every job, snapshot and reply serialized through the wire
+    // format, validation sharded across socket peers — must reproduce the
+    // in-proc model bit for bit.
+    let n_tcp = 16_384;
+    println!("[5/6] transport parity at n={n_tcp}: inproc vs tcp");
+    let data_tcp = Arc::new(dp_clusters(&GenConfig { n: n_tcp, dim, theta: 1.0, seed }));
+    let cfg_tcp_base =
+        RunConfig { n: n_tcp, block: 256, ..cfg.clone() }; // P·b = 2048 per epoch
+    let mut models = Vec::new();
+    for transport in [TransportKind::InProc, TransportKind::Tcp] {
+        let c = RunConfig { transport, ..cfg_tcp_base.clone() };
+        let b = driver::make_backend(&c)?;
+        let o = driver::run_with(&c, data_tcp.clone(), b)?;
+        println!(
+            "      {:<7} {:>8.2?}  wire {:>8} B  ser {:>6.2} ms",
+            transport.name(),
+            o.summary.total_time,
+            o.summary.total_wire_bytes(),
+            o.summary.total_ser_time().as_secs_f64() * 1e3,
+        );
+        models.push(o);
+    }
+    let (Model::Dp(mi), Model::Dp(mt)) = (&models[0].model, &models[1].model) else {
+        unreachable!()
+    };
+    assert_eq!(mi.centers.data, mt.centers.data, "transport changed the model!");
+    assert_eq!(mi.assignments, mt.assignments, "transport changed the assignments!");
+    assert_eq!(models[0].summary.total_wire_bytes(), 0, "inproc moves no bytes");
+    assert!(models[1].summary.total_wire_bytes() > 0, "tcp must account traffic");
+    println!("      tcp model identical to inproc ✓");
+
+    println!("[6/6] headline:");
     println!("      clusters: {} (latent {k_latent})", model.centers.rows);
     println!("      total rejections: {} (≤ {} per pass by Thm 3.3)", out.summary.total_rejected(), cfg.points_per_epoch());
     println!("      wall clock: {:.2?} on backend `{}`", out.summary.total_time, cfg.backend.name());

@@ -4,9 +4,11 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Shows the three-call public API: configure → run → inspect.
+//! Shows the three-call public API: configure → run → inspect — then
+//! repeats the run over the loopback TCP transport to show the cluster
+//! boundary is a knob, not a rewrite.
 
-use occml::config::{Algo, RunConfig};
+use occml::config::{Algo, RunConfig, TransportKind};
 use occml::coordinator::{driver, Model};
 
 fn main() -> occml::Result<()> {
@@ -20,6 +22,7 @@ fn main() -> occml::Result<()> {
         iterations: 3,
         n: 16_384,
         seed: 42,
+        transport: TransportKind::InProc,
         ..RunConfig::default()
     };
 
@@ -30,6 +33,7 @@ fn main() -> occml::Result<()> {
 
     // 3. Inspect.
     let Model::Dp(model) = &out.model else { unreachable!() };
+    println!("transport      : {}", cfg.transport.name());
     println!("clusters found : {}", model.centers.rows);
     println!("iterations     : {} (converged: {})", model.iterations, model.converged);
     println!("objective J(C) : {:.2}", out.summary.objective.unwrap());
@@ -46,5 +50,21 @@ fn main() -> occml::Result<()> {
     let per_pass_bound = cfg.points_per_epoch() * cfg.iterations;
     assert!(out.summary.total_rejected() <= per_pass_bound + model.centers.rows * cfg.iterations);
     println!("rejections within the Thm 3.3 budget ✓");
+
+    // 4. Same run, but every job/snapshot/reply crosses a localhost socket
+    //    through the wire format (`transport = "tcp"` / `--transport tcp`).
+    //    The model must not move by a single bit.
+    let tcp_cfg = RunConfig { transport: TransportKind::Tcp, ..cfg };
+    let tcp_out = driver::run(&tcp_cfg)?;
+    let Model::Dp(tcp_model) = &tcp_out.model else { unreachable!() };
+    assert_eq!(
+        tcp_model.centers.data, model.centers.data,
+        "tcp and inproc transports must agree bit for bit"
+    );
+    println!(
+        "tcp transport  : identical model ✓ ({} KiB over the wire, {:.1} ms serializing)",
+        tcp_out.summary.total_wire_bytes() / 1024,
+        tcp_out.summary.total_ser_time().as_secs_f64() * 1e3,
+    );
     Ok(())
 }

@@ -1,17 +1,25 @@
-//! BSP vs pipelined scheduler: wall-clock on the fig3-style workloads.
+//! BSP vs pipelined scheduler × inproc vs TCP transport: wall-clock on the
+//! fig3-style workloads.
 //!
 //! Runs each algorithm end to end on its §4 synthetic workload under both
-//! epoch schedulers and reports total wall-clock, the master-validation
-//! time that overlapped worker compute (`validate_overlap_ms` summed over
-//! epochs), and BP-means' speculative respins. Before reporting, the bench
-//! *asserts* the two schedulers produced bit-identical models — the
-//! speedup is only meaningful because the answer is unchanged.
+//! epoch schedulers and both cluster transports, reporting total
+//! wall-clock, the master-validation time that overlapped worker compute
+//! (`validate_overlap_ms` summed over epochs), BP-means' speculative
+//! respins, and the transport overhead columns: bytes over the wire and
+//! master-side serialization time per epoch (`wire/ep`, `ser/ep`). Before
+//! reporting, the bench *asserts* every scheduler/transport combination
+//! produced a bit-identical model — the speedups and overheads are only
+//! meaningful because the answer is unchanged.
+//!
+//! The inproc rows are the PR-1 fast path (same channels, same `Arc`
+//! snapshots — the transport layer adds one virtual call per wave), so
+//! inproc bsp vs pipelined also serves as the regression reference.
 //!
 //! Defaults keep single-machine runtime in seconds; pass `--n=…`, `--pb=…`,
 //! `--procs=…`, `--reps=…` to scale up.
 
 use occml::benchlib::{fmt_duration, BenchArgs, Table};
-use occml::config::{Algo, DataSource, RunConfig, SchedulerKind};
+use occml::config::{Algo, DataSource, RunConfig, SchedulerKind, TransportKind};
 use occml::coordinator::{driver, Model};
 use occml::runtime::native::NativeBackend;
 use std::sync::Arc;
@@ -49,15 +57,18 @@ fn main() {
     ];
 
     println!(
-        "\n=== scheduler comparison: N={n}, P={procs}, b={block} (Pb={}) — best of {reps} ===",
+        "\n=== scheduler × transport: N={n}, P={procs}, b={block} (Pb={}) — best of {reps} ===",
         procs * block
     );
     let mut table = Table::new(&[
         "algo",
+        "transport",
         "bsp",
         "pipelined",
         "speedup",
         "overlap_ms",
+        "wire/ep",
+        "ser/ep",
         "respins",
         "identical",
     ]);
@@ -77,8 +88,8 @@ fn main() {
         };
         let data = Arc::new(driver::load_or_generate(&base).expect("generate"));
 
-        let run_best = |kind: SchedulerKind| {
-            let cfg = RunConfig { scheduler: kind, ..base.clone() };
+        let run_best = |transport: TransportKind, kind: SchedulerKind| {
+            let cfg = RunConfig { transport, scheduler: kind, ..base.clone() };
             let mut best: Option<driver::RunOutput> = None;
             for _ in 0..reps {
                 let out = driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new()))
@@ -94,23 +105,45 @@ fn main() {
             best.expect("at least one rep")
         };
 
-        let bsp = run_best(SchedulerKind::Bsp);
-        let pip = run_best(SchedulerKind::Pipelined);
-        let identical = models_identical(&bsp.model, &pip.model);
-        assert!(identical, "{name}: schedulers disagree — pipelining broke serializability");
+        let mut reference: Option<driver::RunOutput> = None;
+        for transport in [TransportKind::InProc, TransportKind::Tcp] {
+            let bsp = run_best(transport, SchedulerKind::Bsp);
+            let pip = run_best(transport, SchedulerKind::Pipelined);
+            let identical = models_identical(&bsp.model, &pip.model)
+                && reference
+                    .as_ref()
+                    .map(|r| models_identical(&r.model, &bsp.model))
+                    .unwrap_or(true);
+            assert!(
+                identical,
+                "{name}/{}: schedulers or transports disagree — serializability broke",
+                transport.name()
+            );
 
-        let tb = bsp.summary.total_time;
-        let tp = pip.summary.total_time;
-        let overlap: Duration = pip.summary.total_overlap();
-        table.row(vec![
-            (*name).to_string(),
-            fmt_duration(tb),
-            fmt_duration(tp),
-            format!("{:.2}x", tb.as_secs_f64() / tp.as_secs_f64().max(1e-12)),
-            format!("{:.1}", overlap.as_secs_f64() * 1e3),
-            pip.summary.total_respins().to_string(),
-            identical.to_string(),
-        ]);
+            let tb = bsp.summary.total_time;
+            let tp = pip.summary.total_time;
+            let overlap: Duration = pip.summary.total_overlap();
+            // Transport overhead per epoch, averaged across both runs.
+            let epochs = (bsp.summary.epochs.len() + pip.summary.epochs.len()).max(1);
+            let wire =
+                bsp.summary.total_wire_bytes() + pip.summary.total_wire_bytes();
+            let ser = bsp.summary.total_ser_time() + pip.summary.total_ser_time();
+            table.row(vec![
+                (*name).to_string(),
+                transport.name().to_string(),
+                fmt_duration(tb),
+                fmt_duration(tp),
+                format!("{:.2}x", tb.as_secs_f64() / tp.as_secs_f64().max(1e-12)),
+                format!("{:.1}", overlap.as_secs_f64() * 1e3),
+                format!("{} B", wire as usize / epochs),
+                format!("{:.2} ms", ser.as_secs_f64() * 1e3 / epochs as f64),
+                pip.summary.total_respins().to_string(),
+                identical.to_string(),
+            ]);
+            if reference.is_none() {
+                reference = Some(bsp);
+            }
+        }
     }
     table.print();
     let csv = "target/bench-results/schedulers.csv";
@@ -118,6 +151,8 @@ fn main() {
         println!("csv: {csv}");
     }
     println!(
-        "(identical=true is asserted: both schedulers validate in the same Thm 3.1 serial order)"
+        "(identical=true is asserted across schedulers AND transports: every path validates in \
+         the same Thm 3.1 serial order; wire/ep and ser/ep are what the tcp message boundary \
+         costs — inproc rows show 0)"
     );
 }

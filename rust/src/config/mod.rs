@@ -103,6 +103,61 @@ impl SchedulerKind {
     }
 }
 
+/// Which transport moves jobs, replies and snapshots between the master
+/// and its peers (compute workers and validator shards).
+///
+/// Both transports produce bit-identical models
+/// (`rust/tests/transport_equivalence.rs`); they differ only in whether the
+/// cluster's message boundary is crossed by pointer (`Arc`) or by bytes
+/// (the `coordinator::wire` format over loopback sockets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process peers: `mpsc` channels and `Arc`-shared snapshots — the
+    /// zero-copy fast path.
+    InProc,
+    /// Localhost TCP peers: every job, reply and snapshot is serialized
+    /// through the length-prefixed wire format — the single-host stand-in
+    /// for a real multi-machine cluster.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a transport name.
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "inproc" | "in-proc" | "threads" | "local" => Ok(TransportKind::InProc),
+            "tcp" | "socket" | "loopback" => Ok(TransportKind::Tcp),
+            other => {
+                Err(Error::config(format!("unknown transport `{other}` (inproc|tcp)")))
+            }
+        }
+    }
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+    /// Default transport: the `OCCML_TRANSPORT` environment override if
+    /// set (the CI loopback job exports `OCCML_TRANSPORT=tcp` to run the
+    /// whole tier-1 suite over sockets), in-proc otherwise.
+    ///
+    /// An *invalid* value panics rather than falling back: the env var
+    /// exists precisely to force a transport under test, and silently
+    /// running in-proc would keep a CI job green while testing nothing.
+    pub fn from_env() -> TransportKind {
+        match std::env::var("OCCML_TRANSPORT") {
+            Ok(s) => TransportKind::parse(&s)
+                .unwrap_or_else(|e| panic!("OCCML_TRANSPORT: {e}")),
+            Err(std::env::VarError::NotUnicode(v)) => {
+                panic!("OCCML_TRANSPORT is set but not valid unicode: {v:?}")
+            }
+            Err(std::env::VarError::NotPresent) => TransportKind::InProc,
+        }
+    }
+}
+
 /// Data source for a run.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DataSource {
@@ -153,6 +208,12 @@ pub struct RunConfig {
     pub backend: BackendKind,
     /// Epoch scheduling policy (BSP barrier vs pipelined validation).
     pub scheduler: SchedulerKind,
+    /// Cluster transport (in-process channels vs loopback TCP sockets).
+    pub transport: TransportKind,
+    /// Validator-shard peers on the validation plane. `0` (the default)
+    /// means "half of `procs`, min 1" — see
+    /// [`RunConfig::effective_validators`].
+    pub validator_shards: usize,
     /// Directory holding AOT artifacts (XLA backend).
     pub artifacts_dir: PathBuf,
     /// RNG seed.
@@ -180,6 +241,8 @@ impl Default for RunConfig {
             bootstrap_div: 16,
             backend: BackendKind::Native,
             scheduler: SchedulerKind::Bsp,
+            transport: TransportKind::from_env(),
+            validator_shards: 0,
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 0,
             source: DataSource::DpClusters,
@@ -220,6 +283,13 @@ impl RunConfig {
         if let Some(s) = doc.get_str("run.scheduler") {
             cfg.scheduler = SchedulerKind::parse(s)?;
         }
+        if let Some(s) = doc.get_str("run.transport") {
+            cfg.transport = TransportKind::parse(s)?;
+        }
+        if let Some(v) = doc.get_int("run.validator_shards") {
+            cfg.validator_shards = usize::try_from(v)
+                .map_err(|_| Error::config("run.validator_shards must be ≥ 0"))?;
+        }
         if let Some(s) = doc.get_str("run.artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(s);
         }
@@ -259,12 +329,32 @@ impl RunConfig {
         if self.dim == 0 || self.dim > 4096 {
             return Err(Error::config(format!("dim out of range: {}", self.dim)));
         }
+        if self.validator_shards > 1024 {
+            return Err(Error::config(format!(
+                "validator_shards out of range (≤ 1024): {}",
+                self.validator_shards
+            )));
+        }
         Ok(())
     }
 
     /// Points per epoch, `P·b`.
     pub fn points_per_epoch(&self) -> usize {
         self.procs * self.block
+    }
+
+    /// Validator peers on the validation plane. `0` ⇒ half the workers
+    /// (min 1): under the pipelined scheduler validation overlaps the next
+    /// wave's compute on all `P` workers, so a full-`P` validation plane
+    /// would oversubscribe the machine during exactly the window the
+    /// overlap exists to exploit (the PR 1 thread-cap rationale, applied
+    /// to peers). Set `validator_shards` explicitly to override.
+    pub fn effective_validators(&self) -> usize {
+        if self.validator_shards == 0 {
+            (self.procs / 2).max(1)
+        } else {
+            self.validator_shards
+        }
     }
 }
 
@@ -330,5 +420,38 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn transport_parses_and_rejects() {
+        assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::InProc);
+        assert_eq!(TransportKind::parse("TCP").unwrap(), TransportKind::Tcp);
+        assert_eq!(TransportKind::parse("loopback").unwrap(), TransportKind::Tcp);
+        let err = TransportKind::parse("infiniband").unwrap_err().to_string();
+        assert!(err.contains("infiniband") && err.contains("inproc") && err.contains("tcp"));
+    }
+
+    #[test]
+    fn transport_and_shards_extract_from_doc() {
+        let doc = toml::parse(
+            "[run]\ntransport = \"tcp\"\nvalidator_shards = 3\nprocs = 5\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        assert_eq!(cfg.validator_shards, 3);
+        assert_eq!(cfg.effective_validators(), 3);
+        let doc = toml::parse("[run]\nprocs = 5\n").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.validator_shards, 0);
+        assert_eq!(cfg.effective_validators(), 2, "0 shards means half the workers");
+        let doc = toml::parse("[run]\nprocs = 1\n").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().effective_validators(), 1);
+        assert!(RunConfig::from_doc(&toml::parse("[run]\ntransport = \"rdma\"\n").unwrap())
+            .is_err());
+        assert!(RunConfig::from_doc(
+            &toml::parse("[run]\nvalidator_shards = 2000\n").unwrap()
+        )
+        .is_err());
     }
 }

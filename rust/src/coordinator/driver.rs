@@ -6,7 +6,10 @@
 //! [`EpochAlgo`] hooks for job construction, merging, and validation.
 //! Workers compute, the master validates (in point-index order — the
 //! Thm 3.1 serial order) and replicates state by handing later epochs an
-//! updated snapshot.
+//! updated snapshot. All peer communication — compute waves and
+//! validation-shard dispatch alike — goes through a [`Cluster`] built from
+//! `cfg.transport` (in-proc channels or loopback TCP; see
+//! [`super::transport`]).
 //!
 //! Epoch structure (Fig 5): epoch `t` covers the contiguous index range
 //! `[start + t·P·b, start + (t+1)·P·b)`; each worker gets a contiguous
@@ -14,10 +17,12 @@
 //! the result is identical for every worker count `P` at fixed `P·b` — and
 //! identical across schedulers (`rust/tests/scheduler_equivalence.rs`).
 
-use super::engine::{split_range_chunked, Job, JobOutput, WorkerPool};
+use super::engine::{split_range_chunked, Job, JobOutput};
 use super::scheduler::{self, EpochAlgo, EpochCounts, Scheduler};
+use super::transport::Cluster;
 use super::validator::{
-    bp_validate, dp_validate_sharded, ofl_validate_sharded, BpProposal, DpProposal, OflProposal,
+    bp_validate, dp_validate_clustered, ofl_validate_clustered, BpProposal, DpProposal,
+    OflProposal,
 };
 use crate::algorithms::bpmeans::{descend_z, BpModel, RIDGE_EPS};
 use crate::algorithms::dpmeans::DpModel;
@@ -197,6 +202,7 @@ fn patch_nearest(
 
 /// One DP-means pass's mutable state, driven by a scheduler.
 struct DpPass<'a> {
+    cluster: &'a Cluster,
     data: &'a Dataset,
     backend: &'a Arc<dyn ComputeBackend>,
     centers: &'a mut Matrix,
@@ -261,10 +267,18 @@ impl EpochAlgo for DpPass<'_> {
         pairs.sort_by_key(|(p, _)| p.idx);
         let (proposals, keys): (Vec<DpProposal>, Vec<u32>) = pairs.into_iter().unzip();
 
-        // Validation at the master: sharded conflict pre-computation, then
-        // the serial point-index-order merge.
-        let outcome =
-            dp_validate_sharded(self.centers, base, &proposals, &keys, self.lambda2, self.shards);
+        // Validation at the master: conflict pre-computation on the
+        // cluster's validator peers, then the serial point-index-order
+        // merge.
+        let outcome = dp_validate_clustered(
+            self.cluster,
+            self.centers,
+            base,
+            &proposals,
+            &keys,
+            self.lambda2,
+            self.shards,
+        )?;
         for (i, c) in &outcome.resolved {
             if self.assignments[*i as usize] != *c {
                 self.assignments[*i as usize] = *c;
@@ -291,7 +305,13 @@ pub fn run_dpmeans(
     let n = data.len();
     let d = data.dim();
     let lambda2 = (cfg.lambda * cfg.lambda) as f32;
-    let pool = WorkerPool::spawn(data.clone(), backend.clone(), cfg.procs);
+    let cluster = Cluster::spawn(
+        cfg.transport,
+        data.clone(),
+        backend.clone(),
+        cfg.procs,
+        cfg.effective_validators(),
+    )?;
     let sched = scheduler::make(cfg.scheduler);
     let total = Stopwatch::start();
 
@@ -325,20 +345,25 @@ pub fn run_dpmeans(
 
         let epochs = epoch_ranges(start, n, cfg.points_per_epoch());
         let mut st = DpPass {
+            cluster: &cluster,
             data: &data,
             backend: &backend,
             centers: &mut centers,
             assignments: &mut assignments,
             lambda2,
-            shards: cfg.procs,
+            // Conflict-key buckets: at least one per validator peer, so
+            // every peer can own a non-empty key range (the bucket count
+            // never changes the outcome — only the parallelism).
+            shards: cfg.procs.max(cluster.validators),
             changed: changed0,
             created: created0,
         };
-        sched.run_pass(&pool, &mut st, &epochs, pass, sink, &mut epochs_log)?;
+        sched.run_pass(&cluster, &mut st, &epochs, pass, sink, &mut epochs_log)?;
         let changed = st.changed;
         created_per_pass.push(st.created);
 
         // Phase 2: recompute centers as means (parallel suffstats).
+        let net0 = cluster.stats();
         let recompute_sw = Stopwatch::start();
         let k = centers.rows;
         if k > 0 {
@@ -347,7 +372,7 @@ pub fn run_dpmeans(
                 .into_iter()
                 .map(|range| Job::SuffStats { range, assignments: shared.clone(), k })
                 .collect();
-            let (outs, worker_time) = pool.scatter_gather(jobs)?;
+            let (outs, worker_time) = cluster.scatter_gather(jobs)?;
             // Deterministic reduce: combine per-chunk partials in global
             // chunk order, independent of the worker count.
             let mut all_chunks = Vec::new();
@@ -367,6 +392,7 @@ pub fn run_dpmeans(
                 }
             }
             blocked::finalize_means(&sums, &counts, &mut centers);
+            let net = cluster.stats().since(&net0);
             let rec = EpochRecord {
                 iteration: pass,
                 epoch: usize::MAX, // convention: the recompute "epoch"
@@ -374,6 +400,8 @@ pub fn run_dpmeans(
                 centers: k,
                 worker_time,
                 total_time: recompute_sw.elapsed(),
+                wire_bytes: net.wire_bytes,
+                ser_time: net.ser_time,
                 ..Default::default()
             };
             sink.emit(&rec);
@@ -408,6 +436,7 @@ pub fn run_dpmeans(
 
 /// The OFL single pass's mutable state, driven by a scheduler.
 struct OflPass<'a> {
+    cluster: &'a Cluster,
     data: &'a Dataset,
     backend: &'a Arc<dyn ComputeBackend>,
     centers: &'a mut Matrix,
@@ -480,7 +509,8 @@ impl EpochAlgo for OflPass<'_> {
         let (proposals, keys): (Vec<OflProposal>, Vec<u32>) = pairs.into_iter().unzip();
 
         let draws = self.draws;
-        let outcome = ofl_validate_sharded(
+        let outcome = ofl_validate_clustered(
+            self.cluster,
             self.centers,
             base,
             &proposals,
@@ -488,7 +518,7 @@ impl EpochAlgo for OflPass<'_> {
             self.lambda2,
             |i| draws[i as usize],
             self.shards,
-        );
+        )?;
         for (i, c) in &outcome.resolved {
             self.assignments[*i as usize] = *c;
         }
@@ -515,7 +545,13 @@ pub fn run_ofl(
     let n = data.len();
     let d = data.dim();
     let lambda2 = cfg.lambda * cfg.lambda;
-    let pool = WorkerPool::spawn(data.clone(), backend.clone(), cfg.procs);
+    let cluster = Cluster::spawn(
+        cfg.transport,
+        data.clone(),
+        backend.clone(),
+        cfg.procs,
+        cfg.effective_validators(),
+    )?;
     let sched = scheduler::make(cfg.scheduler);
     let total = Stopwatch::start();
 
@@ -527,6 +563,7 @@ pub fn run_ofl(
 
     let epochs = epoch_ranges(0, n, cfg.points_per_epoch());
     let mut st = OflPass {
+        cluster: &cluster,
         data: &data,
         backend: &backend,
         centers: &mut centers,
@@ -534,9 +571,10 @@ pub fn run_ofl(
         opened_by: &mut opened_by,
         draws: &draws,
         lambda2,
-        shards: cfg.procs,
+        // See DpPass: one conflict-key bucket per validator peer minimum.
+        shards: cfg.procs.max(cluster.validators),
     };
-    sched.run_pass(&pool, &mut st, &epochs, 0, sink, &mut epochs_log)?;
+    sched.run_pass(&cluster, &mut st, &epochs, 0, sink, &mut epochs_log)?;
 
     let model = OflModel { centers: centers.clone(), assignments, opened_by };
     let summary = RunSummary {
@@ -671,7 +709,11 @@ pub fn run_bpmeans(
     let d = data.dim();
     let lambda2 = (cfg.lambda * cfg.lambda) as f32;
     let sweeps = 2;
-    let pool = WorkerPool::spawn(data.clone(), backend.clone(), cfg.procs);
+    // BP validation has no sharded variant (accepted features are derived
+    // residuals — see `validator`), so don't spawn a validation plane that
+    // would never receive a job: one placeholder peer keeps the Cluster
+    // invariants without the thread/socket cost.
+    let cluster = Cluster::spawn(cfg.transport, data.clone(), backend.clone(), cfg.procs, 1)?;
     let sched = scheduler::make(cfg.scheduler);
     let total = Stopwatch::start();
 
@@ -727,11 +769,12 @@ pub fn run_bpmeans(
             changed: changed0,
             created: created0,
         };
-        sched.run_pass(&pool, &mut st, &epochs, pass, sink, &mut epochs_log)?;
+        sched.run_pass(&cluster, &mut st, &epochs, pass, sink, &mut epochs_log)?;
         let changed = st.changed;
         created_per_pass.push(st.created);
 
         // Phase 2: F ← (ZᵀZ + εI)⁻¹ ZᵀX via parallel partials.
+        let net0 = cluster.stats();
         let recompute_sw = Stopwatch::start();
         let k = features.rows;
         if k > 0 {
@@ -740,7 +783,7 @@ pub fn run_bpmeans(
                 .into_iter()
                 .map(|range| Job::BpStats { range, z: shared.clone(), k })
                 .collect();
-            let (outs, worker_time) = pool.scatter_gather(jobs)?;
+            let (outs, worker_time) = cluster.scatter_gather(jobs)?;
             // Deterministic reduce in global chunk order (see SuffStats).
             let mut all_chunks = Vec::new();
             for out in outs {
@@ -761,6 +804,7 @@ pub fn run_bpmeans(
                 }
             }
             features = cholesky::solve_ridge(&ztz, &ztx, RIDGE_EPS)?;
+            let net = cluster.stats().since(&net0);
             let rec = EpochRecord {
                 iteration: pass,
                 epoch: usize::MAX,
@@ -768,6 +812,8 @@ pub fn run_bpmeans(
                 centers: k,
                 worker_time,
                 total_time: recompute_sw.elapsed(),
+                wire_bytes: net.wire_bytes,
+                ser_time: net.ser_time,
                 ..Default::default()
             };
             sink.emit(&rec);

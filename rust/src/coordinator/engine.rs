@@ -1,17 +1,26 @@
-//! The bulk-synchronous worker pool.
+//! Peer job execution and the in-process worker pool.
 //!
-//! P persistent worker threads each own a handle to the shared dataset and
-//! the compute backend. Every epoch (or mean-recompute phase) the master
-//! scatters one [`Job`] per worker and gathers one [`JobReply`] per worker —
+//! This module owns the cluster's *unit of work*: the [`Job`] /
+//! [`JobOutput`] / [`JobReply`] message types (shared by every transport —
+//! see [`super::transport`]) and [`WorkerPool`], the in-process peer group:
+//! P persistent threads each owning a handle to the shared dataset and the
+//! compute backend. Every epoch (or mean-recompute phase) the master
+//! scatters one [`Job`] per peer and gathers one [`JobReply`] per peer —
 //! the gather is the BSP barrier. Channels are `std::sync::mpsc`; the
 //! per-epoch coordination cost is two sends per worker, negligible next to
-//! the numeric work.
+//! the numeric work. The TCP transport reuses the same job executor
+//! ([`run_job`]) behind sockets instead of channels.
 //!
 //! Workers never touch global state: they read an immutable snapshot
 //! (`Arc<Matrix>`) of the epoch's centers/features — the paper's
 //! "replicated view of the global state" — and return pure data. All
 //! mutation happens in the master (driver + validators), which is what
 //! makes the execution serializable.
+//!
+//! A panicking job (bad geometry, poisoned input) is caught at the worker
+//! and surfaces as an `Err` reply rather than a dead thread: the wave's
+//! gather reports the error and the pool remains joinable, so dropping a
+//! pool mid-wave can never hang the master.
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};
@@ -61,6 +70,17 @@ pub enum Job {
         /// Number of features.
         k: usize,
     },
+    /// Validation-plane job: pairwise conflict distances for a group of
+    /// validator shards. Each shard is a strictly-increasing list of
+    /// positions into the `vectors` rows (the epoch's proposals in
+    /// point-index order); the peer returns every within-shard pair
+    /// distance (see [`super::validator`]).
+    PairCache {
+        /// Proposal vectors, one row per proposal, in point-index order.
+        vectors: Arc<Matrix>,
+        /// The shard lists (conflict-key buckets) this peer owns.
+        shards: Vec<Vec<u32>>,
+    },
     /// Terminate the worker thread.
     Shutdown,
 }
@@ -102,6 +122,12 @@ pub enum JobOutput {
         /// `(chunk id, ZᵀZ partial (k×k), ZᵀX partial (k×d))` per chunk.
         chunks: Vec<(usize, Matrix, Matrix)>,
     },
+    /// Same-shard pair distances, `(a, b, d²)` with `a < b` global proposal
+    /// positions, lexicographically sorted by `(a, b)`.
+    PairCache {
+        /// The peer's conflict cache contribution.
+        pairs: Vec<(u32, u32, f32)>,
+    },
 }
 
 /// A worker's reply: its id, the output (or error), and its busy time.
@@ -131,6 +157,10 @@ pub struct WorkerPool {
     pub procs: usize,
     /// Waves scattered but not yet gathered (0 or 1).
     in_flight: std::cell::Cell<usize>,
+    /// Set when a scatter failed partway: some workers own a job whose
+    /// reply can no longer be paired with a wave, so further scatters
+    /// would risk misattributing those stale replies.
+    poisoned: std::cell::Cell<bool>,
 }
 
 impl WorkerPool {
@@ -148,18 +178,37 @@ impl WorkerPool {
             let reply_tx = reply_tx.clone();
             handles.push(std::thread::spawn(move || worker_loop(w, data, backend, rx, reply_tx)));
         }
-        WorkerPool { senders, replies, handles, procs, in_flight: std::cell::Cell::new(0) }
+        WorkerPool {
+            senders,
+            replies,
+            handles,
+            procs,
+            in_flight: std::cell::Cell::new(0),
+            poisoned: std::cell::Cell::new(false),
+        }
     }
 
     /// Scatter one job per worker (jobs.len() must equal procs) without
     /// waiting for results. At most one wave may be outstanding; a matching
     /// [`WorkerPool::gather`] must run before the next scatter.
+    ///
+    /// A scatter that fails partway (a worker's channel closed) *poisons*
+    /// the pool: workers that already received their job will reply, but
+    /// those replies belong to no wave, so later scatters error out
+    /// instead of silently pairing a new wave with stale replies. (A
+    /// worker *job* failure is different — the wave completes, `gather`
+    /// reports the error, and the pool stays usable.)
     pub fn scatter(&self, jobs: Vec<Job>) -> Result<()> {
         assert_eq!(jobs.len(), self.procs);
         assert_eq!(self.in_flight.get(), 0, "scatter with a wave still outstanding");
+        if self.poisoned.get() {
+            return Err(Error::Coordinator("worker pool poisoned by an earlier failed scatter".into()));
+        }
         for (tx, job) in self.senders.iter().zip(jobs) {
-            tx.send(job)
-                .map_err(|_| Error::Coordinator("worker channel closed".into()))?;
+            if tx.send(job).is_err() {
+                self.poisoned.set(true);
+                return Err(Error::Coordinator("worker channel closed".into()));
+            }
         }
         self.in_flight.set(1);
         Ok(())
@@ -201,12 +250,53 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
+        // Shutdown must be infallible even when a prior scatter/gather
+        // errored mid-wave: send Shutdown best-effort, then *drop the
+        // senders* so any worker still parked in `recv` sees a disconnect
+        // regardless of whether its Shutdown arrived. Replies never block
+        // (the mpsc channel is unbounded) and panicking jobs are caught in
+        // the worker loop, so every thread reaches its exit and the joins
+        // below cannot hang.
         for tx in &self.senders {
             let _ = tx.send(Job::Shutdown);
         }
+        self.senders.clear();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Render a caught panic payload as an error message.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("worker panicked: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("worker panicked: {s}")
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// Execute one job against the peer's dataset and backend — the single
+/// executor behind every transport (thread workers and TCP peers).
+/// `Job::Shutdown` is a control message, not computable work.
+pub(crate) fn run_job(
+    data: &Arc<Dataset>,
+    backend: &Arc<dyn ComputeBackend>,
+    job: Job,
+) -> Result<JobOutput> {
+    match job {
+        Job::Shutdown => Err(Error::Coordinator("shutdown is not a computable job".into())),
+        Job::Nearest { range, centers } => run_nearest(data, backend, range, &centers),
+        Job::SuffStats { range, assignments, k } => {
+            run_suffstats(data, backend, range, &assignments, k)
+        }
+        Job::BpDescend { range, features, sweeps } => {
+            run_bp_descend(data, backend, range, &features, sweeps)
+        }
+        Job::BpStats { range, z, k } => run_bp_stats(data, range, &z, k),
+        Job::PairCache { vectors, shards } => run_pair_cache(&vectors, &shards),
     }
 }
 
@@ -218,18 +308,18 @@ fn worker_loop(
     reply_tx: Sender<JobReply>,
 ) {
     while let Ok(job) = rx.recv() {
+        if matches!(job, Job::Shutdown) {
+            return;
+        }
         let start = Instant::now();
-        let output = match job {
-            Job::Shutdown => return,
-            Job::Nearest { range, centers } => run_nearest(&data, &backend, range, &centers),
-            Job::SuffStats { range, assignments, k } => {
-                run_suffstats(&data, &backend, range, &assignments, k)
-            }
-            Job::BpDescend { range, features, sweeps } => {
-                run_bp_descend(&data, &backend, range, &features, sweeps)
-            }
-            Job::BpStats { range, z, k } => run_bp_stats(&data, range, &z, k),
-        };
+        // A panic inside a job (poisoned inputs, bad geometry) must not
+        // kill the thread: the master counts one reply per peer per wave,
+        // and a silently-dead worker would deadlock the gather.
+        let output =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_job(&data, &backend, job)
+            }))
+            .unwrap_or_else(|p| Err(Error::Coordinator(panic_message(&*p))));
         let busy = start.elapsed();
         if reply_tx.send(JobReply { worker: id, output, busy }).is_err() {
             return; // master gone
@@ -293,6 +383,21 @@ fn run_bp_descend(
     }
     let out = backend.bp_descend(Block::of(&data.points, range), features, sweeps)?;
     Ok(JobOutput::BpDescend { z: out.z, k: features.rows, residuals: out.residuals, r2: out.r2 })
+}
+
+fn run_pair_cache(vectors: &Matrix, shards: &[Vec<u32>]) -> Result<JobOutput> {
+    for shard in shards {
+        for &p in shard {
+            if p as usize >= vectors.rows {
+                return Err(Error::Coordinator(format!(
+                    "pair-cache position {p} out of range ({} proposals)",
+                    vectors.rows
+                )));
+            }
+        }
+    }
+    let rows: Vec<&[f32]> = (0..vectors.rows).map(|r| vectors.row(r)).collect();
+    Ok(JobOutput::PairCache { pairs: super::validator::shard_pairs_sorted(&rows, shards) })
 }
 
 fn run_bp_stats(
@@ -498,6 +603,75 @@ mod tests {
     fn pool_shutdown_clean() {
         let (_, pool) = pool(10, 2);
         drop(pool); // must not hang
+    }
+
+    /// A wave whose job panics inside a worker (assignments shorter than
+    /// the scattered range → out-of-bounds slice) must surface as an `Err`
+    /// from gather — not a deadlock — and the pool must still drop cleanly.
+    #[test]
+    fn poisoned_wave_reports_error_and_pool_stays_joinable() {
+        let (_, pool) = pool(100, 2);
+        let short = Arc::new(vec![0u32; 10]); // too short for range 0..100
+        let jobs: Vec<Job> = split_range_chunked(0..100, 2)
+            .into_iter()
+            .map(|range| Job::SuffStats { range, assignments: short.clone(), k: 2 })
+            .collect();
+        pool.scatter(jobs).unwrap();
+        let err = pool.gather();
+        assert!(err.is_err(), "panicking worker must produce a wave error");
+        // The pool survived the poisoned wave: a fresh wave still works.
+        let ok = Arc::new(vec![0u32; 100]);
+        let jobs: Vec<Job> = split_range_chunked(0..100, 2)
+            .into_iter()
+            .map(|range| Job::SuffStats { range, assignments: ok.clone(), k: 2 })
+            .collect();
+        pool.scatter_gather(jobs).unwrap();
+        drop(pool); // must not hang
+    }
+
+    /// Dropping a pool with a wave still outstanding (scattered, never
+    /// gathered — the shape left behind by an errored scatter/gather) must
+    /// join all workers without hanging.
+    #[test]
+    fn drop_with_outstanding_poisoned_wave_does_not_hang() {
+        let (_, pool) = pool(100, 2);
+        let short = Arc::new(vec![0u32; 10]);
+        let jobs: Vec<Job> = split_range_chunked(0..100, 2)
+            .into_iter()
+            .map(|range| Job::SuffStats { range, assignments: short.clone(), k: 2 })
+            .collect();
+        pool.scatter(jobs).unwrap();
+        drop(pool); // wave never gathered; drop must still join
+    }
+
+    #[test]
+    fn pair_cache_job_computes_shard_pairs() {
+        let (_, pool) = pool(10, 2);
+        let mut vectors = Matrix::zeros(0, 2);
+        vectors.push_row(&[0.0, 0.0]);
+        vectors.push_row(&[3.0, 4.0]);
+        vectors.push_row(&[0.0, 1.0]);
+        let vectors = Arc::new(vectors);
+        let jobs = vec![
+            Job::PairCache { vectors: vectors.clone(), shards: vec![vec![0, 1, 2]] },
+            Job::PairCache { vectors: vectors.clone(), shards: vec![] },
+        ];
+        let (outs, _) = pool.scatter_gather(jobs).unwrap();
+        let JobOutput::PairCache { pairs } = &outs[0] else { panic!("wrong output kind") };
+        assert_eq!(pairs.len(), 3);
+        assert_eq!(pairs[0], (0, 1, 25.0));
+        assert_eq!(pairs[1], (0, 2, 1.0));
+        assert_eq!(pairs[2], (1, 2, 18.0));
+        let JobOutput::PairCache { pairs } = &outs[1] else { panic!("wrong output kind") };
+        assert!(pairs.is_empty());
+    }
+
+    #[test]
+    fn pair_cache_job_rejects_out_of_range_positions() {
+        let (_, pool) = pool(10, 1);
+        let vectors = Arc::new(Matrix::zeros(2, 2));
+        let jobs = vec![Job::PairCache { vectors, shards: vec![vec![0, 7]] }];
+        assert!(pool.scatter_gather(jobs).is_err());
     }
 
     #[test]

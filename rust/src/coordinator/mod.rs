@@ -1,41 +1,69 @@
-//! The OCC coordinator — the paper's system contribution (L3).
+//! The OCC coordinator — the paper's system contribution (L3), organized
+//! as three planes.
 //!
-//! Implements the OCC pattern of §1.1 as a bulk-synchronous master/worker
-//! engine:
+//! The paper's pattern (§1.1) is: workers run *optimistic transactions*
+//! against a replicated snapshot of the global state; a master *validates*
+//! the epoch's proposals serially and repairs the optimistic assumptions
+//! that failed. This crate separates the machinery into three orthogonal
+//! planes, each swappable without touching the others:
 //!
-//! * [`engine`] — a persistent pool of P worker threads; each epoch the
-//!   master scatters per-block jobs (nearest-center assignment, BP
-//!   coordinate descent, sufficient statistics) and gathers results at the
-//!   epoch barrier. Workers run the numeric hot path through a
-//!   [`crate::runtime::ComputeBackend`] (native kernels or AOT XLA
-//!   artifacts) — *optimistic transactions*.
-//! * [`validator`] — the serial validation step executed by the master at
-//!   each epoch boundary: `DPValidate` (Alg 2), `OFLValidate` (Alg 5) and
-//!   `BPValidate` (Alg 8). Proposals are validated in point-index order,
-//!   which realizes exactly the serial permutation of Theorem 3.1 /
-//!   Appendix B.
-//! * [`driver`] — assembles epochs, validation, the §4.2 bootstrap, the
-//!   mean-recompute phases and metrics into full runs of OCC DP-means
-//!   (Alg 3), OCC OFL (Alg 4) and OCC BP-means (Alg 6).
-//! * [`scheduler`] — epoch scheduling policies: the classic BSP barrier
-//!   and a pipelined schedule that overlaps epoch `t+1`'s worker compute
-//!   with epoch `t`'s master-side validation while preserving the Thm 3.1
-//!   serial order bit for bit.
+//! ## 1. The scheduling plane — *when* steps run
+//!
+//! [`scheduler`] owns the epoch loop: when worker waves are scattered, when
+//! the master validates, and how much of the two overlaps. `Bsp` is the
+//! paper's barrier structure (Fig 5); `Pipelined` overlaps epoch `t+1`'s
+//! compute with epoch `t`'s validation while preserving the Theorem 3.1
+//! serial order bit for bit. [`driver`] supplies the per-algorithm epoch
+//! hooks (job construction, merge, validation — OCC DP-means Alg 3, OFL
+//! Alg 4, BP-means Alg 6) plus the §4.2 bootstrap and the mean-recompute
+//! phases.
+//!
+//! ## 2. The transport plane — *where* messages move
+//!
+//! [`transport`] hides the cluster behind a `Transport` trait driven
+//! through the `Cluster` facade: scatter one [`engine::Job`] per peer,
+//! gather one reply per peer, on either of two peer groups (compute
+//! workers and validator shards). `InProc` keeps today's zero-copy fast
+//! path (`mpsc` channels, `Arc` snapshots); [`tcp`] puts every peer behind
+//! a localhost socket and moves jobs, snapshots and replies through
+//! [`wire`] — an explicit, versioned, length-prefixed format with bit-exact
+//! f32 encoding. [`engine`] holds the job types, the shared job executor
+//! and the in-process `WorkerPool`.
+//!
+//! ## 3. The validation plane — *what commits*
+//!
+//! [`validator`] is the master's epoch-boundary step: `DPValidate` (Alg 2),
+//! `OFLValidate` (Alg 5), `BPValidate` (Alg 8), consuming proposals in
+//! point-index order — exactly the serial permutation of Theorem 3.1 /
+//! Appendix B. The expensive conflict pre-computation is sharded by
+//! conflict key: shards are *peers on the transport* (each owns a
+//! conflict-key range and returns a per-shard conflict cache; the master
+//! combines caches with a deterministic tree reduce in point-index order)
+//! or, for the thread-local fallback, scoped threads computing the same
+//! caches. Either way the serial merge replays the exact Thm 3.1 decision
+//! sequence from bit-identical cached distances. [`soft`] adds the §6
+//! relaxed-consistency knob on top.
 //!
 //! ## Determinism
 //!
 //! For a fixed dataset, seed, and epoch size `P·b`, the result is
 //! *identical for every worker count `P`* — proposals are merged and
 //! validated in point-index order, and block boundaries depend only on
-//! `P·b`. This is the practical content of serializability and is enforced
-//! by `rust/tests/serializability.rs`. The same invariant holds across
-//! scheduling policies: `rust/tests/scheduler_equivalence.rs` checks that
-//! BSP and pipelined runs produce bit-identical models.
+//! `P·b` (`rust/tests/serializability.rs`). The same invariant holds
+//! across scheduling policies (`rust/tests/scheduler_equivalence.rs`) and
+//! across transports (`rust/tests/transport_equivalence.rs`): BSP vs
+//! pipelined, in-proc vs TCP — all produce bit-identical models, because
+//! every validation call receives byte-identical inputs in the identical
+//! order no matter how the bytes travelled.
 
 pub mod driver;
 pub mod engine;
 pub mod scheduler;
 pub mod soft;
+pub mod tcp;
+pub mod transport;
 pub mod validator;
+pub mod wire;
 
 pub use driver::{run, run_with, Model, RunOutput};
+pub use transport::{Cluster, Transport};

@@ -12,8 +12,12 @@
 //!   master validates epoch `t`, the workers already compute epoch `t+1`
 //!   against the *stale* snapshot `C^{t-1}`. The pipeline is bounded at two
 //!   epochs in flight (one at the workers, one at the master); the bound
-//!   falls out of [`WorkerPool::gather`] being the only way to retire a
+//!   falls out of [`Cluster::gather`] being the only way to retire a
 //!   wave, which is the backpressure point.
+//!
+//! Schedulers are transport-agnostic: they drive a [`Cluster`] (in-proc
+//! threads or TCP peers — see [`super::transport`]) and never see how jobs
+//! and replies actually move.
 //!
 //! ## Why pipelining preserves Theorem 3.1
 //!
@@ -58,7 +62,8 @@
 //! merge in point-index order replays the exact Thm 3.1 serial decision
 //! sequence from cached (bit-identical) distances.
 
-use super::engine::{split_range, Job, JobOutput, WorkerPool};
+use super::engine::{split_range, Job, JobOutput};
+use super::transport::Cluster;
 use crate::error::Result;
 use crate::linalg::Matrix;
 use crate::metrics::{EpochRecord, MetricsSink, Stopwatch};
@@ -120,10 +125,14 @@ pub trait Scheduler {
     fn name(&self) -> &'static str;
 
     /// Drive one pass's epochs (contiguous point ranges, in order) through
-    /// `algo` on `pool`, emitting one [`EpochRecord`] per epoch.
+    /// `algo` on `cluster`, emitting one [`EpochRecord`] per epoch.
+    /// Transport accounting (`wire_bytes`, `ser_ms`) is recorded as
+    /// per-epoch deltas of [`Cluster::stats`]; under the pipelined policy
+    /// the speculative scatter of epoch `t+1` is attributed to the epoch
+    /// whose validation it overlaps.
     fn run_pass(
         &self,
-        pool: &WorkerPool,
+        cluster: &Cluster,
         algo: &mut dyn EpochAlgo,
         epochs: &[Range<usize>],
         pass: usize,
@@ -143,13 +152,13 @@ pub fn make(kind: crate::config::SchedulerKind) -> Box<dyn Scheduler> {
 /// Scatter one epoch against the current committed snapshot; returns the
 /// per-worker ranges and the snapshot's row count (for staleness checks).
 fn scatter_epoch(
-    pool: &WorkerPool,
+    cluster: &Cluster,
     algo: &dyn EpochAlgo,
     epoch: &Range<usize>,
 ) -> Result<(Vec<Range<usize>>, usize)> {
     let snap = algo.snapshot();
-    let ranges = split_range(epoch.clone(), pool.procs);
-    pool.scatter(algo.make_jobs(&snap, &ranges))?;
+    let ranges = split_range(epoch.clone(), cluster.procs);
+    cluster.scatter(algo.make_jobs(&snap, &ranges))?;
     Ok((ranges, snap.rows))
 }
 
@@ -163,7 +172,7 @@ impl Scheduler for Bsp {
 
     fn run_pass(
         &self,
-        pool: &WorkerPool,
+        cluster: &Cluster,
         algo: &mut dyn EpochAlgo,
         epochs: &[Range<usize>],
         pass: usize,
@@ -171,12 +180,14 @@ impl Scheduler for Bsp {
         log: &mut Vec<EpochRecord>,
     ) -> Result<()> {
         for (t, epoch) in epochs.iter().enumerate() {
+            let net0 = cluster.stats();
             let epoch_sw = Stopwatch::start();
-            let (ranges, _) = scatter_epoch(pool, &*algo, epoch)?;
-            let (outs, worker_time) = pool.gather()?;
+            let (ranges, _) = scatter_epoch(cluster, &*algo, epoch)?;
+            let (outs, worker_time) = cluster.gather()?;
             let master_sw = Stopwatch::start();
             let counts = algo.validate(&outs, &ranges)?;
             let master_time = master_sw.elapsed();
+            let net = cluster.stats().since(&net0);
             let rec = EpochRecord {
                 iteration: pass,
                 epoch: t,
@@ -191,6 +202,8 @@ impl Scheduler for Bsp {
                 overlap_time: Duration::ZERO,
                 queue_depth: 1,
                 respins: 0,
+                wire_bytes: net.wire_bytes,
+                ser_time: net.ser_time,
             };
             sink.emit(&rec);
             log.push(rec);
@@ -210,7 +223,7 @@ impl Scheduler for Pipelined {
 
     fn run_pass(
         &self,
-        pool: &WorkerPool,
+        cluster: &Cluster,
         algo: &mut dyn EpochAlgo,
         epochs: &[Range<usize>],
         pass: usize,
@@ -220,11 +233,12 @@ impl Scheduler for Pipelined {
         if epochs.is_empty() {
             return Ok(());
         }
-        let mut inflight = Some(scatter_epoch(pool, &*algo, &epochs[0])?);
+        let mut net0 = cluster.stats();
+        let mut inflight = Some(scatter_epoch(cluster, &*algo, &epochs[0])?);
         for (t, epoch) in epochs.iter().enumerate() {
             let epoch_sw = Stopwatch::start();
             let (ranges, stale_rows) = inflight.take().expect("pipeline wave missing");
-            let (mut outs, mut worker_time) = pool.gather()?;
+            let (mut outs, mut worker_time) = cluster.gather()?;
             let stale = stale_rows < algo.committed_rows();
             let mut respins = 0;
             // Single-wave compute time, for the overlap estimate below
@@ -236,8 +250,8 @@ impl Scheduler for Pipelined {
                 // computation) before anything else enters the queue.
                 respins = 1;
                 let snap = algo.snapshot();
-                pool.scatter(algo.make_jobs(&snap, &ranges))?;
-                let (fresh, wt) = pool.gather()?;
+                cluster.scatter(algo.make_jobs(&snap, &ranges))?;
+                let (fresh, wt) = cluster.gather()?;
                 outs = fresh;
                 worker_time += wt;
                 wave_time = wt;
@@ -246,7 +260,7 @@ impl Scheduler for Pipelined {
             // state — this is what overlaps the master work below.
             let speculating = t + 1 < epochs.len();
             if speculating {
-                inflight = Some(scatter_epoch(pool, &*algo, &epochs[t + 1])?);
+                inflight = Some(scatter_epoch(cluster, &*algo, &epochs[t + 1])?);
             }
             let master_sw = Stopwatch::start();
             if stale && algo.can_patch() {
@@ -254,6 +268,12 @@ impl Scheduler for Pipelined {
             }
             let counts = algo.validate(&outs, &ranges)?;
             let master_time = master_sw.elapsed();
+            // Wire accounting between consecutive record points: includes
+            // this epoch's gather, its redo wave if any, the speculative
+            // scatter of epoch t+1, and any validation-plane traffic.
+            let net_now = cluster.stats();
+            let net = net_now.since(&net0);
+            net0 = net_now;
             let rec = EpochRecord {
                 iteration: pass,
                 epoch: t,
@@ -277,6 +297,8 @@ impl Scheduler for Pipelined {
                 },
                 queue_depth: 1 + usize::from(speculating),
                 respins,
+                wire_bytes: net.wire_bytes,
+                ser_time: net.ser_time,
             };
             sink.emit(&rec);
             log.push(rec);
@@ -353,21 +375,21 @@ mod tests {
         }
     }
 
-    fn pool2() -> WorkerPool {
+    fn cluster2() -> Cluster {
         let data = Arc::new(crate::data::generators::dp_clusters(
             &crate::data::generators::GenConfig { n: 64, dim: 2, theta: 1.0, seed: 1 },
         ));
         let backend: Arc<dyn crate::runtime::ComputeBackend> =
             Arc::new(crate::runtime::native::NativeBackend::new());
-        WorkerPool::spawn(data, backend, 2)
+        Cluster::spawn(crate::config::TransportKind::InProc, data, backend, 2, 1).unwrap()
     }
 
     fn drive(sched: &dyn Scheduler, algo: &mut Scripted) -> Vec<EpochRecord> {
-        let pool = pool2();
+        let cluster = cluster2();
         let epochs = vec![0..16, 16..32, 32..48, 48..64];
         let mut sink = MetricsSink::Null;
         let mut log = Vec::new();
-        sched.run_pass(&pool, algo, &epochs, 0, &mut sink, &mut log).unwrap();
+        sched.run_pass(&cluster, algo, &epochs, 0, &mut sink, &mut log).unwrap();
         log
     }
 
@@ -421,12 +443,19 @@ mod tests {
 
     #[test]
     fn empty_pass_is_a_noop() {
-        let pool = pool2();
+        let cluster = cluster2();
         let mut algo = Scripted::new(true, true);
         let mut sink = MetricsSink::Null;
         let mut log = Vec::new();
-        Pipelined.run_pass(&pool, &mut algo, &[], 0, &mut sink, &mut log).unwrap();
+        Pipelined.run_pass(&cluster, &mut algo, &[], 0, &mut sink, &mut log).unwrap();
         assert!(log.is_empty());
+    }
+
+    #[test]
+    fn inproc_epochs_record_zero_wire_traffic() {
+        let mut algo = Scripted::new(true, true);
+        let log = drive(&Bsp, &mut algo);
+        assert!(log.iter().all(|r| r.wire_bytes == 0 && r.ser_time == Duration::ZERO));
     }
 
     #[test]

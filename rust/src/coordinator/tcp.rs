@@ -1,0 +1,396 @@
+//! Loopback TCP transport: peers behind real sockets.
+//!
+//! Each peer (compute worker or validator shard) is a thread sitting behind
+//! its own `TcpListener` on `127.0.0.1:0`; the master connects one
+//! `TcpStream` per peer and speaks the [`super::wire`] protocol in
+//! lockstep: one job frame out, one reply frame back, per wave. Nothing in
+//! the coordinator above the [`Transport`] trait knows the difference —
+//! `rust/tests/transport_equivalence.rs` proves models stay bit-identical.
+//!
+//! Loopback peers still share the *dataset* by `Arc` (it is process-local
+//! state, not a message); jobs, snapshots and replies all cross the socket
+//! as bytes. That makes this transport an honest single-host rehearsal for
+//! multi-host runs: the remaining work for true remote peers is process
+//! bootstrap and dataset distribution (see ROADMAP), not message-plane
+//! changes.
+//!
+//! ## Accounting
+//!
+//! The master counts every frame byte written or read (`wire_bytes`) and
+//! the wall-clock spent encoding jobs and decoding replies (`ser_time`);
+//! [`Transport::stats`] exposes the running totals and the schedulers
+//! record per-epoch deltas into [`crate::metrics::EpochRecord`].
+//!
+//! ## Failure behaviour
+//!
+//! Mirrors [`super::engine::WorkerPool`]: a peer that panics inside a job
+//! replies with an error frame (the panic is caught peer-side), a wave with
+//! failures is drained completely before `gather` reports the first error,
+//! and `Drop` drains any outstanding wave, sends shutdown frames, closes
+//! the sockets and joins every peer thread — infallibly.
+
+use super::engine::{panic_message, run_job, Job, JobOutput};
+use super::transport::{Plane, Transport, TransportStats};
+use super::wire;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::runtime::ComputeBackend;
+use std::cell::Cell;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One plane's master-side endpoints.
+struct PlaneEndpoints {
+    streams: Vec<TcpStream>,
+    /// Waves scattered but not yet gathered (0 or 1).
+    in_flight: Cell<usize>,
+    /// Set when a scatter failed partway: some peers own a job whose reply
+    /// can no longer be paired with a wave (and their streams may hold
+    /// unread frames), so further scatters on this plane error out instead
+    /// of silently misattributing stale replies.
+    poisoned: Cell<bool>,
+}
+
+/// The loopback TCP transport.
+pub struct Tcp {
+    planes: [PlaneEndpoints; 2],
+    handles: Vec<JoinHandle<()>>,
+    wire_bytes: Cell<u64>,
+    ser_time: Cell<Duration>,
+}
+
+impl Tcp {
+    /// Spawn `procs` compute peers and `validators` validator peers, each
+    /// behind its own loopback socket, and connect to all of them.
+    pub fn spawn(
+        data: Arc<Dataset>,
+        backend: Arc<dyn ComputeBackend>,
+        procs: usize,
+        validators: usize,
+    ) -> Result<Tcp> {
+        let mut handles = Vec::with_capacity(procs + validators);
+        let compute = spawn_plane(&data, &backend, procs, &mut handles)?;
+        let validate = spawn_plane(&data, &backend, validators, &mut handles)?;
+        Ok(Tcp {
+            planes: [compute, validate],
+            handles,
+            wire_bytes: Cell::new(0),
+            ser_time: Cell::new(Duration::ZERO),
+        })
+    }
+
+    fn add_bytes(&self, n: usize) {
+        self.wire_bytes.set(self.wire_bytes.get() + n as u64);
+    }
+
+    fn add_ser(&self, d: Duration) {
+        self.ser_time.set(self.ser_time.get() + d);
+    }
+}
+
+fn spawn_plane(
+    data: &Arc<Dataset>,
+    backend: &Arc<dyn ComputeBackend>,
+    n: usize,
+    handles: &mut Vec<JoinHandle<()>>,
+) -> Result<PlaneEndpoints> {
+    let mut streams = Vec::with_capacity(n);
+    for id in 0..n {
+        let listener = TcpListener::bind(("127.0.0.1", 0))
+            .map_err(|e| Error::Coordinator(format!("tcp bind: {e}")))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Coordinator(format!("tcp local_addr: {e}")))?;
+        let data = data.clone();
+        let backend = backend.clone();
+        handles.push(std::thread::spawn(move || peer_loop(id, data, backend, listener)));
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Coordinator(format!("tcp connect: {e}")))?;
+        stream.set_nodelay(true).ok();
+        streams.push(stream);
+    }
+    Ok(PlaneEndpoints { streams, in_flight: Cell::new(0), poisoned: Cell::new(false) })
+}
+
+/// Best-effort, bounded drain of one queued reply per stream — shutdown
+/// hygiene so no peer blocks writing into a socket nobody reads. A wedged
+/// peer costs at most the timeout; closing the sockets afterwards unblocks
+/// it regardless.
+fn drain_replies(streams: &[TcpStream]) {
+    for stream in streams {
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+        let _ = wire::read_frame(&mut &*stream);
+        let _ = stream.set_read_timeout(None);
+    }
+}
+
+/// One peer: accept the master's connection, then serve jobs in lockstep
+/// until a shutdown frame or a closed/corrupt socket.
+///
+/// Failure containment mirrors the in-proc worker loop: a job that decodes
+/// but cannot run (panic, bad geometry) — *and* a frame whose payload fails
+/// decode validation — each produce an error *reply*, because the master
+/// counts one reply per peer per wave and the frame boundary is intact
+/// either way. Only a broken stream (EOF, short header/payload — we can no
+/// longer find the next frame) terminates the peer.
+fn peer_loop(
+    id: usize,
+    data: Arc<Dataset>,
+    backend: Arc<dyn ComputeBackend>,
+    listener: TcpListener,
+) {
+    let Ok((stream, _)) = listener.accept() else { return };
+    stream.set_nodelay(true).ok();
+    let mut stream = stream;
+    loop {
+        let Ok((kind, payload)) = wire::read_frame(&mut stream) else {
+            return; // stream closed or framing lost
+        };
+        let job = if kind == wire::KIND_JOB {
+            wire::decode_job(&payload)
+        } else {
+            Err(Error::Coordinator(format!("peer expected a job frame, got kind {kind}")))
+        };
+        let start = Instant::now();
+        let output = match job {
+            Ok(Job::Shutdown) => return,
+            Ok(job) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_job(&data, &backend, job)
+            }))
+            .unwrap_or_else(|p| Err(Error::Coordinator(panic_message(&*p)))),
+            Err(e) => Err(e), // decode-invalid job: reply, stay alive
+        };
+        let busy = start.elapsed();
+        if wire::write_reply(&mut stream, id as u32, busy, &output).is_err() {
+            return; // master gone
+        }
+    }
+}
+
+impl Transport for Tcp {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn peers(&self, plane: Plane) -> usize {
+        self.planes[plane.idx()].streams.len()
+    }
+
+    fn scatter(&self, plane: Plane, jobs: Vec<Job>) -> Result<()> {
+        let ep = &self.planes[plane.idx()];
+        assert_eq!(jobs.len(), ep.streams.len(), "one job per peer");
+        assert_eq!(ep.in_flight.get(), 0, "scatter with a wave still outstanding");
+        if ep.poisoned.get() {
+            return Err(Error::Coordinator(
+                "transport plane poisoned by an earlier failed scatter".into(),
+            ));
+        }
+        for (stream, job) in ep.streams.iter().zip(jobs) {
+            let sw = Instant::now();
+            let frame = match wire::job_frame(&job) {
+                Ok(f) => f,
+                Err(e) => {
+                    // Peers that already received a job will reply, but
+                    // those replies belong to no wave — poison the plane
+                    // rather than risk pairing them with a later gather.
+                    // (A peer-side *job* failure is different: the wave
+                    // completes, `gather` reports it, the plane stays
+                    // usable.)
+                    ep.poisoned.set(true);
+                    return Err(e);
+                }
+            };
+            self.add_ser(sw.elapsed());
+            self.add_bytes(frame.len());
+            if let Err(e) = (&mut &*stream).write_all(&frame) {
+                ep.poisoned.set(true);
+                return Err(Error::Coordinator(format!("tcp scatter: {e}")));
+            }
+        }
+        ep.in_flight.set(1);
+        Ok(())
+    }
+
+    fn gather(&self, plane: Plane) -> Result<(Vec<JobOutput>, Duration)> {
+        let ep = &self.planes[plane.idx()];
+        assert_eq!(ep.in_flight.get(), 1, "gather without a scattered wave");
+        let n = ep.streams.len();
+        let mut outputs: Vec<Option<JobOutput>> = (0..n).map(|_| None).collect();
+        let mut max_busy = Duration::ZERO;
+        let mut first_err: Option<Error> = None;
+        for stream in &ep.streams {
+            match wire::read_frame(&mut &*stream) {
+                Ok((kind, payload)) => {
+                    self.add_bytes(wire::HEADER_LEN + payload.len());
+                    let sw = Instant::now();
+                    let reply = wire::decode_reply(kind, &payload);
+                    self.add_ser(sw.elapsed());
+                    match reply {
+                        Ok(reply) => {
+                            max_busy = max_busy.max(reply.busy);
+                            match reply.output {
+                                Ok(out) if reply.worker < n => {
+                                    outputs[reply.worker] = Some(out);
+                                }
+                                Ok(_) => {
+                                    first_err = first_err.or_else(|| {
+                                        Some(Error::Coordinator(format!(
+                                            "peer id {} out of range",
+                                            reply.worker
+                                        )))
+                                    });
+                                }
+                                Err(e) => first_err = first_err.or(Some(e)),
+                            }
+                        }
+                        Err(e) => first_err = first_err.or(Some(e)),
+                    }
+                }
+                Err(e) => {
+                    // Frame-level read failure: the stream is dead or
+                    // desynchronized, so a retry wave on this plane could
+                    // block forever or mispair replies — poison it.
+                    // (A decode failure above leaves the stream framed and
+                    // synced; the plane stays usable, like a job error.)
+                    ep.poisoned.set(true);
+                    first_err = first_err.or(Some(e));
+                }
+            }
+        }
+        ep.in_flight.set(0);
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok((
+            outputs.into_iter().map(|o| o.expect("peer replied")).collect(),
+            max_busy,
+        ))
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats { wire_bytes: self.wire_bytes.get(), ser_time: self.ser_time.get() }
+    }
+}
+
+impl Drop for Tcp {
+    fn drop(&mut self) {
+        for ep in &self.planes {
+            // Drain an outstanding (successfully scattered, never
+            // gathered) wave so no peer blocks writing a reply into a
+            // socket nobody reads. A poisoned plane is skipped — its
+            // streams may be desynced; closing them below is the only
+            // safe move.
+            if ep.in_flight.get() > 0 && !ep.poisoned.get() {
+                drain_replies(&ep.streams);
+            }
+            // Shutdown frames are best-effort: a dead peer's socket just
+            // errors, and closing the stream below unblocks it anyway.
+            if let Ok(frame) = wire::job_frame(&Job::Shutdown) {
+                for stream in &ep.streams {
+                    let _ = (&mut &*stream).write_all(&frame);
+                }
+            }
+        }
+        // Close every socket (EOF for any peer that missed its shutdown
+        // frame), then join.
+        for ep in &mut self.planes {
+            ep.streams.clear();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::{split_range, split_range_chunked};
+    use super::super::transport::{Cluster, Plane, Transport};
+    use super::*;
+    use crate::config::TransportKind;
+    use crate::data::generators::{dp_clusters, GenConfig};
+    use crate::linalg::Matrix;
+    use crate::runtime::native::NativeBackend;
+
+    fn data_and_backend(n: usize) -> (Arc<Dataset>, Arc<dyn ComputeBackend>) {
+        let data = Arc::new(dp_clusters(&GenConfig { n, dim: 8, theta: 1.0, seed: 7 }));
+        (data, Arc::new(NativeBackend::new()))
+    }
+
+    /// The same wave over TCP and in-proc must return bit-identical outputs
+    /// — the whole point of the bit-exact wire format.
+    #[test]
+    fn tcp_wave_bitidentical_to_inproc() {
+        let (data, backend) = data_and_backend(120);
+        let tcp = Cluster::spawn(TransportKind::Tcp, data.clone(), backend.clone(), 3, 1)
+            .unwrap();
+        let inproc =
+            Cluster::spawn(TransportKind::InProc, data.clone(), backend, 3, 1).unwrap();
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(3));
+        centers.push_row(data.point(77));
+        let centers = Arc::new(centers);
+        let mk = || -> Vec<Job> {
+            split_range(0..120, 3)
+                .into_iter()
+                .map(|range| Job::Nearest { range, centers: centers.clone() })
+                .collect()
+        };
+        let (a, _) = tcp.scatter_gather(mk()).unwrap();
+        let (b, _) = inproc.scatter_gather(mk()).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            let (JobOutput::Nearest { idx: ia, d2: da }, JobOutput::Nearest { idx: ib, d2: db }) =
+                (x, y)
+            else {
+                panic!("wrong output kind");
+            };
+            assert_eq!(ia, ib);
+            let da: Vec<u32> = da.iter().map(|f| f.to_bits()).collect();
+            let db: Vec<u32> = db.iter().map(|f| f.to_bits()).collect();
+            assert_eq!(da, db, "d² diverged across the wire");
+        }
+        let stats = tcp.stats();
+        assert!(stats.wire_bytes > 0, "tcp waves must be accounted");
+    }
+
+    #[test]
+    fn tcp_peer_error_drains_wave_and_transport_survives() {
+        let (data, backend) = data_and_backend(100);
+        let tcp = Tcp::spawn(data, backend, 2, 1).unwrap();
+        let short = Arc::new(vec![0u32; 10]); // panics inside the peer
+        let jobs: Vec<Job> = split_range_chunked(0..100, 2)
+            .into_iter()
+            .map(|range| Job::SuffStats { range, assignments: short.clone(), k: 2 })
+            .collect();
+        tcp.scatter(Plane::Compute, jobs).unwrap();
+        assert!(tcp.gather(Plane::Compute).is_err(), "poisoned wave must error");
+        // The peers caught the panic and are still serving: a clean wave
+        // works on the same connections.
+        let ok = Arc::new(vec![0u32; 100]);
+        let jobs: Vec<Job> = split_range_chunked(0..100, 2)
+            .into_iter()
+            .map(|range| Job::SuffStats { range, assignments: ok.clone(), k: 2 })
+            .collect();
+        tcp.scatter(Plane::Compute, jobs).unwrap();
+        tcp.gather(Plane::Compute).unwrap();
+        drop(tcp); // must not hang
+    }
+
+    #[test]
+    fn tcp_drop_with_outstanding_wave_does_not_hang() {
+        let (data, backend) = data_and_backend(60);
+        let tcp = Tcp::spawn(data.clone(), backend, 2, 1).unwrap();
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        let centers = Arc::new(centers);
+        let jobs: Vec<Job> = split_range(0..60, 2)
+            .into_iter()
+            .map(|range| Job::Nearest { range, centers: centers.clone() })
+            .collect();
+        tcp.scatter(Plane::Compute, jobs).unwrap();
+        drop(tcp); // wave never gathered; drop drains and joins
+    }
+}

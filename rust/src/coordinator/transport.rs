@@ -1,0 +1,356 @@
+//! The cluster's communication plane, behind a [`Transport`] trait.
+//!
+//! The coordinator talks to two groups of peers — *compute workers* (epoch
+//! jobs: nearest-center assignment, coordinate descent, reductions) and
+//! *validator shards* (conflict pre-computation for the master's validation
+//! step). Both groups are addressed through the same abstraction: scatter
+//! one [`Job`] per peer on a [`Plane`], gather one reply per peer. How the
+//! messages move is the transport's business:
+//!
+//! * [`InProc`] — peers are threads in this process; jobs and snapshots
+//!   cross the boundary by pointer (`mpsc` channels + `Arc`). This is the
+//!   zero-copy fast path and the default.
+//! * [`super::tcp::Tcp`] — peers sit behind localhost TCP sockets; every
+//!   job, snapshot and reply is serialized through the explicit
+//!   length-prefixed wire format of [`super::wire`]. Same coordinator, same
+//!   bits — but the message boundary is real, which is the stepping stone
+//!   to peers on other machines.
+//!
+//! [`Cluster`] is the coordinator-facing facade: it owns the boxed
+//! transport, knows the peer counts, and provides the scatter/gather calls
+//! the schedulers and validators drive. Serializability does not depend on
+//! the transport — all state mutation stays in the master, and
+//! `rust/tests/transport_equivalence.rs` checks models are bit-identical
+//! across `{inproc, tcp} × {bsp, pipelined}`.
+
+use super::engine::{Job, JobOutput, WorkerPool};
+use crate::config::TransportKind;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::runtime::ComputeBackend;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which peer group a scatter/gather addresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Plane {
+    /// The epoch-compute workers (P peers).
+    Compute,
+    /// The validator shards (V peers).
+    Validate,
+}
+
+impl Plane {
+    /// Index into per-plane storage.
+    #[inline]
+    pub fn idx(self) -> usize {
+        match self {
+            Plane::Compute => 0,
+            Plane::Validate => 1,
+        }
+    }
+}
+
+/// Cumulative wire-level accounting for a transport.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Bytes written to + read from the wire (frames, both directions).
+    pub wire_bytes: u64,
+    /// Master-side time spent encoding jobs and decoding replies.
+    pub ser_time: Duration,
+}
+
+impl TransportStats {
+    /// Stats accumulated since an earlier snapshot of the same transport.
+    pub fn since(&self, earlier: &TransportStats) -> TransportStats {
+        TransportStats {
+            wire_bytes: self.wire_bytes.saturating_sub(earlier.wire_bytes),
+            ser_time: self.ser_time.saturating_sub(earlier.ser_time),
+        }
+    }
+}
+
+/// A cluster transport: moves jobs to peers and replies back.
+///
+/// Contract (identical to [`WorkerPool`]'s): `scatter` takes exactly one
+/// job per peer of the plane; at most one wave may be outstanding per
+/// plane and `gather` retires it, returning outputs sorted by peer id
+/// plus the critical-path busy time. On a peer-side *job* failure the
+/// wave is still fully drained before `gather` returns the error, so the
+/// transport stays usable. A *scatter* failure (dead peer, unencodable
+/// job) instead poisons the plane — some peers own jobs whose replies
+/// belong to no wave — and every later scatter on it reports the
+/// poisoning rather than risking stale-reply misattribution.
+pub trait Transport: Send {
+    /// Transport name (metrics / logs).
+    fn name(&self) -> &'static str;
+
+    /// Number of peers on a plane.
+    fn peers(&self, plane: Plane) -> usize;
+
+    /// Send one job per peer of `plane` without waiting for results.
+    fn scatter(&self, plane: Plane, jobs: Vec<Job>) -> Result<()>;
+
+    /// Gather the plane's outstanding wave.
+    fn gather(&self, plane: Plane) -> Result<(Vec<JobOutput>, Duration)>;
+
+    /// Cumulative serialization accounting (all-zero for in-proc).
+    fn stats(&self) -> TransportStats;
+}
+
+/// The in-process transport: each plane is a [`WorkerPool`] — today's
+/// channels and `Arc`-shared snapshots, preserved as the zero-copy fast
+/// path. No bytes are moved, so [`Transport::stats`] stays zero.
+pub struct InProc {
+    planes: [WorkerPool; 2],
+}
+
+impl InProc {
+    /// Spawn `procs` compute workers and `validators` validator peers over
+    /// a shared dataset and backend.
+    pub fn spawn(
+        data: Arc<Dataset>,
+        backend: Arc<dyn ComputeBackend>,
+        procs: usize,
+        validators: usize,
+    ) -> InProc {
+        InProc {
+            planes: [
+                WorkerPool::spawn(data.clone(), backend.clone(), procs),
+                WorkerPool::spawn(data, backend, validators),
+            ],
+        }
+    }
+}
+
+impl Transport for InProc {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn peers(&self, plane: Plane) -> usize {
+        self.planes[plane.idx()].procs
+    }
+
+    fn scatter(&self, plane: Plane, jobs: Vec<Job>) -> Result<()> {
+        self.planes[plane.idx()].scatter(jobs)
+    }
+
+    fn gather(&self, plane: Plane) -> Result<(Vec<JobOutput>, Duration)> {
+        self.planes[plane.idx()].gather()
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats::default()
+    }
+}
+
+/// The coordinator's handle to its peers: a boxed [`Transport`] plus the
+/// plane sizes. Schedulers drive the compute plane through
+/// [`Cluster::scatter`] / [`Cluster::gather`]; validators drive the
+/// validation plane through [`Cluster::pair_cache`].
+pub struct Cluster {
+    transport: Box<dyn Transport>,
+    /// Compute workers (the paper's P).
+    pub procs: usize,
+    /// Validator-shard peers.
+    pub validators: usize,
+}
+
+impl Cluster {
+    /// Spawn the transport a config names, with `procs` compute peers and
+    /// `validators` validation peers.
+    pub fn spawn(
+        kind: TransportKind,
+        data: Arc<Dataset>,
+        backend: Arc<dyn ComputeBackend>,
+        procs: usize,
+        validators: usize,
+    ) -> Result<Cluster> {
+        assert!(procs >= 1, "a cluster needs at least one compute peer");
+        let validators = validators.max(1);
+        let transport: Box<dyn Transport> = match kind {
+            TransportKind::InProc => Box::new(InProc::spawn(data, backend, procs, validators)),
+            TransportKind::Tcp => {
+                Box::new(super::tcp::Tcp::spawn(data, backend, procs, validators)?)
+            }
+        };
+        Ok(Cluster { transport, procs, validators })
+    }
+
+    /// Wrap an existing transport (tests / custom deployments).
+    pub fn from_transport(transport: Box<dyn Transport>) -> Cluster {
+        let procs = transport.peers(Plane::Compute);
+        let validators = transport.peers(Plane::Validate);
+        Cluster { transport, procs, validators }
+    }
+
+    /// Transport name (metrics / logs).
+    pub fn name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Scatter one job per compute worker without waiting for results. At
+    /// most one compute wave may be outstanding.
+    pub fn scatter(&self, jobs: Vec<Job>) -> Result<()> {
+        self.transport.scatter(Plane::Compute, jobs)
+    }
+
+    /// Gather the outstanding compute wave: outputs sorted by peer id plus
+    /// the critical-path busy time.
+    pub fn gather(&self) -> Result<(Vec<JobOutput>, Duration)> {
+        self.transport.gather(Plane::Compute)
+    }
+
+    /// Scatter one job per compute worker and gather all replies — the BSP
+    /// barrier.
+    pub fn scatter_gather(&self, jobs: Vec<Job>) -> Result<(Vec<JobOutput>, Duration)> {
+        self.scatter(jobs)?;
+        self.gather()
+    }
+
+    /// Cumulative transport accounting (zero for in-proc).
+    pub fn stats(&self) -> TransportStats {
+        self.transport.stats()
+    }
+
+    /// Compute per-shard conflict caches on the validation plane.
+    ///
+    /// `shard_lists` are conflict-key buckets in key order (see
+    /// [`super::validator::shard_positions`]); each validator peer is
+    /// handed a contiguous *range* of buckets — its conflict-key range —
+    /// bundled with the proposal vectors as one
+    /// [`Job::PairCache`] job. Returns one sorted pair list per peer, in
+    /// peer order, ready for
+    /// [`super::validator::ConflictCache::tree_reduce`]. Buckets with
+    /// fewer than two proposals produce no pairs and are dropped from the
+    /// payload, and peers left with nothing receive an empty job.
+    ///
+    /// Wire-cost note: every *active* peer currently receives the full
+    /// proposal matrix (positions are global), so TCP traffic for this
+    /// step is `O(V · M · d)` per epoch. Shipping only each peer's
+    /// referenced rows plus an index remap would cut that to `O(M · d)`
+    /// total; tracked in ROADMAP under cross-machine validation.
+    pub fn pair_cache(
+        &self,
+        vectors: Arc<Matrix>,
+        shard_lists: Vec<Vec<u32>>,
+    ) -> Result<Vec<Vec<(u32, u32, f32)>>> {
+        let v = self.validators;
+        let s = shard_lists.len();
+        let mut groups: Vec<Vec<Vec<u32>>> = Vec::with_capacity(v);
+        let mut it = shard_lists.into_iter();
+        for p in 0..v {
+            let lo = p * s / v;
+            let hi = (p + 1) * s / v;
+            groups.push(
+                it.by_ref().take(hi - lo).filter(|l| l.len() >= 2).collect(),
+            );
+        }
+        let empty = Arc::new(Matrix::zeros(0, vectors.cols));
+        let jobs: Vec<Job> = groups
+            .into_iter()
+            .map(|g| {
+                if g.is_empty() {
+                    Job::PairCache { vectors: empty.clone(), shards: vec![] }
+                } else {
+                    Job::PairCache { vectors: vectors.clone(), shards: g }
+                }
+            })
+            .collect();
+        self.transport.scatter(Plane::Validate, jobs)?;
+        let (outs, _busy) = self.transport.gather(Plane::Validate)?;
+        let mut lists = Vec::with_capacity(outs.len());
+        for out in outs {
+            let JobOutput::PairCache { pairs } = out else {
+                return Err(Error::Coordinator(
+                    "unexpected job output on the validation plane".into(),
+                ));
+            };
+            lists.push(pairs);
+        }
+        Ok(lists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{dp_clusters, GenConfig};
+    use crate::runtime::native::NativeBackend;
+
+    fn cluster(kind: TransportKind, procs: usize, validators: usize) -> (Arc<Dataset>, Cluster) {
+        let data = Arc::new(dp_clusters(&GenConfig { n: 100, dim: 8, theta: 1.0, seed: 1 }));
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+        let c = Cluster::spawn(kind, data.clone(), backend, procs, validators).unwrap();
+        (data, c)
+    }
+
+    fn nearest_jobs(data: &Dataset, procs: usize) -> (Arc<Matrix>, Vec<Job>) {
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        centers.push_row(data.point(50));
+        let centers = Arc::new(centers);
+        let jobs = super::super::engine::split_range(0..100, procs)
+            .into_iter()
+            .map(|range| Job::Nearest { range, centers: centers.clone() })
+            .collect();
+        (centers, jobs)
+    }
+
+    #[test]
+    fn inproc_cluster_matches_direct_nearest_and_reports_zero_wire() {
+        let (data, c) = cluster(TransportKind::InProc, 3, 2);
+        assert_eq!(c.name(), "inproc");
+        assert_eq!(c.procs, 3);
+        assert_eq!(c.validators, 2);
+        let (centers, jobs) = nearest_jobs(&data, 3);
+        let (outs, busy) = c.scatter_gather(jobs).unwrap();
+        assert!(busy > Duration::ZERO);
+        let ranges = super::super::engine::split_range(0..100, 3);
+        for (w, out) in outs.iter().enumerate() {
+            let JobOutput::Nearest { idx, d2 } = out else { panic!("wrong kind") };
+            for (off, i) in ranges[w].clone().enumerate() {
+                let (bi, bd) = crate::linalg::nearest(data.point(i), &centers);
+                assert_eq!(idx[off], bi as u32);
+                assert!((d2[off] - bd).abs() < 1e-4);
+            }
+        }
+        assert_eq!(c.stats(), TransportStats::default(), "in-proc moves no bytes");
+    }
+
+    #[test]
+    fn pair_cache_partitions_key_ranges_and_covers_all_pairs() {
+        let (_, c) = cluster(TransportKind::InProc, 2, 3);
+        let mut vectors = Matrix::zeros(0, 2);
+        for i in 0..9 {
+            vectors.push_row(&[i as f32, 0.0]);
+        }
+        let vectors = Arc::new(vectors);
+        // 5 buckets over 3 peers: ranges [0..1), [1..3), [3..5).
+        let shard_lists: Vec<Vec<u32>> =
+            vec![vec![0, 1], vec![2], vec![3, 4, 5], vec![], vec![6, 7, 8]];
+        let lists = c.pair_cache(vectors, shard_lists).unwrap();
+        assert_eq!(lists.len(), 3, "one cache per validator peer");
+        // Peer 0: bucket {0,1} → 1 pair. Peer 1: buckets {2}, {3,4,5} → 3
+        // pairs. Peer 2: buckets {}, {6,7,8} → 3 pairs.
+        assert_eq!(lists[0].len(), 1);
+        assert_eq!(lists[1].len(), 3);
+        assert_eq!(lists[2].len(), 3);
+        let total: usize = lists.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 7);
+        for l in &lists {
+            assert!(l.windows(2).all(|w| (w[0].0, w[0].1) < (w[1].0, w[1].1)));
+        }
+    }
+
+    #[test]
+    fn transport_stats_delta() {
+        let a = TransportStats { wire_bytes: 100, ser_time: Duration::from_millis(5) };
+        let b = TransportStats { wire_bytes: 250, ser_time: Duration::from_millis(8) };
+        let d = b.since(&a);
+        assert_eq!(d.wire_bytes, 150);
+        assert_eq!(d.ser_time, Duration::from_millis(3));
+    }
+}

@@ -9,23 +9,40 @@
 //! ## Sharded validation
 //!
 //! [`dp_validate_sharded`] and [`ofl_validate_sharded`] split the expensive
-//! half of validation — proposal-pair distances — across threads without
-//! touching the serial order. Proposals are partitioned by *conflict key*
-//! (the proposing point's nearest committed center/facility: points that
-//! would collide tend to come from the same region of state space);
-//! same-key pair distances are precomputed in parallel, then a serial merge
-//! walks all proposals in point-index order, reading a cached distance when
-//! one exists and computing it inline otherwise. Because a cached
+//! half of validation — proposal-pair distances — across validator shards
+//! without touching the serial order. Proposals are partitioned by
+//! *conflict key* (the proposing point's nearest committed center/facility:
+//! points that would collide tend to come from the same region of state
+//! space); same-key pair distances are precomputed in parallel as per-shard
+//! conflict caches ([`shard_pairs_sorted`]), the caches are combined with a
+//! deterministic tree reduce in point-index order
+//! ([`ConflictCache::tree_reduce`]), then a serial merge walks all
+//! proposals in point-index order, reading a cached distance when one
+//! exists and computing it inline otherwise. Because a cached
 //! `sqdist(a, b)` is bit-identical to the inline one, the merge's
 //! accept/reject decisions — and therefore the appended state — are
 //! bit-for-bit those of the serial validator for *any* key assignment and
-//! shard count. BP-means has no sharded variant: its accepted features are
-//! *derived* residuals (each depends on the re-representation against all
-//! earlier acceptances), so there is no pairwise quantity to precompute.
+//! shard count.
+//!
+//! The shard caches can come from two places: scoped threads inside this
+//! process (`dp_validate_sharded` / `ofl_validate_sharded` — the zero-setup
+//! path) or *validator peers on the cluster's validation plane*
+//! ([`dp_validate_clustered`] / [`ofl_validate_clustered`]): each peer owns
+//! a contiguous conflict-key range, receives the proposal vectors plus its
+//! shard lists as a [`super::engine::Job::PairCache`] job through the
+//! [`super::transport::Transport`], and replies with its sorted cache. The
+//! master tree-reduces the per-peer caches and runs the same serial merge —
+//! so the distributed validation plane is bit-identical to the serial
+//! validator too. BP-means has no sharded variant: its accepted features
+//! are *derived* residuals (each depends on the re-representation against
+//! all earlier acceptances), so there is no pairwise quantity to
+//! precompute.
 
+use super::transport::Cluster;
 use crate::algorithms::bpmeans::descend_z;
+use crate::error::Result;
 use crate::linalg::{sqdist, Matrix};
-use std::collections::HashMap;
+use std::sync::Arc;
 
 /// A DP-means proposal: point `idx` (global) wants to open a cluster at its
 /// own coordinates (the worker certified `d² > λ²` against `C^{t-1}`).
@@ -144,56 +161,190 @@ fn shard_pair_cache(vectors: &[&[f32]], shard: &[u32]) -> Vec<(u32, u32, f32)> {
     out
 }
 
-/// Build the cross-proposal distance cache: same-key pairs in parallel.
+/// One peer's conflict-cache contribution: every within-shard pair distance
+/// of `shard_lists`, lexicographically sorted by `(a, b)` — global proposal
+/// positions, i.e. point-index order. This is the payload a validator peer
+/// computes for a [`super::engine::Job::PairCache`] job.
+pub fn shard_pairs_sorted(vectors: &[&[f32]], shard_lists: &[Vec<u32>]) -> Vec<(u32, u32, f32)> {
+    let mut out = Vec::new();
+    for shard in shard_lists {
+        out.extend(shard_pair_cache(vectors, shard));
+    }
+    out.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+    out
+}
+
+/// The combined cross-proposal conflict cache the serial merge reads from:
+/// `(a, b, d²)` pairs sorted by `(a, b)` global proposal position.
+#[derive(Debug, Clone, Default)]
+pub struct ConflictCache {
+    pairs: Vec<(u32, u32, f32)>,
+}
+
+impl ConflictCache {
+    /// Combine per-shard caches with a deterministic pairwise tree reduce:
+    /// each round merges neighbouring sorted lists in point-index order
+    /// until one remains. Every pair lives in exactly one shard (same key ⇒
+    /// same shard), so the merge never sees duplicates and the result is
+    /// independent of how shards were grouped onto peers or threads.
+    pub fn tree_reduce(mut lists: Vec<Vec<(u32, u32, f32)>>) -> ConflictCache {
+        while lists.len() > 1 {
+            let mut next = Vec::with_capacity(lists.len().div_ceil(2));
+            let mut it = lists.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => next.push(merge_sorted(a, b)),
+                    None => next.push(a),
+                }
+            }
+            lists = next;
+        }
+        ConflictCache { pairs: lists.pop().unwrap_or_default() }
+    }
+
+    /// Cached distance between accepted proposal `a` and proposal `b`.
+    #[inline]
+    pub fn get(&self, a: u32, b: u32) -> Option<f32> {
+        self.pairs
+            .binary_search_by(|probe| (probe.0, probe.1).cmp(&(a, b)))
+            .ok()
+            .map(|i| self.pairs[i].2)
+    }
+
+    /// Number of cached pairs.
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// True when no pairs are cached.
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+}
+
+/// Merge two `(a, b, d²)` lists sorted by `(a, b)` into one.
+fn merge_sorted(
+    a: Vec<(u32, u32, f32)>,
+    b: Vec<(u32, u32, f32)>,
+) -> Vec<(u32, u32, f32)> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if (a[i].0, a[i].1) <= (b[j].0, b[j].1) {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+/// Build the cross-proposal distance cache on scoped threads: same-key
+/// pairs in parallel, tree-reduced into one [`ConflictCache`].
 ///
 /// Threads are capped at half the shard count (≥ 1): under the pipelined
 /// scheduler this precompute runs while all `P` workers are busy on the
 /// next epoch's speculative wave, so claiming a full `P` threads here would
 /// oversubscribe the machine during exactly the window the overlap exists
 /// to exploit.
-fn build_pair_cache(vectors: &[&[f32]], shard_lists: &[Vec<u32>]) -> HashMap<(u32, u32), f32> {
+fn build_pair_cache(vectors: &[&[f32]], shard_lists: &[Vec<u32>]) -> ConflictCache {
     let work: Vec<&Vec<u32>> = shard_lists.iter().filter(|s| s.len() >= 2).collect();
     let threads = (shard_lists.len() / 2).clamp(1, work.len().max(1));
     let per_thread = work.len().div_ceil(threads);
-    let mut cache = HashMap::new();
+    let mut lists = Vec::with_capacity(threads);
     std::thread::scope(|scope| {
         let handles: Vec<_> = work
             .chunks(per_thread)
             .map(|group| {
-                let group = group.to_vec();
-                scope.spawn(move || {
-                    let mut out = Vec::new();
-                    for shard in group {
-                        out.extend(shard_pair_cache(vectors, shard));
-                    }
-                    out
-                })
+                let group: Vec<Vec<u32>> = group.iter().map(|s| (*s).clone()).collect();
+                scope.spawn(move || shard_pairs_sorted(vectors, &group))
             })
             .collect();
         for h in handles {
-            for (a, b, d) in h.join().expect("shard thread panicked") {
-                cache.insert((a, b), d);
-            }
+            lists.push(h.join().expect("shard thread panicked"));
         }
     });
-    cache
+    ConflictCache::tree_reduce(lists)
 }
 
 /// Distance from proposal `j` to accepted proposal `a` (`a < j` in the
 /// global order): cache hit when they shared a conflict key, inline
 /// `sqdist` otherwise — bit-identical either way.
 #[inline]
-fn pair_d2(cache: &HashMap<(u32, u32), f32>, vectors: &[&[f32]], a: u32, j: u32) -> f32 {
-    match cache.get(&(a, j)) {
-        Some(&d) => d,
+fn pair_d2(cache: &ConflictCache, vectors: &[&[f32]], a: u32, j: u32) -> f32 {
+    match cache.get(a, j) {
+        Some(d) => d,
         None => sqdist(vectors[a as usize], vectors[j as usize]),
     }
 }
 
-/// `DPValidate` with sharded conflict pre-computation. Produces the exact
-/// [`dp_validate`] outcome (same resolutions, same appended rows, same
-/// bits) for any `keys`/`shards`; `keys[i]` is proposal `i`'s conflict key
-/// (e.g. its nearest committed center, `u32::MAX` when none).
+/// Build the conflict cache on the cluster's validation plane: partition
+/// the shard lists into contiguous conflict-key ranges (one per validator
+/// peer), ship them as [`super::engine::Job::PairCache`] jobs through the
+/// transport, and tree-reduce the gathered per-shard caches.
+///
+/// Cost note: materializing the proposal vectors as one `Matrix` is an
+/// `O(M·d)` copy per engaged epoch — paid on both transports, because the
+/// design point of the validation plane is that shards are *peers* (the
+/// in-proc transport then ships the matrix by `Arc`, zero further
+/// copies). It is dwarfed by the `O(ΣM_s²·d)` pair computation that
+/// follows; embedders who want the copy-free scoped-thread variant can
+/// still call [`dp_validate_sharded`] / [`ofl_validate_sharded`] directly.
+fn build_pair_cache_clustered(
+    cluster: &Cluster,
+    vectors: &[&[f32]],
+    shard_lists: Vec<Vec<u32>>,
+) -> Result<ConflictCache> {
+    let dim = vectors.first().map(|v| v.len()).unwrap_or(0);
+    let mut vmat =
+        Matrix { rows: 0, cols: dim, data: Vec::with_capacity(vectors.len() * dim) };
+    for v in vectors {
+        vmat.push_row(v);
+    }
+    let lists = cluster.pair_cache(Arc::new(vmat), shard_lists)?;
+    Ok(ConflictCache::tree_reduce(lists))
+}
+
+/// The one guard-and-merge skeleton every sharded DP entry point shares:
+/// fall back to the serial validator unless the cache is `engaged` and
+/// profitable, otherwise build the conflict cache via `build` (scoped
+/// threads or validator peers — the only varying part) and run the serial
+/// merge over it. Keeping the skeleton single-sourced is what guarantees
+/// the thread path and the peer path cannot drift apart.
+fn dp_validate_with(
+    centers: &mut Matrix,
+    base: usize,
+    proposals: &[DpProposal],
+    keys: &[u32],
+    lambda2: f32,
+    buckets: usize,
+    engaged: bool,
+    build: impl FnOnce(&[&[f32]], Vec<Vec<u32>>) -> Result<ConflictCache>,
+) -> Result<DpOutcome> {
+    debug_assert_eq!(proposals.len(), keys.len());
+    if !engaged || proposals.len() < SHARD_MIN_PROPOSALS {
+        return Ok(dp_validate(centers, base, proposals, lambda2));
+    }
+    let shard_lists = shard_positions(keys, buckets);
+    if !sharding_profitable(&shard_lists) {
+        return Ok(dp_validate(centers, base, proposals, lambda2));
+    }
+    let vectors: Vec<&[f32]> = proposals.iter().map(|p| p.center.as_slice()).collect();
+    let cache = build(&vectors, shard_lists)?;
+    // Same merge loop as the serial path, fed from the cache — the Thm 3.1
+    // point-index order, bit-for-bit.
+    Ok(dp_merge(centers, base, proposals, lambda2, |a, j| pair_d2(&cache, &vectors, a, j)))
+}
+
+/// `DPValidate` with sharded conflict pre-computation on scoped threads.
+/// Produces the exact [`dp_validate`] outcome (same resolutions, same
+/// appended rows, same bits) for any `keys`/`shards`; `keys[i]` is
+/// proposal `i`'s conflict key (e.g. its nearest committed center,
+/// `u32::MAX` when none).
 pub fn dp_validate_sharded(
     centers: &mut Matrix,
     base: usize,
@@ -202,21 +353,94 @@ pub fn dp_validate_sharded(
     lambda2: f32,
     shards: usize,
 ) -> DpOutcome {
-    debug_assert_eq!(proposals.len(), keys.len());
     // shards < 4 would leave build_pair_cache with a single thread (it caps
     // at shards/2): all cache cost, no parallelism — serial wins there.
-    if shards < 4 || proposals.len() < SHARD_MIN_PROPOSALS {
-        return dp_validate(centers, base, proposals, lambda2);
+    dp_validate_with(centers, base, proposals, keys, lambda2, shards, shards >= 4, |v, lists| {
+        Ok(build_pair_cache(v, &lists))
+    })
+    .expect("in-process cache build cannot fail")
+}
+
+/// `DPValidate` with the conflict pre-computation dispatched to validator
+/// peers on the cluster's validation plane. Produces the exact
+/// [`dp_validate`] outcome — same resolutions, same appended rows, same
+/// bits — for any `keys`, shard count and transport; falls back to the
+/// serial validator when sharding would not pay for itself.
+pub fn dp_validate_clustered(
+    cluster: &Cluster,
+    centers: &mut Matrix,
+    base: usize,
+    proposals: &[DpProposal],
+    keys: &[u32],
+    lambda2: f32,
+    shards: usize,
+) -> Result<DpOutcome> {
+    dp_validate_with(
+        centers,
+        base,
+        proposals,
+        keys,
+        lambda2,
+        shards.max(2),
+        cluster.validators >= 2,
+        |v, lists| build_pair_cache_clustered(cluster, v, lists),
+    )
+}
+
+/// The OFL counterpart of [`dp_validate_with`]: one skeleton, two cache
+/// builders.
+#[allow(clippy::too_many_arguments)]
+fn ofl_validate_with(
+    centers: &mut Matrix,
+    base: usize,
+    proposals: &[OflProposal],
+    keys: &[u32],
+    lambda2: f64,
+    draw: impl FnMut(u32) -> f64,
+    buckets: usize,
+    engaged: bool,
+    build: impl FnOnce(&[&[f32]], Vec<Vec<u32>>) -> Result<ConflictCache>,
+) -> Result<OflOutcome> {
+    debug_assert_eq!(proposals.len(), keys.len());
+    if !engaged || proposals.len() < SHARD_MIN_PROPOSALS {
+        return Ok(ofl_validate(centers, base, proposals, lambda2, draw));
     }
-    let shard_lists = shard_positions(keys, shards);
+    let shard_lists = shard_positions(keys, buckets);
     if !sharding_profitable(&shard_lists) {
-        return dp_validate(centers, base, proposals, lambda2);
+        return Ok(ofl_validate(centers, base, proposals, lambda2, draw));
     }
     let vectors: Vec<&[f32]> = proposals.iter().map(|p| p.center.as_slice()).collect();
-    let cache = build_pair_cache(&vectors, &shard_lists);
-    // Same merge loop as the serial path, fed from the cache — the Thm 3.1
-    // point-index order, bit-for-bit.
-    dp_merge(centers, base, proposals, lambda2, |a, j| pair_d2(&cache, &vectors, a, j))
+    let cache = build(&vectors, shard_lists)?;
+    Ok(ofl_merge(centers, base, proposals, lambda2, draw, |a, j| {
+        pair_d2(&cache, &vectors, a, j)
+    }))
+}
+
+/// `OFLValidate` over the cluster's validation plane — the exact
+/// [`ofl_validate`] outcome for any `keys`, shard count and transport (see
+/// [`dp_validate_clustered`]).
+#[allow(clippy::too_many_arguments)]
+pub fn ofl_validate_clustered(
+    cluster: &Cluster,
+    centers: &mut Matrix,
+    base: usize,
+    proposals: &[OflProposal],
+    keys: &[u32],
+    lambda2: f64,
+    draw: impl FnMut(u32) -> f64,
+    shards: usize,
+) -> Result<OflOutcome> {
+    ofl_validate_with(
+        centers,
+        base,
+        proposals,
+        keys,
+        lambda2,
+        draw,
+        shards.max(2),
+        cluster.validators >= 2,
+        |v, lists| build_pair_cache_clustered(cluster, v, lists),
+    )
 }
 
 /// `OFLValidate` with sharded conflict pre-computation — the exact
@@ -231,19 +455,12 @@ pub fn ofl_validate_sharded(
     draw: impl FnMut(u32) -> f64,
     shards: usize,
 ) -> OflOutcome {
-    debug_assert_eq!(proposals.len(), keys.len());
     // shards < 4 would leave build_pair_cache with a single thread (it caps
     // at shards/2): all cache cost, no parallelism — serial wins there.
-    if shards < 4 || proposals.len() < SHARD_MIN_PROPOSALS {
-        return ofl_validate(centers, base, proposals, lambda2, draw);
-    }
-    let shard_lists = shard_positions(keys, shards);
-    if !sharding_profitable(&shard_lists) {
-        return ofl_validate(centers, base, proposals, lambda2, draw);
-    }
-    let vectors: Vec<&[f32]> = proposals.iter().map(|p| p.center.as_slice()).collect();
-    let cache = build_pair_cache(&vectors, &shard_lists);
-    ofl_merge(centers, base, proposals, lambda2, draw, |a, j| pair_d2(&cache, &vectors, a, j))
+    ofl_validate_with(centers, base, proposals, keys, lambda2, draw, shards, shards >= 4, |v, lists| {
+        Ok(build_pair_cache(v, &lists))
+    })
+    .expect("in-process cache build cannot fail")
 }
 
 /// An OFL proposal: point `idx` was sent to the master with probability
@@ -701,6 +918,91 @@ mod tests {
         let sharded = dp_validate_sharded(&mut b, 0, &proposals, &keys, 1.0, 8);
         assert_eq!(serial.resolved, sharded.resolved);
         assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn tree_reduce_is_grouping_independent_and_sorted() {
+        let vectors_data: Vec<Vec<f32>> =
+            (0..12).map(|i| vec![i as f32, (i * i) as f32 * 0.25]).collect();
+        let vectors: Vec<&[f32]> = vectors_data.iter().map(|v| v.as_slice()).collect();
+        let shard_lists =
+            vec![vec![0u32, 3, 6, 9], vec![1, 4, 7], vec![2, 5, 8, 10, 11], vec![]];
+        let flat = shard_pairs_sorted(&vectors, &shard_lists);
+        assert!(flat.windows(2).all(|w| (w[0].0, w[0].1) < (w[1].0, w[1].1)), "sorted, unique");
+        // Any grouping of shards onto "peers" reduces to the same cache.
+        let one = ConflictCache::tree_reduce(vec![flat.clone()]);
+        let per_shard = ConflictCache::tree_reduce(
+            shard_lists.iter().map(|s| shard_pairs_sorted(&vectors, &[s.clone()])).collect(),
+        );
+        let grouped = ConflictCache::tree_reduce(vec![
+            shard_pairs_sorted(&vectors, &shard_lists[..2]),
+            shard_pairs_sorted(&vectors, &shard_lists[2..]),
+        ]);
+        assert_eq!(one.pairs, per_shard.pairs);
+        assert_eq!(one.pairs, grouped.pairs);
+        assert_eq!(one.len(), flat.len());
+        // Lookups hit exactly the cached pairs, bitwise.
+        for &(a, b, d) in &flat {
+            assert_eq!(one.get(a, b).unwrap().to_bits(), d.to_bits());
+        }
+        assert!(one.get(0, 1).is_none(), "cross-shard pair is not cached");
+        assert!(ConflictCache::tree_reduce(vec![]).is_empty());
+    }
+
+    #[test]
+    fn clustered_validation_matches_serial_over_both_transports() {
+        use crate::config::TransportKind;
+        use crate::data::generators::{dp_clusters, GenConfig};
+        use crate::runtime::native::NativeBackend;
+        let data =
+            std::sync::Arc::new(dp_clusters(&GenConfig { n: 16, dim: 2, theta: 1.0, seed: 9 }));
+        let backend: std::sync::Arc<dyn crate::runtime::ComputeBackend> =
+            std::sync::Arc::new(NativeBackend::new());
+        let (proposals, keys) = adversarial_proposals(91, 200, 5);
+        let mut serial_c = mat(&[&[500.0, 500.0]]);
+        let serial = dp_validate(&mut serial_c, 1, &proposals, 1.0);
+        for kind in [TransportKind::InProc, TransportKind::Tcp] {
+            for validators in [2usize, 3] {
+                let cluster =
+                    Cluster::spawn(kind, data.clone(), backend.clone(), 2, validators).unwrap();
+                let mut c = mat(&[&[500.0, 500.0]]);
+                let out =
+                    dp_validate_clustered(&cluster, &mut c, 1, &proposals, &keys, 1.0, 8)
+                        .unwrap();
+                assert_eq!(out.resolved, serial.resolved, "{kind:?} V={validators}");
+                assert_eq!(out.accepted, serial.accepted);
+                assert_eq!(c.data, serial_c.data, "appended state diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_ofl_matches_serial_over_both_transports() {
+        use crate::config::TransportKind;
+        use crate::data::generators::{dp_clusters, GenConfig};
+        use crate::runtime::native::NativeBackend;
+        let data =
+            std::sync::Arc::new(dp_clusters(&GenConfig { n: 8, dim: 2, theta: 1.0, seed: 3 }));
+        let backend: std::sync::Arc<dyn crate::runtime::ComputeBackend> =
+            std::sync::Arc::new(NativeBackend::new());
+        let (dp_props, keys) = adversarial_proposals(77, 160, 4);
+        let proposals: Vec<OflProposal> = dp_props
+            .into_iter()
+            .map(|p| OflProposal { idx: p.idx, center: p.center, d2_prev: 0.9, idx_prev: 2 })
+            .collect();
+        let draw = |i: u32| ((i as u64).wrapping_mul(0x9E37_79B9) % 1000) as f64 / 1000.0;
+        let mut serial_c = Matrix::zeros(0, 2);
+        let serial = ofl_validate(&mut serial_c, 0, &proposals, 1.0, draw);
+        for kind in [TransportKind::InProc, TransportKind::Tcp] {
+            let cluster = Cluster::spawn(kind, data.clone(), backend.clone(), 2, 2).unwrap();
+            let mut c = Matrix::zeros(0, 2);
+            let out =
+                ofl_validate_clustered(&cluster, &mut c, 0, &proposals, &keys, 1.0, draw, 8)
+                    .unwrap();
+            assert_eq!(out.resolved, serial.resolved, "{kind:?}");
+            assert_eq!(out.opened, serial.opened);
+            assert_eq!(c.data, serial_c.data);
+        }
     }
 
     #[test]

@@ -1,0 +1,582 @@
+//! The cluster's wire format: explicit, versioned, length-prefixed frames
+//! carrying [`Job`]s, [`JobOutput`]s and replies between the master and TCP
+//! peers.
+//!
+//! Hand-rolled and zero-dependency by design (no serde offline). The
+//! format is little-endian throughout:
+//!
+//! ```text
+//! frame   := magic:u32  version:u16  kind:u16  len:u32  payload[len]
+//! magic   := 0x4D43434F ("OCCM" in LE byte order)
+//! kind    := 1 job | 2 reply-ok | 3 reply-err
+//! ```
+//!
+//! * **f32 values travel as their IEEE-754 bit patterns** (`to_bits` /
+//!   `from_bits`): NaN payloads, signed zeros and subnormals round-trip
+//!   exactly, which is what keeps TCP runs bit-identical to in-proc runs
+//!   (`rust/tests/transport_equivalence.rs`).
+//! * **Every length is validated before allocation** — a truncated,
+//!   oversized or corrupt frame produces a typed error, never a panic or an
+//!   unbounded allocation (`rust/tests/wire_format.rs`).
+//! * The version field is checked on receive; bumping [`VERSION`] is the
+//!   upgrade path when the `Job` schema changes.
+//!
+//! Snapshots (`C^{t-1}` center/feature matrices) are embedded in the jobs
+//! that reference them, so snapshot distribution is just job scatter. The
+//! dataset itself is *not* shipped — loopback peers share it by `Arc`;
+//! shipping data blocks to true remote peers is future work (ROADMAP).
+
+use super::engine::{Job, JobOutput, JobReply};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use std::io::{Read, Write};
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Frame magic: "OCCM" read back from little-endian bytes.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"OCCM");
+/// Wire-format version.
+pub const VERSION: u16 = 1;
+/// Frame header length in bytes (magic + version + kind + len).
+pub const HEADER_LEN: usize = 12;
+/// Maximum frame payload: 1 GiB. Anything larger is a protocol error.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Frame kind: a job flowing master → peer.
+pub const KIND_JOB: u16 = 1;
+/// Frame kind: a successful reply flowing peer → master.
+pub const KIND_REPLY_OK: u16 = 2;
+/// Frame kind: an error reply flowing peer → master.
+pub const KIND_REPLY_ERR: u16 = 3;
+
+fn wire_err(msg: impl Into<String>) -> Error {
+    Error::Data(format!("wire: {}", msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// Primitive encoding
+// ---------------------------------------------------------------------------
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_usize(b: &mut Vec<u8>, v: usize) {
+    put_u64(b, v as u64);
+}
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    put_u32(b, v.to_bits());
+}
+fn put_range(b: &mut Vec<u8>, r: &Range<usize>) {
+    put_usize(b, r.start);
+    put_usize(b, r.end);
+}
+fn put_u32_slice(b: &mut Vec<u8>, v: &[u32]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_u32(b, x);
+    }
+}
+fn put_f32_slice(b: &mut Vec<u8>, v: &[f32]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_f32(b, x);
+    }
+}
+fn put_u64_slice(b: &mut Vec<u8>, v: &[u64]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_u64(b, x);
+    }
+}
+fn put_bool_slice(b: &mut Vec<u8>, v: &[bool]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_u8(b, u8::from(x));
+    }
+}
+fn put_matrix(b: &mut Vec<u8>, m: &Matrix) {
+    put_usize(b, m.rows);
+    put_usize(b, m.cols);
+    for &x in &m.data {
+        put_f32(b, x);
+    }
+}
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_usize(b, s.len());
+    b.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked payload reader. Every accessor fails with a "truncated"
+/// error instead of panicking when the payload runs short.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Read from `buf`.
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn ensure(&self, n: usize) -> Result<()> {
+        if self.buf.len() - self.pos < n {
+            Err(wire_err(format!(
+                "truncated payload: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )))
+        } else {
+            Ok(())
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.ensure(n)?;
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Next u8.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    /// Next little-endian u32.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+    /// Next little-endian u64.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+    /// Next u64, converted to usize.
+    pub fn usize(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).map_err(|_| wire_err("length does not fit usize"))
+    }
+    /// Next f32, bit-exact.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    /// A length that must still be coverable by the remaining payload when
+    /// each element takes `elem_bytes` — rejects corrupt lengths before any
+    /// allocation happens.
+    fn len_of(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let need = n
+            .checked_mul(elem_bytes)
+            .ok_or_else(|| wire_err("length overflow"))?;
+        self.ensure(need)?;
+        Ok(n)
+    }
+    /// The payload must be fully consumed.
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            Err(wire_err(format!("{} trailing bytes", self.buf.len() - self.pos)))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+fn get_range(r: &mut Reader) -> Result<Range<usize>> {
+    let start = r.usize()?;
+    let end = r.usize()?;
+    if start > end {
+        return Err(wire_err(format!("inverted range {start}..{end}")));
+    }
+    Ok(start..end)
+}
+fn get_u32_vec(r: &mut Reader) -> Result<Vec<u32>> {
+    let n = r.len_of(4)?;
+    (0..n).map(|_| r.u32()).collect()
+}
+fn get_f32_vec(r: &mut Reader) -> Result<Vec<f32>> {
+    let n = r.len_of(4)?;
+    (0..n).map(|_| r.f32()).collect()
+}
+fn get_u64_vec(r: &mut Reader) -> Result<Vec<u64>> {
+    let n = r.len_of(8)?;
+    (0..n).map(|_| r.u64()).collect()
+}
+fn get_bool_vec(r: &mut Reader) -> Result<Vec<bool>> {
+    let n = r.len_of(1)?;
+    (0..n)
+        .map(|_| match r.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(wire_err(format!("invalid bool byte {other}"))),
+        })
+        .collect()
+}
+fn get_matrix(r: &mut Reader) -> Result<Matrix> {
+    let rows = r.usize()?;
+    let cols = r.usize()?;
+    let n = rows.checked_mul(cols).ok_or_else(|| wire_err("matrix size overflow"))?;
+    let bytes = n.checked_mul(4).ok_or_else(|| wire_err("matrix size overflow"))?;
+    r.ensure(bytes)?;
+    let mut data = Vec::with_capacity(n);
+    for _ in 0..n {
+        data.push(r.f32()?);
+    }
+    Ok(Matrix { rows, cols, data })
+}
+fn get_str(r: &mut Reader) -> Result<String> {
+    let n = r.len_of(1)?;
+    String::from_utf8(r.take(n)?.to_vec()).map_err(|_| wire_err("invalid utf-8 string"))
+}
+
+// ---------------------------------------------------------------------------
+// Job encoding
+// ---------------------------------------------------------------------------
+
+const JOB_NEAREST: u8 = 0;
+const JOB_SUFFSTATS: u8 = 1;
+const JOB_BP_DESCEND: u8 = 2;
+const JOB_BP_STATS: u8 = 3;
+const JOB_PAIR_CACHE: u8 = 4;
+const JOB_SHUTDOWN: u8 = 5;
+
+/// Serialize a job payload (no frame header).
+pub fn encode_job(job: &Job) -> Vec<u8> {
+    let mut b = Vec::new();
+    match job {
+        Job::Nearest { range, centers } => {
+            put_u8(&mut b, JOB_NEAREST);
+            put_range(&mut b, range);
+            put_matrix(&mut b, centers);
+        }
+        Job::SuffStats { range, assignments, k } => {
+            put_u8(&mut b, JOB_SUFFSTATS);
+            put_range(&mut b, range);
+            put_u32_slice(&mut b, assignments.as_slice());
+            put_usize(&mut b, *k);
+        }
+        Job::BpDescend { range, features, sweeps } => {
+            put_u8(&mut b, JOB_BP_DESCEND);
+            put_range(&mut b, range);
+            put_matrix(&mut b, features);
+            put_usize(&mut b, *sweeps);
+        }
+        Job::BpStats { range, z, k } => {
+            put_u8(&mut b, JOB_BP_STATS);
+            put_range(&mut b, range);
+            put_usize(&mut b, z.len());
+            for row in z.iter() {
+                put_bool_slice(&mut b, row);
+            }
+            put_usize(&mut b, *k);
+        }
+        Job::PairCache { vectors, shards } => {
+            put_u8(&mut b, JOB_PAIR_CACHE);
+            put_matrix(&mut b, vectors);
+            put_usize(&mut b, shards.len());
+            for shard in shards {
+                put_u32_slice(&mut b, shard);
+            }
+        }
+        Job::Shutdown => {
+            put_u8(&mut b, JOB_SHUTDOWN);
+        }
+    }
+    b
+}
+
+/// Deserialize a job payload, validating internal invariants (range
+/// orientation, index bounds) so a corrupt frame cannot poison a peer.
+pub fn decode_job(payload: &[u8]) -> Result<Job> {
+    let mut r = Reader::new(payload);
+    let job = match r.u8()? {
+        JOB_NEAREST => {
+            let range = get_range(&mut r)?;
+            let centers = Arc::new(get_matrix(&mut r)?);
+            Job::Nearest { range, centers }
+        }
+        JOB_SUFFSTATS => {
+            let range = get_range(&mut r)?;
+            let assignments = get_u32_vec(&mut r)?;
+            let k = r.usize()?;
+            if assignments.len() < range.end {
+                return Err(wire_err(format!(
+                    "suffstats assignments cover {} points, range ends at {}",
+                    assignments.len(),
+                    range.end
+                )));
+            }
+            Job::SuffStats { range, assignments: Arc::new(assignments), k }
+        }
+        JOB_BP_DESCEND => {
+            let range = get_range(&mut r)?;
+            let features = Arc::new(get_matrix(&mut r)?);
+            let sweeps = r.usize()?;
+            Job::BpDescend { range, features, sweeps }
+        }
+        JOB_BP_STATS => {
+            let range = get_range(&mut r)?;
+            let rows = r.len_of(8)?;
+            let mut z = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                z.push(get_bool_vec(&mut r)?);
+            }
+            let k = r.usize()?;
+            if z.len() < range.end {
+                return Err(wire_err(format!(
+                    "bp-stats z covers {} points, range ends at {}",
+                    z.len(),
+                    range.end
+                )));
+            }
+            Job::BpStats { range, z: Arc::new(z), k }
+        }
+        JOB_PAIR_CACHE => {
+            let vectors = get_matrix(&mut r)?;
+            let nshards = r.len_of(8)?;
+            let mut shards = Vec::with_capacity(nshards);
+            for _ in 0..nshards {
+                let shard = get_u32_vec(&mut r)?;
+                if let Some(&p) = shard.iter().find(|&&p| p as usize >= vectors.rows) {
+                    return Err(wire_err(format!(
+                        "pair-cache position {p} out of range ({} vectors)",
+                        vectors.rows
+                    )));
+                }
+                shards.push(shard);
+            }
+            Job::PairCache { vectors: Arc::new(vectors), shards }
+        }
+        JOB_SHUTDOWN => Job::Shutdown,
+        other => return Err(wire_err(format!("unknown job tag {other}"))),
+    };
+    r.finish()?;
+    Ok(job)
+}
+
+// ---------------------------------------------------------------------------
+// JobOutput encoding
+// ---------------------------------------------------------------------------
+
+const OUT_NEAREST: u8 = 0;
+const OUT_SUFFSTATS: u8 = 1;
+const OUT_BP_DESCEND: u8 = 2;
+const OUT_BP_STATS: u8 = 3;
+const OUT_PAIR_CACHE: u8 = 4;
+
+/// Serialize a job output payload (no frame header).
+pub fn encode_output(out: &JobOutput) -> Vec<u8> {
+    let mut b = Vec::new();
+    match out {
+        JobOutput::Nearest { idx, d2 } => {
+            put_u8(&mut b, OUT_NEAREST);
+            put_u32_slice(&mut b, idx);
+            put_f32_slice(&mut b, d2);
+        }
+        JobOutput::SuffStats { chunks } => {
+            put_u8(&mut b, OUT_SUFFSTATS);
+            put_usize(&mut b, chunks.len());
+            for (id, sums, counts) in chunks {
+                put_usize(&mut b, *id);
+                put_matrix(&mut b, sums);
+                put_u64_slice(&mut b, counts);
+            }
+        }
+        JobOutput::BpDescend { z, k, residuals, r2 } => {
+            put_u8(&mut b, OUT_BP_DESCEND);
+            put_bool_slice(&mut b, z);
+            put_usize(&mut b, *k);
+            put_f32_slice(&mut b, residuals);
+            put_f32_slice(&mut b, r2);
+        }
+        JobOutput::BpStats { chunks } => {
+            put_u8(&mut b, OUT_BP_STATS);
+            put_usize(&mut b, chunks.len());
+            for (id, ztz, ztx) in chunks {
+                put_usize(&mut b, *id);
+                put_matrix(&mut b, ztz);
+                put_matrix(&mut b, ztx);
+            }
+        }
+        JobOutput::PairCache { pairs } => {
+            put_u8(&mut b, OUT_PAIR_CACHE);
+            put_usize(&mut b, pairs.len());
+            for (a, x, d) in pairs {
+                put_u32(&mut b, *a);
+                put_u32(&mut b, *x);
+                put_f32(&mut b, *d);
+            }
+        }
+    }
+    b
+}
+
+/// Deserialize a job output payload.
+pub fn decode_output(r: &mut Reader) -> Result<JobOutput> {
+    Ok(match r.u8()? {
+        OUT_NEAREST => {
+            let idx = get_u32_vec(r)?;
+            let d2 = get_f32_vec(r)?;
+            if idx.len() != d2.len() {
+                return Err(wire_err("nearest idx/d2 length mismatch"));
+            }
+            JobOutput::Nearest { idx, d2 }
+        }
+        OUT_SUFFSTATS => {
+            let n = r.len_of(8)?;
+            let mut chunks = Vec::with_capacity(n);
+            for _ in 0..n {
+                let id = r.usize()?;
+                let sums = get_matrix(r)?;
+                let counts = get_u64_vec(r)?;
+                chunks.push((id, sums, counts));
+            }
+            JobOutput::SuffStats { chunks }
+        }
+        OUT_BP_DESCEND => {
+            let z = get_bool_vec(r)?;
+            let k = r.usize()?;
+            let residuals = get_f32_vec(r)?;
+            let r2 = get_f32_vec(r)?;
+            JobOutput::BpDescend { z, k, residuals, r2 }
+        }
+        OUT_BP_STATS => {
+            let n = r.len_of(8)?;
+            let mut chunks = Vec::with_capacity(n);
+            for _ in 0..n {
+                let id = r.usize()?;
+                let ztz = get_matrix(r)?;
+                let ztx = get_matrix(r)?;
+                chunks.push((id, ztz, ztx));
+            }
+            JobOutput::BpStats { chunks }
+        }
+        OUT_PAIR_CACHE => {
+            let n = r.len_of(12)?;
+            let mut pairs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let a = r.u32()?;
+                let b = r.u32()?;
+                let d = r.f32()?;
+                pairs.push((a, b, d));
+            }
+            JobOutput::PairCache { pairs }
+        }
+        other => return Err(wire_err(format!("unknown output tag {other}"))),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------------
+
+/// Wrap a payload in a framed message.
+pub fn frame(kind: u16, payload: Vec<u8>) -> Result<Vec<u8>> {
+    if payload.len() > MAX_FRAME as usize {
+        return Err(wire_err(format!("oversized frame: {} bytes", payload.len())));
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&kind.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// A complete job frame, ready to write.
+pub fn job_frame(job: &Job) -> Result<Vec<u8>> {
+    frame(KIND_JOB, encode_job(job))
+}
+
+/// A complete reply frame for a peer's result.
+pub fn reply_frame(
+    worker: u32,
+    busy: Duration,
+    output: &Result<JobOutput>,
+) -> Result<Vec<u8>> {
+    let mut b = Vec::new();
+    put_u32(&mut b, worker);
+    put_u64(&mut b, busy.as_micros().min(u128::from(u64::MAX)) as u64);
+    match output {
+        Ok(out) => {
+            b.extend_from_slice(&encode_output(out));
+            frame(KIND_REPLY_OK, b)
+        }
+        Err(e) => {
+            put_str(&mut b, &e.to_string());
+            frame(KIND_REPLY_ERR, b)
+        }
+    }
+}
+
+/// Read one frame: `(kind, payload)`. Fails with a typed error on EOF,
+/// bad magic, version mismatch or an oversized length.
+pub fn read_frame(r: &mut impl Read) -> Result<(u16, Vec<u8>)> {
+    let mut head = [0u8; HEADER_LEN];
+    r.read_exact(&mut head)
+        .map_err(|e| wire_err(format!("truncated frame header: {e}")))?;
+    let magic = u32::from_le_bytes(head[0..4].try_into().expect("4 bytes"));
+    let version = u16::from_le_bytes(head[4..6].try_into().expect("2 bytes"));
+    let kind = u16::from_le_bytes(head[6..8].try_into().expect("2 bytes"));
+    let len = u32::from_le_bytes(head[8..12].try_into().expect("4 bytes"));
+    if magic != MAGIC {
+        return Err(wire_err(format!("bad magic {magic:#010x}")));
+    }
+    if version != VERSION {
+        return Err(wire_err(format!("wire version {version}, expected {VERSION}")));
+    }
+    if len > MAX_FRAME {
+        return Err(wire_err(format!("oversized frame: {len} bytes")));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| wire_err(format!("truncated frame payload: {e}")))?;
+    Ok((kind, payload))
+}
+
+/// Peer side: read one frame and decode the job it must carry.
+pub fn read_job(r: &mut impl Read) -> Result<Job> {
+    let (kind, payload) = read_frame(r)?;
+    if kind != KIND_JOB {
+        return Err(wire_err(format!("expected a job frame, got kind {kind}")));
+    }
+    decode_job(&payload)
+}
+
+/// Decode a reply payload read off the wire.
+pub fn decode_reply(kind: u16, payload: &[u8]) -> Result<JobReply> {
+    let mut r = Reader::new(payload);
+    let worker = r.u32()? as usize;
+    let busy = Duration::from_micros(r.u64()?);
+    match kind {
+        KIND_REPLY_OK => {
+            let output = decode_output(&mut r)?;
+            r.finish()?;
+            Ok(JobReply { worker, output: Ok(output), busy })
+        }
+        KIND_REPLY_ERR => {
+            let msg = get_str(&mut r)?;
+            r.finish()?;
+            Ok(JobReply { worker, output: Err(Error::Coordinator(msg)), busy })
+        }
+        other => Err(wire_err(format!("expected a reply frame, got kind {other}"))),
+    }
+}
+
+/// Peer side: frame and write one reply.
+pub fn write_reply(
+    w: &mut impl Write,
+    worker: u32,
+    busy: Duration,
+    output: &Result<JobOutput>,
+) -> Result<()> {
+    let bytes = reply_frame(worker, busy, output)?;
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(())
+}

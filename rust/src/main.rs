@@ -12,7 +12,7 @@
 
 use occml::algorithms::objective;
 use occml::cli::{App, Command, Dispatch, Parsed};
-use occml::config::{toml, Algo, BackendKind, DataSource, RunConfig, SchedulerKind};
+use occml::config::{toml, Algo, BackendKind, DataSource, RunConfig, SchedulerKind, TransportKind};
 use occml::coordinator::{driver, Model};
 use occml::data::generators::{self, GenConfig};
 use occml::error::{Error, Result};
@@ -44,6 +44,8 @@ fn app() -> App {
                 .flag("bootstrap-div", "bootstrap divisor (0 = off)", Some("16"))
                 .flag("backend", "native | xla", Some("native"))
                 .flag("scheduler", "bsp | pipelined", Some("bsp"))
+                .flag("transport", "inproc | tcp", Some("inproc"))
+                .flag("validator-shards", "validator peers (0 = procs/2, min 1)", Some("0"))
                 .flag("artifacts", "artifacts directory", Some("artifacts"))
                 .flag("data", "dp | bp | separable | file:<path>", Some("dp"))
                 .flag("n", "points to generate", Some("16384"))
@@ -78,6 +80,7 @@ fn app() -> App {
                 .flag("iterations", "passes (dp/bp)", Some("3"))
                 .flag("backend", "native | xla", Some("native"))
                 .flag("scheduler", "bsp | pipelined", Some("bsp"))
+                .flag("transport", "inproc | tcp", Some("inproc"))
                 .flag("seed", "RNG seed", Some("0")),
         )
         .command(
@@ -135,6 +138,12 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     if let Some(v) = p.get("scheduler") {
         cfg.scheduler = SchedulerKind::parse(v)?;
     }
+    if let Some(v) = p.get("transport") {
+        cfg.transport = TransportKind::parse(v)?;
+    }
+    if let Some(v) = p.get_parse::<usize>("validator-shards")? {
+        cfg.validator_shards = v;
+    }
     if let Some(v) = p.get("artifacts") {
         cfg.artifacts_dir = PathBuf::from(v);
     }
@@ -172,6 +181,7 @@ fn cmd_run(p: &Parsed) -> Result<i32> {
         println!("algo        : {}", cfg.algo.name());
         println!("backend     : {}", cfg.backend.name());
         println!("scheduler   : {}", cfg.scheduler.name());
+        println!("transport   : {}", cfg.transport.name());
         println!("points      : {}", cfg.n);
         println!("P x b       : {} x {} = {} per epoch", cfg.procs, cfg.block, cfg.points_per_epoch());
         println!("{kind:<12}: {}", out.model.k());
@@ -269,7 +279,7 @@ fn cmd_scaling(p: &Parsed) -> Result<i32> {
         Algo::BpMeans => DataSource::BpFeatures,
         _ => DataSource::DpClusters,
     };
-    let base_cfg = RunConfig {
+    let mut base_cfg = RunConfig {
         algo,
         lambda: 2.0,
         iterations: if algo == Algo::Ofl { 1 } else { iters },
@@ -278,8 +288,11 @@ fn cmd_scaling(p: &Parsed) -> Result<i32> {
         seed,
         source,
         n,
-        ..RunConfig::default()
+        ..RunConfig::default() // transport: the env-aware default
     };
+    if let Some(v) = p.get("transport") {
+        base_cfg.transport = TransportKind::parse(v)?;
+    }
     let data = Arc::new(driver::load_or_generate(&base_cfg)?);
     let be = driver::make_backend(&base_cfg)?;
 

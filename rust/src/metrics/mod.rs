@@ -49,6 +49,14 @@ pub struct EpochRecord {
     /// (computed against a stale snapshot) could not be patched and had to
     /// be redone (BP-means under the pipelined scheduler).
     pub respins: usize,
+    /// Bytes that crossed the cluster transport's wire during this epoch
+    /// (jobs, replies, snapshots and validation-shard traffic, both
+    /// directions). Zero under the in-proc transport, whose messages move
+    /// by pointer.
+    pub wire_bytes: u64,
+    /// Master-side wall-clock spent encoding jobs and decoding replies for
+    /// this epoch. Zero under the in-proc transport.
+    pub ser_time: Duration,
 }
 
 impl EpochRecord {
@@ -68,6 +76,8 @@ impl EpochRecord {
             ("validate_overlap_ms", Json::Num(self.overlap_time.as_secs_f64() * 1e3)),
             ("queue_depth", Json::Num(self.queue_depth as f64)),
             ("respins", Json::Num(self.respins as f64)),
+            ("wire_bytes", Json::Num(self.wire_bytes as f64)),
+            ("ser_ms", Json::Num(self.ser_time.as_secs_f64() * 1e3)),
         ])
     }
 }
@@ -117,6 +127,14 @@ impl RunSummary {
     /// Total speculative recomputes across epochs (pipelined BP-means).
     pub fn total_respins(&self) -> usize {
         self.epochs.iter().map(|e| e.respins).sum()
+    }
+    /// Total bytes that crossed the transport wire (zero in-proc).
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.wire_bytes).sum()
+    }
+    /// Total master-side serialization time (zero in-proc).
+    pub fn total_ser_time(&self) -> Duration {
+        self.epochs.iter().map(|e| e.ser_time).sum()
     }
 }
 
@@ -205,6 +223,8 @@ mod tests {
             overlap_time: Duration::from_millis(1),
             queue_depth: 2,
             respins: 0,
+            wire_bytes: 64,
+            ser_time: Duration::from_micros(250),
         }
     }
 
@@ -223,6 +243,8 @@ mod tests {
         assert_eq!(s.iteration_time(0), Duration::from_millis(14));
         assert_eq!(s.total_overlap(), Duration::from_millis(3));
         assert_eq!(s.total_respins(), 0);
+        assert_eq!(s.total_wire_bytes(), 3 * 64);
+        assert_eq!(s.total_ser_time(), Duration::from_micros(750));
     }
 
     #[test]
@@ -236,6 +258,8 @@ mod tests {
         assert!(j.get("validate_overlap_ms").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("queue_depth").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("respins").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("wire_bytes").unwrap().as_usize(), Some(64));
+        assert!(j.get("ser_ms").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

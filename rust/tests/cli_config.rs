@@ -1,7 +1,9 @@
 //! CLI + config integration: the `occd` binary surface.
 
 use occml::cli::{App, Command, Dispatch};
-use occml::config::{toml, Algo, BackendKind, DataSource, RunConfig, SchedulerKind};
+use occml::config::{
+    toml, Algo, BackendKind, DataSource, RunConfig, SchedulerKind, TransportKind,
+};
 
 #[test]
 fn full_config_file_roundtrip() {
@@ -82,10 +84,68 @@ fn run_config_validation_cascades_through_doc() {
         "[run]\nblock = 0\n",
         "[run]\nbackend = \"cuda\"\n",
         "[run]\nscheduler = \"warp\"\n",
+        "[run]\ntransport = \"carrier-pigeon\"\n",
+        "[run]\nvalidator_shards = 4096\n",
         "[data]\nsource = \"hdfs\"\n",
     ] {
         assert!(RunConfig::from_doc(&toml::parse(bad).unwrap()).is_err(), "{bad}");
     }
+}
+
+#[test]
+fn transport_knob_parses_from_toml() {
+    let cfg = RunConfig::from_doc(
+        &toml::parse("[run]\ntransport = \"tcp\"\nvalidator_shards = 2\n").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(cfg.transport, TransportKind::Tcp);
+    assert_eq!(cfg.validator_shards, 2);
+    let cfg =
+        RunConfig::from_doc(&toml::parse("[run]\ntransport = \"inproc\"\n").unwrap()).unwrap();
+    assert_eq!(cfg.transport, TransportKind::InProc);
+    // Absent from the TOML → the environment-aware default (inproc unless
+    // the CI loopback job exports OCCML_TRANSPORT=tcp).
+    let cfg = RunConfig::from_doc(&toml::parse("[run]\nalgo = \"dpmeans\"\n").unwrap()).unwrap();
+    assert_eq!(cfg.transport, TransportKind::from_env());
+}
+
+#[test]
+fn transport_knob_rejects_unknown_values_with_useful_error() {
+    let err = TransportKind::parse("rdma").unwrap_err().to_string();
+    assert!(err.contains("rdma"), "error names the bad value: {err}");
+    assert!(err.contains("inproc") && err.contains("tcp"), "error lists choices: {err}");
+}
+
+#[test]
+fn transport_flag_parses_through_cli() {
+    let app = App::new("occd", "test").command(
+        Command::new("run", "run")
+            .flag("transport", "inproc | tcp", Some("inproc"))
+            .flag("validator-shards", "validator peers", Some("0")),
+    );
+    let argv: Vec<String> = ["run", "--transport=TCP", "--validator-shards", "3"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(_, p) => {
+            let kind = TransportKind::parse(p.get("transport").unwrap()).unwrap();
+            assert_eq!(kind, TransportKind::Tcp);
+            assert_eq!(p.get_parse::<usize>("validator-shards").unwrap(), Some(3));
+        }
+        _ => panic!("expected run dispatch"),
+    }
+}
+
+#[test]
+fn shipped_tcp_config_selects_tcp_transport() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs")
+        .join("dpmeans_tcp.toml");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let cfg = RunConfig::from_doc(&toml::parse(&text).unwrap()).unwrap();
+    assert_eq!(cfg.transport, TransportKind::Tcp);
+    assert!(cfg.effective_validators() >= 1);
 }
 
 #[test]

@@ -1,0 +1,187 @@
+//! Transport equivalence — the wire does not change the answer.
+//!
+//! The TCP transport serializes every job, snapshot and reply through the
+//! bit-exact wire format, and validation shards run as peers addressed
+//! through the transport. None of that may move a single bit of the model:
+//! this sweep runs `{inproc, tcp} × {bsp, pipelined} × {dpmeans, ofl,
+//! bpmeans}` and asserts every combination produces a model bit-identical
+//! to the in-proc BSP reference — the same contract
+//! `tests/serializability.rs` checks across worker counts and
+//! `tests/scheduler_equivalence.rs` across scheduling policies, completed
+//! here across transports.
+
+use occml::config::{Algo, RunConfig, SchedulerKind, TransportKind};
+use occml::coordinator::{driver, Model};
+use occml::data::generators::{bp_features, dp_clusters, GenConfig};
+use occml::data::Dataset;
+use occml::runtime::native::NativeBackend;
+use std::sync::Arc;
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    algo: Algo,
+    scheduler: SchedulerKind,
+    transport: TransportKind,
+    data: &Arc<Dataset>,
+    procs: usize,
+    block: usize,
+    iters: usize,
+    boot: usize,
+    validator_shards: usize,
+    seed: u64,
+) -> driver::RunOutput {
+    let cfg = RunConfig {
+        algo,
+        scheduler,
+        transport,
+        validator_shards,
+        lambda: 1.0,
+        procs,
+        block,
+        iterations: iters,
+        bootstrap_div: boot,
+        seed,
+        n: data.len(),
+        dim: data.dim(),
+        ..RunConfig::default()
+    };
+    driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+}
+
+/// Bit-exact model comparison (no tolerance: serializability is exact).
+fn assert_models_identical(a: &Model, b: &Model, ctx: &str) {
+    match (a, b) {
+        (Model::Dp(x), Model::Dp(y)) => {
+            assert_eq!(x.centers.data, y.centers.data, "{ctx}: centers");
+            assert_eq!(x.assignments, y.assignments, "{ctx}: assignments");
+            assert_eq!(x.created_per_pass, y.created_per_pass, "{ctx}: created_per_pass");
+        }
+        (Model::Ofl(x), Model::Ofl(y)) => {
+            assert_eq!(x.centers.data, y.centers.data, "{ctx}: facilities");
+            assert_eq!(x.assignments, y.assignments, "{ctx}: assignments");
+            assert_eq!(x.opened_by, y.opened_by, "{ctx}: opened_by");
+        }
+        (Model::Bp(x), Model::Bp(y)) => {
+            assert_eq!(x.features.data, y.features.data, "{ctx}: features");
+            assert_eq!(x.assignments, y.assignments, "{ctx}: assignments");
+            assert_eq!(x.created_per_pass, y.created_per_pass, "{ctx}: created_per_pass");
+        }
+        _ => panic!("{ctx}: model kinds differ"),
+    }
+}
+
+/// The full grid, every algorithm: each `{transport, scheduler}` cell must
+/// reproduce the in-proc BSP model bit for bit, and the transport
+/// accounting must match the transport (zero wire bytes in-proc, non-zero
+/// over TCP).
+#[test]
+fn models_bitidentical_across_transport_scheduler_grid() {
+    let grid = [
+        (TransportKind::InProc, SchedulerKind::Bsp),
+        (TransportKind::InProc, SchedulerKind::Pipelined),
+        (TransportKind::Tcp, SchedulerKind::Bsp),
+        (TransportKind::Tcp, SchedulerKind::Pipelined),
+    ];
+    for (algo, iters, boot) in
+        [(Algo::DpMeans, 2, 16), (Algo::Ofl, 1, 0), (Algo::BpMeans, 2, 16)]
+    {
+        let seed = 83;
+        let data = Arc::new(match algo {
+            Algo::BpMeans => bp_features(&GenConfig { n: 360, dim: 12, theta: 1.0, seed }),
+            _ => dp_clusters(&GenConfig { n: 440, dim: 12, theta: 1.0, seed }),
+        });
+        let reference = run(
+            algo,
+            SchedulerKind::Bsp,
+            TransportKind::InProc,
+            &data,
+            4,
+            22,
+            iters,
+            boot,
+            0,
+            seed,
+        );
+        for (transport, scheduler) in grid {
+            let out =
+                run(algo, scheduler, transport, &data, 4, 22, iters, boot, 0, seed);
+            let ctx = format!("{algo:?} {transport:?} {scheduler:?}");
+            assert_models_identical(&reference.model, &out.model, &ctx);
+            assert_eq!(
+                reference.summary.total_proposed(),
+                out.summary.total_proposed(),
+                "{ctx}: proposal accounting"
+            );
+            let wire = out.summary.total_wire_bytes();
+            match transport {
+                TransportKind::InProc => {
+                    assert_eq!(wire, 0, "{ctx}: in-proc must move zero wire bytes")
+                }
+                TransportKind::Tcp => {
+                    assert!(wire > 0, "{ctx}: tcp runs must account wire traffic")
+                }
+            }
+        }
+    }
+}
+
+/// The validator plane is also transport- and shard-count-independent:
+/// small λ forces heavy proposal traffic so the clustered conflict
+/// pre-computation actually engages, across different validator counts.
+#[test]
+fn validator_peer_count_does_not_change_the_model() {
+    let seed = 29;
+    let data = Arc::new(dp_clusters(&GenConfig { n: 480, dim: 8, theta: 1.0, seed }));
+    let lambda = 0.5; // dense proposals → sharded validation engages
+    let mk = |transport, shards| {
+        let cfg = RunConfig {
+            algo: Algo::DpMeans,
+            transport,
+            validator_shards: shards,
+            lambda,
+            procs: 4,
+            block: 40,
+            iterations: 2,
+            bootstrap_div: 16,
+            seed,
+            n: data.len(),
+            dim: data.dim(),
+            ..RunConfig::default()
+        };
+        driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+    };
+    let reference = mk(TransportKind::InProc, 0);
+    for transport in [TransportKind::InProc, TransportKind::Tcp] {
+        for shards in [1usize, 2, 5] {
+            let out = mk(transport, shards);
+            assert_models_identical(
+                &reference.model,
+                &out.model,
+                &format!("{transport:?} V={shards}"),
+            );
+        }
+    }
+}
+
+/// TCP runs under the pipelined scheduler still overlap (queue depth 2)
+/// and still respin BP-means on conflicts — scheduling behaviour is
+/// transport-independent, not just the final model.
+#[test]
+fn tcp_pipelined_still_overlaps_epochs() {
+    let seed = 17;
+    let data = Arc::new(dp_clusters(&GenConfig { n: 400, dim: 8, theta: 1.0, seed }));
+    let out = run(
+        Algo::DpMeans,
+        SchedulerKind::Pipelined,
+        TransportKind::Tcp,
+        &data,
+        4,
+        20,
+        2,
+        16,
+        0,
+        seed,
+    );
+    let deep = out.summary.epochs.iter().filter(|e| e.queue_depth == 2).count();
+    assert!(deep >= 1, "no overlapped epochs recorded over tcp");
+}

@@ -1,0 +1,361 @@
+//! Wire-format round trips and malformed-frame behaviour.
+//!
+//! The TCP transport's bit-identical guarantee rests on the wire format
+//! preserving every f32 exactly — including NaN payloads, signed zeros,
+//! infinities and subnormals — and on corrupt frames failing cleanly
+//! (typed errors, no panics, no unbounded allocations). Round trips are
+//! property-checked for every `Job` / `JobOutput` variant; framing errors
+//! (truncation, oversize, bad magic/version, trailing bytes) each get a
+//! directed case.
+
+use occml::coordinator::engine::{Job, JobOutput};
+use occml::coordinator::wire;
+use occml::linalg::Matrix;
+use occml::testing::{Gen, Prop};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Bitwise comparison helpers (f32 == breaks on NaN, which we must carry).
+// ---------------------------------------------------------------------------
+
+fn f32s_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn mats_eq(a: &Matrix, b: &Matrix) -> bool {
+    a.rows == b.rows && a.cols == b.cols && f32s_eq(&a.data, &b.data)
+}
+
+fn jobs_eq(a: &Job, b: &Job) -> bool {
+    match (a, b) {
+        (Job::Nearest { range: r1, centers: c1 }, Job::Nearest { range: r2, centers: c2 }) => {
+            r1 == r2 && mats_eq(c1, c2)
+        }
+        (
+            Job::SuffStats { range: r1, assignments: a1, k: k1 },
+            Job::SuffStats { range: r2, assignments: a2, k: k2 },
+        ) => r1 == r2 && a1 == a2 && k1 == k2,
+        (
+            Job::BpDescend { range: r1, features: f1, sweeps: s1 },
+            Job::BpDescend { range: r2, features: f2, sweeps: s2 },
+        ) => r1 == r2 && mats_eq(f1, f2) && s1 == s2,
+        (Job::BpStats { range: r1, z: z1, k: k1 }, Job::BpStats { range: r2, z: z2, k: k2 }) => {
+            r1 == r2 && z1 == z2 && k1 == k2
+        }
+        (
+            Job::PairCache { vectors: v1, shards: s1 },
+            Job::PairCache { vectors: v2, shards: s2 },
+        ) => mats_eq(v1, v2) && s1 == s2,
+        (Job::Shutdown, Job::Shutdown) => true,
+        _ => false,
+    }
+}
+
+fn outputs_eq(a: &JobOutput, b: &JobOutput) -> bool {
+    match (a, b) {
+        (JobOutput::Nearest { idx: i1, d2: d1 }, JobOutput::Nearest { idx: i2, d2: d2v }) => {
+            i1 == i2 && f32s_eq(d1, d2v)
+        }
+        (JobOutput::SuffStats { chunks: c1 }, JobOutput::SuffStats { chunks: c2 }) => {
+            c1.len() == c2.len()
+                && c1.iter().zip(c2).all(|((i1, s1, n1), (i2, s2, n2))| {
+                    i1 == i2 && mats_eq(s1, s2) && n1 == n2
+                })
+        }
+        (
+            JobOutput::BpDescend { z: z1, k: k1, residuals: r1, r2: q1 },
+            JobOutput::BpDescend { z: z2, k: k2, residuals: r2v, r2: q2 },
+        ) => z1 == z2 && k1 == k2 && f32s_eq(r1, r2v) && f32s_eq(q1, q2),
+        (JobOutput::BpStats { chunks: c1 }, JobOutput::BpStats { chunks: c2 }) => {
+            c1.len() == c2.len()
+                && c1.iter().zip(c2).all(|((i1, a1, b1), (i2, a2, b2))| {
+                    i1 == i2 && mats_eq(a1, a2) && mats_eq(b1, b2)
+                })
+        }
+        (JobOutput::PairCache { pairs: p1 }, JobOutput::PairCache { pairs: p2 }) => {
+            p1.len() == p2.len()
+                && p1.iter().zip(p2).all(|((a1, b1, d1), (a2, b2, d2))| {
+                    a1 == a2 && b1 == b2 && d1.to_bits() == d2.to_bits()
+                })
+        }
+        _ => false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generators: floats biased toward the adversarial corners.
+// ---------------------------------------------------------------------------
+
+fn nasty_f32(g: &mut Gen) -> f32 {
+    match g.rng().next_below(8) {
+        0 => f32::NAN,
+        1 => f32::from_bits(0x7FC0_1234), // NaN with payload bits
+        2 => 0.0,
+        3 => -0.0,
+        4 => f32::INFINITY,
+        5 => f32::NEG_INFINITY,
+        6 => f32::MIN_POSITIVE / 2.0, // subnormal
+        _ => g.f32_in(-1e6, 1e6),
+    }
+}
+
+fn nasty_matrix(g: &mut Gen, max_rows: usize, max_cols: usize) -> Matrix {
+    let rows = g.usize_in(0, max_rows);
+    let cols = g.usize_in(1, max_cols);
+    let data = g.vec_of(rows * cols, nasty_f32);
+    Matrix { rows, cols, data }
+}
+
+fn job_roundtrip(job: &Job) -> Job {
+    let payload = wire::encode_job(job);
+    wire::decode_job(&payload).expect("decode_job")
+}
+
+fn output_roundtrip(out: &JobOutput) -> JobOutput {
+    let bytes = wire::encode_output(out);
+    let mut r = wire::Reader::new(&bytes);
+    let decoded = wire::decode_output(&mut r).expect("decode_output");
+    r.finish().expect("no trailing bytes");
+    decoded
+}
+
+// ---------------------------------------------------------------------------
+// Round trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_every_job_variant_roundtrips_bitexactly() {
+    Prop::new("job wire round trip").cases(60).check(|g| {
+        let n = g.usize_in(0, 40);
+        let job = match g.rng().next_below(5) {
+            0 => Job::Nearest {
+                range: n..n + g.usize_in(0, 50),
+                centers: Arc::new(nasty_matrix(g, 6, 5)),
+            },
+            1 => {
+                let end = n + g.usize_in(0, 30);
+                let len = end + g.usize_in(0, 10);
+                Job::SuffStats {
+                    range: n..end,
+                    assignments: Arc::new(g.vec_of(len, |g| g.rng().next_below(9) as u32)),
+                    k: g.usize_in(0, 9),
+                }
+            }
+            2 => Job::BpDescend {
+                range: n..n + g.usize_in(0, 50),
+                features: Arc::new(nasty_matrix(g, 5, 6)),
+                sweeps: g.usize_in(0, 4),
+            },
+            3 => {
+                let end = n + g.usize_in(0, 20);
+                let len = end + g.usize_in(0, 5);
+                let k = g.usize_in(0, 4);
+                Job::BpStats {
+                    range: n..end,
+                    z: Arc::new(g.vec_of(len, |g| g.vec_of(k, |g| g.bool()))),
+                    k,
+                }
+            }
+            _ => {
+                let vectors = nasty_matrix(g, 8, 4);
+                let rows = vectors.rows;
+                let shards = if rows == 0 {
+                    vec![]
+                } else {
+                    g.vec_of(g.usize_in(0, 3), |g| {
+                        let mut s: Vec<u32> = g
+                            .vec_of(g.usize_in(0, rows), |g| {
+                                g.rng().next_below(rows as u64) as u32
+                            });
+                        s.sort_unstable();
+                        s.dedup();
+                        s
+                    })
+                };
+                Job::PairCache { vectors: Arc::new(vectors), shards }
+            }
+        };
+        let back = job_roundtrip(&job);
+        if jobs_eq(&job, &back) {
+            Ok(())
+        } else {
+            Err("job did not round-trip bit-exactly".to_string())
+        }
+    });
+}
+
+#[test]
+fn shutdown_roundtrips() {
+    assert!(jobs_eq(&Job::Shutdown, &job_roundtrip(&Job::Shutdown)));
+}
+
+#[test]
+fn prop_every_output_variant_roundtrips_bitexactly() {
+    Prop::new("output wire round trip").cases(60).check(|g| {
+        let out = match g.rng().next_below(5) {
+            0 => {
+                let n = g.usize_in(0, 60);
+                JobOutput::Nearest {
+                    idx: g.vec_of(n, |g| g.rng().next_u64() as u32),
+                    d2: g.vec_of(n, nasty_f32),
+                }
+            }
+            1 => JobOutput::SuffStats {
+                chunks: g.vec_of(g.usize_in(0, 4), |g| {
+                    let k = g.usize_in(0, 4);
+                    (
+                        g.usize_in(0, 1000),
+                        nasty_matrix(g, k, 5),
+                        g.vec_of(k, |g| g.rng().next_u64()),
+                    )
+                }),
+            },
+            2 => {
+                let n = g.usize_in(0, 20);
+                let k = g.usize_in(0, 4);
+                let d = g.usize_in(1, 5);
+                JobOutput::BpDescend {
+                    z: g.vec_of(n * k, |g| g.bool()),
+                    k,
+                    residuals: g.vec_of(n * d, nasty_f32),
+                    r2: g.vec_of(n, nasty_f32),
+                }
+            }
+            3 => JobOutput::BpStats {
+                chunks: g.vec_of(g.usize_in(0, 3), |g| {
+                    let k = g.usize_in(1, 3);
+                    (g.usize_in(0, 99), nasty_matrix(g, k, k), nasty_matrix(g, k, 4))
+                }),
+            },
+            _ => JobOutput::PairCache {
+                pairs: g.vec_of(g.usize_in(0, 30), |g| {
+                    (g.rng().next_u64() as u32, g.rng().next_u64() as u32, nasty_f32(g))
+                }),
+            },
+        };
+        let back = output_roundtrip(&out);
+        if outputs_eq(&out, &back) {
+            Ok(())
+        } else {
+            Err("output did not round-trip bit-exactly".to_string())
+        }
+    });
+}
+
+#[test]
+fn reply_roundtrips_through_frames_including_errors() {
+    let out = JobOutput::Nearest { idx: vec![3, 1], d2: vec![f32::NAN, -0.0] };
+    let frame = wire::reply_frame(7, std::time::Duration::from_micros(1234), &Ok(out)).unwrap();
+    let (kind, payload) = wire::read_frame(&mut frame.as_slice()).unwrap();
+    assert_eq!(kind, wire::KIND_REPLY_OK);
+    let reply = wire::decode_reply(kind, &payload).unwrap();
+    assert_eq!(reply.worker, 7);
+    assert_eq!(reply.busy, std::time::Duration::from_micros(1234));
+    let JobOutput::Nearest { idx, d2 } = reply.output.unwrap() else { panic!("wrong kind") };
+    assert_eq!(idx, vec![3, 1]);
+    assert!(d2[0].is_nan() && d2[0].to_bits() == f32::NAN.to_bits());
+    assert_eq!(d2[1].to_bits(), (-0.0f32).to_bits());
+
+    let err: occml::Result<JobOutput> =
+        Err(occml::Error::Coordinator("worker panicked: index out of bounds".into()));
+    let frame = wire::reply_frame(2, std::time::Duration::ZERO, &err).unwrap();
+    let (kind, payload) = wire::read_frame(&mut frame.as_slice()).unwrap();
+    assert_eq!(kind, wire::KIND_REPLY_ERR);
+    let reply = wire::decode_reply(kind, &payload).unwrap();
+    assert_eq!(reply.worker, 2);
+    let msg = reply.output.unwrap_err().to_string();
+    assert!(msg.contains("worker panicked"), "{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Malformed frames
+// ---------------------------------------------------------------------------
+
+fn sample_job_frame() -> Vec<u8> {
+    let job = Job::Nearest {
+        range: 5..25,
+        centers: Arc::new(Matrix { rows: 2, cols: 3, data: vec![1.0, -0.0, f32::NAN, 2.5, 3.0, -7.0] }),
+    };
+    wire::job_frame(&job).unwrap()
+}
+
+#[test]
+fn truncated_frames_error_at_every_cut_point() {
+    let frame = sample_job_frame();
+    assert!(wire::read_frame(&mut frame.as_slice()).is_ok());
+    // Cut inside the header and at several points inside the payload.
+    for cut in [0, 1, wire::HEADER_LEN - 1, wire::HEADER_LEN, wire::HEADER_LEN + 5, frame.len() - 1]
+    {
+        let short = &frame[..cut];
+        let err = wire::read_frame(&mut &short[..]);
+        assert!(err.is_err(), "cut at {cut} must fail");
+        let msg = err.unwrap_err().to_string();
+        assert!(msg.contains("truncated"), "cut at {cut}: {msg}");
+    }
+}
+
+#[test]
+fn truncated_payload_lengths_error_without_allocation_blowup() {
+    // A payload whose *internal* length fields promise more data than the
+    // frame carries: decode must fail with a truncation error, not panic or
+    // try to allocate the promised amount.
+    let frame = sample_job_frame();
+    let (kind, payload) = wire::read_frame(&mut frame.as_slice()).unwrap();
+    assert_eq!(kind, wire::KIND_JOB);
+    for cut in 1..payload.len() {
+        let res = wire::decode_job(&payload[..cut]);
+        assert!(res.is_err(), "payload cut at {cut} must fail to decode");
+    }
+}
+
+#[test]
+fn oversized_frame_is_rejected_before_reading_payload() {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&wire::MAGIC.to_le_bytes());
+    bytes.extend_from_slice(&wire::VERSION.to_le_bytes());
+    bytes.extend_from_slice(&wire::KIND_JOB.to_le_bytes());
+    bytes.extend_from_slice(&(wire::MAX_FRAME + 1).to_le_bytes());
+    let err = wire::read_frame(&mut bytes.as_slice()).unwrap_err().to_string();
+    assert!(err.contains("oversized"), "{err}");
+}
+
+#[test]
+fn bad_magic_and_version_are_rejected() {
+    let mut frame = sample_job_frame();
+    frame[0] ^= 0xFF;
+    let err = wire::read_frame(&mut frame.as_slice()).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    let mut frame = sample_job_frame();
+    frame[4] = 0xEE; // version field
+    let err = wire::read_frame(&mut frame.as_slice()).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+}
+
+#[test]
+fn trailing_bytes_and_unknown_tags_are_rejected() {
+    let mut payload = wire::encode_job(&Job::Shutdown);
+    payload.push(0);
+    assert!(wire::decode_job(&payload).is_err(), "trailing bytes must fail");
+
+    let err = wire::decode_job(&[42]).unwrap_err().to_string();
+    assert!(err.contains("unknown job tag"), "{err}");
+}
+
+#[test]
+fn corrupt_job_invariants_are_rejected() {
+    // Inverted range.
+    let mut bad = Job::Nearest { range: 10..3, centers: Arc::new(Matrix::zeros(0, 1)) };
+    let payload = wire::encode_job(&bad);
+    assert!(wire::decode_job(&payload).is_err(), "inverted range must fail");
+
+    // SuffStats assignments shorter than the range they must cover.
+    bad = Job::SuffStats { range: 0..100, assignments: Arc::new(vec![0u32; 10]), k: 2 };
+    let payload = wire::encode_job(&bad);
+    assert!(wire::decode_job(&payload).is_err(), "short assignments must fail");
+
+    // PairCache positions beyond the vector rows.
+    bad = Job::PairCache { vectors: Arc::new(Matrix::zeros(2, 2)), shards: vec![vec![0, 5]] };
+    let payload = wire::encode_job(&bad);
+    assert!(wire::decode_job(&payload).is_err(), "out-of-range position must fail");
+}
