@@ -5,8 +5,10 @@
 //! epoch schedulers and both cluster transports, reporting total
 //! wall-clock, the master-validation time that overlapped worker compute
 //! (`validate_overlap_ms` summed over epochs), BP-means' speculative
-//! respins, and the transport overhead columns: bytes over the wire and
-//! master-side serialization time per epoch (`wire/ep`, `ser/ep`). Before
+//! respins, and the transport overhead columns: bytes over the wire,
+//! master-side serialization time, and dataset bytes shipped per epoch
+//! (`wire/ep`, `ser/ep`, `ds/ep` — ser stays low because one wave's shared
+//! snapshot is encoded once and spliced into every peer frame). Before
 //! reporting, the bench *asserts* every scheduler/transport combination
 //! produced a bit-identical model — the speedups and overheads are only
 //! meaningful because the answer is unchanged.
@@ -69,6 +71,7 @@ fn main() {
         "overlap_ms",
         "wire/ep",
         "ser/ep",
+        "ds/ep",
         "respins",
         "identical",
     ]);
@@ -128,6 +131,7 @@ fn main() {
             let wire =
                 bsp.summary.total_wire_bytes() + pip.summary.total_wire_bytes();
             let ser = bsp.summary.total_ser_time() + pip.summary.total_ser_time();
+            let ds = bsp.summary.total_dataset_bytes() + pip.summary.total_dataset_bytes();
             table.row(vec![
                 (*name).to_string(),
                 transport.name().to_string(),
@@ -137,6 +141,7 @@ fn main() {
                 format!("{:.1}", overlap.as_secs_f64() * 1e3),
                 format!("{} B", wire as usize / epochs),
                 format!("{:.2} ms", ser.as_secs_f64() * 1e3 / epochs as f64),
+                format!("{} B", ds as usize / epochs),
                 pip.summary.total_respins().to_string(),
                 identical.to_string(),
             ]);

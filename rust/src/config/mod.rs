@@ -214,6 +214,18 @@ pub struct RunConfig {
     /// means "half of `procs`, min 1" — see
     /// [`RunConfig::effective_validators`].
     pub validator_shards: usize,
+    /// Remote compute-peer addresses (`host:port` of running `occd worker`
+    /// processes). Non-empty lists require `transport = "tcp"` and define
+    /// the compute-plane size ([`RunConfig::normalize`] sets `procs` from
+    /// the list); empty (the default) spawns loopback peers in-process.
+    pub peers: Vec<String>,
+    /// Remote validator-peer addresses; same contract as `peers`, for the
+    /// validation plane (`validator_shards` is set from the list).
+    pub validator_peers: Vec<String>,
+    /// Bounded reconnect budget when a remote peer drops mid-run: how many
+    /// reconnect attempts (250 ms apart) the coordinator makes before the
+    /// wave surfaces a typed error. `0` fails fast on the first drop.
+    pub reconnect_attempts: usize,
     /// Directory holding AOT artifacts (XLA backend).
     pub artifacts_dir: PathBuf,
     /// RNG seed.
@@ -243,6 +255,9 @@ impl Default for RunConfig {
             scheduler: SchedulerKind::Bsp,
             transport: TransportKind::from_env(),
             validator_shards: 0,
+            peers: Vec::new(),
+            validator_peers: Vec::new(),
+            reconnect_attempts: 3,
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 0,
             source: DataSource::DpClusters,
@@ -290,6 +305,16 @@ impl RunConfig {
             cfg.validator_shards = usize::try_from(v)
                 .map_err(|_| Error::config("run.validator_shards must be ≥ 0"))?;
         }
+        if let Some(v) = doc.get("run.peers") {
+            cfg.peers = parse_peer_list("run.peers", v)?;
+        }
+        if let Some(v) = doc.get("run.validator_peers") {
+            cfg.validator_peers = parse_peer_list("run.validator_peers", v)?;
+        }
+        if let Some(v) = doc.get_int("run.reconnect_attempts") {
+            cfg.reconnect_attempts = usize::try_from(v)
+                .map_err(|_| Error::config("run.reconnect_attempts must be ≥ 0"))?;
+        }
         if let Some(s) = doc.get_str("run.artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(s);
         }
@@ -311,8 +336,24 @@ impl RunConfig {
         if let Some(v) = doc.get_float("data.theta") {
             cfg.theta = v;
         }
+        cfg.normalize();
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Derive plane sizes from peer address lists: a non-empty `peers`
+    /// list *is* the compute plane, so `procs` follows it (and likewise
+    /// `validator_shards` from `validator_peers`). Called by the TOML and
+    /// CLI loaders before [`RunConfig::validate`]; embedders constructing
+    /// a `RunConfig` by hand should call it too, or keep the counts
+    /// consistent themselves — `validate` rejects a mismatch.
+    pub fn normalize(&mut self) {
+        if !self.peers.is_empty() {
+            self.procs = self.peers.len();
+        }
+        if !self.validator_peers.is_empty() {
+            self.validator_shards = self.validator_peers.len();
+        }
     }
 
     /// Validate invariants that would otherwise surface as panics deep in a run.
@@ -335,6 +376,47 @@ impl RunConfig {
                 self.validator_shards
             )));
         }
+        for addr in self.peers.iter().chain(&self.validator_peers) {
+            let valid = match addr.rsplit_once(':') {
+                Some((host, port)) => !host.is_empty() && port.parse::<u16>().is_ok(),
+                None => false,
+            };
+            if !valid {
+                return Err(Error::config(format!(
+                    "peer address `{addr}` is not host:port"
+                )));
+            }
+        }
+        if (!self.peers.is_empty() || !self.validator_peers.is_empty())
+            && self.transport != TransportKind::Tcp
+        {
+            return Err(Error::config(
+                "peers / validator_peers require transport = \"tcp\"",
+            ));
+        }
+        if !self.peers.is_empty() && self.procs != self.peers.len() {
+            return Err(Error::config(format!(
+                "procs = {} but peers lists {} addresses — the peer list defines the \
+                 compute plane (call RunConfig::normalize or drop procs)",
+                self.procs,
+                self.peers.len()
+            )));
+        }
+        if !self.validator_peers.is_empty()
+            && self.validator_shards != self.validator_peers.len()
+        {
+            return Err(Error::config(format!(
+                "validator_shards = {} but validator_peers lists {} addresses",
+                self.validator_shards,
+                self.validator_peers.len()
+            )));
+        }
+        if self.reconnect_attempts > 10_000 {
+            return Err(Error::config(format!(
+                "reconnect_attempts out of range (≤ 10000): {}",
+                self.reconnect_attempts
+            )));
+        }
         Ok(())
     }
 
@@ -355,6 +437,33 @@ impl RunConfig {
         } else {
             self.validator_shards
         }
+    }
+}
+
+/// Split a comma-separated `host:port` list, trimming whitespace and
+/// dropping empty entries — the one splitting/cleaning rule shared by the
+/// CLI `--peers` flags and both TOML forms.
+pub fn split_peer_list(s: &str) -> Vec<String> {
+    s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect()
+}
+
+/// Extract a peer address list from a TOML value: an array of strings
+/// (`peers = ["h:1", "h:2"]`) or one comma-separated string (`peers =
+/// "h:1,h:2"`, the CLI-parity form). Entries are trimmed in both forms.
+fn parse_peer_list(key: &str, v: &toml::Value) -> Result<Vec<String>> {
+    match v {
+        toml::Value::Array(items) => items
+            .iter()
+            .map(|item| {
+                item.as_str()
+                    .map(|s| s.trim().to_string())
+                    .ok_or_else(|| Error::config(format!("{key} entries must be strings")))
+            })
+            .collect(),
+        toml::Value::Str(s) => Ok(split_peer_list(s)),
+        _ => Err(Error::config(format!(
+            "{key} must be an array of \"host:port\" strings"
+        ))),
     }
 }
 
@@ -453,5 +562,69 @@ mod tests {
             &toml::parse("[run]\nvalidator_shards = 2000\n").unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn peer_lists_extract_and_derive_plane_sizes() {
+        let doc = toml::parse(
+            "[run]\ntransport = \"tcp\"\npeers = [\"10.0.0.1:7100\", \"10.0.0.2:7100\"]\n\
+             validator_peers = [\"10.0.0.3:7100\"]\nreconnect_attempts = 7\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.peers.len(), 2);
+        assert_eq!(cfg.procs, 2, "the peer list defines the compute plane");
+        assert_eq!(cfg.validator_shards, 1);
+        assert_eq!(cfg.effective_validators(), 1);
+        assert_eq!(cfg.reconnect_attempts, 7);
+        // Comma-separated string form (CLI parity).
+        let doc = toml::parse(
+            "[run]\ntransport = \"tcp\"\npeers = \"a:1, b:2, c:3\"\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.peers, vec!["a:1", "b:2", "c:3"]);
+        assert_eq!(cfg.procs, 3);
+        // Array entries are trimmed like the other forms.
+        let doc = toml::parse(
+            "[run]\ntransport = \"tcp\"\npeers = [\" a:1\", \"b:2 \"]\n",
+        )
+        .unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().peers, vec!["a:1", "b:2"]);
+        assert_eq!(split_peer_list(" a:1, ,b:2 ,"), vec!["a:1", "b:2"]);
+    }
+
+    #[test]
+    fn peer_lists_reject_bad_shapes() {
+        // Peers without the TCP transport.
+        assert!(RunConfig::from_doc(
+            &toml::parse("[run]\ntransport = \"inproc\"\npeers = [\"h:1\"]\n").unwrap()
+        )
+        .is_err());
+        // Not host:port.
+        assert!(RunConfig::from_doc(
+            &toml::parse("[run]\ntransport = \"tcp\"\npeers = [\"nohost\"]\n").unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_doc(
+            &toml::parse("[run]\ntransport = \"tcp\"\npeers = [\"h:notaport\"]\n").unwrap()
+        )
+        .is_err());
+        // Non-string array entries.
+        assert!(RunConfig::from_doc(
+            &toml::parse("[run]\ntransport = \"tcp\"\npeers = [1, 2]\n").unwrap()
+        )
+        .is_err());
+        // Hand-built config with an inconsistent procs is rejected.
+        let mut cfg = RunConfig {
+            transport: TransportKind::Tcp,
+            peers: vec!["h:1".into(), "h:2".into()],
+            ..RunConfig::default()
+        };
+        cfg.procs = 4;
+        assert!(cfg.validate().is_err());
+        cfg.normalize();
+        assert_eq!(cfg.procs, 2);
+        cfg.validate().unwrap();
     }
 }

@@ -19,7 +19,7 @@
 
 use super::engine::{split_range_chunked, Job, JobOutput};
 use super::scheduler::{self, EpochAlgo, EpochCounts, Scheduler};
-use super::transport::Cluster;
+use super::transport::{Cluster, Topology};
 use super::validator::{
     bp_validate, dp_validate_clustered, ofl_validate_clustered, BpProposal, DpProposal,
     OflProposal,
@@ -305,12 +305,11 @@ pub fn run_dpmeans(
     let n = data.len();
     let d = data.dim();
     let lambda2 = (cfg.lambda * cfg.lambda) as f32;
-    let cluster = Cluster::spawn(
+    let cluster = Cluster::spawn_topology(
         cfg.transport,
         data.clone(),
         backend.clone(),
-        cfg.procs,
-        cfg.effective_validators(),
+        &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
     let sched = scheduler::make(cfg.scheduler);
     let total = Stopwatch::start();
@@ -402,6 +401,8 @@ pub fn run_dpmeans(
                 total_time: recompute_sw.elapsed(),
                 wire_bytes: net.wire_bytes,
                 ser_time: net.ser_time,
+                dataset_bytes: net.dataset_bytes,
+                handshake_time: net.handshake_time,
                 ..Default::default()
             };
             sink.emit(&rec);
@@ -426,6 +427,7 @@ pub fn run_dpmeans(
         final_centers: centers.rows,
         objective: Some(objective::dp_objective(&data, &centers, cfg.lambda)),
         total_time: total.elapsed(),
+        transport: cluster.stats(),
     };
     Ok(RunOutput { summary, model: Model::Dp(model) })
 }
@@ -545,12 +547,11 @@ pub fn run_ofl(
     let n = data.len();
     let d = data.dim();
     let lambda2 = cfg.lambda * cfg.lambda;
-    let cluster = Cluster::spawn(
+    let cluster = Cluster::spawn_topology(
         cfg.transport,
         data.clone(),
         backend.clone(),
-        cfg.procs,
-        cfg.effective_validators(),
+        &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
     let sched = scheduler::make(cfg.scheduler);
     let total = Stopwatch::start();
@@ -582,6 +583,7 @@ pub fn run_ofl(
         final_centers: centers.rows,
         objective: Some(objective::dp_objective(&data, &centers, cfg.lambda)),
         total_time: total.elapsed(),
+        transport: cluster.stats(),
     };
     Ok(RunOutput { summary, model: Model::Ofl(model) })
 }
@@ -712,8 +714,14 @@ pub fn run_bpmeans(
     // BP validation has no sharded variant (accepted features are derived
     // residuals — see `validator`), so don't spawn a validation plane that
     // would never receive a job: one placeholder peer keeps the Cluster
-    // invariants without the thread/socket cost.
-    let cluster = Cluster::spawn(cfg.transport, data.clone(), backend.clone(), cfg.procs, 1)?;
+    // invariants without the thread/socket cost (extra validator_peers
+    // addresses are dropped by the topology).
+    let cluster = Cluster::spawn_topology(
+        cfg.transport,
+        data.clone(),
+        backend.clone(),
+        &Topology::of_config(cfg, 1),
+    )?;
     let sched = scheduler::make(cfg.scheduler);
     let total = Stopwatch::start();
 
@@ -814,6 +822,8 @@ pub fn run_bpmeans(
                 total_time: recompute_sw.elapsed(),
                 wire_bytes: net.wire_bytes,
                 ser_time: net.ser_time,
+                dataset_bytes: net.dataset_bytes,
+                handshake_time: net.handshake_time,
                 ..Default::default()
             };
             sink.emit(&rec);
@@ -842,6 +852,7 @@ pub fn run_bpmeans(
         final_centers: features.rows,
         objective: Some(objective::bp_objective(&data, &features, &assignments, cfg.lambda)),
         total_time: total.elapsed(),
+        transport: cluster.stats(),
     };
     Ok(RunOutput { summary, model: Model::Bp(model) })
 }

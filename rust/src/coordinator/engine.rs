@@ -85,6 +85,23 @@ pub enum Job {
     Shutdown,
 }
 
+impl Job {
+    /// The global dataset point range this job reads, if any. This is what
+    /// the TCP transport ships to a remote peer before the job: compute
+    /// jobs read their scattered block, while `PairCache` carries its
+    /// proposal vectors inline and `Shutdown` is pure control — validator
+    /// peers therefore never need a byte of the dataset.
+    pub fn data_range(&self) -> Option<Range<usize>> {
+        match self {
+            Job::Nearest { range, .. }
+            | Job::SuffStats { range, .. }
+            | Job::BpDescend { range, .. }
+            | Job::BpStats { range, .. } => Some(range.clone()),
+            Job::PairCache { .. } | Job::Shutdown => None,
+        }
+    }
+}
+
 /// Fixed reduction chunk: float sums are accumulated per chunk of this many
 /// points and combined at the master in global chunk order, making the
 /// result *bit-identical for every worker count* (f32 addition is not
@@ -282,7 +299,7 @@ pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 /// executor behind every transport (thread workers and TCP peers).
 /// `Job::Shutdown` is a control message, not computable work.
 pub(crate) fn run_job(
-    data: &Arc<Dataset>,
+    data: &Dataset,
     backend: &Arc<dyn ComputeBackend>,
     job: Job,
 ) -> Result<JobOutput> {

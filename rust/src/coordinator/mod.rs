@@ -25,10 +25,17 @@
 //! gather one reply per peer, on either of two peer groups (compute
 //! workers and validator shards). `InProc` keeps today's zero-copy fast
 //! path (`mpsc` channels, `Arc` snapshots); [`tcp`] puts every peer behind
-//! a localhost socket and moves jobs, snapshots and replies through
-//! [`wire`] — an explicit, versioned, length-prefixed format with bit-exact
-//! f32 encoding. [`engine`] holds the job types, the shared job executor
-//! and the in-process `WorkerPool`.
+//! a socket and moves jobs, snapshots, replies *and the dataset itself*
+//! through [`wire`] — an explicit, versioned, length-prefixed format with
+//! bit-exact f32 encoding. A `Topology` decides where the TCP peers live:
+//! loopback threads of this process (the default, and what CI sweeps), or
+//! standalone `occd worker` processes addressed by `peers =
+//! ["host:port", ...]` — the multi-host deployment (see the README
+//! runbook). Sessions open with a versioned `Hello` handshake; workers are
+//! shipped exactly the point ranges their jobs read; a dropped remote peer
+//! is retried under a bounded reconnect policy and poisons only its wave.
+//! [`engine`] holds the job types, the shared job executor and the
+//! in-process `WorkerPool`.
 //!
 //! ## 3. The validation plane — *what commits*
 //!
@@ -66,4 +73,5 @@ pub mod validator;
 pub mod wire;
 
 pub use driver::{run, run_with, Model, RunOutput};
-pub use transport::{Cluster, Transport};
+pub use tcp::serve_peer;
+pub use transport::{Cluster, Topology, Transport};

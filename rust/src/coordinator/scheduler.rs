@@ -204,6 +204,8 @@ impl Scheduler for Bsp {
                 respins: 0,
                 wire_bytes: net.wire_bytes,
                 ser_time: net.ser_time,
+                dataset_bytes: net.dataset_bytes,
+                handshake_time: net.handshake_time,
             };
             sink.emit(&rec);
             log.push(rec);
@@ -299,6 +301,8 @@ impl Scheduler for Pipelined {
                 respins,
                 wire_bytes: net.wire_bytes,
                 ser_time: net.ser_time,
+                dataset_bytes: net.dataset_bytes,
+                handshake_time: net.handshake_time,
             };
             sink.emit(&rec);
             log.push(rec);

@@ -1,84 +1,458 @@
-//! Loopback TCP transport: peers behind real sockets.
+//! TCP transport: peers behind real sockets — threads, or whole processes
+//! on other machines.
 //!
-//! Each peer (compute worker or validator shard) is a thread sitting behind
-//! its own `TcpListener` on `127.0.0.1:0`; the master connects one
-//! `TcpStream` per peer and speaks the [`super::wire`] protocol in
-//! lockstep: one job frame out, one reply frame back, per wave. Nothing in
-//! the coordinator above the [`Transport`] trait knows the difference —
+//! Every peer (compute worker or validator shard) sits behind a socket and
+//! speaks the [`super::wire`] protocol. A session opens with a versioned
+//! [`wire::Hello`] handshake (role, shard assignment, dataset geometry),
+//! after which the master interleaves dataset-block frames and job frames:
+//! one job out, one reply back, per wave. Nothing in the coordinator above
+//! the [`Transport`] trait knows the difference —
 //! `rust/tests/transport_equivalence.rs` proves models stay bit-identical.
 //!
-//! Loopback peers still share the *dataset* by `Arc` (it is process-local
-//! state, not a message); jobs, snapshots and replies all cross the socket
-//! as bytes. That makes this transport an honest single-host rehearsal for
-//! multi-host runs: the remaining work for true remote peers is process
-//! bootstrap and dataset distribution (see ROADMAP), not message-plane
-//! changes.
+//! Peers come in two flavours, one protocol:
 //!
-//! ## Accounting
+//! * **Loopback thread peers** — `Tcp::spawn` with no addresses binds one
+//!   ephemeral listener per peer and serves [`serve_peer`] from a thread of
+//!   this process. This is the default and what CI's `OCCML_TRANSPORT=tcp`
+//!   job exercises: the full handshake + dataset-shipping path, in one
+//!   process.
+//! * **Addressed remote peers** — a `peers = ["host:port", ...]` topology
+//!   connects to standalone `occd worker` processes (the same
+//!   [`serve_peer`] loop behind a real `TcpListener`; see `occd worker
+//!   --help` and the README runbook). Nothing is shared by `Arc`: the
+//!   dataset crosses the wire too.
 //!
-//! The master counts every frame byte written or read (`wire_bytes`) and
-//! the wall-clock spent encoding jobs and decoding replies (`ser_time`);
-//! [`Transport::stats`] exposes the running totals and the schedulers
-//! record per-epoch deltas into [`crate::metrics::EpochRecord`].
+//! ## Dataset shipping
+//!
+//! Workers do not share the dataset by `Arc` (that was the PR 2 gap): the
+//! master ships [`wire::KIND_DATA`] block frames on demand, tracked by a
+//! per-peer [`Coverage`] set. Before a job is written, exactly the missing
+//! sub-ranges of [`Job::data_range`] are shipped — so each worker receives
+//! precisely the point ranges it computes (its epoch blocks plus its
+//! reduction stripe, ~2·n/P per pass), and validator peers — whose
+//! `PairCache` jobs carry their conflict-key bucket ranges inline — receive
+//! none. Shipped bytes are accounted in [`TransportStats::dataset_bytes`],
+//! handshake wall-clock in [`TransportStats::handshake_time`].
+//!
+//! ## Shared-payload splicing
+//!
+//! One wave's P jobs embed the same `Arc`'d snapshot/assignments;
+//! [`wire::job_frames`] encodes each shared payload once and splices it
+//! into every frame (byte-identical to per-job encoding), so master-side
+//! `ser_time` scales with the snapshot size, not P × snapshot size.
 //!
 //! ## Failure behaviour
 //!
-//! Mirrors [`super::engine::WorkerPool`]: a peer that panics inside a job
-//! replies with an error frame (the panic is caught peer-side), a wave with
-//! failures is drained completely before `gather` reports the first error,
-//! and `Drop` drains any outstanding wave, sends shutdown frames, closes
-//! the sockets and joins every peer thread — infallibly.
+//! A peer-side *job* failure (panic, bad geometry, undecodable payload)
+//! surfaces as an error reply; the wave is drained completely before
+//! `gather` reports the first error and the transport stays usable — same
+//! contract as [`super::engine::WorkerPool`].
+//!
+//! A *dead peer* (process killed, connection dropped) poisons only its
+//! wave, not the run: the master keeps each scattered frame until its reply
+//! arrives, and on a broken stream it makes a bounded number of reconnect
+//! attempts (`reconnect_attempts`, [`RECONNECT_DELAY`] apart) to the peer's
+//! address. A replacement worker on the same address is re-handshaken,
+//! re-shipped the dataset ranges the retained job needs, and handed the
+//! frame again — jobs are deterministic, so the wave completes bit-exactly
+//! as if nothing happened. If the bound is exhausted, `gather` returns a
+//! typed error with the rest of the wave drained (never a deadlock — the
+//! regression class of the PR 2 gather fix), and the next scatter will try
+//! the address again. Loopback thread peers cannot be re-sessioned; losing
+//! one poisons the plane, as before. `Drop` drains any outstanding wave,
+//! sends shutdown frames, closes every socket and joins the peer threads —
+//! infallibly.
 
-use super::engine::{panic_message, run_job, Job, JobOutput};
-use super::transport::{Plane, Transport, TransportStats};
-use super::wire;
+use super::engine::{panic_message, run_job, Job, JobOutput, JobReply};
+use super::transport::{Plane, Topology, Transport, TransportStats};
+use super::wire::{self, Hello, HelloAck, PeerRole};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
+use crate::linalg::Matrix;
 use crate::runtime::ComputeBackend;
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One plane's master-side endpoints.
+/// Delay between reconnect attempts to a dropped remote peer.
+pub const RECONNECT_DELAY: Duration = Duration::from_millis(250);
+
+/// Points per dataset-block frame: bounds any single frame to
+/// `16384 · d · 4` payload bytes (256 MiB at the `dim ≤ 4096` config cap),
+/// comfortably under [`wire::MAX_FRAME`].
+pub const DATA_BLOCK_POINTS: usize = 16_384;
+
+// ---------------------------------------------------------------------------
+// Coverage: which point ranges a peer holds
+// ---------------------------------------------------------------------------
+
+/// A set of disjoint, sorted point ranges — which parts of the dataset a
+/// peer has been shipped (master side) or has installed (peer side).
+#[derive(Debug, Clone, Default)]
+pub struct Coverage {
+    spans: Vec<Range<usize>>,
+}
+
+impl Coverage {
+    /// Add a range, merging with overlapping or adjacent spans.
+    pub fn add(&mut self, r: Range<usize>) {
+        if r.start >= r.end {
+            return;
+        }
+        self.spans.push(r);
+        self.spans.sort_by_key(|s| s.start);
+        let mut merged: Vec<Range<usize>> = Vec::with_capacity(self.spans.len());
+        for s in self.spans.drain(..) {
+            match merged.last_mut() {
+                Some(last) if s.start <= last.end => last.end = last.end.max(s.end),
+                _ => merged.push(s),
+            }
+        }
+        self.spans = merged;
+    }
+
+    /// True if every point of `r` is covered.
+    pub fn covers(&self, r: &Range<usize>) -> bool {
+        r.start >= r.end || self.spans.iter().any(|s| s.start <= r.start && r.end <= s.end)
+    }
+
+    /// The sub-ranges of `r` not yet covered, in order.
+    pub fn missing(&self, r: &Range<usize>) -> Vec<Range<usize>> {
+        let mut out = Vec::new();
+        let mut at = r.start;
+        for s in &self.spans {
+            if at >= r.end {
+                break;
+            }
+            if s.end <= at {
+                continue;
+            }
+            if s.start >= r.end {
+                break;
+            }
+            if s.start > at {
+                out.push(at..s.start.min(r.end));
+            }
+            at = at.max(s.end);
+        }
+        if at < r.end {
+            out.push(at..r.end);
+        }
+        out
+    }
+
+    /// Forget everything (a fresh peer session holds nothing).
+    pub fn clear(&mut self) {
+        self.spans.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Peer side: the serve loop behind `occd worker` and loopback threads
+// ---------------------------------------------------------------------------
+
+/// Serve one master session on an accepted connection: a [`wire::Hello`]
+/// handshake, then dataset blocks and jobs in the master's order until a
+/// shutdown frame or EOF. This is the single peer loop behind standalone
+/// `occd worker` processes *and* the loopback thread peers [`Tcp::spawn`]
+/// creates — one code path, so every in-process TCP test exercises the real
+/// multi-host protocol.
+///
+/// Failure containment: a job that decodes but cannot run (panic, bad
+/// geometry), a job whose payload fails decode validation, and a job whose
+/// data range was never shipped each produce an error *reply* — the frame
+/// boundary is intact, the master counts one reply per peer per wave, and
+/// the session stays alive. Only a broken stream (EOF, framing lost)
+/// terminates the session; that returns `Ok` because it is how masters
+/// normally leave.
+pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut stream = stream;
+    // Handshake: the first frame must be a Hello carrying this peer's shard
+    // assignment and the dataset geometry. It is read version-tolerantly so
+    // a coordinator built at a different wire version gets a reportable
+    // rejection ack instead of a silent hangup.
+    let (version, kind, payload) = wire::read_frame_any_version(&mut stream)?;
+    if version != wire::VERSION {
+        let ack = HelloAck {
+            proto: wire::VERSION,
+            ok: false,
+            message: format!("peer speaks wire version {}, got {version}", wire::VERSION),
+        };
+        if let Ok(f) = wire::hello_ack_frame(&ack) {
+            let _ = stream.write_all(&f);
+        }
+        return Err(Error::Coordinator(format!(
+            "coordinator speaks wire version {version}, this peer speaks {}",
+            wire::VERSION
+        )));
+    }
+    if kind != wire::KIND_HELLO {
+        return Err(Error::Coordinator(format!(
+            "peer expected a hello frame, got kind {kind}"
+        )));
+    }
+    let hello = match wire::decode_hello(&payload) {
+        Ok(h) => h,
+        Err(e) => {
+            // Tell the master why (version mismatch, corrupt hello) before
+            // giving up on the session.
+            let ack =
+                HelloAck { proto: wire::VERSION, ok: false, message: e.to_string() };
+            if let Ok(f) = wire::hello_ack_frame(&ack) {
+                let _ = stream.write_all(&f);
+            }
+            return Err(e);
+        }
+    };
+    let ack = HelloAck { proto: wire::VERSION, ok: true, message: String::new() };
+    stream.write_all(&wire::hello_ack_frame(&ack)?)?;
+
+    // Local dataset store, assembled from shipped blocks. Allocated lazily
+    // on the first block: validator peers never receive one and so never
+    // pay for an n × d matrix.
+    let mut store: Option<Dataset> = None;
+    let mut covered = Coverage::default();
+    let mut data_err: Option<String> = None;
+    let empty = Dataset { points: Matrix::zeros(0, 0), labels: None };
+
+    loop {
+        let Ok((kind, payload)) = wire::read_frame(&mut stream) else {
+            return Ok(()); // master gone (EOF) or framing lost
+        };
+        match kind {
+            wire::KIND_DATA => {
+                if let Err(e) = install_block(&hello, &payload, &mut store, &mut covered) {
+                    // The frame boundary is intact; remember the failure and
+                    // surface it on the next job that needs the data.
+                    data_err = Some(e.to_string());
+                }
+            }
+            wire::KIND_JOB => {
+                let job = wire::decode_job(&payload);
+                let start = Instant::now();
+                let output = match job {
+                    Ok(Job::Shutdown) => return Ok(()),
+                    Ok(job) => run_covered(&job.data_range(), &data_err, &store, &covered)
+                        .and_then(|data| {
+                            let data = data.unwrap_or(&empty);
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                run_job(data, &backend, job)
+                            }))
+                            .unwrap_or_else(|p| Err(Error::Coordinator(panic_message(&*p))))
+                        }),
+                    Err(e) => Err(e), // decode-invalid job: reply, stay alive
+                };
+                let busy = start.elapsed();
+                if wire::write_reply(&mut stream, hello.peer_id, busy, &output).is_err() {
+                    return Ok(()); // master gone
+                }
+            }
+            other => {
+                // An unexpected frame kind mid-session means the streams
+                // are not speaking the same dialogue; bail out rather than
+                // risk a desynchronized reply pairing.
+                return Err(Error::Coordinator(format!(
+                    "peer got unexpected frame kind {other} mid-session"
+                )));
+            }
+        }
+    }
+}
+
+/// Check a job's data needs against the peer's store; returns the dataset
+/// to run against (`None` for jobs that read no points).
+fn run_covered<'a>(
+    need: &Option<Range<usize>>,
+    data_err: &Option<String>,
+    store: &'a Option<Dataset>,
+    covered: &Coverage,
+) -> Result<Option<&'a Dataset>> {
+    let Some(range) = need else { return Ok(None) };
+    if range.start >= range.end {
+        return Ok(None); // an empty block reads no points (tail epochs)
+    }
+    if let Some(e) = data_err {
+        return Err(Error::Coordinator(format!("dataset block error: {e}")));
+    }
+    match store {
+        Some(ds) if covered.covers(range) => Ok(Some(ds)),
+        _ => Err(Error::Coordinator(format!(
+            "job range {}..{} not covered by shipped dataset blocks",
+            range.start, range.end
+        ))),
+    }
+}
+
+/// Install one dataset-block frame into the peer's store.
+fn install_block(
+    hello: &Hello,
+    payload: &[u8],
+    store: &mut Option<Dataset>,
+    covered: &mut Coverage,
+) -> Result<()> {
+    let (offset, block) = wire::decode_data_block(payload)?;
+    let n = hello.n as usize;
+    let d = hello.dim as usize;
+    let end = offset
+        .checked_add(block.rows)
+        .ok_or_else(|| Error::Coordinator("dataset block offset overflow".into()))?;
+    if block.cols != d || end > n {
+        return Err(Error::Coordinator(format!(
+            "dataset block {offset}..{end} ({} cols) outside the {n} x {d} geometry",
+            block.cols
+        )));
+    }
+    // Same plausibility cap as `.occb` loading: refuse to allocate a store
+    // for a nonsensical geometry.
+    if n.checked_mul(d).is_none() || n * d > (1 << 33) {
+        return Err(Error::Coordinator(format!("implausible dataset geometry {n} x {d}")));
+    }
+    // Dense full-size store, filled sparsely: global point indices stay
+    // valid for the shared job executor at the cost of allocating n × d
+    // zeros even though only ~2·n/P rows ever arrive. Fine for RAM-sized
+    // data; an offset-keyed block store is the ROADMAP item for datasets
+    // that only fit sharded.
+    let ds = store.get_or_insert_with(|| Dataset {
+        points: Matrix::zeros(n, d),
+        labels: None,
+    });
+    ds.points.data[offset * d..end * d].copy_from_slice(&block.data);
+    covered.add(offset..end);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Master side
+// ---------------------------------------------------------------------------
+
+/// The master's handle on one peer.
+struct Peer {
+    /// Live session stream, if any.
+    stream: Option<TcpStream>,
+    /// Remote address for reconnects; `None` marks a loopback thread peer,
+    /// which cannot be re-sessioned.
+    addr: Option<String>,
+    /// The handshake this peer's sessions are opened with.
+    hello: Hello,
+    /// Dataset ranges shipped in the current session.
+    sent: Coverage,
+}
+
+impl Peer {
+    fn describe(&self) -> String {
+        match &self.addr {
+            Some(a) => format!("{} peer {} ({a})", self.hello.role.name(), self.hello.peer_id),
+            None => format!("loopback {} peer {}", self.hello.role.name(), self.hello.peer_id),
+        }
+    }
+}
+
+/// One retained scattered job: the encoded frame (kept for resend after a
+/// reconnect) and the dataset range it reads.
+struct WaveJob {
+    frame: Vec<u8>,
+    need: Option<Range<usize>>,
+}
+
+/// One plane's master-side state.
 struct PlaneEndpoints {
-    streams: Vec<TcpStream>,
+    peers: RefCell<Vec<Peer>>,
+    /// The outstanding wave's retained jobs (empty between waves).
+    wave: RefCell<Vec<WaveJob>>,
     /// Waves scattered but not yet gathered (0 or 1).
     in_flight: Cell<usize>,
-    /// Set when a scatter failed partway: some peers own a job whose reply
-    /// can no longer be paired with a wave (and their streams may hold
-    /// unread frames), so further scatters on this plane error out instead
-    /// of silently misattributing stale replies.
+    /// Set when a loopback thread peer's stream broke: its replies can no
+    /// longer be trusted to pair with any wave and it cannot be
+    /// re-sessioned, so further scatters on the plane error out.
     poisoned: Cell<bool>,
 }
 
-/// The loopback TCP transport.
+impl PlaneEndpoints {
+    fn new() -> PlaneEndpoints {
+        PlaneEndpoints {
+            peers: RefCell::new(Vec::new()),
+            wave: RefCell::new(Vec::new()),
+            in_flight: Cell::new(0),
+            poisoned: Cell::new(false),
+        }
+    }
+}
+
+/// Handshake + wire accounting accumulated before the `Tcp` value exists.
+#[derive(Default)]
+struct SpawnAccounting {
+    wire_bytes: u64,
+    handshake_time: Duration,
+}
+
+/// The TCP transport.
 pub struct Tcp {
     planes: [PlaneEndpoints; 2],
     handles: Vec<JoinHandle<()>>,
+    data: Arc<Dataset>,
+    reconnect_attempts: usize,
     wire_bytes: Cell<u64>,
     ser_time: Cell<Duration>,
+    dataset_bytes: Cell<u64>,
+    handshake_time: Cell<Duration>,
 }
 
 impl Tcp {
-    /// Spawn `procs` compute peers and `validators` validator peers, each
-    /// behind its own loopback socket, and connect to all of them.
+    /// Spawn `procs` compute peers and `validators` validator peers as
+    /// loopback threads, each behind its own ephemeral socket.
     pub fn spawn(
         data: Arc<Dataset>,
         backend: Arc<dyn ComputeBackend>,
         procs: usize,
         validators: usize,
     ) -> Result<Tcp> {
-        let mut handles = Vec::with_capacity(procs + validators);
-        let compute = spawn_plane(&data, &backend, procs, &mut handles)?;
-        let validate = spawn_plane(&data, &backend, validators, &mut handles)?;
+        Tcp::spawn_topology(data, backend, &Topology::local(procs, validators))
+    }
+
+    /// Spawn the transport a topology describes: per plane, either connect
+    /// to the listed `host:port` peers (standalone `occd worker`
+    /// processes) or spawn that many loopback thread peers.
+    pub fn spawn_topology(
+        data: Arc<Dataset>,
+        backend: Arc<dyn ComputeBackend>,
+        topo: &Topology,
+    ) -> Result<Tcp> {
+        let mut handles = Vec::new();
+        let mut acct = SpawnAccounting::default();
+        let compute = init_plane(
+            &data,
+            &backend,
+            PeerRole::Compute,
+            topo.procs,
+            &topo.compute_peers,
+            topo.reconnect_attempts,
+            &mut handles,
+            &mut acct,
+        )?;
+        let validate = init_plane(
+            &data,
+            &backend,
+            PeerRole::Validate,
+            topo.validators,
+            &topo.validator_peers,
+            topo.reconnect_attempts,
+            &mut handles,
+            &mut acct,
+        )?;
         Ok(Tcp {
             planes: [compute, validate],
             handles,
-            wire_bytes: Cell::new(0),
+            data,
+            reconnect_attempts: topo.reconnect_attempts,
+            wire_bytes: Cell::new(acct.wire_bytes),
             ser_time: Cell::new(Duration::ZERO),
+            dataset_bytes: Cell::new(0),
+            handshake_time: Cell::new(acct.handshake_time),
         })
     }
 
@@ -89,85 +463,311 @@ impl Tcp {
     fn add_ser(&self, d: Duration) {
         self.ser_time.set(self.ser_time.get() + d);
     }
-}
 
-fn spawn_plane(
-    data: &Arc<Dataset>,
-    backend: &Arc<dyn ComputeBackend>,
-    n: usize,
-    handles: &mut Vec<JoinHandle<()>>,
-) -> Result<PlaneEndpoints> {
-    let mut streams = Vec::with_capacity(n);
-    for id in 0..n {
-        let listener = TcpListener::bind(("127.0.0.1", 0))
-            .map_err(|e| Error::Coordinator(format!("tcp bind: {e}")))?;
-        let addr = listener
-            .local_addr()
-            .map_err(|e| Error::Coordinator(format!("tcp local_addr: {e}")))?;
-        let data = data.clone();
-        let backend = backend.clone();
-        handles.push(std::thread::spawn(move || peer_loop(id, data, backend, listener)));
-        let stream = TcpStream::connect(addr)
-            .map_err(|e| Error::Coordinator(format!("tcp connect: {e}")))?;
+    /// One fresh-session attempt to a remote peer: connect, handshake
+    /// (which resets the shipped-coverage tracking — a replacement worker
+    /// starts empty), account the cost. The peer's stream is `None` on
+    /// failure.
+    fn open_session(&self, peer: &mut Peer) -> Result<()> {
+        peer.stream = None;
+        let addr = peer.addr.clone().expect("open_session is remote-only");
+        let stream = TcpStream::connect(&addr)
+            .map_err(|e| Error::Coordinator(format!("tcp connect {addr}: {e}")))?;
         stream.set_nodelay(true).ok();
-        streams.push(stream);
-    }
-    Ok(PlaneEndpoints { streams, in_flight: Cell::new(0), poisoned: Cell::new(false) })
-}
-
-/// Best-effort, bounded drain of one queued reply per stream — shutdown
-/// hygiene so no peer blocks writing into a socket nobody reads. A wedged
-/// peer costs at most the timeout; closing the sockets afterwards unblocks
-/// it regardless.
-fn drain_replies(streams: &[TcpStream]) {
-    for stream in streams {
-        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
-        let _ = wire::read_frame(&mut &*stream);
-        let _ = stream.set_read_timeout(None);
-    }
-}
-
-/// One peer: accept the master's connection, then serve jobs in lockstep
-/// until a shutdown frame or a closed/corrupt socket.
-///
-/// Failure containment mirrors the in-proc worker loop: a job that decodes
-/// but cannot run (panic, bad geometry) — *and* a frame whose payload fails
-/// decode validation — each produce an error *reply*, because the master
-/// counts one reply per peer per wave and the frame boundary is intact
-/// either way. Only a broken stream (EOF, short header/payload — we can no
-/// longer find the next frame) terminates the peer.
-fn peer_loop(
-    id: usize,
-    data: Arc<Dataset>,
-    backend: Arc<dyn ComputeBackend>,
-    listener: TcpListener,
-) {
-    let Ok((stream, _)) = listener.accept() else { return };
-    stream.set_nodelay(true).ok();
-    let mut stream = stream;
-    loop {
-        let Ok((kind, payload)) = wire::read_frame(&mut stream) else {
-            return; // stream closed or framing lost
-        };
-        let job = if kind == wire::KIND_JOB {
-            wire::decode_job(&payload)
-        } else {
-            Err(Error::Coordinator(format!("peer expected a job frame, got kind {kind}")))
-        };
-        let start = Instant::now();
-        let output = match job {
-            Ok(Job::Shutdown) => return,
-            Ok(job) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_job(&data, &backend, job)
-            }))
-            .unwrap_or_else(|p| Err(Error::Coordinator(panic_message(&*p)))),
-            Err(e) => Err(e), // decode-invalid job: reply, stay alive
-        };
-        let busy = start.elapsed();
-        if wire::write_reply(&mut stream, id as u32, busy, &output).is_err() {
-            return; // master gone
+        peer.stream = Some(stream);
+        match do_handshake(peer) {
+            Ok((bytes, took)) => {
+                self.add_bytes(bytes);
+                self.handshake_time.set(self.handshake_time.get() + took);
+                Ok(())
+            }
+            Err(e) => {
+                peer.stream = None;
+                Err(e)
+            }
         }
     }
+
+    /// Re-open a dead remote peer's session under the bounded reconnect
+    /// policy.
+    fn reconnect(&self, peer: &mut Peer) -> Result<()> {
+        if peer.addr.is_none() {
+            return Err(Error::Coordinator(format!(
+                "{} died and loopback thread peers cannot be re-sessioned",
+                peer.describe()
+            )));
+        }
+        peer.stream = None;
+        let mut last: Option<Error> = None;
+        for attempt in 0..self.reconnect_attempts {
+            if attempt > 0 {
+                std::thread::sleep(RECONNECT_DELAY);
+            }
+            match self.open_session(peer) {
+                Ok(()) => return Ok(()),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(Error::Coordinator(format!(
+            "{} unreachable after {} reconnect attempts: {}",
+            peer.describe(),
+            self.reconnect_attempts,
+            last.map(|e| e.to_string()).unwrap_or_else(|| "reconnect disabled".into())
+        )))
+    }
+
+    /// Ship the sub-ranges of `need` this peer's session has not seen, in
+    /// bounded block frames.
+    fn ship_missing(&self, peer: &mut Peer, need: &Range<usize>) -> Result<()> {
+        for span in peer.sent.missing(need) {
+            let d = self.data.dim();
+            let mut lo = span.start;
+            while lo < span.end {
+                let hi = (lo + DATA_BLOCK_POINTS).min(span.end);
+                let sw = Instant::now();
+                let block = Matrix {
+                    rows: hi - lo,
+                    cols: d,
+                    data: self.data.points.data[lo * d..hi * d].to_vec(),
+                };
+                let frame = wire::data_frame(lo, &block)?;
+                self.add_ser(sw.elapsed());
+                self.add_bytes(frame.len());
+                self.dataset_bytes
+                    .set(self.dataset_bytes.get() + (frame.len() - wire::HEADER_LEN) as u64);
+                let stream = peer
+                    .stream
+                    .as_mut()
+                    .ok_or_else(|| Error::Coordinator("peer has no live session".into()))?;
+                stream
+                    .write_all(&frame)
+                    .map_err(|e| Error::Coordinator(format!("tcp data ship: {e}")))?;
+                lo = hi;
+            }
+            peer.sent.add(span);
+        }
+        Ok(())
+    }
+
+    /// Ship a wave job's data needs and write its frame to the peer.
+    fn write_wave_job(&self, peer: &mut Peer, wj: &WaveJob) -> Result<()> {
+        if let Some(need) = &wj.need {
+            self.ship_missing(peer, need)?;
+        }
+        self.add_bytes(wj.frame.len());
+        let stream = peer
+            .stream
+            .as_mut()
+            .ok_or_else(|| Error::Coordinator("peer has no live session".into()))?;
+        stream
+            .write_all(&wj.frame)
+            .map_err(|e| Error::Coordinator(format!("tcp scatter: {e}")))
+    }
+
+    /// Deliver one wave job, reconnecting a dead remote peer (bounded) and
+    /// retrying the delivery once on a fresh session.
+    fn deliver(&self, peer: &mut Peer, wj: &WaveJob) -> Result<()> {
+        if peer.stream.is_none() {
+            self.reconnect(peer)?;
+        }
+        match self.write_wave_job(peer, wj) {
+            Ok(()) => Ok(()),
+            Err(_) if peer.addr.is_some() => {
+                self.reconnect(peer)?;
+                self.write_wave_job(peer, wj)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Read one reply frame off a peer's stream.
+    fn read_reply(&self, peer: &Peer) -> Result<JobReply> {
+        let Some(stream) = &peer.stream else {
+            return Err(Error::Coordinator(format!(
+                "{} has no live session",
+                peer.describe()
+            )));
+        };
+        let (kind, payload) = wire::read_frame(&mut &*stream)?;
+        self.add_bytes(wire::HEADER_LEN + payload.len());
+        let sw = Instant::now();
+        let reply = wire::decode_reply(kind, &payload);
+        self.add_ser(sw.elapsed());
+        reply
+    }
+
+    /// The gather-side recovery path: the peer's stream died mid-wave.
+    /// Bounded reconnect attempts; each successful session is re-shipped
+    /// the retained job's data ranges, resent the frame, and read for the
+    /// reply. Jobs are deterministic, so the recovered reply is exactly
+    /// what the lost peer would have sent.
+    fn recover_and_resend(&self, peer: &mut Peer, wj: &WaveJob) -> Result<JobReply> {
+        let mut last: Option<Error> = None;
+        for attempt in 0..self.reconnect_attempts {
+            if attempt > 0 {
+                std::thread::sleep(RECONNECT_DELAY);
+            }
+            let res = self.open_session(peer).and_then(|()| {
+                self.write_wave_job(peer, wj)?;
+                self.read_reply(peer)
+            });
+            match res {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    peer.stream = None;
+                    last = Some(e);
+                }
+            }
+        }
+        Err(Error::Coordinator(format!(
+            "{} dropped mid-wave and stayed unreachable after {} reconnect attempts: {}",
+            peer.describe(),
+            self.reconnect_attempts,
+            last.map(|e| e.to_string()).unwrap_or_else(|| "reconnect disabled".into())
+        )))
+    }
+
+    /// Retire replies for jobs already delivered when a scatter failed
+    /// partway, so the wave is fully drained and the plane stays usable. A
+    /// peer whose reply cannot be drained loses its session (remote) or
+    /// poisons the plane (loopback thread peer).
+    fn abort_scatter(&self, ep: &PlaneEndpoints, peers: &mut [Peer], delivered: usize) {
+        for p in peers[..delivered].iter_mut() {
+            if !drain_one(p) {
+                match p.addr {
+                    Some(_) => p.stream = None,
+                    None => ep.poisoned.set(true),
+                }
+            }
+        }
+        ep.wave.borrow_mut().clear();
+    }
+}
+
+/// Best-effort, bounded drain of one queued reply — shutdown/abort hygiene
+/// so no peer blocks writing into a socket nobody reads. Returns false if
+/// the reply could not be read within the timeout.
+fn drain_one(peer: &Peer) -> bool {
+    let Some(stream) = &peer.stream else { return true };
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let ok = wire::read_frame(&mut &*stream).is_ok();
+    let _ = stream.set_read_timeout(None);
+    ok
+}
+
+/// Open one peer's session: write the hello, await the ack, reset the
+/// shipped coverage. Returns `(wire bytes, handshake wall-clock)`.
+fn do_handshake(peer: &mut Peer) -> Result<(usize, Duration)> {
+    let sw = Instant::now();
+    let frame = wire::hello_frame(&peer.hello)?;
+    let stream = peer
+        .stream
+        .as_mut()
+        .ok_or_else(|| Error::Coordinator("handshake needs a live stream".into()))?;
+    stream
+        .write_all(&frame)
+        .map_err(|e| Error::Coordinator(format!("tcp hello: {e}")))?;
+    stream.flush().ok();
+    let mut bytes = frame.len();
+    // Version-tolerant read: a peer built at a different wire version acks
+    // with *its* frame version, and we still want to decode and report it
+    // (the ack payload layout is the frozen negotiation anchor).
+    let (_version, kind, payload) = wire::read_frame_any_version(stream)?;
+    bytes += wire::HEADER_LEN + payload.len();
+    let ack = wire::decode_hello_ack(kind, &payload)?;
+    if !ack.ok {
+        return Err(Error::Coordinator(format!(
+            "{} rejected the session (peer wire version {}): {}",
+            peer.describe(),
+            ack.proto,
+            ack.message
+        )));
+    }
+    if ack.proto != wire::VERSION {
+        return Err(Error::Coordinator(format!(
+            "{} speaks wire version {}, expected {}",
+            peer.describe(),
+            ack.proto,
+            wire::VERSION
+        )));
+    }
+    peer.sent.clear(); // fresh session: the peer holds no data yet
+    Ok((bytes, sw.elapsed()))
+}
+
+/// Connect with bounded retries — workers may come up slightly after the
+/// coordinator, so the initial connect gets `1 + attempts` tries.
+fn connect_with_retry(addr: &str, attempts: usize) -> Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..=attempts {
+        if attempt > 0 {
+            std::thread::sleep(RECONNECT_DELAY);
+        }
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(Error::Coordinator(format!(
+        "peer {addr} unreachable after {} connect attempts: {}",
+        attempts + 1,
+        last.expect("at least one attempt")
+    )))
+}
+
+/// Build one plane: addressed remote peers when `addrs` is non-empty,
+/// loopback thread peers otherwise. Every peer is handshaken before the
+/// transport is handed out.
+#[allow(clippy::too_many_arguments)]
+fn init_plane(
+    data: &Arc<Dataset>,
+    backend: &Arc<dyn ComputeBackend>,
+    role: PeerRole,
+    n: usize,
+    addrs: &[String],
+    reconnect_attempts: usize,
+    handles: &mut Vec<JoinHandle<()>>,
+    acct: &mut SpawnAccounting,
+) -> Result<PlaneEndpoints> {
+    let count = if addrs.is_empty() { n } else { addrs.len() };
+    let mut peers = Vec::with_capacity(count);
+    for id in 0..count {
+        let hello = Hello {
+            proto: wire::VERSION,
+            role,
+            peer_id: id as u32,
+            peers_in_plane: count as u32,
+            n: data.len() as u64,
+            dim: data.dim() as u64,
+        };
+        let (stream, addr) = if let Some(a) = addrs.get(id) {
+            (connect_with_retry(a, reconnect_attempts)?, Some(a.clone()))
+        } else {
+            let listener = TcpListener::bind(("127.0.0.1", 0))
+                .map_err(|e| Error::Coordinator(format!("tcp bind: {e}")))?;
+            let local = listener
+                .local_addr()
+                .map_err(|e| Error::Coordinator(format!("tcp local_addr: {e}")))?;
+            let backend = backend.clone();
+            handles.push(std::thread::spawn(move || {
+                if let Ok((s, _)) = listener.accept() {
+                    let _ = serve_peer(s, backend);
+                }
+            }));
+            let stream = TcpStream::connect(local)
+                .map_err(|e| Error::Coordinator(format!("tcp connect: {e}")))?;
+            (stream, None)
+        };
+        stream.set_nodelay(true).ok();
+        let mut peer = Peer { stream: Some(stream), addr, hello, sent: Coverage::default() };
+        let (bytes, took) = do_handshake(&mut peer)?;
+        acct.wire_bytes += bytes as u64;
+        acct.handshake_time += took;
+        peers.push(peer);
+    }
+    let ep = PlaneEndpoints::new();
+    *ep.peers.borrow_mut() = peers;
+    Ok(ep)
 }
 
 impl Transport for Tcp {
@@ -176,38 +776,47 @@ impl Transport for Tcp {
     }
 
     fn peers(&self, plane: Plane) -> usize {
-        self.planes[plane.idx()].streams.len()
+        self.planes[plane.idx()].peers.borrow().len()
     }
 
     fn scatter(&self, plane: Plane, jobs: Vec<Job>) -> Result<()> {
         let ep = &self.planes[plane.idx()];
-        assert_eq!(jobs.len(), ep.streams.len(), "one job per peer");
+        let mut peers = ep.peers.borrow_mut();
+        assert_eq!(jobs.len(), peers.len(), "one job per peer");
         assert_eq!(ep.in_flight.get(), 0, "scatter with a wave still outstanding");
         if ep.poisoned.get() {
             return Err(Error::Coordinator(
-                "transport plane poisoned by an earlier failed scatter".into(),
+                "transport plane poisoned by a lost loopback peer".into(),
             ));
         }
-        for (stream, job) in ep.streams.iter().zip(jobs) {
-            let sw = Instant::now();
-            let frame = match wire::job_frame(&job) {
-                Ok(f) => f,
-                Err(e) => {
-                    // Peers that already received a job will reply, but
-                    // those replies belong to no wave — poison the plane
-                    // rather than risk pairing them with a later gather.
-                    // (A peer-side *job* failure is different: the wave
-                    // completes, `gather` reports it, the plane stays
-                    // usable.)
-                    ep.poisoned.set(true);
-                    return Err(e);
-                }
-            };
-            self.add_ser(sw.elapsed());
-            self.add_bytes(frame.len());
-            if let Err(e) = (&mut &*stream).write_all(&frame) {
-                ep.poisoned.set(true);
-                return Err(Error::Coordinator(format!("tcp scatter: {e}")));
+        // Encode the whole wave up front: shared Arc'd payloads (snapshot,
+        // assignments) are encoded once and spliced into each frame. An
+        // encode failure here is clean — nothing has been sent yet.
+        let needs: Vec<Option<Range<usize>>> = jobs.iter().map(|j| j.data_range()).collect();
+        let sw = Instant::now();
+        let wave = wire::job_frames(&jobs)?;
+        self.add_ser(sw.elapsed());
+        *ep.wave.borrow_mut() = wave
+            .frames
+            .into_iter()
+            .zip(needs)
+            .map(|(frame, need)| WaveJob { frame, need })
+            .collect();
+        let wave_ref = ep.wave.borrow();
+        for i in 0..peers.len() {
+            if let Err(e) = self.deliver(&mut peers[i], &wave_ref[i]) {
+                drop(wave_ref);
+                self.abort_scatter(ep, &mut peers, i);
+                return Err(e);
+            }
+        }
+        drop(wave_ref);
+        // Frames are retained only where a resend is possible: loopback
+        // thread peers cannot be re-sessioned, so holding P extra snapshot
+        // copies for them would buy nothing.
+        for (wj, peer) in ep.wave.borrow_mut().iter_mut().zip(peers.iter()) {
+            if peer.addr.is_none() {
+                wj.frame = Vec::new();
             }
         }
         ep.in_flight.set(1);
@@ -217,50 +826,60 @@ impl Transport for Tcp {
     fn gather(&self, plane: Plane) -> Result<(Vec<JobOutput>, Duration)> {
         let ep = &self.planes[plane.idx()];
         assert_eq!(ep.in_flight.get(), 1, "gather without a scattered wave");
-        let n = ep.streams.len();
+        let mut peers = ep.peers.borrow_mut();
+        let wave = ep.wave.borrow();
+        let n = peers.len();
         let mut outputs: Vec<Option<JobOutput>> = (0..n).map(|_| None).collect();
         let mut max_busy = Duration::ZERO;
         let mut first_err: Option<Error> = None;
-        for stream in &ep.streams {
-            match wire::read_frame(&mut &*stream) {
-                Ok((kind, payload)) => {
-                    self.add_bytes(wire::HEADER_LEN + payload.len());
-                    let sw = Instant::now();
-                    let reply = wire::decode_reply(kind, &payload);
-                    self.add_ser(sw.elapsed());
-                    match reply {
-                        Ok(reply) => {
-                            max_busy = max_busy.max(reply.busy);
-                            match reply.output {
-                                Ok(out) if reply.worker < n => {
-                                    outputs[reply.worker] = Some(out);
-                                }
-                                Ok(_) => {
-                                    first_err = first_err.or_else(|| {
-                                        Some(Error::Coordinator(format!(
-                                            "peer id {} out of range",
-                                            reply.worker
-                                        )))
-                                    });
-                                }
-                                Err(e) => first_err = first_err.or(Some(e)),
-                            }
-                        }
-                        Err(e) => first_err = first_err.or(Some(e)),
+        let mut take = |reply: JobReply,
+                        outputs: &mut Vec<Option<JobOutput>>,
+                        first_err: &mut Option<Error>| {
+            max_busy = max_busy.max(reply.busy);
+            match reply.output {
+                Ok(out) if reply.worker < n => outputs[reply.worker] = Some(out),
+                Ok(_) => {
+                    if first_err.is_none() {
+                        *first_err = Some(Error::Coordinator(format!(
+                            "peer id {} out of range",
+                            reply.worker
+                        )));
                     }
                 }
                 Err(e) => {
-                    // Frame-level read failure: the stream is dead or
-                    // desynchronized, so a retry wave on this plane could
-                    // block forever or mispair replies — poison it.
-                    // (A decode failure above leaves the stream framed and
-                    // synced; the plane stays usable, like a job error.)
+                    if first_err.is_none() {
+                        *first_err = Some(e);
+                    }
+                }
+            }
+        };
+        for i in 0..n {
+            match self.read_reply(&peers[i]) {
+                Ok(reply) => take(reply, &mut outputs, &mut first_err),
+                Err(_) if peers[i].addr.is_some() => {
+                    // The stream died mid-wave. The frame was retained at
+                    // scatter, so a replacement worker on the same address
+                    // can be re-handshaken, re-shipped, and handed the job
+                    // again — the wave completes as if nothing happened.
+                    match self.recover_and_resend(&mut peers[i], &wave[i]) {
+                        Ok(reply) => take(reply, &mut outputs, &mut first_err),
+                        Err(e) => {
+                            peers[i].stream = None;
+                            first_err = first_err.or(Some(e));
+                        }
+                    }
+                }
+                Err(e) => {
+                    // A loopback thread peer's stream broke: it cannot be
+                    // re-sessioned, so the plane is poisoned.
                     ep.poisoned.set(true);
                     first_err = first_err.or(Some(e));
                 }
             }
         }
         ep.in_flight.set(0);
+        drop(wave);
+        ep.wave.borrow_mut().clear();
         if let Some(e) = first_err {
             return Err(e);
         }
@@ -271,33 +890,42 @@ impl Transport for Tcp {
     }
 
     fn stats(&self) -> TransportStats {
-        TransportStats { wire_bytes: self.wire_bytes.get(), ser_time: self.ser_time.get() }
+        TransportStats {
+            wire_bytes: self.wire_bytes.get(),
+            ser_time: self.ser_time.get(),
+            dataset_bytes: self.dataset_bytes.get(),
+            handshake_time: self.handshake_time.get(),
+        }
     }
 }
 
 impl Drop for Tcp {
     fn drop(&mut self) {
         for ep in &self.planes {
-            // Drain an outstanding (successfully scattered, never
-            // gathered) wave so no peer blocks writing a reply into a
-            // socket nobody reads. A poisoned plane is skipped — its
-            // streams may be desynced; closing them below is the only
-            // safe move.
+            let mut peers = ep.peers.borrow_mut();
+            // Drain an outstanding (successfully scattered, never gathered)
+            // wave so no peer blocks writing a reply into a socket nobody
+            // reads. A poisoned plane is skipped — its streams may be
+            // desynced; closing them below is the only safe move.
             if ep.in_flight.get() > 0 && !ep.poisoned.get() {
-                drain_replies(&ep.streams);
+                for p in peers.iter() {
+                    let _ = drain_one(p);
+                }
             }
             // Shutdown frames are best-effort: a dead peer's socket just
             // errors, and closing the stream below unblocks it anyway.
             if let Ok(frame) = wire::job_frame(&Job::Shutdown) {
-                for stream in &ep.streams {
-                    let _ = (&mut &*stream).write_all(&frame);
+                for p in peers.iter_mut() {
+                    if let Some(stream) = &mut p.stream {
+                        let _ = stream.write_all(&frame);
+                    }
                 }
             }
-        }
-        // Close every socket (EOF for any peer that missed its shutdown
-        // frame), then join.
-        for ep in &mut self.planes {
-            ep.streams.clear();
+            // Close every socket (EOF for any peer that missed its
+            // shutdown frame).
+            for p in peers.iter_mut() {
+                p.stream = None;
+            }
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -319,6 +947,37 @@ mod tests {
         let data = Arc::new(dp_clusters(&GenConfig { n, dim: 8, theta: 1.0, seed: 7 }));
         (data, Arc::new(NativeBackend::new()))
     }
+
+    // -- Coverage ----------------------------------------------------------
+
+    #[test]
+    fn coverage_add_merges_and_covers() {
+        let mut c = Coverage::default();
+        assert!(c.covers(&(5..5)), "empty range is always covered");
+        c.add(10..20);
+        c.add(30..40);
+        c.add(18..30); // bridges the two spans
+        assert!(c.covers(&(10..40)));
+        assert!(!c.covers(&(9..12)));
+        assert!(!c.covers(&(35..41)));
+        c.add(0..0); // empty add is a no-op
+        assert!(!c.covers(&(0..1)));
+    }
+
+    #[test]
+    fn coverage_missing_returns_exact_gaps() {
+        let mut c = Coverage::default();
+        c.add(10..20);
+        c.add(30..40);
+        assert_eq!(c.missing(&(0..50)), vec![0..10, 20..30, 40..50]);
+        assert_eq!(c.missing(&(12..18)), Vec::<Range<usize>>::new());
+        assert_eq!(c.missing(&(15..35)), vec![20..30]);
+        assert_eq!(c.missing(&(40..40)), Vec::<Range<usize>>::new());
+        c.clear();
+        assert_eq!(c.missing(&(1..3)), vec![1..3]);
+    }
+
+    // -- Waves -------------------------------------------------------------
 
     /// The same wave over TCP and in-proc must return bit-identical outputs
     /// — the whole point of the bit-exact wire format.
@@ -354,21 +1013,70 @@ mod tests {
         }
         let stats = tcp.stats();
         assert!(stats.wire_bytes > 0, "tcp waves must be accounted");
+        assert!(stats.handshake_time > Duration::ZERO, "handshakes must be accounted");
+    }
+
+    /// Loopback peers receive the dataset over the wire, on demand, each
+    /// range at most once per session.
+    #[test]
+    fn dataset_blocks_ship_on_demand_and_only_once() {
+        let (data, backend) = data_and_backend(100);
+        let tcp = Tcp::spawn(data.clone(), backend, 2, 1).unwrap();
+        assert_eq!(tcp.stats().dataset_bytes, 0, "nothing shipped before a wave");
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        let centers = Arc::new(centers);
+        let mk = || -> Vec<Job> {
+            split_range(0..100, 2)
+                .into_iter()
+                .map(|range| Job::Nearest { range, centers: centers.clone() })
+                .collect()
+        };
+        tcp.scatter(Plane::Compute, mk()).unwrap();
+        tcp.gather(Plane::Compute).unwrap();
+        let after_first = tcp.stats().dataset_bytes;
+        assert!(after_first > 0, "compute jobs must ship their point ranges");
+        tcp.scatter(Plane::Compute, mk()).unwrap();
+        tcp.gather(Plane::Compute).unwrap();
+        assert_eq!(
+            tcp.stats().dataset_bytes,
+            after_first,
+            "already-covered ranges must not be re-shipped"
+        );
+    }
+
+    /// Validator peers never receive dataset blocks: their jobs carry the
+    /// proposal vectors inline.
+    #[test]
+    fn validator_plane_ships_no_dataset() {
+        let (data, backend) = data_and_backend(60);
+        let tcp = Tcp::spawn(data, backend, 1, 2).unwrap();
+        let mut vectors = Matrix::zeros(0, 2);
+        vectors.push_row(&[0.0, 0.0]);
+        vectors.push_row(&[1.0, 0.0]);
+        let vectors = Arc::new(vectors);
+        let jobs = vec![
+            Job::PairCache { vectors: vectors.clone(), shards: vec![vec![0, 1]] },
+            Job::PairCache { vectors, shards: vec![] },
+        ];
+        tcp.scatter(Plane::Validate, jobs).unwrap();
+        tcp.gather(Plane::Validate).unwrap();
+        assert_eq!(tcp.stats().dataset_bytes, 0);
     }
 
     #[test]
     fn tcp_peer_error_drains_wave_and_transport_survives() {
         let (data, backend) = data_and_backend(100);
         let tcp = Tcp::spawn(data, backend, 2, 1).unwrap();
-        let short = Arc::new(vec![0u32; 10]); // panics inside the peer
+        let short = Arc::new(vec![0u32; 10]); // fails decode validation peer-side
         let jobs: Vec<Job> = split_range_chunked(0..100, 2)
             .into_iter()
             .map(|range| Job::SuffStats { range, assignments: short.clone(), k: 2 })
             .collect();
         tcp.scatter(Plane::Compute, jobs).unwrap();
         assert!(tcp.gather(Plane::Compute).is_err(), "poisoned wave must error");
-        // The peers caught the panic and are still serving: a clean wave
-        // works on the same connections.
+        // The peers replied with errors and are still serving: a clean wave
+        // works on the same sessions.
         let ok = Arc::new(vec![0u32; 100]);
         let jobs: Vec<Job> = split_range_chunked(0..100, 2)
             .into_iter()
@@ -392,5 +1100,174 @@ mod tests {
             .collect();
         tcp.scatter(Plane::Compute, jobs).unwrap();
         drop(tcp); // wave never gathered; drop drains and joins
+    }
+
+    // -- Addressed peers + reconnect ---------------------------------------
+
+    /// A thread standing in for an `occd worker` process: listens on a real
+    /// address and serves sessions with the production peer loop.
+    fn listener_worker(
+        backend: Arc<dyn ComputeBackend>,
+        sessions: usize,
+    ) -> (String, JoinHandle<()>) {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            for _ in 0..sessions {
+                let Ok((s, _)) = listener.accept() else { return };
+                let _ = serve_peer(s, backend.clone());
+            }
+        });
+        (addr, handle)
+    }
+
+    /// Addressed peers (the `occd worker` path, served here by threads
+    /// behind real listeners) produce the same bits as loopback peers.
+    #[test]
+    fn addressed_peers_serve_waves_like_loopback() {
+        let (data, backend) = data_and_backend(90);
+        let (a0, h0) = listener_worker(backend.clone(), 1);
+        let (a1, h1) = listener_worker(backend.clone(), 1);
+        let (av, hv) = listener_worker(backend.clone(), 1);
+        let topo = Topology {
+            procs: 2,
+            validators: 1,
+            compute_peers: vec![a0, a1],
+            validator_peers: vec![av],
+            reconnect_attempts: 2,
+        };
+        let tcp = Tcp::spawn_topology(data.clone(), backend.clone(), &topo).unwrap();
+        assert_eq!(tcp.peers(Plane::Compute), 2);
+        assert_eq!(tcp.peers(Plane::Validate), 1);
+        let loopback = Tcp::spawn(data.clone(), backend, 2, 1).unwrap();
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(5));
+        let centers = Arc::new(centers);
+        let mk = || -> Vec<Job> {
+            split_range(0..90, 2)
+                .into_iter()
+                .map(|range| Job::Nearest { range, centers: centers.clone() })
+                .collect()
+        };
+        tcp.scatter(Plane::Compute, mk()).unwrap();
+        let (a, _) = tcp.gather(Plane::Compute).unwrap();
+        loopback.scatter(Plane::Compute, mk()).unwrap();
+        let (b, _) = loopback.gather(Plane::Compute).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            let (JobOutput::Nearest { idx: ia, d2: da }, JobOutput::Nearest { idx: ib, d2: db }) =
+                (x, y)
+            else {
+                panic!("wrong output kind");
+            };
+            assert_eq!(ia, ib);
+            assert_eq!(
+                da.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                db.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        drop(tcp);
+        drop(loopback);
+        h0.join().unwrap();
+        h1.join().unwrap();
+        hv.join().unwrap();
+    }
+
+    /// A remote peer that dies mid-wave is recovered through the bounded
+    /// reconnect path: the listener serves a first session that reads the
+    /// job and drops dead, then a second, healthy session; the master
+    /// re-handshakes, re-ships, resends, and the wave completes.
+    #[test]
+    fn dropped_remote_peer_recovers_via_resend() {
+        let (data, backend) = data_and_backend(80);
+        // A worker whose first session crashes right after receiving its
+        // job (handshake + data blocks are consumed so the master's scatter
+        // succeeds), and whose second session is healthy.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let crash_backend = backend.clone();
+        let worker = std::thread::spawn(move || {
+            // Session 1: handshake, swallow frames until the job arrives,
+            // then drop the stream without replying.
+            let (mut s, _) = listener.accept().unwrap();
+            let (kind, payload) = wire::read_frame(&mut s).unwrap();
+            assert_eq!(kind, wire::KIND_HELLO);
+            let _ = wire::decode_hello(&payload).unwrap();
+            let ack = HelloAck { proto: wire::VERSION, ok: true, message: String::new() };
+            s.write_all(&wire::hello_ack_frame(&ack).unwrap()).unwrap();
+            loop {
+                let (kind, _) = wire::read_frame(&mut s).unwrap();
+                if kind == wire::KIND_JOB {
+                    break; // crash: drop the stream, reply with nothing
+                }
+            }
+            drop(s);
+            // Session 2: a healthy replacement.
+            let (s, _) = listener.accept().unwrap();
+            let _ = serve_peer(s, crash_backend);
+        });
+        let topo = Topology {
+            procs: 1,
+            validators: 1,
+            compute_peers: vec![addr],
+            validator_peers: vec![],
+            reconnect_attempts: 8,
+        };
+        let tcp = Tcp::spawn_topology(data.clone(), backend, &topo).unwrap();
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        let centers = Arc::new(centers);
+        let jobs = vec![Job::Nearest { range: 0..80, centers: centers.clone() }];
+        tcp.scatter(Plane::Compute, jobs).unwrap();
+        let (outs, _) = tcp.gather(Plane::Compute).unwrap();
+        let JobOutput::Nearest { idx, .. } = &outs[0] else { panic!("wrong output kind") };
+        assert_eq!(idx.len(), 80);
+        assert!(
+            tcp.stats().handshake_time > Duration::ZERO,
+            "recovery re-handshakes must be accounted"
+        );
+        drop(tcp);
+        worker.join().unwrap();
+    }
+
+    /// A remote peer that dies and never comes back yields a typed error
+    /// with the wave drained — not a poisoned plane, not a deadlock.
+    #[test]
+    fn dead_remote_peer_types_out_after_bounded_attempts() {
+        let (data, backend) = data_and_backend(40);
+        let (addr, handle) = listener_worker(backend.clone(), 1);
+        let topo = Topology {
+            procs: 1,
+            validators: 1,
+            compute_peers: vec![addr],
+            validator_peers: vec![],
+            reconnect_attempts: 1,
+        };
+        let tcp = Tcp::spawn_topology(data.clone(), backend, &topo).unwrap();
+        // Kill the worker: drop the transport's only session server by
+        // sending a shutdown-shaped job... instead, simply send a job after
+        // the listener thread exits its single session.
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        let centers = Arc::new(centers);
+        // First wave works.
+        tcp.scatter(
+            Plane::Compute,
+            vec![Job::Nearest { range: 0..40, centers: centers.clone() }],
+        )
+        .unwrap();
+        tcp.gather(Plane::Compute).unwrap();
+        // The worker serves exactly one session; kill it by dropping our
+        // stream (reconnect will find nobody listening).
+        tcp.planes[Plane::Compute.idx()].peers.borrow_mut()[0].stream = None;
+        handle.join().unwrap();
+        let err = tcp
+            .scatter(
+                Plane::Compute,
+                vec![Job::Nearest { range: 0..40, centers: centers.clone() }],
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("reconnect") || err.contains("unreachable"), "{err}");
+        drop(tcp); // must not hang
     }
 }

@@ -10,11 +10,12 @@
 //! * [`InProc`] — peers are threads in this process; jobs and snapshots
 //!   cross the boundary by pointer (`mpsc` channels + `Arc`). This is the
 //!   zero-copy fast path and the default.
-//! * [`super::tcp::Tcp`] — peers sit behind localhost TCP sockets; every
-//!   job, snapshot and reply is serialized through the explicit
-//!   length-prefixed wire format of [`super::wire`]. Same coordinator, same
-//!   bits — but the message boundary is real, which is the stepping stone
-//!   to peers on other machines.
+//! * [`super::tcp::Tcp`] — peers sit behind TCP sockets: loopback threads
+//!   of this process by default, or standalone `occd worker` processes on
+//!   other machines when a [`Topology`] lists `host:port` addresses. Every
+//!   job, snapshot, reply — and the dataset itself, as demand-shipped block
+//!   frames — is serialized through the explicit length-prefixed wire
+//!   format of [`super::wire`]. Same coordinator, same bits.
 //!
 //! [`Cluster`] is the coordinator-facing facade: it owns the boxed
 //! transport, knows the peer counts, and provides the scatter/gather calls
@@ -59,6 +60,13 @@ pub struct TransportStats {
     pub wire_bytes: u64,
     /// Master-side time spent encoding jobs and decoding replies.
     pub ser_time: Duration,
+    /// Dataset-block payload bytes shipped to peers (a subset of
+    /// `wire_bytes`; zero in-proc and on the validation plane, whose jobs
+    /// carry their vectors inline).
+    pub dataset_bytes: u64,
+    /// Wall-clock spent in peer session handshakes — the initial `Hello`
+    /// exchange per peer at spawn, plus any reconnect re-handshakes.
+    pub handshake_time: Duration,
 }
 
 impl TransportStats {
@@ -67,7 +75,86 @@ impl TransportStats {
         TransportStats {
             wire_bytes: self.wire_bytes.saturating_sub(earlier.wire_bytes),
             ser_time: self.ser_time.saturating_sub(earlier.ser_time),
+            dataset_bytes: self.dataset_bytes.saturating_sub(earlier.dataset_bytes),
+            handshake_time: self.handshake_time.saturating_sub(earlier.handshake_time),
         }
+    }
+}
+
+/// Where a cluster's peers live: per plane, a list of `host:port`
+/// addresses (standalone `occd worker` processes) or — when the list is
+/// empty — a count of loopback peers to spawn in this process.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    /// Compute peers when `compute_peers` is empty.
+    pub procs: usize,
+    /// Validator peers when `validator_peers` is empty.
+    pub validators: usize,
+    /// Remote compute-peer addresses; non-empty lists define the plane
+    /// size.
+    pub compute_peers: Vec<String>,
+    /// Remote validator-peer addresses.
+    pub validator_peers: Vec<String>,
+    /// Bounded reconnect budget for a dropped remote peer (0 = fail fast).
+    pub reconnect_attempts: usize,
+}
+
+/// Default reconnect budget for dropped remote peers.
+pub const DEFAULT_RECONNECT_ATTEMPTS: usize = 3;
+
+impl Topology {
+    /// An all-loopback topology (every peer in this process).
+    pub fn local(procs: usize, validators: usize) -> Topology {
+        Topology {
+            procs,
+            validators,
+            compute_peers: Vec::new(),
+            validator_peers: Vec::new(),
+            reconnect_attempts: DEFAULT_RECONNECT_ATTEMPTS,
+        }
+    }
+
+    /// The topology a run config names, with the validation-plane size the
+    /// caller resolved (algorithms cap it — BP-means uses a single
+    /// placeholder validator). Validator addresses beyond that cap are
+    /// dropped with a stderr notice; the surplus workers simply never
+    /// receive a session.
+    pub fn of_config(cfg: &crate::config::RunConfig, validators: usize) -> Topology {
+        let mut validator_peers = cfg.validator_peers.clone();
+        if validator_peers.len() > validators {
+            eprintln!(
+                "occml: this algorithm uses {validators} validator peer(s); dropping {}: {}",
+                validator_peers.len() - validators,
+                validator_peers[validators..].join(", ")
+            );
+        }
+        validator_peers.truncate(validators);
+        Topology {
+            procs: cfg.procs,
+            validators,
+            compute_peers: cfg.peers.clone(),
+            validator_peers,
+            reconnect_attempts: cfg.reconnect_attempts,
+        }
+    }
+
+    /// Compute-plane size this topology resolves to.
+    pub fn effective_procs(&self) -> usize {
+        if self.compute_peers.is_empty() { self.procs } else { self.compute_peers.len() }
+    }
+
+    /// Validation-plane size this topology resolves to.
+    pub fn effective_validators(&self) -> usize {
+        if self.validator_peers.is_empty() {
+            self.validators
+        } else {
+            self.validator_peers.len()
+        }
+    }
+
+    /// True if any plane addresses remote peers.
+    pub fn has_remote_peers(&self) -> bool {
+        !self.compute_peers.is_empty() || !self.validator_peers.is_empty()
     }
 }
 
@@ -159,8 +246,8 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    /// Spawn the transport a config names, with `procs` compute peers and
-    /// `validators` validation peers.
+    /// Spawn the transport a config names, with `procs` loopback compute
+    /// peers and `validators` loopback validation peers.
     pub fn spawn(
         kind: TransportKind,
         data: Arc<Dataset>,
@@ -168,12 +255,35 @@ impl Cluster {
         procs: usize,
         validators: usize,
     ) -> Result<Cluster> {
+        Cluster::spawn_topology(kind, data, backend, &Topology::local(procs, validators))
+    }
+
+    /// Spawn the transport a config names over an explicit peer topology:
+    /// remote `host:port` peers where the topology lists addresses,
+    /// loopback peers elsewhere. Remote peers require the TCP transport.
+    pub fn spawn_topology(
+        kind: TransportKind,
+        data: Arc<Dataset>,
+        backend: Arc<dyn ComputeBackend>,
+        topo: &Topology,
+    ) -> Result<Cluster> {
+        let procs = topo.effective_procs();
+        let validators = topo.effective_validators().max(1);
         assert!(procs >= 1, "a cluster needs at least one compute peer");
-        let validators = validators.max(1);
         let transport: Box<dyn Transport> = match kind {
-            TransportKind::InProc => Box::new(InProc::spawn(data, backend, procs, validators)),
+            TransportKind::InProc => {
+                if topo.has_remote_peers() {
+                    return Err(Error::config(
+                        "peers = [...] requires transport = \"tcp\" — the in-proc \
+                         transport has no wire to reach them over",
+                    ));
+                }
+                Box::new(InProc::spawn(data, backend, procs, validators))
+            }
             TransportKind::Tcp => {
-                Box::new(super::tcp::Tcp::spawn(data, backend, procs, validators)?)
+                let mut topo = topo.clone();
+                topo.validators = validators;
+                Box::new(super::tcp::Tcp::spawn_topology(data, backend, &topo)?)
             }
         };
         Ok(Cluster { transport, procs, validators })
@@ -347,10 +457,57 @@ mod tests {
 
     #[test]
     fn transport_stats_delta() {
-        let a = TransportStats { wire_bytes: 100, ser_time: Duration::from_millis(5) };
-        let b = TransportStats { wire_bytes: 250, ser_time: Duration::from_millis(8) };
+        let a = TransportStats {
+            wire_bytes: 100,
+            ser_time: Duration::from_millis(5),
+            dataset_bytes: 10,
+            handshake_time: Duration::from_millis(1),
+        };
+        let b = TransportStats {
+            wire_bytes: 250,
+            ser_time: Duration::from_millis(8),
+            dataset_bytes: 70,
+            handshake_time: Duration::from_millis(4),
+        };
         let d = b.since(&a);
         assert_eq!(d.wire_bytes, 150);
         assert_eq!(d.ser_time, Duration::from_millis(3));
+        assert_eq!(d.dataset_bytes, 60);
+        assert_eq!(d.handshake_time, Duration::from_millis(3));
+    }
+
+    #[test]
+    fn topology_resolution() {
+        let t = Topology::local(4, 2);
+        assert_eq!(t.effective_procs(), 4);
+        assert_eq!(t.effective_validators(), 2);
+        assert!(!t.has_remote_peers());
+        let t = Topology {
+            procs: 4,
+            validators: 2,
+            compute_peers: vec!["h:1".into(), "h:2".into(), "h:3".into()],
+            validator_peers: vec!["h:4".into()],
+            reconnect_attempts: 1,
+        };
+        assert_eq!(t.effective_procs(), 3, "addresses define the plane size");
+        assert_eq!(t.effective_validators(), 1);
+        assert!(t.has_remote_peers());
+    }
+
+    #[test]
+    fn inproc_rejects_remote_peers() {
+        let data = Arc::new(dp_clusters(&GenConfig { n: 10, dim: 4, theta: 1.0, seed: 1 }));
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+        let topo = Topology {
+            procs: 1,
+            validators: 1,
+            compute_peers: vec!["127.0.0.1:1".into()],
+            validator_peers: vec![],
+            reconnect_attempts: 0,
+        };
+        let err = Cluster::spawn_topology(TransportKind::InProc, data, backend, &topo)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tcp"), "{err}");
     }
 }

@@ -8,7 +8,8 @@
 //! ```text
 //! frame   := magic:u32  version:u16  kind:u16  len:u32  payload[len]
 //! magic   := 0x4D43434F ("OCCM" in LE byte order)
-//! kind    := 1 job | 2 reply-ok | 3 reply-err
+//! kind    := 1 job | 2 reply-ok | 3 reply-err | 4 hello | 5 hello-ack
+//!          | 6 dataset-block
 //! ```
 //!
 //! * **f32 values travel as their IEEE-754 bit patterns** (`to_bits` /
@@ -19,16 +20,31 @@
 //!   oversized or corrupt frame produces a typed error, never a panic or an
 //!   unbounded allocation (`rust/tests/wire_format.rs`).
 //! * The version field is checked on receive; bumping [`VERSION`] is the
-//!   upgrade path when the `Job` schema changes.
+//!   upgrade path when the `Job` schema changes. The [`Hello`] handshake
+//!   additionally carries the version in its payload, so a mismatched peer
+//!   is rejected with a typed error before any work is exchanged.
 //!
 //! Snapshots (`C^{t-1}` center/feature matrices) are embedded in the jobs
 //! that reference them, so snapshot distribution is just job scatter. The
-//! dataset itself is *not* shipped — loopback peers share it by `Arc`;
-//! shipping data blocks to true remote peers is future work (ROADMAP).
+//! dataset is shipped as explicit [`KIND_DATA`] block frames: a peer opens
+//! a session with a [`Hello`]/[`HelloAck`] exchange that fixes its shard
+//! assignment and the dataset geometry, then receives exactly the point
+//! ranges its jobs read (see [`super::tcp`]).
+//!
+//! ## Shared-payload splicing
+//!
+//! The P jobs of one wave embed the same `Arc`'d snapshot (and, for
+//! reductions, the same assignment vector). [`job_frames`] encodes each
+//! shared payload *once* per wave and splices the cached bytes into every
+//! frame, instead of re-encoding it P times; the produced frames are
+//! byte-identical to per-job [`job_frame`] encoding, and
+//! [`WaveFrames::spliced_payload_bytes`] reports how much encoder work the
+//! splice avoided (asserted in `rust/tests/wire_format.rs`).
 
 use super::engine::{Job, JobOutput, JobReply};
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::ops::Range;
 use std::sync::Arc;
@@ -49,6 +65,12 @@ pub const KIND_JOB: u16 = 1;
 pub const KIND_REPLY_OK: u16 = 2;
 /// Frame kind: an error reply flowing peer → master.
 pub const KIND_REPLY_ERR: u16 = 3;
+/// Frame kind: the master → peer handshake opening a session.
+pub const KIND_HELLO: u16 = 4;
+/// Frame kind: the peer's handshake acknowledgement.
+pub const KIND_HELLO_ACK: u16 = 5;
+/// Frame kind: a dataset block flowing master → peer.
+pub const KIND_DATA: u16 = 6;
 
 fn wire_err(msg: impl Into<String>) -> Error {
     Error::Data(format!("wire: {}", msg.into()))
@@ -60,6 +82,9 @@ fn wire_err(msg: impl Into<String>) -> Error {
 
 fn put_u8(b: &mut Vec<u8>, v: u8) {
     b.push(v);
+}
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
 }
 fn put_u32(b: &mut Vec<u8>, v: u32) {
     b.extend_from_slice(&v.to_le_bytes());
@@ -148,6 +173,10 @@ impl<'a> Reader<'a> {
     /// Next u8.
     pub fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
+    }
+    /// Next little-endian u16.
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
     }
     /// Next little-endian u32.
     pub fn u32(&mut self) -> Result<u32> {
@@ -244,39 +273,67 @@ const JOB_BP_STATS: u8 = 3;
 const JOB_PAIR_CACHE: u8 = 4;
 const JOB_SHUTDOWN: u8 = 5;
 
-/// Serialize a job payload (no frame header).
-pub fn encode_job(job: &Job) -> Vec<u8> {
+/// Per-wave cache of encoded shared payloads, keyed by the `Arc`
+/// allocation's address. Payloads the wave's jobs share by `Arc` (the
+/// epoch snapshot, the reduction's assignment vector) are encoded once and
+/// spliced — byte-for-byte — into every later frame that embeds them.
+#[derive(Default)]
+struct SpliceCache {
+    parts: HashMap<usize, Vec<u8>>,
+    spliced: usize,
+}
+
+impl SpliceCache {
+    /// Append the encoding of a shared payload to `b`: run `encode` on a
+    /// cache miss, splice the cached bytes on a hit.
+    fn splice(&mut self, b: &mut Vec<u8>, key: usize, encode: impl FnOnce(&mut Vec<u8>)) {
+        if let Some(cached) = self.parts.get(&key) {
+            self.spliced += cached.len();
+            b.extend_from_slice(cached);
+            return;
+        }
+        let start = b.len();
+        encode(b);
+        self.parts.insert(key, b[start..].to_vec());
+    }
+}
+
+fn encode_job_into(job: &Job, cache: &mut SpliceCache) -> Vec<u8> {
     let mut b = Vec::new();
     match job {
         Job::Nearest { range, centers } => {
             put_u8(&mut b, JOB_NEAREST);
             put_range(&mut b, range);
-            put_matrix(&mut b, centers);
+            cache.splice(&mut b, Arc::as_ptr(centers) as usize, |b| put_matrix(b, centers));
         }
         Job::SuffStats { range, assignments, k } => {
             put_u8(&mut b, JOB_SUFFSTATS);
             put_range(&mut b, range);
-            put_u32_slice(&mut b, assignments.as_slice());
+            cache.splice(&mut b, Arc::as_ptr(assignments) as usize, |b| {
+                put_u32_slice(b, assignments.as_slice())
+            });
             put_usize(&mut b, *k);
         }
         Job::BpDescend { range, features, sweeps } => {
             put_u8(&mut b, JOB_BP_DESCEND);
             put_range(&mut b, range);
-            put_matrix(&mut b, features);
+            cache.splice(&mut b, Arc::as_ptr(features) as usize, |b| put_matrix(b, features));
             put_usize(&mut b, *sweeps);
         }
         Job::BpStats { range, z, k } => {
             put_u8(&mut b, JOB_BP_STATS);
             put_range(&mut b, range);
-            put_usize(&mut b, z.len());
-            for row in z.iter() {
-                put_bool_slice(&mut b, row);
-            }
+            cache.splice(&mut b, Arc::as_ptr(z) as usize, |b| {
+                put_usize(b, z.len());
+                for row in z.iter() {
+                    put_bool_slice(b, row);
+                }
+            });
             put_usize(&mut b, *k);
         }
         Job::PairCache { vectors, shards } => {
             put_u8(&mut b, JOB_PAIR_CACHE);
-            put_matrix(&mut b, vectors);
+            cache.splice(&mut b, Arc::as_ptr(vectors) as usize, |b| put_matrix(b, vectors));
             put_usize(&mut b, shards.len());
             for shard in shards {
                 put_u32_slice(&mut b, shard);
@@ -287,6 +344,42 @@ pub fn encode_job(job: &Job) -> Vec<u8> {
         }
     }
     b
+}
+
+/// Serialize a job payload (no frame header).
+pub fn encode_job(job: &Job) -> Vec<u8> {
+    encode_job_into(job, &mut SpliceCache::default())
+}
+
+/// One wave's encoded job frames plus encoder-effort accounting.
+pub struct WaveFrames {
+    /// One complete frame per job, in job order — byte-identical to what
+    /// per-job [`job_frame`] calls would produce.
+    pub frames: Vec<Vec<u8>>,
+    /// Payload bytes that were actually run through the encoder.
+    pub fresh_payload_bytes: usize,
+    /// Payload bytes spliced from the wave's shared-payload cache instead
+    /// of being re-encoded (a pure memcpy).
+    pub spliced_payload_bytes: usize,
+}
+
+/// Encode one wave of jobs with shared-payload splicing: payloads the jobs
+/// share by `Arc` (snapshots, assignment vectors) are encoded once and
+/// spliced into each later frame.
+pub fn job_frames(jobs: &[Job]) -> Result<WaveFrames> {
+    let mut cache = SpliceCache::default();
+    let mut frames = Vec::with_capacity(jobs.len());
+    let mut payload_total = 0usize;
+    for job in jobs {
+        let payload = encode_job_into(job, &mut cache);
+        payload_total += payload.len();
+        frames.push(frame(KIND_JOB, payload)?);
+    }
+    Ok(WaveFrames {
+        frames,
+        fresh_payload_bytes: payload_total - cache.spliced,
+        spliced_payload_bytes: cache.spliced,
+    })
 }
 
 /// Deserialize a job payload, validating internal invariants (range
@@ -356,6 +449,169 @@ pub fn decode_job(payload: &[u8]) -> Result<Job> {
     };
     r.finish()?;
     Ok(job)
+}
+
+// ---------------------------------------------------------------------------
+// Session handshake and dataset distribution
+// ---------------------------------------------------------------------------
+
+/// Which plane a peer serves — carried in the [`Hello`] handshake.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerRole {
+    /// Epoch-compute worker (owns point blocks).
+    Compute,
+    /// Validator shard (owns conflict-key bucket ranges per wave).
+    Validate,
+}
+
+impl PeerRole {
+    fn code(self) -> u8 {
+        match self {
+            PeerRole::Compute => 0,
+            PeerRole::Validate => 1,
+        }
+    }
+    fn from_code(c: u8) -> Result<PeerRole> {
+        match c {
+            0 => Ok(PeerRole::Compute),
+            1 => Ok(PeerRole::Validate),
+            other => Err(wire_err(format!("unknown peer role {other}"))),
+        }
+    }
+    /// Role name (logs / errors).
+    pub fn name(self) -> &'static str {
+        match self {
+            PeerRole::Compute => "compute",
+            PeerRole::Validate => "validate",
+        }
+    }
+}
+
+/// The master → peer session handshake: protocol version, the peer's shard
+/// assignment (role + id within a plane of `peers_in_plane`), and the
+/// dataset geometry so the peer can size its local store before any
+/// [`KIND_DATA`] block arrives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    /// Sender's wire-format version. Receivers reject a mismatch with a
+    /// typed error instead of guessing at the schema — the frame header
+    /// carries the version too, but the handshake makes the rejection
+    /// explicit and reportable before any work is exchanged.
+    pub proto: u16,
+    /// Plane the peer is being enrolled into.
+    pub role: PeerRole,
+    /// Peer id within its plane; replies are attributed by this id.
+    pub peer_id: u32,
+    /// Plane size — the shard assignment is (`peer_id`, of this many).
+    pub peers_in_plane: u32,
+    /// Dataset points (rows of the global point matrix).
+    pub n: u64,
+    /// Dataset dimensionality.
+    pub dim: u64,
+}
+
+/// Serialize a handshake payload (no frame header).
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u16(&mut b, h.proto);
+    put_u8(&mut b, h.role.code());
+    put_u32(&mut b, h.peer_id);
+    put_u32(&mut b, h.peers_in_plane);
+    put_u64(&mut b, h.n);
+    put_u64(&mut b, h.dim);
+    b
+}
+
+/// Deserialize a handshake payload, rejecting a protocol-version mismatch
+/// with a typed error.
+pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
+    let mut r = Reader::new(payload);
+    let proto = r.u16()?;
+    if proto != VERSION {
+        return Err(wire_err(format!(
+            "hello protocol version {proto}, expected {VERSION}"
+        )));
+    }
+    let role = PeerRole::from_code(r.u8()?)?;
+    let peer_id = r.u32()?;
+    let peers_in_plane = r.u32()?;
+    let n = r.u64()?;
+    let dim = r.u64()?;
+    r.finish()?;
+    Ok(Hello { proto, role, peer_id, peers_in_plane, n, dim })
+}
+
+/// A complete handshake frame, ready to write.
+pub fn hello_frame(h: &Hello) -> Result<Vec<u8>> {
+    frame(KIND_HELLO, encode_hello(h))
+}
+
+/// The peer's answer to a [`Hello`]: its own protocol version, whether it
+/// accepted the session, and a reason when it did not.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HelloAck {
+    /// The peer's wire-format version.
+    pub proto: u16,
+    /// True if the peer accepted the session.
+    pub ok: bool,
+    /// Rejection reason (empty on acceptance).
+    pub message: String,
+}
+
+/// Serialize an acknowledgement payload (no frame header).
+pub fn encode_hello_ack(a: &HelloAck) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u16(&mut b, a.proto);
+    put_u8(&mut b, u8::from(a.ok));
+    put_str(&mut b, &a.message);
+    b
+}
+
+/// Deserialize an acknowledgement. Unlike [`decode_hello`] this does *not*
+/// reject a foreign version: the master needs the peer's version to report
+/// a useful mismatch error.
+pub fn decode_hello_ack(kind: u16, payload: &[u8]) -> Result<HelloAck> {
+    if kind != KIND_HELLO_ACK {
+        return Err(wire_err(format!("expected a hello-ack frame, got kind {kind}")));
+    }
+    let mut r = Reader::new(payload);
+    let proto = r.u16()?;
+    let ok = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => return Err(wire_err(format!("invalid hello-ack flag {other}"))),
+    };
+    let message = get_str(&mut r)?;
+    r.finish()?;
+    Ok(HelloAck { proto, ok, message })
+}
+
+/// A complete acknowledgement frame, ready to write.
+pub fn hello_ack_frame(a: &HelloAck) -> Result<Vec<u8>> {
+    frame(KIND_HELLO_ACK, encode_hello_ack(a))
+}
+
+/// Serialize a dataset block: `block.rows` points starting at global point
+/// index `offset` (no frame header).
+pub fn encode_data_block(offset: usize, block: &Matrix) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_usize(&mut b, offset);
+    put_matrix(&mut b, block);
+    b
+}
+
+/// A complete dataset-block frame, ready to write.
+pub fn data_frame(offset: usize, block: &Matrix) -> Result<Vec<u8>> {
+    frame(KIND_DATA, encode_data_block(offset, block))
+}
+
+/// Deserialize a dataset block into `(offset, points)`.
+pub fn decode_data_block(payload: &[u8]) -> Result<(usize, Matrix)> {
+    let mut r = Reader::new(payload);
+    let offset = r.usize()?;
+    let block = get_matrix(&mut r)?;
+    r.finish()?;
+    Ok((offset, block))
 }
 
 // ---------------------------------------------------------------------------
@@ -514,9 +770,15 @@ pub fn reply_frame(
     }
 }
 
-/// Read one frame: `(kind, payload)`. Fails with a typed error on EOF,
-/// bad magic, version mismatch or an oversized length.
-pub fn read_frame(r: &mut impl Read) -> Result<(u16, Vec<u8>)> {
+/// Read one frame without judging its version: `(version, kind, payload)`.
+/// Fails with a typed error on EOF, bad magic or an oversized length.
+///
+/// This exists for the two handshake reads — the peer's first frame and
+/// the master's ack read — where a *foreign* version must still be parsed
+/// far enough to report it (the `Hello`/`HelloAck` payload layout is the
+/// frozen negotiation anchor across versions). Everything mid-session uses
+/// [`read_frame`], which rejects a foreign version outright.
+pub fn read_frame_any_version(r: &mut impl Read) -> Result<(u16, u16, Vec<u8>)> {
     let mut head = [0u8; HEADER_LEN];
     r.read_exact(&mut head)
         .map_err(|e| wire_err(format!("truncated frame header: {e}")))?;
@@ -527,15 +789,22 @@ pub fn read_frame(r: &mut impl Read) -> Result<(u16, Vec<u8>)> {
     if magic != MAGIC {
         return Err(wire_err(format!("bad magic {magic:#010x}")));
     }
-    if version != VERSION {
-        return Err(wire_err(format!("wire version {version}, expected {VERSION}")));
-    }
     if len > MAX_FRAME {
         return Err(wire_err(format!("oversized frame: {len} bytes")));
     }
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload)
         .map_err(|e| wire_err(format!("truncated frame payload: {e}")))?;
+    Ok((version, kind, payload))
+}
+
+/// Read one frame: `(kind, payload)`. Fails with a typed error on EOF,
+/// bad magic, version mismatch or an oversized length.
+pub fn read_frame(r: &mut impl Read) -> Result<(u16, Vec<u8>)> {
+    let (version, kind, payload) = read_frame_any_version(r)?;
+    if version != VERSION {
+        return Err(wire_err(format!("wire version {version}, expected {VERSION}")));
+    }
     Ok((kind, payload))
 }
 

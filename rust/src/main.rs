@@ -3,6 +3,8 @@
 //! Subcommands:
 //!
 //! * `run`       — run OCC DP-means / OFL / BP-means end to end
+//! * `worker`    — serve the compute/validator peer loop for a remote
+//!   coordinator (the multi-host building block; see the README runbook)
 //! * `gen-data`  — generate a synthetic dataset to an `.occb` file
 //! * `simulate`  — the §4.1 first-iteration rejection sweeps (Fig 3 / 6)
 //! * `scaling`   — the §4.2 normalized-runtime scaling experiment (Fig 4)
@@ -46,6 +48,17 @@ fn app() -> App {
                 .flag("scheduler", "bsp | pipelined", Some("bsp"))
                 .flag("transport", "inproc | tcp", Some("inproc"))
                 .flag("validator-shards", "validator peers (0 = procs/2, min 1)", Some("0"))
+                .flag("peers", "comma-separated host:port of occd worker compute peers", None)
+                .flag(
+                    "validator-peers",
+                    "comma-separated host:port of occd worker validator peers",
+                    None,
+                )
+                .flag(
+                    "reconnect-attempts",
+                    "reconnect budget for a dropped remote peer (0 = fail fast)",
+                    Some("3"),
+                )
                 .flag("artifacts", "artifacts directory", Some("artifacts"))
                 .flag("data", "dp | bp | separable | file:<path>", Some("dp"))
                 .flag("n", "points to generate", Some("16384"))
@@ -54,6 +67,13 @@ fn app() -> App {
                 .flag("seed", "RNG seed", Some("0"))
                 .flag("metrics", "metrics JSONL path (- for stdout)", None)
                 .switch("quiet", "suppress the run report"),
+        )
+        .command(
+            Command::new("worker", "serve peer jobs for a remote occd coordinator")
+                .flag("listen", "host:port to listen on (port 0 = ephemeral)", Some("127.0.0.1:0"))
+                .flag("backend", "native | xla", Some("native"))
+                .flag("artifacts", "artifacts directory (xla backend)", Some("artifacts"))
+                .switch("persist", "keep serving new coordinator sessions after one ends"),
         )
         .command(
             Command::new("gen-data", "generate a synthetic dataset")
@@ -98,6 +118,7 @@ fn real_main(argv: &[String]) -> Result<i32> {
         }
         Dispatch::Run(cmd, parsed) => match cmd.name {
             "run" => cmd_run(&parsed),
+            "worker" => cmd_worker(&parsed),
             "gen-data" => cmd_gen_data(&parsed),
             "simulate" => cmd_simulate(&parsed),
             "scaling" => cmd_scaling(&parsed),
@@ -144,6 +165,15 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     if let Some(v) = p.get_parse::<usize>("validator-shards")? {
         cfg.validator_shards = v;
     }
+    if let Some(v) = p.get("peers") {
+        cfg.peers = occml::config::split_peer_list(v);
+    }
+    if let Some(v) = p.get("validator-peers") {
+        cfg.validator_peers = occml::config::split_peer_list(v);
+    }
+    if let Some(v) = p.get_parse::<usize>("reconnect-attempts")? {
+        cfg.reconnect_attempts = v;
+    }
     if let Some(v) = p.get("artifacts") {
         cfg.artifacts_dir = PathBuf::from(v);
     }
@@ -165,6 +195,7 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     if let Some(v) = p.get("metrics") {
         cfg.metrics_path = Some(PathBuf::from(v));
     }
+    cfg.normalize();
     cfg.validate()?;
     Ok(cfg)
 }
@@ -191,9 +222,73 @@ fn cmd_run(p: &Parsed) -> Result<i32> {
         if let Some(j) = out.summary.objective {
             println!("objective J : {j:.4}");
         }
+        if cfg.transport == TransportKind::Tcp {
+            println!("handshake   : {}", benchlib::fmt_duration(out.summary.transport.handshake_time));
+            println!("dataset     : {} bytes shipped", out.summary.transport.dataset_bytes);
+        }
         println!("wall clock  : {}", benchlib::fmt_duration(out.summary.total_time));
     }
     Ok(0)
+}
+
+/// `occd worker` — the multi-host building block: bind a listener and serve
+/// the compute/validator peer loop for remote coordinators. The coordinator
+/// decides the role and shard assignment through the `Hello` handshake and
+/// ships the dataset ranges the peer's jobs read, so a worker needs no
+/// local data and no algorithm flags: one binary, pointed at by a
+/// `peers = ["host:port", ...]` entry on the coordinator side.
+fn cmd_worker(p: &Parsed) -> Result<i32> {
+    let cfg = RunConfig {
+        backend: BackendKind::parse(p.get("backend").unwrap_or("native"))?,
+        artifacts_dir: PathBuf::from(p.get("artifacts").unwrap_or("artifacts")),
+        ..RunConfig::default()
+    };
+    let backend = driver::make_backend(&cfg)?;
+    let listen = p.get("listen").unwrap_or("127.0.0.1:0");
+    // A fixed port can sit in TIME_WAIT from a just-killed predecessor (the
+    // replacement-worker flow of the coordinator's reconnect policy), so
+    // retry EADDRINUSE for a bounded window instead of failing the spawn.
+    let listener = bind_with_retry(listen)?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| Error::config(format!("worker local_addr: {e}")))?;
+    println!("occd worker listening on {addr}");
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    let persist = p.switch("persist");
+    loop {
+        let (stream, peer) = listener
+            .accept()
+            .map_err(|e| Error::config(format!("worker accept: {e}")))?;
+        match occml::coordinator::tcp::serve_peer(stream, backend.clone()) {
+            Ok(()) => eprintln!("occd worker: session from {peer} ended"),
+            Err(e) => eprintln!("occd worker: session from {peer} failed: {e}"),
+        }
+        if !persist {
+            break;
+        }
+    }
+    Ok(0)
+}
+
+/// Bind a listener, retrying `EADDRINUSE` for ~15 s (fixed ports only
+/// matter to the reconnect flow; everything else binds first try).
+fn bind_with_retry(listen: &str) -> Result<std::net::TcpListener> {
+    let mut last: Option<std::io::Error> = None;
+    for _ in 0..60 {
+        match std::net::TcpListener::bind(listen) {
+            Ok(l) => return Ok(l),
+            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+                last = Some(e);
+                std::thread::sleep(std::time::Duration::from_millis(250));
+            }
+            Err(e) => return Err(Error::config(format!("worker bind {listen}: {e}"))),
+        }
+    }
+    Err(Error::config(format!(
+        "worker bind {listen}: {}",
+        last.expect("at least one attempt")
+    )))
 }
 
 fn cmd_gen_data(p: &Parsed) -> Result<i32> {

@@ -57,6 +57,15 @@ pub struct EpochRecord {
     /// Master-side wall-clock spent encoding jobs and decoding replies for
     /// this epoch. Zero under the in-proc transport.
     pub ser_time: Duration,
+    /// Dataset-block payload bytes shipped to peers during this epoch
+    /// (demand-driven, so mostly the first epoch that touches a range).
+    /// Zero under the in-proc transport, whose peers share the dataset.
+    pub dataset_bytes: u64,
+    /// Wall-clock spent in peer session handshakes during this epoch —
+    /// non-zero only when a dropped remote peer was re-handshaken mid-run
+    /// (the initial per-peer handshake happens before the first epoch and
+    /// is reported in [`RunSummary::transport`]).
+    pub handshake_time: Duration,
 }
 
 impl EpochRecord {
@@ -78,6 +87,8 @@ impl EpochRecord {
             ("respins", Json::Num(self.respins as f64)),
             ("wire_bytes", Json::Num(self.wire_bytes as f64)),
             ("ser_ms", Json::Num(self.ser_time.as_secs_f64() * 1e3)),
+            ("dataset_bytes", Json::Num(self.dataset_bytes as f64)),
+            ("handshake_ms", Json::Num(self.handshake_time.as_secs_f64() * 1e3)),
         ])
     }
 }
@@ -93,6 +104,10 @@ pub struct RunSummary {
     pub objective: Option<f64>,
     /// Total wall-clock.
     pub total_time: Duration,
+    /// Final cumulative transport accounting — includes pre-epoch costs
+    /// the per-epoch records cannot see (the initial per-peer handshakes at
+    /// cluster spawn). All-zero under the in-proc transport.
+    pub transport: crate::coordinator::transport::TransportStats,
 }
 
 impl RunSummary {
@@ -135,6 +150,10 @@ impl RunSummary {
     /// Total master-side serialization time (zero in-proc).
     pub fn total_ser_time(&self) -> Duration {
         self.epochs.iter().map(|e| e.ser_time).sum()
+    }
+    /// Total dataset bytes shipped across epochs (zero in-proc).
+    pub fn total_dataset_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.dataset_bytes).sum()
     }
 }
 
@@ -225,6 +244,8 @@ mod tests {
             respins: 0,
             wire_bytes: 64,
             ser_time: Duration::from_micros(250),
+            dataset_bytes: 32,
+            handshake_time: Duration::from_micros(100),
         }
     }
 
@@ -235,6 +256,7 @@ mod tests {
             final_centers: 6,
             objective: Some(12.5),
             total_time: Duration::from_millis(21),
+            transport: Default::default(),
         };
         assert_eq!(s.total_proposed(), 19);
         assert_eq!(s.total_accepted(), 6);
@@ -245,6 +267,7 @@ mod tests {
         assert_eq!(s.total_respins(), 0);
         assert_eq!(s.total_wire_bytes(), 3 * 64);
         assert_eq!(s.total_ser_time(), Duration::from_micros(750));
+        assert_eq!(s.total_dataset_bytes(), 3 * 32);
     }
 
     #[test]
@@ -260,6 +283,8 @@ mod tests {
         assert_eq!(j.get("respins").unwrap().as_usize(), Some(0));
         assert_eq!(j.get("wire_bytes").unwrap().as_usize(), Some(64));
         assert!(j.get("ser_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("dataset_bytes").unwrap().as_usize(), Some(32));
+        assert!(j.get("handshake_ms").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

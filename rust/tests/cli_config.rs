@@ -149,6 +149,70 @@ fn shipped_tcp_config_selects_tcp_transport() {
 }
 
 #[test]
+fn peers_knob_parses_from_toml_and_derives_planes() {
+    let cfg = RunConfig::from_doc(
+        &toml::parse(
+            "[run]\ntransport = \"tcp\"\npeers = [\"127.0.0.1:7101\", \"127.0.0.1:7102\"]\n\
+             validator_peers = [\"127.0.0.1:7103\"]\n",
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(cfg.peers.len(), 2);
+    assert_eq!(cfg.procs, 2, "peer list defines the compute plane");
+    assert_eq!(cfg.validator_shards, 1);
+    // Without the tcp transport the same document must be rejected.
+    assert!(RunConfig::from_doc(
+        &toml::parse("[run]\ntransport = \"inproc\"\npeers = [\"127.0.0.1:7101\"]\n").unwrap()
+    )
+    .is_err());
+}
+
+#[test]
+fn peers_flag_parses_through_cli() {
+    // Mirror the occd `run` surface: comma-separated --peers lists.
+    let app = App::new("occd", "test").command(
+        Command::new("run", "run")
+            .flag("peers", "worker addresses", None)
+            .flag("validator-peers", "validator addresses", None)
+            .flag("reconnect-attempts", "bound", Some("3")),
+    );
+    let argv: Vec<String> = [
+        "run",
+        "--peers=10.0.0.1:7100,10.0.0.2:7100",
+        "--validator-peers",
+        "10.0.0.3:7100",
+        "--reconnect-attempts=9",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(_, p) => {
+            let peers: Vec<&str> = p.get("peers").unwrap().split(',').collect();
+            assert_eq!(peers, vec!["10.0.0.1:7100", "10.0.0.2:7100"]);
+            assert_eq!(p.get("validator-peers"), Some("10.0.0.3:7100"));
+            assert_eq!(p.get_parse::<usize>("reconnect-attempts").unwrap(), Some(9));
+        }
+        _ => panic!("expected run dispatch"),
+    }
+}
+
+#[test]
+fn shipped_cluster_config_describes_a_multi_host_run() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs")
+        .join("dpmeans_cluster.toml");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let cfg = RunConfig::from_doc(&toml::parse(&text).unwrap()).unwrap();
+    assert_eq!(cfg.transport, TransportKind::Tcp);
+    assert!(!cfg.peers.is_empty(), "a cluster config lists worker addresses");
+    assert_eq!(cfg.procs, cfg.peers.len());
+    assert!(!cfg.validator_peers.is_empty());
+    assert!(cfg.reconnect_attempts >= 1, "a cluster config keeps reconnects on");
+}
+
+#[test]
 fn scheduler_knob_defaults_to_bsp() {
     // Absent from both TOML and flags → BSP (the conservative barrier).
     let cfg = RunConfig::from_doc(&toml::parse("[run]\nalgo = \"dpmeans\"\n").unwrap()).unwrap();

@@ -1,0 +1,324 @@
+//! Process-level cluster equivalence — real `occd worker` processes.
+//!
+//! Everything below spawns the cargo-built `occd` binary
+//! (`CARGO_BIN_EXE_occd`) as standalone worker processes on loopback
+//! ports, drives them from an in-test coordinator through the
+//! `peers` / `validator_peers` topology, and asserts the models are
+//! bit-identical to the in-proc transport — the full multi-host protocol
+//! (versioned `Hello` handshake, dataset block shipping, shared-payload
+//! splicing, reconnect) with a genuine process boundary under it.
+//!
+//! The chaos tests kill a worker process mid-run: with a replacement
+//! worker on the same port the coordinator must recover through its
+//! bounded reconnect/resend policy and still produce the bit-identical
+//! model; with no replacement it must surface a typed coordinator error
+//! with the wave drained — never a deadlock (the PR 2 gather-deadlock
+//! regression class).
+//!
+//! Every test body runs under a hard timeout so a hung handshake or a
+//! wedged wave fails fast instead of wedging CI.
+
+use occml::config::{Algo, DataSource, RunConfig, SchedulerKind, TransportKind};
+use occml::coordinator::{driver, Model};
+use occml::data::generators::{bp_features, dp_clusters, GenConfig};
+use occml::data::Dataset;
+use occml::runtime::native::NativeBackend;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Harness: worker processes + hard timeouts
+// ---------------------------------------------------------------------------
+
+/// A spawned `occd worker` process, killed on drop.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    /// Kill the worker immediately (the chaos tests' murder weapon).
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Spawn `occd worker --listen <listen>` and wait for its "listening on"
+/// line, which carries the resolved (possibly ephemeral) address.
+fn spawn_worker_on(listen: &str, persist: bool) -> WorkerProc {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_occd"));
+    cmd.args(["worker", "--listen", listen]).stdout(Stdio::piped()).stderr(Stdio::null());
+    if persist {
+        cmd.arg("--persist");
+    }
+    let mut child = cmd.spawn().expect("spawn occd worker");
+    let stdout = child.stdout.take().expect("worker stdout piped");
+    let mut line = String::new();
+    BufReader::new(stdout)
+        .read_line(&mut line)
+        .expect("read the worker's listening line");
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .unwrap_or_else(|| panic!("unparseable worker banner: {line:?}"))
+        .to_string();
+    assert!(addr.contains(':'), "worker banner did not end in an address: {line:?}");
+    WorkerProc { child, addr }
+}
+
+fn spawn_worker(persist: bool) -> WorkerProc {
+    spawn_worker_on("127.0.0.1:0", persist)
+}
+
+/// Run a test body on a watchdog: panic (failing the test fast) if it does
+/// not finish within `secs`. A timed-out body leaks its thread and worker
+/// children until the test process exits — the cost of failing fast
+/// instead of wedging CI on a hung handshake.
+fn with_timeout<T: Send + 'static>(
+    secs: u64,
+    name: &'static str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            let _ = t.join();
+            v
+        }
+        Err(_) => panic!("{name}: timed out after {secs}s — hung handshake or wedged wave"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run plumbing
+// ---------------------------------------------------------------------------
+
+fn gen_data(algo: Algo, n: usize, seed: u64) -> Arc<Dataset> {
+    let gen = GenConfig { n, dim: 8, theta: 1.0, seed };
+    Arc::new(match algo {
+        Algo::BpMeans => bp_features(&gen),
+        _ => dp_clusters(&gen),
+    })
+}
+
+fn base_cfg(algo: Algo, data: &Dataset, procs: usize, block: usize, seed: u64) -> RunConfig {
+    RunConfig {
+        algo,
+        lambda: 1.0,
+        procs,
+        block,
+        iterations: if algo == Algo::Ofl { 1 } else { 2 },
+        bootstrap_div: if algo == Algo::Ofl { 0 } else { 16 },
+        validator_shards: 1,
+        seed,
+        source: match algo {
+            Algo::BpMeans => DataSource::BpFeatures,
+            _ => DataSource::DpClusters,
+        },
+        n: data.len(),
+        dim: data.dim(),
+        ..RunConfig::default()
+    }
+}
+
+fn run(cfg: &RunConfig, data: &Arc<Dataset>) -> occml::Result<driver::RunOutput> {
+    driver::run_with(cfg, data.clone(), Arc::new(NativeBackend::new()))
+}
+
+/// Bit-exact model comparison (no tolerance: serializability is exact).
+fn assert_models_identical(a: &Model, b: &Model, ctx: &str) {
+    match (a, b) {
+        (Model::Dp(x), Model::Dp(y)) => {
+            assert_eq!(x.centers.data, y.centers.data, "{ctx}: centers");
+            assert_eq!(x.assignments, y.assignments, "{ctx}: assignments");
+            assert_eq!(x.created_per_pass, y.created_per_pass, "{ctx}: created_per_pass");
+        }
+        (Model::Ofl(x), Model::Ofl(y)) => {
+            assert_eq!(x.centers.data, y.centers.data, "{ctx}: facilities");
+            assert_eq!(x.assignments, y.assignments, "{ctx}: assignments");
+            assert_eq!(x.opened_by, y.opened_by, "{ctx}: opened_by");
+        }
+        (Model::Bp(x), Model::Bp(y)) => {
+            assert_eq!(x.features.data, y.features.data, "{ctx}: features");
+            assert_eq!(x.assignments, y.assignments, "{ctx}: assignments");
+            assert_eq!(x.created_per_pass, y.created_per_pass, "{ctx}: created_per_pass");
+        }
+        _ => panic!("{ctx}: model kinds differ"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence sweep: 2 worker processes + 1 validator process
+// ---------------------------------------------------------------------------
+
+/// The acceptance sweep: every algorithm under both schedulers, computed by
+/// real worker processes, must reproduce the in-proc model bit for bit —
+/// and the transport must account handshakes and dataset shipping.
+#[test]
+fn process_workers_bitidentical_with_inproc_across_algos_and_schedulers() {
+    with_timeout(300, "process equivalence sweep", || {
+        // Persistent workers serve one session per run, sequentially.
+        let w1 = spawn_worker(true);
+        let w2 = spawn_worker(true);
+        let v1 = spawn_worker(true);
+        for algo in [Algo::DpMeans, Algo::Ofl, Algo::BpMeans] {
+            let seed = 83;
+            let data = gen_data(algo, 420, seed);
+            let reference = run(&base_cfg(algo, &data, 2, 21, seed), &data).unwrap();
+            for scheduler in [SchedulerKind::Bsp, SchedulerKind::Pipelined] {
+                let cfg = RunConfig {
+                    transport: TransportKind::Tcp,
+                    scheduler,
+                    peers: vec![w1.addr.clone(), w2.addr.clone()],
+                    validator_peers: vec![v1.addr.clone()],
+                    reconnect_attempts: 4,
+                    ..base_cfg(algo, &data, 2, 21, seed)
+                };
+                cfg.validate().expect("process topology config");
+                let out = run(&cfg, &data).unwrap();
+                let ctx = format!("{algo:?} {scheduler:?} over worker processes");
+                assert_models_identical(&reference.model, &out.model, &ctx);
+                let stats = &out.summary.transport;
+                assert!(stats.wire_bytes > 0, "{ctx}: wire traffic must be accounted");
+                assert!(
+                    stats.handshake_time > Duration::ZERO,
+                    "{ctx}: handshakes must be accounted"
+                );
+                assert!(
+                    stats.dataset_bytes > 0,
+                    "{ctx}: workers receive their point ranges over the wire"
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Chaos: kill a worker process mid-run
+// ---------------------------------------------------------------------------
+
+/// Kill a worker mid-run and stand up a replacement on the same port: the
+/// coordinator must recover through its bounded reconnect/resend policy
+/// and still produce the bit-identical model. (If the run happens to beat
+/// the kill on a fast machine, the assertions still hold — the interesting
+/// schedule is killed-mid-wave, which the workload size makes the common
+/// case.)
+#[test]
+fn chaos_killed_worker_recovers_via_replacement_on_same_port() {
+    with_timeout(240, "chaos recovery", || {
+        let w1 = spawn_worker(true);
+        let mut victim = spawn_worker(true);
+        let seed = 29;
+        let data = gen_data(Algo::DpMeans, 12_000, seed);
+        // Many small epochs: the kill lands between waves or mid-wave, both
+        // of which must be recoverable.
+        let reference = run(&base_cfg(Algo::DpMeans, &data, 2, 64, seed), &data).unwrap();
+        let cfg = RunConfig {
+            transport: TransportKind::Tcp,
+            peers: vec![w1.addr.clone(), victim.addr.clone()],
+            validator_peers: vec![],
+            // Generous bound: the replacement needs its predecessor's port,
+            // which can sit in TIME_WAIT for a moment.
+            reconnect_attempts: 40,
+            ..base_cfg(Algo::DpMeans, &data, 2, 64, seed)
+        };
+        let victim_addr = victim.addr.clone();
+        let run_data = data.clone();
+        let handle = std::thread::spawn(move || run(&cfg, &run_data));
+        std::thread::sleep(Duration::from_millis(200));
+        victim.kill();
+        let _replacement = spawn_worker_on(&victim_addr, true);
+        let out = handle
+            .join()
+            .expect("coordinator thread")
+            .expect("run must recover via the replacement worker");
+        assert_models_identical(
+            &reference.model,
+            &out.model,
+            "killed + replaced worker process",
+        );
+    });
+}
+
+/// Kill a worker with no replacement: the run must fail with a typed
+/// coordinator error naming the reconnect bound, with the wave drained —
+/// the with_timeout harness turns a deadlock into a fast failure.
+#[test]
+fn chaos_killed_worker_without_replacement_types_out_not_deadlocks() {
+    with_timeout(180, "chaos typed error", || {
+        let w1 = spawn_worker(true);
+        let mut victim = spawn_worker(true);
+        let seed = 31;
+        let data = gen_data(Algo::DpMeans, 12_000, seed);
+        let cfg = RunConfig {
+            transport: TransportKind::Tcp,
+            peers: vec![w1.addr.clone(), victim.addr.clone()],
+            validator_peers: vec![],
+            reconnect_attempts: 2,
+            ..base_cfg(Algo::DpMeans, &data, 2, 64, seed)
+        };
+        let run_data = data.clone();
+        let handle = std::thread::spawn(move || run(&cfg, &run_data));
+        std::thread::sleep(Duration::from_millis(200));
+        victim.kill();
+        match handle.join().expect("coordinator thread") {
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("reconnect") || msg.contains("unreachable"),
+                    "error must name the bounded reconnect policy: {msg}"
+                );
+            }
+            // Only reachable if the whole run finished in under the kill
+            // delay; nothing to assert about failure handling then, but
+            // the run must at least have been correct.
+            Ok(out) => {
+                let reference =
+                    run(&base_cfg(Algo::DpMeans, &data, 2, 64, seed), &data).unwrap();
+                assert_models_identical(&reference.model, &out.model, "run beat the kill");
+            }
+        }
+    });
+}
+
+/// Worker processes survive protocol garbage: a raw connection that sends
+/// a non-hello frame is rejected without taking the worker down (persist
+/// mode), and a real session still works afterwards.
+#[test]
+fn worker_process_rejects_garbage_and_keeps_serving() {
+    with_timeout(120, "worker garbage rejection", || {
+        use std::io::Write as _;
+        let w = spawn_worker(true);
+        // Session 1: garbage bytes (not even a frame header).
+        {
+            let mut s = std::net::TcpStream::connect(&w.addr).unwrap();
+            s.write_all(b"definitely not an OCCM frame").unwrap();
+        } // dropped: the worker's session errors out, the process persists
+        // Session 2: a real run against the same worker.
+        let seed = 7;
+        let data = gen_data(Algo::DpMeans, 300, seed);
+        let reference = run(&base_cfg(Algo::DpMeans, &data, 1, 30, seed), &data).unwrap();
+        let cfg = RunConfig {
+            transport: TransportKind::Tcp,
+            peers: vec![w.addr.clone()],
+            validator_peers: vec![],
+            reconnect_attempts: 4,
+            ..base_cfg(Algo::DpMeans, &data, 1, 30, seed)
+        };
+        let out = run(&cfg, &data).unwrap();
+        assert_models_identical(&reference.model, &out.model, "after a garbage session");
+    });
+}

@@ -342,6 +342,216 @@ fn trailing_bytes_and_unknown_tags_are_rejected() {
     assert!(err.contains("unknown job tag"), "{err}");
 }
 
+// ---------------------------------------------------------------------------
+// Handshake frames
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_hello_roundtrips_for_both_roles() {
+    Prop::new("hello wire round trip").cases(40).check(|g| {
+        let hello = wire::Hello {
+            proto: wire::VERSION,
+            role: if g.bool() { wire::PeerRole::Compute } else { wire::PeerRole::Validate },
+            peer_id: g.rng().next_u64() as u32,
+            peers_in_plane: g.rng().next_u64() as u32,
+            n: g.rng().next_u64() >> 20,
+            dim: g.usize_in(1, 4096) as u64,
+        };
+        let back = wire::decode_hello(&wire::encode_hello(&hello)).map_err(|e| e.to_string())?;
+        if back == hello {
+            Ok(())
+        } else {
+            Err(format!("hello did not round-trip: {back:?} != {hello:?}"))
+        }
+    });
+}
+
+#[test]
+fn hello_protocol_version_mismatch_is_rejected_typed() {
+    let hello = wire::Hello {
+        proto: wire::VERSION + 1,
+        role: wire::PeerRole::Compute,
+        peer_id: 0,
+        peers_in_plane: 1,
+        n: 10,
+        dim: 2,
+    };
+    let err = wire::decode_hello(&wire::encode_hello(&hello)).unwrap_err().to_string();
+    assert!(err.contains("protocol version"), "{err}");
+    assert!(err.contains(&format!("{}", wire::VERSION + 1)), "names the bad version: {err}");
+    // The frame header's version check also rejects foreign frames.
+    let mut frame = wire::hello_frame(&wire::Hello { proto: wire::VERSION, ..hello }).unwrap();
+    frame[4] ^= 0x01;
+    let err = wire::read_frame(&mut frame.as_slice()).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+    // ... but the handshake's version-tolerant read still parses the frame
+    // far enough to *report* the foreign version — this is what lets a
+    // peer send a typed rejection ack instead of hanging up silently.
+    let (version, kind, payload) =
+        wire::read_frame_any_version(&mut frame.as_slice()).unwrap();
+    assert_eq!(version, wire::VERSION ^ 0x01);
+    assert_eq!(kind, wire::KIND_HELLO);
+    assert!(!payload.is_empty());
+    // Bad magic and oversized lengths stay fatal even version-tolerantly.
+    let mut bad = frame.clone();
+    bad[0] ^= 0xFF;
+    assert!(wire::read_frame_any_version(&mut bad.as_slice()).is_err());
+}
+
+#[test]
+fn hello_ack_roundtrips_including_rejections_and_foreign_versions() {
+    for (proto, ok, message) in [
+        (wire::VERSION, true, String::new()),
+        (wire::VERSION, false, "job range not covered".to_string()),
+        // A foreign version must still decode: the master reports it.
+        (wire::VERSION + 9, false, "wire: hello protocol version mismatch".to_string()),
+    ] {
+        let ack = wire::HelloAck { proto, ok, message };
+        let payload = wire::encode_hello_ack(&ack);
+        let back = wire::decode_hello_ack(wire::KIND_HELLO_ACK, &payload).unwrap();
+        assert_eq!(back, ack);
+    }
+    // Wrong kind and corrupt flags are typed errors.
+    assert!(wire::decode_hello_ack(wire::KIND_JOB, &[]).is_err());
+    let mut payload =
+        wire::encode_hello_ack(&wire::HelloAck { proto: wire::VERSION, ok: true, message: String::new() });
+    payload[2] = 7; // the ok flag
+    assert!(wire::decode_hello_ack(wire::KIND_HELLO_ACK, &payload).is_err());
+}
+
+#[test]
+fn truncated_hello_errors_at_every_cut_point() {
+    let hello = wire::Hello {
+        proto: wire::VERSION,
+        role: wire::PeerRole::Validate,
+        peer_id: 3,
+        peers_in_plane: 8,
+        n: 1000,
+        dim: 16,
+    };
+    let payload = wire::encode_hello(&hello);
+    for cut in 0..payload.len() {
+        assert!(wire::decode_hello(&payload[..cut]).is_err(), "cut at {cut} must fail");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dataset-block frames
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dataset_blocks_roundtrip_bitexactly_including_empty() {
+    Prop::new("dataset block round trip").cases(40).check(|g| {
+        let block = nasty_matrix(g, 10, 6); // rows may be 0: the empty block
+        let offset = g.usize_in(0, 1 << 20);
+        let payload = wire::encode_data_block(offset, &block);
+        let (off2, back) = wire::decode_data_block(&payload).map_err(|e| e.to_string())?;
+        if off2 == offset && mats_eq(&block, &back) {
+            Ok(())
+        } else {
+            Err("dataset block did not round-trip bit-exactly".to_string())
+        }
+    });
+}
+
+#[test]
+fn truncated_dataset_blocks_error_cleanly() {
+    let block = Matrix { rows: 2, cols: 3, data: vec![1.0, f32::NAN, -0.0, 2.0, 3.0, 4.0] };
+    let payload = wire::encode_data_block(40, &block);
+    for cut in 0..payload.len() {
+        assert!(wire::decode_data_block(&payload[..cut]).is_err(), "cut at {cut} must fail");
+    }
+    // Trailing bytes are rejected too.
+    let mut long = payload.clone();
+    long.push(0);
+    assert!(wire::decode_data_block(&long).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Shared-payload splicing
+// ---------------------------------------------------------------------------
+
+/// The satellite's perf assertion: one wave's shared snapshot is encoded
+/// once, the frames are byte-identical to per-job encoding, and the
+/// encoder-effort saving is real (the spliced share dominates when the
+/// snapshot dwarfs the per-job fields).
+#[test]
+fn wave_splicing_is_byte_identical_and_saves_reencoding() {
+    let mut centers = Matrix::zeros(0, 32);
+    for i in 0..64 {
+        centers.push_row(&vec![i as f32; 32]);
+    }
+    let centers = Arc::new(centers);
+    let jobs: Vec<Job> = (0..8)
+        .map(|w| Job::Nearest { range: w * 100..(w + 1) * 100, centers: centers.clone() })
+        .collect();
+    let wave = wire::job_frames(&jobs).unwrap();
+    assert_eq!(wave.frames.len(), 8);
+    for (job, frame) in jobs.iter().zip(&wave.frames) {
+        assert_eq!(frame, &wire::job_frame(job).unwrap(), "spliced frame must be byte-identical");
+    }
+    assert!(wave.spliced_payload_bytes > 0, "the shared snapshot must be spliced");
+    // 8 jobs share one 64x32 matrix: 7 of 8 embeddings are splices, so the
+    // fresh share is under a quarter of the total payload.
+    let total = wave.fresh_payload_bytes + wave.spliced_payload_bytes;
+    assert!(
+        wave.fresh_payload_bytes * 4 < total,
+        "fresh {} of {total} — splicing saved too little",
+        wave.fresh_payload_bytes
+    );
+}
+
+#[test]
+fn wave_splicing_shares_suffstats_assignments_and_paircache_vectors() {
+    let assignments = Arc::new(vec![0u32; 4096]);
+    let jobs: Vec<Job> = (0..4)
+        .map(|w| Job::SuffStats {
+            range: w * 1024..(w + 1) * 1024,
+            assignments: assignments.clone(),
+            k: 3,
+        })
+        .collect();
+    let wave = wire::job_frames(&jobs).unwrap();
+    for (job, frame) in jobs.iter().zip(&wave.frames) {
+        assert_eq!(frame, &wire::job_frame(job).unwrap());
+    }
+    assert!(wave.spliced_payload_bytes > wave.fresh_payload_bytes);
+
+    let vectors = Arc::new(Matrix { rows: 50, cols: 8, data: vec![0.5; 400] });
+    let jobs: Vec<Job> = (0..3)
+        .map(|v| Job::PairCache { vectors: vectors.clone(), shards: vec![vec![v as u32]] })
+        .collect();
+    let wave = wire::job_frames(&jobs).unwrap();
+    for (job, frame) in jobs.iter().zip(&wave.frames) {
+        assert_eq!(frame, &wire::job_frame(job).unwrap());
+    }
+    assert!(wave.spliced_payload_bytes > 0);
+}
+
+#[test]
+fn wave_splicing_does_not_conflate_distinct_payloads() {
+    // Same shapes, different allocations: nothing may be spliced across
+    // them, and each frame must carry its own bytes.
+    let a = Arc::new(Matrix { rows: 2, cols: 2, data: vec![1.0, 2.0, 3.0, 4.0] });
+    let b = Arc::new(Matrix { rows: 2, cols: 2, data: vec![5.0, 6.0, 7.0, 8.0] });
+    let jobs = vec![
+        Job::Nearest { range: 0..10, centers: a.clone() },
+        Job::Nearest { range: 10..20, centers: b.clone() },
+    ];
+    let wave = wire::job_frames(&jobs).unwrap();
+    assert_eq!(wave.spliced_payload_bytes, 0, "distinct matrices share nothing");
+    for (job, frame) in jobs.iter().zip(&wave.frames) {
+        assert_eq!(frame, &wire::job_frame(job).unwrap());
+        let (kind, payload) = wire::read_frame(&mut frame.as_slice()).unwrap();
+        assert_eq!(kind, wire::KIND_JOB);
+        let Job::Nearest { centers, .. } = wire::decode_job(&payload).unwrap() else {
+            panic!("wrong job kind");
+        };
+        let Job::Nearest { centers: want, .. } = job else { panic!() };
+        assert_eq!(centers.data, want.data);
+    }
+}
+
 #[test]
 fn corrupt_job_invariants_are_rejected() {
     // Inverted range.
