@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""CI wire-byte regression gate for benches/schedulers.rs.
+
+Usage: check_bench.py BENCH_schedulers.json schedulers_baseline.json
+
+Reads the machine-readable bench output (one row per algo x scheduler x
+transport x frugal_wire cell) and gates the dpmeans tcp wire bytes per
+epoch against the run's own full-snapshot measurement: the baseline file
+records the expected frugal/full ratio (frugal_wire=true bytes divided by
+the frugal_wire=false bytes of the same config — the in-run stand-in for
+the pre-diet wire cost, since inproc moves zero bytes and cannot anchor a
+ratio), and the gate trips when the measured ratio exceeds twice that
+record. Byte counts are deterministic for a fixed config, so this is a
+sharp gate, not a timing-noise one.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(sys.argv[1]) as f:
+        bench = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+
+    def row(algo, transport, scheduler, frugal):
+        for r in bench["rows"]:
+            key = (r["algo"], r["transport"], r["scheduler"], r["frugal_wire"])
+            if key == (algo, transport, scheduler, frugal):
+                return r
+        print(
+            f"missing bench row {algo}/{transport}/{scheduler}/frugal={frugal}",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+
+    frugal = row("dpmeans", "tcp", "bsp", True)
+    full = row("dpmeans", "tcp", "bsp", False)
+    ratio = frugal["wire_per_epoch"] / max(full["wire_per_epoch"], 1.0)
+    limit = 2.0 * baseline["dpmeans_tcp_wire_per_epoch_ratio_vs_full"]
+    print(
+        f"dpmeans tcp wire/ep: frugal={frugal['wire_per_epoch']:.0f} B, "
+        f"full={full['wire_per_epoch']:.0f} B, ratio={ratio:.3f} (limit {limit:.3f})"
+    )
+    if ratio > limit:
+        print(
+            f"wire-byte regression: frugal/full ratio {ratio:.3f} exceeds {limit:.3f}",
+            file=sys.stderr,
+        )
+        return 1
+    print("wire-byte gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

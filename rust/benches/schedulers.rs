@@ -1,21 +1,31 @@
-//! BSP vs pipelined scheduler × inproc vs TCP transport: wall-clock on the
-//! fig3-style workloads.
+//! BSP vs pipelined scheduler × inproc vs TCP transport: wall-clock and
+//! wire cost on the fig3-style workloads.
 //!
 //! Runs each algorithm end to end on its §4 synthetic workload under both
 //! epoch schedulers and both cluster transports, reporting total
 //! wall-clock, the master-validation time that overlapped worker compute
 //! (`validate_overlap_ms` summed over epochs), BP-means' speculative
-//! respins, and the transport overhead columns: bytes over the wire,
-//! master-side serialization time, and dataset bytes shipped per epoch
-//! (`wire/ep`, `ser/ep`, `ds/ep` — ser stays low because one wave's shared
-//! snapshot is encoded once and spliced into every peer frame). Before
-//! reporting, the bench *asserts* every scheduler/transport combination
-//! produced a bit-identical model — the speedups and overheads are only
-//! meaningful because the answer is unchanged.
+//! respins, and the transport overhead columns:
 //!
-//! The inproc rows are the PR-1 fast path (same channels, same `Arc`
-//! snapshots — the transport layer adds one virtual call per wave), so
-//! inproc bsp vs pipelined also serves as the regression reference.
+//! * `wire/ep` — bytes over the wire per epoch under the default
+//!   wire-frugal shipping (snapshot deltas + validator row subsets);
+//! * `full/ep` — the same run with `frugal_wire = false`, i.e. the PR 3
+//!   embed-everything wire shape, measured as the before/after baseline
+//!   (tcp rows only; the bench *asserts* the dpmeans diet is a strict
+//!   improvement);
+//! * `delta/ep`, `ds/ep` — snapshot-delta and dataset bytes per epoch;
+//! * `gwait` — gather idle-wait summed over epochs (the straggler tail the
+//!   out-of-order gather exposes).
+//!
+//! Before reporting, the bench *asserts* every scheduler/transport/wire
+//! combination produced a bit-identical model — the speedups and savings
+//! are only meaningful because the answer is unchanged.
+//!
+//! Besides the console table (+ CSV), the bench writes a machine-readable
+//! `target/bench-results/BENCH_schedulers.json` so the perf trajectory is
+//! tracked across PRs — one row per `(algo, scheduler, transport,
+//! frugal_wire)` cell; schema documented in the README and consumed by the
+//! CI `bench-smoke` job.
 //!
 //! Defaults keep single-machine runtime in seconds; pass `--n=…`, `--pb=…`,
 //! `--procs=…`, `--reps=…` to scale up.
@@ -23,6 +33,7 @@
 use occml::benchlib::{fmt_duration, BenchArgs, Table};
 use occml::config::{Algo, DataSource, RunConfig, SchedulerKind, TransportKind};
 use occml::coordinator::{driver, Model};
+use occml::metrics::json::{obj, Json};
 use occml::runtime::native::NativeBackend;
 use std::sync::Arc;
 use std::time::Duration;
@@ -44,6 +55,39 @@ fn models_identical(a: &Model, b: &Model) -> bool {
     }
 }
 
+/// One JSON row of `BENCH_schedulers.json` (schema 1).
+#[allow(clippy::too_many_arguments)]
+fn json_row(
+    algo: &str,
+    scheduler: SchedulerKind,
+    transport: TransportKind,
+    frugal: bool,
+    out: &driver::RunOutput,
+) -> Json {
+    let s = &out.summary;
+    let epochs = s.epochs.len().max(1);
+    obj(vec![
+        ("algo", Json::Str(algo.to_string())),
+        ("scheduler", Json::Str(scheduler.name().to_string())),
+        ("transport", Json::Str(transport.name().to_string())),
+        ("frugal_wire", Json::Bool(frugal)),
+        ("wall_ms", Json::Num(s.total_time.as_secs_f64() * 1e3)),
+        ("epochs", Json::Num(epochs as f64)),
+        ("wire_bytes", Json::Num(s.total_wire_bytes() as f64)),
+        ("unique_payload_bytes", Json::Num(s.total_unique_payload_bytes() as f64)),
+        ("delta_bytes", Json::Num(s.total_delta_bytes() as f64)),
+        ("dataset_bytes", Json::Num(s.total_dataset_bytes() as f64)),
+        ("full_snapshot_fallbacks", Json::Num(s.total_full_snapshot_fallbacks() as f64)),
+        ("wire_per_epoch", Json::Num(s.total_wire_bytes() as f64 / epochs as f64)),
+        ("delta_per_epoch", Json::Num(s.total_delta_bytes() as f64 / epochs as f64)),
+        ("ds_per_epoch", Json::Num(s.total_dataset_bytes() as f64 / epochs as f64)),
+        ("ser_ms", Json::Num(s.total_ser_time().as_secs_f64() * 1e3)),
+        ("gather_wait_ms", Json::Num(s.total_gather_wait().as_secs_f64() * 1e3)),
+        ("overlap_ms", Json::Num(s.total_overlap().as_secs_f64() * 1e3)),
+        ("respins", Json::Num(s.total_respins() as f64)),
+    ])
+}
+
 fn main() {
     let args = BenchArgs::from_env();
     let n: usize = args.get_or("n", 16_384);
@@ -62,6 +106,9 @@ fn main() {
         "\n=== scheduler × transport: N={n}, P={procs}, b={block} (Pb={}) — best of {reps} ===",
         procs * block
     );
+    // Failed invariants are collected and asserted only after the JSON
+    // artifact is written, so a failing run still ships its diagnostics.
+    let mut failures: Vec<String> = Vec::new();
     let mut table = Table::new(&[
         "algo",
         "transport",
@@ -70,11 +117,14 @@ fn main() {
         "speedup",
         "overlap_ms",
         "wire/ep",
-        "ser/ep",
+        "full/ep",
+        "delta/ep",
         "ds/ep",
+        "gwait",
         "respins",
         "identical",
     ]);
+    let mut rows: Vec<Json> = Vec::new();
 
     for (name, algo, source, lambda, iterations) in experiments {
         let base = RunConfig {
@@ -91,10 +141,11 @@ fn main() {
         };
         let data = Arc::new(driver::load_or_generate(&base).expect("generate"));
 
-        let run_best = |transport: TransportKind, kind: SchedulerKind| {
-            let cfg = RunConfig { transport, scheduler: kind, ..base.clone() };
+        let run_best = |transport: TransportKind, kind: SchedulerKind, frugal: bool, r: usize| {
+            let cfg =
+                RunConfig { transport, scheduler: kind, frugal_wire: frugal, ..base.clone() };
             let mut best: Option<driver::RunOutput> = None;
-            for _ in 0..reps {
+            for _ in 0..r {
                 let out = driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new()))
                     .expect("run");
                 let better = match &best {
@@ -110,28 +161,62 @@ fn main() {
 
         let mut reference: Option<driver::RunOutput> = None;
         for transport in [TransportKind::InProc, TransportKind::Tcp] {
-            let bsp = run_best(transport, SchedulerKind::Bsp);
-            let pip = run_best(transport, SchedulerKind::Pipelined);
-            let identical = models_identical(&bsp.model, &pip.model)
+            let bsp = run_best(transport, SchedulerKind::Bsp, true, reps);
+            let pip = run_best(transport, SchedulerKind::Pipelined, true, reps);
+            let mut identical = models_identical(&bsp.model, &pip.model)
                 && reference
                     .as_ref()
                     .map(|r| models_identical(&r.model, &bsp.model))
                     .unwrap_or(true);
-            assert!(
-                identical,
-                "{name}/{}: schedulers or transports disagree — serializability broke",
-                transport.name()
-            );
+
+            // The before/after baseline: the same tcp run with the PR 3
+            // embed-everything wire shape. Bytes are deterministic, so one
+            // rep measures them exactly.
+            let full = if transport == TransportKind::Tcp {
+                let full = run_best(transport, SchedulerKind::Bsp, false, 1);
+                identical = identical && models_identical(&bsp.model, &full.model);
+                rows.push(json_row(name, SchedulerKind::Bsp, transport, false, &full));
+                Some(full)
+            } else {
+                None
+            };
+            if !identical {
+                // Deferred: the JSON artifact must land even on a failing
+                // run — it is most valuable exactly then (CI uploads it
+                // with `if: always()`).
+                failures.push(format!(
+                    "{name}/{}: schedulers, transports or wire modes disagree — \
+                     serializability broke",
+                    transport.name()
+                ));
+            }
 
             let tb = bsp.summary.total_time;
             let tp = pip.summary.total_time;
             let overlap: Duration = pip.summary.total_overlap();
             // Transport overhead per epoch, averaged across both runs.
             let epochs = (bsp.summary.epochs.len() + pip.summary.epochs.len()).max(1);
-            let wire =
-                bsp.summary.total_wire_bytes() + pip.summary.total_wire_bytes();
-            let ser = bsp.summary.total_ser_time() + pip.summary.total_ser_time();
+            let wire = bsp.summary.total_wire_bytes() + pip.summary.total_wire_bytes();
+            let delta = bsp.summary.total_delta_bytes() + pip.summary.total_delta_bytes();
             let ds = bsp.summary.total_dataset_bytes() + pip.summary.total_dataset_bytes();
+            let gwait = bsp.summary.total_gather_wait() + pip.summary.total_gather_wait();
+            let full_per_ep = full.as_ref().map(|f| {
+                f.summary.total_wire_bytes() as f64 / f.summary.epochs.len().max(1) as f64
+            });
+            if *name == "dpmeans" {
+                // The acceptance bar: the wire diet must beat the PR 3
+                // full-snapshot numbers on the dpmeans config, strictly.
+                let frugal_per_ep =
+                    bsp.summary.total_wire_bytes() as f64 / bsp.summary.epochs.len().max(1) as f64;
+                if let Some(full_ep) = full_per_ep {
+                    if frugal_per_ep >= full_ep {
+                        failures.push(format!(
+                            "dpmeans tcp wire bytes per epoch must be strictly below the \
+                             full-snapshot baseline ({frugal_per_ep:.0} vs {full_ep:.0})"
+                        ));
+                    }
+                }
+            }
             table.row(vec![
                 (*name).to_string(),
                 transport.name().to_string(),
@@ -140,11 +225,15 @@ fn main() {
                 format!("{:.2}x", tb.as_secs_f64() / tp.as_secs_f64().max(1e-12)),
                 format!("{:.1}", overlap.as_secs_f64() * 1e3),
                 format!("{} B", wire as usize / epochs),
-                format!("{:.2} ms", ser.as_secs_f64() * 1e3 / epochs as f64),
+                full_per_ep.map(|f| format!("{f:.0} B")).unwrap_or_else(|| "-".into()),
+                format!("{} B", delta as usize / epochs),
                 format!("{} B", ds as usize / epochs),
+                format!("{:.1} ms", gwait.as_secs_f64() * 1e3),
                 pip.summary.total_respins().to_string(),
                 identical.to_string(),
             ]);
+            rows.push(json_row(name, SchedulerKind::Bsp, transport, true, &bsp));
+            rows.push(json_row(name, SchedulerKind::Pipelined, transport, true, &pip));
             if reference.is_none() {
                 reference = Some(bsp);
             }
@@ -155,9 +244,36 @@ fn main() {
     if table.write_csv(std::path::Path::new(csv)).is_ok() {
         println!("csv: {csv}");
     }
+    // Machine-readable results for cross-PR perf tracking (schema in the
+    // README; consumed by CI's bench-smoke regression gate).
+    let doc = obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("bench", Json::Str("schedulers".to_string())),
+        (
+            "params",
+            obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("pb", Json::Num((procs * block) as f64)),
+                ("procs", Json::Num(procs as f64)),
+                ("reps", Json::Num(reps as f64)),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let json_path = std::path::Path::new("target/bench-results/BENCH_schedulers.json");
+    if let Some(dir) = json_path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(json_path, doc.to_string_compact()) {
+        Ok(()) => println!("json: {}", json_path.display()),
+        Err(e) => eprintln!("json: write failed: {e}"),
+    }
     println!(
-        "(identical=true is asserted across schedulers AND transports: every path validates in \
-         the same Thm 3.1 serial order; wire/ep and ser/ep are what the tcp message boundary \
-         costs — inproc rows show 0)"
+        "(identical=true is asserted across schedulers AND transports AND wire modes: every \
+         path validates in the same Thm 3.1 serial order; wire/ep vs full/ep is what snapshot \
+         delta-shipping + validator row subsets save on the tcp message boundary — inproc rows \
+         show 0 and '-')"
     );
+    // Now fail the run if any invariant broke — with the artifact on disk.
+    assert!(failures.is_empty(), "bench invariants failed:\n{}", failures.join("\n"));
 }

@@ -226,6 +226,13 @@ pub struct RunConfig {
     /// reconnect attempts (250 ms apart) the coordinator makes before the
     /// wave surfaces a typed error. `0` fails fast on the first drop.
     pub reconnect_attempts: usize,
+    /// Wire-frugal TCP shipping (the default): snapshots travel as
+    /// versioned delta frames against each peer session's cache, and
+    /// validator peers receive only the proposal rows their conflict-key
+    /// range reads. `false` restores the embed-everything wire shape —
+    /// kept as the A/B baseline for `benches/schedulers.rs`. Either way
+    /// the model is bit-identical; only the bytes on the wire change.
+    pub frugal_wire: bool,
     /// Directory holding AOT artifacts (XLA backend).
     pub artifacts_dir: PathBuf,
     /// RNG seed.
@@ -258,6 +265,7 @@ impl Default for RunConfig {
             peers: Vec::new(),
             validator_peers: Vec::new(),
             reconnect_attempts: 3,
+            frugal_wire: true,
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 0,
             source: DataSource::DpClusters,
@@ -314,6 +322,9 @@ impl RunConfig {
         if let Some(v) = doc.get_int("run.reconnect_attempts") {
             cfg.reconnect_attempts = usize::try_from(v)
                 .map_err(|_| Error::config("run.reconnect_attempts must be ≥ 0"))?;
+        }
+        if let Some(v) = doc.get_bool("run.frugal_wire") {
+            cfg.frugal_wire = v;
         }
         if let Some(s) = doc.get_str("run.artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(s);
@@ -556,6 +567,10 @@ mod tests {
         assert_eq!(cfg.effective_validators(), 2, "0 shards means half the workers");
         let doc = toml::parse("[run]\nprocs = 1\n").unwrap();
         assert_eq!(RunConfig::from_doc(&doc).unwrap().effective_validators(), 1);
+        // Wire-frugal shipping defaults on and extracts from TOML.
+        assert!(RunConfig::default().frugal_wire);
+        let doc = toml::parse("[run]\nfrugal_wire = false\n").unwrap();
+        assert!(!RunConfig::from_doc(&doc).unwrap().frugal_wire);
         assert!(RunConfig::from_doc(&toml::parse("[run]\ntransport = \"rdma\"\n").unwrap())
             .is_err());
         assert!(RunConfig::from_doc(

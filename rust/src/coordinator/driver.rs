@@ -400,7 +400,11 @@ pub fn run_dpmeans(
                 worker_time,
                 total_time: recompute_sw.elapsed(),
                 wire_bytes: net.wire_bytes,
+                unique_payload_bytes: net.unique_payload_bytes,
+                delta_bytes: net.delta_bytes,
+                full_snapshot_fallbacks: net.full_snapshot_fallbacks,
                 ser_time: net.ser_time,
+                gather_wait_time: net.gather_wait_time,
                 dataset_bytes: net.dataset_bytes,
                 handshake_time: net.handshake_time,
                 ..Default::default()
@@ -821,7 +825,11 @@ pub fn run_bpmeans(
                 worker_time,
                 total_time: recompute_sw.elapsed(),
                 wire_bytes: net.wire_bytes,
+                unique_payload_bytes: net.unique_payload_bytes,
+                delta_bytes: net.delta_bytes,
+                full_snapshot_fallbacks: net.full_snapshot_fallbacks,
                 ser_time: net.ser_time,
+                gather_wait_time: net.gather_wait_time,
                 dataset_bytes: net.dataset_bytes,
                 handshake_time: net.handshake_time,
                 ..Default::default()

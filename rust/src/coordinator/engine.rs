@@ -72,13 +72,23 @@ pub enum Job {
     },
     /// Validation-plane job: pairwise conflict distances for a group of
     /// validator shards. Each shard is a strictly-increasing list of
-    /// positions into the `vectors` rows (the epoch's proposals in
-    /// point-index order); the peer returns every within-shard pair
-    /// distance (see [`super::validator`]).
+    /// *global* proposal positions (the epoch's proposals in point-index
+    /// order); the peer returns every within-shard pair distance keyed by
+    /// those global positions (see [`super::validator`]).
+    ///
+    /// `vectors` need not be the full proposal matrix: with row-subset
+    /// shipping the peer receives only the rows its shards read, and
+    /// `positions` maps each local row to its global proposal position
+    /// (strictly increasing). An empty `positions` means the identity map —
+    /// row `r` *is* global position `r` — which is the full-matrix form.
     PairCache {
-        /// Proposal vectors, one row per proposal, in point-index order.
+        /// Proposal vectors, one row per shipped proposal.
         vectors: Arc<Matrix>,
-        /// The shard lists (conflict-key buckets) this peer owns.
+        /// Global proposal position of each `vectors` row (strictly
+        /// increasing; empty = identity).
+        positions: Vec<u32>,
+        /// The shard lists (conflict-key buckets) this peer owns, in
+        /// global positions.
         shards: Vec<Vec<u32>>,
     },
     /// Terminate the worker thread.
@@ -313,7 +323,9 @@ pub(crate) fn run_job(
             run_bp_descend(data, backend, range, &features, sweeps)
         }
         Job::BpStats { range, z, k } => run_bp_stats(data, range, &z, k),
-        Job::PairCache { vectors, shards } => run_pair_cache(&vectors, &shards),
+        Job::PairCache { vectors, positions, shards } => {
+            run_pair_cache(&vectors, &positions, &shards)
+        }
     }
 }
 
@@ -402,19 +414,82 @@ fn run_bp_descend(
     Ok(JobOutput::BpDescend { z: out.z, k: features.rows, residuals: out.residuals, r2: out.r2 })
 }
 
-fn run_pair_cache(vectors: &Matrix, shards: &[Vec<u32>]) -> Result<JobOutput> {
+/// Validate a `PairCache` job's geometry: when `positions` is non-empty it
+/// must be a strictly increasing local→global map covering exactly the
+/// shipped rows, and every shard position must resolve to a shipped row
+/// (`< rows` under the identity map). This is the single source both the
+/// wire decoder ([`super::wire::decode_job_snap`]) and the executor run
+/// through, so the two validations cannot drift apart.
+pub(crate) fn check_pair_cache_geometry(
+    rows: usize,
+    positions: &[u32],
+    shards: &[Vec<u32>],
+) -> Result<()> {
+    if !positions.is_empty() {
+        if positions.len() != rows {
+            return Err(Error::Coordinator(format!(
+                "pair-cache positions cover {} rows, matrix has {rows}",
+                positions.len()
+            )));
+        }
+        if !positions.windows(2).all(|w| w[0] < w[1]) {
+            return Err(Error::Coordinator(
+                "pair-cache positions are not strictly increasing".into(),
+            ));
+        }
+    }
     for shard in shards {
         for &p in shard {
-            if p as usize >= vectors.rows {
+            let ok = if positions.is_empty() {
+                (p as usize) < rows
+            } else {
+                positions.binary_search(&p).is_ok()
+            };
+            if !ok {
                 return Err(Error::Coordinator(format!(
-                    "pair-cache position {p} out of range ({} proposals)",
-                    vectors.rows
+                    "pair-cache position {p} not among the {rows} shipped rows"
                 )));
             }
         }
     }
+    Ok(())
+}
+
+/// Compute a `PairCache` job: resolve the shards' *global* positions to
+/// local `vectors` rows (identity when `positions` is empty), compute every
+/// within-shard pair distance, and report the pairs keyed by their global
+/// positions again. The local→global map is strictly increasing, so the
+/// peer's sorted-by-`(a, b)` output order — and every distance bit — is
+/// identical whether the peer received the full matrix or just its subset.
+fn run_pair_cache(
+    vectors: &Matrix,
+    positions: &[u32],
+    shards: &[Vec<u32>],
+) -> Result<JobOutput> {
+    check_pair_cache_geometry(vectors.rows, positions, shards)?;
+    // Infallible after the geometry check above.
+    let to_local = |p: u32| -> u32 {
+        if positions.is_empty() {
+            p
+        } else {
+            positions.binary_search(&p).expect("position validated above") as u32
+        }
+    };
+    let local_shards: Vec<Vec<u32>> = shards
+        .iter()
+        .map(|s| s.iter().map(|&p| to_local(p)).collect())
+        .collect();
     let rows: Vec<&[f32]> = (0..vectors.rows).map(|r| vectors.row(r)).collect();
-    Ok(JobOutput::PairCache { pairs: super::validator::shard_pairs_sorted(&rows, shards) })
+    let mut pairs = super::validator::shard_pairs_sorted(&rows, &local_shards);
+    if !positions.is_empty() {
+        // Monotone remap: local (a, b) order is global (a, b) order, so the
+        // sorted invariant survives untouched.
+        for p in pairs.iter_mut() {
+            p.0 = positions[p.0 as usize];
+            p.1 = positions[p.1 as usize];
+        }
+    }
+    Ok(JobOutput::PairCache { pairs })
 }
 
 fn run_bp_stats(
@@ -670,8 +745,12 @@ mod tests {
         vectors.push_row(&[0.0, 1.0]);
         let vectors = Arc::new(vectors);
         let jobs = vec![
-            Job::PairCache { vectors: vectors.clone(), shards: vec![vec![0, 1, 2]] },
-            Job::PairCache { vectors: vectors.clone(), shards: vec![] },
+            Job::PairCache {
+                vectors: vectors.clone(),
+                positions: vec![],
+                shards: vec![vec![0, 1, 2]],
+            },
+            Job::PairCache { vectors: vectors.clone(), positions: vec![], shards: vec![] },
         ];
         let (outs, _) = pool.scatter_gather(jobs).unwrap();
         let JobOutput::PairCache { pairs } = &outs[0] else { panic!("wrong output kind") };
@@ -683,11 +762,83 @@ mod tests {
         assert!(pairs.is_empty());
     }
 
+    /// A row-subset job (only the referenced rows shipped, plus the
+    /// local→global position map) must produce the exact pairs of the
+    /// full-matrix job — same global keys, same distance bits.
+    #[test]
+    fn pair_cache_row_subset_matches_full_matrix() {
+        let (_, pool) = pool(10, 2);
+        let mut full = Matrix::zeros(0, 2);
+        for i in 0..6 {
+            full.push_row(&[i as f32 * 1.5, (i * i) as f32 * 0.25]);
+        }
+        let full = Arc::new(full);
+        // Shards reference global positions {1, 3, 4} and {0, 5}.
+        let shards = vec![vec![1u32, 3, 4], vec![0, 5]];
+        let jobs = vec![
+            Job::PairCache { vectors: full.clone(), positions: vec![], shards: shards.clone() },
+            Job::PairCache { vectors: full.clone(), positions: vec![], shards: vec![] },
+        ];
+        let (full_outs, _) = pool.scatter_gather(jobs).unwrap();
+        // Subset: rows {0, 1, 3, 4, 5} shipped (the union), mapped by
+        // positions.
+        let positions = vec![0u32, 1, 3, 4, 5];
+        let mut sub = Matrix::zeros(0, 2);
+        for &p in &positions {
+            sub.push_row(full.row(p as usize));
+        }
+        let jobs = vec![
+            Job::PairCache { vectors: Arc::new(sub), positions, shards },
+            Job::PairCache { vectors: full.clone(), positions: vec![], shards: vec![] },
+        ];
+        let (sub_outs, _) = pool.scatter_gather(jobs).unwrap();
+        let (JobOutput::PairCache { pairs: a }, JobOutput::PairCache { pairs: b }) =
+            (&full_outs[0], &sub_outs[0])
+        else {
+            panic!("wrong output kind");
+        };
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!((x.0, x.1), (y.0, y.1), "global pair keys must survive the remap");
+            assert_eq!(x.2.to_bits(), y.2.to_bits(), "distance bits must survive the remap");
+        }
+    }
+
     #[test]
     fn pair_cache_job_rejects_out_of_range_positions() {
         let (_, pool) = pool(10, 1);
         let vectors = Arc::new(Matrix::zeros(2, 2));
-        let jobs = vec![Job::PairCache { vectors, shards: vec![vec![0, 7]] }];
+        let jobs =
+            vec![Job::PairCache { vectors, positions: vec![], shards: vec![vec![0, 7]] }];
+        assert!(pool.scatter_gather(jobs).is_err());
+    }
+
+    #[test]
+    fn pair_cache_job_rejects_bad_position_maps() {
+        let (_, pool) = pool(10, 1);
+        // A shard position that is not among the shipped rows.
+        let vectors = Arc::new(Matrix::zeros(2, 2));
+        let jobs = vec![Job::PairCache {
+            vectors,
+            positions: vec![3, 9],
+            shards: vec![vec![3, 5]],
+        }];
+        assert!(pool.scatter_gather(jobs).is_err());
+        // Positions not strictly increasing.
+        let vectors = Arc::new(Matrix::zeros(2, 2));
+        let jobs = vec![Job::PairCache {
+            vectors,
+            positions: vec![4, 4],
+            shards: vec![vec![4]],
+        }];
+        assert!(pool.scatter_gather(jobs).is_err());
+        // Positions length disagreeing with the shipped rows.
+        let vectors = Arc::new(Matrix::zeros(2, 2));
+        let jobs = vec![Job::PairCache {
+            vectors,
+            positions: vec![1],
+            shards: vec![vec![1]],
+        }];
         assert!(pool.scatter_gather(jobs).is_err());
     }
 

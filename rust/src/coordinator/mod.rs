@@ -34,8 +34,16 @@
 //! runbook). Sessions open with a versioned `Hello` handshake; workers are
 //! shipped exactly the point ranges their jobs read; a dropped remote peer
 //! is retried under a bounded reconnect policy and poisons only its wave.
-//! [`engine`] holds the job types, the shared job executor and the
-//! in-process `WorkerPool`.
+//! The per-epoch hot path is on a wire diet (default; `frugal_wire =
+//! false` restores the embed-everything shape): epoch snapshots ship as
+//! versioned *delta frames* against a per-session snapshot cache — only
+//! the rows validation appended, with automatic full-snapshot re-base on a
+//! rewrite or a replacement peer — validator shards receive only the
+//! proposal rows their conflict-key range reads (`O(M·d)` total instead of
+//! `O(V·M·d)`), and `gather` retires replies in arrival order through a
+//! readiness-polled loop instead of fixed peer order. All three are
+//! bit-exactness-preserving by construction. [`engine`] holds the job
+//! types, the shared job executor and the in-process `WorkerPool`.
 //!
 //! ## 3. The validation plane — *what commits*
 //!

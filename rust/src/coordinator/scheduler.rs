@@ -203,7 +203,11 @@ impl Scheduler for Bsp {
                 queue_depth: 1,
                 respins: 0,
                 wire_bytes: net.wire_bytes,
+                unique_payload_bytes: net.unique_payload_bytes,
+                delta_bytes: net.delta_bytes,
+                full_snapshot_fallbacks: net.full_snapshot_fallbacks,
                 ser_time: net.ser_time,
+                gather_wait_time: net.gather_wait_time,
                 dataset_bytes: net.dataset_bytes,
                 handshake_time: net.handshake_time,
             };
@@ -300,7 +304,11 @@ impl Scheduler for Pipelined {
                 queue_depth: 1 + usize::from(speculating),
                 respins,
                 wire_bytes: net.wire_bytes,
+                unique_payload_bytes: net.unique_payload_bytes,
+                delta_bytes: net.delta_bytes,
+                full_snapshot_fallbacks: net.full_snapshot_fallbacks,
                 ser_time: net.ser_time,
+                gather_wait_time: net.gather_wait_time,
                 dataset_bytes: net.dataset_bytes,
                 handshake_time: net.handshake_time,
             };

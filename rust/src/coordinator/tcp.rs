@@ -30,16 +30,51 @@
 //! sub-ranges of [`Job::data_range`] are shipped — so each worker receives
 //! precisely the point ranges it computes (its epoch blocks plus its
 //! reduction stripe, ~2·n/P per pass), and validator peers — whose
-//! `PairCache` jobs carry their conflict-key bucket ranges inline — receive
-//! none. Shipped bytes are accounted in [`TransportStats::dataset_bytes`],
+//! `PairCache` jobs carry their proposal rows inline — receive none.
+//! Shipped bytes are accounted in [`TransportStats::dataset_bytes`],
 //! handshake wall-clock in [`TransportStats::handshake_time`].
 //!
-//! ## Shared-payload splicing
+//! ## Snapshot delta-shipping (the per-epoch wire diet)
 //!
-//! One wave's P jobs embed the same `Arc`'d snapshot/assignments;
-//! [`wire::job_frames`] encodes each shared payload once and splices it
-//! into every frame (byte-identical to per-job encoding), so master-side
-//! `ser_time` scales with the snapshot size, not P × snapshot size.
+//! Epoch snapshots (`C^{t-1}` centers / features) no longer ride inside
+//! every job frame. Each peer *session* keeps a single-entry snapshot
+//! cache — `(id, matrix)` — mirrored master-side in `Peer::snap`, and jobs
+//! reference the snapshot by id ([`wire::snapref_job_frame`]). Before a
+//! referencing frame is written, `ensure_snapshot` makes the session hold
+//! that id:
+//!
+//! * **nothing** ships when the session already holds it (a speculative
+//!   wave against unchanged state, or a resend);
+//! * a [`wire::SnapshotDelta`] ships when the held snapshot is a bit-exact
+//!   *prefix* — between epochs of a pass the committed state only appends
+//!   rows, so the delta is just the accepted rows, `O(ΔK·d)` instead of
+//!   `O(K·d)` per peer per epoch;
+//! * a full [`wire::KIND_SNAPSHOT`] frame ships otherwise — a cold cache
+//!   (first wave, or a replacement peer after a reconnect, whose handshake
+//!   clears both mirrors) or a rewritten prefix (the mean-recompute /
+//!   BP re-estimate pass boundary). Counted in
+//!   [`TransportStats::full_snapshot_fallbacks`].
+//!
+//! Reconstruction is bit-exact by construction — both directions move raw
+//! f32 bit patterns, and the peer re-bases only against the exact `(id,
+//! rows)` the master installed (any mismatch is a typed error surfaced on
+//! the next referencing job). Classifications and encodings are memoized
+//! per wave ([`SnapMemo`]), so master-side encode effort stays
+//! `O(snapshot)`, not `O(P · snapshot)` — the delta-era successor of the
+//! PR 3 splice cache, which still serves the reduction waves' shared
+//! assignment vectors. `Topology::frugal_wire = false` restores the PR 3
+//! embed-everything shape as the A/B baseline.
+//!
+//! ## Out-of-order gather
+//!
+//! `gather` no longer reads replies in fixed peer order: every live socket
+//! goes nonblocking and a small poll loop ([`wire::poll_frame`] over
+//! per-peer buffers) retires replies as they *arrive*, so one straggler no
+//! longer serializes the whole wave behind it. Outputs are still slotted
+//! by peer id — determinism is untouched. Idle time waiting on the slowest
+//! peers is accounted in [`TransportStats::gather_wait_time`];
+//! reconnect/poison semantics are unchanged (failed peers drop out of the
+//! sweep and take the same bounded recovery path afterwards).
 //!
 //! ## Failure behaviour
 //!
@@ -71,7 +106,8 @@ use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::runtime::ComputeBackend;
 use std::cell::{Cell, RefCell};
-use std::io::Write;
+use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::ops::Range;
 use std::sync::Arc;
@@ -218,6 +254,13 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
     let mut store: Option<Dataset> = None;
     let mut covered = Coverage::default();
     let mut data_err: Option<String> = None;
+    // The session's single-entry snapshot cache: the `(id, matrix)` the
+    // master last installed, which snapshot-referencing jobs resolve
+    // against and delta frames re-base. A failed install is remembered and
+    // surfaced on the next job that references a snapshot — the frame
+    // boundary stays intact either way.
+    let mut snap: Option<(u64, Arc<Matrix>)> = None;
+    let mut snap_err: Option<String> = None;
     let empty = Dataset { points: Matrix::zeros(0, 0), labels: None };
 
     loop {
@@ -232,8 +275,41 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
                     data_err = Some(e.to_string());
                 }
             }
+            wire::KIND_SNAPSHOT => match wire::decode_snapshot(&payload) {
+                Ok((id, m)) => {
+                    snap = Some((id, Arc::new(m)));
+                    snap_err = None;
+                }
+                Err(e) => snap_err = Some(e.to_string()),
+            },
+            wire::KIND_SNAPSHOT_DELTA => {
+                let applied = wire::decode_snapshot_delta(&payload).and_then(|d| {
+                    let (held, base) = snap.as_ref().ok_or_else(|| {
+                        Error::Coordinator(
+                            "snapshot delta arrived with no cached base".into(),
+                        )
+                    })?;
+                    Ok((d.id, d.apply(*held, base)?))
+                });
+                match applied {
+                    Ok((id, m)) => {
+                        snap = Some((id, Arc::new(m)));
+                        snap_err = None;
+                    }
+                    Err(e) => snap_err = Some(e.to_string()),
+                }
+            }
             wire::KIND_JOB => {
-                let job = wire::decode_job(&payload);
+                let job = wire::decode_job_snap(&payload, snap.as_ref()).map_err(|e| {
+                    // A reference that cannot resolve is most useful with
+                    // the install failure that caused it attached.
+                    match &snap_err {
+                        Some(se) => Error::Coordinator(format!(
+                            "{e}; last snapshot frame failed: {se}"
+                        )),
+                        None => e,
+                    }
+                });
                 let start = Instant::now();
                 let output = match job {
                     Ok(Job::Shutdown) => return Ok(()),
@@ -341,6 +417,12 @@ struct Peer {
     hello: Hello,
     /// Dataset ranges shipped in the current session.
     sent: Coverage,
+    /// The snapshot `(id, matrix)` the current session holds — the master's
+    /// mirror of the peer's single-entry snapshot cache, which is what
+    /// makes delta shipping sound: a delta is only sent against a base the
+    /// master itself installed. Cleared with every handshake (a replacement
+    /// peer starts empty and is re-based from a full frame).
+    snap: Option<(u64, Arc<Matrix>)>,
 }
 
 impl Peer {
@@ -353,10 +435,13 @@ impl Peer {
 }
 
 /// One retained scattered job: the encoded frame (kept for resend after a
-/// reconnect) and the dataset range it reads.
+/// reconnect), the dataset range it reads, and the snapshot its frame
+/// references (kept so a replacement session can be re-based — by a full
+/// frame — before the retained frame is resent).
 struct WaveJob {
     frame: Vec<u8>,
     need: Option<Range<usize>>,
+    snap: Option<(u64, Arc<Matrix>)>,
 }
 
 /// One plane's master-side state.
@@ -390,16 +475,92 @@ struct SpawnAccounting {
     handshake_time: Duration,
 }
 
+/// How one wave's snapshot relates to a peer's cached base — computed once
+/// per `(snapshot, base)` pair per wave and memoized, since every peer of a
+/// plane usually shares the same cache state.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SnapRelation {
+    /// Bit-identical content: nothing to ship, jobs reference the held id.
+    Identical,
+    /// The base is a bit-exact prefix: ship only the appended rows.
+    Extends,
+    /// Prefix rewritten (mean recompute), shrunk, or reshaped: full frame.
+    Unrelated,
+}
+
+/// Per-scatter memo for snapshot shipping: one classification and one
+/// encoding per distinct `(snapshot, base)` pair, spliced to every peer
+/// that shares the state — the delta-era successor of the PR 3 splice
+/// cache, so master-side encode effort stays `O(snapshot)`, not
+/// `O(P · snapshot)`.
+#[derive(Default)]
+struct SnapMemo {
+    /// Wave-assigned snapshot id per distinct `Arc` allocation.
+    ids: HashMap<usize, u64>,
+    /// `(snapshot ptr, base id)` → relation.
+    relations: HashMap<(usize, u64), SnapRelation>,
+    /// `(snapshot id)` → encoded full frame.
+    fulls: HashMap<u64, Vec<u8>>,
+    /// `(snapshot id, base id)` → encoded delta frame.
+    deltas: HashMap<(u64, u64), Vec<u8>>,
+}
+
+/// The snapshot matrix a job embeds, if any: the epoch state that frugal
+/// shipping moves as delta frames instead of embedding per job. `PairCache`
+/// vectors are deliberately *not* treated as snapshots — a fresh proposal
+/// matrix every epoch has no delta to exploit; its wire diet is the row
+/// subset built by [`super::transport::Cluster::pair_cache`].
+fn job_snapshot(job: &Job) -> Option<&Arc<Matrix>> {
+    match job {
+        Job::Nearest { centers, .. } => Some(centers),
+        Job::BpDescend { features, .. } => Some(features),
+        _ => None,
+    }
+}
+
+/// Classify how `new` relates to the `base` a peer holds, bit-exactly.
+fn snap_relation(base: &Matrix, new: &Matrix) -> SnapRelation {
+    if base.cols != new.cols && base.rows > 0 && new.rows > 0 {
+        return SnapRelation::Unrelated;
+    }
+    if base.rows > new.rows {
+        return SnapRelation::Unrelated;
+    }
+    // f32 slices compare by bits here: the matrices were built from
+    // identical computations, so any difference shows up in the bytes the
+    // wire would carry. NaN payloads never arise in committed state, and a
+    // NaN != NaN miscompare would only cost an unnecessary full ship — it
+    // can never produce a wrong delta.
+    if base.data[..] != new.data[..base.rows * base.cols] {
+        return SnapRelation::Unrelated;
+    }
+    if base.rows == new.rows {
+        SnapRelation::Identical
+    } else {
+        SnapRelation::Extends
+    }
+}
+
 /// The TCP transport.
 pub struct Tcp {
     planes: [PlaneEndpoints; 2],
     handles: Vec<JoinHandle<()>>,
     data: Arc<Dataset>,
     reconnect_attempts: usize,
+    /// Snapshot delta-shipping + validator row-subset shipping (default);
+    /// `false` restores the PR 3 embed-everything wire shape for A/B runs.
+    frugal: bool,
+    /// Monotone snapshot-id source (ids are never reused, so a stale
+    /// reference can only miss, never alias).
+    next_snap_id: Cell<u64>,
     wire_bytes: Cell<u64>,
+    unique_bytes: Cell<u64>,
     ser_time: Cell<Duration>,
     dataset_bytes: Cell<u64>,
+    delta_bytes: Cell<u64>,
+    full_snapshot_fallbacks: Cell<u64>,
     handshake_time: Cell<Duration>,
+    gather_wait: Cell<Duration>,
 }
 
 impl Tcp {
@@ -449,15 +610,35 @@ impl Tcp {
             handles,
             data,
             reconnect_attempts: topo.reconnect_attempts,
+            frugal: topo.frugal_wire,
+            next_snap_id: Cell::new(1),
             wire_bytes: Cell::new(acct.wire_bytes),
+            unique_bytes: Cell::new(acct.wire_bytes), // handshakes encode once
             ser_time: Cell::new(Duration::ZERO),
             dataset_bytes: Cell::new(0),
+            delta_bytes: Cell::new(0),
+            full_snapshot_fallbacks: Cell::new(0),
             handshake_time: Cell::new(acct.handshake_time),
+            gather_wait: Cell::new(Duration::ZERO),
         })
     }
 
+    /// Account bytes that crossed the wire *and* passed the encoder once.
     fn add_bytes(&self, n: usize) {
+        self.add_wire(n);
+        self.add_unique(n);
+    }
+
+    /// Account bytes that crossed the wire (unconditionally).
+    fn add_wire(&self, n: usize) {
         self.wire_bytes.set(self.wire_bytes.get() + n as u64);
+    }
+
+    /// Account bytes that passed the encoder exactly once (splice/delta
+    /// reuse across peers writes the same bytes again without re-encoding —
+    /// those copies count in `wire_bytes` only).
+    fn add_unique(&self, n: usize) {
+        self.unique_bytes.set(self.unique_bytes.get() + n as u64);
     }
 
     fn add_ser(&self, d: Duration) {
@@ -549,32 +730,168 @@ impl Tcp {
         Ok(())
     }
 
-    /// Ship a wave job's data needs and write its frame to the peer.
-    fn write_wave_job(&self, peer: &mut Peer, wj: &WaveJob) -> Result<()> {
+    /// Make the peer's session hold snapshot `id` (= `m`) before a frame
+    /// referencing it is written. Three outcomes, decided against the
+    /// master-side mirror of the peer's cache and memoized per wave:
+    ///
+    /// * the session already holds `id` — nothing to ship (a resend, or a
+    ///   speculative wave whose state did not change);
+    /// * the held snapshot is a bit-exact *prefix* of `m` — ship a
+    ///   [`wire::SnapshotDelta`] carrying only the appended rows;
+    /// * anything else (cold cache after a handshake, rewritten prefix) —
+    ///   ship a full [`wire::KIND_SNAPSHOT`] frame, counted in
+    ///   [`TransportStats::full_snapshot_fallbacks`].
+    ///
+    /// The peer reconstructs bit-exactly by construction (raw f32 bit
+    /// patterns both ways), and `peer.snap` is only advanced after the
+    /// write succeeded — a broken write leaves the mirror cleared, so the
+    /// next ship re-bases in full instead of trusting a half-installed
+    /// cache.
+    fn ensure_snapshot(
+        &self,
+        peer: &mut Peer,
+        id: u64,
+        m: &Arc<Matrix>,
+        memo: &mut SnapMemo,
+    ) -> Result<()> {
+        if let Some((held, _)) = &peer.snap {
+            if *held == id {
+                return Ok(());
+            }
+        }
+        let key = Arc::as_ptr(m) as usize;
+        let sw = Instant::now();
+        // Delta-eligible base, if the held snapshot is a bit-exact prefix
+        // of (or identical to) `m`. Identical content still re-installs
+        // under the new id when the job frame references it: a zero-row
+        // delta, header-sized on the wire.
+        let rebase: Option<(u64, usize)> = match &peer.snap {
+            Some((base_id, base)) => {
+                let rel = *memo
+                    .relations
+                    .entry((key, *base_id))
+                    .or_insert_with(|| snap_relation(base, m));
+                if rel == SnapRelation::Unrelated {
+                    None
+                } else {
+                    Some((*base_id, base.rows))
+                }
+            }
+            None => None,
+        };
+        // The memoized frame is *borrowed*, not cloned: the bytes encode
+        // once per wave and every peer writes the same buffer, so per-wave
+        // memcpy stays O(snapshot), not O(P · snapshot).
+        let (frame, is_delta): (&[u8], bool) = match rebase {
+            Some((base_id, base_rows)) => {
+                let frame = match memo.deltas.entry((id, base_id)) {
+                    std::collections::hash_map::Entry::Occupied(e) => &*e.into_mut(),
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        let d = m.cols;
+                        let tail = Matrix {
+                            rows: m.rows - base_rows,
+                            cols: d,
+                            data: m.data[base_rows * d..].to_vec(),
+                        };
+                        let delta = wire::SnapshotDelta { id, base_id, base_rows, tail };
+                        let bytes = wire::snapshot_delta_frame(&delta)?;
+                        self.add_unique(bytes.len());
+                        &*e.insert(bytes)
+                    }
+                };
+                (frame, true)
+            }
+            None => {
+                let frame = match memo.fulls.entry(id) {
+                    std::collections::hash_map::Entry::Occupied(e) => &*e.into_mut(),
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        let bytes = wire::snapshot_frame(id, m)?;
+                        self.add_unique(bytes.len());
+                        &*e.insert(bytes)
+                    }
+                };
+                (frame, false)
+            }
+        };
+        self.add_ser(sw.elapsed());
+        peer.snap = None; // cleared until the write proves out
+        let stream = peer
+            .stream
+            .as_mut()
+            .ok_or_else(|| Error::Coordinator("peer has no live session".into()))?;
+        stream
+            .write_all(&frame)
+            .map_err(|e| Error::Coordinator(format!("tcp snapshot ship: {e}")))?;
+        // Accounted only after the write succeeded: a broken write is
+        // retried on a fresh session by `deliver`, and counting the failed
+        // attempt would double-book the install (and break the strict
+        // `full_snapshot_fallbacks` equalities the tests assert).
+        self.add_wire(frame.len());
+        if is_delta {
+            self.delta_bytes
+                .set(self.delta_bytes.get() + (frame.len() - wire::HEADER_LEN) as u64);
+        } else {
+            self.full_snapshot_fallbacks.set(self.full_snapshot_fallbacks.get() + 1);
+        }
+        peer.snap = Some((id, m.clone()));
+        Ok(())
+    }
+
+    /// The snapshot id a peer's job frame should reference: the id its
+    /// session already holds when the content is bit-identical (no ship at
+    /// all — the speculative-wave fast path), otherwise this wave's id for
+    /// the matrix (allocated once per distinct `Arc` per wave).
+    fn snap_ref_id(&self, peer: &Peer, m: &Arc<Matrix>, memo: &mut SnapMemo) -> u64 {
+        let key = Arc::as_ptr(m) as usize;
+        if let Some((held, base)) = &peer.snap {
+            let rel = *memo
+                .relations
+                .entry((key, *held))
+                .or_insert_with(|| snap_relation(base, m));
+            if rel == SnapRelation::Identical {
+                return *held;
+            }
+        }
+        *memo.ids.entry(key).or_insert_with(|| {
+            let id = self.next_snap_id.get();
+            self.next_snap_id.set(id + 1);
+            id
+        })
+    }
+
+    /// Ship a wave job's data needs and snapshot, then write its frame.
+    fn write_wave_job(&self, peer: &mut Peer, wj: &WaveJob, memo: &mut SnapMemo) -> Result<()> {
         if let Some(need) = &wj.need {
             self.ship_missing(peer, need)?;
         }
-        self.add_bytes(wj.frame.len());
+        if let Some((id, m)) = &wj.snap {
+            self.ensure_snapshot(peer, *id, m, memo)?;
+        }
         let stream = peer
             .stream
             .as_mut()
             .ok_or_else(|| Error::Coordinator("peer has no live session".into()))?;
         stream
             .write_all(&wj.frame)
-            .map_err(|e| Error::Coordinator(format!("tcp scatter: {e}")))
+            .map_err(|e| Error::Coordinator(format!("tcp scatter: {e}")))?;
+        // Post-write, like the snapshot accounting above: a failed write is
+        // retried on a fresh session by `deliver`, and pre-write accounting
+        // would double-book the frame.
+        self.add_wire(wj.frame.len());
+        Ok(())
     }
 
     /// Deliver one wave job, reconnecting a dead remote peer (bounded) and
     /// retrying the delivery once on a fresh session.
-    fn deliver(&self, peer: &mut Peer, wj: &WaveJob) -> Result<()> {
+    fn deliver(&self, peer: &mut Peer, wj: &WaveJob, memo: &mut SnapMemo) -> Result<()> {
         if peer.stream.is_none() {
             self.reconnect(peer)?;
         }
-        match self.write_wave_job(peer, wj) {
+        match self.write_wave_job(peer, wj, memo) {
             Ok(()) => Ok(()),
             Err(_) if peer.addr.is_some() => {
                 self.reconnect(peer)?;
-                self.write_wave_job(peer, wj)
+                self.write_wave_job(peer, wj, memo)
             }
             Err(e) => Err(e),
         }
@@ -598,7 +915,8 @@ impl Tcp {
 
     /// The gather-side recovery path: the peer's stream died mid-wave.
     /// Bounded reconnect attempts; each successful session is re-shipped
-    /// the retained job's data ranges, resent the frame, and read for the
+    /// the retained job's data ranges and snapshot (a full re-base — the
+    /// replacement's cache is empty), resent the frame, and read for the
     /// reply. Jobs are deterministic, so the recovered reply is exactly
     /// what the lost peer would have sent.
     fn recover_and_resend(&self, peer: &mut Peer, wj: &WaveJob) -> Result<JobReply> {
@@ -607,8 +925,9 @@ impl Tcp {
             if attempt > 0 {
                 std::thread::sleep(RECONNECT_DELAY);
             }
+            let mut memo = SnapMemo::default();
             let res = self.open_session(peer).and_then(|()| {
-                self.write_wave_job(peer, wj)?;
+                self.write_wave_job(peer, wj, &mut memo)?;
                 self.read_reply(peer)
             });
             match res {
@@ -692,6 +1011,7 @@ fn do_handshake(peer: &mut Peer) -> Result<(usize, Duration)> {
         )));
     }
     peer.sent.clear(); // fresh session: the peer holds no data yet
+    peer.snap = None; // ... and no snapshot — the next ship re-bases in full
     Ok((bytes, sw.elapsed()))
 }
 
@@ -759,7 +1079,13 @@ fn init_plane(
             (stream, None)
         };
         stream.set_nodelay(true).ok();
-        let mut peer = Peer { stream: Some(stream), addr, hello, sent: Coverage::default() };
+        let mut peer = Peer {
+            stream: Some(stream),
+            addr,
+            hello,
+            sent: Coverage::default(),
+            snap: None,
+        };
         let (bytes, took) = do_handshake(&mut peer)?;
         acct.wire_bytes += bytes as u64;
         acct.handshake_time += took;
@@ -789,22 +1115,60 @@ impl Transport for Tcp {
                 "transport plane poisoned by a lost loopback peer".into(),
             ));
         }
-        // Encode the whole wave up front: shared Arc'd payloads (snapshot,
-        // assignments) are encoded once and spliced into each frame. An
-        // encode failure here is clean — nothing has been sent yet.
+        // Encode the whole wave up front — an encode failure here is clean,
+        // nothing has been sent yet. Two shapes:
+        //
+        // * Snapshot-bearing jobs (Nearest / BpDescend) under frugal
+        //   shipping: the matrix leaves the job frame entirely. Each peer's
+        //   frame carries a snapshot *reference*; the snapshot itself ships
+        //   separately (delta/full/not-at-all, per peer cache state) during
+        //   delivery. The reference id per peer is decided here: the held
+        //   id when the content is bit-identical to what the session
+        //   already holds, a fresh wave id otherwise.
+        // * Everything else (reduction waves, pair caches, or any wave with
+        //   frugal shipping off): the PR 3 splice path — shared Arc'd
+        //   payloads encode once and splice into each frame.
         let needs: Vec<Option<Range<usize>>> = jobs.iter().map(|j| j.data_range()).collect();
+        let mut memo = SnapMemo::default();
         let sw = Instant::now();
-        let wave = wire::job_frames(&jobs)?;
+        let snapshot_wave =
+            self.frugal && jobs.iter().any(|j| job_snapshot(j).is_some());
+        let wave_jobs: Vec<WaveJob> = if snapshot_wave {
+            let mut out = Vec::with_capacity(jobs.len());
+            let mut unique = 0usize;
+            for (job, need) in jobs.iter().zip(needs) {
+                let wj = match job_snapshot(job) {
+                    Some(m) => {
+                        let ref_id = self.snap_ref_id(&peers[out.len()], m, &mut memo);
+                        let frame = wire::snapref_job_frame(job, ref_id)?;
+                        unique += frame.len();
+                        WaveJob { frame, need, snap: Some((ref_id, m.clone())) }
+                    }
+                    None => {
+                        let frame = wire::job_frame(job)?;
+                        unique += frame.len();
+                        WaveJob { frame, need, snap: None }
+                    }
+                };
+                out.push(wj);
+            }
+            self.add_unique(unique);
+            out
+        } else {
+            let wave = wire::job_frames(&jobs)?;
+            let total: usize = wave.frames.iter().map(|f| f.len()).sum();
+            self.add_unique(total - wave.spliced_payload_bytes);
+            wave.frames
+                .into_iter()
+                .zip(needs)
+                .map(|(frame, need)| WaveJob { frame, need, snap: None })
+                .collect()
+        };
         self.add_ser(sw.elapsed());
-        *ep.wave.borrow_mut() = wave
-            .frames
-            .into_iter()
-            .zip(needs)
-            .map(|(frame, need)| WaveJob { frame, need })
-            .collect();
+        *ep.wave.borrow_mut() = wave_jobs;
         let wave_ref = ep.wave.borrow();
         for i in 0..peers.len() {
-            if let Err(e) = self.deliver(&mut peers[i], &wave_ref[i]) {
+            if let Err(e) = self.deliver(&mut peers[i], &wave_ref[i], &mut memo) {
                 drop(wave_ref);
                 self.abort_scatter(ep, &mut peers, i);
                 return Err(e);
@@ -812,11 +1176,12 @@ impl Transport for Tcp {
         }
         drop(wave_ref);
         // Frames are retained only where a resend is possible: loopback
-        // thread peers cannot be re-sessioned, so holding P extra snapshot
+        // thread peers cannot be re-sessioned, so holding extra frame
         // copies for them would buy nothing.
         for (wj, peer) in ep.wave.borrow_mut().iter_mut().zip(peers.iter()) {
             if peer.addr.is_none() {
                 wj.frame = Vec::new();
+                wj.snap = None;
             }
         }
         ep.in_flight.set(1);
@@ -853,28 +1218,104 @@ impl Transport for Tcp {
                 }
             }
         };
-        for i in 0..n {
-            match self.read_reply(&peers[i]) {
-                Ok(reply) => take(reply, &mut outputs, &mut first_err),
-                Err(_) if peers[i].addr.is_some() => {
-                    // The stream died mid-wave. The frame was retained at
-                    // scatter, so a replacement worker on the same address
-                    // can be re-handshaken, re-shipped, and handed the job
-                    // again — the wave completes as if nothing happened.
-                    match self.recover_and_resend(&mut peers[i], &wave[i]) {
-                        Ok(reply) => take(reply, &mut outputs, &mut first_err),
-                        Err(e) => {
-                            peers[i].stream = None;
-                            first_err = first_err.or(Some(e));
+        // Readiness-polled sweep: every live socket goes nonblocking and
+        // replies retire in *arrival* order, so one straggler no longer
+        // serializes the whole wave behind the fixed peer order.
+        // Determinism is untouched — outputs are slotted by peer id, and
+        // the jobs themselves are pure. Peers whose stream breaks (or
+        // arrives desynced) drop out of the sweep and are recovered —
+        // sequentially, with the same bounded reconnect/resend policy as
+        // before — once every healthy reply is in.
+        let mut pending: Vec<usize> = Vec::with_capacity(n);
+        let mut dead: Vec<(usize, Error)> = Vec::new();
+        for (i, peer) in peers.iter().enumerate() {
+            match &peer.stream {
+                Some(s) if s.set_nonblocking(true).is_ok() => pending.push(i),
+                Some(_) => dead.push((
+                    i,
+                    Error::Coordinator(format!(
+                        "{} socket rejected nonblocking mode",
+                        peer.describe()
+                    )),
+                )),
+                None => dead.push((
+                    i,
+                    Error::Coordinator(format!("{} has no live session", peer.describe())),
+                )),
+            }
+        }
+        let mut bufs: Vec<Vec<u8>> = (0..n).map(|_| Vec::new()).collect();
+        let mut idle = Duration::ZERO;
+        while !pending.is_empty() {
+            let mut progressed = false;
+            pending.retain(|&i| {
+                let peer = &peers[i];
+                let stream = peer.stream.as_ref().expect("pending peer has a stream");
+                match pump_reply(stream, &mut bufs[i]) {
+                    Ok(Some((kind, payload))) => {
+                        progressed = true;
+                        let _ = stream.set_nonblocking(false);
+                        if !bufs[i].is_empty() {
+                            // More bytes after the one reply this wave owes:
+                            // the streams are desynced — recover on a fresh
+                            // session rather than guess at reply pairing.
+                            dead.push((
+                                i,
+                                Error::Coordinator(format!(
+                                    "{} sent bytes beyond its reply frame",
+                                    peer.describe()
+                                )),
+                            ));
+                            return false;
                         }
+                        self.add_bytes(wire::HEADER_LEN + payload.len());
+                        let sw = Instant::now();
+                        let reply = wire::decode_reply(kind, &payload);
+                        self.add_ser(sw.elapsed());
+                        match reply {
+                            Ok(reply) => take(reply, &mut outputs, &mut first_err),
+                            Err(e) => dead.push((i, e)),
+                        }
+                        false
+                    }
+                    Ok(None) => true,
+                    Err(e) => {
+                        progressed = true;
+                        let _ = stream.set_nonblocking(false);
+                        dead.push((i, e));
+                        false
                     }
                 }
-                Err(e) => {
-                    // A loopback thread peer's stream broke: it cannot be
-                    // re-sessioned, so the plane is poisoned.
-                    ep.poisoned.set(true);
-                    first_err = first_err.or(Some(e));
+            });
+            if !pending.is_empty() && !progressed {
+                // Nothing readable anywhere: yield briefly instead of
+                // spinning. The sleep slices are what gather_wait_time
+                // measures — wall-clock spent waiting on the slowest peers.
+                let sw = Instant::now();
+                std::thread::sleep(Duration::from_micros(200));
+                idle += sw.elapsed();
+            }
+        }
+        self.gather_wait.set(self.gather_wait.get() + idle);
+        // Recovery pass for the peers that dropped out of the sweep.
+        for (i, err) in dead {
+            if peers[i].addr.is_some() {
+                // The frame was retained at scatter, so a replacement
+                // worker on the same address can be re-handshaken,
+                // re-based, re-shipped, and handed the job again — the
+                // wave completes as if nothing happened.
+                match self.recover_and_resend(&mut peers[i], &wave[i]) {
+                    Ok(reply) => take(reply, &mut outputs, &mut first_err),
+                    Err(e) => {
+                        peers[i].stream = None;
+                        first_err = first_err.or(Some(e));
+                    }
                 }
+            } else {
+                // A loopback thread peer's stream broke: it cannot be
+                // re-sessioned, so the plane is poisoned.
+                ep.poisoned.set(true);
+                first_err = first_err.or(Some(err));
             }
         }
         ep.in_flight.set(0);
@@ -892,9 +1333,38 @@ impl Transport for Tcp {
     fn stats(&self) -> TransportStats {
         TransportStats {
             wire_bytes: self.wire_bytes.get(),
+            unique_payload_bytes: self.unique_bytes.get(),
             ser_time: self.ser_time.get(),
             dataset_bytes: self.dataset_bytes.get(),
+            delta_bytes: self.delta_bytes.get(),
+            full_snapshot_fallbacks: self.full_snapshot_fallbacks.get(),
             handshake_time: self.handshake_time.get(),
+            gather_wait_time: self.gather_wait.get(),
+        }
+    }
+}
+
+/// Nonblocking read step for the gather sweep: drain whatever bytes the
+/// socket has into `buf` and try to pop one complete frame off it
+/// ([`wire::poll_frame`]). `Ok(None)` means "not ready yet"; a typed error
+/// means the stream is dead (EOF) or desynced (bad header).
+fn pump_reply(mut stream: &TcpStream, buf: &mut Vec<u8>) -> Result<Option<(u16, Vec<u8>)>> {
+    let mut tmp = [0u8; 64 * 1024];
+    loop {
+        // Parse first: a previous sweep may have buffered a complete frame.
+        if let Some(frame) = wire::poll_frame(buf)? {
+            return Ok(Some(frame));
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                return Err(Error::Coordinator(
+                    "peer closed its stream mid-wave".into(),
+                ))
+            }
+            Ok(k) => buf.extend_from_slice(&tmp[..k]),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::Coordinator(format!("tcp gather read: {e}"))),
         }
     }
 }
@@ -1056,12 +1526,178 @@ mod tests {
         vectors.push_row(&[1.0, 0.0]);
         let vectors = Arc::new(vectors);
         let jobs = vec![
-            Job::PairCache { vectors: vectors.clone(), shards: vec![vec![0, 1]] },
-            Job::PairCache { vectors, shards: vec![] },
+            Job::PairCache {
+                vectors: vectors.clone(),
+                positions: vec![],
+                shards: vec![vec![0, 1]],
+            },
+            Job::PairCache { vectors, positions: vec![], shards: vec![] },
         ];
         tcp.scatter(Plane::Validate, jobs).unwrap();
         tcp.gather(Plane::Validate).unwrap();
         assert_eq!(tcp.stats().dataset_bytes, 0);
+    }
+
+    /// The snapshot wire diet, end to end over real sockets: an unchanged
+    /// snapshot ships nothing, an appended snapshot ships only its delta
+    /// rows, and a rewritten snapshot falls back to a full frame — with the
+    /// returned assignments bit-identical throughout.
+    #[test]
+    fn snapshot_deltas_ship_only_appended_rows() {
+        let (data, backend) = data_and_backend(120);
+        let tcp = Tcp::spawn(data.clone(), backend, 2, 1).unwrap();
+        let mk = |centers: &Arc<Matrix>| -> Vec<Job> {
+            split_range(0..120, 2)
+                .into_iter()
+                .map(|range| Job::Nearest { range, centers: centers.clone() })
+                .collect()
+        };
+        let mut m = Matrix::zeros(0, 8);
+        m.push_row(data.point(3));
+        m.push_row(data.point(40));
+        let snap1 = Arc::new(m.clone());
+
+        // Wave 1: cold caches — one full snapshot per peer, no deltas.
+        tcp.scatter(Plane::Compute, mk(&snap1)).unwrap();
+        let (out1, _) = tcp.gather(Plane::Compute).unwrap();
+        let s1 = tcp.stats();
+        assert_eq!(s1.full_snapshot_fallbacks, 2, "one full install per cold peer");
+        assert_eq!(s1.delta_bytes, 0);
+
+        // Wave 2: identical content (fresh Arc) — nothing ships at all.
+        let snap1b = Arc::new(m.clone());
+        tcp.scatter(Plane::Compute, mk(&snap1b)).unwrap();
+        let (out2, _) = tcp.gather(Plane::Compute).unwrap();
+        let s2 = tcp.stats();
+        assert_eq!(s2.full_snapshot_fallbacks, 2, "no new full installs");
+        assert_eq!(s2.delta_bytes, 0, "identical snapshots ship no delta");
+        for (a, b) in out1.iter().zip(&out2) {
+            let (JobOutput::Nearest { idx: ia, d2: da }, JobOutput::Nearest { idx: ib, d2: db }) =
+                (a, b)
+            else {
+                panic!("wrong output kind");
+            };
+            assert_eq!(ia, ib);
+            assert_eq!(
+                da.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                db.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+            );
+        }
+
+        // Wave 3: two appended rows — delta bytes ≈ 2 rows, no new fulls.
+        m.push_row(data.point(70));
+        m.push_row(data.point(99));
+        let snap2 = Arc::new(m.clone());
+        tcp.scatter(Plane::Compute, mk(&snap2)).unwrap();
+        let (out3, _) = tcp.gather(Plane::Compute).unwrap();
+        let s3 = tcp.stats();
+        assert_eq!(s3.full_snapshot_fallbacks, 2, "append must not trigger a full ship");
+        assert!(s3.delta_bytes > 0, "appended rows must ship as a delta");
+        let per_peer = (s3.delta_bytes - s2.delta_bytes) / 2;
+        assert!(
+            per_peer < 2 * 8 * 4 + 64,
+            "delta payload ({per_peer} B/peer) must be ~2 rows, not the full matrix"
+        );
+        // The delta-reconstructed snapshot computes the exact fresh answer.
+        let inproc = Cluster::spawn(
+            TransportKind::InProc,
+            data.clone(),
+            Arc::new(NativeBackend::new()),
+            2,
+            1,
+        )
+        .unwrap();
+        let (reference, _) = inproc.scatter_gather(mk(&snap2)).unwrap();
+        for (a, b) in out3.iter().zip(&reference) {
+            let (JobOutput::Nearest { idx: ia, d2: da }, JobOutput::Nearest { idx: ib, d2: db }) =
+                (a, b)
+            else {
+                panic!("wrong output kind");
+            };
+            assert_eq!(ia, ib);
+            assert_eq!(
+                da.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                db.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+            );
+        }
+
+        // Wave 4: rewrite a prefix row (the mean-recompute shape) — the
+        // delta path must refuse and re-base from a full frame.
+        m.row_mut(0)[0] += 1.0;
+        let snap3 = Arc::new(m);
+        tcp.scatter(Plane::Compute, mk(&snap3)).unwrap();
+        tcp.gather(Plane::Compute).unwrap();
+        let s4 = tcp.stats();
+        assert_eq!(
+            s4.full_snapshot_fallbacks, 4,
+            "a rewritten prefix must fall back to full snapshots"
+        );
+        assert_eq!(s4.delta_bytes, s3.delta_bytes, "no delta for a rewrite");
+    }
+
+    /// Out-of-order gather: a straggler peer must not stop an
+    /// already-arrived reply from being retired, and the idle wait is
+    /// accounted. The slow peer here is a hand-rolled worker that sits on
+    /// its job before replying.
+    #[test]
+    fn gather_retires_replies_out_of_peer_order() {
+        let (data, backend) = data_and_backend(60);
+        // Peer 0: hand-rolled *slow* worker — handshake, then replies to
+        // its job only after a long nap.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let slow_addr = listener.local_addr().unwrap().to_string();
+        let slow = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let (kind, payload) = wire::read_frame(&mut s).unwrap();
+            assert_eq!(kind, wire::KIND_HELLO);
+            let hello = wire::decode_hello(&payload).unwrap();
+            let ack = HelloAck { proto: wire::VERSION, ok: true, message: String::new() };
+            s.write_all(&wire::hello_ack_frame(&ack).unwrap()).unwrap();
+            loop {
+                let (kind, _) = wire::read_frame(&mut s).unwrap();
+                if kind == wire::KIND_JOB {
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(400));
+            let out = Ok(JobOutput::PairCache { pairs: vec![] });
+            wire::write_reply(&mut s, hello.peer_id, Duration::ZERO, &out).unwrap();
+            // Hold the stream until the master is done with the wave.
+            let _ = wire::read_frame(&mut s);
+        });
+        // Peer 1: a real (fast) worker.
+        let (fast_addr, fast) = listener_worker(backend.clone(), 1);
+        let topo = Topology {
+            procs: 2,
+            validators: 1,
+            compute_peers: vec![],
+            validator_peers: vec![slow_addr, fast_addr],
+            reconnect_attempts: 1,
+            frugal_wire: true,
+        };
+        let tcp = Tcp::spawn_topology(data, backend, &topo).unwrap();
+        let mut vectors = Matrix::zeros(0, 2);
+        vectors.push_row(&[0.0, 0.0]);
+        vectors.push_row(&[1.0, 1.0]);
+        let vectors = Arc::new(vectors);
+        let jobs = vec![
+            Job::PairCache { vectors: vectors.clone(), positions: vec![], shards: vec![] },
+            Job::PairCache { vectors, positions: vec![], shards: vec![vec![0, 1]] },
+        ];
+        tcp.scatter(Plane::Validate, jobs).unwrap();
+        let (outs, _) = tcp.gather(Plane::Validate).unwrap();
+        // Outputs stay in peer-id order even though peer 1 replied first.
+        let JobOutput::PairCache { pairs } = &outs[0] else { panic!("wrong output kind") };
+        assert!(pairs.is_empty(), "slow peer's (empty) cache sits at slot 0");
+        let JobOutput::PairCache { pairs } = &outs[1] else { panic!("wrong output kind") };
+        assert_eq!(pairs.len(), 1, "fast peer's pair sits at slot 1");
+        assert!(
+            tcp.stats().gather_wait_time >= Duration::from_millis(100),
+            "waiting on the straggler must be accounted in gather_wait_time"
+        );
+        drop(tcp);
+        slow.join().unwrap();
+        fast.join().unwrap();
     }
 
     #[test]
@@ -1135,6 +1771,7 @@ mod tests {
             compute_peers: vec![a0, a1],
             validator_peers: vec![av],
             reconnect_attempts: 2,
+            frugal_wire: true,
         };
         let tcp = Tcp::spawn_topology(data.clone(), backend.clone(), &topo).unwrap();
         assert_eq!(tcp.peers(Plane::Compute), 2);
@@ -1211,6 +1848,7 @@ mod tests {
             compute_peers: vec![addr],
             validator_peers: vec![],
             reconnect_attempts: 8,
+            frugal_wire: true,
         };
         let tcp = Tcp::spawn_topology(data.clone(), backend, &topo).unwrap();
         let mut centers = Matrix::zeros(0, 8);
@@ -1224,6 +1862,11 @@ mod tests {
         assert!(
             tcp.stats().handshake_time > Duration::ZERO,
             "recovery re-handshakes must be accounted"
+        );
+        assert_eq!(
+            tcp.stats().full_snapshot_fallbacks,
+            2,
+            "the replacement session must be re-based from a full snapshot"
         );
         drop(tcp);
         worker.join().unwrap();
@@ -1241,6 +1884,7 @@ mod tests {
             compute_peers: vec![addr],
             validator_peers: vec![],
             reconnect_attempts: 1,
+            frugal_wire: true,
         };
         let tcp = Tcp::spawn_topology(data.clone(), backend, &topo).unwrap();
         // Kill the worker: drop the transport's only session server by

@@ -58,15 +58,32 @@ impl Plane {
 pub struct TransportStats {
     /// Bytes written to + read from the wire (frames, both directions).
     pub wire_bytes: u64,
+    /// Bytes that passed through the encoder exactly once: `wire_bytes`
+    /// minus every duplicated copy of an already-encoded payload (spliced
+    /// shared job payloads, a snapshot frame written to P sockets). The gap
+    /// between the two columns is the fan-out redundancy — what splicing
+    /// and delta-shipping save the *encoder*, as opposed to the wire.
+    pub unique_payload_bytes: u64,
     /// Master-side time spent encoding jobs and decoding replies.
     pub ser_time: Duration,
     /// Dataset-block payload bytes shipped to peers (a subset of
     /// `wire_bytes`; zero in-proc and on the validation plane, whose jobs
     /// carry their vectors inline).
     pub dataset_bytes: u64,
+    /// Snapshot-delta payload bytes shipped (a subset of `wire_bytes`):
+    /// the appended rows that replaced full per-epoch snapshot copies.
+    pub delta_bytes: u64,
+    /// Full-snapshot frames shipped because no delta was possible: a cold
+    /// peer cache (first wave, reconnected replacement) or a committed
+    /// state whose prefix was rewritten (mean recompute, BP re-estimate).
+    pub full_snapshot_fallbacks: u64,
     /// Wall-clock spent in peer session handshakes — the initial `Hello`
     /// exchange per peer at spawn, plus any reconnect re-handshakes.
     pub handshake_time: Duration,
+    /// Wall-clock the readiness-polled gather spent idle, waiting for the
+    /// next reply to become readable (zero in-proc, whose gather blocks on
+    /// a channel).
+    pub gather_wait_time: Duration,
 }
 
 impl TransportStats {
@@ -74,9 +91,17 @@ impl TransportStats {
     pub fn since(&self, earlier: &TransportStats) -> TransportStats {
         TransportStats {
             wire_bytes: self.wire_bytes.saturating_sub(earlier.wire_bytes),
+            unique_payload_bytes: self
+                .unique_payload_bytes
+                .saturating_sub(earlier.unique_payload_bytes),
             ser_time: self.ser_time.saturating_sub(earlier.ser_time),
             dataset_bytes: self.dataset_bytes.saturating_sub(earlier.dataset_bytes),
+            delta_bytes: self.delta_bytes.saturating_sub(earlier.delta_bytes),
+            full_snapshot_fallbacks: self
+                .full_snapshot_fallbacks
+                .saturating_sub(earlier.full_snapshot_fallbacks),
             handshake_time: self.handshake_time.saturating_sub(earlier.handshake_time),
+            gather_wait_time: self.gather_wait_time.saturating_sub(earlier.gather_wait_time),
         }
     }
 }
@@ -84,7 +109,7 @@ impl TransportStats {
 /// Where a cluster's peers live: per plane, a list of `host:port`
 /// addresses (standalone `occd worker` processes) or — when the list is
 /// empty — a count of loopback peers to spawn in this process.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Topology {
     /// Compute peers when `compute_peers` is empty.
     pub procs: usize,
@@ -97,10 +122,23 @@ pub struct Topology {
     pub validator_peers: Vec<String>,
     /// Bounded reconnect budget for a dropped remote peer (0 = fail fast).
     pub reconnect_attempts: usize,
+    /// Wire-frugal shipping (the default): snapshots travel as versioned
+    /// delta frames against each peer's session cache, and validator peers
+    /// receive only the proposal rows their conflict-key range reads.
+    /// `false` restores the PR 3 shape — full snapshot embedded in every
+    /// job frame, full proposal matrix to every active validator — kept as
+    /// the A/B baseline for `benches/schedulers.rs`.
+    pub frugal_wire: bool,
 }
 
 /// Default reconnect budget for dropped remote peers.
 pub const DEFAULT_RECONNECT_ATTEMPTS: usize = 3;
+
+impl Default for Topology {
+    fn default() -> Topology {
+        Topology::local(0, 0)
+    }
+}
 
 impl Topology {
     /// An all-loopback topology (every peer in this process).
@@ -111,6 +149,7 @@ impl Topology {
             compute_peers: Vec::new(),
             validator_peers: Vec::new(),
             reconnect_attempts: DEFAULT_RECONNECT_ATTEMPTS,
+            frugal_wire: true,
         }
     }
 
@@ -135,6 +174,7 @@ impl Topology {
             compute_peers: cfg.peers.clone(),
             validator_peers,
             reconnect_attempts: cfg.reconnect_attempts,
+            frugal_wire: cfg.frugal_wire,
         }
     }
 
@@ -243,6 +283,10 @@ pub struct Cluster {
     pub procs: usize,
     /// Validator-shard peers.
     pub validators: usize,
+    /// Row-subset shipping for `PairCache` jobs (see
+    /// [`Topology::frugal_wire`]): each validator peer receives only the
+    /// proposal rows its conflict-key range reads.
+    frugal: bool,
 }
 
 impl Cluster {
@@ -286,14 +330,21 @@ impl Cluster {
                 Box::new(super::tcp::Tcp::spawn_topology(data, backend, &topo)?)
             }
         };
-        Ok(Cluster { transport, procs, validators })
+        // Row subsets are a *wire* diet: in-proc peers share the proposal
+        // matrix by `Arc` at zero copy cost, so the subset build would be
+        // pure overhead there — it engages only where bytes actually move.
+        let frugal = topo.frugal_wire && kind == TransportKind::Tcp;
+        Ok(Cluster { transport, procs, validators, frugal })
     }
 
     /// Wrap an existing transport (tests / custom deployments).
-    pub fn from_transport(transport: Box<dyn Transport>) -> Cluster {
+    /// `frugal_wire` must match how the transport was built (see
+    /// [`Topology::frugal_wire`]) so the validator row-subset decision
+    /// stays consistent with the snapshot-shipping mode.
+    pub fn from_transport(transport: Box<dyn Transport>, frugal_wire: bool) -> Cluster {
         let procs = transport.peers(Plane::Compute);
         let validators = transport.peers(Plane::Validate);
-        Cluster { transport, procs, validators }
+        Cluster { transport, procs, validators, frugal: frugal_wire }
     }
 
     /// Transport name (metrics / logs).
@@ -337,11 +388,17 @@ impl Cluster {
     /// fewer than two proposals produce no pairs and are dropped from the
     /// payload, and peers left with nothing receive an empty job.
     ///
-    /// Wire-cost note: every *active* peer currently receives the full
-    /// proposal matrix (positions are global), so TCP traffic for this
-    /// step is `O(V · M · d)` per epoch. Shipping only each peer's
-    /// referenced rows plus an index remap would cut that to `O(M · d)`
-    /// total; tracked in ROADMAP under cross-machine validation.
+    /// Wire-cost note: under frugal shipping (the tcp default; in-proc
+    /// peers share the full matrix by `Arc` at zero copy cost, so the
+    /// subset build never engages there) each active
+    /// peer receives only the proposal rows its conflict-key range reads,
+    /// with a local→global position map, so the plane's TCP traffic for
+    /// this step is `O(M · d)` *total* per epoch (every proposal belongs
+    /// to exactly one bucket, every bucket to exactly one peer) instead of
+    /// the PR 3 `O(V · M · d)`. The subset rows are bit-copies and the
+    /// position map is strictly monotone, so peer outputs — global pair
+    /// keys, sorted order, distance bits — are identical to the
+    /// full-matrix form on any transport.
     pub fn pair_cache(
         &self,
         vectors: Arc<Matrix>,
@@ -363,9 +420,25 @@ impl Cluster {
             .into_iter()
             .map(|g| {
                 if g.is_empty() {
-                    Job::PairCache { vectors: empty.clone(), shards: vec![] }
+                    Job::PairCache { vectors: empty.clone(), positions: vec![], shards: vec![] }
+                } else if self.frugal {
+                    // Row subset: the union of this peer's buckets, in
+                    // global position order. Buckets partition positions,
+                    // so the union is duplicate-free.
+                    let mut positions: Vec<u32> = g.iter().flatten().copied().collect();
+                    positions.sort_unstable();
+                    debug_assert!(positions.windows(2).all(|w| w[0] < w[1]));
+                    let mut sub = Matrix {
+                        rows: 0,
+                        cols: vectors.cols,
+                        data: Vec::with_capacity(positions.len() * vectors.cols),
+                    };
+                    for &p in &positions {
+                        sub.push_row(vectors.row(p as usize));
+                    }
+                    Job::PairCache { vectors: Arc::new(sub), positions, shards: g }
                 } else {
-                    Job::PairCache { vectors: vectors.clone(), shards: g }
+                    Job::PairCache { vectors: vectors.clone(), positions: vec![], shards: g }
                 }
             })
             .collect();
@@ -455,25 +528,71 @@ mod tests {
         }
     }
 
+    /// Row-subset shipping must not change a single bit of the pair lists:
+    /// frugal and full-matrix shipping agree on both transports.
+    #[test]
+    fn pair_cache_row_subset_matches_full_shipping() {
+        let data = Arc::new(dp_clusters(&GenConfig { n: 40, dim: 8, theta: 1.0, seed: 2 }));
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new());
+        let mut vectors = Matrix::zeros(0, 3);
+        for i in 0..12 {
+            vectors.push_row(&[i as f32, (i * i) as f32 * 0.5, -(i as f32)]);
+        }
+        let vectors = Arc::new(vectors);
+        let shard_lists: Vec<Vec<u32>> =
+            vec![vec![0, 4, 8], vec![1, 5], vec![2, 6, 10, 11], vec![3], vec![7, 9]];
+        let mut results = Vec::new();
+        for kind in [TransportKind::InProc, TransportKind::Tcp] {
+            for frugal in [true, false] {
+                let topo = Topology { frugal_wire: frugal, ..Topology::local(2, 2) };
+                let c =
+                    Cluster::spawn_topology(kind, data.clone(), backend.clone(), &topo).unwrap();
+                results.push(c.pair_cache(vectors.clone(), shard_lists.clone()).unwrap());
+            }
+        }
+        for other in &results[1..] {
+            assert_eq!(results[0].len(), other.len());
+            for (a, b) in results[0].iter().zip(other) {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!((x.0, x.1), (y.0, y.1));
+                    assert_eq!(x.2.to_bits(), y.2.to_bits());
+                }
+            }
+        }
+    }
+
     #[test]
     fn transport_stats_delta() {
         let a = TransportStats {
             wire_bytes: 100,
+            unique_payload_bytes: 80,
             ser_time: Duration::from_millis(5),
             dataset_bytes: 10,
+            delta_bytes: 4,
+            full_snapshot_fallbacks: 1,
             handshake_time: Duration::from_millis(1),
+            gather_wait_time: Duration::from_millis(2),
         };
         let b = TransportStats {
             wire_bytes: 250,
+            unique_payload_bytes: 170,
             ser_time: Duration::from_millis(8),
             dataset_bytes: 70,
+            delta_bytes: 24,
+            full_snapshot_fallbacks: 3,
             handshake_time: Duration::from_millis(4),
+            gather_wait_time: Duration::from_millis(9),
         };
         let d = b.since(&a);
         assert_eq!(d.wire_bytes, 150);
+        assert_eq!(d.unique_payload_bytes, 90);
         assert_eq!(d.ser_time, Duration::from_millis(3));
         assert_eq!(d.dataset_bytes, 60);
+        assert_eq!(d.delta_bytes, 20);
+        assert_eq!(d.full_snapshot_fallbacks, 2);
         assert_eq!(d.handshake_time, Duration::from_millis(3));
+        assert_eq!(d.gather_wait_time, Duration::from_millis(7));
     }
 
     #[test]
@@ -488,6 +607,7 @@ mod tests {
             compute_peers: vec!["h:1".into(), "h:2".into(), "h:3".into()],
             validator_peers: vec!["h:4".into()],
             reconnect_attempts: 1,
+            frugal_wire: true,
         };
         assert_eq!(t.effective_procs(), 3, "addresses define the plane size");
         assert_eq!(t.effective_validators(), 1);
@@ -504,6 +624,7 @@ mod tests {
             compute_peers: vec!["127.0.0.1:1".into()],
             validator_peers: vec![],
             reconnect_attempts: 0,
+            frugal_wire: true,
         };
         let err = Cluster::spawn_topology(TransportKind::InProc, data, backend, &topo)
             .unwrap_err()

@@ -28,9 +28,12 @@
 //! process (`dp_validate_sharded` / `ofl_validate_sharded` — the zero-setup
 //! path) or *validator peers on the cluster's validation plane*
 //! ([`dp_validate_clustered`] / [`ofl_validate_clustered`]): each peer owns
-//! a contiguous conflict-key range, receives the proposal vectors plus its
-//! shard lists as a [`super::engine::Job::PairCache`] job through the
-//! [`super::transport::Transport`], and replies with its sorted cache. The
+//! a contiguous conflict-key range and receives — as a
+//! [`super::engine::Job::PairCache`] job through the
+//! [`super::transport::Transport`] — only the proposal rows its shards
+//! read, with a monotone local→global position map so its reply keys stay
+//! global (`O(M·d)` wire total across the plane, since every proposal
+//! belongs to exactly one shard), and replies with its sorted cache. The
 //! master tree-reduces the per-peer caches and runs the same serial merge —
 //! so the distributed validation plane is bit-identical to the serial
 //! validator too. BP-means has no sharded variant: its accepted features

@@ -9,7 +9,7 @@
 //! frame   := magic:u32  version:u16  kind:u16  len:u32  payload[len]
 //! magic   := 0x4D43434F ("OCCM" in LE byte order)
 //! kind    := 1 job | 2 reply-ok | 3 reply-err | 4 hello | 5 hello-ack
-//!          | 6 dataset-block
+//!          | 6 dataset-block | 7 snapshot | 8 snapshot-delta
 //! ```
 //!
 //! * **f32 values travel as their IEEE-754 bit patterns** (`to_bits` /
@@ -24,19 +24,36 @@
 //!   additionally carries the version in its payload, so a mismatched peer
 //!   is rejected with a typed error before any work is exchanged.
 //!
-//! Snapshots (`C^{t-1}` center/feature matrices) are embedded in the jobs
-//! that reference them, so snapshot distribution is just job scatter. The
-//! dataset is shipped as explicit [`KIND_DATA`] block frames: a peer opens
-//! a session with a [`Hello`]/[`HelloAck`] exchange that fixes its shard
-//! assignment and the dataset geometry, then receives exactly the point
-//! ranges its jobs read (see [`super::tcp`]).
+//! Snapshots (`C^{t-1}` center/feature matrices) are *not* embedded in the
+//! jobs that reference them (that was the PR 2–3 shape): they travel as
+//! their own versioned frames, and jobs reference them by id:
+//!
+//! * [`KIND_SNAPSHOT`] installs a full snapshot `{id, matrix}` into the
+//!   peer session's single-entry snapshot cache.
+//! * [`KIND_SNAPSHOT_DELTA`] re-bases the cache: `{id, base_id, base_rows,
+//!   tail}` reconstructs the new snapshot as the first `base_rows` rows of
+//!   the cached `base_id` entry plus the tail rows — bit-exactly, since
+//!   both sides move f32 bit patterns. Between epochs of one pass the
+//!   committed state only *appends* rows (DP/OFL validation, BP
+//!   acceptances), so the per-epoch snapshot traffic shrinks from the full
+//!   `O(K·d)` matrix to just the accepted rows; a mean-recompute rewrite, a
+//!   cache miss or a replacement peer falls back to a full
+//!   [`KIND_SNAPSHOT`] frame.
+//! * Snapshot-referencing job encodings ([`snapref_job_frame`]) carry the
+//!   id instead of the matrix; [`decode_job_snap`] resolves it against the
+//!   peer's cache and rejects a mismatch with a typed error.
+//!
+//! The dataset is shipped as explicit [`KIND_DATA`] block frames: a peer
+//! opens a session with a [`Hello`]/[`HelloAck`] exchange that fixes its
+//! shard assignment and the dataset geometry, then receives exactly the
+//! point ranges its jobs read (see [`super::tcp`]).
 //!
 //! ## Shared-payload splicing
 //!
-//! The P jobs of one wave embed the same `Arc`'d snapshot (and, for
-//! reductions, the same assignment vector). [`job_frames`] encodes each
-//! shared payload *once* per wave and splices the cached bytes into every
-//! frame, instead of re-encoding it P times; the produced frames are
+//! The P jobs of one wave may embed the same `Arc`'d payload (the
+//! reduction waves' assignment vector). [`job_frames`] encodes each shared
+//! payload *once* per wave and splices the cached bytes into every frame,
+//! instead of re-encoding it P times; the produced frames are
 //! byte-identical to per-job [`job_frame`] encoding, and
 //! [`WaveFrames::spliced_payload_bytes`] reports how much encoder work the
 //! splice avoided (asserted in `rust/tests/wire_format.rs`).
@@ -52,8 +69,10 @@ use std::time::Duration;
 
 /// Frame magic: "OCCM" read back from little-endian bytes.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"OCCM");
-/// Wire-format version.
-pub const VERSION: u16 = 1;
+/// Wire-format version. v2 added the snapshot / snapshot-delta frame
+/// kinds, snapshot-referencing job encodings, and the `PairCache`
+/// row-subset position map.
+pub const VERSION: u16 = 2;
 /// Frame header length in bytes (magic + version + kind + len).
 pub const HEADER_LEN: usize = 12;
 /// Maximum frame payload: 1 GiB. Anything larger is a protocol error.
@@ -71,6 +90,10 @@ pub const KIND_HELLO: u16 = 4;
 pub const KIND_HELLO_ACK: u16 = 5;
 /// Frame kind: a dataset block flowing master → peer.
 pub const KIND_DATA: u16 = 6;
+/// Frame kind: a full snapshot install flowing master → peer.
+pub const KIND_SNAPSHOT: u16 = 7;
+/// Frame kind: a snapshot delta (re-base) flowing master → peer.
+pub const KIND_SNAPSHOT_DELTA: u16 = 8;
 
 fn wire_err(msg: impl Into<String>) -> Error {
     Error::Data(format!("wire: {}", msg.into()))
@@ -272,6 +295,11 @@ const JOB_BP_DESCEND: u8 = 2;
 const JOB_BP_STATS: u8 = 3;
 const JOB_PAIR_CACHE: u8 = 4;
 const JOB_SHUTDOWN: u8 = 5;
+/// A `Nearest` job whose centers live in the peer's snapshot cache,
+/// referenced by id instead of being embedded.
+const JOB_NEAREST_SNAP: u8 = 6;
+/// A `BpDescend` job whose features live in the peer's snapshot cache.
+const JOB_BP_DESCEND_SNAP: u8 = 7;
 
 /// Per-wave cache of encoded shared payloads, keyed by the `Arc`
 /// allocation's address. Payloads the wave's jobs share by `Arc` (the
@@ -331,9 +359,10 @@ fn encode_job_into(job: &Job, cache: &mut SpliceCache) -> Vec<u8> {
             });
             put_usize(&mut b, *k);
         }
-        Job::PairCache { vectors, shards } => {
+        Job::PairCache { vectors, positions, shards } => {
             put_u8(&mut b, JOB_PAIR_CACHE);
             cache.splice(&mut b, Arc::as_ptr(vectors) as usize, |b| put_matrix(b, vectors));
+            put_u32_slice(&mut b, positions);
             put_usize(&mut b, shards.len());
             for shard in shards {
                 put_u32_slice(&mut b, shard);
@@ -382,9 +411,53 @@ pub fn job_frames(jobs: &[Job]) -> Result<WaveFrames> {
     })
 }
 
+/// Serialize a snapshot-referencing job payload (no frame header): the
+/// `Nearest` / `BpDescend` matrix is replaced by `snap_id`, which the peer
+/// resolves against its session snapshot cache. Errors for job kinds that
+/// carry no snapshot.
+pub fn encode_snapref_job(job: &Job, snap_id: u64) -> Result<Vec<u8>> {
+    let mut b = Vec::new();
+    match job {
+        Job::Nearest { range, .. } => {
+            put_u8(&mut b, JOB_NEAREST_SNAP);
+            put_range(&mut b, range);
+            put_u64(&mut b, snap_id);
+        }
+        Job::BpDescend { range, sweeps, .. } => {
+            put_u8(&mut b, JOB_BP_DESCEND_SNAP);
+            put_range(&mut b, range);
+            put_u64(&mut b, snap_id);
+            put_usize(&mut b, *sweeps);
+        }
+        _ => return Err(wire_err("job kind carries no snapshot to reference")),
+    }
+    Ok(b)
+}
+
+/// A complete snapshot-referencing job frame, ready to write.
+pub fn snapref_job_frame(job: &Job, snap_id: u64) -> Result<Vec<u8>> {
+    frame(KIND_JOB, encode_snapref_job(job, snap_id)?)
+}
+
+/// Resolve a snapshot reference against the peer's single-entry cache.
+fn resolve_snap(snap: Option<&(u64, Arc<Matrix>)>, id: u64) -> Result<Arc<Matrix>> {
+    match snap {
+        Some((held, m)) if *held == id => Ok(m.clone()),
+        Some((held, _)) => Err(wire_err(format!(
+            "job references snapshot id {id}, peer holds id {held}"
+        ))),
+        None => Err(wire_err(format!(
+            "job references snapshot id {id}, peer holds no snapshot"
+        ))),
+    }
+}
+
 /// Deserialize a job payload, validating internal invariants (range
 /// orientation, index bounds) so a corrupt frame cannot poison a peer.
-pub fn decode_job(payload: &[u8]) -> Result<Job> {
+/// Snapshot-referencing encodings resolve against `snap`, the peer
+/// session's cached `(id, matrix)` entry; a missing or mismatched id is a
+/// typed error.
+pub fn decode_job_snap(payload: &[u8], snap: Option<&(u64, Arc<Matrix>)>) -> Result<Job> {
     let mut r = Reader::new(payload);
     let job = match r.u8()? {
         JOB_NEAREST => {
@@ -430,25 +503,40 @@ pub fn decode_job(payload: &[u8]) -> Result<Job> {
         }
         JOB_PAIR_CACHE => {
             let vectors = get_matrix(&mut r)?;
+            let positions = get_u32_vec(&mut r)?;
             let nshards = r.len_of(8)?;
             let mut shards = Vec::with_capacity(nshards);
             for _ in 0..nshards {
-                let shard = get_u32_vec(&mut r)?;
-                if let Some(&p) = shard.iter().find(|&&p| p as usize >= vectors.rows) {
-                    return Err(wire_err(format!(
-                        "pair-cache position {p} out of range ({} vectors)",
-                        vectors.rows
-                    )));
-                }
-                shards.push(shard);
+                shards.push(get_u32_vec(&mut r)?);
             }
-            Job::PairCache { vectors: Arc::new(vectors), shards }
+            // Same geometry rules as the executor, single-sourced so a
+            // corrupt frame is rejected here with the exact invariants the
+            // job would be run under.
+            super::engine::check_pair_cache_geometry(vectors.rows, &positions, &shards)?;
+            Job::PairCache { vectors: Arc::new(vectors), positions, shards }
         }
         JOB_SHUTDOWN => Job::Shutdown,
+        JOB_NEAREST_SNAP => {
+            let range = get_range(&mut r)?;
+            let centers = resolve_snap(snap, r.u64()?)?;
+            Job::Nearest { range, centers }
+        }
+        JOB_BP_DESCEND_SNAP => {
+            let range = get_range(&mut r)?;
+            let features = resolve_snap(snap, r.u64()?)?;
+            let sweeps = r.usize()?;
+            Job::BpDescend { range, features, sweeps }
+        }
         other => return Err(wire_err(format!("unknown job tag {other}"))),
     };
     r.finish()?;
     Ok(job)
+}
+
+/// Deserialize a job payload that embeds all its payloads inline (no
+/// snapshot cache available — a snapshot-referencing encoding is rejected).
+pub fn decode_job(payload: &[u8]) -> Result<Job> {
+    decode_job_snap(payload, None)
 }
 
 // ---------------------------------------------------------------------------
@@ -612,6 +700,110 @@ pub fn decode_data_block(payload: &[u8]) -> Result<(usize, Matrix)> {
     let block = get_matrix(&mut r)?;
     r.finish()?;
     Ok((offset, block))
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot distribution: full installs and delta re-bases
+// ---------------------------------------------------------------------------
+
+/// Serialize a full snapshot install (no frame header): the peer replaces
+/// its single-entry snapshot cache with `(id, matrix)`.
+pub fn encode_snapshot(id: u64, m: &Matrix) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, id);
+    put_matrix(&mut b, m);
+    b
+}
+
+/// A complete full-snapshot frame, ready to write.
+pub fn snapshot_frame(id: u64, m: &Matrix) -> Result<Vec<u8>> {
+    frame(KIND_SNAPSHOT, encode_snapshot(id, m))
+}
+
+/// Deserialize a full snapshot install into `(id, matrix)`.
+pub fn decode_snapshot(payload: &[u8]) -> Result<(u64, Matrix)> {
+    let mut r = Reader::new(payload);
+    let id = r.u64()?;
+    let m = get_matrix(&mut r)?;
+    r.finish()?;
+    Ok((id, m))
+}
+
+/// A snapshot delta: the new snapshot `id` equals the first `base_rows`
+/// rows of the peer's cached snapshot `base_id` followed by the `tail`
+/// rows. Because both sides move raw f32 bit patterns, the reconstruction
+/// is bit-exact by construction ([`SnapshotDelta::apply`], property-checked
+/// in `rust/tests/wire_format.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotDelta {
+    /// Id the reconstructed snapshot is installed under.
+    pub id: u64,
+    /// Cache entry the delta re-bases (must match the peer's held id).
+    pub base_id: u64,
+    /// Prefix rows reused from the base (must equal the base's row count —
+    /// the committed state only ever *appends* between epochs; a rewrite
+    /// ships a full snapshot instead).
+    pub base_rows: usize,
+    /// Appended rows (`0` rows = the state did not grow).
+    pub tail: Matrix,
+}
+
+impl SnapshotDelta {
+    /// Reconstruct the full snapshot from the peer's cached base entry.
+    /// Every mismatch (wrong base id, wrong geometry) is a typed error —
+    /// the master only sends a delta when it knows the peer's cache state,
+    /// so a mismatch means the session must re-base from a full frame.
+    pub fn apply(&self, held_id: u64, base: &Matrix) -> Result<Matrix> {
+        if held_id != self.base_id {
+            return Err(wire_err(format!(
+                "snapshot delta re-bases id {}, peer holds id {held_id}",
+                self.base_id
+            )));
+        }
+        if base.rows != self.base_rows {
+            return Err(wire_err(format!(
+                "snapshot delta expects a {}-row base, cached snapshot has {} rows",
+                self.base_rows, base.rows
+            )));
+        }
+        if base.rows > 0 && self.tail.rows > 0 && base.cols != self.tail.cols {
+            return Err(wire_err(format!(
+                "snapshot delta width {} does not match the cached base width {}",
+                self.tail.cols, base.cols
+            )));
+        }
+        let cols = if base.rows > 0 { base.cols } else { self.tail.cols };
+        let mut data = Vec::with_capacity((self.base_rows + self.tail.rows) * cols);
+        data.extend_from_slice(&base.data[..self.base_rows * base.cols.min(cols)]);
+        data.extend_from_slice(&self.tail.data);
+        Ok(Matrix { rows: self.base_rows + self.tail.rows, cols, data })
+    }
+}
+
+/// Serialize a snapshot delta (no frame header).
+pub fn encode_snapshot_delta(d: &SnapshotDelta) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, d.id);
+    put_u64(&mut b, d.base_id);
+    put_usize(&mut b, d.base_rows);
+    put_matrix(&mut b, &d.tail);
+    b
+}
+
+/// A complete snapshot-delta frame, ready to write.
+pub fn snapshot_delta_frame(d: &SnapshotDelta) -> Result<Vec<u8>> {
+    frame(KIND_SNAPSHOT_DELTA, encode_snapshot_delta(d))
+}
+
+/// Deserialize a snapshot delta.
+pub fn decode_snapshot_delta(payload: &[u8]) -> Result<SnapshotDelta> {
+    let mut r = Reader::new(payload);
+    let id = r.u64()?;
+    let base_id = r.u64()?;
+    let base_rows = r.usize()?;
+    let tail = get_matrix(&mut r)?;
+    r.finish()?;
+    Ok(SnapshotDelta { id, base_id, base_rows, tail })
 }
 
 // ---------------------------------------------------------------------------
@@ -806,6 +998,49 @@ pub fn read_frame(r: &mut impl Read) -> Result<(u16, Vec<u8>)> {
         return Err(wire_err(format!("wire version {version}, expected {VERSION}")));
     }
     Ok((kind, payload))
+}
+
+/// Incremental frame parser for readiness-polled reads: try to pop one
+/// complete frame off the front of `buf` (bytes accumulated from a
+/// nonblocking socket). Returns `Ok(None)` while the buffered prefix is an
+/// incomplete-but-valid frame, `Ok(Some((kind, payload)))` once a whole
+/// frame is buffered (the frame's bytes are drained from `buf`), and a
+/// typed error on bad magic, foreign version or an oversized length — the
+/// same rejections [`read_frame`] makes, just without blocking. This is
+/// what lets the master's gather retire replies in arrival order instead
+/// of peer order (see [`super::tcp`]).
+pub fn poll_frame(buf: &mut Vec<u8>) -> Result<Option<(u16, Vec<u8>)>> {
+    if buf.len() < HEADER_LEN {
+        // An invalid magic is detectable as soon as 4 bytes arrive; fail
+        // early rather than waiting for a header that can never be valid.
+        if buf.len() >= 4 {
+            let magic = u32::from_le_bytes(buf[0..4].try_into().expect("4 bytes"));
+            if magic != MAGIC {
+                return Err(wire_err(format!("bad magic {magic:#010x}")));
+            }
+        }
+        return Ok(None);
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().expect("4 bytes"));
+    let version = u16::from_le_bytes(buf[4..6].try_into().expect("2 bytes"));
+    let kind = u16::from_le_bytes(buf[6..8].try_into().expect("2 bytes"));
+    let len = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
+    if magic != MAGIC {
+        return Err(wire_err(format!("bad magic {magic:#010x}")));
+    }
+    if version != VERSION {
+        return Err(wire_err(format!("wire version {version}, expected {VERSION}")));
+    }
+    if len > MAX_FRAME {
+        return Err(wire_err(format!("oversized frame: {len} bytes")));
+    }
+    let total = HEADER_LEN + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let payload = buf[HEADER_LEN..total].to_vec();
+    buf.drain(..total);
+    Ok(Some((kind, payload)))
 }
 
 /// Peer side: read one frame and decode the job it must carry.

@@ -59,6 +59,11 @@ fn app() -> App {
                     "reconnect budget for a dropped remote peer (0 = fail fast)",
                     Some("3"),
                 )
+                .flag(
+                    "frugal-wire",
+                    "tcp wire diet: snapshot deltas + validator row subsets (true|false)",
+                    Some("true"),
+                )
                 .flag("artifacts", "artifacts directory", Some("artifacts"))
                 .flag("data", "dp | bp | separable | file:<path>", Some("dp"))
                 .flag("n", "points to generate", Some("16384"))
@@ -173,6 +178,9 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     }
     if let Some(v) = p.get_parse::<usize>("reconnect-attempts")? {
         cfg.reconnect_attempts = v;
+    }
+    if let Some(v) = p.get_parse::<bool>("frugal-wire")? {
+        cfg.frugal_wire = v;
     }
     if let Some(v) = p.get("artifacts") {
         cfg.artifacts_dir = PathBuf::from(v);

@@ -54,9 +54,26 @@ pub struct EpochRecord {
     /// directions). Zero under the in-proc transport, whose messages move
     /// by pointer.
     pub wire_bytes: u64,
+    /// Bytes that passed the encoder exactly once this epoch: `wire_bytes`
+    /// minus duplicated copies of already-encoded payloads (spliced shared
+    /// job payloads, one snapshot frame written to P sockets). The gap
+    /// between the two is the wave's fan-out redundancy.
+    pub unique_payload_bytes: u64,
+    /// Snapshot-delta payload bytes shipped this epoch — the appended rows
+    /// that replaced full per-epoch snapshot copies (a subset of
+    /// `wire_bytes`; zero in-proc).
+    pub delta_bytes: u64,
+    /// Full-snapshot frames shipped this epoch because no delta was
+    /// possible: cold peer caches (first touch, reconnected replacement) or
+    /// a rewritten committed prefix (mean recompute).
+    pub full_snapshot_fallbacks: u64,
     /// Master-side wall-clock spent encoding jobs and decoding replies for
     /// this epoch. Zero under the in-proc transport.
     pub ser_time: Duration,
+    /// Wall-clock the readiness-polled gather spent idle this epoch,
+    /// waiting for the next reply to become readable (the straggler tail;
+    /// zero in-proc).
+    pub gather_wait_time: Duration,
     /// Dataset-block payload bytes shipped to peers during this epoch
     /// (demand-driven, so mostly the first epoch that touches a range).
     /// Zero under the in-proc transport, whose peers share the dataset.
@@ -86,7 +103,11 @@ impl EpochRecord {
             ("queue_depth", Json::Num(self.queue_depth as f64)),
             ("respins", Json::Num(self.respins as f64)),
             ("wire_bytes", Json::Num(self.wire_bytes as f64)),
+            ("unique_payload_bytes", Json::Num(self.unique_payload_bytes as f64)),
+            ("delta_bytes", Json::Num(self.delta_bytes as f64)),
+            ("full_snapshot_fallbacks", Json::Num(self.full_snapshot_fallbacks as f64)),
             ("ser_ms", Json::Num(self.ser_time.as_secs_f64() * 1e3)),
+            ("gather_wait_ms", Json::Num(self.gather_wait_time.as_secs_f64() * 1e3)),
             ("dataset_bytes", Json::Num(self.dataset_bytes as f64)),
             ("handshake_ms", Json::Num(self.handshake_time.as_secs_f64() * 1e3)),
         ])
@@ -154,6 +175,22 @@ impl RunSummary {
     /// Total dataset bytes shipped across epochs (zero in-proc).
     pub fn total_dataset_bytes(&self) -> u64 {
         self.epochs.iter().map(|e| e.dataset_bytes).sum()
+    }
+    /// Total snapshot-delta payload bytes shipped across epochs.
+    pub fn total_delta_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.delta_bytes).sum()
+    }
+    /// Total encoder-unique bytes across epochs (≤ `total_wire_bytes`).
+    pub fn total_unique_payload_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.unique_payload_bytes).sum()
+    }
+    /// Total full-snapshot fallbacks across epochs.
+    pub fn total_full_snapshot_fallbacks(&self) -> u64 {
+        self.epochs.iter().map(|e| e.full_snapshot_fallbacks).sum()
+    }
+    /// Total gather idle-wait across epochs (the straggler tail).
+    pub fn total_gather_wait(&self) -> Duration {
+        self.epochs.iter().map(|e| e.gather_wait_time).sum()
     }
 }
 
@@ -243,7 +280,11 @@ mod tests {
             queue_depth: 2,
             respins: 0,
             wire_bytes: 64,
+            unique_payload_bytes: 48,
+            delta_bytes: 16,
+            full_snapshot_fallbacks: 1,
             ser_time: Duration::from_micros(250),
+            gather_wait_time: Duration::from_micros(40),
             dataset_bytes: 32,
             handshake_time: Duration::from_micros(100),
         }
@@ -266,7 +307,11 @@ mod tests {
         assert_eq!(s.total_overlap(), Duration::from_millis(3));
         assert_eq!(s.total_respins(), 0);
         assert_eq!(s.total_wire_bytes(), 3 * 64);
+        assert_eq!(s.total_unique_payload_bytes(), 3 * 48);
+        assert_eq!(s.total_delta_bytes(), 3 * 16);
+        assert_eq!(s.total_full_snapshot_fallbacks(), 3);
         assert_eq!(s.total_ser_time(), Duration::from_micros(750));
+        assert_eq!(s.total_gather_wait(), Duration::from_micros(120));
         assert_eq!(s.total_dataset_bytes(), 3 * 32);
     }
 
@@ -282,7 +327,11 @@ mod tests {
         assert_eq!(j.get("queue_depth").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("respins").unwrap().as_usize(), Some(0));
         assert_eq!(j.get("wire_bytes").unwrap().as_usize(), Some(64));
+        assert_eq!(j.get("unique_payload_bytes").unwrap().as_usize(), Some(48));
+        assert_eq!(j.get("delta_bytes").unwrap().as_usize(), Some(16));
+        assert_eq!(j.get("full_snapshot_fallbacks").unwrap().as_usize(), Some(1));
         assert!(j.get("ser_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("gather_wait_ms").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("dataset_bytes").unwrap().as_usize(), Some(32));
         assert!(j.get("handshake_ms").unwrap().as_f64().unwrap() > 0.0);
     }

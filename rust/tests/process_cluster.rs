@@ -201,6 +201,18 @@ fn process_workers_bitidentical_with_inproc_across_algos_and_schedulers() {
                     stats.dataset_bytes > 0,
                     "{ctx}: workers receive their point ranges over the wire"
                 );
+                assert!(
+                    stats.delta_bytes > 0,
+                    "{ctx}: snapshot deltas are the default across process boundaries"
+                );
+                assert!(
+                    stats.full_snapshot_fallbacks > 0,
+                    "{ctx}: cold sessions must re-base from full snapshots"
+                );
+                assert!(
+                    stats.unique_payload_bytes <= stats.wire_bytes,
+                    "{ctx}: encoder-unique bytes cannot exceed wire bytes"
+                );
             }
         }
     });
@@ -249,6 +261,21 @@ fn chaos_killed_worker_recovers_via_replacement_on_same_port() {
             &reference.model,
             &out.model,
             "killed + replaced worker process",
+        );
+        // Snapshot-referencing jobs make the re-base structural: a
+        // replacement session starts with an empty snapshot cache and can
+        // only serve the retained job after the recovery path installs a
+        // full snapshot frame, so a bit-identical finish *is* the proof
+        // that the mid-run re-base happened and reconstructed exact bits.
+        // The stats confirm the machinery stayed engaged throughout.
+        let stats = &out.summary.transport;
+        assert!(
+            stats.delta_bytes > 0,
+            "delta shipping must stay engaged across the chaos kill"
+        );
+        assert!(
+            stats.full_snapshot_fallbacks >= 2,
+            "cold sessions and re-bases must be counted as full installs"
         );
     });
 }

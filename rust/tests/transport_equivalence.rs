@@ -118,11 +118,66 @@ fn models_bitidentical_across_transport_scheduler_grid() {
                     assert_eq!(wire, 0, "{ctx}: in-proc must move zero wire bytes")
                 }
                 TransportKind::Tcp => {
-                    assert!(wire > 0, "{ctx}: tcp runs must account wire traffic")
+                    assert!(wire > 0, "{ctx}: tcp runs must account wire traffic");
+                    // Delta-shipping is the tcp default and must actually
+                    // engage on these multi-epoch runs: the committed state
+                    // grows between epochs, so appended rows cross the wire
+                    // as deltas, and every run begins with the cold-cache
+                    // full-snapshot install.
+                    assert!(
+                        out.summary.total_delta_bytes() > 0,
+                        "{ctx}: snapshot deltas must ship by default"
+                    );
+                    assert!(
+                        out.summary.total_full_snapshot_fallbacks() > 0,
+                        "{ctx}: cold caches must be counted as full installs"
+                    );
+                    assert!(
+                        out.summary.total_unique_payload_bytes() <= wire,
+                        "{ctx}: encoder-unique bytes cannot exceed wire bytes"
+                    );
                 }
             }
         }
     }
+}
+
+/// The before/after of the wire diet: with `frugal_wire = false` (the PR 3
+/// embed-everything shape) the model is still bit-identical, but the
+/// default diet moves strictly fewer bytes — snapshots as deltas, validator
+/// rows as subsets.
+#[test]
+fn frugal_wire_cuts_tcp_bytes_and_keeps_bits() {
+    let seed = 59;
+    let data = Arc::new(dp_clusters(&GenConfig { n: 480, dim: 12, theta: 1.0, seed }));
+    let mk = |frugal: bool| {
+        let cfg = RunConfig {
+            algo: Algo::DpMeans,
+            transport: TransportKind::Tcp,
+            frugal_wire: frugal,
+            lambda: 1.0,
+            procs: 4,
+            block: 24,
+            iterations: 2,
+            bootstrap_div: 16,
+            seed,
+            n: data.len(),
+            dim: data.dim(),
+            ..RunConfig::default()
+        };
+        driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+    };
+    let frugal = mk(true);
+    let full = mk(false);
+    assert_models_identical(&frugal.model, &full.model, "frugal vs full wire");
+    let frugal_bytes = frugal.summary.total_wire_bytes();
+    let full_bytes = full.summary.total_wire_bytes();
+    assert!(
+        frugal_bytes < full_bytes,
+        "the wire diet must strictly cut tcp bytes ({frugal_bytes} vs {full_bytes})"
+    );
+    assert!(frugal.summary.total_delta_bytes() > 0, "deltas engaged");
+    assert_eq!(full.summary.total_delta_bytes(), 0, "no deltas in the PR 3 shape");
 }
 
 /// The validator plane is also transport- and shard-count-independent:

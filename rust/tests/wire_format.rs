@@ -43,9 +43,9 @@ fn jobs_eq(a: &Job, b: &Job) -> bool {
             r1 == r2 && z1 == z2 && k1 == k2
         }
         (
-            Job::PairCache { vectors: v1, shards: s1 },
-            Job::PairCache { vectors: v2, shards: s2 },
-        ) => mats_eq(v1, v2) && s1 == s2,
+            Job::PairCache { vectors: v1, positions: p1, shards: s1 },
+            Job::PairCache { vectors: v2, positions: p2, shards: s2 },
+        ) => mats_eq(v1, v2) && p1 == p2 && s1 == s2,
         (Job::Shutdown, Job::Shutdown) => true,
         _ => false,
     }
@@ -159,20 +159,38 @@ fn prop_every_job_variant_roundtrips_bitexactly() {
             _ => {
                 let vectors = nasty_matrix(g, 8, 4);
                 let rows = vectors.rows;
+                // Half the cases use the row-subset form: a strictly
+                // increasing local→global position map over sparse ids.
+                let positions: Vec<u32> = if rows > 0 && g.bool() {
+                    let mut at = 0u32;
+                    (0..rows)
+                        .map(|_| {
+                            at += 1 + g.rng().next_below(5) as u32;
+                            at
+                        })
+                        .collect()
+                } else {
+                    vec![]
+                };
                 let shards = if rows == 0 {
                     vec![]
                 } else {
                     g.vec_of(g.usize_in(0, 3), |g| {
                         let mut s: Vec<u32> = g
                             .vec_of(g.usize_in(0, rows), |g| {
-                                g.rng().next_below(rows as u64) as u32
+                                let local = g.rng().next_below(rows as u64) as usize;
+                                if positions.is_empty() {
+                                    local as u32
+                                } else {
+                                    positions[local]
+                                }
                             });
                         s.sort_unstable();
                         s.dedup();
                         s
                     })
                 };
-                Job::PairCache { vectors: Arc::new(vectors), shards }
+                Job::PairCache { vectors: Arc::new(vectors), positions, shards }
             }
         };
         let back = job_roundtrip(&job);
@@ -519,7 +537,11 @@ fn wave_splicing_shares_suffstats_assignments_and_paircache_vectors() {
 
     let vectors = Arc::new(Matrix { rows: 50, cols: 8, data: vec![0.5; 400] });
     let jobs: Vec<Job> = (0..3)
-        .map(|v| Job::PairCache { vectors: vectors.clone(), shards: vec![vec![v as u32]] })
+        .map(|v| Job::PairCache {
+            vectors: vectors.clone(),
+            positions: vec![],
+            shards: vec![vec![v as u32]],
+        })
         .collect();
     let wave = wire::job_frames(&jobs).unwrap();
     for (job, frame) in jobs.iter().zip(&wave.frames) {
@@ -565,7 +587,249 @@ fn corrupt_job_invariants_are_rejected() {
     assert!(wire::decode_job(&payload).is_err(), "short assignments must fail");
 
     // PairCache positions beyond the vector rows.
-    bad = Job::PairCache { vectors: Arc::new(Matrix::zeros(2, 2)), shards: vec![vec![0, 5]] };
+    bad = Job::PairCache {
+        vectors: Arc::new(Matrix::zeros(2, 2)),
+        positions: vec![],
+        shards: vec![vec![0, 5]],
+    };
     let payload = wire::encode_job(&bad);
     assert!(wire::decode_job(&payload).is_err(), "out-of-range position must fail");
+
+    // Row-subset invariants: a non-increasing position map, a map whose
+    // length disagrees with the shipped rows, and a shard position missing
+    // from the map must each fail decode validation.
+    bad = Job::PairCache {
+        vectors: Arc::new(Matrix::zeros(2, 2)),
+        positions: vec![4, 4],
+        shards: vec![vec![4]],
+    };
+    let payload = wire::encode_job(&bad);
+    assert!(wire::decode_job(&payload).is_err(), "non-increasing positions must fail");
+    bad = Job::PairCache {
+        vectors: Arc::new(Matrix::zeros(2, 2)),
+        positions: vec![7],
+        shards: vec![vec![7]],
+    };
+    let payload = wire::encode_job(&bad);
+    assert!(wire::decode_job(&payload).is_err(), "short position map must fail");
+    bad = Job::PairCache {
+        vectors: Arc::new(Matrix::zeros(2, 2)),
+        positions: vec![3, 9],
+        shards: vec![vec![3, 5]],
+    };
+    let payload = wire::encode_job(&bad);
+    assert!(wire::decode_job(&payload).is_err(), "unmapped shard position must fail");
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot frames and delta re-bases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_snapshot_frames_roundtrip_bitexactly() {
+    Prop::new("snapshot wire round trip").cases(40).check(|g| {
+        let m = nasty_matrix(g, 10, 6);
+        let id = g.rng().next_u64();
+        let (id2, back) =
+            wire::decode_snapshot(&wire::encode_snapshot(id, &m)).map_err(|e| e.to_string())?;
+        if id2 == id && mats_eq(&m, &back) {
+            Ok(())
+        } else {
+            Err("snapshot did not round-trip bit-exactly".to_string())
+        }
+    });
+}
+
+/// The delta protocol's core contract: for ANY base (including NaN
+/// payloads, signed zeros, subnormals) and ANY tail — empty delta, single
+/// row, many rows, and the full-rebase shape (empty base) — encode, decode
+/// and apply reconstruct the concatenation bit for bit.
+#[test]
+fn prop_snapshot_deltas_roundtrip_and_apply_bitexactly() {
+    Prop::new("snapshot delta round trip + apply").cases(60).check(|g| {
+        let cols = g.usize_in(1, 5);
+        // base_rows = 0 is the full-rebase shape; tail rows 0 the empty
+        // delta; 1 the single-accepted-row epoch.
+        let base_rows = g.usize_in(0, 6);
+        let tail_rows = g.usize_in(0, 4);
+        let base = Matrix { rows: base_rows, cols, data: g.vec_of(base_rows * cols, nasty_f32) };
+        let tail = Matrix { rows: tail_rows, cols, data: g.vec_of(tail_rows * cols, nasty_f32) };
+        let id = g.rng().next_u64();
+        let base_id = g.rng().next_u64();
+        let delta = wire::SnapshotDelta { id, base_id, base_rows, tail };
+        let back = wire::decode_snapshot_delta(&wire::encode_snapshot_delta(&delta))
+            .map_err(|e| e.to_string())?;
+        if back != delta {
+            return Err("delta did not round-trip".to_string());
+        }
+        let rebuilt = back.apply(base_id, &base).map_err(|e| e.to_string())?;
+        let mut want = base.data.clone();
+        want.extend_from_slice(&delta.tail.data);
+        if rebuilt.rows == base_rows + tail_rows
+            && rebuilt.cols == cols
+            && f32s_eq(&rebuilt.data, &want)
+        {
+            Ok(())
+        } else {
+            Err("delta apply did not reconstruct the concatenation bit-exactly".to_string())
+        }
+    });
+}
+
+#[test]
+fn snapshot_delta_apply_rejects_mismatches() {
+    let base = Matrix { rows: 2, cols: 2, data: vec![1.0, 2.0, 3.0, 4.0] };
+    let tail = Matrix { rows: 1, cols: 2, data: vec![5.0, 6.0] };
+    let delta = wire::SnapshotDelta { id: 9, base_id: 4, base_rows: 2, tail };
+    // Wrong held id.
+    assert!(delta.apply(5, &base).is_err(), "base-id mismatch must fail");
+    // Wrong base geometry (the peer's cache shrank or grew out from under
+    // the master — cannot happen in-protocol, must still fail cleanly).
+    let short = Matrix { rows: 1, cols: 2, data: vec![1.0, 2.0] };
+    assert!(delta.apply(4, &short).is_err(), "base-rows mismatch must fail");
+    let wide = Matrix { rows: 2, cols: 3, data: vec![0.0; 6] };
+    assert!(delta.apply(4, &wide).is_err(), "width mismatch must fail");
+    // The happy path still works.
+    let ok = delta.apply(4, &base).unwrap();
+    assert_eq!(ok.rows, 3);
+    assert_eq!(ok.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+}
+
+#[test]
+fn truncated_snapshot_and_delta_payloads_error_cleanly() {
+    let m = Matrix { rows: 2, cols: 2, data: vec![1.0, f32::NAN, -0.0, 4.0] };
+    let payload = wire::encode_snapshot(7, &m);
+    for cut in 0..payload.len() {
+        assert!(wire::decode_snapshot(&payload[..cut]).is_err(), "cut at {cut} must fail");
+    }
+    let delta = wire::SnapshotDelta { id: 8, base_id: 7, base_rows: 2, tail: m };
+    let payload = wire::encode_snapshot_delta(&delta);
+    for cut in 0..payload.len() {
+        assert!(
+            wire::decode_snapshot_delta(&payload[..cut]).is_err(),
+            "cut at {cut} must fail"
+        );
+    }
+    let mut long = payload.clone();
+    long.push(0);
+    assert!(wire::decode_snapshot_delta(&long).is_err(), "trailing bytes must fail");
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot-referencing job encodings
+// ---------------------------------------------------------------------------
+
+#[test]
+fn snapref_jobs_resolve_against_the_cache_and_reject_mismatches() {
+    let centers = Arc::new(Matrix { rows: 3, cols: 2, data: vec![1.0, -0.0, f32::NAN, 2.0, 3.0, 4.0] });
+    let job = Job::Nearest { range: 5..25, centers: centers.clone() };
+    let payload = wire::encode_snapref_job(&job, 42).unwrap();
+    // Resolves against the matching cache entry, bit-exactly.
+    let snap = (42u64, centers.clone());
+    let back = wire::decode_job_snap(&payload, Some(&snap)).unwrap();
+    assert!(jobs_eq(&job, &back), "snapref job must resolve to the cached matrix");
+    // Mismatched id and missing cache are typed errors.
+    let wrong = (41u64, centers.clone());
+    let err = wire::decode_job_snap(&payload, Some(&wrong)).unwrap_err().to_string();
+    assert!(err.contains("42") && err.contains("41"), "names both ids: {err}");
+    let err = wire::decode_job_snap(&payload, None).unwrap_err().to_string();
+    assert!(err.contains("no snapshot"), "{err}");
+    // The inline-only decoder rejects reference encodings outright.
+    assert!(wire::decode_job(&payload).is_err());
+
+    // BpDescend carries its sweeps through the reference form.
+    let job = Job::BpDescend { range: 0..10, features: centers.clone(), sweeps: 3 };
+    let payload = wire::encode_snapref_job(&job, 7).unwrap();
+    let snap = (7u64, centers);
+    let back = wire::decode_job_snap(&payload, Some(&snap)).unwrap();
+    assert!(jobs_eq(&job, &back));
+
+    // Jobs without a snapshot cannot be reference-encoded.
+    assert!(wire::encode_snapref_job(&Job::Shutdown, 1).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Incremental frame parsing (the gather poll loop's parser)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_poll_frame_parses_any_byte_partitioning() {
+    Prop::new("poll_frame incremental parse").cases(40).check(|g| {
+        let job = Job::Nearest {
+            range: 0..g.usize_in(0, 30),
+            centers: Arc::new(nasty_matrix(g, 4, 3)),
+        };
+        let frame = wire::job_frame(&job).unwrap();
+        let mut buf: Vec<u8> = Vec::new();
+        let mut got = None;
+        let mut at = 0;
+        while at < frame.len() {
+            // Feed a random-sized chunk, as a socket would.
+            let take = (1 + g.usize_in(0, 9)).min(frame.len() - at);
+            buf.extend_from_slice(&frame[at..at + take]);
+            at += take;
+            match wire::poll_frame(&mut buf).map_err(|e| e.to_string())? {
+                Some(f) => {
+                    if at < frame.len() {
+                        return Err("frame completed before all bytes arrived".to_string());
+                    }
+                    got = Some(f);
+                }
+                None => {
+                    if at >= frame.len() {
+                        return Err("all bytes buffered but no frame parsed".to_string());
+                    }
+                }
+            }
+        }
+        let (kind, payload) = got.ok_or("no frame parsed")?;
+        if kind != wire::KIND_JOB {
+            return Err(format!("wrong kind {kind}"));
+        }
+        if !buf.is_empty() {
+            return Err("parser left bytes behind".to_string());
+        }
+        let back = wire::decode_job(&payload).map_err(|e| e.to_string())?;
+        if jobs_eq(&job, &back) {
+            Ok(())
+        } else {
+            Err("incrementally parsed frame decoded differently".to_string())
+        }
+    });
+}
+
+#[test]
+fn poll_frame_pops_queued_frames_in_order_and_rejects_bad_headers() {
+    let a = wire::job_frame(&Job::Shutdown).unwrap();
+    let b = wire::hello_ack_frame(&wire::HelloAck {
+        proto: wire::VERSION,
+        ok: true,
+        message: "hi".into(),
+    })
+    .unwrap();
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&a);
+    buf.extend_from_slice(&b);
+    let (k1, _) = wire::poll_frame(&mut buf).unwrap().expect("first frame");
+    assert_eq!(k1, wire::KIND_JOB);
+    let (k2, _) = wire::poll_frame(&mut buf).unwrap().expect("second frame");
+    assert_eq!(k2, wire::KIND_HELLO_ACK);
+    assert!(buf.is_empty());
+    assert!(wire::poll_frame(&mut buf).unwrap().is_none(), "empty buffer parses nothing");
+
+    // Bad magic fails as soon as 4 bytes are visible — even before a full
+    // header arrives.
+    let mut bad = vec![0xDEu8, 0xAD, 0xBE, 0xEF];
+    assert!(wire::poll_frame(&mut bad).is_err());
+    // Foreign version and oversized length fail with a full header.
+    let mut frame = wire::job_frame(&Job::Shutdown).unwrap();
+    frame[4] ^= 0x01;
+    let mut buf = frame.clone();
+    assert!(wire::poll_frame(&mut buf).is_err(), "foreign version must fail");
+    let mut oversize = Vec::new();
+    oversize.extend_from_slice(&wire::MAGIC.to_le_bytes());
+    oversize.extend_from_slice(&wire::VERSION.to_le_bytes());
+    oversize.extend_from_slice(&wire::KIND_JOB.to_le_bytes());
+    oversize.extend_from_slice(&(wire::MAX_FRAME + 1).to_le_bytes());
+    assert!(wire::poll_frame(&mut oversize).is_err(), "oversized length must fail");
 }
