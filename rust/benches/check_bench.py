@@ -1,17 +1,23 @@
 #!/usr/bin/env python3
-"""CI wire-byte regression gate for benches/schedulers.rs.
+"""CI regression gate for benches/schedulers.rs.
 
 Usage: check_bench.py BENCH_schedulers.json schedulers_baseline.json
 
 Reads the machine-readable bench output (one row per algo x scheduler x
-transport x frugal_wire cell) and gates the dpmeans tcp wire bytes per
-epoch against the run's own full-snapshot measurement: the baseline file
-records the expected frugal/full ratio (frugal_wire=true bytes divided by
-the frugal_wire=false bytes of the same config — the in-run stand-in for
-the pre-diet wire cost, since inproc moves zero bytes and cannot anchor a
-ratio), and the gate trips when the measured ratio exceeds twice that
-record. Byte counts are deterministic for a fixed config, so this is a
-sharp gate, not a timing-noise one.
+speculation x transport x frugal_wire cell) and applies three gates:
+
+1. Wire bytes (BSP): the dpmeans tcp wire bytes per epoch, relative to the
+   run's own full-snapshot (frugal_wire=false) measurement. The baseline
+   records the expected frugal/full ratio and the gate trips when the
+   measured ratio exceeds twice that record. Byte counts are deterministic
+   for a fixed config, so this is a sharp gate, not a timing-noise one.
+2. Wire bytes (depth 2): the same ratio for the wave engine at
+   speculation=2 — deeper pipelines chain snapshot deltas across in-flight
+   waves, and this gate catches the diet silently degrading to full
+   re-ships under speculation.
+3. Depth structure: the speculation=4 dpmeans tcp row must report
+   max_queue_depth == 4 (the pipeline genuinely fills) — a structural,
+   deterministic property of the wave engine, not a timing.
 """
 
 import json
@@ -27,32 +33,68 @@ def main() -> int:
     with open(sys.argv[2]) as f:
         baseline = json.load(f)
 
-    def row(algo, transport, scheduler, frugal):
+    def row(algo, transport, scheduler, frugal, speculation=None):
         for r in bench["rows"]:
             key = (r["algo"], r["transport"], r["scheduler"], r["frugal_wire"])
-            if key == (algo, transport, scheduler, frugal):
-                return r
+            if key != (algo, transport, scheduler, frugal):
+                continue
+            if speculation is not None and r.get("speculation") != speculation:
+                continue
+            return r
         print(
-            f"missing bench row {algo}/{transport}/{scheduler}/frugal={frugal}",
+            f"missing bench row {algo}/{transport}/{scheduler}/"
+            f"frugal={frugal}/speculation={speculation}",
             file=sys.stderr,
         )
         sys.exit(1)
 
-    frugal = row("dpmeans", "tcp", "bsp", True)
+    failures = 0
+
     full = row("dpmeans", "tcp", "bsp", False)
-    ratio = frugal["wire_per_epoch"] / max(full["wire_per_epoch"], 1.0)
+
+    # Gate 1: BSP frugal vs full.
+    frugal_bsp = row("dpmeans", "tcp", "bsp", True)
+    ratio = frugal_bsp["wire_per_epoch"] / max(full["wire_per_epoch"], 1.0)
     limit = 2.0 * baseline["dpmeans_tcp_wire_per_epoch_ratio_vs_full"]
     print(
-        f"dpmeans tcp wire/ep: frugal={frugal['wire_per_epoch']:.0f} B, "
+        f"dpmeans tcp bsp wire/ep: frugal={frugal_bsp['wire_per_epoch']:.0f} B, "
         f"full={full['wire_per_epoch']:.0f} B, ratio={ratio:.3f} (limit {limit:.3f})"
     )
     if ratio > limit:
+        print(f"wire-byte regression (bsp): {ratio:.3f} > {limit:.3f}", file=sys.stderr)
+        failures += 1
+
+    # Gate 2: depth-2 wave engine vs the same full baseline.
+    depth2 = row("dpmeans", "tcp", "pipelined", True, speculation=2)
+    ratio2 = depth2["wire_per_epoch"] / max(full["wire_per_epoch"], 1.0)
+    limit2 = 2.0 * baseline["dpmeans_tcp_depth2_wire_per_epoch_ratio_vs_full"]
+    print(
+        f"dpmeans tcp speculation=2 wire/ep: {depth2['wire_per_epoch']:.0f} B, "
+        f"ratio={ratio2:.3f} (limit {limit2:.3f})"
+    )
+    if ratio2 > limit2:
+        print(f"wire-byte regression (depth 2): {ratio2:.3f} > {limit2:.3f}", file=sys.stderr)
+        failures += 1
+
+    # Gate 3: the depth sweep exists and depth 4 genuinely fills. (The
+    # sweep rows run under the pipelined scheduler kind; speculation=1 is
+    # its BSP-equivalent depth.)
+    for depth in (1, 2, 4):
+        row("dpmeans", "tcp", "pipelined", True, speculation=depth)
+    depth4 = row("dpmeans", "tcp", "pipelined", True, speculation=4)
+    if depth4.get("max_queue_depth") != 4:
         print(
-            f"wire-byte regression: frugal/full ratio {ratio:.3f} exceeds {limit:.3f}",
+            f"speculation=4 pipeline never filled: max_queue_depth="
+            f"{depth4.get('max_queue_depth')}",
             file=sys.stderr,
         )
+        failures += 1
+    else:
+        print("depth gate: speculation=4 filled the pipeline (max_queue_depth=4)")
+
+    if failures:
         return 1
-    print("wire-byte gate: OK")
+    print("bench gates: OK")
     return 0
 
 

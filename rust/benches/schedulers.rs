@@ -23,9 +23,13 @@
 //!
 //! Besides the console table (+ CSV), the bench writes a machine-readable
 //! `target/bench-results/BENCH_schedulers.json` so the perf trajectory is
-//! tracked across PRs — one row per `(algo, scheduler, transport,
-//! frugal_wire)` cell; schema documented in the README and consumed by the
-//! CI `bench-smoke` job.
+//! tracked across PRs — one row per `(algo, scheduler, speculation,
+//! transport, frugal_wire)` cell, including a `speculation ∈ {1, 2, 4}`
+//! depth sweep of the wave engine with `commit_lag_ms`, `cancelled_waves`
+//! and `max_queue_depth` columns; schema documented in the README and
+//! consumed by the CI `bench-smoke` job. The bench asserts the depth-4
+//! dpmeans tcp run genuinely overlaps (pipeline filled to 4, nonzero
+//! overlapped validation) while staying bit-identical.
 //!
 //! Defaults keep single-machine runtime in seconds; pass `--n=…`, `--pb=…`,
 //! `--procs=…`, `--reps=…` to scale up.
@@ -55,11 +59,13 @@ fn models_identical(a: &Model, b: &Model) -> bool {
     }
 }
 
-/// One JSON row of `BENCH_schedulers.json` (schema 1).
+/// One JSON row of `BENCH_schedulers.json` (schema 2: adds `speculation`,
+/// `commit_lag_ms`, `cancelled_waves`, `max_queue_depth`).
 #[allow(clippy::too_many_arguments)]
 fn json_row(
     algo: &str,
     scheduler: SchedulerKind,
+    speculation: usize,
     transport: TransportKind,
     frugal: bool,
     out: &driver::RunOutput,
@@ -69,6 +75,7 @@ fn json_row(
     obj(vec![
         ("algo", Json::Str(algo.to_string())),
         ("scheduler", Json::Str(scheduler.name().to_string())),
+        ("speculation", Json::Num(speculation as f64)),
         ("transport", Json::Str(transport.name().to_string())),
         ("frugal_wire", Json::Bool(frugal)),
         ("wall_ms", Json::Num(s.total_time.as_secs_f64() * 1e3)),
@@ -85,6 +92,9 @@ fn json_row(
         ("gather_wait_ms", Json::Num(s.total_gather_wait().as_secs_f64() * 1e3)),
         ("overlap_ms", Json::Num(s.total_overlap().as_secs_f64() * 1e3)),
         ("respins", Json::Num(s.total_respins() as f64)),
+        ("cancelled_waves", Json::Num(s.total_cancelled_waves() as f64)),
+        ("commit_lag_ms", Json::Num(s.total_commit_lag().as_secs_f64() * 1e3)),
+        ("max_queue_depth", Json::Num(s.max_queue_depth() as f64)),
     ])
 }
 
@@ -141,9 +151,18 @@ fn main() {
         };
         let data = Arc::new(driver::load_or_generate(&base).expect("generate"));
 
-        let run_best = |transport: TransportKind, kind: SchedulerKind, frugal: bool, r: usize| {
-            let cfg =
-                RunConfig { transport, scheduler: kind, frugal_wire: frugal, ..base.clone() };
+        let run_best = |transport: TransportKind,
+                        kind: SchedulerKind,
+                        speculation: usize,
+                        frugal: bool,
+                        r: usize| {
+            let cfg = RunConfig {
+                transport,
+                scheduler: kind,
+                speculation,
+                frugal_wire: frugal,
+                ..base.clone()
+            };
             let mut best: Option<driver::RunOutput> = None;
             for _ in 0..r {
                 let out = driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new()))
@@ -161,21 +180,50 @@ fn main() {
 
         let mut reference: Option<driver::RunOutput> = None;
         for transport in [TransportKind::InProc, TransportKind::Tcp] {
-            let bsp = run_best(transport, SchedulerKind::Bsp, true, reps);
-            let pip = run_best(transport, SchedulerKind::Pipelined, true, reps);
+            let bsp = run_best(transport, SchedulerKind::Bsp, 1, true, reps);
+            let pip = run_best(transport, SchedulerKind::Pipelined, 2, true, reps);
             let mut identical = models_identical(&bsp.model, &pip.model)
                 && reference
                     .as_ref()
                     .map(|r| models_identical(&r.model, &bsp.model))
                     .unwrap_or(true);
 
+            // The per-depth sweep: one row per speculation depth so the
+            // trajectory (and check_bench.py's depth gate) can see how
+            // commit lag, cancellations and queue depth scale with K.
+            // Depth 2 already ran above as the table's pipelined column.
+            for depth in [1usize, 4] {
+                let out = run_best(transport, SchedulerKind::Pipelined, depth, true, 1);
+                identical = identical && models_identical(&bsp.model, &out.model);
+                if *name == "dpmeans" && transport == TransportKind::Tcp && depth == 4 {
+                    // The acceptance bar for the wave engine: at depth 4
+                    // the dpmeans tcp bench must genuinely overlap —
+                    // pipeline filled to 4 epochs, nonzero overlapped
+                    // validation — with the model still bit-identical
+                    // (checked just above).
+                    if out.summary.max_queue_depth() != 4 {
+                        failures.push(format!(
+                            "dpmeans tcp speculation=4 never filled the pipeline \
+                             (max queue_depth {})",
+                            out.summary.max_queue_depth()
+                        ));
+                    }
+                    if out.summary.total_overlap().as_nanos() == 0 {
+                        failures.push(
+                            "dpmeans tcp speculation=4 recorded zero overlap_time".into(),
+                        );
+                    }
+                }
+                rows.push(json_row(name, SchedulerKind::Pipelined, depth, transport, true, &out));
+            }
+
             // The before/after baseline: the same tcp run with the PR 3
             // embed-everything wire shape. Bytes are deterministic, so one
             // rep measures them exactly.
             let full = if transport == TransportKind::Tcp {
-                let full = run_best(transport, SchedulerKind::Bsp, false, 1);
+                let full = run_best(transport, SchedulerKind::Bsp, 1, false, 1);
                 identical = identical && models_identical(&bsp.model, &full.model);
-                rows.push(json_row(name, SchedulerKind::Bsp, transport, false, &full));
+                rows.push(json_row(name, SchedulerKind::Bsp, 1, transport, false, &full));
                 Some(full)
             } else {
                 None
@@ -232,8 +280,8 @@ fn main() {
                 pip.summary.total_respins().to_string(),
                 identical.to_string(),
             ]);
-            rows.push(json_row(name, SchedulerKind::Bsp, transport, true, &bsp));
-            rows.push(json_row(name, SchedulerKind::Pipelined, transport, true, &pip));
+            rows.push(json_row(name, SchedulerKind::Bsp, 1, transport, true, &bsp));
+            rows.push(json_row(name, SchedulerKind::Pipelined, 2, transport, true, &pip));
             if reference.is_none() {
                 reference = Some(bsp);
             }
@@ -247,7 +295,7 @@ fn main() {
     // Machine-readable results for cross-PR perf tracking (schema in the
     // README; consumed by CI's bench-smoke regression gate).
     let doc = obj(vec![
-        ("schema", Json::Num(1.0)),
+        ("schema", Json::Num(2.0)),
         ("bench", Json::Str("schedulers".to_string())),
         (
             "params",

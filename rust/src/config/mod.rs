@@ -88,7 +88,7 @@ impl SchedulerKind {
     pub fn parse(s: &str) -> Result<SchedulerKind> {
         match s.to_ascii_lowercase().as_str() {
             "bsp" | "barrier" => Ok(SchedulerKind::Bsp),
-            "pipelined" | "pipeline" => Ok(SchedulerKind::Pipelined),
+            "pipelined" | "pipeline" | "wave" | "speculative" => Ok(SchedulerKind::Pipelined),
             other => {
                 Err(Error::config(format!("unknown scheduler `{other}` (bsp|pipelined)")))
             }
@@ -206,8 +206,16 @@ pub struct RunConfig {
     pub bootstrap_div: usize,
     /// Numeric backend for the hot path.
     pub backend: BackendKind,
-    /// Epoch scheduling policy (BSP barrier vs pipelined validation).
+    /// Epoch scheduling policy (BSP barrier vs the speculative wave
+    /// engine).
     pub scheduler: SchedulerKind,
+    /// Speculation depth `K` for the wave engine: how many epochs may be
+    /// resident in the pipeline at once under `scheduler = "pipelined"`.
+    /// `1` reproduces BSP, `2` (the default) is the classic two-stage
+    /// pipeline, higher depths hide longer validation tails. Models are
+    /// bit-identical at every depth (`scheduler = "bsp"` ignores this and
+    /// pins depth 1).
+    pub speculation: usize,
     /// Cluster transport (in-process channels vs loopback TCP sockets).
     pub transport: TransportKind,
     /// Validator-shard peers on the validation plane. `0` (the default)
@@ -260,6 +268,7 @@ impl Default for RunConfig {
             bootstrap_div: 16,
             backend: BackendKind::Native,
             scheduler: SchedulerKind::Bsp,
+            speculation: 2,
             transport: TransportKind::from_env(),
             validator_shards: 0,
             peers: Vec::new(),
@@ -305,6 +314,10 @@ impl RunConfig {
         }
         if let Some(s) = doc.get_str("run.scheduler") {
             cfg.scheduler = SchedulerKind::parse(s)?;
+        }
+        if let Some(v) = doc.get_int("run.speculation") {
+            cfg.speculation = usize::try_from(v)
+                .map_err(|_| Error::config("run.speculation must be ≥ 1"))?;
         }
         if let Some(s) = doc.get_str("run.transport") {
             cfg.transport = TransportKind::parse(s)?;
@@ -385,6 +398,12 @@ impl RunConfig {
             return Err(Error::config(format!(
                 "validator_shards out of range (≤ 1024): {}",
                 self.validator_shards
+            )));
+        }
+        if self.speculation == 0 || self.speculation > 64 {
+            return Err(Error::config(format!(
+                "speculation out of range (1 ..= 64): {}",
+                self.speculation
             )));
         }
         for addr in self.peers.iter().chain(&self.validator_peers) {
@@ -540,6 +559,32 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn speculation_knob_extracts_and_validates() {
+        assert_eq!(RunConfig::default().speculation, 2, "default = classic two-stage pipeline");
+        let doc = toml::parse(
+            "[run]\nscheduler = \"pipelined\"\nspeculation = 4\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.scheduler, SchedulerKind::Pipelined);
+        assert_eq!(cfg.speculation, 4);
+        // speculation = 1 is valid (BSP-equivalent) ...
+        assert_eq!(
+            RunConfig::from_doc(&toml::parse("[run]\nspeculation = 1\n").unwrap())
+                .unwrap()
+                .speculation,
+            1
+        );
+        // ... zero and absurd depths are not.
+        assert!(RunConfig::from_doc(&toml::parse("[run]\nspeculation = 0\n").unwrap()).is_err());
+        assert!(
+            RunConfig::from_doc(&toml::parse("[run]\nspeculation = 1000\n").unwrap()).is_err()
+        );
+        // "wave" parses as an alias of the speculative engine.
+        assert_eq!(SchedulerKind::parse("wave").unwrap(), SchedulerKind::Pipelined);
     }
 
     #[test]

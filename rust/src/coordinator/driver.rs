@@ -1,15 +1,18 @@
 //! Full OCC runs: Alg 3 (DP-means), Alg 4 (OFL), Alg 6 (BP-means).
 //!
 //! The driver owns the global state and the per-pass structure; the epoch
-//! loop itself is driven by a [`scheduler::Scheduler`] (BSP barrier or
-//! pipelined — see `cfg.scheduler`), which calls back into per-algorithm
-//! [`EpochAlgo`] hooks for job construction, merging, and validation.
-//! Workers compute, the master validates (in point-index order — the
-//! Thm 3.1 serial order) and replicates state by handing later epochs an
-//! updated snapshot. All peer communication — compute waves and
-//! validation-shard dispatch alike — goes through a [`Cluster`] built from
-//! `cfg.transport` (in-proc channels or loopback TCP; see
-//! [`super::transport`]).
+//! loop itself is driven by a [`scheduler::Scheduler`] — the depth-K wave
+//! engine (`cfg.scheduler` pins depth 1 for `bsp`; `cfg.speculation` sets
+//! the depth for `pipelined`) — which calls back into per-algorithm
+//! [`EpochAlgo`] hooks for job construction ([`JobSpec`]), merging, and
+//! validation. Workers compute, the master validates (in point-index
+//! order — the Thm 3.1 serial order) on the engine's dedicated validation
+//! thread and replicates state by handing later epochs an updated
+//! snapshot. All peer communication goes through a [`Cluster`] built from
+//! `cfg.transport` (in-proc channels or TCP; see [`super::transport`]):
+//! the engine's event loop drives `cluster.compute` while each pass object
+//! carries `cluster.validate` — the split that lets validation-shard
+//! fan-out overlap the next waves' scatters and gathers.
 //!
 //! Epoch structure (Fig 5): epoch `t` covers the contiguous index range
 //! `[start + t·P·b, start + (t+1)·P·b)`; each worker gets a contiguous
@@ -18,8 +21,8 @@
 //! identical across schedulers (`rust/tests/scheduler_equivalence.rs`).
 
 use super::engine::{split_range_chunked, Job, JobOutput};
-use super::scheduler::{self, EpochAlgo, EpochCounts, Scheduler};
-use super::transport::{Cluster, Topology};
+use super::scheduler::{self, EpochAlgo, EpochCounts, JobSpec, Scheduler};
+use super::transport::{Cluster, Topology, ValidatePlane};
 use super::validator::{
     bp_validate, dp_validate_clustered, ofl_validate_clustered, BpProposal, DpProposal,
     OflProposal,
@@ -200,9 +203,11 @@ fn patch_nearest(
 // OCC DP-means (Alg 3)
 // ---------------------------------------------------------------------------
 
-/// One DP-means pass's mutable state, driven by a scheduler.
+/// One DP-means pass's mutable state, driven by a scheduler. The whole
+/// pass object (committed state + the validation-plane handle) moves to
+/// the wave engine's dedicated validation thread for the pass.
 struct DpPass<'a> {
-    cluster: &'a Cluster,
+    vplane: &'a mut ValidatePlane,
     data: &'a Dataset,
     backend: &'a Arc<dyn ComputeBackend>,
     centers: &'a mut Matrix,
@@ -222,11 +227,8 @@ impl EpochAlgo for DpPass<'_> {
         self.centers.rows
     }
 
-    fn make_jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job> {
-        ranges
-            .iter()
-            .map(|r| Job::Nearest { range: r.clone(), centers: snap.clone() })
-            .collect()
+    fn job_spec(&self) -> JobSpec {
+        JobSpec::Nearest
     }
 
     fn can_patch(&self) -> bool {
@@ -268,10 +270,10 @@ impl EpochAlgo for DpPass<'_> {
         let (proposals, keys): (Vec<DpProposal>, Vec<u32>) = pairs.into_iter().unzip();
 
         // Validation at the master: conflict pre-computation on the
-        // cluster's validator peers, then the serial point-index-order
-        // merge.
+        // cluster's validator peers (through the validation-plane handle
+        // this pass owns), then the serial point-index-order merge.
         let outcome = dp_validate_clustered(
-            self.cluster,
+            self.vplane,
             self.centers,
             base,
             &proposals,
@@ -305,13 +307,13 @@ pub fn run_dpmeans(
     let n = data.len();
     let d = data.dim();
     let lambda2 = (cfg.lambda * cfg.lambda) as f32;
-    let cluster = Cluster::spawn_topology(
+    let mut cluster = Cluster::spawn_topology(
         cfg.transport,
         data.clone(),
         backend.clone(),
         &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
-    let sched = scheduler::make(cfg.scheduler);
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation);
     let total = Stopwatch::start();
 
     let mut centers = Matrix::zeros(0, d);
@@ -343,21 +345,22 @@ pub fn run_dpmeans(
         let created0 = if pass == 0 { centers.rows } else { 0 };
 
         let epochs = epoch_ranges(start, n, cfg.points_per_epoch());
+        // Conflict-key buckets: at least one per validator peer, so every
+        // peer can own a non-empty key range (the bucket count never
+        // changes the outcome — only the parallelism).
+        let shards = cfg.procs.max(cluster.validators);
         let mut st = DpPass {
-            cluster: &cluster,
+            vplane: &mut cluster.validate,
             data: &data,
             backend: &backend,
             centers: &mut centers,
             assignments: &mut assignments,
             lambda2,
-            // Conflict-key buckets: at least one per validator peer, so
-            // every peer can own a non-empty key range (the bucket count
-            // never changes the outcome — only the parallelism).
-            shards: cfg.procs.max(cluster.validators),
+            shards,
             changed: changed0,
             created: created0,
         };
-        sched.run_pass(&cluster, &mut st, &epochs, pass, sink, &mut epochs_log)?;
+        sched.run_pass(&mut cluster.compute, &mut st, &epochs, pass, sink, &mut epochs_log)?;
         let changed = st.changed;
         created_per_pass.push(st.created);
 
@@ -442,7 +445,7 @@ pub fn run_dpmeans(
 
 /// The OFL single pass's mutable state, driven by a scheduler.
 struct OflPass<'a> {
-    cluster: &'a Cluster,
+    vplane: &'a mut ValidatePlane,
     data: &'a Dataset,
     backend: &'a Arc<dyn ComputeBackend>,
     centers: &'a mut Matrix,
@@ -462,11 +465,8 @@ impl EpochAlgo for OflPass<'_> {
         self.centers.rows
     }
 
-    fn make_jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job> {
-        ranges
-            .iter()
-            .map(|r| Job::Nearest { range: r.clone(), centers: snap.clone() })
-            .collect()
+    fn job_spec(&self) -> JobSpec {
+        JobSpec::Nearest
     }
 
     fn can_patch(&self) -> bool {
@@ -516,7 +516,7 @@ impl EpochAlgo for OflPass<'_> {
 
         let draws = self.draws;
         let outcome = ofl_validate_clustered(
-            self.cluster,
+            self.vplane,
             self.centers,
             base,
             &proposals,
@@ -551,13 +551,13 @@ pub fn run_ofl(
     let n = data.len();
     let d = data.dim();
     let lambda2 = cfg.lambda * cfg.lambda;
-    let cluster = Cluster::spawn_topology(
+    let mut cluster = Cluster::spawn_topology(
         cfg.transport,
         data.clone(),
         backend.clone(),
         &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
-    let sched = scheduler::make(cfg.scheduler);
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation);
     let total = Stopwatch::start();
 
     let draws = ofl_draws(n, cfg.seed);
@@ -567,8 +567,10 @@ pub fn run_ofl(
     let mut epochs_log = Vec::new();
 
     let epochs = epoch_ranges(0, n, cfg.points_per_epoch());
+    // See DpPass: one conflict-key bucket per validator peer minimum.
+    let shards = cfg.procs.max(cluster.validators);
     let mut st = OflPass {
-        cluster: &cluster,
+        vplane: &mut cluster.validate,
         data: &data,
         backend: &backend,
         centers: &mut centers,
@@ -576,10 +578,10 @@ pub fn run_ofl(
         opened_by: &mut opened_by,
         draws: &draws,
         lambda2,
-        // See DpPass: one conflict-key bucket per validator peer minimum.
-        shards: cfg.procs.max(cluster.validators),
+        shards,
     };
-    sched.run_pass(&cluster, &mut st, &epochs, 0, sink, &mut epochs_log)?;
+    sched.run_pass(&mut cluster.compute, &mut st, &epochs, 0, sink, &mut epochs_log)?;
+    drop(st);
 
     let model = OflModel { centers: centers.clone(), assignments, opened_by };
     let summary = RunSummary {
@@ -628,15 +630,8 @@ impl EpochAlgo for BpPass<'_> {
         self.features.rows
     }
 
-    fn make_jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job> {
-        ranges
-            .iter()
-            .map(|r| Job::BpDescend {
-                range: r.clone(),
-                features: snap.clone(),
-                sweeps: self.sweeps,
-            })
-            .collect()
+    fn job_spec(&self) -> JobSpec {
+        JobSpec::BpDescend { sweeps: self.sweeps }
     }
 
     fn can_patch(&self) -> bool {
@@ -720,13 +715,13 @@ pub fn run_bpmeans(
     // would never receive a job: one placeholder peer keeps the Cluster
     // invariants without the thread/socket cost (extra validator_peers
     // addresses are dropped by the topology).
-    let cluster = Cluster::spawn_topology(
+    let mut cluster = Cluster::spawn_topology(
         cfg.transport,
         data.clone(),
         backend.clone(),
         &Topology::of_config(cfg, 1),
     )?;
-    let sched = scheduler::make(cfg.scheduler);
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation);
     let total = Stopwatch::start();
 
     // Init (Alg 7): one feature = grand mean, z_i,0 = 1 for all i.
@@ -781,7 +776,7 @@ pub fn run_bpmeans(
             changed: changed0,
             created: created0,
         };
-        sched.run_pass(&cluster, &mut st, &epochs, pass, sink, &mut epochs_log)?;
+        sched.run_pass(&mut cluster.compute, &mut st, &epochs, pass, sink, &mut epochs_log)?;
         let changed = st.changed;
         created_per_pass.push(st.created);
 

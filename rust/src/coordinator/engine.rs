@@ -5,11 +5,13 @@
 //! see [`super::transport`]) and [`WorkerPool`], the in-process peer group:
 //! P persistent threads each owning a handle to the shared dataset and the
 //! compute backend. Every epoch (or mean-recompute phase) the master
-//! scatters one [`Job`] per peer and gathers one [`JobReply`] per peer —
-//! the gather is the BSP barrier. Channels are `std::sync::mpsc`; the
-//! per-epoch coordination cost is two sends per worker, negligible next to
-//! the numeric work. The TCP transport reuses the same job executor
-//! ([`run_job`]) behind sockets instead of channels.
+//! scatters one [`Job`] per peer and eventually gathers one [`JobReply`]
+//! per peer; several waves may be in flight at once (the wave engine's
+//! speculation), each retired by its [`WaveId`]. Channels are
+//! `std::sync::mpsc`; the per-epoch coordination cost is two sends per
+//! worker, negligible next to the numeric work. The TCP transport reuses
+//! the same job executor ([`run_job`]) behind sockets instead of
+//! channels.
 //!
 //! Workers never touch global state: they read an immutable snapshot
 //! (`Arc<Matrix>`) of the epoch's centers/features — the paper's
@@ -26,11 +28,18 @@ use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::runtime::{Block, ComputeBackend};
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Identifier of one scattered wave, unique per plane for the plane's
+/// lifetime (monotone, never reused). Returned by a scatter so the caller
+/// can retire waves by id — in any order — while several are in flight.
+pub type WaveId = u64;
 
 /// One unit of scattered work.
 pub enum Job {
@@ -167,27 +176,44 @@ pub struct JobReply {
     pub busy: Duration,
 }
 
+/// One outstanding wave's reply slots.
+struct PoolWave {
+    id: WaveId,
+    outputs: Vec<Option<JobOutput>>,
+    /// Replies still owed before the wave is fully drained.
+    remaining: usize,
+    max_busy: Duration,
+    err: Option<Error>,
+}
+
 /// Persistent worker pool.
 ///
 /// The classic use is bulk-synchronous ([`WorkerPool::scatter_gather`]);
-/// schedulers that overlap master-side validation with worker compute use
-/// the split [`WorkerPool::scatter`] / [`WorkerPool::gather`] pair instead:
-/// scatter the next epoch, do master work, then gather. At most one wave may
-/// be outstanding — `gather` is the backpressure point that bounds the
-/// pipeline at two epochs in flight (one computing here, one being
-/// validated at the master).
+/// schedulers that overlap master-side work with worker compute use the
+/// split [`WorkerPool::scatter`] / [`WorkerPool::gather_wave`] pair
+/// instead, and may keep *several* waves in flight: each worker executes
+/// its queued jobs in scatter order, so the k-th reply from worker `w`
+/// retires the k-th wave scattered — no wave tags cross the channel.
+/// Replies buffer into their wave's slots as they arrive, which is what
+/// lets [`WorkerPool::gather_wave`] retire waves in any order and
+/// [`WorkerPool::try_ready`] poll them without blocking. The speculation
+/// bound lives in the scheduler (the wave engine's depth knob), not here.
 pub struct WorkerPool {
     senders: Vec<Sender<Job>>,
     replies: Receiver<JobReply>,
     handles: Vec<JoinHandle<()>>,
     /// Number of workers.
     pub procs: usize,
-    /// Waves scattered but not yet gathered (0 or 1).
-    in_flight: std::cell::Cell<usize>,
+    /// Next wave id (monotone; never reused).
+    next_wave: Cell<WaveId>,
+    /// Outstanding waves in scatter order (front = oldest).
+    pending: RefCell<VecDeque<PoolWave>>,
+    /// Per-worker id of the wave its next reply belongs to.
+    replied: RefCell<Vec<WaveId>>,
     /// Set when a scatter failed partway: some workers own a job whose
     /// reply can no longer be paired with a wave, so further scatters
     /// would risk misattributing those stale replies.
-    poisoned: std::cell::Cell<bool>,
+    poisoned: Cell<bool>,
 }
 
 impl WorkerPool {
@@ -210,68 +236,154 @@ impl WorkerPool {
             replies,
             handles,
             procs,
-            in_flight: std::cell::Cell::new(0),
-            poisoned: std::cell::Cell::new(false),
+            next_wave: Cell::new(0),
+            pending: RefCell::new(VecDeque::new()),
+            replied: RefCell::new(vec![0; procs]),
+            poisoned: Cell::new(false),
         }
     }
 
     /// Scatter one job per worker (jobs.len() must equal procs) without
-    /// waiting for results. At most one wave may be outstanding; a matching
-    /// [`WorkerPool::gather`] must run before the next scatter.
+    /// waiting for results, returning the wave's id. Several waves may be
+    /// outstanding at once; each is retired by [`WorkerPool::gather_wave`].
     ///
     /// A scatter that fails partway (a worker's channel closed) *poisons*
     /// the pool: workers that already received their job will reply, but
-    /// those replies belong to no wave, so later scatters error out
-    /// instead of silently pairing a new wave with stale replies. (A
-    /// worker *job* failure is different — the wave completes, `gather`
-    /// reports the error, and the pool stays usable.)
-    pub fn scatter(&self, jobs: Vec<Job>) -> Result<()> {
+    /// the wave is not registered, so those replies pair with no wave and
+    /// are dropped, and later scatters error out instead of risking
+    /// misattribution. (A worker *job* failure is different — the wave
+    /// completes, its gather reports the error, and the pool stays
+    /// usable.)
+    pub fn scatter(&self, jobs: Vec<Job>) -> Result<WaveId> {
         assert_eq!(jobs.len(), self.procs);
-        assert_eq!(self.in_flight.get(), 0, "scatter with a wave still outstanding");
         if self.poisoned.get() {
-            return Err(Error::Coordinator("worker pool poisoned by an earlier failed scatter".into()));
+            return Err(Error::Coordinator(
+                "worker pool poisoned by an earlier failed scatter".into(),
+            ));
         }
+        let id = self.next_wave.get();
+        self.next_wave.set(id + 1);
         for (tx, job) in self.senders.iter().zip(jobs) {
             if tx.send(job).is_err() {
                 self.poisoned.set(true);
                 return Err(Error::Coordinator("worker channel closed".into()));
             }
         }
-        self.in_flight.set(1);
-        Ok(())
+        self.pending.borrow_mut().push_back(PoolWave {
+            id,
+            outputs: (0..self.procs).map(|_| None).collect(),
+            remaining: self.procs,
+            max_busy: Duration::ZERO,
+            err: None,
+        });
+        Ok(id)
     }
 
-    /// Gather the outstanding wave: one reply per worker, sorted by worker
-    /// id, plus the maximum per-worker busy time (the critical-path worker
-    /// time for metrics). On a worker failure the whole wave is still
-    /// drained before the error is returned, so the pool stays usable.
-    pub fn gather(&self) -> Result<(Vec<JobOutput>, Duration)> {
-        assert_eq!(self.in_flight.get(), 1, "gather without a scattered wave");
-        let mut outputs: Vec<Option<JobOutput>> = (0..self.procs).map(|_| None).collect();
-        let mut max_busy = Duration::ZERO;
-        let mut first_err = None;
-        for _ in 0..self.procs {
-            let Ok(reply) = self.replies.recv() else {
-                self.in_flight.set(0);
-                return Err(Error::Coordinator("reply channel closed".into()));
-            };
-            max_busy = max_busy.max(reply.busy);
+    /// Route one reply into its wave's slots. The wave a reply belongs to
+    /// is implied by arrival order per worker: workers run their queued
+    /// jobs in scatter order. A reply whose wave was never registered (the
+    /// partial wave behind a failed scatter) pairs with nothing and is
+    /// dropped — the pool is already poisoned at that point.
+    fn take_reply(&self, reply: JobReply) {
+        let wave_id = {
+            let mut replied = self.replied.borrow_mut();
+            let id = replied[reply.worker];
+            replied[reply.worker] += 1;
+            id
+        };
+        let mut pending = self.pending.borrow_mut();
+        if let Some(slot) = pending.iter_mut().find(|s| s.id == wave_id) {
+            slot.max_busy = slot.max_busy.max(reply.busy);
+            slot.remaining -= 1;
             match reply.output {
-                Ok(out) => outputs[reply.worker] = Some(out),
-                Err(e) => first_err = first_err.or(Some(e)),
+                Ok(out) => slot.outputs[reply.worker] = Some(out),
+                Err(e) => {
+                    if slot.err.is_none() {
+                        slot.err = Some(e);
+                    }
+                }
             }
         }
-        self.in_flight.set(0);
-        if let Some(e) = first_err {
+    }
+
+    /// Drain every reply already sitting in the channel without blocking.
+    fn pump(&self) -> Result<()> {
+        loop {
+            match self.replies.try_recv() {
+                Ok(reply) => self.take_reply(reply),
+                Err(TryRecvError::Empty) => return Ok(()),
+                Err(TryRecvError::Disconnected) => {
+                    self.poisoned.set(true);
+                    return Err(Error::Coordinator("reply channel closed".into()));
+                }
+            }
+        }
+    }
+
+    /// Non-blocking readiness check: true when every reply of `wave` has
+    /// arrived (buffered), so its gather will not block.
+    pub fn try_ready(&self, wave: WaveId) -> Result<bool> {
+        self.pump()?;
+        let pending = self.pending.borrow();
+        match pending.iter().find(|s| s.id == wave) {
+            Some(s) => Ok(s.remaining == 0),
+            None => Err(Error::Coordinator("try_ready on an unknown wave".into())),
+        }
+    }
+
+    /// Pump-free readiness probe: reports from already-buffered replies
+    /// only (false for unknown ids). Pair with one [`WorkerPool::try_ready`]
+    /// — which drains the channel for every wave at once — when polling
+    /// several in-flight waves.
+    pub fn ready_hint(&self, wave: WaveId) -> bool {
+        self.pending.borrow().iter().find(|s| s.id == wave).is_some_and(|s| s.remaining == 0)
+    }
+
+    /// Retire one outstanding wave by id: one reply per worker, sorted by
+    /// worker id, plus the maximum per-worker busy time (the critical-path
+    /// worker time for metrics). Blocks until the wave is fully drained;
+    /// replies for *other* in-flight waves arriving meanwhile buffer into
+    /// their own slots. On a worker failure the whole wave is still
+    /// drained before the error is returned, so the pool stays usable.
+    pub fn gather_wave(&self, wave: WaveId) -> Result<(Vec<JobOutput>, Duration)> {
+        assert!(
+            self.pending.borrow().iter().any(|s| s.id == wave),
+            "gather without a scattered wave"
+        );
+        loop {
+            {
+                let pending = self.pending.borrow();
+                let slot = pending.iter().find(|s| s.id == wave).expect("wave registered");
+                if slot.remaining == 0 {
+                    break;
+                }
+            }
+            let Ok(reply) = self.replies.recv() else {
+                self.poisoned.set(true);
+                return Err(Error::Coordinator("reply channel closed".into()));
+            };
+            self.take_reply(reply);
+        }
+        let mut pending = self.pending.borrow_mut();
+        let at = pending.iter().position(|s| s.id == wave).expect("wave registered");
+        let slot = pending.remove(at).expect("position valid");
+        if let Some(e) = slot.err {
             return Err(e);
         }
-        Ok((outputs.into_iter().map(|o| o.expect("worker replied")).collect(), max_busy))
+        Ok((slot.outputs.into_iter().map(|o| o.expect("worker replied")).collect(), slot.max_busy))
+    }
+
+    /// Gather the *oldest* outstanding wave — the classic split-call shape.
+    pub fn gather(&self) -> Result<(Vec<JobOutput>, Duration)> {
+        let front = self.pending.borrow().front().map(|s| s.id);
+        let id = front.expect("gather without a scattered wave");
+        self.gather_wave(id)
     }
 
     /// Scatter one job per worker and gather all replies — the BSP barrier.
     pub fn scatter_gather(&self, jobs: Vec<Job>) -> Result<(Vec<JobOutput>, Duration)> {
-        self.scatter(jobs)?;
-        self.gather()
+        let wave = self.scatter(jobs)?;
+        self.gather_wave(wave)
     }
 }
 
@@ -876,5 +988,58 @@ mod tests {
     fn gather_without_scatter_panics() {
         let (_, pool) = pool(10, 2);
         let _ = pool.gather();
+    }
+
+    /// Several waves in flight at once: replies buffer into their own
+    /// wave's slots, waves retire in any order, and the outputs are
+    /// bit-identical to barrier calls of the same jobs.
+    #[test]
+    fn multiple_waves_buffer_and_retire_out_of_order() {
+        let (data, pool) = pool(60, 2);
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        let centers = Arc::new(centers);
+        let mk = |r: Range<usize>| -> Vec<Job> {
+            split_range(r, 2)
+                .into_iter()
+                .map(|range| Job::Nearest { range, centers: centers.clone() })
+                .collect()
+        };
+        let a = pool.scatter(mk(0..30)).unwrap();
+        let b = pool.scatter(mk(30..60)).unwrap();
+        assert_ne!(a, b, "wave ids are unique");
+        // Retire the younger wave first.
+        let (outs_b, _) = pool.gather_wave(b).unwrap();
+        let (outs_a, _) = pool.gather_wave(a).unwrap();
+        let (ref_a, _) = pool.scatter_gather(mk(0..30)).unwrap();
+        let (ref_b, _) = pool.scatter_gather(mk(30..60)).unwrap();
+        for (got, want) in [(&outs_a, &ref_a), (&outs_b, &ref_b)] {
+            for (x, y) in got.iter().zip(want.iter()) {
+                let (
+                    JobOutput::Nearest { idx: ia, d2: da },
+                    JobOutput::Nearest { idx: ib, d2: db },
+                ) = (x, y)
+                else {
+                    panic!("wrong output kind");
+                };
+                assert_eq!(ia, ib);
+                assert_eq!(
+                    da.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    db.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+        // try_ready polls without blocking and flips true once the wave's
+        // replies have all buffered; a retired wave is unknown. The
+        // pump-free ready_hint agrees once a pumping call has routed the
+        // replies.
+        assert!(pool.try_ready(a).is_err(), "retired waves are unknown");
+        assert!(!pool.ready_hint(a), "retired waves hint not-ready");
+        let c = pool.scatter(mk(0..30)).unwrap();
+        while !pool.try_ready(c).unwrap() {
+            std::thread::yield_now();
+        }
+        assert!(pool.ready_hint(c), "buffered wave must hint ready without a pump");
+        pool.gather_wave(c).unwrap();
     }
 }

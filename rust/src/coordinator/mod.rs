@@ -9,31 +9,44 @@
 //!
 //! ## 1. The scheduling plane — *when* steps run
 //!
-//! [`scheduler`] owns the epoch loop: when worker waves are scattered, when
-//! the master validates, and how much of the two overlaps. `Bsp` is the
-//! paper's barrier structure (Fig 5); `Pipelined` overlaps epoch `t+1`'s
-//! compute with epoch `t`'s validation while preserving the Theorem 3.1
-//! serial order bit for bit. [`driver`] supplies the per-algorithm epoch
-//! hooks (job construction, merge, validation — OCC DP-means Alg 3, OFL
-//! Alg 4, BP-means Alg 6) plus the §4.2 bootstrap and the mean-recompute
-//! phases.
+//! [`scheduler`] owns the epoch loop: the depth-K speculative **wave
+//! engine**. Each epoch is a wave (`Scattered → Gathered → Validating →
+//! Committed | Respun`) driven by an event loop that reacts to transport
+//! readiness, with validation on a dedicated thread behind a bounded
+//! commit queue — so epoch `t`'s validation, epoch `t+1`'s gather and
+//! epoch `t+2`'s scatter proceed concurrently. The `speculation = K` knob
+//! sets how many epochs may be resident at once (1 = the paper's Fig 5
+//! barrier, 2 = the classic two-stage pipeline, higher depths hide longer
+//! validation tails); DP-means/OFL waves are delta-patched across however
+//! many commits they speculated past, and a conflicting BP-means commit
+//! cancels and respins every in-flight descendant — all preserving the
+//! Theorem 3.1 serial order bit for bit, at every depth. [`driver`]
+//! supplies the per-algorithm epoch hooks (job construction, merge,
+//! validation — OCC DP-means Alg 3, OFL Alg 4, BP-means Alg 6) plus the
+//! §4.2 bootstrap and the mean-recompute phases.
 //!
 //! ## 2. The transport plane — *where* messages move
 //!
-//! [`transport`] hides the cluster behind a `Transport` trait driven
-//! through the `Cluster` facade: scatter one [`engine::Job`] per peer,
-//! gather one reply per peer, on either of two peer groups (compute
-//! workers and validator shards). `InProc` keeps today's zero-copy fast
-//! path (`mpsc` channels, `Arc` snapshots); [`tcp`] puts every peer behind
-//! a socket and moves jobs, snapshots, replies *and the dataset itself*
-//! through [`wire`] — an explicit, versioned, length-prefixed format with
-//! bit-exact f32 encoding. A `Topology` decides where the TCP peers live:
-//! loopback threads of this process (the default, and what CI sweeps), or
+//! [`transport`] hides the cluster behind per-plane `PlaneIo` endpoints
+//! reached through the split `Cluster` facade: scatter one [`engine::Job`]
+//! per peer, gather one reply per peer, on either of two peer groups
+//! (compute workers and validator shards) — with a **multi-wave pending
+//! set**, so up to `speculation` waves are outstanding at once and retire
+//! by wave id in readiness order. The two plane handles are independently
+//! owned: the wave engine's event loop drives `cluster.compute` while the
+//! validation thread owns `cluster.validate`. In-proc planes keep the
+//! zero-copy fast path (`mpsc` channels, `Arc` snapshots); [`tcp`] puts
+//! every peer behind a socket and moves jobs, snapshots, replies *and the
+//! dataset itself* through [`wire`] — an explicit, versioned,
+//! length-prefixed format with bit-exact f32 encoding. A `Topology`
+//! decides where the TCP peers live: loopback threads of this process
+//! behind persistent listeners (the default, and what CI sweeps), or
 //! standalone `occd worker` processes addressed by `peers =
 //! ["host:port", ...]` — the multi-host deployment (see the README
 //! runbook). Sessions open with a versioned `Hello` handshake; workers are
-//! shipped exactly the point ranges their jobs read; a dropped remote peer
-//! is retried under a bounded reconnect policy and poisons only its wave.
+//! shipped exactly the point ranges their jobs read; a dropped peer —
+//! loopback or remote — is retried under one bounded reconnect policy and
+//! poisons only the waves it still owes.
 //! The per-epoch hot path is on a wire diet (default; `frugal_wire =
 //! false` restores the embed-everything shape): epoch snapshots ship as
 //! versioned *delta frames* against a per-session snapshot cache — only
@@ -65,11 +78,13 @@
 //! *identical for every worker count `P`* — proposals are merged and
 //! validated in point-index order, and block boundaries depend only on
 //! `P·b` (`rust/tests/serializability.rs`). The same invariant holds
-//! across scheduling policies (`rust/tests/scheduler_equivalence.rs`) and
-//! across transports (`rust/tests/transport_equivalence.rs`): BSP vs
-//! pipelined, in-proc vs TCP — all produce bit-identical models, because
-//! every validation call receives byte-identical inputs in the identical
-//! order no matter how the bytes travelled.
+//! across scheduling policies and speculation depths
+//! (`rust/tests/scheduler_equivalence.rs`) and across transports
+//! (`rust/tests/transport_equivalence.rs`): BSP vs the wave engine at any
+//! `speculation`, in-proc vs TCP — all produce bit-identical models,
+//! because every validation call receives byte-identical inputs in the
+//! identical order no matter how the bytes travelled or how far the
+//! pipeline speculated.
 
 pub mod driver;
 pub mod engine;
@@ -82,4 +97,4 @@ pub mod wire;
 
 pub use driver::{run, run_with, Model, RunOutput};
 pub use tcp::serve_peer;
-pub use transport::{Cluster, Topology, Transport};
+pub use transport::{Cluster, PlaneHandle, PlaneIo, Topology, ValidatePlane};

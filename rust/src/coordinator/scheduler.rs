@@ -1,75 +1,110 @@
-//! Epoch scheduling policies: when workers compute and when the master
-//! validates.
+//! The wave engine: depth-K speculative epoch scheduling with a dedicated
+//! validation thread.
 //!
 //! The driver owns *what* an epoch does (jobs, merge, validation — the
 //! [`EpochAlgo`] hooks); a [`Scheduler`] owns *when* those steps run
-//! relative to each other. Two policies are provided:
+//! relative to each other. Since the depth-K refactor there is one engine,
+//! [`WaveEngine`], parameterized by its speculation depth (the
+//! `speculation` config knob; `scheduler = "bsp"` pins depth 1):
 //!
-//! * [`Bsp`] — the paper's bulk-synchronous structure (Fig 5): scatter
-//!   epoch `t`, barrier, validate epoch `t`, repeat. The master idles while
-//!   workers compute and the workers idle while the master validates.
-//! * [`Pipelined`] — software pipelining of the epoch loop: while the
-//!   master validates epoch `t`, the workers already compute epoch `t+1`
-//!   against the *stale* snapshot `C^{t-1}`. The pipeline is bounded at two
-//!   epochs in flight (one at the workers, one at the master); the bound
-//!   falls out of [`Cluster::gather`] being the only way to retire a
-//!   wave, which is the backpressure point.
+//! * **depth 1** — the paper's bulk-synchronous structure (Fig 5): scatter
+//!   epoch `t`, barrier, validate epoch `t`, repeat. The master idles
+//!   while workers compute and the workers idle while the master
+//!   validates.
+//! * **depth 2** — the former `Pipelined` scheduler: while epoch `t`
+//!   validates, the workers compute epoch `t+1` against the stale snapshot
+//!   `C^{t-1}`.
+//! * **depth K** — up to `K` epochs resident at once: epoch `t` validating
+//!   on the validation thread, epochs `t+1 .. t+K-1` computing against
+//!   whatever snapshot generation was committed when each was scattered.
 //!
-//! Schedulers are transport-agnostic: they drive a [`Cluster`] (in-proc
-//! threads or TCP peers — see [`super::transport`]) and never see how jobs
-//! and replies actually move.
+//! ## The wave state machine
 //!
-//! ## Why pipelining preserves Theorem 3.1
+//! Each epoch becomes a *wave* carrying its snapshot generation
+//! (`snap_rows`), its transport wave id, and a state:
+//!
+//! ```text
+//!   Scattered ──gather──▶ Gathered ──dispatch──▶ Validating ──commit──▶ Committed
+//!       ▲                    │                                             │
+//!       └──────── Respun ◀───┘  (unpatchable + a conflicting commit)       ▼
+//!                                                                  (leaves the table)
+//! ```
+//!
+//! The engine is an **event loop** on the calling thread: it fills the
+//! pipeline up to the depth bound, polls the transport's multi-wave
+//! readiness ([`super::transport::PlaneHandle::try_ready`]) so waves are
+//! gathered in *arrival* order rather than epoch order, dispatches
+//! gathered waves — in epoch order — to the **validation thread** over a
+//! bounded queue, and retires commits coming back over the bounded commit
+//! queue. The validation thread owns the per-pass algorithm state (`&mut
+//! dyn EpochAlgo`) and the validation plane, so the
+//! `dp/ofl_validate_clustered` shard fan-out + tree reduce runs
+//! concurrently with the event loop's scatters and gathers: epoch `t`'s
+//! validation, epoch `t+1`'s gather, and epoch `t+2`'s scatter all proceed
+//! at once.
+//!
+//! ## Why depth-K speculation preserves Theorem 3.1
 //!
 //! Thm 3.1 says the distributed execution equals a serial one because all
-//! state mutation happens at the master, in point-index order. The
-//! pipelined scheduler does not move any mutation: validation still runs
-//! serially per epoch, in epoch order, in point-index order within the
-//! epoch. What changes is only that epoch `t+1`'s *optimistic transactions*
-//! execute against `C^{t-1}` instead of `C^{t}`. Before epoch `t+1` is
-//! validated, the scheduler restores the exact BSP-visible state:
+//! state mutation happens at the master, in point-index order. The wave
+//! engine does not move any mutation: validation still runs serially per
+//! epoch, in epoch order (the dispatch queue is epoch-ordered and the
+//! validation thread is single), in point-index order within the epoch.
+//! What changes is only that epoch `t`'s *optimistic transactions* execute
+//! against a snapshot up to `K-1` commits old. Before epoch `t` is
+//! validated, the engine restores the exact BSP-visible state:
 //!
 //! * **Patchable algorithms** (DP-means, OFL — per-point nearest-center
-//!   queries): the master computes each point's nearest center among the
-//!   *delta* rows `C^{t} \ C^{t-1}` and folds it into the stale result with
-//!   a strict `<` comparison. Per-(point, center) distances in the blocked
-//!   kernel depend only on the pair — not on which other centers share the
-//!   call — and the fold mirrors the kernel's first-minimum tie-break
-//!   (delta rows have strictly higher indices and win only on strictly
-//!   smaller distance), so the patched `(idx, d²)` equals a fresh scan of
-//!   `C^{t}` *bit for bit*. Validation then sees byte-identical inputs in
-//!   the identical order, and Thm 3.1's serial equivalence carries over
-//!   unchanged. (The patch itself runs on the master, overlapped with the
-//!   next wave's compute.)
+//!   queries): the validation thread computes each point's nearest center
+//!   among the *delta* rows — everything committed after the wave's
+//!   snapshot generation, which under depth-K speculation can span several
+//!   commits — and folds it into the stale result with a strict `<`
+//!   comparison. Per-(point, center) distances in the blocked kernel
+//!   depend only on the pair — not on which other centers share the call —
+//!   and the fold mirrors the kernel's first-minimum tie-break (delta rows
+//!   sit at strictly higher indices and win only on strictly smaller
+//!   distance), so the patched `(idx, d²)` equals a fresh scan of the
+//!   committed state *bit for bit* regardless of how many generations the
+//!   delta spans. Validation then sees byte-identical inputs in the
+//!   identical order, and Thm 3.1's serial equivalence carries over
+//!   unchanged.
 //! * **Unpatchable algorithms** (BP-means — coordinate descent is a joint
-//!   optimization over the feature set, not a per-row reduction): the
-//!   speculative result is only used when the previous epoch committed
-//!   nothing (the delta is empty, so the "stale" snapshot *is* `C^{t}`).
-//!   Otherwise the scheduler redoes the epoch against the committed
-//!   snapshot — a pipeline bubble, counted in
-//!   [`EpochRecord::respins`] — which is literally the BSP computation.
-//!   Acceptances decay geometrically over a run (Thm 3.2 / Fig 3), so late
-//!   epochs overlap at full efficiency.
+//!   optimization over the feature set, not a per-row reduction): a wave's
+//!   speculative result is only used when its snapshot still equals the
+//!   committed state at dispatch time. When a commit grows the state, the
+//!   engine *cancels every in-flight descendant wave* — their replies are
+//!   drained and discarded (jobs cannot be aborted mid-compute) and the
+//!   epochs are re-scattered against the committed snapshot, counted in
+//!   [`EpochRecord::respins`] (on the respun epoch) and
+//!   [`EpochRecord::cancelled_waves`] (on the commit that forced it). A
+//!   respun wave is literally the BSP computation, so nothing stale can
+//!   ever commit. Acceptances decay geometrically over a run (Thm 3.2 /
+//!   Fig 3), so late epochs speculate at full efficiency.
 //!
-//! In both cases the inputs reaching each validation call, and the order of
-//! validation calls, are exactly those of the BSP schedule — so the models
-//! produced are bit-identical (`rust/tests/scheduler_equivalence.rs`
-//! enforces this across algorithms, worker counts and block sizes).
+//! In both cases the inputs reaching each validation call, and the order
+//! of validation calls, are exactly those of the BSP schedule — so the
+//! models produced are bit-identical at every depth
+//! (`rust/tests/scheduler_equivalence.rs` sweeps `speculation ∈ {1, 2, 4}`
+//! across algorithms, worker counts and transports).
 //!
 //! Within an epoch, validation itself is sharded by conflict key
-//! ([`super::validator::dp_validate_sharded`]): same-key proposal pairs get
-//! their conflict distances precomputed in parallel, and a final serial
-//! merge in point-index order replays the exact Thm 3.1 serial decision
-//! sequence from cached (bit-identical) distances.
+//! ([`super::validator::dp_validate_clustered`]): same-key proposal pairs
+//! get their conflict distances precomputed on the cluster's validation
+//! plane — which the validation thread owns, so the fan-out overlaps the
+//! event loop — and a final serial merge in point-index order replays the
+//! exact Thm 3.1 serial decision sequence from cached (bit-identical)
+//! distances.
 
 use super::engine::{split_range, Job, JobOutput};
-use super::transport::Cluster;
-use crate::error::Result;
+use super::transport::{PlaneHandle, WaveId};
+use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::metrics::{EpochRecord, MetricsSink, Stopwatch};
+use std::collections::VecDeque;
 use std::ops::Range;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// What one epoch's validation reported back to the scheduler.
 #[derive(Debug, Clone, Copy, Default)]
@@ -84,20 +119,57 @@ pub struct EpochCounts {
     pub state_rows: usize,
 }
 
+/// How an algorithm's epoch jobs are built from a snapshot — a plain value
+/// (no borrow of the algorithm state) so the event loop can scatter
+/// speculative waves while the validation thread owns the `EpochAlgo`.
+#[derive(Debug, Clone, Copy)]
+pub enum JobSpec {
+    /// Nearest-center assignment against the snapshot (DP-means, OFL).
+    Nearest,
+    /// BP-means coordinate descent against the snapshot.
+    BpDescend {
+        /// Coordinate-descent sweeps per job.
+        sweeps: usize,
+    },
+}
+
+impl JobSpec {
+    /// One worker job per range, against snapshot `snap`.
+    pub fn jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job> {
+        match self {
+            JobSpec::Nearest => ranges
+                .iter()
+                .map(|r| Job::Nearest { range: r.clone(), centers: snap.clone() })
+                .collect(),
+            JobSpec::BpDescend { sweeps } => ranges
+                .iter()
+                .map(|r| Job::BpDescend {
+                    range: r.clone(),
+                    features: snap.clone(),
+                    sweeps: *sweeps,
+                })
+                .collect(),
+        }
+    }
+}
+
 /// Algorithm-specific hooks one pass's epochs are driven through.
 ///
 /// Implementations own the committed global state (centers/features and
-/// assignments) and all merge/validation logic; schedulers only decide when
-/// each hook runs and against which snapshot.
-pub trait EpochAlgo {
+/// assignments) and all merge/validation logic; the engine only decides
+/// when each hook runs and against which snapshot. The whole object moves
+/// to the dedicated validation thread for the pass (hence the `Send`
+/// bound), which is also why job construction is a detached [`JobSpec`]
+/// value rather than a method the event loop would have to call.
+pub trait EpochAlgo: Send {
     /// Clone of the committed global state, to ship to workers.
     fn snapshot(&self) -> Arc<Matrix>;
 
     /// Rows of the committed global state (cheap; used to detect staleness).
     fn committed_rows(&self) -> usize;
 
-    /// One worker job per range, against snapshot `snap`.
-    fn make_jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job>;
+    /// How this algorithm's epoch jobs are built from a snapshot.
+    fn job_spec(&self) -> JobSpec;
 
     /// Whether outputs computed against a stale snapshot can be patched at
     /// the master into exactly what a fresh compute would return (DP/OFL
@@ -106,7 +178,8 @@ pub trait EpochAlgo {
 
     /// Patch `outs` (computed against the first `stale_rows` committed
     /// rows) to equal, bit for bit, a compute against the full committed
-    /// state. Only called when `can_patch()` and the state actually grew.
+    /// state. Only called when `can_patch()` and the state actually grew;
+    /// the delta may span several commits under depth-K speculation.
     fn patch(
         &mut self,
         outs: &mut [JobOutput],
@@ -125,14 +198,14 @@ pub trait Scheduler {
     fn name(&self) -> &'static str;
 
     /// Drive one pass's epochs (contiguous point ranges, in order) through
-    /// `algo` on `cluster`, emitting one [`EpochRecord`] per epoch.
-    /// Transport accounting (`wire_bytes`, `ser_ms`) is recorded as
-    /// per-epoch deltas of [`Cluster::stats`]; under the pipelined policy
-    /// the speculative scatter of epoch `t+1` is attributed to the epoch
-    /// whose validation it overlaps.
+    /// `algo` on the cluster's compute plane, emitting one [`EpochRecord`]
+    /// per epoch (in epoch order, at commit time). Transport accounting
+    /// (`wire_bytes`, `ser_time`, …) is recorded as per-epoch deltas of
+    /// the cluster-wide stats; traffic of overlapped waves is attributed
+    /// to the epoch whose commit window it fell into.
     fn run_pass(
         &self,
-        cluster: &Cluster,
+        compute: &mut PlaneHandle,
         algo: &mut dyn EpochAlgo,
         epochs: &[Range<usize>],
         pass: usize,
@@ -141,95 +214,206 @@ pub trait Scheduler {
     ) -> Result<()>;
 }
 
-/// Build the scheduler a config names.
-pub fn make(kind: crate::config::SchedulerKind) -> Box<dyn Scheduler> {
-    match kind {
-        crate::config::SchedulerKind::Bsp => Box::new(Bsp),
-        crate::config::SchedulerKind::Pipelined => Box::new(Pipelined),
-    }
+/// Build the scheduler a config names: `bsp` pins the wave engine at depth
+/// 1 (the strict barrier), `pipelined` runs it at the configured
+/// `speculation` depth (default 2 — the former two-stage pipeline).
+pub fn make(kind: crate::config::SchedulerKind, speculation: usize) -> Box<dyn Scheduler> {
+    let depth = match kind {
+        crate::config::SchedulerKind::Bsp => 1,
+        crate::config::SchedulerKind::Pipelined => speculation.max(1),
+    };
+    Box::new(WaveEngine { depth })
 }
 
-/// Scatter one epoch against the current committed snapshot; returns the
-/// per-worker ranges and the snapshot's row count (for staleness checks).
-fn scatter_epoch(
-    cluster: &Cluster,
-    algo: &dyn EpochAlgo,
-    epoch: &Range<usize>,
-) -> Result<(Vec<Range<usize>>, usize)> {
-    let snap = algo.snapshot();
-    let ranges = split_range(epoch.clone(), cluster.procs);
-    cluster.scatter(algo.make_jobs(&snap, &ranges))?;
-    Ok((ranges, snap.rows))
+/// Wave lifecycle within the engine's table. `Committed` and `Respun` are
+/// transitions rather than resident states: a committed wave leaves the
+/// table, a respun wave returns to `Scattered` with `respins + 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WaveState {
+    /// Jobs are at the workers; the reply set is not complete yet.
+    Scattered,
+    /// All replies buffered; waiting for its dispatch turn.
+    Gathered,
+    /// On the validation thread (or queued to it), in epoch order.
+    Validating,
 }
 
-/// The bulk-synchronous schedule (the seed's behavior, extracted).
-pub struct Bsp;
+/// One epoch resident in the pipeline.
+struct Wave {
+    epoch: usize,
+    id: WaveId,
+    ranges: Vec<Range<usize>>,
+    /// Committed rows of the snapshot this wave's jobs were built against.
+    snap_rows: usize,
+    state: WaveState,
+    outs: Option<Vec<JobOutput>>,
+    /// First scatter (epoch wall-clock starts here; respins don't reset it).
+    first_scatter: Instant,
+    /// Latest scatter (respins reset it).
+    scattered_at: Instant,
+    gathered_at: Option<Instant>,
+    dispatched_at: Option<Instant>,
+    /// Completed in-flight compute intervals, including cancelled waves'.
+    flight: Vec<(Instant, Instant)>,
+    /// Critical-path worker time, accumulated across respins.
+    worker_time: Duration,
+    respins: usize,
+    /// Max epochs resident in the pipeline while this wave lived.
+    depth_seen: usize,
+}
 
-impl Scheduler for Bsp {
-    fn name(&self) -> &'static str {
-        "bsp"
-    }
+/// One gathered wave handed to the validation thread.
+struct VReq {
+    epoch: usize,
+    outs: Vec<JobOutput>,
+    ranges: Vec<Range<usize>>,
+    snap_rows: usize,
+    gathered_at: Instant,
+}
 
-    fn run_pass(
-        &self,
-        cluster: &Cluster,
-        algo: &mut dyn EpochAlgo,
-        epochs: &[Range<usize>],
-        pass: usize,
-        sink: &mut MetricsSink,
-        log: &mut Vec<EpochRecord>,
-    ) -> Result<()> {
-        for (t, epoch) in epochs.iter().enumerate() {
-            let net0 = cluster.stats();
-            let epoch_sw = Stopwatch::start();
-            let (ranges, _) = scatter_epoch(cluster, &*algo, epoch)?;
-            let (outs, worker_time) = cluster.gather()?;
-            let master_sw = Stopwatch::start();
-            let counts = algo.validate(&outs, &ranges)?;
-            let master_time = master_sw.elapsed();
-            let net = cluster.stats().since(&net0);
-            let rec = EpochRecord {
-                iteration: pass,
-                epoch: t,
-                points: epoch.len(),
-                proposed: counts.proposed,
-                accepted: counts.accepted,
-                rejected: counts.rejected,
-                centers: counts.state_rows,
-                worker_time,
-                master_time,
-                total_time: epoch_sw.elapsed(),
-                overlap_time: Duration::ZERO,
-                queue_depth: 1,
-                respins: 0,
-                wire_bytes: net.wire_bytes,
-                unique_payload_bytes: net.unique_payload_bytes,
-                delta_bytes: net.delta_bytes,
-                full_snapshot_fallbacks: net.full_snapshot_fallbacks,
-                ser_time: net.ser_time,
-                gather_wait_time: net.gather_wait_time,
-                dataset_bytes: net.dataset_bytes,
-                handshake_time: net.handshake_time,
-            };
-            sink.emit(&rec);
-            log.push(rec);
+/// One commit coming back from the validation thread.
+struct VCommit {
+    epoch: usize,
+    counts: EpochCounts,
+    /// The freshly committed state, for later scatters.
+    snapshot: Arc<Matrix>,
+    /// Wall-clock the validation thread spent on this epoch (patch + merge
+    /// + validate).
+    master_time: Duration,
+    /// Gather-complete → commit-applied: queue wait plus `master_time`.
+    commit_lag: Duration,
+}
+
+/// The validation thread's body: drain gathered waves in dispatch (epoch)
+/// order, patch + validate each against the live algorithm state, and push
+/// commits into the bounded commit queue. Exits when the request channel
+/// closes or after reporting an error.
+fn validation_loop(
+    algo: &mut dyn EpochAlgo,
+    rx: Receiver<VReq>,
+    tx: SyncSender<Result<VCommit>>,
+) {
+    while let Ok(req) = rx.recv() {
+        let res = validate_one(algo, req);
+        let failed = res.is_err();
+        if tx.send(res).is_err() || failed {
+            return;
         }
-        Ok(())
     }
 }
 
-/// The pipelined schedule: overlap epoch `t`'s validation with epoch
-/// `t+1`'s compute. See the module docs for the equivalence argument.
-pub struct Pipelined;
+fn validate_one(algo: &mut dyn EpochAlgo, req: VReq) -> Result<VCommit> {
+    let VReq { epoch, mut outs, ranges, snap_rows, gathered_at } = req;
+    let sw = Stopwatch::start();
+    if snap_rows < algo.committed_rows() {
+        if !algo.can_patch() {
+            // The event loop's respin policy must have re-run this wave
+            // against the committed snapshot before dispatching it.
+            return Err(Error::Coordinator(
+                "stale unpatchable wave reached validation (respin policy bug)".into(),
+            ));
+        }
+        algo.patch(&mut outs, &ranges, snap_rows)?;
+    }
+    let counts = algo.validate(&outs, &ranges)?;
+    Ok(VCommit {
+        epoch,
+        counts,
+        snapshot: algo.snapshot(),
+        master_time: sw.elapsed(),
+        commit_lag: gathered_at.elapsed(),
+    })
+}
 
-impl Scheduler for Pipelined {
+/// Fold the current pipeline depth into every live wave's high-water mark.
+fn note_depth(live: &mut VecDeque<Wave>, depth: usize) {
+    for w in live.iter_mut() {
+        w.depth_seen = w.depth_seen.max(depth);
+    }
+}
+
+/// Total wall-clock of the window covered by the union of `intervals` —
+/// how much of a validation window had worker compute in flight.
+fn interval_overlap(win: (Instant, Instant), mut intervals: Vec<(Instant, Instant)>) -> Duration {
+    let (ws, we) = win;
+    intervals.retain(|&(s, e)| e > ws && s < we);
+    intervals.sort_by_key(|&(s, _)| s);
+    let mut total = Duration::ZERO;
+    let mut cur: Option<(Instant, Instant)> = None;
+    for (s, e) in intervals {
+        let s = s.max(ws);
+        let e = e.min(we);
+        match cur {
+            Some((cs, ce)) => {
+                if s <= ce {
+                    cur = Some((cs, ce.max(e)));
+                } else {
+                    total += ce.duration_since(cs);
+                    cur = Some((s, e));
+                }
+            }
+            None => cur = Some((s, e)),
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce.duration_since(cs);
+    }
+    total
+}
+
+/// Cancel-and-respin one wave: drain its in-flight replies (jobs cannot be
+/// aborted mid-compute), discard the speculative outputs, and rescatter
+/// the epoch against the committed snapshot. The drained compute time
+/// still counts toward the epoch's `worker_time` (it was real work), and
+/// the discarded flight interval still feeds the overlap accounting.
+fn respin_wave(
+    compute: &mut PlaneHandle,
+    spec: &JobSpec,
+    snap: &Arc<Matrix>,
+    w: &mut Wave,
+) -> Result<()> {
+    if w.state == WaveState::Scattered {
+        // The transport retires the wave even when its gather reports a
+        // job failure, so leave `Scattered` before propagating: the
+        // shutdown sweep must never gather the same id twice.
+        w.state = WaveState::Gathered;
+        let (_discarded, busy) = compute.gather(w.id)?;
+        w.worker_time += busy;
+        w.flight.push((w.scattered_at, Instant::now()));
+    }
+    w.outs = None;
+    w.gathered_at = None;
+    // Only a successful rescatter returns the wave to `Scattered` — a
+    // scatter failure must not leave a retired id marked in-flight.
+    w.state = WaveState::Gathered;
+    w.id = compute.scatter(spec.jobs(snap, &w.ranges))?;
+    w.snap_rows = snap.rows;
+    w.state = WaveState::Scattered;
+    w.scattered_at = Instant::now();
+    w.respins += 1;
+    Ok(())
+}
+
+/// The depth-K speculative wave engine. See the module docs for the state
+/// machine and the serializability argument.
+pub struct WaveEngine {
+    /// Max epochs resident in the pipeline (`speculation`): 1 = BSP, 2 =
+    /// the former two-stage pipeline, higher = deeper speculation.
+    pub depth: usize,
+}
+
+impl Scheduler for WaveEngine {
     fn name(&self) -> &'static str {
-        "pipelined"
+        if self.depth <= 1 {
+            "bsp"
+        } else {
+            "wave"
+        }
     }
 
     fn run_pass(
         &self,
-        cluster: &Cluster,
+        compute: &mut PlaneHandle,
         algo: &mut dyn EpochAlgo,
         epochs: &[Range<usize>],
         pass: usize,
@@ -239,89 +423,267 @@ impl Scheduler for Pipelined {
         if epochs.is_empty() {
             return Ok(());
         }
-        let mut net0 = cluster.stats();
-        let mut inflight = Some(scatter_epoch(cluster, &*algo, &epochs[0])?);
-        for (t, epoch) in epochs.iter().enumerate() {
-            let epoch_sw = Stopwatch::start();
-            let (ranges, stale_rows) = inflight.take().expect("pipeline wave missing");
-            let (mut outs, mut worker_time) = cluster.gather()?;
-            let stale = stale_rows < algo.committed_rows();
-            let mut respins = 0;
-            // Single-wave compute time, for the overlap estimate below
-            // (worker_time itself accumulates the redo wave on a respin).
-            let mut wave_time = worker_time;
-            if stale && !algo.can_patch() {
-                // Speculation conflict on an unpatchable algorithm: redo
-                // the epoch against the committed snapshot (the BSP
-                // computation) before anything else enters the queue.
-                respins = 1;
-                let snap = algo.snapshot();
-                cluster.scatter(algo.make_jobs(&snap, &ranges))?;
-                let (fresh, wt) = cluster.gather()?;
-                outs = fresh;
-                worker_time += wt;
-                wave_time = wt;
+        let depth = self.depth.max(1);
+        let spec = algo.job_spec();
+        let patchable = algo.can_patch();
+        let mut snap = algo.snapshot();
+        let procs = compute.procs;
+        let mut net0 = compute.stats();
+
+        std::thread::scope(|scope| -> Result<()> {
+            // Bounded queues both ways: at most `depth` waves can be past
+            // their gather, so neither side ever blocks the other into a
+            // deadlock — the event loop drains commits every iteration,
+            // and dispatches never exceed the pipeline bound.
+            let (req_tx, req_rx) = sync_channel::<VReq>(depth);
+            let (res_tx, res_rx) = sync_channel::<Result<VCommit>>(depth);
+            // Joined implicitly at scope exit; exits when `req_tx` drops.
+            let _validation = scope.spawn(move || validation_loop(algo, req_rx, res_tx));
+
+            let mut live: VecDeque<Wave> = VecDeque::new();
+            let mut next_scatter = 0usize; // next epoch to scatter
+            let mut next_dispatch = 0usize; // next epoch to hand to validation
+            let mut next_commit = 0usize; // next epoch expecting a commit
+
+            let run = (|| -> Result<()> {
+                while next_commit < epochs.len() {
+                    let mut progressed = false;
+
+                    // 1. Fill the pipeline up to the speculation depth.
+                    while next_scatter < epochs.len() && next_scatter - next_commit < depth {
+                        let ranges = split_range(epochs[next_scatter].clone(), procs);
+                        let id = compute.scatter(spec.jobs(&snap, &ranges))?;
+                        let now = Instant::now();
+                        live.push_back(Wave {
+                            epoch: next_scatter,
+                            id,
+                            ranges,
+                            snap_rows: snap.rows,
+                            state: WaveState::Scattered,
+                            outs: None,
+                            first_scatter: now,
+                            scattered_at: now,
+                            gathered_at: None,
+                            dispatched_at: None,
+                            flight: Vec::new(),
+                            worker_time: Duration::ZERO,
+                            respins: 0,
+                            depth_seen: 0,
+                        });
+                        next_scatter += 1;
+                        note_depth(&mut live, next_scatter - next_commit);
+                        progressed = true;
+                    }
+
+                    // 2. Retire ready waves in *arrival* order. When the
+                    //    validation thread is idle, the oldest undispatched
+                    //    wave gates all progress — block in its gather;
+                    //    otherwise poll readiness and keep moving. One
+                    //    `try_ready` pumps the whole plane, so the other
+                    //    waves are probed with the pump-free `ready_hint`
+                    //    — a poll tick costs one pump regardless of depth.
+                    let validating = next_dispatch > next_commit;
+                    let mut pumped = false;
+                    for w in live.iter_mut() {
+                        if w.state != WaveState::Scattered {
+                            continue;
+                        }
+                        let ready = if !validating && w.epoch == next_dispatch {
+                            true // blocking gather below: nothing else can progress
+                        } else if !pumped {
+                            pumped = true;
+                            compute.try_ready(w.id)?
+                        } else {
+                            compute.ready_hint(w.id)
+                        };
+                        if !ready {
+                            continue;
+                        }
+                        // The transport retires the wave even when its
+                        // gather reports a job failure — flip the state
+                        // before the `?` so the shutdown sweep cannot
+                        // gather the same id twice.
+                        w.state = WaveState::Gathered;
+                        let (outs, busy) = compute.gather(w.id)?;
+                        let now = Instant::now();
+                        w.outs = Some(outs);
+                        w.gathered_at = Some(now);
+                        w.flight.push((w.scattered_at, now));
+                        w.worker_time += busy;
+                        progressed = true;
+                    }
+
+                    // 3. Dispatch the next epoch (strictly in epoch order)
+                    //    to the validation thread. Patchable algorithms
+                    //    enqueue as soon as the wave is gathered — the
+                    //    patch spans however many commits land before it
+                    //    runs. Unpatchable ones wait until every earlier
+                    //    epoch committed, then go fresh (or respin — a
+                    //    defensive arm; the commit handler respins
+                    //    descendants eagerly).
+                    if next_dispatch < next_scatter {
+                        let w = live
+                            .iter_mut()
+                            .find(|w| w.epoch == next_dispatch)
+                            .expect("undispatched wave is live");
+                        if w.state == WaveState::Gathered
+                            && (patchable || next_commit == next_dispatch)
+                        {
+                            if patchable || w.snap_rows == snap.rows {
+                                let outs = w.outs.take().expect("gathered wave has outputs");
+                                w.dispatched_at = Some(Instant::now());
+                                w.state = WaveState::Validating;
+                                req_tx
+                                    .send(VReq {
+                                        epoch: w.epoch,
+                                        outs,
+                                        ranges: w.ranges.clone(),
+                                        snap_rows: w.snap_rows,
+                                        gathered_at: w.gathered_at.expect("gathered"),
+                                    })
+                                    .map_err(|_| {
+                                        Error::Coordinator(
+                                            "validation thread terminated early".into(),
+                                        )
+                                    })?;
+                                next_dispatch += 1;
+                            } else {
+                                respin_wave(compute, &spec, &snap, w)?;
+                            }
+                            progressed = true;
+                        }
+                    }
+
+                    // 4. Drain commits. Block briefly only when nothing
+                    //    else progressed and a validation is outstanding.
+                    loop {
+                        let res = if progressed {
+                            match res_rx.try_recv() {
+                                Ok(r) => Some(r),
+                                Err(TryRecvError::Empty) => None,
+                                Err(TryRecvError::Disconnected) => {
+                                    return Err(Error::Coordinator(
+                                        "validation thread terminated early".into(),
+                                    ))
+                                }
+                            }
+                        } else if next_dispatch > next_commit {
+                            match res_rx.recv_timeout(Duration::from_micros(200)) {
+                                Ok(r) => Some(r),
+                                Err(RecvTimeoutError::Timeout) => None,
+                                Err(RecvTimeoutError::Disconnected) => {
+                                    return Err(Error::Coordinator(
+                                        "validation thread terminated early".into(),
+                                    ))
+                                }
+                            }
+                        } else {
+                            // Nothing validating and nothing readable:
+                            // yield briefly before the next readiness poll.
+                            std::thread::sleep(Duration::from_micros(100));
+                            None
+                        };
+                        let Some(res) = res else { break };
+                        let commit = res?;
+                        debug_assert_eq!(commit.epoch, next_commit, "commits retire in order");
+                        snap = commit.snapshot.clone();
+
+                        // Respin policy: a commit that grew the state
+                        // invalidates every in-flight unpatchable
+                        // descendant — cancel them all (drain + rescatter
+                        // against the committed snapshot), in epoch order.
+                        let mut cancelled = 0usize;
+                        if !patchable {
+                            for w in live.iter_mut() {
+                                if w.epoch > commit.epoch && w.snap_rows < snap.rows {
+                                    respin_wave(compute, &spec, &snap, w)?;
+                                    cancelled += 1;
+                                }
+                            }
+                        }
+
+                        let at = live
+                            .iter()
+                            .position(|w| w.epoch == commit.epoch)
+                            .expect("committed wave is live");
+                        let w = live.remove(at).expect("position valid");
+                        debug_assert_eq!(w.state, WaveState::Validating);
+                        next_commit += 1;
+                        note_depth(&mut live, next_scatter - next_commit);
+
+                        // Overlap: how much of this epoch's validation
+                        // window (dispatch → commit) had other waves'
+                        // compute in flight, capped at the validation
+                        // thread's own wall-clock.
+                        let now = Instant::now();
+                        let window = (w.dispatched_at.expect("dispatched"), now);
+                        let mut intervals: Vec<(Instant, Instant)> = Vec::new();
+                        for other in live.iter() {
+                            intervals.extend(other.flight.iter().copied());
+                            if other.state == WaveState::Scattered {
+                                intervals.push((other.scattered_at, now));
+                            }
+                        }
+                        let overlap =
+                            interval_overlap(window, intervals).min(commit.master_time);
+
+                        let net_now = compute.stats();
+                        let net = net_now.since(&net0);
+                        net0 = net_now;
+                        let rec = EpochRecord {
+                            iteration: pass,
+                            epoch: w.epoch,
+                            points: epochs[w.epoch].len(),
+                            proposed: commit.counts.proposed,
+                            accepted: commit.counts.accepted,
+                            rejected: commit.counts.rejected,
+                            centers: commit.counts.state_rows,
+                            worker_time: w.worker_time,
+                            master_time: commit.master_time,
+                            total_time: now.duration_since(w.first_scatter),
+                            overlap_time: overlap,
+                            queue_depth: w.depth_seen,
+                            respins: w.respins,
+                            cancelled_waves: cancelled,
+                            commit_lag: commit.commit_lag,
+                            wire_bytes: net.wire_bytes,
+                            unique_payload_bytes: net.unique_payload_bytes,
+                            delta_bytes: net.delta_bytes,
+                            full_snapshot_fallbacks: net.full_snapshot_fallbacks,
+                            ser_time: net.ser_time,
+                            gather_wait_time: net.gather_wait_time,
+                            dataset_bytes: net.dataset_bytes,
+                            handshake_time: net.handshake_time,
+                        };
+                        sink.emit(&rec);
+                        log.push(rec);
+                        progressed = true;
+                    }
+                }
+                Ok(())
+            })();
+
+            // Shutdown (success or error): close the request channel so
+            // the validation thread exits once its queue drains, drain any
+            // commits still in flight so its bounded sends never block,
+            // then retire un-gathered transport waves so the plane is
+            // clean for the next pass (or the driver's teardown).
+            drop(req_tx);
+            while res_rx.recv().is_ok() {}
+            for w in live.iter() {
+                if w.state == WaveState::Scattered {
+                    let _ = compute.gather(w.id);
+                }
             }
-            // Speculative scatter of epoch t+1 against the still-uncommitted
-            // state — this is what overlaps the master work below.
-            let speculating = t + 1 < epochs.len();
-            if speculating {
-                inflight = Some(scatter_epoch(cluster, &*algo, &epochs[t + 1])?);
-            }
-            let master_sw = Stopwatch::start();
-            if stale && algo.can_patch() {
-                algo.patch(&mut outs, &ranges, stale_rows)?;
-            }
-            let counts = algo.validate(&outs, &ranges)?;
-            let master_time = master_sw.elapsed();
-            // Wire accounting between consecutive record points: includes
-            // this epoch's gather, its redo wave if any, the speculative
-            // scatter of epoch t+1, and any validation-plane traffic.
-            let net_now = cluster.stats();
-            let net = net_now.since(&net0);
-            net0 = net_now;
-            let rec = EpochRecord {
-                iteration: pass,
-                epoch: t,
-                points: epoch.len(),
-                proposed: counts.proposed,
-                accepted: counts.accepted,
-                rejected: counts.rejected,
-                centers: counts.state_rows,
-                worker_time,
-                master_time,
-                total_time: epoch_sw.elapsed(),
-                // Master work hidden behind the in-flight wave. The next
-                // wave's completion time isn't known yet, so estimate
-                // conservatively with this epoch's single-wave critical-path
-                // compute time (waves are homogeneous in size): validation
-                // beyond that likely ran against an already-drained pool.
-                overlap_time: if speculating {
-                    master_time.min(wave_time)
-                } else {
-                    Duration::ZERO
-                },
-                queue_depth: 1 + usize::from(speculating),
-                respins,
-                wire_bytes: net.wire_bytes,
-                unique_payload_bytes: net.unique_payload_bytes,
-                delta_bytes: net.delta_bytes,
-                full_snapshot_fallbacks: net.full_snapshot_fallbacks,
-                ser_time: net.ser_time,
-                gather_wait_time: net.gather_wait_time,
-                dataset_bytes: net.dataset_bytes,
-                handshake_time: net.handshake_time,
-            };
-            sink.emit(&rec);
-            log.push(rec);
-        }
-        Ok(())
+            run
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::transport::Cluster;
 
     /// A synthetic EpochAlgo that records the exact call sequence and
     /// snapshot rows it was driven with, growing its "state" by one row per
@@ -351,11 +713,8 @@ mod tests {
         fn committed_rows(&self) -> usize {
             self.state.rows
         }
-        fn make_jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job> {
-            ranges
-                .iter()
-                .map(|r| Job::Nearest { range: r.clone(), centers: snap.clone() })
-                .collect()
+        fn job_spec(&self) -> JobSpec {
+            JobSpec::Nearest
         }
         fn can_patch(&self) -> bool {
             self.patchable
@@ -396,29 +755,35 @@ mod tests {
         Cluster::spawn(crate::config::TransportKind::InProc, data, backend, 2, 1).unwrap()
     }
 
-    fn drive(sched: &dyn Scheduler, algo: &mut Scripted) -> Vec<EpochRecord> {
-        let cluster = cluster2();
+    fn drive(depth: usize, algo: &mut Scripted) -> Vec<EpochRecord> {
+        let mut cluster = cluster2();
         let epochs = vec![0..16, 16..32, 32..48, 48..64];
         let mut sink = MetricsSink::Null;
         let mut log = Vec::new();
-        sched.run_pass(&cluster, algo, &epochs, 0, &mut sink, &mut log).unwrap();
+        WaveEngine { depth }
+            .run_pass(&mut cluster.compute, algo, &epochs, 0, &mut sink, &mut log)
+            .unwrap();
         log
     }
 
     #[test]
-    fn bsp_validates_every_epoch_without_overlap() {
+    fn depth1_is_bsp_without_overlap_or_patches() {
         let mut algo = Scripted::new(true, true);
-        let log = drive(&Bsp, &mut algo);
+        let log = drive(1, &mut algo);
         assert_eq!(log.len(), 4);
         assert!(log.iter().all(|r| r.overlap_time == Duration::ZERO && r.queue_depth == 1));
-        // BSP never sees a stale snapshot, so never patches.
-        assert!(algo.calls.iter().all(|c| c.starts_with("validate")));
+        // At depth 1 the snapshot is never stale, so never patched.
+        assert!(algo.calls.iter().all(|c| c.starts_with("validate")), "{:?}", algo.calls);
+        // Records come out in epoch order with the commit lag recorded.
+        assert_eq!(log.iter().map(|r| r.epoch).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(log.iter().all(|r| r.commit_lag >= r.master_time));
+        assert!(log.iter().all(|r| r.respins == 0 && r.cancelled_waves == 0));
     }
 
     #[test]
-    fn pipelined_patches_stale_epochs_and_reports_overlap() {
+    fn depth2_patches_stale_epochs_and_tracks_depth() {
         let mut algo = Scripted::new(true, true);
-        let log = drive(&Pipelined, &mut algo);
+        let log = drive(2, &mut algo);
         assert_eq!(log.len(), 4);
         // Epoch 0 ran against the fresh initial state; epochs 1..3 were
         // computed one commit behind and must have been patched.
@@ -427,52 +792,120 @@ mod tests {
         // Patch always precedes the epoch's validate.
         assert!(algo.calls[0].starts_with("validate"));
         assert!(algo.calls[1].starts_with("patch"));
-        // All but the last epoch validated with the next wave in flight.
-        assert!(log[..3].iter().all(|r| r.queue_depth == 2));
-        assert_eq!(log[3].queue_depth, 1);
+        // Every epoch coexisted with another in the two-deep pipeline.
+        assert!(log.iter().all(|r| r.queue_depth == 2), "{log:?}");
         assert!(log.iter().all(|r| r.respins == 0));
     }
 
     #[test]
-    fn pipelined_respins_unpatchable_epochs_on_conflict() {
+    fn depth4_patches_span_multiple_generations() {
+        let mut algo = Scripted::new(true, true);
+        let log = drive(4, &mut algo);
+        assert_eq!(log.len(), 4);
+        // Epochs 1..3 all scattered against the initial empty state while
+        // commits landed behind them: their patches span 1, 2 and 3
+        // generations respectively.
+        let patches: Vec<&String> =
+            algo.calls.iter().filter(|c| c.starts_with("patch")).collect();
+        assert_eq!(patches.len(), 3, "calls: {:?}", algo.calls);
+        assert_eq!(patches[0].as_str(), "patch(0->1)");
+        assert_eq!(patches[1].as_str(), "patch(0->2)");
+        assert_eq!(patches[2].as_str(), "patch(0->3)");
+        // The pipeline genuinely filled to four epochs in flight.
+        assert_eq!(log.iter().map(|r| r.queue_depth).max(), Some(4));
+    }
+
+    #[test]
+    fn unpatchable_conflicts_cancel_and_respin_descendants() {
         let mut algo = Scripted::new(false, true);
-        let log = drive(&Pipelined, &mut algo);
-        // Every epoch after the first hits a grown state and must respin.
-        assert_eq!(log.iter().map(|r| r.respins).sum::<usize>(), 3);
+        let log = drive(2, &mut algo);
+        // Every epoch after the first hits a grown state: its in-flight
+        // wave is cancelled by the previous commit and redone fresh.
+        assert_eq!(log.iter().map(|r| r.respins).sum::<usize>(), 3, "{log:?}");
+        assert_eq!(log.iter().map(|r| r.cancelled_waves).sum::<usize>(), 3);
+        // Cancellations are attributed to the commits that forced them.
+        assert!(log[..3].iter().all(|r| r.cancelled_waves == 1), "{log:?}");
+        assert_eq!(log[3].cancelled_waves, 0);
+        // Nothing stale ever reached validation (the loop would have
+        // errored), and no patch was attempted.
         assert!(algo.calls.iter().all(|c| c.starts_with("validate")), "{:?}", algo.calls);
     }
 
     #[test]
-    fn pipelined_speculation_hits_when_state_is_quiet() {
-        // No acceptances ⇒ snapshots never go stale ⇒ no patches, no
-        // respins, full overlap.
+    fn unpatchable_speculation_hits_when_state_is_quiet() {
+        // No acceptances ⇒ snapshots never go stale ⇒ no respins, full
+        // overlap potential.
         let mut algo = Scripted::new(false, false);
-        let log = drive(&Pipelined, &mut algo);
+        let log = drive(2, &mut algo);
         assert_eq!(log.iter().map(|r| r.respins).sum::<usize>(), 0);
+        assert_eq!(log.iter().map(|r| r.cancelled_waves).sum::<usize>(), 0);
         assert!(algo.calls.iter().all(|c| c.starts_with("validate")));
-        assert!(log[..3].iter().all(|r| r.queue_depth == 2));
+        assert!(log.iter().all(|r| r.queue_depth == 2));
+    }
+
+    #[test]
+    fn respin_storm_at_depth4_never_commits_stale_waves() {
+        // The adversarial case: every commit grows the state, so at depth
+        // 4 every commit cancels all three in-flight descendants. The
+        // validation loop hard-errors if a stale unpatchable wave ever
+        // reaches it, so a clean run proves the cancellation policy.
+        let mut algo = Scripted::new(false, true);
+        let log = drive(4, &mut algo);
+        assert_eq!(log.len(), 4);
+        assert!(algo.calls.iter().all(|c| c.starts_with("validate")), "{:?}", algo.calls);
+        // Epoch 3's wave is respun by the commits of epochs 0, 1 and 2.
+        assert_eq!(log[3].respins, 3, "{log:?}");
+        let total_cancelled: usize = log.iter().map(|r| r.cancelled_waves).sum();
+        let total_respins: usize = log.iter().map(|r| r.respins).sum();
+        assert_eq!(total_cancelled, total_respins, "every cancellation is a respin");
+        assert_eq!(total_cancelled, 3 + 2 + 1);
     }
 
     #[test]
     fn empty_pass_is_a_noop() {
-        let cluster = cluster2();
+        let mut cluster = cluster2();
         let mut algo = Scripted::new(true, true);
         let mut sink = MetricsSink::Null;
         let mut log = Vec::new();
-        Pipelined.run_pass(&cluster, &mut algo, &[], 0, &mut sink, &mut log).unwrap();
+        WaveEngine { depth: 2 }
+            .run_pass(&mut cluster.compute, &mut algo, &[], 0, &mut sink, &mut log)
+            .unwrap();
         assert!(log.is_empty());
     }
 
     #[test]
     fn inproc_epochs_record_zero_wire_traffic() {
         let mut algo = Scripted::new(true, true);
-        let log = drive(&Bsp, &mut algo);
+        let log = drive(1, &mut algo);
         assert!(log.iter().all(|r| r.wire_bytes == 0 && r.ser_time == Duration::ZERO));
     }
 
     #[test]
-    fn factory_maps_config_kinds() {
-        assert_eq!(make(crate::config::SchedulerKind::Bsp).name(), "bsp");
-        assert_eq!(make(crate::config::SchedulerKind::Pipelined).name(), "pipelined");
+    fn factory_maps_config_kinds_and_depths() {
+        assert_eq!(make(crate::config::SchedulerKind::Bsp, 4).name(), "bsp");
+        assert_eq!(make(crate::config::SchedulerKind::Pipelined, 1).name(), "bsp");
+        assert_eq!(make(crate::config::SchedulerKind::Pipelined, 2).name(), "wave");
+        assert_eq!(make(crate::config::SchedulerKind::Pipelined, 4).name(), "wave");
+    }
+
+    #[test]
+    fn interval_overlap_merges_and_clips() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let win = (at(10), at(30));
+        // Disjoint, overlapping and out-of-window intervals.
+        let ivs = vec![
+            (at(0), at(5)),   // before the window: ignored
+            (at(8), at(14)),  // clipped to 10..14
+            (at(12), at(18)), // merges with the previous: ..18
+            (at(25), at(40)), // clipped to 25..30
+        ];
+        assert_eq!(interval_overlap(win, ivs), Duration::from_millis(8 + 5));
+        assert_eq!(interval_overlap(win, vec![]), Duration::ZERO);
+        assert_eq!(
+            interval_overlap(win, vec![(at(0), at(100))]),
+            Duration::from_millis(20),
+            "a covering interval yields the whole window"
+        );
     }
 }

@@ -1,28 +1,41 @@
-//! The cluster's communication plane, behind a [`Transport`] trait.
+//! The cluster's communication planes, behind per-plane [`PlaneIo`]
+//! endpoints.
 //!
 //! The coordinator talks to two groups of peers — *compute workers* (epoch
 //! jobs: nearest-center assignment, coordinate descent, reductions) and
 //! *validator shards* (conflict pre-computation for the master's validation
-//! step). Both groups are addressed through the same abstraction: scatter
-//! one [`Job`] per peer on a [`Plane`], gather one reply per peer. How the
-//! messages move is the transport's business:
+//! step). Each group is one *plane*: scatter one [`Job`] per peer, gather
+//! one reply per peer. How the messages move is the plane's business:
 //!
-//! * [`InProc`] — peers are threads in this process; jobs and snapshots
-//!   cross the boundary by pointer (`mpsc` channels + `Arc`). This is the
-//!   zero-copy fast path and the default.
-//! * [`super::tcp::Tcp`] — peers sit behind TCP sockets: loopback threads
-//!   of this process by default, or standalone `occd worker` processes on
-//!   other machines when a [`Topology`] lists `host:port` addresses. Every
-//!   job, snapshot, reply — and the dataset itself, as demand-shipped block
-//!   frames — is serialized through the explicit length-prefixed wire
-//!   format of [`super::wire`]. Same coordinator, same bits.
+//! * in-proc — peers are threads in this process; jobs and snapshots cross
+//!   the boundary by pointer ([`WorkerPool`]: `mpsc` channels + `Arc`).
+//!   This is the zero-copy fast path and the default.
+//! * [`super::tcp::TcpPlane`] — peers sit behind TCP sockets: loopback
+//!   threads of this process by default, or standalone `occd worker`
+//!   processes on other machines when a [`Topology`] lists `host:port`
+//!   addresses. Every job, snapshot, reply — and the dataset itself, as
+//!   demand-shipped block frames — is serialized through the explicit
+//!   length-prefixed wire format of [`super::wire`]. Same coordinator,
+//!   same bits.
 //!
-//! [`Cluster`] is the coordinator-facing facade: it owns the boxed
-//! transport, knows the peer counts, and provides the scatter/gather calls
-//! the schedulers and validators drive. Serializability does not depend on
-//! the transport — all state mutation stays in the master, and
+//! Both implement [`PlaneIo`], which is **multi-wave**: a scatter returns a
+//! [`WaveId`], several waves may be in flight per plane at once, and waves
+//! are retired by id — blocking ([`PlaneIo::gather`]) or polled
+//! ([`PlaneIo::try_ready`]). That is what lets the wave-engine scheduler
+//! keep `speculation = K` epochs resident and react to readiness instead
+//! of blocking in epoch order.
+//!
+//! [`Cluster`] is the coordinator-facing facade. Unlike the earlier
+//! single-object transport it is *split*: [`Cluster::compute`] and
+//! [`Cluster::validate`] are independently borrowable (and `Send`)
+//! endpoints, so the scheduler's event loop can drive compute waves on one
+//! thread while the dedicated validation thread owns the validation plane.
+//! Wire accounting is a [`SharedStats`] atomic block both planes write
+//! into, so [`Cluster::stats`] (and per-epoch deltas of it) keep seeing the
+//! whole transport. Serializability does not depend on any of this — all
+//! state mutation stays in the master's validation step, and
 //! `rust/tests/transport_equivalence.rs` checks models are bit-identical
-//! across `{inproc, tcp} × {bsp, pipelined}`.
+//! across `{inproc, tcp} × speculation depths`.
 
 use super::engine::{Job, JobOutput, WorkerPool};
 use crate::config::TransportKind;
@@ -30,28 +43,11 @@ use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::runtime::ComputeBackend;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Which peer group a scatter/gather addresses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Plane {
-    /// The epoch-compute workers (P peers).
-    Compute,
-    /// The validator shards (V peers).
-    Validate,
-}
-
-impl Plane {
-    /// Index into per-plane storage.
-    #[inline]
-    pub fn idx(self) -> usize {
-        match self {
-            Plane::Compute => 0,
-            Plane::Validate => 1,
-        }
-    }
-}
+pub use super::engine::WaveId;
 
 /// Cumulative wire-level accounting for a transport.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -106,6 +102,80 @@ impl TransportStats {
     }
 }
 
+/// Shared, thread-safe accounting block both planes write into. The
+/// compute plane lives on the scheduler's event loop and the validation
+/// plane on the dedicated validation thread, so the counters are atomics;
+/// [`SharedStats::snapshot`] renders them as one [`TransportStats`].
+/// In-proc planes move no bytes and simply never write.
+#[derive(Debug, Default)]
+pub struct SharedStats {
+    wire_bytes: AtomicU64,
+    unique_payload_bytes: AtomicU64,
+    ser_nanos: AtomicU64,
+    dataset_bytes: AtomicU64,
+    delta_bytes: AtomicU64,
+    full_snapshot_fallbacks: AtomicU64,
+    handshake_nanos: AtomicU64,
+    gather_wait_nanos: AtomicU64,
+}
+
+impl SharedStats {
+    /// Bytes that crossed the wire (unconditionally).
+    pub fn add_wire(&self, n: u64) {
+        self.wire_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Bytes that passed the encoder exactly once (splice/delta reuse
+    /// across peers writes the same bytes again without re-encoding —
+    /// those copies count in `wire_bytes` only).
+    pub fn add_unique(&self, n: u64) {
+        self.unique_payload_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Bytes that crossed the wire *and* passed the encoder once.
+    pub fn add_bytes(&self, n: u64) {
+        self.add_wire(n);
+        self.add_unique(n);
+    }
+    /// Master-side encode/decode wall-clock.
+    pub fn add_ser(&self, d: Duration) {
+        self.ser_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+    /// Dataset-block payload bytes shipped.
+    pub fn add_dataset(&self, n: u64) {
+        self.dataset_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Snapshot-delta payload bytes shipped.
+    pub fn add_delta(&self, n: u64) {
+        self.delta_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+    /// One full-snapshot frame shipped because no delta was possible.
+    pub fn add_full_snapshot_fallback(&self) {
+        self.full_snapshot_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Handshake wall-clock.
+    pub fn add_handshake(&self, d: Duration) {
+        self.handshake_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+    /// Gather idle-wait wall-clock.
+    pub fn add_gather_wait(&self, d: Duration) {
+        self.gather_wait_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+    /// Render the counters as one coherent [`TransportStats`].
+    pub fn snapshot(&self) -> TransportStats {
+        TransportStats {
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            unique_payload_bytes: self.unique_payload_bytes.load(Ordering::Relaxed),
+            ser_time: Duration::from_nanos(self.ser_nanos.load(Ordering::Relaxed)),
+            dataset_bytes: self.dataset_bytes.load(Ordering::Relaxed),
+            delta_bytes: self.delta_bytes.load(Ordering::Relaxed),
+            full_snapshot_fallbacks: self.full_snapshot_fallbacks.load(Ordering::Relaxed),
+            handshake_time: Duration::from_nanos(self.handshake_nanos.load(Ordering::Relaxed)),
+            gather_wait_time: Duration::from_nanos(
+                self.gather_wait_nanos.load(Ordering::Relaxed),
+            ),
+        }
+    }
+}
+
 /// Where a cluster's peers live: per plane, a list of `host:port`
 /// addresses (standalone `occd worker` processes) or — when the list is
 /// empty — a count of loopback peers to spawn in this process.
@@ -120,7 +190,10 @@ pub struct Topology {
     pub compute_peers: Vec<String>,
     /// Remote validator-peer addresses.
     pub validator_peers: Vec<String>,
-    /// Bounded reconnect budget for a dropped remote peer (0 = fail fast).
+    /// Bounded reconnect budget for a dropped peer (0 = fail fast). Since
+    /// the wave-engine refactor this covers loopback thread peers too —
+    /// their listeners persist, so a broken session re-opens like a remote
+    /// worker's.
     pub reconnect_attempts: usize,
     /// Wire-frugal shipping (the default): snapshots travel as versioned
     /// delta frames against each peer's session cache, and validator peers
@@ -131,7 +204,7 @@ pub struct Topology {
     pub frugal_wire: bool,
 }
 
-/// Default reconnect budget for dropped remote peers.
+/// Default reconnect budget for dropped peers.
 pub const DEFAULT_RECONNECT_ATTEMPTS: usize = 3;
 
 impl Default for Topology {
@@ -198,89 +271,113 @@ impl Topology {
     }
 }
 
-/// A cluster transport: moves jobs to peers and replies back.
+/// One plane's scatter/gather endpoint — a thread-confined (`Send`, not
+/// `Sync`) object the owning thread drives exclusively.
 ///
-/// Contract (identical to [`WorkerPool`]'s): `scatter` takes exactly one
-/// job per peer of the plane; at most one wave may be outstanding per
-/// plane and `gather` retires it, returning outputs sorted by peer id
-/// plus the critical-path busy time. On a peer-side *job* failure the
-/// wave is still fully drained before `gather` returns the error, so the
-/// transport stays usable. A *scatter* failure (dead peer, unencodable
-/// job) instead poisons the plane — some peers own jobs whose replies
-/// belong to no wave — and every later scatter on it reports the
-/// poisoning rather than risking stale-reply misattribution.
-pub trait Transport: Send {
-    /// Transport name (metrics / logs).
-    fn name(&self) -> &'static str;
+/// Contract: `scatter` takes exactly one job per peer of the plane and
+/// returns the wave's id; several waves may be outstanding, and each is
+/// retired exactly once by `gather` (by id, any order — outputs are always
+/// sorted by peer id, plus the critical-path busy time). On a peer-side
+/// *job* failure the wave is still fully drained before its `gather`
+/// returns the error, so the plane stays usable. An unrecoverable peer
+/// (reconnect budget exhausted, in-proc thread gone) surfaces as a typed
+/// error on the affected waves, likewise drained.
+pub trait PlaneIo: Send {
+    /// Number of peers on the plane.
+    fn peers(&self) -> usize;
 
-    /// Number of peers on a plane.
-    fn peers(&self, plane: Plane) -> usize;
+    /// Send one job per peer without waiting for results.
+    fn scatter(&mut self, jobs: Vec<Job>) -> Result<WaveId>;
 
-    /// Send one job per peer of `plane` without waiting for results.
-    fn scatter(&self, plane: Plane, jobs: Vec<Job>) -> Result<()>;
+    /// Non-blocking: pump whatever replies are readable, then report
+    /// whether every reply of `wave` has arrived.
+    fn try_ready(&mut self, wave: WaveId) -> Result<bool>;
 
-    /// Gather the plane's outstanding wave.
-    fn gather(&self, plane: Plane) -> Result<(Vec<JobOutput>, Duration)>;
+    /// Readiness of `wave` from already-buffered replies only — no
+    /// channel/socket pump, no syscalls. One `try_ready` call updates
+    /// every in-flight wave's slots, so a caller polling several waves
+    /// pairs one `try_ready` with `ready_hint` probes for the rest (false
+    /// for unknown ids).
+    fn ready_hint(&self, wave: WaveId) -> bool;
 
-    /// Cumulative serialization accounting (all-zero for in-proc).
-    fn stats(&self) -> TransportStats;
+    /// Retire one outstanding wave, blocking until fully drained.
+    fn gather(&mut self, wave: WaveId) -> Result<(Vec<JobOutput>, Duration)>;
 }
 
-/// The in-process transport: each plane is a [`WorkerPool`] — today's
-/// channels and `Arc`-shared snapshots, preserved as the zero-copy fast
-/// path. No bytes are moved, so [`Transport::stats`] stays zero.
-pub struct InProc {
-    planes: [WorkerPool; 2],
-}
-
-impl InProc {
-    /// Spawn `procs` compute workers and `validators` validator peers over
-    /// a shared dataset and backend.
-    pub fn spawn(
-        data: Arc<Dataset>,
-        backend: Arc<dyn ComputeBackend>,
-        procs: usize,
-        validators: usize,
-    ) -> InProc {
-        InProc {
-            planes: [
-                WorkerPool::spawn(data.clone(), backend.clone(), procs),
-                WorkerPool::spawn(data, backend, validators),
-            ],
-        }
+impl PlaneIo for WorkerPool {
+    fn peers(&self) -> usize {
+        self.procs
+    }
+    fn scatter(&mut self, jobs: Vec<Job>) -> Result<WaveId> {
+        WorkerPool::scatter(self, jobs)
+    }
+    fn try_ready(&mut self, wave: WaveId) -> Result<bool> {
+        WorkerPool::try_ready(self, wave)
+    }
+    fn ready_hint(&self, wave: WaveId) -> bool {
+        WorkerPool::ready_hint(self, wave)
+    }
+    fn gather(&mut self, wave: WaveId) -> Result<(Vec<JobOutput>, Duration)> {
+        WorkerPool::gather_wave(self, wave)
     }
 }
 
-impl Transport for InProc {
-    fn name(&self) -> &'static str {
-        "inproc"
-    }
-
-    fn peers(&self, plane: Plane) -> usize {
-        self.planes[plane.idx()].procs
-    }
-
-    fn scatter(&self, plane: Plane, jobs: Vec<Job>) -> Result<()> {
-        self.planes[plane.idx()].scatter(jobs)
-    }
-
-    fn gather(&self, plane: Plane) -> Result<(Vec<JobOutput>, Duration)> {
-        self.planes[plane.idx()].gather()
-    }
-
-    fn stats(&self) -> TransportStats {
-        TransportStats::default()
-    }
-}
-
-/// The coordinator's handle to its peers: a boxed [`Transport`] plus the
-/// plane sizes. Schedulers drive the compute plane through
-/// [`Cluster::scatter`] / [`Cluster::gather`]; validators drive the
-/// validation plane through [`Cluster::pair_cache`].
-pub struct Cluster {
-    transport: Box<dyn Transport>,
-    /// Compute workers (the paper's P).
+/// The compute-plane endpoint schedulers drive: a boxed [`PlaneIo`] plus
+/// the plane size and a handle on the cluster-wide [`SharedStats`] (for
+/// per-epoch accounting deltas).
+pub struct PlaneHandle {
+    io: Box<dyn PlaneIo>,
+    stats: Arc<SharedStats>,
+    /// Peers on this plane (the paper's P for the compute plane).
     pub procs: usize,
+}
+
+impl PlaneHandle {
+    /// Wrap a plane endpoint.
+    pub fn new(io: Box<dyn PlaneIo>, stats: Arc<SharedStats>) -> PlaneHandle {
+        let procs = io.peers();
+        PlaneHandle { io, stats, procs }
+    }
+
+    /// Scatter one job per peer; several waves may be in flight.
+    pub fn scatter(&mut self, jobs: Vec<Job>) -> Result<WaveId> {
+        self.io.scatter(jobs)
+    }
+
+    /// Non-blocking readiness poll for one wave (pumps the plane).
+    pub fn try_ready(&mut self, wave: WaveId) -> Result<bool> {
+        self.io.try_ready(wave)
+    }
+
+    /// Pump-free readiness probe from already-buffered replies.
+    pub fn ready_hint(&self, wave: WaveId) -> bool {
+        self.io.ready_hint(wave)
+    }
+
+    /// Retire one wave (blocking).
+    pub fn gather(&mut self, wave: WaveId) -> Result<(Vec<JobOutput>, Duration)> {
+        self.io.gather(wave)
+    }
+
+    /// Scatter one job per peer and gather the replies — the BSP barrier.
+    pub fn scatter_gather(&mut self, jobs: Vec<Job>) -> Result<(Vec<JobOutput>, Duration)> {
+        let wave = self.io.scatter(jobs)?;
+        self.io.gather(wave)
+    }
+
+    /// Cumulative transport accounting — cluster-wide (both planes), since
+    /// the counters are shared.
+    pub fn stats(&self) -> TransportStats {
+        self.stats.snapshot()
+    }
+}
+
+/// The validation-plane endpoint: owned by whichever thread runs
+/// validation (the dedicated validation thread under the wave engine), so
+/// conflict pre-computation can proceed while the event loop drives
+/// compute waves.
+pub struct ValidatePlane {
+    io: Box<dyn PlaneIo>,
     /// Validator-shard peers.
     pub validators: usize,
     /// Row-subset shipping for `PairCache` jobs (see
@@ -289,91 +386,13 @@ pub struct Cluster {
     frugal: bool,
 }
 
-impl Cluster {
-    /// Spawn the transport a config names, with `procs` loopback compute
-    /// peers and `validators` loopback validation peers.
-    pub fn spawn(
-        kind: TransportKind,
-        data: Arc<Dataset>,
-        backend: Arc<dyn ComputeBackend>,
-        procs: usize,
-        validators: usize,
-    ) -> Result<Cluster> {
-        Cluster::spawn_topology(kind, data, backend, &Topology::local(procs, validators))
-    }
-
-    /// Spawn the transport a config names over an explicit peer topology:
-    /// remote `host:port` peers where the topology lists addresses,
-    /// loopback peers elsewhere. Remote peers require the TCP transport.
-    pub fn spawn_topology(
-        kind: TransportKind,
-        data: Arc<Dataset>,
-        backend: Arc<dyn ComputeBackend>,
-        topo: &Topology,
-    ) -> Result<Cluster> {
-        let procs = topo.effective_procs();
-        let validators = topo.effective_validators().max(1);
-        assert!(procs >= 1, "a cluster needs at least one compute peer");
-        let transport: Box<dyn Transport> = match kind {
-            TransportKind::InProc => {
-                if topo.has_remote_peers() {
-                    return Err(Error::config(
-                        "peers = [...] requires transport = \"tcp\" — the in-proc \
-                         transport has no wire to reach them over",
-                    ));
-                }
-                Box::new(InProc::spawn(data, backend, procs, validators))
-            }
-            TransportKind::Tcp => {
-                let mut topo = topo.clone();
-                topo.validators = validators;
-                Box::new(super::tcp::Tcp::spawn_topology(data, backend, &topo)?)
-            }
-        };
-        // Row subsets are a *wire* diet: in-proc peers share the proposal
-        // matrix by `Arc` at zero copy cost, so the subset build would be
-        // pure overhead there — it engages only where bytes actually move.
-        let frugal = topo.frugal_wire && kind == TransportKind::Tcp;
-        Ok(Cluster { transport, procs, validators, frugal })
-    }
-
-    /// Wrap an existing transport (tests / custom deployments).
-    /// `frugal_wire` must match how the transport was built (see
-    /// [`Topology::frugal_wire`]) so the validator row-subset decision
-    /// stays consistent with the snapshot-shipping mode.
-    pub fn from_transport(transport: Box<dyn Transport>, frugal_wire: bool) -> Cluster {
-        let procs = transport.peers(Plane::Compute);
-        let validators = transport.peers(Plane::Validate);
-        Cluster { transport, procs, validators, frugal: frugal_wire }
-    }
-
-    /// Transport name (metrics / logs).
-    pub fn name(&self) -> &'static str {
-        self.transport.name()
-    }
-
-    /// Scatter one job per compute worker without waiting for results. At
-    /// most one compute wave may be outstanding.
-    pub fn scatter(&self, jobs: Vec<Job>) -> Result<()> {
-        self.transport.scatter(Plane::Compute, jobs)
-    }
-
-    /// Gather the outstanding compute wave: outputs sorted by peer id plus
-    /// the critical-path busy time.
-    pub fn gather(&self) -> Result<(Vec<JobOutput>, Duration)> {
-        self.transport.gather(Plane::Compute)
-    }
-
-    /// Scatter one job per compute worker and gather all replies — the BSP
-    /// barrier.
-    pub fn scatter_gather(&self, jobs: Vec<Job>) -> Result<(Vec<JobOutput>, Duration)> {
-        self.scatter(jobs)?;
-        self.gather()
-    }
-
-    /// Cumulative transport accounting (zero for in-proc).
-    pub fn stats(&self) -> TransportStats {
-        self.transport.stats()
+impl ValidatePlane {
+    /// Wrap a plane endpoint. `frugal_wire` must match how the plane was
+    /// built (see [`Topology::frugal_wire`]) so the validator row-subset
+    /// decision stays consistent with the snapshot-shipping mode.
+    pub fn new(io: Box<dyn PlaneIo>, frugal_wire: bool) -> ValidatePlane {
+        let validators = io.peers();
+        ValidatePlane { io, validators, frugal: frugal_wire }
     }
 
     /// Compute per-shard conflict caches on the validation plane.
@@ -400,7 +419,7 @@ impl Cluster {
     /// keys, sorted order, distance bits — are identical to the
     /// full-matrix form on any transport.
     pub fn pair_cache(
-        &self,
+        &mut self,
         vectors: Arc<Matrix>,
         shard_lists: Vec<Vec<u32>>,
     ) -> Result<Vec<Vec<(u32, u32, f32)>>> {
@@ -411,9 +430,7 @@ impl Cluster {
         for p in 0..v {
             let lo = p * s / v;
             let hi = (p + 1) * s / v;
-            groups.push(
-                it.by_ref().take(hi - lo).filter(|l| l.len() >= 2).collect(),
-            );
+            groups.push(it.by_ref().take(hi - lo).filter(|l| l.len() >= 2).collect());
         }
         let empty = Arc::new(Matrix::zeros(0, vectors.cols));
         let jobs: Vec<Job> = groups
@@ -442,8 +459,8 @@ impl Cluster {
                 }
             })
             .collect();
-        self.transport.scatter(Plane::Validate, jobs)?;
-        let (outs, _busy) = self.transport.gather(Plane::Validate)?;
+        let wave = self.io.scatter(jobs)?;
+        let (outs, _busy) = self.io.gather(wave)?;
         let mut lists = Vec::with_capacity(outs.len());
         for out in outs {
             let JobOutput::PairCache { pairs } = out else {
@@ -454,6 +471,114 @@ impl Cluster {
             lists.push(pairs);
         }
         Ok(lists)
+    }
+}
+
+/// The coordinator's handle to its peers: the two plane endpoints plus the
+/// resolved plane sizes and the shared accounting. The fields are public
+/// so callers can split the borrows — the scheduler's event loop takes
+/// `&mut cluster.compute` while the per-pass algorithm state (validated on
+/// the dedicated validation thread) takes `&mut cluster.validate`.
+pub struct Cluster {
+    /// Compute-plane endpoint: epoch waves and reduction barriers.
+    pub compute: PlaneHandle,
+    /// Validation-plane endpoint: conflict-cache jobs.
+    pub validate: ValidatePlane,
+    stats: Arc<SharedStats>,
+    name: &'static str,
+    /// Compute workers (the paper's P).
+    pub procs: usize,
+    /// Validator-shard peers.
+    pub validators: usize,
+}
+
+impl Cluster {
+    /// Spawn the transport a config names, with `procs` loopback compute
+    /// peers and `validators` loopback validation peers.
+    pub fn spawn(
+        kind: TransportKind,
+        data: Arc<Dataset>,
+        backend: Arc<dyn ComputeBackend>,
+        procs: usize,
+        validators: usize,
+    ) -> Result<Cluster> {
+        Cluster::spawn_topology(kind, data, backend, &Topology::local(procs, validators))
+    }
+
+    /// Spawn the transport a config names over an explicit peer topology:
+    /// remote `host:port` peers where the topology lists addresses,
+    /// loopback peers elsewhere. Remote peers require the TCP transport.
+    pub fn spawn_topology(
+        kind: TransportKind,
+        data: Arc<Dataset>,
+        backend: Arc<dyn ComputeBackend>,
+        topo: &Topology,
+    ) -> Result<Cluster> {
+        let procs = topo.effective_procs();
+        let validators = topo.effective_validators().max(1);
+        assert!(procs >= 1, "a cluster needs at least one compute peer");
+        let stats = Arc::new(SharedStats::default());
+        // Row subsets are a *wire* diet: in-proc peers share the proposal
+        // matrix by `Arc` at zero copy cost, so the subset build would be
+        // pure overhead there — it engages only where bytes actually move.
+        let frugal = topo.frugal_wire && kind == TransportKind::Tcp;
+        let (name, compute_io, validate_io): (&'static str, Box<dyn PlaneIo>, Box<dyn PlaneIo>) =
+            match kind {
+                TransportKind::InProc => {
+                    if topo.has_remote_peers() {
+                        return Err(Error::config(
+                            "peers = [...] requires transport = \"tcp\" — the in-proc \
+                             transport has no wire to reach them over",
+                        ));
+                    }
+                    (
+                        "inproc",
+                        Box::new(WorkerPool::spawn(data.clone(), backend.clone(), procs)),
+                        Box::new(WorkerPool::spawn(data, backend, validators)),
+                    )
+                }
+                TransportKind::Tcp => {
+                    let mut topo = topo.clone();
+                    topo.validators = validators;
+                    let (c, v) =
+                        super::tcp::spawn_planes(data, backend, &topo, stats.clone())?;
+                    ("tcp", Box::new(c), Box::new(v))
+                }
+            };
+        Ok(Cluster {
+            compute: PlaneHandle::new(compute_io, stats.clone()),
+            validate: ValidatePlane::new(validate_io, frugal),
+            stats,
+            name,
+            procs,
+            validators,
+        })
+    }
+
+    /// Transport name (metrics / logs).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Cumulative transport accounting, both planes (zero for in-proc).
+    pub fn stats(&self) -> TransportStats {
+        self.stats.snapshot()
+    }
+
+    /// Scatter one job per compute worker and gather all replies — the BSP
+    /// barrier (reduction phases, embedders).
+    pub fn scatter_gather(&mut self, jobs: Vec<Job>) -> Result<(Vec<JobOutput>, Duration)> {
+        self.compute.scatter_gather(jobs)
+    }
+
+    /// Compute per-shard conflict caches on the validation plane — see
+    /// [`ValidatePlane::pair_cache`].
+    pub fn pair_cache(
+        &mut self,
+        vectors: Arc<Matrix>,
+        shard_lists: Vec<Vec<u32>>,
+    ) -> Result<Vec<Vec<(u32, u32, f32)>>> {
+        self.validate.pair_cache(vectors, shard_lists)
     }
 }
 
@@ -484,7 +609,7 @@ mod tests {
 
     #[test]
     fn inproc_cluster_matches_direct_nearest_and_reports_zero_wire() {
-        let (data, c) = cluster(TransportKind::InProc, 3, 2);
+        let (data, mut c) = cluster(TransportKind::InProc, 3, 2);
         assert_eq!(c.name(), "inproc");
         assert_eq!(c.procs, 3);
         assert_eq!(c.validators, 2);
@@ -503,9 +628,28 @@ mod tests {
         assert_eq!(c.stats(), TransportStats::default(), "in-proc moves no bytes");
     }
 
+    /// The split planes are independently drivable: waves on the compute
+    /// plane stay in flight while the validation plane serves a pair-cache
+    /// round — the shape the wave engine's two threads rely on.
+    #[test]
+    fn planes_are_independent_endpoints() {
+        let (data, mut c) = cluster(TransportKind::InProc, 2, 2);
+        let (_, jobs) = nearest_jobs(&data, 2);
+        let wave = c.compute.scatter(jobs).unwrap();
+        // With the compute wave still outstanding, run validation traffic.
+        let mut vectors = Matrix::zeros(0, 2);
+        for i in 0..4 {
+            vectors.push_row(&[i as f32, 0.0]);
+        }
+        let lists = c.validate.pair_cache(Arc::new(vectors), vec![vec![0, 1, 2, 3]]).unwrap();
+        assert_eq!(lists.iter().map(|l| l.len()).sum::<usize>(), 6);
+        let (outs, _) = c.compute.gather(wave).unwrap();
+        assert_eq!(outs.len(), 2);
+    }
+
     #[test]
     fn pair_cache_partitions_key_ranges_and_covers_all_pairs() {
-        let (_, c) = cluster(TransportKind::InProc, 2, 3);
+        let (_, mut c) = cluster(TransportKind::InProc, 2, 3);
         let mut vectors = Matrix::zeros(0, 2);
         for i in 0..9 {
             vectors.push_row(&[i as f32, 0.0]);
@@ -545,7 +689,7 @@ mod tests {
         for kind in [TransportKind::InProc, TransportKind::Tcp] {
             for frugal in [true, false] {
                 let topo = Topology { frugal_wire: frugal, ..Topology::local(2, 2) };
-                let c =
+                let mut c =
                     Cluster::spawn_topology(kind, data.clone(), backend.clone(), &topo).unwrap();
                 results.push(c.pair_cache(vectors.clone(), shard_lists.clone()).unwrap());
             }
@@ -593,6 +737,29 @@ mod tests {
         assert_eq!(d.full_snapshot_fallbacks, 2);
         assert_eq!(d.handshake_time, Duration::from_millis(3));
         assert_eq!(d.gather_wait_time, Duration::from_millis(7));
+    }
+
+    #[test]
+    fn shared_stats_accumulate_and_snapshot() {
+        let s = SharedStats::default();
+        s.add_bytes(10);
+        s.add_wire(5);
+        s.add_unique(2);
+        s.add_ser(Duration::from_micros(3));
+        s.add_dataset(7);
+        s.add_delta(4);
+        s.add_full_snapshot_fallback();
+        s.add_handshake(Duration::from_micros(9));
+        s.add_gather_wait(Duration::from_micros(11));
+        let t = s.snapshot();
+        assert_eq!(t.wire_bytes, 15);
+        assert_eq!(t.unique_payload_bytes, 12);
+        assert_eq!(t.ser_time, Duration::from_micros(3));
+        assert_eq!(t.dataset_bytes, 7);
+        assert_eq!(t.delta_bytes, 4);
+        assert_eq!(t.full_snapshot_fallbacks, 1);
+        assert_eq!(t.handshake_time, Duration::from_micros(9));
+        assert_eq!(t.gather_wait_time, Duration::from_micros(11));
     }
 
     #[test]

@@ -27,10 +27,12 @@
 //! The shard caches can come from two places: scoped threads inside this
 //! process (`dp_validate_sharded` / `ofl_validate_sharded` — the zero-setup
 //! path) or *validator peers on the cluster's validation plane*
-//! ([`dp_validate_clustered`] / [`ofl_validate_clustered`]): each peer owns
-//! a contiguous conflict-key range and receives — as a
-//! [`super::engine::Job::PairCache`] job through the
-//! [`super::transport::Transport`] — only the proposal rows its shards
+//! ([`dp_validate_clustered`] / [`ofl_validate_clustered`], driven through
+//! the [`super::transport::ValidatePlane`] handle, which the wave engine's
+//! dedicated validation thread owns so the fan-out overlaps compute
+//! waves): each peer owns a contiguous conflict-key range and receives —
+//! as a [`super::engine::Job::PairCache`] job — only the proposal rows its
+//! shards
 //! read, with a monotone local→global position map so its reply keys stay
 //! global (`O(M·d)` wire total across the plane, since every proposal
 //! belongs to exactly one shard), and replies with its sorted cache. The
@@ -41,7 +43,7 @@
 //! all earlier acceptances), so there is no pairwise quantity to
 //! precompute.
 
-use super::transport::Cluster;
+use super::transport::ValidatePlane;
 use crate::algorithms::bpmeans::descend_z;
 use crate::error::Result;
 use crate::linalg::{sqdist, Matrix};
@@ -298,7 +300,7 @@ fn pair_d2(cache: &ConflictCache, vectors: &[&[f32]], a: u32, j: u32) -> f32 {
 /// follows; embedders who want the copy-free scoped-thread variant can
 /// still call [`dp_validate_sharded`] / [`ofl_validate_sharded`] directly.
 fn build_pair_cache_clustered(
-    cluster: &Cluster,
+    vplane: &mut ValidatePlane,
     vectors: &[&[f32]],
     shard_lists: Vec<Vec<u32>>,
 ) -> Result<ConflictCache> {
@@ -308,7 +310,7 @@ fn build_pair_cache_clustered(
     for v in vectors {
         vmat.push_row(v);
     }
-    let lists = cluster.pair_cache(Arc::new(vmat), shard_lists)?;
+    let lists = vplane.pair_cache(Arc::new(vmat), shard_lists)?;
     Ok(ConflictCache::tree_reduce(lists))
 }
 
@@ -365,12 +367,14 @@ pub fn dp_validate_sharded(
 }
 
 /// `DPValidate` with the conflict pre-computation dispatched to validator
-/// peers on the cluster's validation plane. Produces the exact
-/// [`dp_validate`] outcome — same resolutions, same appended rows, same
-/// bits — for any `keys`, shard count and transport; falls back to the
-/// serial validator when sharding would not pay for itself.
+/// peers on the cluster's validation plane (the [`ValidatePlane`] handle —
+/// owned by the wave engine's dedicated validation thread, so the fan-out
+/// overlaps compute waves). Produces the exact [`dp_validate`] outcome —
+/// same resolutions, same appended rows, same bits — for any `keys`, shard
+/// count and transport; falls back to the serial validator when sharding
+/// would not pay for itself.
 pub fn dp_validate_clustered(
-    cluster: &Cluster,
+    vplane: &mut ValidatePlane,
     centers: &mut Matrix,
     base: usize,
     proposals: &[DpProposal],
@@ -378,6 +382,7 @@ pub fn dp_validate_clustered(
     lambda2: f32,
     shards: usize,
 ) -> Result<DpOutcome> {
+    let engaged = vplane.validators >= 2;
     dp_validate_with(
         centers,
         base,
@@ -385,8 +390,8 @@ pub fn dp_validate_clustered(
         keys,
         lambda2,
         shards.max(2),
-        cluster.validators >= 2,
-        |v, lists| build_pair_cache_clustered(cluster, v, lists),
+        engaged,
+        |v, lists| build_pair_cache_clustered(vplane, v, lists),
     )
 }
 
@@ -424,7 +429,7 @@ fn ofl_validate_with(
 /// [`dp_validate_clustered`]).
 #[allow(clippy::too_many_arguments)]
 pub fn ofl_validate_clustered(
-    cluster: &Cluster,
+    vplane: &mut ValidatePlane,
     centers: &mut Matrix,
     base: usize,
     proposals: &[OflProposal],
@@ -433,6 +438,7 @@ pub fn ofl_validate_clustered(
     draw: impl FnMut(u32) -> f64,
     shards: usize,
 ) -> Result<OflOutcome> {
+    let engaged = vplane.validators >= 2;
     ofl_validate_with(
         centers,
         base,
@@ -441,8 +447,8 @@ pub fn ofl_validate_clustered(
         lambda2,
         draw,
         shards.max(2),
-        cluster.validators >= 2,
-        |v, lists| build_pair_cache_clustered(cluster, v, lists),
+        engaged,
+        |v, lists| build_pair_cache_clustered(vplane, v, lists),
     )
 }
 
@@ -955,6 +961,7 @@ mod tests {
     #[test]
     fn clustered_validation_matches_serial_over_both_transports() {
         use crate::config::TransportKind;
+        use crate::coordinator::transport::Cluster;
         use crate::data::generators::{dp_clusters, GenConfig};
         use crate::runtime::native::NativeBackend;
         let data =
@@ -966,12 +973,19 @@ mod tests {
         let serial = dp_validate(&mut serial_c, 1, &proposals, 1.0);
         for kind in [TransportKind::InProc, TransportKind::Tcp] {
             for validators in [2usize, 3] {
-                let cluster =
+                let mut cluster =
                     Cluster::spawn(kind, data.clone(), backend.clone(), 2, validators).unwrap();
                 let mut c = mat(&[&[500.0, 500.0]]);
-                let out =
-                    dp_validate_clustered(&cluster, &mut c, 1, &proposals, &keys, 1.0, 8)
-                        .unwrap();
+                let out = dp_validate_clustered(
+                    &mut cluster.validate,
+                    &mut c,
+                    1,
+                    &proposals,
+                    &keys,
+                    1.0,
+                    8,
+                )
+                .unwrap();
                 assert_eq!(out.resolved, serial.resolved, "{kind:?} V={validators}");
                 assert_eq!(out.accepted, serial.accepted);
                 assert_eq!(c.data, serial_c.data, "appended state diverged");
@@ -982,6 +996,7 @@ mod tests {
     #[test]
     fn clustered_ofl_matches_serial_over_both_transports() {
         use crate::config::TransportKind;
+        use crate::coordinator::transport::Cluster;
         use crate::data::generators::{dp_clusters, GenConfig};
         use crate::runtime::native::NativeBackend;
         let data =
@@ -997,11 +1012,19 @@ mod tests {
         let mut serial_c = Matrix::zeros(0, 2);
         let serial = ofl_validate(&mut serial_c, 0, &proposals, 1.0, draw);
         for kind in [TransportKind::InProc, TransportKind::Tcp] {
-            let cluster = Cluster::spawn(kind, data.clone(), backend.clone(), 2, 2).unwrap();
+            let mut cluster = Cluster::spawn(kind, data.clone(), backend.clone(), 2, 2).unwrap();
             let mut c = Matrix::zeros(0, 2);
-            let out =
-                ofl_validate_clustered(&cluster, &mut c, 0, &proposals, &keys, 1.0, draw, 8)
-                    .unwrap();
+            let out = ofl_validate_clustered(
+                &mut cluster.validate,
+                &mut c,
+                0,
+                &proposals,
+                &keys,
+                1.0,
+                draw,
+                8,
+            )
+            .unwrap();
             assert_eq!(out.resolved, serial.resolved, "{kind:?}");
             assert_eq!(out.opened, serial.opened);
             assert_eq!(c.data, serial_c.data);

@@ -46,6 +46,11 @@ fn app() -> App {
                 .flag("bootstrap-div", "bootstrap divisor (0 = off)", Some("16"))
                 .flag("backend", "native | xla", Some("native"))
                 .flag("scheduler", "bsp | pipelined", Some("bsp"))
+                .flag(
+                    "speculation",
+                    "wave-engine depth K under --scheduler pipelined (1 = BSP)",
+                    Some("2"),
+                )
                 .flag("transport", "inproc | tcp", Some("inproc"))
                 .flag("validator-shards", "validator peers (0 = procs/2, min 1)", Some("0"))
                 .flag("peers", "comma-separated host:port of occd worker compute peers", None)
@@ -105,6 +110,7 @@ fn app() -> App {
                 .flag("iterations", "passes (dp/bp)", Some("3"))
                 .flag("backend", "native | xla", Some("native"))
                 .flag("scheduler", "bsp | pipelined", Some("bsp"))
+                .flag("speculation", "wave-engine depth K (pipelined)", Some("2"))
                 .flag("transport", "inproc | tcp", Some("inproc"))
                 .flag("seed", "RNG seed", Some("0")),
         )
@@ -164,6 +170,9 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     if let Some(v) = p.get("scheduler") {
         cfg.scheduler = SchedulerKind::parse(v)?;
     }
+    if let Some(v) = p.get_parse::<usize>("speculation")? {
+        cfg.speculation = v;
+    }
     if let Some(v) = p.get("transport") {
         cfg.transport = TransportKind::parse(v)?;
     }
@@ -220,6 +229,9 @@ fn cmd_run(p: &Parsed) -> Result<i32> {
         println!("algo        : {}", cfg.algo.name());
         println!("backend     : {}", cfg.backend.name());
         println!("scheduler   : {}", cfg.scheduler.name());
+        if cfg.scheduler == SchedulerKind::Pipelined {
+            println!("speculation : {}", cfg.speculation);
+        }
         println!("transport   : {}", cfg.transport.name());
         println!("points      : {}", cfg.n);
         println!("P x b       : {} x {} = {} per epoch", cfg.procs, cfg.block, cfg.points_per_epoch());
@@ -370,6 +382,7 @@ fn cmd_scaling(p: &Parsed) -> Result<i32> {
     let iters = p.get_parse::<usize>("iterations")?.unwrap_or(3);
     let backend = BackendKind::parse(p.get("backend").unwrap_or("native"))?;
     let scheduler = SchedulerKind::parse(p.get("scheduler").unwrap_or("bsp"))?;
+    let speculation = p.get_parse::<usize>("speculation")?.unwrap_or(2);
     let seed = p.get_parse::<u64>("seed")?.unwrap_or(0);
     let procs: Vec<usize> = p
         .get("procs")
@@ -388,6 +401,7 @@ fn cmd_scaling(p: &Parsed) -> Result<i32> {
         iterations: if algo == Algo::Ofl { 1 } else { iters },
         backend,
         scheduler,
+        speculation,
         seed,
         source,
         n,

@@ -29,26 +29,46 @@ pub struct EpochRecord {
     pub rejected: usize,
     /// Global number of centers/features after the epoch.
     pub centers: usize,
-    /// Wall-clock the workers spent (max over workers, i.e. critical path).
+    /// Wall-clock the workers spent on this epoch (max over workers per
+    /// wave, i.e. the critical path), accumulated across respun waves —
+    /// cancelled speculative compute was real work and is counted here.
     pub worker_time: Duration,
-    /// Wall-clock the master spent validating.
+    /// Wall-clock the validation thread spent committing this epoch:
+    /// multi-generation patch + merge + validation, measured on that
+    /// thread. Since the wave engine this is *pure* validation-side time —
+    /// it no longer absorbs scatter/gather slices of other epochs the old
+    /// single-threaded loop interleaved into the same stopwatch (the PR 1
+    /// `master_ms` caveat). JSONL: `master_ms`.
     pub master_time: Duration,
-    /// Total epoch wall-clock (barrier to barrier; with the pipelined
-    /// scheduler epochs overlap, so these may sum to more than the run's
-    /// wall-clock).
+    /// Epoch wall-clock from its first scatter to its commit. Overlapped
+    /// epochs coexist, so these may sum to more than the run's wall-clock.
     pub total_time: Duration,
-    /// Estimated portion of `master_time` that ran while a later epoch's
-    /// worker compute was in flight: min(validation time, the wave's
-    /// critical-path compute time). Pipelined scheduler only; zero under
-    /// BSP, where the master and the workers strictly alternate.
+    /// Measured portion of this epoch's validation window (dispatch →
+    /// commit) during which at least one other wave's worker compute was
+    /// in flight, capped at `master_time`. Zero at `speculation = 1`
+    /// (BSP), where the master and the workers strictly alternate. JSONL:
+    /// `validate_overlap_ms`.
     pub overlap_time: Duration,
-    /// Epochs resident in the pipeline while this epoch validated: 1 under
-    /// BSP, 2 when the pipelined scheduler had the next epoch in flight.
+    /// True in-flight depth: the maximum number of epochs simultaneously
+    /// resident in the pipeline (scattered but not yet committed) at any
+    /// point of this epoch's lifetime. 1 under BSP; up to the
+    /// `speculation` knob under the wave engine.
     pub queue_depth: usize,
-    /// Extra compute waves this epoch needed because a speculative result
-    /// (computed against a stale snapshot) could not be patched and had to
-    /// be redone (BP-means under the pipelined scheduler).
+    /// Times this epoch's own wave was cancelled and recomputed because a
+    /// commit invalidated its speculative snapshot (unpatchable
+    /// algorithms — BP-means; DP/OFL patch instead of respinning).
     pub respins: usize,
+    /// In-flight *descendant* waves this epoch's commit cancelled (the
+    /// other side of `respins`: each cancellation here is a respin on the
+    /// descendant's record). Nonzero only for unpatchable algorithms under
+    /// speculation. JSONL: `cancelled_waves`.
+    pub cancelled_waves: usize,
+    /// Gather-complete → commit-applied latency for this epoch: the time
+    /// its finished wave waited in the dispatch queue behind earlier
+    /// validations, plus its own `master_time`. The growth of this number
+    /// with `speculation` is the cost of deeper pipelines; `commit_lag -
+    /// master_time` is pure queueing. JSONL: `commit_lag_ms`.
+    pub commit_lag: Duration,
     /// Bytes that crossed the cluster transport's wire during this epoch
     /// (jobs, replies, snapshots and validation-shard traffic, both
     /// directions). Zero under the in-proc transport, whose messages move
@@ -102,6 +122,8 @@ impl EpochRecord {
             ("validate_overlap_ms", Json::Num(self.overlap_time.as_secs_f64() * 1e3)),
             ("queue_depth", Json::Num(self.queue_depth as f64)),
             ("respins", Json::Num(self.respins as f64)),
+            ("cancelled_waves", Json::Num(self.cancelled_waves as f64)),
+            ("commit_lag_ms", Json::Num(self.commit_lag.as_secs_f64() * 1e3)),
             ("wire_bytes", Json::Num(self.wire_bytes as f64)),
             ("unique_payload_bytes", Json::Num(self.unique_payload_bytes as f64)),
             ("delta_bytes", Json::Num(self.delta_bytes as f64)),
@@ -160,9 +182,22 @@ impl RunSummary {
     pub fn total_overlap(&self) -> Duration {
         self.epochs.iter().map(|e| e.overlap_time).sum()
     }
-    /// Total speculative recomputes across epochs (pipelined BP-means).
+    /// Total speculative recomputes across epochs (BP-means under
+    /// speculation).
     pub fn total_respins(&self) -> usize {
         self.epochs.iter().map(|e| e.respins).sum()
+    }
+    /// Total in-flight waves cancelled by commits across epochs.
+    pub fn total_cancelled_waves(&self) -> usize {
+        self.epochs.iter().map(|e| e.cancelled_waves).sum()
+    }
+    /// Total gather→commit latency across epochs (queueing + validation).
+    pub fn total_commit_lag(&self) -> Duration {
+        self.epochs.iter().map(|e| e.commit_lag).sum()
+    }
+    /// Maximum in-flight pipeline depth any epoch observed.
+    pub fn max_queue_depth(&self) -> usize {
+        self.epochs.iter().map(|e| e.queue_depth).max().unwrap_or(0)
     }
     /// Total bytes that crossed the transport wire (zero in-proc).
     pub fn total_wire_bytes(&self) -> u64 {
@@ -279,6 +314,8 @@ mod tests {
             overlap_time: Duration::from_millis(1),
             queue_depth: 2,
             respins: 0,
+            cancelled_waves: 1,
+            commit_lag: Duration::from_millis(2),
             wire_bytes: 64,
             unique_payload_bytes: 48,
             delta_bytes: 16,
@@ -306,6 +343,9 @@ mod tests {
         assert_eq!(s.iteration_time(0), Duration::from_millis(14));
         assert_eq!(s.total_overlap(), Duration::from_millis(3));
         assert_eq!(s.total_respins(), 0);
+        assert_eq!(s.total_cancelled_waves(), 3);
+        assert_eq!(s.total_commit_lag(), Duration::from_millis(6));
+        assert_eq!(s.max_queue_depth(), 2);
         assert_eq!(s.total_wire_bytes(), 3 * 64);
         assert_eq!(s.total_unique_payload_bytes(), 3 * 48);
         assert_eq!(s.total_delta_bytes(), 3 * 16);
@@ -326,6 +366,8 @@ mod tests {
         assert!(j.get("validate_overlap_ms").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("queue_depth").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("respins").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("cancelled_waves").unwrap().as_usize(), Some(1));
+        assert!(j.get("commit_lag_ms").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("wire_bytes").unwrap().as_usize(), Some(64));
         assert_eq!(j.get("unique_payload_bytes").unwrap().as_usize(), Some(48));
         assert_eq!(j.get("delta_bytes").unwrap().as_usize(), Some(16));

@@ -233,6 +233,51 @@ fn scheduler_knob_parses_from_toml() {
 }
 
 #[test]
+fn speculation_knob_parses_from_toml_and_validates() {
+    let cfg = RunConfig::from_doc(
+        &toml::parse("[run]\nscheduler = \"pipelined\"\nspeculation = 4\n").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(cfg.scheduler, SchedulerKind::Pipelined);
+    assert_eq!(cfg.speculation, 4);
+    // Default depth is 2 — the classic two-stage pipeline.
+    let cfg = RunConfig::from_doc(&toml::parse("[run]\nalgo = \"dpmeans\"\n").unwrap()).unwrap();
+    assert_eq!(cfg.speculation, 2);
+    // Invalid depths are rejected with a named error.
+    let err = RunConfig::from_doc(&toml::parse("[run]\nspeculation = 0\n").unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("speculation"), "{err}");
+    assert!(RunConfig::from_doc(&toml::parse("[run]\nspeculation = 100\n").unwrap()).is_err());
+}
+
+#[test]
+fn speculation_flag_parses_through_cli() {
+    // Mirror the occd `run` surface: `--speculation` flows through the
+    // typed flag parser.
+    let app = App::new("occd", "test").command(
+        Command::new("run", "run")
+            .flag("scheduler", "bsp | pipelined", Some("bsp"))
+            .flag("speculation", "wave-engine depth K", Some("2")),
+    );
+    let argv: Vec<String> =
+        ["run", "--scheduler=pipelined", "--speculation", "4"].iter().map(|s| s.to_string()).collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(_, p) => {
+            assert_eq!(p.get_parse::<usize>("speculation").unwrap(), Some(4));
+            let mut cfg = RunConfig {
+                scheduler: SchedulerKind::parse(p.get("scheduler").unwrap()).unwrap(),
+                ..RunConfig::default()
+            };
+            cfg.speculation = p.get_parse::<usize>("speculation").unwrap().unwrap();
+            cfg.validate().unwrap();
+            assert_eq!(cfg.speculation, 4);
+        }
+        _ => panic!("expected run dispatch"),
+    }
+}
+
+#[test]
 fn scheduler_knob_rejects_unknown_values_with_useful_error() {
     let err = SchedulerKind::parse("warp-speed").unwrap_err().to_string();
     assert!(err.contains("warp-speed"), "error names the bad value: {err}");

@@ -1,15 +1,19 @@
-//! Scheduler equivalence — the pipelined scheduler preserves Thm 3.1.
+//! Scheduler equivalence — the wave engine preserves Thm 3.1 at every
+//! speculation depth.
 //!
-//! The pipelined scheduler overlaps epoch `t+1`'s worker compute with epoch
-//! `t`'s master-side validation (computing optimistically against the stale
-//! snapshot `C^{t-1}` and patching / redoing at commit time). Because every
-//! validation call still receives byte-identical inputs in the identical
-//! point-index order, the models it produces must be **bit-identical** to
-//! the BSP barrier schedule — the same contract `tests/serializability.rs`
-//! checks across worker counts, here checked across scheduling policies:
+//! The wave engine overlaps later epochs' worker compute with earlier
+//! epochs' validation (computing optimistically against a snapshot up to
+//! `K-1` commits stale and patching / respinning at commit time). Because
+//! every validation call still receives byte-identical inputs in the
+//! identical point-index order, the models it produces must be
+//! **bit-identical** to the BSP barrier schedule — the same contract
+//! `tests/serializability.rs` checks across worker counts, here checked
+//! across scheduling policies and speculation depths:
 //!
-//! 1. a deterministic sweep over `(algo, P, b)` at fixed `P·b`, and
-//! 2. randomized configurations via the in-tree property harness
+//! 1. a deterministic sweep over `(algo, P, b)` at fixed `P·b`,
+//! 2. a `speculation ∈ {1, 2, 4}` depth sweep per algorithm, including a
+//!    BP-means respin storm (conflicts every epoch at depth 4), and
+//! 3. randomized configurations via the in-tree property harness
 //!    (`occml::testing::Prop`).
 
 use occml::config::{Algo, RunConfig, SchedulerKind};
@@ -20,9 +24,11 @@ use occml::runtime::native::NativeBackend;
 use occml::testing::Prop;
 use std::sync::Arc;
 
-fn run(
+#[allow(clippy::too_many_arguments)]
+fn run_depth(
     algo: Algo,
     scheduler: SchedulerKind,
+    speculation: usize,
     data: &Arc<Dataset>,
     procs: usize,
     block: usize,
@@ -33,6 +39,7 @@ fn run(
     let cfg = RunConfig {
         algo,
         scheduler,
+        speculation,
         lambda: 1.0,
         procs,
         block,
@@ -44,6 +51,19 @@ fn run(
         ..RunConfig::default()
     };
     driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+}
+
+fn run(
+    algo: Algo,
+    scheduler: SchedulerKind,
+    data: &Arc<Dataset>,
+    procs: usize,
+    block: usize,
+    iters: usize,
+    boot: usize,
+    seed: u64,
+) -> driver::RunOutput {
+    run_depth(algo, scheduler, 2, data, procs, block, iters, boot, seed)
 }
 
 /// Bit-exact model comparison (no tolerance: serializability is exact).
@@ -140,6 +160,108 @@ fn pipelined_result_independent_of_worker_count() {
             run(Algo::DpMeans, SchedulerKind::Pipelined, &data, procs, 128 / procs, 3, 16, 71);
         assert_models_identical(&reference.model, &out.model, &format!("P={procs}"));
     }
+}
+
+// ---------------------------------------------------------------------------
+// The depth sweep: speculation ∈ {1, 2, 4} must be bit-identical to BSP
+// for every algorithm — 1 *is* BSP, 2 is the classic pipeline, 4 exercises
+// multi-generation patches (DP/OFL) and the descendant-cancelling respin
+// policy (BP).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn speculation_depth_sweep_is_bitidentical_per_algorithm() {
+    for (algo, iters, boot) in
+        [(Algo::DpMeans, 3, 16), (Algo::Ofl, 1, 0), (Algo::BpMeans, 2, 16)]
+    {
+        let seed = 97;
+        let data = Arc::new(match algo {
+            Algo::BpMeans => bp_features(&GenConfig { n: 360, dim: 12, theta: 1.0, seed }),
+            _ => dp_clusters(&GenConfig { n: 440, dim: 12, theta: 1.0, seed }),
+        });
+        let bsp = run_depth(algo, SchedulerKind::Bsp, 2, &data, 4, 22, iters, boot, seed);
+        for depth in [1usize, 2, 4] {
+            let out = run_depth(
+                algo,
+                SchedulerKind::Pipelined,
+                depth,
+                &data,
+                4,
+                22,
+                iters,
+                boot,
+                seed,
+            );
+            let ctx = format!("{algo:?} speculation={depth}");
+            assert_models_identical(&bsp.model, &out.model, &ctx);
+            assert_eq!(
+                bsp.summary.total_proposed(),
+                out.summary.total_proposed(),
+                "{ctx}: proposal accounting"
+            );
+            // Depth 1 must behave like BSP, not just compute like it.
+            if depth == 1 {
+                assert_eq!(out.summary.max_queue_depth(), 1, "{ctx}");
+                assert_eq!(out.summary.total_respins(), 0, "{ctx}");
+            } else {
+                assert!(out.summary.max_queue_depth() >= 2, "{ctx}: no overlap recorded");
+                assert!(out.summary.max_queue_depth() <= depth, "{ctx}: depth bound broken");
+            }
+            // Respins and cancellations are two views of the same event.
+            assert_eq!(
+                out.summary.total_respins(),
+                out.summary.total_cancelled_waves(),
+                "{ctx}"
+            );
+        }
+    }
+}
+
+/// The respin storm: small λ keeps BP-means accepting features in nearly
+/// every epoch, so at depth 4 almost every commit cancels its in-flight
+/// descendants. The run must stay bit-identical to BSP — the validation
+/// thread hard-errors if a stale unpatchable wave ever reaches it, so a
+/// passing run *proves* cancellation never commits a stale wave — while
+/// actually exercising the storm (nonzero respins, multi-wave
+/// cancellations).
+#[test]
+fn bp_respin_storm_at_depth4_stays_bitidentical_and_commits_nothing_stale() {
+    let seed = 131;
+    let data = Arc::new(bp_features(&GenConfig { n: 480, dim: 10, theta: 1.0, seed }));
+    let mk = |scheduler, speculation| {
+        let cfg = RunConfig {
+            algo: Algo::BpMeans,
+            scheduler,
+            speculation,
+            lambda: 0.4, // adversarially low: proposals + acceptances everywhere
+            procs: 4,
+            block: 15,   // many short epochs → many conflict windows
+            iterations: 2,
+            bootstrap_div: 0,
+            seed,
+            n: data.len(),
+            dim: data.dim(),
+            ..RunConfig::default()
+        };
+        driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+    };
+    let bsp = mk(SchedulerKind::Bsp, 2);
+    let storm = mk(SchedulerKind::Pipelined, 4);
+    assert_models_identical(&bsp.model, &storm.model, "bp respin storm depth=4");
+    let respins = storm.summary.total_respins();
+    assert!(respins > 0, "the storm must actually respin (got {respins})");
+    assert_eq!(
+        respins,
+        storm.summary.total_cancelled_waves(),
+        "every cancellation pairs with a respin"
+    );
+    // At depth 4 a single growing commit can cancel several descendants at
+    // once — the storm should show at least one multi-wave cancellation.
+    assert!(
+        storm.summary.epochs.iter().any(|e| e.cancelled_waves >= 2),
+        "expected a commit cancelling multiple in-flight waves"
+    );
+    assert!(storm.summary.max_queue_depth() >= 3, "the storm ran deep");
 }
 
 // ---------------------------------------------------------------------------

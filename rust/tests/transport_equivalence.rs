@@ -18,9 +18,10 @@ use occml::runtime::native::NativeBackend;
 use std::sync::Arc;
 
 #[allow(clippy::too_many_arguments)]
-fn run(
+fn run_depth(
     algo: Algo,
     scheduler: SchedulerKind,
+    speculation: usize,
     transport: TransportKind,
     data: &Arc<Dataset>,
     procs: usize,
@@ -33,6 +34,7 @@ fn run(
     let cfg = RunConfig {
         algo,
         scheduler,
+        speculation,
         transport,
         validator_shards,
         lambda: 1.0,
@@ -46,6 +48,24 @@ fn run(
         ..RunConfig::default()
     };
     driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    algo: Algo,
+    scheduler: SchedulerKind,
+    transport: TransportKind,
+    data: &Arc<Dataset>,
+    procs: usize,
+    block: usize,
+    iters: usize,
+    boot: usize,
+    validator_shards: usize,
+    seed: u64,
+) -> driver::RunOutput {
+    run_depth(
+        algo, scheduler, 2, transport, data, procs, block, iters, boot, validator_shards, seed,
+    )
 }
 
 /// Bit-exact model comparison (no tolerance: serializability is exact).
@@ -239,4 +259,69 @@ fn tcp_pipelined_still_overlaps_epochs() {
     );
     let deep = out.summary.epochs.iter().filter(|e| e.queue_depth == 2).count();
     assert!(deep >= 1, "no overlapped epochs recorded over tcp");
+}
+
+/// The full depth sweep across the wire: `speculation ∈ {1, 2, 4}` ×
+/// `{dp, ofl, bp}` × `{inproc, tcp}` must all reproduce the in-proc BSP
+/// model bit for bit. Depth-K speculation leans on the transport's
+/// multi-wave pending set and chained snapshot deltas over TCP, so this is
+/// the sweep that keeps wire-level speculation honest.
+#[test]
+fn speculation_sweep_bitidentical_across_transports() {
+    for (algo, iters, boot) in
+        [(Algo::DpMeans, 2, 16), (Algo::Ofl, 1, 0), (Algo::BpMeans, 2, 16)]
+    {
+        let seed = 113;
+        let data = Arc::new(match algo {
+            Algo::BpMeans => bp_features(&GenConfig { n: 320, dim: 10, theta: 1.0, seed }),
+            _ => dp_clusters(&GenConfig { n: 400, dim: 10, theta: 1.0, seed }),
+        });
+        let reference = run_depth(
+            algo,
+            SchedulerKind::Bsp,
+            2,
+            TransportKind::InProc,
+            &data,
+            4,
+            20,
+            iters,
+            boot,
+            0,
+            seed,
+        );
+        for transport in [TransportKind::InProc, TransportKind::Tcp] {
+            for depth in [1usize, 2, 4] {
+                let out = run_depth(
+                    algo,
+                    SchedulerKind::Pipelined,
+                    depth,
+                    transport,
+                    &data,
+                    4,
+                    20,
+                    iters,
+                    boot,
+                    0,
+                    seed,
+                );
+                let ctx = format!("{algo:?} {transport:?} speculation={depth}");
+                assert_models_identical(&reference.model, &out.model, &ctx);
+                if depth >= 2 {
+                    assert!(
+                        out.summary.max_queue_depth() >= 2,
+                        "{ctx}: speculation never engaged"
+                    );
+                }
+                if transport == TransportKind::Tcp {
+                    assert!(out.summary.total_wire_bytes() > 0, "{ctx}");
+                    // Deeper speculation must not break the snapshot diet:
+                    // deltas keep flowing between chained waves.
+                    assert!(
+                        out.summary.total_delta_bytes() > 0,
+                        "{ctx}: snapshot deltas must survive speculation"
+                    );
+                }
+            }
+        }
+    }
 }
