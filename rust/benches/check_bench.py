@@ -4,7 +4,8 @@
 Usage: check_bench.py BENCH_schedulers.json schedulers_baseline.json
 
 Reads the machine-readable bench output (one row per algo x scheduler x
-speculation x transport x frugal_wire cell) and applies three gates:
+speculation x sharding x transport x frugal_wire cell) and applies four
+gates:
 
 1. Wire bytes (BSP): the dpmeans tcp wire bytes per epoch, relative to the
    run's own full-snapshot (frugal_wire=false) measurement. The baseline
@@ -18,6 +19,11 @@ speculation x transport x frugal_wire cell) and applies three gates:
 3. Depth structure: the speculation=4 dpmeans tcp row must report
    max_queue_depth == 4 (the pipeline genuinely fills) — a structural,
    deterministic property of the wave engine, not a timing.
+4. Conflict packing: the depth-4 bpmeans tcp sharding=conflict row must
+   cancel strictly fewer waves than its sharding=hash twin, and no more
+   than the recorded baseline (0: the lazy dispatch-time respin policy
+   never broadcast-cancels). Cancellation counts are deterministic for a
+   fixed config, so this too is structural, not timing.
 """
 
 import json
@@ -33,17 +39,19 @@ def main() -> int:
     with open(sys.argv[2]) as f:
         baseline = json.load(f)
 
-    def row(algo, transport, scheduler, frugal, speculation=None):
+    def row(algo, transport, scheduler, frugal, speculation=None, sharding="hash"):
         for r in bench["rows"]:
             key = (r["algo"], r["transport"], r["scheduler"], r["frugal_wire"])
             if key != (algo, transport, scheduler, frugal):
                 continue
             if speculation is not None and r.get("speculation") != speculation:
                 continue
+            if r.get("sharding", "hash") != sharding:
+                continue
             return r
         print(
             f"missing bench row {algo}/{transport}/{scheduler}/"
-            f"frugal={frugal}/speculation={speculation}",
+            f"frugal={frugal}/speculation={speculation}/sharding={sharding}",
             file=sys.stderr,
         )
         sys.exit(1)
@@ -91,6 +99,34 @@ def main() -> int:
         failures += 1
     else:
         print("depth gate: speculation=4 filled the pipeline (max_queue_depth=4)")
+
+    # Gate 4: conflict packing's respin policy on the unpatchable algorithm.
+    # The depth-4 bpmeans rows exist for both sharding modes; conflict must
+    # cancel strictly fewer waves than hash and stay at the recorded
+    # baseline (0 — lazy dispatch-time respins, never broadcast cancels).
+    hash4 = row("bpmeans", "tcp", "pipelined", True, speculation=4, sharding="hash")
+    conflict4 = row("bpmeans", "tcp", "pipelined", True, speculation=4, sharding="conflict")
+    hash_cancelled = hash4.get("cancelled_waves", 0)
+    conflict_cancelled = conflict4.get("cancelled_waves", 0)
+    allowed = baseline["bpmeans_tcp_depth4_conflict_cancelled_waves_max"]
+    print(
+        f"bpmeans tcp speculation=4 cancelled_waves: hash={hash_cancelled:.0f}, "
+        f"conflict={conflict_cancelled:.0f} (baseline max {allowed:.0f})"
+    )
+    if conflict_cancelled > allowed:
+        print(
+            f"conflict packing cancelled waves: {conflict_cancelled:.0f} > "
+            f"baseline {allowed:.0f}",
+            file=sys.stderr,
+        )
+        failures += 1
+    if conflict_cancelled >= hash_cancelled:
+        print(
+            f"conflict packing must cancel strictly fewer waves than hash "
+            f"({conflict_cancelled:.0f} vs {hash_cancelled:.0f})",
+            file=sys.stderr,
+        )
+        failures += 1
 
     if failures:
         return 1

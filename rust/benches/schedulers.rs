@@ -24,18 +24,22 @@
 //! Besides the console table (+ CSV), the bench writes a machine-readable
 //! `target/bench-results/BENCH_schedulers.json` so the perf trajectory is
 //! tracked across PRs — one row per `(algo, scheduler, speculation,
-//! transport, frugal_wire)` cell, including a `speculation ∈ {1, 2, 4}`
-//! depth sweep of the wave engine with `commit_lag_ms`, `cancelled_waves`
-//! and `max_queue_depth` columns; schema documented in the README and
-//! consumed by the CI `bench-smoke` job. The bench asserts the depth-4
-//! dpmeans tcp run genuinely overlaps (pipeline filled to 4, nonzero
-//! overlapped validation) while staying bit-identical.
+//! sharding, transport, frugal_wire)` cell, including a `speculation ∈
+//! {1, 2, 4}` depth sweep of the wave engine with `commit_lag_ms`,
+//! `cancelled_waves` and `max_queue_depth` columns, and a depth-4
+//! `sharding = conflict` row per algo/transport; schema documented in the
+//! README and consumed by the CI `bench-smoke` job. The bench asserts the
+//! depth-4 dpmeans tcp run genuinely overlaps (pipeline filled to 4,
+//! nonzero overlapped validation) while staying bit-identical, and that
+//! the depth-4 bpmeans conflict row cancels strictly fewer waves than its
+//! hash twin (the conflict-packing acceptance bar: lazy respins, zero
+//! cancellations).
 //!
 //! Defaults keep single-machine runtime in seconds; pass `--n=…`, `--pb=…`,
 //! `--procs=…`, `--reps=…` to scale up.
 
 use occml::benchlib::{fmt_duration, BenchArgs, Table};
-use occml::config::{Algo, DataSource, RunConfig, SchedulerKind, TransportKind};
+use occml::config::{Algo, DataSource, RunConfig, SchedulerKind, ShardingKind, TransportKind};
 use occml::coordinator::{driver, Model};
 use occml::metrics::json::{obj, Json};
 use occml::runtime::native::NativeBackend;
@@ -59,13 +63,16 @@ fn models_identical(a: &Model, b: &Model) -> bool {
     }
 }
 
-/// One JSON row of `BENCH_schedulers.json` (schema 2: adds `speculation`,
-/// `commit_lag_ms`, `cancelled_waves`, `max_queue_depth`).
+/// One JSON row of `BENCH_schedulers.json` (schema 3: adds `sharding`,
+/// `components_max` and `effective_speculation_max` to the schema 2
+/// columns `speculation`, `commit_lag_ms`, `cancelled_waves`,
+/// `max_queue_depth`).
 #[allow(clippy::too_many_arguments)]
 fn json_row(
     algo: &str,
     scheduler: SchedulerKind,
     speculation: usize,
+    sharding: ShardingKind,
     transport: TransportKind,
     frugal: bool,
     out: &driver::RunOutput,
@@ -76,6 +83,7 @@ fn json_row(
         ("algo", Json::Str(algo.to_string())),
         ("scheduler", Json::Str(scheduler.name().to_string())),
         ("speculation", Json::Num(speculation as f64)),
+        ("sharding", Json::Str(sharding.name().to_string())),
         ("transport", Json::Str(transport.name().to_string())),
         ("frugal_wire", Json::Bool(frugal)),
         ("wall_ms", Json::Num(s.total_time.as_secs_f64() * 1e3)),
@@ -95,6 +103,8 @@ fn json_row(
         ("cancelled_waves", Json::Num(s.total_cancelled_waves() as f64)),
         ("commit_lag_ms", Json::Num(s.total_commit_lag().as_secs_f64() * 1e3)),
         ("max_queue_depth", Json::Num(s.max_queue_depth() as f64)),
+        ("components_max", Json::Num(s.max_largest_component() as f64)),
+        ("effective_speculation_max", Json::Num(s.max_effective_speculation() as f64)),
     ])
 }
 
@@ -154,12 +164,14 @@ fn main() {
         let run_best = |transport: TransportKind,
                         kind: SchedulerKind,
                         speculation: usize,
+                        sharding: ShardingKind,
                         frugal: bool,
                         r: usize| {
             let cfg = RunConfig {
                 transport,
                 scheduler: kind,
                 speculation,
+                sharding,
                 frugal_wire: frugal,
                 ..base.clone()
             };
@@ -180,8 +192,9 @@ fn main() {
 
         let mut reference: Option<driver::RunOutput> = None;
         for transport in [TransportKind::InProc, TransportKind::Tcp] {
-            let bsp = run_best(transport, SchedulerKind::Bsp, 1, true, reps);
-            let pip = run_best(transport, SchedulerKind::Pipelined, 2, true, reps);
+            let bsp = run_best(transport, SchedulerKind::Bsp, 1, ShardingKind::Hash, true, reps);
+            let pip =
+                run_best(transport, SchedulerKind::Pipelined, 2, ShardingKind::Hash, true, reps);
             let mut identical = models_identical(&bsp.model, &pip.model)
                 && reference
                     .as_ref()
@@ -193,8 +206,58 @@ fn main() {
             // commit lag, cancellations and queue depth scale with K.
             // Depth 2 already ran above as the table's pipelined column.
             for depth in [1usize, 4] {
-                let out = run_best(transport, SchedulerKind::Pipelined, depth, true, 1);
+                let out = run_best(
+                    transport,
+                    SchedulerKind::Pipelined,
+                    depth,
+                    ShardingKind::Hash,
+                    true,
+                    1,
+                );
                 identical = identical && models_identical(&bsp.model, &out.model);
+                if depth == 4 {
+                    // The per-sharding twin: the same depth-4 run under
+                    // conflict-aware component packing. Bit-identity is the
+                    // invariant; the cancelled-waves contrast is the win
+                    // (asserted below for bpmeans, the unpatchable case).
+                    let conflict = run_best(
+                        transport,
+                        SchedulerKind::Pipelined,
+                        depth,
+                        ShardingKind::Conflict,
+                        true,
+                        1,
+                    );
+                    identical = identical && models_identical(&bsp.model, &conflict.model);
+                    if *name == "bpmeans" {
+                        let hash_cancelled = out.summary.total_cancelled_waves();
+                        let conflict_cancelled = conflict.summary.total_cancelled_waves();
+                        if conflict_cancelled != 0 {
+                            failures.push(format!(
+                                "bpmeans {} speculation=4 conflict packing must never cancel \
+                                 waves (lazy respin), got {conflict_cancelled}",
+                                transport.name()
+                            ));
+                        }
+                        if conflict_cancelled >= hash_cancelled {
+                            failures.push(format!(
+                                "bpmeans {} speculation=4: conflict packing must cancel \
+                                 strictly fewer waves than hash ({conflict_cancelled} vs \
+                                 {hash_cancelled})",
+                                transport.name()
+                            ));
+                        }
+                    }
+                    rows.push(json_row(
+                        name,
+                        SchedulerKind::Pipelined,
+                        depth,
+                        ShardingKind::Conflict,
+                        transport,
+                        true,
+                        &conflict,
+                    ));
+                }
                 if *name == "dpmeans" && transport == TransportKind::Tcp && depth == 4 {
                     // The acceptance bar for the wave engine: at depth 4
                     // the dpmeans tcp bench must genuinely overlap —
@@ -214,17 +277,33 @@ fn main() {
                         );
                     }
                 }
-                rows.push(json_row(name, SchedulerKind::Pipelined, depth, transport, true, &out));
+                rows.push(json_row(
+                    name,
+                    SchedulerKind::Pipelined,
+                    depth,
+                    ShardingKind::Hash,
+                    transport,
+                    true,
+                    &out,
+                ));
             }
 
             // The before/after baseline: the same tcp run with the PR 3
             // embed-everything wire shape. Bytes are deterministic, so one
             // rep measures them exactly.
             let full = if transport == TransportKind::Tcp {
-                let full = run_best(transport, SchedulerKind::Bsp, 1, false, 1);
-                identical = identical && models_identical(&bsp.model, &full.model);
-                rows.push(json_row(name, SchedulerKind::Bsp, 1, transport, false, &full));
-                Some(full)
+                let f = run_best(transport, SchedulerKind::Bsp, 1, ShardingKind::Hash, false, 1);
+                identical = identical && models_identical(&bsp.model, &f.model);
+                rows.push(json_row(
+                    name,
+                    SchedulerKind::Bsp,
+                    1,
+                    ShardingKind::Hash,
+                    transport,
+                    false,
+                    &f,
+                ));
+                Some(f)
             } else {
                 None
             };
@@ -280,8 +359,24 @@ fn main() {
                 pip.summary.total_respins().to_string(),
                 identical.to_string(),
             ]);
-            rows.push(json_row(name, SchedulerKind::Bsp, 1, transport, true, &bsp));
-            rows.push(json_row(name, SchedulerKind::Pipelined, 2, transport, true, &pip));
+            rows.push(json_row(
+                name,
+                SchedulerKind::Bsp,
+                1,
+                ShardingKind::Hash,
+                transport,
+                true,
+                &bsp,
+            ));
+            rows.push(json_row(
+                name,
+                SchedulerKind::Pipelined,
+                2,
+                ShardingKind::Hash,
+                transport,
+                true,
+                &pip,
+            ));
             if reference.is_none() {
                 reference = Some(bsp);
             }
@@ -295,7 +390,7 @@ fn main() {
     // Machine-readable results for cross-PR perf tracking (schema in the
     // README; consumed by CI's bench-smoke regression gate).
     let doc = obj(vec![
-        ("schema", Json::Num(2.0)),
+        ("schema", Json::Num(3.0)),
         ("bench", Json::Str("schedulers".to_string())),
         (
             "params",

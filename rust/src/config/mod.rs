@@ -103,6 +103,64 @@ impl SchedulerKind {
     }
 }
 
+/// How the wave engine packs an epoch's points into per-worker job ranges
+/// (and how the validation plane groups conflict keys into shards).
+///
+/// Both modes produce bit-identical models — packing only decides *which*
+/// worker computes each point's kernel, never the kernel's output, and
+/// validation replays point-index order either way. They differ in how the
+/// engine reacts to unpatchable conflicts: see
+/// [`crate::coordinator::scheduler`] for the respin-policy contrast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardingKind {
+    /// Blind near-equal contiguous split (the PR 5 behavior): worker `p`
+    /// gets the `p`-th slice of the epoch span regardless of what state
+    /// rows its points read.
+    Hash,
+    /// Conflict-aware: union-find over the per-point conflict keys groups
+    /// the epoch into connected components, and whole components are
+    /// packed onto workers (CYCLADES-style), so concurrent jobs rarely
+    /// read the same state rows. Validator shard lists become
+    /// component-aligned too.
+    Conflict,
+}
+
+impl ShardingKind {
+    /// Parse a sharding-mode name.
+    pub fn parse(s: &str) -> Result<ShardingKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" | "blind" => Ok(ShardingKind::Hash),
+            "conflict" | "component" | "components" => Ok(ShardingKind::Conflict),
+            other => {
+                Err(Error::config(format!("unknown sharding `{other}` (hash|conflict)")))
+            }
+        }
+    }
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardingKind::Hash => "hash",
+            ShardingKind::Conflict => "conflict",
+        }
+    }
+}
+
+/// Resolved wave-engine speculation policy: either the classic fixed
+/// depth-`K` knob, or the EWMA-adaptive controller selected by
+/// `speculation = "auto"`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpeculationSpec {
+    /// Pin the in-flight depth to exactly `K` epochs.
+    Fixed(usize),
+    /// Drive the depth per epoch from an EWMA of observed conflict rates,
+    /// within the `[1, max]` band: deep while acceptances hold, shallow
+    /// when conflicts spike.
+    Auto {
+        /// Upper bound of the adaptive band (`speculation_max`).
+        max: usize,
+    },
+}
+
 /// Which transport moves jobs, replies and snapshots between the master
 /// and its peers (compute workers and validator shards).
 ///
@@ -216,6 +274,18 @@ pub struct RunConfig {
     /// bit-identical at every depth (`scheduler = "bsp"` ignores this and
     /// pins depth 1).
     pub speculation: usize,
+    /// `true` when `speculation = "auto"` was given: the wave engine drives
+    /// the in-flight depth per epoch from an EWMA of observed conflict
+    /// rates inside `[1, speculation_max]` instead of pinning it to
+    /// [`RunConfig::speculation`]. See [`RunConfig::speculation_spec`].
+    pub speculation_auto: bool,
+    /// Upper bound of the adaptive band under `speculation = "auto"`
+    /// (ignored by the fixed integer knob).
+    pub speculation_max: usize,
+    /// How epochs are packed into per-worker job ranges: blind contiguous
+    /// `hash` splits, or CYCLADES-style `conflict` components (union-find
+    /// over the per-point conflict keys). Bit-identical either way.
+    pub sharding: ShardingKind,
     /// Cluster transport (in-process channels vs loopback TCP sockets).
     pub transport: TransportKind,
     /// Validator-shard peers on the validation plane. `0` (the default)
@@ -269,6 +339,9 @@ impl Default for RunConfig {
             backend: BackendKind::Native,
             scheduler: SchedulerKind::Bsp,
             speculation: 2,
+            speculation_auto: false,
+            speculation_max: 8,
+            sharding: ShardingKind::Hash,
             transport: TransportKind::from_env(),
             validator_shards: 0,
             peers: Vec::new(),
@@ -315,9 +388,28 @@ impl RunConfig {
         if let Some(s) = doc.get_str("run.scheduler") {
             cfg.scheduler = SchedulerKind::parse(s)?;
         }
-        if let Some(v) = doc.get_int("run.speculation") {
-            cfg.speculation = usize::try_from(v)
-                .map_err(|_| Error::config("run.speculation must be ≥ 1"))?;
+        match doc.get("run.speculation") {
+            None => {}
+            Some(toml::Value::Int(v)) => {
+                cfg.speculation = usize::try_from(*v)
+                    .map_err(|_| Error::config("run.speculation must be ≥ 1"))?;
+                cfg.speculation_auto = false;
+            }
+            Some(toml::Value::Str(s)) if s.eq_ignore_ascii_case("auto") => {
+                cfg.speculation_auto = true;
+            }
+            Some(other) => {
+                return Err(Error::config(format!(
+                    "run.speculation must be an integer depth or \"auto\", got {other:?}"
+                )))
+            }
+        }
+        if let Some(v) = doc.get_int("run.speculation_max") {
+            cfg.speculation_max = usize::try_from(v)
+                .map_err(|_| Error::config("run.speculation_max must be ≥ 1"))?;
+        }
+        if let Some(s) = doc.get_str("run.sharding") {
+            cfg.sharding = ShardingKind::parse(s)?;
         }
         if let Some(s) = doc.get_str("run.transport") {
             cfg.transport = TransportKind::parse(s)?;
@@ -406,6 +498,12 @@ impl RunConfig {
                 self.speculation
             )));
         }
+        if self.speculation_max == 0 || self.speculation_max > 64 {
+            return Err(Error::config(format!(
+                "speculation_max out of range (1 ..= 64): {}",
+                self.speculation_max
+            )));
+        }
         for addr in self.peers.iter().chain(&self.validator_peers) {
             let valid = match addr.rsplit_once(':') {
                 Some((host, port)) => !host.is_empty() && port.parse::<u16>().is_ok(),
@@ -453,6 +551,17 @@ impl RunConfig {
     /// Points per epoch, `P·b`.
     pub fn points_per_epoch(&self) -> usize {
         self.procs * self.block
+    }
+
+    /// Resolved speculation policy: [`SpeculationSpec::Auto`] when
+    /// `speculation = "auto"` was given (band `[1, speculation_max]`),
+    /// the fixed integer depth otherwise.
+    pub fn speculation_spec(&self) -> SpeculationSpec {
+        if self.speculation_auto {
+            SpeculationSpec::Auto { max: self.speculation_max }
+        } else {
+            SpeculationSpec::Fixed(self.speculation)
+        }
     }
 
     /// Validator peers on the validation plane. `0` ⇒ half the workers
@@ -511,7 +620,11 @@ mod tests {
         assert!(BackendKind::parse("gpu").is_err());
         assert_eq!(SchedulerKind::parse("BSP").unwrap(), SchedulerKind::Bsp);
         assert_eq!(SchedulerKind::parse("pipelined").unwrap(), SchedulerKind::Pipelined);
-        assert!(SchedulerKind::parse("speculative").is_err());
+        assert_eq!(SchedulerKind::parse("speculative").unwrap(), SchedulerKind::Pipelined);
+        assert_eq!(ShardingKind::parse("Hash").unwrap(), ShardingKind::Hash);
+        assert_eq!(ShardingKind::parse("conflict").unwrap(), ShardingKind::Conflict);
+        assert_eq!(ShardingKind::parse("components").unwrap(), ShardingKind::Conflict);
+        assert!(ShardingKind::parse("random").is_err());
         assert_eq!(
             DataSource::parse("file:/tmp/a.occb").unwrap(),
             DataSource::File(PathBuf::from("/tmp/a.occb"))
@@ -585,6 +698,56 @@ mod tests {
         );
         // "wave" parses as an alias of the speculative engine.
         assert_eq!(SchedulerKind::parse("wave").unwrap(), SchedulerKind::Pipelined);
+    }
+
+    #[test]
+    fn sharding_and_adaptive_speculation_knobs_extract() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.sharding, ShardingKind::Hash, "hash split is the default");
+        assert!(!cfg.speculation_auto);
+        assert_eq!(cfg.speculation_max, 8);
+        assert_eq!(cfg.speculation_spec(), SpeculationSpec::Fixed(2));
+
+        let doc = toml::parse(
+            "[run]\nscheduler = \"pipelined\"\nsharding = \"conflict\"\n\
+             speculation = \"auto\"\nspeculation_max = 6\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sharding, ShardingKind::Conflict);
+        assert!(cfg.speculation_auto);
+        assert_eq!(cfg.speculation_spec(), SpeculationSpec::Auto { max: 6 });
+
+        // An integer depth still parses and pins the fixed policy; case
+        // does not matter for "auto".
+        let cfg = RunConfig::from_doc(&toml::parse("[run]\nspeculation = 4\n").unwrap()).unwrap();
+        assert!(!cfg.speculation_auto);
+        assert_eq!(cfg.speculation_spec(), SpeculationSpec::Fixed(4));
+        assert!(RunConfig::from_doc(&toml::parse("[run]\nspeculation = \"AUTO\"\n").unwrap())
+            .unwrap()
+            .speculation_auto);
+
+        // Junk speculation values are typed errors naming the accepted forms.
+        let err = RunConfig::from_doc(&toml::parse("[run]\nspeculation = \"fast\"\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("speculation") && err.contains("auto"), "{err}");
+        let err = RunConfig::from_doc(&toml::parse("[run]\nspeculation = true\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("speculation"), "{err}");
+
+        // Unknown sharding names the value and the choices.
+        let err = RunConfig::from_doc(&toml::parse("[run]\nsharding = \"random\"\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("random") && err.contains("hash") && err.contains("conflict"), "{err}");
+
+        // speculation_max shares the 1 ..= 64 band.
+        let doc = toml::parse("[run]\nspeculation_max = 0\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = toml::parse("[run]\nspeculation_max = 1000\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
     }
 
     #[test]

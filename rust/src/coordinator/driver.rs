@@ -21,7 +21,7 @@
 //! identical across schedulers (`rust/tests/scheduler_equivalence.rs`).
 
 use super::engine::{split_range_chunked, Job, JobOutput};
-use super::scheduler::{self, EpochAlgo, EpochCounts, JobSpec, Scheduler};
+use super::scheduler::{self, EpochAlgo, EpochCounts, JobSpec, Kernel, PackSpec, Scheduler};
 use super::transport::{Cluster, Topology, ValidatePlane};
 use super::validator::{
     bp_validate, dp_validate_clustered, ofl_validate_clustered, BpProposal, DpProposal,
@@ -31,7 +31,7 @@ use crate::algorithms::bpmeans::{descend_z, BpModel, RIDGE_EPS};
 use crate::algorithms::dpmeans::DpModel;
 use crate::algorithms::objective;
 use crate::algorithms::ofl::{ofl_draws, OflModel};
-use crate::config::{Algo, BackendKind, DataSource, RunConfig};
+use crate::config::{Algo, BackendKind, DataSource, RunConfig, ShardingKind};
 use crate::data::{generators, Dataset};
 use crate::error::{Error, Result};
 use crate::linalg::{blocked, cholesky, Matrix};
@@ -208,14 +208,24 @@ fn patch_nearest(
 /// the wave engine's dedicated validation thread for the pass.
 struct DpPass<'a> {
     vplane: &'a mut ValidatePlane,
-    data: &'a Dataset,
+    data: &'a Arc<Dataset>,
     backend: &'a Arc<dyn ComputeBackend>,
     centers: &'a mut Matrix,
     assignments: &'a mut [u32],
     lambda2: f32,
     shards: usize,
+    sharding: ShardingKind,
     changed: bool,
     created: usize,
+}
+
+/// The packing half of a pass's [`JobSpec`]: conflict packing needs the
+/// dataset to key points against the scatter-time snapshot.
+fn pack_spec(sharding: ShardingKind, data: &Arc<Dataset>) -> PackSpec {
+    match sharding {
+        ShardingKind::Hash => PackSpec::Hash,
+        ShardingKind::Conflict => PackSpec::Conflict { data: data.clone() },
+    }
 }
 
 impl EpochAlgo for DpPass<'_> {
@@ -228,7 +238,7 @@ impl EpochAlgo for DpPass<'_> {
     }
 
     fn job_spec(&self) -> JobSpec {
-        JobSpec::Nearest
+        JobSpec { kernel: Kernel::Nearest, pack: pack_spec(self.sharding, self.data) }
     }
 
     fn can_patch(&self) -> bool {
@@ -280,6 +290,7 @@ impl EpochAlgo for DpPass<'_> {
             &keys,
             self.lambda2,
             self.shards,
+            self.sharding,
         )?;
         for (i, c) in &outcome.resolved {
             if self.assignments[*i as usize] != *c {
@@ -313,7 +324,7 @@ pub fn run_dpmeans(
         backend.clone(),
         &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
-    let sched = scheduler::make(cfg.scheduler, cfg.speculation);
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec());
     let total = Stopwatch::start();
 
     let mut centers = Matrix::zeros(0, d);
@@ -357,6 +368,7 @@ pub fn run_dpmeans(
             assignments: &mut assignments,
             lambda2,
             shards,
+            sharding: cfg.sharding,
             changed: changed0,
             created: created0,
         };
@@ -446,7 +458,7 @@ pub fn run_dpmeans(
 /// The OFL single pass's mutable state, driven by a scheduler.
 struct OflPass<'a> {
     vplane: &'a mut ValidatePlane,
-    data: &'a Dataset,
+    data: &'a Arc<Dataset>,
     backend: &'a Arc<dyn ComputeBackend>,
     centers: &'a mut Matrix,
     assignments: &'a mut [u32],
@@ -454,6 +466,7 @@ struct OflPass<'a> {
     draws: &'a [f64],
     lambda2: f64,
     shards: usize,
+    sharding: ShardingKind,
 }
 
 impl EpochAlgo for OflPass<'_> {
@@ -466,7 +479,7 @@ impl EpochAlgo for OflPass<'_> {
     }
 
     fn job_spec(&self) -> JobSpec {
-        JobSpec::Nearest
+        JobSpec { kernel: Kernel::Nearest, pack: pack_spec(self.sharding, self.data) }
     }
 
     fn can_patch(&self) -> bool {
@@ -524,6 +537,7 @@ impl EpochAlgo for OflPass<'_> {
             self.lambda2,
             |i| draws[i as usize],
             self.shards,
+            self.sharding,
         )?;
         for (i, c) in &outcome.resolved {
             self.assignments[*i as usize] = *c;
@@ -557,7 +571,7 @@ pub fn run_ofl(
         backend.clone(),
         &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
-    let sched = scheduler::make(cfg.scheduler, cfg.speculation);
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec());
     let total = Stopwatch::start();
 
     let draws = ofl_draws(n, cfg.seed);
@@ -579,6 +593,7 @@ pub fn run_ofl(
         draws: &draws,
         lambda2,
         shards,
+        sharding: cfg.sharding,
     };
     sched.run_pass(&mut cluster.compute, &mut st, &epochs, 0, sink, &mut epochs_log)?;
     drop(st);
@@ -612,11 +627,12 @@ fn z_eq(a: &[bool], b: &[bool]) -> bool {
 /// reduction of per-feature terms, so the pipelined scheduler redoes the
 /// epoch when speculation conflicts with newly-accepted features.
 struct BpPass<'a> {
-    data: &'a Dataset,
+    data: &'a Arc<Dataset>,
     features: &'a mut Matrix,
     assignments: &'a mut Vec<Vec<bool>>,
     lambda2: f32,
     sweeps: usize,
+    sharding: ShardingKind,
     changed: bool,
     created: usize,
 }
@@ -631,7 +647,10 @@ impl EpochAlgo for BpPass<'_> {
     }
 
     fn job_spec(&self) -> JobSpec {
-        JobSpec::BpDescend { sweeps: self.sweeps }
+        JobSpec {
+            kernel: Kernel::BpDescend { sweeps: self.sweeps },
+            pack: pack_spec(self.sharding, self.data),
+        }
     }
 
     fn can_patch(&self) -> bool {
@@ -721,7 +740,7 @@ pub fn run_bpmeans(
         backend.clone(),
         &Topology::of_config(cfg, 1),
     )?;
-    let sched = scheduler::make(cfg.scheduler, cfg.speculation);
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec());
     let total = Stopwatch::start();
 
     // Init (Alg 7): one feature = grand mean, z_i,0 = 1 for all i.
@@ -773,6 +792,7 @@ pub fn run_bpmeans(
             assignments: &mut assignments,
             lambda2,
             sweeps,
+            sharding: cfg.sharding,
             changed: changed0,
             created: created0,
         };

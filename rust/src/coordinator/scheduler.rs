@@ -94,9 +94,54 @@
 //! event loop — and a final serial merge in point-index order replays the
 //! exact Thm 3.1 serial decision sequence from cached (bit-identical)
 //! distances.
+//!
+//! ## Conflict-aware packing (`sharding = "conflict"`)
+//!
+//! Under the default `sharding = "hash"` packing an epoch's span is split
+//! blindly into `P` near-equal slices. `sharding = "conflict"` instead
+//! computes each point's conflict key against the scatter-time snapshot
+//! (its nearest snapshot row — the state the job will read), groups the
+//! span into connected components with the union-find partitioner
+//! ([`super::validator::conflict_components`], CYCLADES-style), and packs
+//! *whole components* onto workers ([`JobSpec::plan`]): cut positions are
+//! chosen at component-closure boundaries nearest the equal-split targets,
+//! so no conflict key ever spans two workers' jobs. Packing only decides
+//! *which worker* computes each point — per-point kernel outputs are
+//! independent of how ranges are grouped, and validation replays
+//! point-index order — so models stay bit-identical in either mode; the
+//! epoch's `components` / `largest_component` land in [`EpochRecord`].
+//!
+//! Conflict mode also switches the unpatchable respin policy from *eager*
+//! to *lazy*: hash mode cancels every in-flight descendant the moment a
+//! commit grows the state (each such cancellation can itself be
+//! invalidated by the next commit — a depth-K storm cancels
+//! `K-1 + K-2 + …` waves), while conflict mode leaves waves in flight and
+//! respins a wave at most once, at dispatch time, against the freshest
+//! committed snapshot (the dispatch gate already re-checks staleness
+//! before anything reaches validation, so nothing stale can ever commit —
+//! the validation thread still hard-errors if one did). Same bit-identical
+//! outcome, strictly fewer recomputes under a conflict storm, and
+//! `cancelled_waves` drops to 0 by construction — the respin-regression
+//! suite in `rust/tests/scheduler_equivalence.rs` and the depth-4 BP bench
+//! gate hold the improvement down.
+//!
+//! ## Adaptive speculation (`speculation = "auto"`)
+//!
+//! A fixed depth K is a bet that conflicts stay rare. `speculation =
+//! "auto"` instead drives the fill bound per epoch from an EWMA of the
+//! observed conflict rate: each commit contributes 1 when it invalidated
+//! in-flight unpatchable work (the state grew) and 0 otherwise, and the
+//! depth for newly scattered waves is `round((1 − ewma) · max)` clamped to
+//! `[1, speculation_max]` — deep while acceptances hold (Thm 3.2 says they
+//! decay geometrically), collapsing to the BSP barrier under a conflict
+//! storm so nothing is computed just to be thrown away. Patchable
+//! algorithms never emit the signal (their stale waves are patched, not
+//! wasted) and so stay at `max`. The depth in effect when a wave was
+//! scattered is recorded as [`EpochRecord::effective_speculation`].
 
 use super::engine::{split_range, Job, JobOutput};
 use super::transport::{PlaneHandle, WaveId};
+use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::metrics::{EpochRecord, MetricsSink, Stopwatch};
@@ -119,11 +164,9 @@ pub struct EpochCounts {
     pub state_rows: usize,
 }
 
-/// How an algorithm's epoch jobs are built from a snapshot — a plain value
-/// (no borrow of the algorithm state) so the event loop can scatter
-/// speculative waves while the validation thread owns the `EpochAlgo`.
+/// The per-point kernel an algorithm's epoch jobs run.
 #[derive(Debug, Clone, Copy)]
-pub enum JobSpec {
+pub enum Kernel {
     /// Nearest-center assignment against the snapshot (DP-means, OFL).
     Nearest,
     /// BP-means coordinate descent against the snapshot.
@@ -133,24 +176,153 @@ pub enum JobSpec {
     },
 }
 
+/// How an epoch's span is cut into per-worker job ranges.
+#[derive(Debug, Clone)]
+pub enum PackSpec {
+    /// Blind near-equal slices ([`split_range`]); ignores the snapshot.
+    Hash,
+    /// Conflict-component packing: key each point by its nearest snapshot
+    /// row, group keys into connected components
+    /// ([`super::validator::conflict_components`]), and never cut inside a
+    /// component. Needs the dataset to key points at scatter time. Also
+    /// selects the lazy dispatch-time respin policy for unpatchable
+    /// algorithms (see the module docs).
+    Conflict {
+        /// The pass's dataset, for scatter-time conflict keys.
+        data: Arc<Dataset>,
+    },
+}
+
+/// One epoch's packing decision: exactly `procs` contiguous, in-order job
+/// ranges (some possibly empty) plus the conflict-graph shape behind them.
+struct Pack {
+    ranges: Vec<Range<usize>>,
+    /// Connected components in the epoch's conflict graph (0 under hash).
+    components: usize,
+    /// Points in the largest component (0 under hash).
+    largest_component: usize,
+}
+
+/// How an algorithm's epoch jobs are built from a snapshot — a plain value
+/// (no borrow of the algorithm state) so the event loop can scatter
+/// speculative waves while the validation thread owns the `EpochAlgo`.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Per-point kernel.
+    pub kernel: Kernel,
+    /// Span-to-worker packing policy.
+    pub pack: PackSpec,
+}
+
 impl JobSpec {
     /// One worker job per range, against snapshot `snap`.
     pub fn jobs(&self, snap: &Arc<Matrix>, ranges: &[Range<usize>]) -> Vec<Job> {
-        match self {
-            JobSpec::Nearest => ranges
+        match self.kernel {
+            Kernel::Nearest => ranges
                 .iter()
                 .map(|r| Job::Nearest { range: r.clone(), centers: snap.clone() })
                 .collect(),
-            JobSpec::BpDescend { sweeps } => ranges
+            Kernel::BpDescend { sweeps } => ranges
                 .iter()
-                .map(|r| Job::BpDescend {
-                    range: r.clone(),
-                    features: snap.clone(),
-                    sweeps: *sweeps,
-                })
+                .map(|r| Job::BpDescend { range: r.clone(), features: snap.clone(), sweeps })
                 .collect(),
         }
     }
+
+    /// Cut `span` into `procs` contiguous job ranges per the packing
+    /// policy. Packing decides which worker computes each point, never
+    /// what is computed, so both policies yield bit-identical models.
+    fn plan(&self, span: Range<usize>, procs: usize, snap: &Matrix) -> Pack {
+        match &self.pack {
+            PackSpec::Hash => Pack {
+                ranges: split_range(span, procs),
+                components: 0,
+                largest_component: 0,
+            },
+            PackSpec::Conflict { data } => {
+                // Key each point by the snapshot row its job will read.
+                // An empty snapshot conflicts everywhere (first proposal
+                // creates the row every later point compares against).
+                let keys: Vec<u32> = span
+                    .clone()
+                    .map(|i| {
+                        if snap.rows == 0 {
+                            u32::MAX
+                        } else {
+                            crate::linalg::nearest(data.point(i), snap).0 as u32
+                        }
+                    })
+                    .collect();
+                let comps = super::validator::conflict_components(&keys);
+                let components = comps.len();
+                let largest_component = comps.iter().map(|c| c.len()).max().unwrap_or(0);
+                let ranges = pack_component_ranges(&comps, span, procs);
+                Pack { ranges, components, largest_component }
+            }
+        }
+    }
+}
+
+/// Pack whole conflict components into exactly `procs` contiguous ranges.
+///
+/// Component position extents are merged into atomic blocks (cutting
+/// inside a block would split some component across two workers), then
+/// `procs - 1` cut positions are chosen greedily at the block boundaries
+/// nearest the ideal equal-split targets. A degenerate conflict graph —
+/// one giant component, e.g. every point keyed to an empty snapshot —
+/// honestly collapses onto one worker; the adaptive controller reads the
+/// same storm through the respin signal and shortens the pipeline instead.
+fn pack_component_ranges(
+    comps: &[Vec<u32>],
+    span: Range<usize>,
+    procs: usize,
+) -> Vec<Range<usize>> {
+    let n = span.len();
+    if n == 0 {
+        return split_range(span, procs);
+    }
+    // Merge component [min, max+1) extents into block boundaries. Components
+    // arrive ordered by smallest member, but extents can nest/overlap, so
+    // sort and sweep. Components tile the span, so the sweep's reach ends
+    // at exactly `n`.
+    let mut extents: Vec<(usize, usize)> = comps
+        .iter()
+        .filter(|c| !c.is_empty())
+        .map(|c| (c[0] as usize, *c.last().expect("nonempty component") as usize + 1))
+        .collect();
+    extents.sort_unstable();
+    let mut bounds: Vec<usize> = vec![0];
+    let mut reach = 0usize;
+    for (lo, hi) in extents {
+        if reach > 0 && lo >= reach {
+            bounds.push(reach);
+        }
+        reach = reach.max(hi);
+    }
+    bounds.push(reach);
+    debug_assert_eq!(reach, n, "components must tile the span");
+
+    // cuts[p] = start of worker p's range (relative to span.start), chosen
+    // from `bounds`, monotone, nearest the ideal split p·n/procs.
+    let mut cuts = vec![0usize; procs + 1];
+    cuts[procs] = n;
+    for p in 1..procs {
+        let ideal = p * n / procs;
+        let floor = cuts[p - 1];
+        let mut best = floor;
+        for &b in &bounds {
+            if b < floor {
+                continue;
+            }
+            if b.abs_diff(ideal) < best.abs_diff(ideal) {
+                best = b;
+            }
+        }
+        cuts[p] = best;
+    }
+    (0..procs)
+        .map(|p| span.start + cuts[p]..span.start + cuts[p + 1])
+        .collect()
 }
 
 /// Algorithm-specific hooks one pass's epochs are driven through.
@@ -217,12 +389,21 @@ pub trait Scheduler {
 /// Build the scheduler a config names: `bsp` pins the wave engine at depth
 /// 1 (the strict barrier), `pipelined` runs it at the configured
 /// `speculation` depth (default 2 — the former two-stage pipeline).
-pub fn make(kind: crate::config::SchedulerKind, speculation: usize) -> Box<dyn Scheduler> {
-    let depth = match kind {
-        crate::config::SchedulerKind::Bsp => 1,
-        crate::config::SchedulerKind::Pipelined => speculation.max(1),
+/// `speculation = "auto"` runs the engine adaptively: `depth` becomes the
+/// `speculation_max` ceiling and the per-epoch fill bound follows the
+/// conflict EWMA (see the module docs).
+pub fn make(
+    kind: crate::config::SchedulerKind,
+    speculation: crate::config::SpeculationSpec,
+) -> Box<dyn Scheduler> {
+    let (depth, adaptive) = match kind {
+        crate::config::SchedulerKind::Bsp => (1, false),
+        crate::config::SchedulerKind::Pipelined => match speculation {
+            crate::config::SpeculationSpec::Fixed(k) => (k.max(1), false),
+            crate::config::SpeculationSpec::Auto { max } => (max.max(1), true),
+        },
     };
-    Box::new(WaveEngine { depth })
+    Box::new(WaveEngine { depth, adaptive })
 }
 
 /// Wave lifecycle within the engine's table. `Committed` and `Respun` are
@@ -260,6 +441,15 @@ struct Wave {
     respins: usize,
     /// Max epochs resident in the pipeline while this wave lived.
     depth_seen: usize,
+    /// The epoch's full point span (re-planned on respin: fresh snapshot,
+    /// fresh conflict keys, fresh packing).
+    span: Range<usize>,
+    /// Conflict components in this wave's packing (0 under hash).
+    components: usize,
+    /// Points in the largest component (0 under hash).
+    largest_component: usize,
+    /// Fill bound in effect when this wave was scattered.
+    effective_speculation: usize,
 }
 
 /// One gathered wave handed to the validation thread.
@@ -362,14 +552,16 @@ fn interval_overlap(win: (Instant, Instant), mut intervals: Vec<(Instant, Instan
 }
 
 /// Cancel-and-respin one wave: drain its in-flight replies (jobs cannot be
-/// aborted mid-compute), discard the speculative outputs, and rescatter
-/// the epoch against the committed snapshot. The drained compute time
-/// still counts toward the epoch's `worker_time` (it was real work), and
-/// the discarded flight interval still feeds the overlap accounting.
+/// aborted mid-compute), discard the speculative outputs, re-plan the
+/// epoch's packing against the committed snapshot (conflict keys move when
+/// the state grows), and rescatter. The drained compute time still counts
+/// toward the epoch's `worker_time` (it was real work), and the discarded
+/// flight interval still feeds the overlap accounting.
 fn respin_wave(
     compute: &mut PlaneHandle,
     spec: &JobSpec,
     snap: &Arc<Matrix>,
+    procs: usize,
     w: &mut Wave,
 ) -> Result<()> {
     if w.state == WaveState::Scattered {
@@ -383,6 +575,10 @@ fn respin_wave(
     }
     w.outs = None;
     w.gathered_at = None;
+    let plan = spec.plan(w.span.clone(), procs, snap);
+    w.ranges = plan.ranges;
+    w.components = plan.components;
+    w.largest_component = plan.largest_component;
     // Only a successful rescatter returns the wave to `Scattered` — a
     // scatter failure must not leave a retired id marked in-flight.
     w.state = WaveState::Gathered;
@@ -398,8 +594,12 @@ fn respin_wave(
 /// machine and the serializability argument.
 pub struct WaveEngine {
     /// Max epochs resident in the pipeline (`speculation`): 1 = BSP, 2 =
-    /// the former two-stage pipeline, higher = deeper speculation.
+    /// the former two-stage pipeline, higher = deeper speculation. Under
+    /// `adaptive` this is the `speculation_max` ceiling.
     pub depth: usize,
+    /// Drive the per-epoch fill bound from the conflict EWMA instead of
+    /// pinning it at `depth` (`speculation = "auto"`).
+    pub adaptive: bool,
 }
 
 impl Scheduler for WaveEngine {
@@ -423,20 +623,28 @@ impl Scheduler for WaveEngine {
         if epochs.is_empty() {
             return Ok(());
         }
-        let depth = self.depth.max(1);
+        let max_depth = self.depth.max(1);
         let spec = algo.job_spec();
         let patchable = algo.can_patch();
+        // Conflict packing pairs with the lazy dispatch-time respin policy
+        // (at most one respin per wave, against the freshest snapshot);
+        // hash packing keeps the eager cancel-on-commit policy.
+        let lazy_respin = matches!(spec.pack, PackSpec::Conflict { .. });
         let mut snap = algo.snapshot();
         let procs = compute.procs;
         let mut net0 = compute.stats();
+        // Adaptive controller state: EWMA of "this commit invalidated
+        // in-flight unpatchable work", and the fill bound it implies.
+        let mut conflict_ewma = 0.0f64;
+        let mut cur_depth = max_depth;
 
         std::thread::scope(|scope| -> Result<()> {
-            // Bounded queues both ways: at most `depth` waves can be past
-            // their gather, so neither side ever blocks the other into a
-            // deadlock — the event loop drains commits every iteration,
+            // Bounded queues both ways: at most `max_depth` waves can be
+            // past their gather, so neither side ever blocks the other into
+            // a deadlock — the event loop drains commits every iteration,
             // and dispatches never exceed the pipeline bound.
-            let (req_tx, req_rx) = sync_channel::<VReq>(depth);
-            let (res_tx, res_rx) = sync_channel::<Result<VCommit>>(depth);
+            let (req_tx, req_rx) = sync_channel::<VReq>(max_depth);
+            let (res_tx, res_rx) = sync_channel::<Result<VCommit>>(max_depth);
             // Joined implicitly at scope exit; exits when `req_tx` drops.
             let _validation = scope.spawn(move || validation_loop(algo, req_rx, res_tx));
 
@@ -449,15 +657,18 @@ impl Scheduler for WaveEngine {
                 while next_commit < epochs.len() {
                     let mut progressed = false;
 
-                    // 1. Fill the pipeline up to the speculation depth.
-                    while next_scatter < epochs.len() && next_scatter - next_commit < depth {
-                        let ranges = split_range(epochs[next_scatter].clone(), procs);
-                        let id = compute.scatter(spec.jobs(&snap, &ranges))?;
+                    // 1. Fill the pipeline up to the speculation depth
+                    //    (the adaptive controller's current bound; the
+                    //    fixed depth otherwise).
+                    while next_scatter < epochs.len() && next_scatter - next_commit < cur_depth {
+                        let span = epochs[next_scatter].clone();
+                        let plan = spec.plan(span.clone(), procs, &snap);
+                        let id = compute.scatter(spec.jobs(&snap, &plan.ranges))?;
                         let now = Instant::now();
                         live.push_back(Wave {
                             epoch: next_scatter,
                             id,
-                            ranges,
+                            ranges: plan.ranges,
                             snap_rows: snap.rows,
                             state: WaveState::Scattered,
                             outs: None,
@@ -469,6 +680,10 @@ impl Scheduler for WaveEngine {
                             worker_time: Duration::ZERO,
                             respins: 0,
                             depth_seen: 0,
+                            span,
+                            components: plan.components,
+                            largest_component: plan.largest_component,
+                            effective_speculation: cur_depth,
                         });
                         next_scatter += 1;
                         note_depth(&mut live, next_scatter - next_commit);
@@ -518,9 +733,10 @@ impl Scheduler for WaveEngine {
                     //    enqueue as soon as the wave is gathered — the
                     //    patch spans however many commits land before it
                     //    runs. Unpatchable ones wait until every earlier
-                    //    epoch committed, then go fresh (or respin — a
-                    //    defensive arm; the commit handler respins
-                    //    descendants eagerly).
+                    //    epoch committed, then go fresh (or respin — under
+                    //    conflict packing this lazy arm IS the respin
+                    //    policy; under hash it is a defensive arm behind
+                    //    the commit handler's eager cancellations).
                     if next_dispatch < next_scatter {
                         let w = live
                             .iter_mut()
@@ -548,7 +764,7 @@ impl Scheduler for WaveEngine {
                                     })?;
                                 next_dispatch += 1;
                             } else {
-                                respin_wave(compute, &spec, &snap, w)?;
+                                respin_wave(compute, &spec, &snap, procs, w)?;
                             }
                             progressed = true;
                         }
@@ -586,17 +802,33 @@ impl Scheduler for WaveEngine {
                         let Some(res) = res else { break };
                         let commit = res?;
                         debug_assert_eq!(commit.epoch, next_commit, "commits retire in order");
+                        let grew = commit.snapshot.rows > snap.rows;
                         snap = commit.snapshot.clone();
 
-                        // Respin policy: a commit that grew the state
-                        // invalidates every in-flight unpatchable
-                        // descendant — cancel them all (drain + rescatter
-                        // against the committed snapshot), in epoch order.
+                        // Adaptive controller: fold "did this commit
+                        // invalidate in-flight unpatchable work?" into the
+                        // EWMA and re-derive the fill bound. Patchable
+                        // algorithms never signal (stale waves are patched,
+                        // not wasted), so they hold the ceiling.
+                        let conflicted = !patchable && grew;
+                        conflict_ewma = 0.5 * conflict_ewma + if conflicted { 0.5 } else { 0.0 };
+                        if self.adaptive {
+                            let target = ((1.0 - conflict_ewma) * max_depth as f64).round();
+                            cur_depth = (target as usize).clamp(1, max_depth);
+                        }
+
+                        // Eager respin policy (hash packing only): a commit
+                        // that grew the state invalidates every in-flight
+                        // unpatchable descendant — cancel them all (drain +
+                        // rescatter against the committed snapshot), in
+                        // epoch order. Conflict packing skips this and lets
+                        // the dispatch gate respin each wave at most once,
+                        // against the freshest snapshot.
                         let mut cancelled = 0usize;
-                        if !patchable {
+                        if !patchable && !lazy_respin {
                             for w in live.iter_mut() {
                                 if w.epoch > commit.epoch && w.snap_rows < snap.rows {
-                                    respin_wave(compute, &spec, &snap, w)?;
+                                    respin_wave(compute, &spec, &snap, procs, w)?;
                                     cancelled += 1;
                                 }
                             }
@@ -645,6 +877,9 @@ impl Scheduler for WaveEngine {
                             queue_depth: w.depth_seen,
                             respins: w.respins,
                             cancelled_waves: cancelled,
+                            components: w.components,
+                            largest_component: w.largest_component,
+                            effective_speculation: w.effective_speculation,
                             commit_lag: commit.commit_lag,
                             wire_bytes: net.wire_bytes,
                             unique_payload_bytes: net.unique_payload_bytes,
@@ -693,6 +928,7 @@ mod tests {
         calls: Vec<String>,
         patchable: bool,
         grow_on_validate: bool,
+        pack: PackSpec,
     }
 
     impl Scripted {
@@ -702,7 +938,15 @@ mod tests {
                 calls: Vec::new(),
                 patchable,
                 grow_on_validate,
+                pack: PackSpec::Hash,
             }
+        }
+
+        /// Switch to conflict-component packing (and with it, the lazy
+        /// respin policy) over `data`.
+        fn conflict(mut self, data: Arc<Dataset>) -> Scripted {
+            self.pack = PackSpec::Conflict { data };
+            self
         }
     }
 
@@ -714,7 +958,7 @@ mod tests {
             self.state.rows
         }
         fn job_spec(&self) -> JobSpec {
-            JobSpec::Nearest
+            JobSpec { kernel: Kernel::Nearest, pack: self.pack.clone() }
         }
         fn can_patch(&self) -> bool {
             self.patchable
@@ -746,24 +990,39 @@ mod tests {
         }
     }
 
+    fn test_data() -> Arc<Dataset> {
+        Arc::new(crate::data::generators::dp_clusters(&crate::data::generators::GenConfig {
+            n: 64,
+            dim: 2,
+            theta: 1.0,
+            seed: 1,
+        }))
+    }
+
     fn cluster2() -> Cluster {
-        let data = Arc::new(crate::data::generators::dp_clusters(
-            &crate::data::generators::GenConfig { n: 64, dim: 2, theta: 1.0, seed: 1 },
-        ));
         let backend: Arc<dyn crate::runtime::ComputeBackend> =
             Arc::new(crate::runtime::native::NativeBackend::new());
-        Cluster::spawn(crate::config::TransportKind::InProc, data, backend, 2, 1).unwrap()
+        Cluster::spawn(crate::config::TransportKind::InProc, test_data(), backend, 2, 1).unwrap()
+    }
+
+    fn drive_epochs(
+        engine: WaveEngine,
+        epochs: Vec<Range<usize>>,
+        algo: &mut Scripted,
+    ) -> Vec<EpochRecord> {
+        let mut cluster = cluster2();
+        let mut sink = MetricsSink::Null;
+        let mut log = Vec::new();
+        engine.run_pass(&mut cluster.compute, algo, &epochs, 0, &mut sink, &mut log).unwrap();
+        log
     }
 
     fn drive(depth: usize, algo: &mut Scripted) -> Vec<EpochRecord> {
-        let mut cluster = cluster2();
-        let epochs = vec![0..16, 16..32, 32..48, 48..64];
-        let mut sink = MetricsSink::Null;
-        let mut log = Vec::new();
-        WaveEngine { depth }
-            .run_pass(&mut cluster.compute, algo, &epochs, 0, &mut sink, &mut log)
-            .unwrap();
-        log
+        drive_epochs(
+            WaveEngine { depth, adaptive: false },
+            vec![0..16, 16..32, 32..48, 48..64],
+            algo,
+        )
     }
 
     #[test]
@@ -867,7 +1126,7 @@ mod tests {
         let mut algo = Scripted::new(true, true);
         let mut sink = MetricsSink::Null;
         let mut log = Vec::new();
-        WaveEngine { depth: 2 }
+        WaveEngine { depth: 2, adaptive: false }
             .run_pass(&mut cluster.compute, &mut algo, &[], 0, &mut sink, &mut log)
             .unwrap();
         assert!(log.is_empty());
@@ -882,10 +1141,124 @@ mod tests {
 
     #[test]
     fn factory_maps_config_kinds_and_depths() {
-        assert_eq!(make(crate::config::SchedulerKind::Bsp, 4).name(), "bsp");
-        assert_eq!(make(crate::config::SchedulerKind::Pipelined, 1).name(), "bsp");
-        assert_eq!(make(crate::config::SchedulerKind::Pipelined, 2).name(), "wave");
-        assert_eq!(make(crate::config::SchedulerKind::Pipelined, 4).name(), "wave");
+        use crate::config::{SchedulerKind, SpeculationSpec};
+        assert_eq!(make(SchedulerKind::Bsp, SpeculationSpec::Fixed(4)).name(), "bsp");
+        assert_eq!(make(SchedulerKind::Pipelined, SpeculationSpec::Fixed(1)).name(), "bsp");
+        assert_eq!(make(SchedulerKind::Pipelined, SpeculationSpec::Fixed(2)).name(), "wave");
+        assert_eq!(make(SchedulerKind::Pipelined, SpeculationSpec::Fixed(4)).name(), "wave");
+        // Auto under bsp is still the strict barrier; under pipelined the
+        // ceiling names the engine.
+        assert_eq!(make(SchedulerKind::Bsp, SpeculationSpec::Auto { max: 8 }).name(), "bsp");
+        assert_eq!(make(SchedulerKind::Pipelined, SpeculationSpec::Auto { max: 1 }).name(), "bsp");
+        assert_eq!(
+            make(SchedulerKind::Pipelined, SpeculationSpec::Auto { max: 8 }).name(),
+            "wave"
+        );
+    }
+
+    #[test]
+    fn conflict_packing_respins_lazily_with_zero_cancellations() {
+        // The same depth-4 unpatchable storm as the eager test, under
+        // conflict packing: no commit-time cancellations at all, and each
+        // descendant wave respins exactly once — at dispatch, against the
+        // freshest snapshot — instead of once per invalidating commit
+        // (3 + 2 + 1 eager respins become 1 + 1 + 1).
+        let mut algo = Scripted::new(false, true).conflict(test_data());
+        let log = drive(4, &mut algo);
+        assert_eq!(log.len(), 4);
+        // Nothing stale ever reached validation (the loop hard-errors).
+        assert!(algo.calls.iter().all(|c| c.starts_with("validate")), "{:?}", algo.calls);
+        assert!(log.iter().all(|r| r.cancelled_waves == 0), "{log:?}");
+        assert_eq!(log[0].respins, 0, "{log:?}");
+        assert!(log[1..].iter().all(|r| r.respins == 1), "{log:?}");
+        // The storm costs 3 recomputes lazily vs 6 eagerly.
+        assert_eq!(log.iter().map(|r| r.respins).sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn conflict_plan_packs_whole_components_contiguously() {
+        let data = test_data();
+        let spec =
+            JobSpec { kernel: Kernel::Nearest, pack: PackSpec::Conflict { data: data.clone() } };
+
+        // Empty snapshot: every point shares the u32::MAX key — one giant
+        // component that cannot be split across workers.
+        let empty = Matrix::zeros(0, 2);
+        let plan = spec.plan(0..64, 4, &empty);
+        assert_eq!(plan.components, 1);
+        assert_eq!(plan.largest_component, 64);
+        assert_eq!(plan.ranges.iter().map(|r| r.len()).sum::<usize>(), 64);
+        assert_eq!(plan.ranges.iter().filter(|r| !r.is_empty()).count(), 1);
+
+        // A real snapshot: ranges are contiguous, in order, tile the span,
+        // and no conflict key lands in two non-empty ranges.
+        let mut snap = Matrix::zeros(0, 2);
+        for i in 0..4 {
+            snap.push_row(data.point(i * 16));
+        }
+        let plan = spec.plan(0..64, 4, &snap);
+        assert_eq!(plan.ranges.len(), 4);
+        let mut cursor = 0usize;
+        for r in &plan.ranges {
+            assert_eq!(r.start, cursor, "{:?}", plan.ranges);
+            assert!(r.end >= r.start);
+            cursor = r.end;
+        }
+        assert_eq!(cursor, 64);
+        assert!(plan.components >= 1);
+        assert!((1..=64).contains(&plan.largest_component));
+        let keys: Vec<u32> =
+            (0..64).map(|i| crate::linalg::nearest(data.point(i), &snap).0 as u32).collect();
+        for key in 0..snap.rows as u32 {
+            let homes: Vec<usize> = plan
+                .ranges
+                .iter()
+                .enumerate()
+                .filter(|&(_, r)| r.clone().any(|i| keys[i] == key))
+                .map(|(w, _)| w)
+                .collect();
+            assert!(homes.len() <= 1, "key {key} split across workers {homes:?}");
+        }
+    }
+
+    #[test]
+    fn adaptive_depth_collapses_under_a_conflict_storm() {
+        // Every commit grows the state, so the conflict EWMA walks 0.5,
+        // 0.75, … and the fill bound walks 4 → 2 → 1: late epochs scatter
+        // at depth 1 (BSP) and stop paying respins entirely.
+        let epochs: Vec<Range<usize>> = (0..8).map(|e| e * 8..(e + 1) * 8).collect();
+        let mut algo = Scripted::new(false, true);
+        let log = drive_epochs(WaveEngine { depth: 4, adaptive: true }, epochs, &mut algo);
+        assert_eq!(log.len(), 8);
+        assert!(log.iter().all(|r| (1..=4).contains(&r.effective_speculation)), "{log:?}");
+        assert_eq!(log[0].effective_speculation, 4, "first wave fills at the ceiling");
+        assert_eq!(log[7].effective_speculation, 1, "storm collapses the bound to BSP");
+        // Once the controller is at depth 1, speculation waste stops.
+        assert!(
+            log.iter()
+                .skip_while(|r| r.effective_speculation > 1)
+                .all(|r| r.respins == 0 && r.cancelled_waves == 0),
+            "{log:?}"
+        );
+    }
+
+    #[test]
+    fn adaptive_depth_holds_the_ceiling_when_commits_are_quiet() {
+        // No acceptances ⇒ no conflict signal ⇒ the bound never leaves
+        // `speculation_max`, for patchable and unpatchable algorithms both.
+        let epochs: Vec<Range<usize>> = (0..8).map(|e| e * 8..(e + 1) * 8).collect();
+        for patchable in [true, false] {
+            let mut algo = Scripted::new(patchable, false);
+            let log =
+                drive_epochs(WaveEngine { depth: 4, adaptive: true }, epochs.clone(), &mut algo);
+            assert!(log.iter().all(|r| r.effective_speculation == 4), "{log:?}");
+            assert_eq!(log.iter().map(|r| r.respins).sum::<usize>(), 0);
+        }
+        // Patchable growth is absorbed by patching, not respins — it must
+        // not shrink the bound either.
+        let mut algo = Scripted::new(true, true);
+        let log = drive_epochs(WaveEngine { depth: 4, adaptive: true }, epochs, &mut algo);
+        assert!(log.iter().all(|r| r.effective_speculation == 4), "{log:?}");
     }
 
     #[test]

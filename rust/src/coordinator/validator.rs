@@ -43,8 +43,23 @@
 //! all earlier acceptances), so there is no pairwise quantity to
 //! precompute.
 
+//!
+//! ## Conflict components
+//!
+//! [`conflict_components`] is the shared conflict-graph partitioner: a
+//! zero-dependency union-find over the same per-proposal conflict keys
+//! groups an epoch's points into connected components (points conflict
+//! when their jobs read the same state row). The wave engine packs whole
+//! components onto workers (`sharding = "conflict"`, CYCLADES-style — see
+//! [`super::scheduler`]), and [`component_shards`] deals whole components
+//! to validator peers so each peer's key ranges are component-aligned.
+//! Like [`shard_positions`], the component grouping never splits a key
+//! class, so the pair-cache invariant — and with it bit-identity — holds
+//! in either sharding mode.
+
 use super::transport::ValidatePlane;
 use crate::algorithms::bpmeans::descend_z;
+use crate::config::ShardingKind;
 use crate::error::Result;
 use crate::linalg::{sqdist, Matrix};
 use std::sync::Arc;
@@ -152,6 +167,109 @@ pub fn shard_positions(keys: &[u32], shards: usize) -> Vec<Vec<u32>> {
         out[(k as usize) % s].push(pos as u32);
     }
     out
+}
+
+/// Minimal union-find over positions `0..n`: path-halving `find`, and a
+/// `union` that always keeps the *smaller* root as representative, so a
+/// component's representative is its smallest member no matter the union
+/// order — the determinism the partitioner's output ordering rests on.
+struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> UnionFind {
+        UnionFind { parent: (0..n as u32).collect() }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let grandparent = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = grandparent;
+            x = grandparent;
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra < rb {
+            self.parent[rb as usize] = ra;
+        } else if rb < ra {
+            self.parent[ra as usize] = rb;
+        }
+    }
+}
+
+/// Connected components of an epoch's conflict graph: positions `i` and
+/// `j` conflict when `keys[i] == keys[j]` — their jobs read (or their
+/// proposals contend for) the same state row. `u32::MAX` ("no committed
+/// row yet") is a key class like any other, which makes the cold-start
+/// pile-up one big component rather than a false all-clear.
+///
+/// Components are emitted in deterministic point-index order — ordered by
+/// smallest member, members ascending within each — so the partition is a
+/// pure function of the key sequence: relabeling key values bijectively or
+/// discovering the unions in a different order cannot change the output
+/// (`tests/coordinator_props.rs` pins this down, along with exact cover
+/// and conflict-closure).
+pub fn conflict_components(keys: &[u32]) -> Vec<Vec<u32>> {
+    let mut uf = UnionFind::new(keys.len());
+    // Sort (key, position) pairs to find same-key neighbours without
+    // hashing; unioning consecutive occurrences chains each class.
+    let mut by_key: Vec<(u32, u32)> =
+        keys.iter().enumerate().map(|(i, &k)| (k, i as u32)).collect();
+    by_key.sort_unstable();
+    for w in by_key.windows(2) {
+        if w[0].0 == w[1].0 {
+            uf.union(w[0].1, w[1].1);
+        }
+    }
+    // Ascending scan ⇒ components ordered by smallest member, members
+    // ascending. A root is ≤ every member of its component, so its slot is
+    // always allocated before any later member arrives.
+    let mut slot: Vec<usize> = vec![usize::MAX; keys.len()];
+    let mut out: Vec<Vec<u32>> = Vec::new();
+    for i in 0..keys.len() as u32 {
+        let r = uf.find(i) as usize;
+        if slot[r] == usize::MAX {
+            slot[r] = out.len();
+            out.push(Vec::new());
+        }
+        out[slot[r]].push(i);
+    }
+    out
+}
+
+/// Component-aligned shard lists for the validation plane: whole
+/// [`conflict_components`] are dealt to `shards` buckets (least-loaded
+/// bucket first, lowest index on ties), then each bucket is sorted back
+/// into point-index order. Like [`shard_positions`] this never splits a
+/// key class across buckets — the pair-cache invariant — but each
+/// validator now owns whole conflict neighbourhoods instead of a
+/// hash-residue scatter, and the load is balanced by actual proposal
+/// count rather than by key arithmetic.
+pub fn component_shards(keys: &[u32], shards: usize) -> Vec<Vec<u32>> {
+    let s = shards.max(1);
+    let mut out: Vec<Vec<u32>> = vec![Vec::new(); s];
+    for comp in conflict_components(keys) {
+        let target = (0..s).min_by_key(|&b| out[b].len()).unwrap_or(0);
+        out[target].extend_from_slice(&comp);
+    }
+    for bucket in &mut out {
+        bucket.sort_unstable();
+    }
+    out
+}
+
+/// The shard-list choice every sharded entry point shares: hash-residue
+/// buckets or component-aligned buckets. Either satisfies the same-key ⇒
+/// same-shard invariant, so the merge below is bit-identical regardless.
+fn shard_lists_for(keys: &[u32], buckets: usize, sharding: ShardingKind) -> Vec<Vec<u32>> {
+    match sharding {
+        ShardingKind::Hash => shard_positions(keys, buckets),
+        ShardingKind::Conflict => component_shards(keys, buckets),
+    }
 }
 
 /// Pairwise squared distances between all proposals of one shard, keyed by
@@ -320,6 +438,7 @@ fn build_pair_cache_clustered(
 /// threads or validator peers — the only varying part) and run the serial
 /// merge over it. Keeping the skeleton single-sourced is what guarantees
 /// the thread path and the peer path cannot drift apart.
+#[allow(clippy::too_many_arguments)]
 fn dp_validate_with(
     centers: &mut Matrix,
     base: usize,
@@ -327,6 +446,7 @@ fn dp_validate_with(
     keys: &[u32],
     lambda2: f32,
     buckets: usize,
+    sharding: ShardingKind,
     engaged: bool,
     build: impl FnOnce(&[&[f32]], Vec<Vec<u32>>) -> Result<ConflictCache>,
 ) -> Result<DpOutcome> {
@@ -334,7 +454,7 @@ fn dp_validate_with(
     if !engaged || proposals.len() < SHARD_MIN_PROPOSALS {
         return Ok(dp_validate(centers, base, proposals, lambda2));
     }
-    let shard_lists = shard_positions(keys, buckets);
+    let shard_lists = shard_lists_for(keys, buckets, sharding);
     if !sharding_profitable(&shard_lists) {
         return Ok(dp_validate(centers, base, proposals, lambda2));
     }
@@ -360,9 +480,17 @@ pub fn dp_validate_sharded(
 ) -> DpOutcome {
     // shards < 4 would leave build_pair_cache with a single thread (it caps
     // at shards/2): all cache cost, no parallelism — serial wins there.
-    dp_validate_with(centers, base, proposals, keys, lambda2, shards, shards >= 4, |v, lists| {
-        Ok(build_pair_cache(v, &lists))
-    })
+    dp_validate_with(
+        centers,
+        base,
+        proposals,
+        keys,
+        lambda2,
+        shards,
+        ShardingKind::Hash,
+        shards >= 4,
+        |v, lists| Ok(build_pair_cache(v, &lists)),
+    )
     .expect("in-process cache build cannot fail")
 }
 
@@ -371,8 +499,9 @@ pub fn dp_validate_sharded(
 /// owned by the wave engine's dedicated validation thread, so the fan-out
 /// overlaps compute waves). Produces the exact [`dp_validate`] outcome —
 /// same resolutions, same appended rows, same bits — for any `keys`, shard
-/// count and transport; falls back to the serial validator when sharding
-/// would not pay for itself.
+/// count, sharding mode and transport; falls back to the serial validator
+/// when sharding would not pay for itself.
+#[allow(clippy::too_many_arguments)]
 pub fn dp_validate_clustered(
     vplane: &mut ValidatePlane,
     centers: &mut Matrix,
@@ -381,6 +510,7 @@ pub fn dp_validate_clustered(
     keys: &[u32],
     lambda2: f32,
     shards: usize,
+    sharding: ShardingKind,
 ) -> Result<DpOutcome> {
     let engaged = vplane.validators >= 2;
     dp_validate_with(
@@ -390,6 +520,7 @@ pub fn dp_validate_clustered(
         keys,
         lambda2,
         shards.max(2),
+        sharding,
         engaged,
         |v, lists| build_pair_cache_clustered(vplane, v, lists),
     )
@@ -406,6 +537,7 @@ fn ofl_validate_with(
     lambda2: f64,
     draw: impl FnMut(u32) -> f64,
     buckets: usize,
+    sharding: ShardingKind,
     engaged: bool,
     build: impl FnOnce(&[&[f32]], Vec<Vec<u32>>) -> Result<ConflictCache>,
 ) -> Result<OflOutcome> {
@@ -413,7 +545,7 @@ fn ofl_validate_with(
     if !engaged || proposals.len() < SHARD_MIN_PROPOSALS {
         return Ok(ofl_validate(centers, base, proposals, lambda2, draw));
     }
-    let shard_lists = shard_positions(keys, buckets);
+    let shard_lists = shard_lists_for(keys, buckets, sharding);
     if !sharding_profitable(&shard_lists) {
         return Ok(ofl_validate(centers, base, proposals, lambda2, draw));
     }
@@ -437,6 +569,7 @@ pub fn ofl_validate_clustered(
     lambda2: f64,
     draw: impl FnMut(u32) -> f64,
     shards: usize,
+    sharding: ShardingKind,
 ) -> Result<OflOutcome> {
     let engaged = vplane.validators >= 2;
     ofl_validate_with(
@@ -447,6 +580,7 @@ pub fn ofl_validate_clustered(
         lambda2,
         draw,
         shards.max(2),
+        sharding,
         engaged,
         |v, lists| build_pair_cache_clustered(vplane, v, lists),
     )
@@ -466,9 +600,18 @@ pub fn ofl_validate_sharded(
 ) -> OflOutcome {
     // shards < 4 would leave build_pair_cache with a single thread (it caps
     // at shards/2): all cache cost, no parallelism — serial wins there.
-    ofl_validate_with(centers, base, proposals, keys, lambda2, draw, shards, shards >= 4, |v, lists| {
-        Ok(build_pair_cache(v, &lists))
-    })
+    ofl_validate_with(
+        centers,
+        base,
+        proposals,
+        keys,
+        lambda2,
+        draw,
+        shards,
+        ShardingKind::Hash,
+        shards >= 4,
+        |v, lists| Ok(build_pair_cache(v, &lists)),
+    )
     .expect("in-process cache build cannot fail")
 }
 
@@ -836,6 +979,63 @@ mod tests {
     }
 
     #[test]
+    fn conflict_components_group_key_classes_in_point_order() {
+        // keys:  0  7  0  3  7  9  → components {0,2}, {1,4}, {3}, {5},
+        // ordered by smallest member, members ascending.
+        let comps = conflict_components(&[0u32, 7, 0, 3, 7, 9]);
+        assert_eq!(comps, vec![vec![0u32, 2], vec![1, 4], vec![3], vec![5]]);
+        // u32::MAX ("no committed row") is a key class like any other — the
+        // cold-start pile-up is one component, not a false all-clear.
+        let comps = conflict_components(&[u32::MAX, 1, u32::MAX]);
+        assert_eq!(comps, vec![vec![0u32, 2], vec![1]]);
+        assert!(conflict_components(&[]).is_empty());
+        // Bijectively relabeling key values cannot change the partition.
+        let a = conflict_components(&[4u32, 8, 4, 8, 2]);
+        let b = conflict_components(&[90u32, 3, 90, 3, 77]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn component_shards_never_split_a_key_class_and_stay_sorted() {
+        let (_, keys) = adversarial_proposals(5, 300, 6);
+        let lists = component_shards(&keys, 4);
+        assert_eq!(lists.len(), 4);
+        let mut seen = vec![false; keys.len()];
+        let mut bucket_of_key: std::collections::HashMap<u32, usize> = Default::default();
+        for (b, list) in lists.iter().enumerate() {
+            assert!(list.windows(2).all(|w| w[0] < w[1]), "bucket {b} not in point order");
+            for &pos in list {
+                assert!(!seen[pos as usize], "position {pos} duplicated");
+                seen[pos as usize] = true;
+                let k = keys[pos as usize];
+                let owner = *bucket_of_key.entry(k).or_insert(b);
+                assert_eq!(owner, b, "key {k} split across buckets");
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "positions dropped");
+        // The component-aligned lists satisfy the same invariants the hash
+        // lists do, so the sharded merge stays exact over them too.
+        let (proposals, keys) = adversarial_proposals(6, 200, 5);
+        let mut serial_c = Matrix::zeros(0, 2);
+        let serial = dp_validate(&mut serial_c, 0, &proposals, 1.0);
+        let mut c = Matrix::zeros(0, 2);
+        let out = dp_validate_with(
+            &mut c,
+            0,
+            &proposals,
+            &keys,
+            1.0,
+            4,
+            ShardingKind::Conflict,
+            true,
+            |v, lists| Ok(build_pair_cache(v, &lists)),
+        )
+        .unwrap();
+        assert_eq!(out.resolved, serial.resolved);
+        assert_eq!(c.data, serial_c.data, "appended state diverged");
+    }
+
+    #[test]
     fn dp_sharded_merge_restores_point_index_order() {
         let (proposals, keys) = adversarial_proposals(11, 120, 4);
         let mut centers = Matrix::zeros(0, 2);
@@ -973,22 +1173,29 @@ mod tests {
         let serial = dp_validate(&mut serial_c, 1, &proposals, 1.0);
         for kind in [TransportKind::InProc, TransportKind::Tcp] {
             for validators in [2usize, 3] {
-                let mut cluster =
-                    Cluster::spawn(kind, data.clone(), backend.clone(), 2, validators).unwrap();
-                let mut c = mat(&[&[500.0, 500.0]]);
-                let out = dp_validate_clustered(
-                    &mut cluster.validate,
-                    &mut c,
-                    1,
-                    &proposals,
-                    &keys,
-                    1.0,
-                    8,
-                )
-                .unwrap();
-                assert_eq!(out.resolved, serial.resolved, "{kind:?} V={validators}");
-                assert_eq!(out.accepted, serial.accepted);
-                assert_eq!(c.data, serial_c.data, "appended state diverged");
+                for sharding in [ShardingKind::Hash, ShardingKind::Conflict] {
+                    let (d, b) = (data.clone(), backend.clone());
+                    let mut cluster = Cluster::spawn(kind, d, b, 2, validators).unwrap();
+                    let mut c = mat(&[&[500.0, 500.0]]);
+                    let out = dp_validate_clustered(
+                        &mut cluster.validate,
+                        &mut c,
+                        1,
+                        &proposals,
+                        &keys,
+                        1.0,
+                        8,
+                        sharding,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        out.resolved,
+                        serial.resolved,
+                        "{kind:?} V={validators} {sharding:?}"
+                    );
+                    assert_eq!(out.accepted, serial.accepted);
+                    assert_eq!(c.data, serial_c.data, "appended state diverged");
+                }
             }
         }
     }
@@ -1012,22 +1219,26 @@ mod tests {
         let mut serial_c = Matrix::zeros(0, 2);
         let serial = ofl_validate(&mut serial_c, 0, &proposals, 1.0, draw);
         for kind in [TransportKind::InProc, TransportKind::Tcp] {
-            let mut cluster = Cluster::spawn(kind, data.clone(), backend.clone(), 2, 2).unwrap();
-            let mut c = Matrix::zeros(0, 2);
-            let out = ofl_validate_clustered(
-                &mut cluster.validate,
-                &mut c,
-                0,
-                &proposals,
-                &keys,
-                1.0,
-                draw,
-                8,
-            )
-            .unwrap();
-            assert_eq!(out.resolved, serial.resolved, "{kind:?}");
-            assert_eq!(out.opened, serial.opened);
-            assert_eq!(c.data, serial_c.data);
+            for sharding in [ShardingKind::Hash, ShardingKind::Conflict] {
+                let mut cluster =
+                    Cluster::spawn(kind, data.clone(), backend.clone(), 2, 2).unwrap();
+                let mut c = Matrix::zeros(0, 2);
+                let out = ofl_validate_clustered(
+                    &mut cluster.validate,
+                    &mut c,
+                    0,
+                    &proposals,
+                    &keys,
+                    1.0,
+                    draw,
+                    8,
+                    sharding,
+                )
+                .unwrap();
+                assert_eq!(out.resolved, serial.resolved, "{kind:?} {sharding:?}");
+                assert_eq!(out.opened, serial.opened);
+                assert_eq!(c.data, serial_c.data);
+            }
         }
     }
 

@@ -14,7 +14,9 @@
 
 use occml::algorithms::objective;
 use occml::cli::{App, Command, Dispatch, Parsed};
-use occml::config::{toml, Algo, BackendKind, DataSource, RunConfig, SchedulerKind, TransportKind};
+use occml::config::{
+    toml, Algo, BackendKind, DataSource, RunConfig, SchedulerKind, ShardingKind, TransportKind,
+};
 use occml::coordinator::{driver, Model};
 use occml::data::generators::{self, GenConfig};
 use occml::error::{Error, Result};
@@ -48,8 +50,14 @@ fn app() -> App {
                 .flag("scheduler", "bsp | pipelined", Some("bsp"))
                 .flag(
                     "speculation",
-                    "wave-engine depth K under --scheduler pipelined (1 = BSP)",
+                    "wave-engine depth K under --scheduler pipelined (1 = BSP), or `auto`",
                     Some("2"),
+                )
+                .flag("speculation-max", "depth ceiling for --speculation auto", Some("8"))
+                .flag(
+                    "sharding",
+                    "epoch-to-worker packing: hash | conflict (conflict components)",
+                    Some("hash"),
                 )
                 .flag("transport", "inproc | tcp", Some("inproc"))
                 .flag("validator-shards", "validator peers (0 = procs/2, min 1)", Some("0"))
@@ -170,8 +178,21 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     if let Some(v) = p.get("scheduler") {
         cfg.scheduler = SchedulerKind::parse(v)?;
     }
-    if let Some(v) = p.get_parse::<usize>("speculation")? {
-        cfg.speculation = v;
+    if let Some(v) = p.get("speculation") {
+        if v.eq_ignore_ascii_case("auto") {
+            cfg.speculation_auto = true;
+        } else {
+            cfg.speculation = v
+                .parse::<usize>()
+                .map_err(|_| Error::config(format!("--speculation: cannot parse `{v}`")))?;
+            cfg.speculation_auto = false;
+        }
+    }
+    if let Some(v) = p.get_parse::<usize>("speculation-max")? {
+        cfg.speculation_max = v;
+    }
+    if let Some(v) = p.get("sharding") {
+        cfg.sharding = ShardingKind::parse(v)?;
     }
     if let Some(v) = p.get("transport") {
         cfg.transport = TransportKind::parse(v)?;
@@ -230,8 +251,13 @@ fn cmd_run(p: &Parsed) -> Result<i32> {
         println!("backend     : {}", cfg.backend.name());
         println!("scheduler   : {}", cfg.scheduler.name());
         if cfg.scheduler == SchedulerKind::Pipelined {
-            println!("speculation : {}", cfg.speculation);
+            if cfg.speculation_auto {
+                println!("speculation : auto (max {})", cfg.speculation_max);
+            } else {
+                println!("speculation : {}", cfg.speculation);
+            }
         }
+        println!("sharding    : {}", cfg.sharding.name());
         println!("transport   : {}", cfg.transport.name());
         println!("points      : {}", cfg.n);
         println!("P x b       : {} x {} = {} per epoch", cfg.procs, cfg.block, cfg.points_per_epoch());
@@ -239,6 +265,19 @@ fn cmd_run(p: &Parsed) -> Result<i32> {
         println!("proposed    : {}", out.summary.total_proposed());
         println!("accepted    : {}", out.summary.total_accepted());
         println!("rejected    : {}", out.summary.total_rejected());
+        if cfg.sharding == ShardingKind::Conflict {
+            println!(
+                "components  : largest {} points (max over epochs)",
+                out.summary.max_largest_component()
+            );
+        }
+        if cfg.speculation_auto {
+            println!(
+                "auto depth  : {}..={} in effect",
+                out.summary.min_effective_speculation(),
+                out.summary.max_effective_speculation()
+            );
+        }
         if let Some(j) = out.summary.objective {
             println!("objective J : {j:.4}");
         }

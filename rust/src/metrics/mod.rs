@@ -61,8 +61,22 @@ pub struct EpochRecord {
     /// In-flight *descendant* waves this epoch's commit cancelled (the
     /// other side of `respins`: each cancellation here is a respin on the
     /// descendant's record). Nonzero only for unpatchable algorithms under
-    /// speculation. JSONL: `cancelled_waves`.
+    /// speculation with `sharding = "hash"` — conflict packing switches to
+    /// the lazy dispatch-time respin policy, under which commits never
+    /// cancel and this stays 0 by construction. JSONL: `cancelled_waves`.
     pub cancelled_waves: usize,
+    /// Connected components in this epoch's conflict graph at scatter time
+    /// (`sharding = "conflict"` only; 0 under hash packing, which never
+    /// keys the points).
+    pub components: usize,
+    /// Points in the largest conflict component at scatter time (0 under
+    /// hash packing). `largest_component ≈ points` means the epoch's
+    /// packing degenerated to one worker — the conflict graph was one blob.
+    pub largest_component: usize,
+    /// The engine's fill bound when this epoch's wave was scattered: the
+    /// fixed `speculation` depth normally, the adaptive controller's
+    /// current `[1, speculation_max]` bound under `speculation = "auto"`.
+    pub effective_speculation: usize,
     /// Gather-complete → commit-applied latency for this epoch: the time
     /// its finished wave waited in the dispatch queue behind earlier
     /// validations, plus its own `master_time`. The growth of this number
@@ -123,6 +137,9 @@ impl EpochRecord {
             ("queue_depth", Json::Num(self.queue_depth as f64)),
             ("respins", Json::Num(self.respins as f64)),
             ("cancelled_waves", Json::Num(self.cancelled_waves as f64)),
+            ("components", Json::Num(self.components as f64)),
+            ("largest_component", Json::Num(self.largest_component as f64)),
+            ("effective_speculation", Json::Num(self.effective_speculation as f64)),
             ("commit_lag_ms", Json::Num(self.commit_lag.as_secs_f64() * 1e3)),
             ("wire_bytes", Json::Num(self.wire_bytes as f64)),
             ("unique_payload_bytes", Json::Num(self.unique_payload_bytes as f64)),
@@ -198,6 +215,27 @@ impl RunSummary {
     /// Maximum in-flight pipeline depth any epoch observed.
     pub fn max_queue_depth(&self) -> usize {
         self.epochs.iter().map(|e| e.queue_depth).max().unwrap_or(0)
+    }
+    /// Maximum adaptive fill bound any epoch scattered under (equals the
+    /// `speculation` knob for fixed-depth runs).
+    pub fn max_effective_speculation(&self) -> usize {
+        self.epochs.iter().map(|e| e.effective_speculation).max().unwrap_or(0)
+    }
+    /// Minimum adaptive fill bound any epoch scattered under — 1 means the
+    /// controller collapsed to the BSP barrier at some point. Records that
+    /// never scattered under a bound (the per-pass recompute records, which
+    /// report 0) are excluded.
+    pub fn min_effective_speculation(&self) -> usize {
+        self.epochs
+            .iter()
+            .map(|e| e.effective_speculation)
+            .filter(|&s| s > 0)
+            .min()
+            .unwrap_or(0)
+    }
+    /// Largest conflict component any epoch packed (0 for hash runs).
+    pub fn max_largest_component(&self) -> usize {
+        self.epochs.iter().map(|e| e.largest_component).max().unwrap_or(0)
     }
     /// Total bytes that crossed the transport wire (zero in-proc).
     pub fn total_wire_bytes(&self) -> u64 {
@@ -315,6 +353,9 @@ mod tests {
             queue_depth: 2,
             respins: 0,
             cancelled_waves: 1,
+            components: 5,
+            largest_component: 40,
+            effective_speculation: 3,
             commit_lag: Duration::from_millis(2),
             wire_bytes: 64,
             unique_payload_bytes: 48,
@@ -346,6 +387,9 @@ mod tests {
         assert_eq!(s.total_cancelled_waves(), 3);
         assert_eq!(s.total_commit_lag(), Duration::from_millis(6));
         assert_eq!(s.max_queue_depth(), 2);
+        assert_eq!(s.max_effective_speculation(), 3);
+        assert_eq!(s.min_effective_speculation(), 3);
+        assert_eq!(s.max_largest_component(), 40);
         assert_eq!(s.total_wire_bytes(), 3 * 64);
         assert_eq!(s.total_unique_payload_bytes(), 3 * 48);
         assert_eq!(s.total_delta_bytes(), 3 * 16);
@@ -367,6 +411,9 @@ mod tests {
         assert_eq!(j.get("queue_depth").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("respins").unwrap().as_usize(), Some(0));
         assert_eq!(j.get("cancelled_waves").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("components").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("largest_component").unwrap().as_usize(), Some(40));
+        assert_eq!(j.get("effective_speculation").unwrap().as_usize(), Some(3));
         assert!(j.get("commit_lag_ms").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("wire_bytes").unwrap().as_usize(), Some(64));
         assert_eq!(j.get("unique_payload_bytes").unwrap().as_usize(), Some(48));

@@ -2,7 +2,8 @@
 
 use occml::cli::{App, Command, Dispatch};
 use occml::config::{
-    toml, Algo, BackendKind, DataSource, RunConfig, SchedulerKind, TransportKind,
+    toml, Algo, BackendKind, DataSource, RunConfig, SchedulerKind, ShardingKind,
+    SpeculationSpec, TransportKind,
 };
 
 #[test]
@@ -272,6 +273,142 @@ fn speculation_flag_parses_through_cli() {
             cfg.speculation = p.get_parse::<usize>("speculation").unwrap().unwrap();
             cfg.validate().unwrap();
             assert_eq!(cfg.speculation, 4);
+        }
+        _ => panic!("expected run dispatch"),
+    }
+}
+
+/// Mirror `occd`'s `build_config` handling of `--speculation`: the flag
+/// accepts both an integer depth and the literal `auto` (case-insensitive),
+/// and anything else is a typed error naming the flag and the bad value.
+fn interpret_speculation(cfg: &mut RunConfig, v: &str) -> occml::Result<()> {
+    if v.eq_ignore_ascii_case("auto") {
+        cfg.speculation_auto = true;
+    } else {
+        cfg.speculation = v
+            .parse::<usize>()
+            .map_err(|_| occml::Error::config(format!("--speculation: cannot parse `{v}`")))?;
+        cfg.speculation_auto = false;
+    }
+    Ok(())
+}
+
+#[test]
+fn speculation_auto_and_sharding_flags_parse_through_cli() {
+    let app = App::new("occd", "test").command(
+        Command::new("run", "run")
+            .flag("speculation", "depth K (1 = BSP), or `auto`", Some("2"))
+            .flag("speculation-max", "depth ceiling for --speculation auto", Some("8"))
+            .flag("sharding", "hash | conflict", Some("hash")),
+    );
+    let argv: Vec<String> =
+        ["run", "--speculation=AUTO", "--speculation-max", "5", "--sharding=CONFLICT"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(_, p) => {
+            let mut cfg = RunConfig::default();
+            interpret_speculation(&mut cfg, p.get("speculation").unwrap()).unwrap();
+            cfg.speculation_max = p.get_parse::<usize>("speculation-max").unwrap().unwrap();
+            cfg.sharding = ShardingKind::parse(p.get("sharding").unwrap()).unwrap();
+            cfg.validate().unwrap();
+            assert_eq!(cfg.speculation_spec(), SpeculationSpec::Auto { max: 5 });
+            assert_eq!(cfg.sharding, ShardingKind::Conflict);
+        }
+        _ => panic!("expected run dispatch"),
+    }
+    // An integer depth pins the fixed policy.
+    let argv: Vec<String> =
+        ["run", "--speculation", "3"].iter().map(|s| s.to_string()).collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(_, p) => {
+            let mut cfg = RunConfig::default();
+            interpret_speculation(&mut cfg, p.get("speculation").unwrap()).unwrap();
+            assert_eq!(cfg.speculation_spec(), SpeculationSpec::Fixed(3));
+        }
+        _ => panic!("expected run dispatch"),
+    }
+    // Junk that is neither an integer nor `auto` is a typed error naming
+    // the flag and the value; junk sharding names the value and choices.
+    let argv: Vec<String> =
+        ["run", "--speculation=warp", "--sharding=mosaic"].iter().map(|s| s.to_string()).collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(_, p) => {
+            let mut cfg = RunConfig::default();
+            let err =
+                interpret_speculation(&mut cfg, p.get("speculation").unwrap())
+                    .unwrap_err()
+                    .to_string();
+            assert!(err.contains("speculation") && err.contains("warp"), "{err}");
+            let err = ShardingKind::parse(p.get("sharding").unwrap()).unwrap_err().to_string();
+            assert!(err.contains("mosaic"), "error names the bad value: {err}");
+            assert!(err.contains("hash") && err.contains("conflict"), "error lists choices: {err}");
+        }
+        _ => panic!("expected run dispatch"),
+    }
+}
+
+/// TOML ↔ flag precedence, exactly as `occd` layers them: the config file
+/// seeds the knobs, and a flag overrides only when it was explicitly passed
+/// (`Parsed::get` never surfaces flag defaults).
+#[test]
+fn speculation_and_sharding_flags_override_toml_only_when_passed() {
+    let toml_cfg = || {
+        RunConfig::from_doc(
+            &toml::parse(
+                "[run]\nscheduler = \"pipelined\"\nsharding = \"conflict\"\n\
+                 speculation = \"auto\"\nspeculation_max = 6\n",
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    };
+    let app = App::new("occd", "test").command(
+        Command::new("run", "run")
+            .flag("speculation", "depth K (1 = BSP), or `auto`", Some("2"))
+            .flag("speculation-max", "depth ceiling for --speculation auto", Some("8"))
+            .flag("sharding", "hash | conflict", Some("hash")),
+    );
+    // No flags passed → the TOML knobs survive untouched.
+    let argv: Vec<String> = ["run"].iter().map(|s| s.to_string()).collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(_, p) => {
+            assert_eq!(p.get("speculation"), None, "defaults must not masquerade as flags");
+            assert_eq!(p.get("sharding"), None);
+            let mut cfg = toml_cfg();
+            if let Some(v) = p.get("speculation") {
+                interpret_speculation(&mut cfg, v).unwrap();
+            }
+            if let Some(v) = p.get_parse::<usize>("speculation-max").unwrap() {
+                cfg.speculation_max = v;
+            }
+            if let Some(v) = p.get("sharding") {
+                cfg.sharding = ShardingKind::parse(v).unwrap();
+            }
+            assert_eq!(cfg.speculation_spec(), SpeculationSpec::Auto { max: 6 });
+            assert_eq!(cfg.sharding, ShardingKind::Conflict);
+        }
+        _ => panic!("expected run dispatch"),
+    }
+    // Explicit flags → they win over the TOML, leaving untouched knobs alone.
+    let argv: Vec<String> =
+        ["run", "--speculation", "3", "--sharding", "hash"].iter().map(|s| s.to_string()).collect();
+    match app.dispatch(&argv).unwrap() {
+        Dispatch::Run(_, p) => {
+            let mut cfg = toml_cfg();
+            if let Some(v) = p.get("speculation") {
+                interpret_speculation(&mut cfg, v).unwrap();
+            }
+            if let Some(v) = p.get_parse::<usize>("speculation-max").unwrap() {
+                cfg.speculation_max = v;
+            }
+            if let Some(v) = p.get("sharding") {
+                cfg.sharding = ShardingKind::parse(v).unwrap();
+            }
+            assert_eq!(cfg.speculation_spec(), SpeculationSpec::Fixed(3));
+            assert_eq!(cfg.sharding, ShardingKind::Hash);
+            assert_eq!(cfg.speculation_max, 6, "an unpassed flag must not clobber the TOML");
         }
         _ => panic!("expected run dispatch"),
     }

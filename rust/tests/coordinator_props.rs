@@ -176,6 +176,159 @@ fn prop_bp_assignments_have_valid_shape_and_coverage() {
 }
 
 #[test]
+fn prop_conflict_components_cover_exactly_and_close_keys() {
+    // The conflict-graph partitioner behind `sharding = "conflict"`:
+    // components must cover every point exactly once, no conflict key may
+    // span two components, and the emission order must be deterministic
+    // point-index order (components by smallest member, members ascending).
+    Prop::new("conflict components").cases(40).check(|g| {
+        let n = g.usize_in(0, 400);
+        // A small key space forces real collisions; occasionally inject the
+        // empty-snapshot sentinel.
+        let key_space = g.usize_in(1, 24).max(1) as u64;
+        let keys: Vec<u32> = (0..n)
+            .map(|_| {
+                let k = (g.rng().next_u64() % key_space) as u32;
+                if k == 0 && g.rng().next_u64() % 7 == 0 {
+                    u32::MAX
+                } else {
+                    k
+                }
+            })
+            .collect();
+        let comps = occml::coordinator::validator::conflict_components(&keys);
+
+        // Exact cover: every position exactly once.
+        let mut seen = vec![false; n];
+        for c in &comps {
+            if c.is_empty() {
+                return Err("empty component emitted".into());
+            }
+            for &p in c {
+                let p = p as usize;
+                if p >= n || seen[p] {
+                    return Err(format!("position {p} out of range or duplicated"));
+                }
+                seen[p] = true;
+            }
+        }
+        if seen.iter().any(|s| !s) {
+            return Err("a position is missing from every component".into());
+        }
+
+        // Conflict closure: all positions sharing a key land together.
+        let mut home: Vec<Option<usize>> = vec![None; n];
+        for (ci, c) in comps.iter().enumerate() {
+            for &p in c {
+                home[p as usize] = Some(ci);
+            }
+        }
+        for a in 0..n {
+            for b in 0..a {
+                if keys[a] == keys[b] && home[a] != home[b] {
+                    return Err(format!(
+                        "key {} spans components {:?} and {:?} (positions {b},{a})",
+                        keys[a], home[b], home[a]
+                    ));
+                }
+            }
+        }
+
+        // Deterministic point-index order.
+        let mut prev_first: Option<u32> = None;
+        for c in &comps {
+            if c.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("component members not ascending: {c:?}"));
+            }
+            if let Some(pf) = prev_first {
+                if c[0] <= pf {
+                    return Err("components not ordered by smallest member".into());
+                }
+            }
+            prev_first = Some(c[0]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conflict_components_invariant_under_key_relabeling() {
+    // The partition depends only on the equality structure of the key
+    // sequence, never on the key values: any bijective relabeling (a
+    // shuffled key alphabet) yields the identical component list, in the
+    // identical point-index order.
+    Prop::new("relabel invariance").cases(30).check(|g| {
+        let n = g.usize_in(1, 300).max(1);
+        let key_space = g.usize_in(1, 16).max(1) as u64;
+        let keys: Vec<u32> = (0..n).map(|_| (g.rng().next_u64() % key_space) as u32).collect();
+        // Bijective relabeling: spread the alphabet with a random odd
+        // multiplier + offset (odd ⇒ invertible mod 2^32).
+        let mult = (g.rng().next_u64() as u32) | 1;
+        let add = g.rng().next_u64() as u32;
+        let relabeled: Vec<u32> =
+            keys.iter().map(|&k| k.wrapping_mul(mult).wrapping_add(add)).collect();
+        let a = occml::coordinator::validator::conflict_components(&keys);
+        let b = occml::coordinator::validator::conflict_components(&relabeled);
+        if a != b {
+            return Err(format!("partition changed under relabeling: {a:?} vs {b:?}"));
+        }
+        // Idempotence / determinism: the same input replays identically.
+        let c = occml::coordinator::validator::conflict_components(&keys);
+        if a != c {
+            return Err("partitioner is not deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_component_shards_cover_and_never_split_a_key_class() {
+    // The component-aligned validator fan-out: buckets are sorted, cover
+    // every position exactly once, and each conflict key lives in exactly
+    // one bucket regardless of the bucket count.
+    Prop::new("component shards").cases(30).check(|g| {
+        let n = g.usize_in(0, 300);
+        let buckets = g.usize_in(1, 9).max(1);
+        let key_space = g.usize_in(1, 20).max(1) as u64;
+        let keys: Vec<u32> = (0..n).map(|_| (g.rng().next_u64() % key_space) as u32).collect();
+        let shards = occml::coordinator::validator::component_shards(&keys, buckets);
+        if shards.len() != buckets {
+            return Err(format!("{} buckets, wanted {buckets}", shards.len()));
+        }
+        let mut seen = vec![false; n];
+        for bucket in &shards {
+            if bucket.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("bucket not strictly ascending: {bucket:?}"));
+            }
+            for &p in bucket {
+                let p = p as usize;
+                if p >= n || seen[p] {
+                    return Err(format!("position {p} out of range or duplicated"));
+                }
+                seen[p] = true;
+            }
+        }
+        if seen.iter().any(|s| !s) {
+            return Err("a position is missing from every bucket".into());
+        }
+        let mut key_home: Vec<Option<usize>> = vec![None; key_space as usize];
+        for (bi, bucket) in shards.iter().enumerate() {
+            for &p in bucket {
+                let slot = &mut key_home[keys[p as usize] as usize];
+                match *slot {
+                    None => *slot = Some(bi),
+                    Some(prev) if prev != bi => {
+                        return Err(format!("key {} split across buckets", keys[p as usize]))
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_metrics_accounting_consistent() {
     // accepted + rejected == proposed per epoch; Σ accepted == created;
     // centers monotone nondecreasing within a pass.

@@ -18,7 +18,7 @@
 //! Every test body runs under a hard timeout so a hung handshake or a
 //! wedged wave fails fast instead of wedging CI.
 
-use occml::config::{Algo, DataSource, RunConfig, SchedulerKind, TransportKind};
+use occml::config::{Algo, DataSource, RunConfig, SchedulerKind, ShardingKind, TransportKind};
 use occml::coordinator::{driver, Model};
 use occml::data::generators::{bp_features, dp_clusters, GenConfig};
 use occml::data::Dataset;
@@ -218,6 +218,55 @@ fn process_workers_bitidentical_with_inproc_across_algos_and_schedulers() {
     });
 }
 
+/// Conflict-aware packing + adaptive depth across a real process boundary:
+/// component-aligned (deliberately uneven) job ranges ship to standalone
+/// worker processes, the in-flight depth varies mid-pass under
+/// `speculation = "auto"`, and the model still matches the in-proc
+/// hash-packed BSP reference bit for bit. Conflict packing must also keep
+/// its lazy-respin contract over the wire: zero cancelled waves.
+#[test]
+fn process_workers_conflict_sharding_and_auto_depth_bitidentical() {
+    with_timeout(300, "process conflict/auto sweep", || {
+        let w1 = spawn_worker(true);
+        let w2 = spawn_worker(true);
+        let v1 = spawn_worker(true);
+        for algo in [Algo::DpMeans, Algo::BpMeans] {
+            let seed = 101;
+            let data = gen_data(algo, 420, seed);
+            let reference = run(&base_cfg(algo, &data, 2, 21, seed), &data).unwrap();
+            let cfg = RunConfig {
+                transport: TransportKind::Tcp,
+                scheduler: SchedulerKind::Pipelined,
+                sharding: ShardingKind::Conflict,
+                speculation_auto: true,
+                speculation_max: 4,
+                peers: vec![w1.addr.clone(), w2.addr.clone()],
+                validator_peers: vec![v1.addr.clone()],
+                reconnect_attempts: 4,
+                ..base_cfg(algo, &data, 2, 21, seed)
+            };
+            cfg.validate().expect("process conflict topology config");
+            let out = run(&cfg, &data).unwrap();
+            let ctx = format!("{algo:?} conflict+auto over worker processes");
+            assert_models_identical(&reference.model, &out.model, &ctx);
+            assert_eq!(
+                out.summary.total_cancelled_waves(),
+                0,
+                "{ctx}: conflict packing respins lazily, never cancels"
+            );
+            assert!(
+                out.summary.max_effective_speculation() <= 4,
+                "{ctx}: auto depth exceeded its ceiling"
+            );
+            assert!(
+                out.summary.max_largest_component() >= 1,
+                "{ctx}: component stats must be recorded under conflict packing"
+            );
+            assert!(out.summary.transport.wire_bytes > 0, "{ctx}: wire accounting");
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Chaos: kill a worker process mid-run
 // ---------------------------------------------------------------------------
@@ -240,6 +289,10 @@ fn chaos_killed_worker_recovers_via_replacement_on_same_port() {
         let reference = run(&base_cfg(Algo::DpMeans, &data, 2, 64, seed), &data).unwrap();
         let cfg = RunConfig {
             transport: TransportKind::Tcp,
+            // Conflict packing makes the retained-job resend structural too:
+            // the replacement session must be re-shipped its component-aligned
+            // (uneven) point range, not a blind equal split.
+            sharding: ShardingKind::Conflict,
             peers: vec![w1.addr.clone(), victim.addr.clone()],
             validator_peers: vec![],
             // Generous bound: the replacement needs its predecessor's port,

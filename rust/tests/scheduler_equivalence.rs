@@ -12,17 +12,59 @@
 //!
 //! 1. a deterministic sweep over `(algo, P, b)` at fixed `P·b`,
 //! 2. a `speculation ∈ {1, 2, 4}` depth sweep per algorithm, including a
-//!    BP-means respin storm (conflicts every epoch at depth 4), and
-//! 3. randomized configurations via the in-tree property harness
+//!    BP-means respin storm (conflicts every epoch at depth 4),
+//! 3. a `sharding ∈ {hash, conflict} × speculation ∈ {1, 2, 4, auto}`
+//!    sweep per algorithm, plus the respin-regression suite: the depth-4
+//!    BP storm must cancel strictly fewer waves under conflict packing
+//!    (zero, by the lazy respin policy) and `speculation = "auto"` must
+//!    respect `speculation_max` and collapse to depth 1 in the storm, and
+//! 4. randomized configurations via the in-tree property harness
 //!    (`occml::testing::Prop`).
 
-use occml::config::{Algo, RunConfig, SchedulerKind};
+use occml::config::{Algo, RunConfig, SchedulerKind, ShardingKind, SpeculationSpec};
 use occml::coordinator::{driver, Model};
 use occml::data::generators::{bp_features, dp_clusters, GenConfig};
 use occml::data::Dataset;
 use occml::runtime::native::NativeBackend;
 use occml::testing::Prop;
 use std::sync::Arc;
+
+#[allow(clippy::too_many_arguments)]
+fn run_sharded(
+    algo: Algo,
+    scheduler: SchedulerKind,
+    speculation: SpeculationSpec,
+    sharding: ShardingKind,
+    data: &Arc<Dataset>,
+    procs: usize,
+    block: usize,
+    iters: usize,
+    boot: usize,
+    seed: u64,
+) -> driver::RunOutput {
+    let (depth, auto, max) = match speculation {
+        SpeculationSpec::Fixed(k) => (k, false, 8),
+        SpeculationSpec::Auto { max } => (2, true, max),
+    };
+    let cfg = RunConfig {
+        algo,
+        scheduler,
+        speculation: depth,
+        speculation_auto: auto,
+        speculation_max: max,
+        sharding,
+        lambda: 1.0,
+        procs,
+        block,
+        iterations: iters,
+        bootstrap_div: boot,
+        seed,
+        n: data.len(),
+        dim: data.dim(),
+        ..RunConfig::default()
+    };
+    driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+}
 
 #[allow(clippy::too_many_arguments)]
 fn run_depth(
@@ -36,21 +78,18 @@ fn run_depth(
     boot: usize,
     seed: u64,
 ) -> driver::RunOutput {
-    let cfg = RunConfig {
+    run_sharded(
         algo,
         scheduler,
-        speculation,
-        lambda: 1.0,
+        SpeculationSpec::Fixed(speculation),
+        ShardingKind::Hash,
+        data,
         procs,
         block,
-        iterations: iters,
-        bootstrap_div: boot,
+        iters,
+        boot,
         seed,
-        n: data.len(),
-        dim: data.dim(),
-        ..RunConfig::default()
-    };
-    driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+    )
 }
 
 fn run(
@@ -262,6 +301,170 @@ fn bp_respin_storm_at_depth4_stays_bitidentical_and_commits_nothing_stale() {
         "expected a commit cancelling multiple in-flight waves"
     );
     assert!(storm.summary.max_queue_depth() >= 3, "the storm ran deep");
+}
+
+// ---------------------------------------------------------------------------
+// Conflict-aware sharding + adaptive speculation: bit-identity across every
+// `sharding × speculation` combination, and the respin-regression suite.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharding_and_speculation_sweep_is_bitidentical_per_algorithm() {
+    for (algo, iters, boot) in
+        [(Algo::DpMeans, 2, 16), (Algo::Ofl, 1, 0), (Algo::BpMeans, 2, 16)]
+    {
+        let seed = 103;
+        let data = Arc::new(match algo {
+            Algo::BpMeans => bp_features(&GenConfig { n: 300, dim: 12, theta: 1.0, seed }),
+            _ => dp_clusters(&GenConfig { n: 360, dim: 12, theta: 1.0, seed }),
+        });
+        let bsp = run_depth(algo, SchedulerKind::Bsp, 2, &data, 4, 18, iters, boot, seed);
+        for sharding in [ShardingKind::Hash, ShardingKind::Conflict] {
+            for speculation in [
+                SpeculationSpec::Fixed(1),
+                SpeculationSpec::Fixed(2),
+                SpeculationSpec::Fixed(4),
+                SpeculationSpec::Auto { max: 4 },
+            ] {
+                let out = run_sharded(
+                    algo,
+                    SchedulerKind::Pipelined,
+                    speculation,
+                    sharding,
+                    &data,
+                    4,
+                    18,
+                    iters,
+                    boot,
+                    seed,
+                );
+                let ctx = format!("{algo:?} sharding={sharding:?} spec={speculation:?}");
+                assert_models_identical(&bsp.model, &out.model, &ctx);
+                assert_eq!(
+                    bsp.summary.total_proposed(),
+                    out.summary.total_proposed(),
+                    "{ctx}: proposal accounting"
+                );
+                // The adaptive bound must never exceed its ceiling, and the
+                // fixed bound must report itself.
+                match speculation {
+                    SpeculationSpec::Auto { max } => {
+                        assert!(out.summary.max_effective_speculation() <= max, "{ctx}")
+                    }
+                    SpeculationSpec::Fixed(k) => {
+                        assert_eq!(out.summary.max_effective_speculation(), k, "{ctx}")
+                    }
+                }
+                // Conflict packing records the component shape and, by the
+                // lazy respin policy, never commit-cancels; hash records
+                // neither component metric.
+                if sharding == ShardingKind::Conflict {
+                    assert_eq!(out.summary.total_cancelled_waves(), 0, "{ctx}");
+                    assert!(
+                        out.summary
+                            .epochs
+                            .iter()
+                            .filter(|e| e.epoch != usize::MAX)
+                            .all(|e| e.components >= 1 && e.largest_component >= 1),
+                        "{ctx}: missing component metrics"
+                    );
+                } else {
+                    assert_eq!(out.summary.max_largest_component(), 0, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+/// The respin-regression gate, in-test form: the identical depth-4 BP-means
+/// storm must cancel strictly fewer waves under `sharding = "conflict"`
+/// than under `"hash"` — zero, in fact, since conflict packing switches the
+/// engine to the lazy dispatch-time respin policy — and must spend no more
+/// total respins doing it, all while staying bit-identical.
+#[test]
+fn bp_conflict_sharding_beats_hash_cancellations_under_the_storm() {
+    let seed = 131;
+    let data = Arc::new(bp_features(&GenConfig { n: 480, dim: 10, theta: 1.0, seed }));
+    let mk = |sharding| {
+        let cfg = RunConfig {
+            algo: Algo::BpMeans,
+            scheduler: SchedulerKind::Pipelined,
+            speculation: 4,
+            sharding,
+            lambda: 0.4, // adversarially low: proposals + acceptances everywhere
+            procs: 4,
+            block: 15,
+            iterations: 2,
+            bootstrap_div: 0,
+            seed,
+            n: data.len(),
+            dim: data.dim(),
+            ..RunConfig::default()
+        };
+        driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+    };
+    let hash = mk(ShardingKind::Hash);
+    let conflict = mk(ShardingKind::Conflict);
+    assert_models_identical(&hash.model, &conflict.model, "bp storm hash vs conflict");
+    let hash_cancelled = hash.summary.total_cancelled_waves();
+    assert!(hash_cancelled > 0, "the hash baseline must actually cancel waves");
+    assert!(
+        conflict.summary.total_cancelled_waves() < hash_cancelled,
+        "conflict sharding must cancel strictly fewer waves than hash ({} vs {hash_cancelled})",
+        conflict.summary.total_cancelled_waves()
+    );
+    assert_eq!(conflict.summary.total_cancelled_waves(), 0, "lazy respin never cancels");
+    let (lazy, eager) = (conflict.summary.total_respins(), hash.summary.total_respins());
+    assert!(lazy > 0, "the storm must still respin under conflict packing");
+    assert!(lazy <= eager, "lazy respins ({lazy}) must not exceed eager ({eager})");
+}
+
+/// Adaptive speculation under the same storm: the bound never exceeds
+/// `speculation_max` and converges to depth 1 (the BSP barrier) once the
+/// conflict EWMA saturates — each pass starts at the ceiling and collapses.
+#[test]
+fn auto_speculation_respects_max_and_collapses_to_depth_1_in_the_storm() {
+    let seed = 131;
+    let data = Arc::new(bp_features(&GenConfig { n: 480, dim: 10, theta: 1.0, seed }));
+    let mk = |auto: bool, sharding| {
+        let cfg = RunConfig {
+            algo: Algo::BpMeans,
+            scheduler: if auto { SchedulerKind::Pipelined } else { SchedulerKind::Bsp },
+            speculation: 2,
+            speculation_auto: auto,
+            speculation_max: 4,
+            sharding,
+            lambda: 0.4,
+            procs: 4,
+            block: 15,
+            iterations: 2,
+            bootstrap_div: 0,
+            seed,
+            n: data.len(),
+            dim: data.dim(),
+            ..RunConfig::default()
+        };
+        driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+    };
+    let bsp = mk(false, ShardingKind::Hash);
+    for sharding in [ShardingKind::Hash, ShardingKind::Conflict] {
+        let auto = mk(true, sharding);
+        let ctx = format!("auto storm sharding={sharding:?}");
+        assert_models_identical(&bsp.model, &auto.model, &ctx);
+        assert!(
+            auto.summary.max_effective_speculation() <= 4,
+            "{ctx}: bound exceeded speculation_max"
+        );
+        assert_eq!(
+            auto.summary.min_effective_speculation(),
+            1,
+            "{ctx}: storm never collapsed the bound to the BSP barrier"
+        );
+        // Pipeline residency can never exceed the scatter-time bound's
+        // running maximum (waves already in flight are not cancelled when
+        // the bound shrinks, but nothing scatters beyond it).
+        assert!(auto.summary.max_queue_depth() <= 4, "{ctx}");
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -10,7 +10,7 @@
 //! `tests/scheduler_equivalence.rs` across scheduling policies, completed
 //! here across transports.
 
-use occml::config::{Algo, RunConfig, SchedulerKind, TransportKind};
+use occml::config::{Algo, RunConfig, SchedulerKind, ShardingKind, SpeculationSpec, TransportKind};
 use occml::coordinator::{driver, Model};
 use occml::data::generators::{bp_features, dp_clusters, GenConfig};
 use occml::data::Dataset;
@@ -37,6 +37,44 @@ fn run_depth(
         speculation,
         transport,
         validator_shards,
+        lambda: 1.0,
+        procs,
+        block,
+        iterations: iters,
+        bootstrap_div: boot,
+        seed,
+        n: data.len(),
+        dim: data.dim(),
+        ..RunConfig::default()
+    };
+    driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new())).unwrap()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_sharded(
+    algo: Algo,
+    speculation: SpeculationSpec,
+    sharding: ShardingKind,
+    transport: TransportKind,
+    data: &Arc<Dataset>,
+    procs: usize,
+    block: usize,
+    iters: usize,
+    boot: usize,
+    seed: u64,
+) -> driver::RunOutput {
+    let (depth, auto, max) = match speculation {
+        SpeculationSpec::Fixed(k) => (k, false, 8),
+        SpeculationSpec::Auto { max } => (2, true, max),
+    };
+    let cfg = RunConfig {
+        algo,
+        scheduler: SchedulerKind::Pipelined,
+        speculation: depth,
+        speculation_auto: auto,
+        speculation_max: max,
+        sharding,
+        transport,
         lambda: 1.0,
         procs,
         block,
@@ -320,6 +358,78 @@ fn speculation_sweep_bitidentical_across_transports() {
                         out.summary.total_delta_bytes() > 0,
                         "{ctx}: snapshot deltas must survive speculation"
                     );
+                }
+            }
+        }
+    }
+}
+
+/// Conflict-aware packing and adaptive depth are pure scheduling policy, so
+/// neither may move a bit across the wire either: `sharding ∈ {hash,
+/// conflict}` × `speculation ∈ {1, 4, auto}` × `{inproc, tcp}` × `{dp, ofl,
+/// bp}` all reproduce the in-proc BSP model exactly. Conflict packing ships
+/// component-aligned (uneven) job ranges through the transport, and auto
+/// depth varies the pending-set size mid-pass — both wire paths that only
+/// this sweep exercises.
+#[test]
+fn sharding_and_auto_speculation_bitidentical_across_transports() {
+    for (algo, iters, boot) in
+        [(Algo::DpMeans, 2, 16), (Algo::Ofl, 1, 0), (Algo::BpMeans, 2, 16)]
+    {
+        let seed = 127;
+        let data = Arc::new(match algo {
+            Algo::BpMeans => bp_features(&GenConfig { n: 280, dim: 8, theta: 1.0, seed }),
+            _ => dp_clusters(&GenConfig { n: 320, dim: 8, theta: 1.0, seed }),
+        });
+        let reference = run(
+            algo,
+            SchedulerKind::Bsp,
+            TransportKind::InProc,
+            &data,
+            4,
+            16,
+            iters,
+            boot,
+            0,
+            seed,
+        );
+        let specs = [
+            SpeculationSpec::Fixed(1),
+            SpeculationSpec::Fixed(4),
+            SpeculationSpec::Auto { max: 4 },
+        ];
+        for transport in [TransportKind::InProc, TransportKind::Tcp] {
+            for sharding in [ShardingKind::Hash, ShardingKind::Conflict] {
+                for spec in specs {
+                    let out = run_sharded(
+                        algo, spec, sharding, transport, &data, 4, 16, iters, boot, seed,
+                    );
+                    let ctx = format!("{algo:?} {transport:?} {sharding:?} {spec:?}");
+                    assert_models_identical(&reference.model, &out.model, &ctx);
+                    assert_eq!(
+                        reference.summary.total_proposed(),
+                        out.summary.total_proposed(),
+                        "{ctx}: proposal accounting"
+                    );
+                    if sharding == ShardingKind::Conflict {
+                        assert_eq!(
+                            out.summary.total_cancelled_waves(),
+                            0,
+                            "{ctx}: conflict packing respins lazily, never cancels"
+                        );
+                    }
+                    if let SpeculationSpec::Auto { max } = spec {
+                        assert!(
+                            out.summary.max_effective_speculation() <= max,
+                            "{ctx}: auto depth exceeded its ceiling"
+                        );
+                    }
+                    if transport == TransportKind::Tcp {
+                        assert!(
+                            out.summary.total_wire_bytes() > 0,
+                            "{ctx}: tcp runs must account wire traffic"
+                        );
+                    }
                 }
             }
         }
