@@ -4,8 +4,8 @@
 Usage: check_bench.py BENCH_schedulers.json schedulers_baseline.json
 
 Reads the machine-readable bench output (one row per algo x scheduler x
-speculation x sharding x transport x frugal_wire cell) and applies four
-gates:
+speculation x sharding x transport x io x frugal_wire cell) and applies
+five gates:
 
 1. Wire bytes (BSP): the dpmeans tcp wire bytes per epoch, relative to the
    run's own full-snapshot (frugal_wire=false) measurement. The baseline
@@ -24,6 +24,12 @@ gates:
    than the recorded baseline (0: the lazy dispatch-time respin policy
    never broadcast-cancels). Cancellation counts are deterministic for a
    fixed config, so this too is structural, not timing.
+5. Reactor vs poll (schema 4): the small-epoch latency experiment's
+   io=reactor row must block-and-wake strictly fewer times than its
+   io=poll twin (reactor_wakeups — a structural count of event-loop
+   blocking points, not a timing) and strictly beat it on p50 per-epoch
+   latency. Skipped with a notice on schema-3 artifacts, which predate
+   the io column.
 """
 
 import json
@@ -39,7 +45,11 @@ def main() -> int:
     with open(sys.argv[2]) as f:
         baseline = json.load(f)
 
-    def row(algo, transport, scheduler, frugal, speculation=None, sharding="hash"):
+    def row(algo, transport, scheduler, frugal, speculation=None, sharding="hash",
+            io=None, experiment=None):
+        # io=None matches any io mode (schema-3 artifacts have no io key);
+        # experiment=None matches only the ordinary perf rows, never the
+        # dedicated latency-experiment rows.
         for r in bench["rows"]:
             key = (r["algo"], r["transport"], r["scheduler"], r["frugal_wire"])
             if key != (algo, transport, scheduler, frugal):
@@ -48,10 +58,15 @@ def main() -> int:
                 continue
             if r.get("sharding", "hash") != sharding:
                 continue
+            if io is not None and r.get("io") != io:
+                continue
+            if r.get("experiment") != experiment:
+                continue
             return r
         print(
             f"missing bench row {algo}/{transport}/{scheduler}/"
-            f"frugal={frugal}/speculation={speculation}/sharding={sharding}",
+            f"frugal={frugal}/speculation={speculation}/sharding={sharding}"
+            f"/io={io}/experiment={experiment}",
             file=sys.stderr,
         )
         sys.exit(1)
@@ -127,6 +142,38 @@ def main() -> int:
             file=sys.stderr,
         )
         failures += 1
+
+    # Gate 5: the readiness reactor must strictly beat the legacy poll
+    # baseline on the small-epoch latency experiment — fewer event-loop
+    # wakeups (structural: every blocking point ticks the counter under
+    # both modes) and a lower p50 per-epoch latency.
+    if bench.get("schema", 0) >= 4:
+        reactor = row("dpmeans", "tcp", "pipelined", True, speculation=2,
+                      io="reactor", experiment="latency")
+        poll = row("dpmeans", "tcp", "pipelined", True, speculation=2,
+                   io="poll", experiment="latency")
+        rw, pw = reactor["reactor_wakeups"], poll["reactor_wakeups"]
+        rp50, pp50 = reactor["latency_p50_ms"], poll["latency_p50_ms"]
+        print(
+            f"io gate: reactor wakeups={rw:.0f} p50={rp50:.3f} ms vs "
+            f"poll wakeups={pw:.0f} p50={pp50:.3f} ms"
+        )
+        if rw >= pw:
+            print(
+                f"reactor must block-and-wake strictly fewer times than poll "
+                f"({rw:.0f} vs {pw:.0f})",
+                file=sys.stderr,
+            )
+            failures += 1
+        if rp50 >= pp50:
+            print(
+                f"reactor p50 epoch latency must strictly beat poll "
+                f"({rp50:.3f} ms vs {pp50:.3f} ms)",
+                file=sys.stderr,
+            )
+            failures += 1
+    else:
+        print("io gate: skipped (schema < 4 artifact has no io column)")
 
     if failures:
         return 1

@@ -35,11 +35,22 @@
 //! hash twin (the conflict-packing acceptance bar: lazy respins, zero
 //! cancellations).
 //!
+//! Schema 4 adds the I/O-plane columns (`io`, `reactor_wakeups`,
+//! `writev_batches`) and a **small-epoch latency experiment**: the same
+//! dpmeans tcp pipeline run twice — `io = "reactor"` vs the legacy
+//! `io = "poll"` sleep-slice baseline — on tiny epochs where the event
+//! loop's fixed cost dominates, reporting p50/p95 per-epoch latency. The
+//! bench asserts the twins are bit-identical and that the reactor wakes
+//! strictly fewer times *and* strictly beats poll on p50 epoch latency
+//! (gate 5 in `check_bench.py` holds the line across PRs).
+//!
 //! Defaults keep single-machine runtime in seconds; pass `--n=…`, `--pb=…`,
 //! `--procs=…`, `--reps=…` to scale up.
 
 use occml::benchlib::{fmt_duration, BenchArgs, Table};
-use occml::config::{Algo, DataSource, RunConfig, SchedulerKind, ShardingKind, TransportKind};
+use occml::config::{
+    Algo, DataSource, IoKind, RunConfig, SchedulerKind, ShardingKind, TransportKind,
+};
 use occml::coordinator::{driver, Model};
 use occml::metrics::json::{obj, Json};
 use occml::runtime::native::NativeBackend;
@@ -63,10 +74,11 @@ fn models_identical(a: &Model, b: &Model) -> bool {
     }
 }
 
-/// One JSON row of `BENCH_schedulers.json` (schema 3: adds `sharding`,
-/// `components_max` and `effective_speculation_max` to the schema 2
-/// columns `speculation`, `commit_lag_ms`, `cancelled_waves`,
-/// `max_queue_depth`).
+/// One JSON row of `BENCH_schedulers.json` (schema 4: adds the I/O-plane
+/// columns `io`, `reactor_wakeups` and `writev_batches` to the schema 3
+/// columns `sharding`, `components_max` and `effective_speculation_max`;
+/// the separate latency rows carry `experiment = "latency"` plus
+/// `latency_p50_ms`/`latency_p95_ms`).
 #[allow(clippy::too_many_arguments)]
 fn json_row(
     algo: &str,
@@ -74,6 +86,7 @@ fn json_row(
     speculation: usize,
     sharding: ShardingKind,
     transport: TransportKind,
+    io: IoKind,
     frugal: bool,
     out: &driver::RunOutput,
 ) -> Json {
@@ -85,6 +98,7 @@ fn json_row(
         ("speculation", Json::Num(speculation as f64)),
         ("sharding", Json::Str(sharding.name().to_string())),
         ("transport", Json::Str(transport.name().to_string())),
+        ("io", Json::Str(io.name().to_string())),
         ("frugal_wire", Json::Bool(frugal)),
         ("wall_ms", Json::Num(s.total_time.as_secs_f64() * 1e3)),
         ("epochs", Json::Num(epochs as f64)),
@@ -105,6 +119,8 @@ fn json_row(
         ("max_queue_depth", Json::Num(s.max_queue_depth() as f64)),
         ("components_max", Json::Num(s.max_largest_component() as f64)),
         ("effective_speculation_max", Json::Num(s.max_effective_speculation() as f64)),
+        ("reactor_wakeups", Json::Num(s.transport.reactor_wakeups as f64)),
+        ("writev_batches", Json::Num(s.transport.writev_batches as f64)),
     ])
 }
 
@@ -254,6 +270,7 @@ fn main() {
                         depth,
                         ShardingKind::Conflict,
                         transport,
+                        IoKind::from_env(),
                         true,
                         &conflict,
                     ));
@@ -283,6 +300,7 @@ fn main() {
                     depth,
                     ShardingKind::Hash,
                     transport,
+                    IoKind::from_env(),
                     true,
                     &out,
                 ));
@@ -300,6 +318,7 @@ fn main() {
                     1,
                     ShardingKind::Hash,
                     transport,
+                    IoKind::from_env(),
                     false,
                     &f,
                 ));
@@ -365,6 +384,7 @@ fn main() {
                 1,
                 ShardingKind::Hash,
                 transport,
+                IoKind::from_env(),
                 true,
                 &bsp,
             ));
@@ -374,6 +394,7 @@ fn main() {
                 2,
                 ShardingKind::Hash,
                 transport,
+                IoKind::from_env(),
                 true,
                 &pip,
             ));
@@ -387,10 +408,133 @@ fn main() {
     if table.write_csv(std::path::Path::new(csv)).is_ok() {
         println!("csv: {csv}");
     }
+
+    // --- Small-epoch latency: io = "reactor" vs io = "poll" -------------
+    // Tiny epochs (Pb = procs·128 out of a 4096-point workload) make the
+    // event loop's fixed per-epoch cost — blocking wakeups, write
+    // syscalls — the dominant term, which is exactly what the readiness
+    // reactor targets. Both twins must stay bit-identical; the reactor
+    // must win strictly on wakeups and on p50 epoch latency (violations
+    // are deferred like every other invariant so the JSON artifact still
+    // lands on a failing run).
+    {
+        let lat_n: usize = args.get_or("lat_n", 4096).min(n);
+        let lat_block = 128;
+        let lat_base = RunConfig {
+            algo: Algo::DpMeans,
+            lambda: 2.0,
+            procs,
+            block: lat_block,
+            iterations: 3,
+            bootstrap_div: 16,
+            source: DataSource::DpClusters,
+            n: lat_n,
+            seed: 12,
+            transport: TransportKind::Tcp,
+            scheduler: SchedulerKind::Pipelined,
+            speculation: 2,
+            ..RunConfig::default()
+        };
+        let data = Arc::new(driver::load_or_generate(&lat_base).expect("generate"));
+        let mut lat_table =
+            Table::new(&["io", "wall", "lat_p50", "lat_p95", "wakeups", "writev", "identical"]);
+        let mut twins: Vec<(IoKind, driver::RunOutput, f64, f64)> = Vec::new();
+        for io in [IoKind::Reactor, IoKind::Poll] {
+            let cfg = RunConfig { io, ..lat_base.clone() };
+            let mut best: Option<driver::RunOutput> = None;
+            for _ in 0..reps {
+                let out = driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new()))
+                    .expect("run");
+                let better = match &best {
+                    None => true,
+                    Some(b) => out.summary.total_time < b.summary.total_time,
+                };
+                if better {
+                    best = Some(out);
+                }
+            }
+            let out = best.expect("at least one rep");
+            // Worker epochs only — the `usize::MAX` recompute phases are a
+            // different workload shape and would skew the percentiles.
+            let mut lats: Vec<f64> = out
+                .summary
+                .epochs
+                .iter()
+                .filter(|e| e.epoch != usize::MAX)
+                .map(|e| e.total_time.as_secs_f64() * 1e3)
+                .collect();
+            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pct = |p: f64| {
+                if lats.is_empty() {
+                    0.0
+                } else {
+                    lats[((lats.len() - 1) as f64 * p).round() as usize]
+                }
+            };
+            let (p50, p95) = (pct(0.50), pct(0.95));
+            twins.push((io, out, p50, p95));
+        }
+        let identical = models_identical(&twins[0].1.model, &twins[1].1.model);
+        if !identical {
+            failures.push(
+                "latency: io=reactor and io=poll models diverged — serializability broke".into(),
+            );
+        }
+        let (rw, pw) = (
+            twins[0].1.summary.transport.reactor_wakeups,
+            twins[1].1.summary.transport.reactor_wakeups,
+        );
+        if rw >= pw {
+            failures.push(format!(
+                "io=reactor must block-and-wake strictly fewer times than io=poll ({rw} vs {pw})"
+            ));
+        }
+        if twins[0].2 >= twins[1].2 {
+            failures.push(format!(
+                "io=reactor p50 epoch latency must strictly beat io=poll \
+                 ({:.3} ms vs {:.3} ms)",
+                twins[0].2, twins[1].2
+            ));
+        }
+        println!(
+            "\n=== small-epoch latency: io=reactor vs io=poll (dpmeans tcp pipelined/2, \
+             N={lat_n}, b={lat_block}) — best of {reps} ==="
+        );
+        for (io, out, p50, p95) in &twins {
+            let t = &out.summary.transport;
+            lat_table.row(vec![
+                io.name().to_string(),
+                fmt_duration(out.summary.total_time),
+                format!("{p50:.2} ms"),
+                format!("{p95:.2} ms"),
+                t.reactor_wakeups.to_string(),
+                t.writev_batches.to_string(),
+                identical.to_string(),
+            ]);
+            rows.push(obj(vec![
+                ("experiment", Json::Str("latency".to_string())),
+                ("algo", Json::Str("dpmeans".to_string())),
+                ("scheduler", Json::Str(SchedulerKind::Pipelined.name().to_string())),
+                ("speculation", Json::Num(2.0)),
+                ("sharding", Json::Str(ShardingKind::Hash.name().to_string())),
+                ("transport", Json::Str(TransportKind::Tcp.name().to_string())),
+                ("io", Json::Str(io.name().to_string())),
+                ("frugal_wire", Json::Bool(true)),
+                ("wall_ms", Json::Num(out.summary.total_time.as_secs_f64() * 1e3)),
+                ("epochs", Json::Num(out.summary.epochs.len() as f64)),
+                ("latency_p50_ms", Json::Num(*p50)),
+                ("latency_p95_ms", Json::Num(*p95)),
+                ("reactor_wakeups", Json::Num(t.reactor_wakeups as f64)),
+                ("writev_batches", Json::Num(t.writev_batches as f64)),
+            ]));
+        }
+        lat_table.print();
+    }
+
     // Machine-readable results for cross-PR perf tracking (schema in the
     // README; consumed by CI's bench-smoke regression gate).
     let doc = obj(vec![
-        ("schema", Json::Num(3.0)),
+        ("schema", Json::Num(4.0)),
         ("bench", Json::Str("schedulers".to_string())),
         (
             "params",

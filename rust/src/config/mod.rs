@@ -216,6 +216,59 @@ impl TransportKind {
     }
 }
 
+/// How the coordinator's event loop blocks while it waits for the
+/// cluster: the readiness reactor (the default) or the legacy
+/// sleep-slice poller, kept as the A/B baseline.
+///
+/// Both modes produce bit-identical models
+/// (`rust/tests/transport_equivalence.rs`); the knob changes *when the
+/// process sleeps*, never what bytes move or in what order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoKind {
+    /// Block on OS readiness (`coordinator::reactor`: epoll on Linux,
+    /// poll(2) elsewhere) — peer sockets, listeners and the validation
+    /// thread's commit wakeup all land in one wait, so the event loop
+    /// wakes exactly when there is work.
+    Reactor,
+    /// Legacy polling: 100–200 µs sleep slices between readiness
+    /// checks. Latency is quantized by the sleep; retained so benches
+    /// and CI can measure what the reactor buys.
+    Poll,
+}
+
+impl IoKind {
+    /// Parse an io-mode name.
+    pub fn parse(s: &str) -> Result<IoKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "reactor" | "epoll" | "readiness" => Ok(IoKind::Reactor),
+            "poll" | "sleep" | "legacy" => Ok(IoKind::Poll),
+            other => Err(Error::config(format!("unknown io `{other}` (reactor|poll)"))),
+        }
+    }
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            IoKind::Reactor => "reactor",
+            IoKind::Poll => "poll",
+        }
+    }
+    /// Default io mode: the `OCCML_IO` environment override if set (CI
+    /// uses it to sweep the poll baseline across the whole suite),
+    /// reactor otherwise.
+    ///
+    /// Like `OCCML_TRANSPORT`, an *invalid* value panics rather than
+    /// falling back: the env var exists to force a mode under test.
+    pub fn from_env() -> IoKind {
+        match std::env::var("OCCML_IO") {
+            Ok(s) => IoKind::parse(&s).unwrap_or_else(|e| panic!("OCCML_IO: {e}")),
+            Err(std::env::VarError::NotUnicode(v)) => {
+                panic!("OCCML_IO is set but not valid unicode: {v:?}")
+            }
+            Err(std::env::VarError::NotPresent) => IoKind::Reactor,
+        }
+    }
+}
+
 /// Data source for a run.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DataSource {
@@ -288,6 +341,10 @@ pub struct RunConfig {
     pub sharding: ShardingKind,
     /// Cluster transport (in-process channels vs loopback TCP sockets).
     pub transport: TransportKind,
+    /// Event-loop blocking mode: readiness reactor (default) vs the
+    /// legacy sleep-slice poller. Bit-identical either way; only the
+    /// waits change.
+    pub io: IoKind,
     /// Validator-shard peers on the validation plane. `0` (the default)
     /// means "half of `procs`, min 1" — see
     /// [`RunConfig::effective_validators`].
@@ -343,6 +400,7 @@ impl Default for RunConfig {
             speculation_max: 8,
             sharding: ShardingKind::Hash,
             transport: TransportKind::from_env(),
+            io: IoKind::from_env(),
             validator_shards: 0,
             peers: Vec::new(),
             validator_peers: Vec::new(),
@@ -413,6 +471,9 @@ impl RunConfig {
         }
         if let Some(s) = doc.get_str("run.transport") {
             cfg.transport = TransportKind::parse(s)?;
+        }
+        if let Some(s) = doc.get_str("run.io") {
+            cfg.io = IoKind::parse(s)?;
         }
         if let Some(v) = doc.get_int("run.validator_shards") {
             cfg.validator_shards = usize::try_from(v)
@@ -757,6 +818,24 @@ mod tests {
         assert_eq!(TransportKind::parse("loopback").unwrap(), TransportKind::Tcp);
         let err = TransportKind::parse("infiniband").unwrap_err().to_string();
         assert!(err.contains("infiniband") && err.contains("inproc") && err.contains("tcp"));
+    }
+
+    #[test]
+    fn io_mode_parses_rejects_and_extracts() {
+        assert_eq!(IoKind::parse("reactor").unwrap(), IoKind::Reactor);
+        assert_eq!(IoKind::parse("EPOLL").unwrap(), IoKind::Reactor);
+        assert_eq!(IoKind::parse("poll").unwrap(), IoKind::Poll);
+        assert_eq!(IoKind::parse("legacy").unwrap(), IoKind::Poll);
+        let err = IoKind::parse("uring").unwrap_err().to_string();
+        assert!(err.contains("uring") && err.contains("reactor") && err.contains("poll"));
+        assert_eq!(IoKind::Reactor.name(), "reactor");
+        assert_eq!(IoKind::Poll.name(), "poll");
+        // Extracts from TOML; absent key keeps the default.
+        let doc = toml::parse("[run]\nio = \"poll\"\n").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().io, IoKind::Poll);
+        let doc = toml::parse("[run]\nprocs = 2\n").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().io, IoKind::from_env());
+        assert!(RunConfig::from_doc(&toml::parse("[run]\nio = \"rdma\"\n").unwrap()).is_err());
     }
 
     #[test]

@@ -324,7 +324,7 @@ pub fn run_dpmeans(
         backend.clone(),
         &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
-    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec());
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io);
     let total = Stopwatch::start();
 
     let mut centers = Matrix::zeros(0, d);
@@ -422,6 +422,8 @@ pub fn run_dpmeans(
                 gather_wait_time: net.gather_wait_time,
                 dataset_bytes: net.dataset_bytes,
                 handshake_time: net.handshake_time,
+                reactor_wakeups: net.reactor_wakeups,
+                writev_batches: net.writev_batches,
                 ..Default::default()
             };
             sink.emit(&rec);
@@ -571,7 +573,7 @@ pub fn run_ofl(
         backend.clone(),
         &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
-    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec());
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io);
     let total = Stopwatch::start();
 
     let draws = ofl_draws(n, cfg.seed);
@@ -740,7 +742,7 @@ pub fn run_bpmeans(
         backend.clone(),
         &Topology::of_config(cfg, 1),
     )?;
-    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec());
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io);
     let total = Stopwatch::start();
 
     // Init (Alg 7): one feature = grand mean, z_i,0 = 1 for all i.
@@ -847,6 +849,8 @@ pub fn run_bpmeans(
                 gather_wait_time: net.gather_wait_time,
                 dataset_bytes: net.dataset_bytes,
                 handshake_time: net.handshake_time,
+                reactor_wakeups: net.reactor_wakeups,
+                writev_batches: net.writev_batches,
                 ..Default::default()
             };
             sink.emit(&rec);

@@ -31,7 +31,7 @@ use crate::runtime::{Block, ComputeBackend};
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -168,13 +168,19 @@ pub enum JobOutput {
 
 /// A worker's reply: its id, the output (or error), and its busy time.
 pub struct JobReply {
-    /// Worker id.
+    /// Worker id. [`WAKER_SENTINEL`] marks a pure wakeup message from a
+    /// plane waker — no payload, routed to nothing.
     pub worker: usize,
     /// Output or failure.
     pub output: Result<JobOutput>,
     /// Time the worker spent on the job.
     pub busy: Duration,
 }
+
+/// Pseudo worker-id of a waker's sentinel reply: its only job is to
+/// interrupt a blocking [`WorkerPool::wait_reply`]; [`WorkerPool`]'s
+/// reply routing drops it on sight.
+pub const WAKER_SENTINEL: usize = usize::MAX;
 
 /// One outstanding wave's reply slots.
 struct PoolWave {
@@ -201,6 +207,13 @@ struct PoolWave {
 pub struct WorkerPool {
     senders: Vec<Sender<Job>>,
     replies: Receiver<JobReply>,
+    /// A retained clone of the workers' reply sender, handed out to
+    /// plane wakers so another thread can interrupt a blocking
+    /// [`WorkerPool::wait_reply`] with a [`WAKER_SENTINEL`] message.
+    /// (Holding it means the reply channel never reports disconnect —
+    /// fine, because workers catch job panics and always reply, so the
+    /// channel's only legitimate close is pool drop.)
+    reply_tx: Sender<JobReply>,
     handles: Vec<JoinHandle<()>>,
     /// Number of workers.
     pub procs: usize,
@@ -234,6 +247,7 @@ impl WorkerPool {
         WorkerPool {
             senders,
             replies,
+            reply_tx,
             handles,
             procs,
             next_wave: Cell::new(0),
@@ -285,6 +299,11 @@ impl WorkerPool {
     /// partial wave behind a failed scatter) pairs with nothing and is
     /// dropped — the pool is already poisoned at that point.
     fn take_reply(&self, reply: JobReply) {
+        if reply.worker == WAKER_SENTINEL {
+            // A waker's wakeup message: its whole purpose was to
+            // interrupt a blocking recv; it routes to no wave.
+            return;
+        }
         let wave_id = {
             let mut replied = self.replied.borrow_mut();
             let id = replied[reply.worker];
@@ -318,6 +337,32 @@ impl WorkerPool {
                 }
             }
         }
+    }
+
+    /// Block until a reply (or a waker's sentinel) arrives, for at most
+    /// `timeout`: the readiness wait behind `io = "reactor"` on the
+    /// in-proc transport. Whatever lands is routed immediately (and the
+    /// channel drained), so `Ok(true)` means "state advanced — re-check
+    /// your waves"; `Ok(false)` means the timeout lapsed untouched.
+    pub fn wait_reply(&self, timeout: Duration) -> Result<bool> {
+        match self.replies.recv_timeout(timeout) {
+            Ok(reply) => {
+                self.take_reply(reply);
+                self.pump()?;
+                Ok(true)
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(false),
+            Err(RecvTimeoutError::Disconnected) => {
+                self.poisoned.set(true);
+                Err(Error::Coordinator("reply channel closed".into()))
+            }
+        }
+    }
+
+    /// A clone of the reply-channel sender, for plane wakers (see
+    /// [`WAKER_SENTINEL`]).
+    pub(crate) fn reply_sender(&self) -> Sender<JobReply> {
+        self.reply_tx.clone()
     }
 
     /// Non-blocking readiness check: true when every reply of `wave` has

@@ -55,8 +55,14 @@
 //! proposal rows their conflict-key range reads (`O(M·d)` total instead of
 //! `O(V·M·d)`), and `gather` retires replies in arrival order through a
 //! readiness-polled loop instead of fixed peer order. All three are
-//! bit-exactness-preserving by construction. [`engine`] holds the job
-//! types, the shared job executor and the in-process `WorkerPool`.
+//! bit-exactness-preserving by construction. Under `io = "reactor"`
+//! (the default) every blocking wait on this plane lands in
+//! [`reactor`] — one epoll/poll(2) readiness queue over all peer
+//! sockets plus the validation thread's commit wakeup — and writes go
+//! out as vectored batches from per-peer pending-write queues; `io =
+//! "poll"` keeps the legacy sleep-slice loops as the A/B baseline.
+//! [`engine`] holds the job types, the shared job executor and the
+//! in-process `WorkerPool`.
 //!
 //! ## 3. The validation plane — *what commits*
 //!
@@ -88,6 +94,7 @@
 
 pub mod driver;
 pub mod engine;
+pub mod reactor;
 pub mod scheduler;
 pub mod soft;
 pub mod tcp;

@@ -43,6 +43,26 @@
 //! validation, epoch `t+1`'s gather, and epoch `t+2`'s scatter all proceed
 //! at once.
 //!
+//! ## Where the event loop blocks
+//!
+//! An iteration that made progress loops straight back around; one that
+//! made none has exactly two things it could be waiting on — a peer
+//! socket turning readable (a wave's replies) and the validation thread
+//! finishing an epoch. Under `io = "reactor"` (the default) both land in
+//! **one blocking wait**: the compute plane's
+//! [`PlaneWaker`]-interruptible [`super::transport::PlaneHandle::
+//! wait_input`], whose readiness reactor watches every peer socket *and*
+//! a wakeup fd the validation thread signals after each commit
+//! ([`validation_loop`] holds the plane's waker). The loop therefore
+//! wakes exactly when there is work, instead of slicing time: `io =
+//! "poll"` keeps the legacy schedule — a 200 µs `recv_timeout` spin on
+//! the commit queue while a validation is outstanding, a 100 µs sleep
+//! otherwise — as the A/B baseline the bench gate compares against. Both
+//! modes are pure blocking strategies: every wait is capped, spurious
+//! wakeups just re-poll, and the sequence of scatters, gathers,
+//! dispatches and commits — hence the model — is bit-identical across
+//! them (`rust/tests/transport_equivalence.rs`).
+//!
 //! ## Why depth-K speculation preserves Theorem 3.1
 //!
 //! Thm 3.1 says the distributed execution equals a serial one because all
@@ -140,7 +160,8 @@
 //! scattered is recorded as [`EpochRecord::effective_speculation`].
 
 use super::engine::{split_range, Job, JobOutput};
-use super::transport::{PlaneHandle, WaveId};
+use super::transport::{PlaneHandle, PlaneWaker, WaveId};
+use crate::config::IoKind;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
@@ -395,6 +416,7 @@ pub trait Scheduler {
 pub fn make(
     kind: crate::config::SchedulerKind,
     speculation: crate::config::SpeculationSpec,
+    io: IoKind,
 ) -> Box<dyn Scheduler> {
     let (depth, adaptive) = match kind {
         crate::config::SchedulerKind::Bsp => (1, false),
@@ -403,7 +425,7 @@ pub fn make(
             crate::config::SpeculationSpec::Auto { max } => (max.max(1), true),
         },
     };
-    Box::new(WaveEngine { depth, adaptive })
+    Box::new(WaveEngine { depth, adaptive, io })
 }
 
 /// Wave lifecycle within the engine's table. `Committed` and `Respun` are
@@ -482,11 +504,19 @@ fn validation_loop(
     algo: &mut dyn EpochAlgo,
     rx: Receiver<VReq>,
     tx: SyncSender<Result<VCommit>>,
+    waker: Option<Arc<dyn PlaneWaker>>,
 ) {
     while let Ok(req) = rx.recv() {
         let res = validate_one(algo, req);
         let failed = res.is_err();
-        if tx.send(res).is_err() || failed {
+        let sent = tx.send(res).is_ok();
+        // Interrupt the event loop's blocking wait — the commit is
+        // queued; signaling after a failed send is harmless (the loop
+        // just re-polls).
+        if let Some(w) = &waker {
+            w.wake();
+        }
+        if !sent || failed {
             return;
         }
     }
@@ -600,6 +630,10 @@ pub struct WaveEngine {
     /// Drive the per-epoch fill bound from the conflict EWMA instead of
     /// pinning it at `depth` (`speculation = "auto"`).
     pub adaptive: bool,
+    /// Event-loop blocking mode: park idle iterations on the compute
+    /// plane's readiness reactor (commit wakeup included) vs the legacy
+    /// sleep-slice schedule. See "Where the event loop blocks" above.
+    pub io: IoKind,
 }
 
 impl Scheduler for WaveEngine {
@@ -646,7 +680,11 @@ impl Scheduler for WaveEngine {
             let (req_tx, req_rx) = sync_channel::<VReq>(max_depth);
             let (res_tx, res_rx) = sync_channel::<Result<VCommit>>(max_depth);
             // Joined implicitly at scope exit; exits when `req_tx` drops.
-            let _validation = scope.spawn(move || validation_loop(algo, req_rx, res_tx));
+            // The validation thread carries the compute plane's waker so
+            // each queued commit interrupts the event loop's blocking wait.
+            let waker = compute.waker();
+            let _validation =
+                scope.spawn(move || validation_loop(algo, req_rx, res_tx, waker));
 
             let mut live: VecDeque<Wave> = VecDeque::new();
             let mut next_scatter = 0usize; // next epoch to scatter
@@ -770,8 +808,12 @@ impl Scheduler for WaveEngine {
                         }
                     }
 
-                    // 4. Drain commits. Block briefly only when nothing
-                    //    else progressed and a validation is outstanding.
+                    // 4. Drain commits. An iteration that progressed just
+                    //    polls; an idle one blocks — in reactor mode on
+                    //    the plane's single readiness wait (peer sockets +
+                    //    the validation thread's commit wakeup, capped so
+                    //    a lost edge costs one slice, never a hang), in
+                    //    poll mode on the legacy sleep-slice schedule.
                     loop {
                         let res = if progressed {
                             match res_rx.try_recv() {
@@ -783,10 +825,46 @@ impl Scheduler for WaveEngine {
                                     ))
                                 }
                             }
+                        } else if self.io == IoKind::Reactor {
+                            // Poll → park → poll: checking the commit
+                            // queue on both sides of the wait means a
+                            // commit queued between the check and the park
+                            // is picked up by the post-wait poll (the
+                            // waker's signal persists until consumed). A
+                            // disconnect with no validation outstanding is
+                            // deferred to the next dispatch, like the
+                            // legacy idle arm.
+                            let poll = |outstanding: bool| -> Result<Option<Result<VCommit>>> {
+                                match res_rx.try_recv() {
+                                    Ok(r) => Ok(Some(r)),
+                                    Err(TryRecvError::Empty) => Ok(None),
+                                    Err(TryRecvError::Disconnected) if outstanding => {
+                                        Err(Error::Coordinator(
+                                            "validation thread terminated early".into(),
+                                        ))
+                                    }
+                                    Err(TryRecvError::Disconnected) => Ok(None),
+                                }
+                            };
+                            let outstanding = next_dispatch > next_commit;
+                            match poll(outstanding)? {
+                                Some(r) => Some(r),
+                                None => {
+                                    compute.wait_input(Duration::from_millis(50))?;
+                                    poll(outstanding)?
+                                }
+                            }
                         } else if next_dispatch > next_commit {
                             match res_rx.recv_timeout(Duration::from_micros(200)) {
                                 Ok(r) => Some(r),
-                                Err(RecvTimeoutError::Timeout) => None,
+                                Err(RecvTimeoutError::Timeout) => {
+                                    // A timed-out spin slice is one legacy
+                                    // block-and-resume — metered so the
+                                    // reactor-vs-poll wakeup comparison
+                                    // covers every blocking point.
+                                    compute.note_idle_wait();
+                                    None
+                                }
                                 Err(RecvTimeoutError::Disconnected) => {
                                     return Err(Error::Coordinator(
                                         "validation thread terminated early".into(),
@@ -797,6 +875,7 @@ impl Scheduler for WaveEngine {
                             // Nothing validating and nothing readable:
                             // yield briefly before the next readiness poll.
                             std::thread::sleep(Duration::from_micros(100));
+                            compute.note_idle_wait();
                             None
                         };
                         let Some(res) = res else { break };
@@ -889,6 +968,8 @@ impl Scheduler for WaveEngine {
                             gather_wait_time: net.gather_wait_time,
                             dataset_bytes: net.dataset_bytes,
                             handshake_time: net.handshake_time,
+                            reactor_wakeups: net.reactor_wakeups,
+                            writev_batches: net.writev_batches,
                         };
                         sink.emit(&rec);
                         log.push(rec);
@@ -1019,7 +1100,7 @@ mod tests {
 
     fn drive(depth: usize, algo: &mut Scripted) -> Vec<EpochRecord> {
         drive_epochs(
-            WaveEngine { depth, adaptive: false },
+            WaveEngine { depth, adaptive: false, io: IoKind::from_env() },
             vec![0..16, 16..32, 32..48, 48..64],
             algo,
         )
@@ -1126,7 +1207,7 @@ mod tests {
         let mut algo = Scripted::new(true, true);
         let mut sink = MetricsSink::Null;
         let mut log = Vec::new();
-        WaveEngine { depth: 2, adaptive: false }
+        WaveEngine { depth: 2, adaptive: false, io: IoKind::from_env() }
             .run_pass(&mut cluster.compute, &mut algo, &[], 0, &mut sink, &mut log)
             .unwrap();
         assert!(log.is_empty());
@@ -1142,18 +1223,16 @@ mod tests {
     #[test]
     fn factory_maps_config_kinds_and_depths() {
         use crate::config::{SchedulerKind, SpeculationSpec};
-        assert_eq!(make(SchedulerKind::Bsp, SpeculationSpec::Fixed(4)).name(), "bsp");
-        assert_eq!(make(SchedulerKind::Pipelined, SpeculationSpec::Fixed(1)).name(), "bsp");
-        assert_eq!(make(SchedulerKind::Pipelined, SpeculationSpec::Fixed(2)).name(), "wave");
-        assert_eq!(make(SchedulerKind::Pipelined, SpeculationSpec::Fixed(4)).name(), "wave");
+        let mk = |kind, spec| make(kind, spec, IoKind::from_env());
+        assert_eq!(mk(SchedulerKind::Bsp, SpeculationSpec::Fixed(4)).name(), "bsp");
+        assert_eq!(mk(SchedulerKind::Pipelined, SpeculationSpec::Fixed(1)).name(), "bsp");
+        assert_eq!(mk(SchedulerKind::Pipelined, SpeculationSpec::Fixed(2)).name(), "wave");
+        assert_eq!(mk(SchedulerKind::Pipelined, SpeculationSpec::Fixed(4)).name(), "wave");
         // Auto under bsp is still the strict barrier; under pipelined the
         // ceiling names the engine.
-        assert_eq!(make(SchedulerKind::Bsp, SpeculationSpec::Auto { max: 8 }).name(), "bsp");
-        assert_eq!(make(SchedulerKind::Pipelined, SpeculationSpec::Auto { max: 1 }).name(), "bsp");
-        assert_eq!(
-            make(SchedulerKind::Pipelined, SpeculationSpec::Auto { max: 8 }).name(),
-            "wave"
-        );
+        assert_eq!(mk(SchedulerKind::Bsp, SpeculationSpec::Auto { max: 8 }).name(), "bsp");
+        assert_eq!(mk(SchedulerKind::Pipelined, SpeculationSpec::Auto { max: 1 }).name(), "bsp");
+        assert_eq!(mk(SchedulerKind::Pipelined, SpeculationSpec::Auto { max: 8 }).name(), "wave");
     }
 
     #[test]
@@ -1228,7 +1307,8 @@ mod tests {
         // at depth 1 (BSP) and stop paying respins entirely.
         let epochs: Vec<Range<usize>> = (0..8).map(|e| e * 8..(e + 1) * 8).collect();
         let mut algo = Scripted::new(false, true);
-        let log = drive_epochs(WaveEngine { depth: 4, adaptive: true }, epochs, &mut algo);
+        let engine = WaveEngine { depth: 4, adaptive: true, io: IoKind::from_env() };
+        let log = drive_epochs(engine, epochs, &mut algo);
         assert_eq!(log.len(), 8);
         assert!(log.iter().all(|r| (1..=4).contains(&r.effective_speculation)), "{log:?}");
         assert_eq!(log[0].effective_speculation, 4, "first wave fills at the ceiling");
@@ -1249,15 +1329,16 @@ mod tests {
         let epochs: Vec<Range<usize>> = (0..8).map(|e| e * 8..(e + 1) * 8).collect();
         for patchable in [true, false] {
             let mut algo = Scripted::new(patchable, false);
-            let log =
-                drive_epochs(WaveEngine { depth: 4, adaptive: true }, epochs.clone(), &mut algo);
+            let engine = WaveEngine { depth: 4, adaptive: true, io: IoKind::from_env() };
+            let log = drive_epochs(engine, epochs.clone(), &mut algo);
             assert!(log.iter().all(|r| r.effective_speculation == 4), "{log:?}");
             assert_eq!(log.iter().map(|r| r.respins).sum::<usize>(), 0);
         }
         // Patchable growth is absorbed by patching, not respins — it must
         // not shrink the bound either.
         let mut algo = Scripted::new(true, true);
-        let log = drive_epochs(WaveEngine { depth: 4, adaptive: true }, epochs, &mut algo);
+        let engine = WaveEngine { depth: 4, adaptive: true, io: IoKind::from_env() };
+        let log = drive_epochs(engine, epochs, &mut algo);
         assert!(log.iter().all(|r| r.effective_speculation == 4), "{log:?}");
     }
 

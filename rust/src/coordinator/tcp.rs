@@ -86,6 +86,38 @@
 //! slotted by peer id, so determinism is untouched. Idle wall-clock spent
 //! waiting on the slowest peers is accounted in `gather_wait_time`.
 //!
+//! ## The I/O plane: where this plane blocks, and how writes leave
+//!
+//! Under `io = "reactor"` (the default) the plane owns a
+//! [`super::reactor::Reactor`] and **every** blocking moment lands in
+//! [`Reactor::wait`](super::reactor::Reactor::wait): each peer socket is
+//! switched nonblocking exactly once per session (right after its
+//! handshake — the hot path never flips modes again) and registered
+//! level-triggered for read readiness, so [`TcpPlane::gather`] and
+//! [`TcpPlane::wait_input`] park in `epoll`/`poll(2)` until bytes
+//! actually arrive instead of napping on sleep slices. `gather_wait_time`
+//! therefore measures *true block time*, and every wait return ticks
+//! `reactor_wakeups` (under `io = "poll"`, the legacy A/B baseline, every
+//! sleep slice ticks it instead — the plane's 200 µs gather naps here,
+//! plus the scheduler's legacy spin slices via
+//! [`PlaneIo::note_idle_wait`](super::transport::PlaneIo::note_idle_wait)
+//! — and the benches assert the reactor strictly beats that).
+//!
+//! On the write side nothing calls `write_all` on the hot path. Every
+//! outbound frame — dataset block, snapshot, delta, job — is *enqueued*
+//! on the peer's pending-write queue and drained by vectored writes
+//! (`writev` over up to [`MAX_WRITE_IOVECS`] queued frames per call,
+//! counted in `writev_batches`). A partial write leaves the tail queued;
+//! the peer's fd gains write-readiness interest until its queue drains,
+//! so a tiny send buffer degrades to more batches, never a stall. Frame
+//! buffers are pooled: dataset blocks and retired wave frames return
+//! their `Vec`s to a per-plane scratch pool, and memoized snapshot
+//! frames are shared by `Arc` — steady-state waves stop allocating.
+//! Stats for a frame (wire/dataset/delta bytes, snapshot-fallback
+//! counts) are applied when its **last byte** reaches the kernel, so a
+//! frame abandoned with a dead session and resent through recovery is
+//! never double-booked.
+//!
 //! ## Failure behaviour
 //!
 //! A peer-side *job* failure (panic, bad geometry, undecodable payload)
@@ -96,8 +128,11 @@
 //! A *dead session* (process killed, connection dropped, desynced stream)
 //! poisons only the waves that peer still owes, not the run: the master
 //! keeps each scattered frame until its reply arrives, and on a broken
-//! stream it makes a bounded number of reconnect attempts
-//! (`reconnect_attempts`, [`RECONNECT_DELAY`] apart) to the peer's
+//! stream it makes a bounded number of reconnect attempts (up to
+//! `reconnect_attempts`, spaced by a deterministic exponential backoff:
+//! [`RECONNECT_BACKOFF_BASE`] doubling to [`RECONNECT_BACKOFF_CAP`]; the
+//! mid-wave recovery path parks the backoff in the reactor so other
+//! peers' replies keep draining while the timer runs) to the peer's
 //! address — a remote `occd worker` replacement, or the persistent
 //! loopback listener, which serves a fresh session from the same thread.
 //! The replacement session is re-handshaken, re-shipped the dataset ranges
@@ -111,14 +146,16 @@
 //! the peer threads — infallibly.
 
 use super::engine::{panic_message, run_job, Job, JobOutput};
+use super::reactor::Reactor;
 use super::transport::{SharedStats, Topology, TransportStats, WaveId};
 use super::wire::{self, Hello, HelloAck, PeerRole};
+use crate::config::IoKind;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::runtime::ComputeBackend;
 use std::collections::{HashMap, VecDeque};
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -126,8 +163,41 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Delay between reconnect attempts to a dropped peer.
-pub const RECONNECT_DELAY: Duration = Duration::from_millis(250);
+#[cfg(unix)]
+use std::os::unix::io::AsRawFd;
+
+/// First delay of the deterministic exponential reconnect backoff; it
+/// doubles per attempt (no jitter — identical schedules across runs) up
+/// to [`RECONNECT_BACKOFF_CAP`].
+pub const RECONNECT_BACKOFF_BASE: Duration = Duration::from_millis(125);
+
+/// Ceiling of the exponential reconnect backoff.
+pub const RECONNECT_BACKOFF_CAP: Duration = Duration::from_millis(1000);
+
+/// Most queued frames one vectored write submits. Each flush call that
+/// reaches the kernel counts once in `writev_batches`.
+pub const MAX_WRITE_IOVECS: usize = 64;
+
+/// Safety-net cap on any single reactor wait: the lost-wakeup
+/// discipline (pump, then wait, then pump again) means a missed edge
+/// costs at most one of these slices, never a hang.
+const WAIT_CAP: Duration = Duration::from_millis(50);
+
+/// Legacy `io = "poll"` sleep slice (the A/B baseline the reactor is
+/// measured against).
+const POLL_NAP: Duration = Duration::from_micros(200);
+
+/// Scratch-buffer pool cap per plane: beyond this, drained frame
+/// buffers are dropped instead of retained.
+const FRAME_POOL_CAP: usize = 64;
+
+/// Delay before reconnect attempt `attempt + 1`: 125 ms, 250, 500,
+/// then 1 s flat. The first attempt (index 0) waits nothing.
+fn backoff_delay(attempt: usize) -> Duration {
+    RECONNECT_BACKOFF_BASE
+        .saturating_mul(1u32 << attempt.min(3))
+        .min(RECONNECT_BACKOFF_CAP)
+}
 
 /// Handshake ack read timeout: a connect can succeed against a listener
 /// backlog whose accept loop is gone (a genuinely dead loopback thread),
@@ -236,11 +306,19 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
             ok: false,
             message: format!("peer speaks wire version {}, got {version}", wire::VERSION),
         };
-        if let Ok(f) = wire::hello_ack_frame(&ack) {
-            let _ = stream.write_all(&f);
-        }
+        // The rejection ack is the master's only clue why the session died;
+        // if it cannot be written, say so in the error instead of dropping
+        // the failure on the floor.
+        let ack_write = match wire::hello_ack_frame(&ack) {
+            Ok(f) => stream.write_all(&f).map_err(|e| e.to_string()),
+            Err(e) => Err(e.to_string()),
+        };
+        let detail = match ack_write {
+            Ok(()) => String::new(),
+            Err(e) => format!(" (rejection ack not delivered: {e})"),
+        };
         return Err(Error::Coordinator(format!(
-            "coordinator speaks wire version {version}, this peer speaks {}",
+            "coordinator speaks wire version {version}, this peer speaks {}{detail}",
             wire::VERSION
         )));
     }
@@ -256,10 +334,16 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
             // giving up on the session.
             let ack =
                 HelloAck { proto: wire::VERSION, ok: false, message: e.to_string() };
-            if let Ok(f) = wire::hello_ack_frame(&ack) {
-                let _ = stream.write_all(&f);
-            }
-            return Err(e);
+            let ack_write = match wire::hello_ack_frame(&ack) {
+                Ok(f) => stream.write_all(&f).map_err(|err| err.to_string()),
+                Err(err) => Err(err.to_string()),
+            };
+            return Err(match ack_write {
+                Ok(()) => e,
+                Err(w) => Error::Coordinator(format!(
+                    "{e} (rejection ack not delivered: {w})"
+                )),
+            });
         }
     };
     let ack = HelloAck { proto: wire::VERSION, ok: true, message: String::new() };
@@ -445,24 +529,214 @@ struct Peer {
     /// replacement session starts empty and is re-based from a full
     /// frame).
     snap: Option<(u64, Arc<Matrix>)>,
+    /// Pending-write queue: frames enqueued but not yet fully handed to
+    /// the kernel, drained front-first by vectored writes. Dies with
+    /// the session (recovery resends from the waves' retained frames).
+    outq: VecDeque<PendingFrame>,
 }
 
-impl Peer {
-    fn describe(&self) -> String {
-        if self.loopback {
-            format!("loopback {} peer {} ({})", self.hello.role.name(), self.hello.peer_id, self.addr)
-        } else {
-            format!("{} peer {} ({})", self.hello.role.name(), self.hello.peer_id, self.addr)
+/// The bytes of one queued outbound frame.
+enum FrameBytes {
+    /// Transient frame (dataset block): its buffer returns to the
+    /// plane's scratch pool once drained.
+    Owned(Vec<u8>),
+    /// Retained or memoized frame (wave job, snapshot, delta): shared
+    /// with the wave's resend copy or the scatter memo — zero-copy.
+    Shared(Arc<Vec<u8>>),
+}
+
+impl FrameBytes {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            FrameBytes::Owned(b) => b,
+            FrameBytes::Shared(b) => b,
         }
     }
 }
 
+/// Deferred per-frame accounting, applied when the frame's last byte
+/// reaches the kernel. A frame abandoned with its dead session (and
+/// resent through recovery on a fresh one) is therefore never
+/// double-booked — which keeps the strict `full_snapshot_fallbacks`
+/// equalities the tests assert exact.
+#[derive(Default)]
+struct FrameAcct {
+    /// `wire_bytes` share (job and snapshot/delta frames).
+    wire: u64,
+    /// `total_bytes` share (dataset blocks; handshakes account inline).
+    bytes: u64,
+    /// Dataset payload bytes.
+    dataset: u64,
+    /// Snapshot-delta payload bytes.
+    delta: u64,
+    /// This frame is a full-snapshot re-base.
+    full_fallback: bool,
+}
+
+impl FrameAcct {
+    fn apply(&self, stats: &SharedStats) {
+        if self.wire > 0 {
+            stats.add_wire(self.wire);
+        }
+        if self.bytes > 0 {
+            stats.add_bytes(self.bytes);
+        }
+        if self.dataset > 0 {
+            stats.add_dataset(self.dataset);
+        }
+        if self.delta > 0 {
+            stats.add_delta(self.delta);
+        }
+        if self.full_fallback {
+            stats.add_full_snapshot_fallback();
+        }
+    }
+}
+
+/// One frame on a peer's pending-write queue.
+struct PendingFrame {
+    bytes: FrameBytes,
+    /// Bytes of this frame already written to the kernel.
+    sent: usize,
+    acct: FrameAcct,
+}
+
+fn enqueue_frame(peer: &mut Peer, bytes: FrameBytes, acct: FrameAcct) {
+    peer.outq.push_back(PendingFrame { bytes, sent: 0, acct });
+}
+
+/// Return a drained frame buffer to the scratch pool (bounded).
+fn recycle(pool: &mut Vec<Vec<u8>>, buf: Vec<u8>) {
+    if pool.len() < FRAME_POOL_CAP {
+        pool.push(buf);
+    }
+}
+
+#[cfg(unix)]
+fn stream_fd(s: &TcpStream) -> i32 {
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn stream_fd(_s: &TcpStream) -> i32 {
+    0
+}
+
+/// Drop a peer's session: deregister its fd from the reactor *before*
+/// the socket closes (a recycled fd number must never alias a stale
+/// registration), close the stream, and discard its pending writes
+/// (recovery resends from the waves' retained frames).
+fn drop_stream(reactor: &mut Option<Reactor>, peer: &mut Peer) {
+    if let (Some(r), Some(s)) = (reactor.as_mut(), &peer.stream) {
+        r.deregister(stream_fd(s));
+    }
+    peer.stream = None;
+    peer.outq.clear();
+}
+
+/// Track write-readiness interest against queue emptiness. Best-effort:
+/// a failed `epoll_ctl` only costs the bounded safety-net timeout.
+fn sync_write_interest(reactor: &mut Option<Reactor>, peer: &Peer, on: bool) {
+    if let (Some(r), Some(s)) = (reactor.as_mut(), &peer.stream) {
+        let _ = r.set_write_interest(stream_fd(s), on);
+    }
+}
+
+/// Push a peer's pending writes as far as the kernel allows, as
+/// vectored batches. `Ok(true)` = queue drained; `Ok(false)` = the
+/// kernel refused more (`WouldBlock`) with bytes still queued; `Err` =
+/// the session is dead and the caller recovers. Per-frame stats apply
+/// as each frame's last byte leaves.
+fn flush_peer(shared: &TcpShared, peer: &mut Peer, pool: &mut Vec<Vec<u8>>) -> Result<bool> {
+    loop {
+        if peer.outq.is_empty() {
+            return Ok(true);
+        }
+        let wrote = {
+            let Peer { outq, stream, .. } = &mut *peer;
+            let stream = stream
+                .as_mut()
+                .ok_or_else(|| Error::Coordinator("peer has no live session".into()))?;
+            let mut iov: Vec<IoSlice<'_>> = Vec::with_capacity(outq.len().min(MAX_WRITE_IOVECS));
+            for f in outq.iter().take(MAX_WRITE_IOVECS) {
+                iov.push(IoSlice::new(&f.bytes.as_slice()[f.sent..]));
+            }
+            stream.write_vectored(&iov)
+        };
+        match wrote {
+            Ok(0) => {
+                return Err(Error::Coordinator(
+                    "tcp write accepted 0 bytes of a queued frame".into(),
+                ))
+            }
+            Ok(mut n) => {
+                shared.stats.add_writev_batch();
+                while n > 0 {
+                    let front = peer.outq.front_mut().expect("drained bytes came from a frame");
+                    let left = front.bytes.as_slice().len() - front.sent;
+                    if n < left {
+                        front.sent += n;
+                        break;
+                    }
+                    n -= left;
+                    let done = peer.outq.pop_front().expect("front exists");
+                    done.acct.apply(&shared.stats);
+                    if let FrameBytes::Owned(buf) = done.bytes {
+                        recycle(pool, buf);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::Coordinator(format!("tcp write: {e}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+thread_local! {
+    /// Blocking-mode switches on this thread — exactly one per session
+    /// open. The hot path (pump / flush / gather) must never add one;
+    /// `sockets_stay_nonblocking_without_hot_path_mode_flips` asserts it.
+    static MODE_FLIPS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+#[cfg(test)]
+fn mode_flips() -> u64 {
+    MODE_FLIPS.with(|c| c.get())
+}
+
+/// One-time I/O setup for a freshly handshaken session: switch the
+/// socket nonblocking — permanently; the hot path never toggles modes —
+/// and register it with the reactor. Registration is an optimization: a
+/// failure degrades to the safety-net timeout, never to wrong results.
+fn finish_session_open(reactor: &mut Option<Reactor>, peer: &mut Peer) -> Result<()> {
+    let stream = peer.stream.as_ref().expect("handshaken session has a stream");
+    #[cfg(test)]
+    MODE_FLIPS.with(|c| c.set(c.get() + 1));
+    stream
+        .set_nonblocking(true)
+        .map_err(|e| Error::Coordinator(format!("tcp nonblocking: {e}")))?;
+    if let Some(r) = reactor.as_mut() {
+        let _ = r.register(stream_fd(stream));
+    }
+    Ok(())
+}
+
+impl Peer {
+    fn describe(&self) -> String {
+        let pre = if self.loopback { "loopback " } else { "" };
+        format!("{pre}{} peer {} ({})", self.hello.role.name(), self.hello.peer_id, self.addr)
+    }
+}
+
 /// One retained scattered job: the encoded frame (kept for resend after a
-/// reconnect), the dataset range it reads, and the snapshot its frame
-/// references (kept so a replacement session can be re-based — by a full
-/// frame — before the retained frame is resent).
+/// reconnect; `Arc`-shared with the pending-write queue so enqueueing
+/// copies nothing), the dataset range it reads, and the snapshot its
+/// frame references (kept so a replacement session can be re-based — by
+/// a full frame — before the retained frame is resent).
 struct WaveJob {
-    frame: Vec<u8>,
+    frame: Arc<Vec<u8>>,
     need: Option<Range<usize>>,
     snap: Option<(u64, Arc<Matrix>)>,
 }
@@ -503,10 +777,11 @@ struct SnapMemo {
     ids: HashMap<usize, u64>,
     /// `(snapshot ptr, base id)` → relation.
     relations: HashMap<(usize, u64), SnapRelation>,
-    /// `(snapshot id)` → encoded full frame.
-    fulls: HashMap<u64, Vec<u8>>,
-    /// `(snapshot id, base id)` → encoded delta frame.
-    deltas: HashMap<(u64, u64), Vec<u8>>,
+    /// `(snapshot id)` → encoded full frame, `Arc`-shared with every
+    /// pending-write queue that ships it.
+    fulls: HashMap<u64, Arc<Vec<u8>>>,
+    /// `(snapshot id, base id)` → encoded delta frame, likewise shared.
+    deltas: HashMap<(u64, u64), Arc<Vec<u8>>>,
 }
 
 /// The snapshot matrix a job embeds, if any: the epoch state that frugal
@@ -576,7 +851,9 @@ fn do_handshake(peer: &mut Peer) -> Result<(usize, Duration)> {
     stream
         .write_all(&frame)
         .map_err(|e| Error::Coordinator(format!("tcp hello: {e}")))?;
-    stream.flush().ok();
+    stream
+        .flush()
+        .map_err(|e| Error::Coordinator(format!("tcp hello flush: {e}")))?;
     let mut bytes = frame.len();
     // Version-tolerant read: a peer built at a different wire version acks
     // with *its* frame version, and we still want to decode and report it
@@ -608,36 +885,38 @@ fn do_handshake(peer: &mut Peer) -> Result<(usize, Duration)> {
     Ok((bytes, sw.elapsed()))
 }
 
-/// One fresh-session attempt: connect, handshake, account the cost. The
-/// peer's stream is `None` on failure.
-fn open_session(shared: &TcpShared, peer: &mut Peer) -> Result<()> {
-    peer.stream = None;
+/// One fresh-session attempt: connect, handshake (on the still-blocking
+/// socket), account the cost, then switch the session into its
+/// permanent nonblocking + reactor-registered state. The peer's stream
+/// is `None` on failure.
+fn open_session(shared: &TcpShared, reactor: &mut Option<Reactor>, peer: &mut Peer) -> Result<()> {
+    drop_stream(reactor, peer);
     let stream = TcpStream::connect(&peer.addr)
         .map_err(|e| Error::Coordinator(format!("tcp connect {}: {e}", peer.addr)))?;
     stream.set_nodelay(true).ok();
     peer.stream = Some(stream);
-    match do_handshake(peer) {
-        Ok((bytes, took)) => {
-            shared.stats.add_bytes(bytes as u64);
-            shared.stats.add_handshake(took);
-            Ok(())
-        }
-        Err(e) => {
-            peer.stream = None;
-            Err(e)
-        }
+    let opened = do_handshake(peer).and_then(|(bytes, took)| {
+        shared.stats.add_bytes(bytes as u64);
+        shared.stats.add_handshake(took);
+        finish_session_open(reactor, peer)
+    });
+    if let Err(e) = opened {
+        peer.stream = None;
+        return Err(e);
     }
+    Ok(())
 }
 
-/// Re-open a dead peer's session under the bounded reconnect policy.
-fn reconnect(shared: &TcpShared, peer: &mut Peer) -> Result<()> {
-    peer.stream = None;
+/// Re-open a dead peer's session under the bounded reconnect policy
+/// (deterministic exponential backoff between attempts).
+fn reconnect(shared: &TcpShared, reactor: &mut Option<Reactor>, peer: &mut Peer) -> Result<()> {
+    drop_stream(reactor, peer);
     let mut last: Option<Error> = None;
     for attempt in 0..shared.reconnect_attempts {
         if attempt > 0 {
-            std::thread::sleep(RECONNECT_DELAY);
+            std::thread::sleep(backoff_delay(attempt - 1));
         }
-        match open_session(shared, peer) {
+        match open_session(shared, reactor, peer) {
             Ok(()) => return Ok(()),
             Err(e) => last = Some(e),
         }
@@ -650,31 +929,39 @@ fn reconnect(shared: &TcpShared, peer: &mut Peer) -> Result<()> {
     )))
 }
 
-/// Ship the sub-ranges of `need` this peer's session has not seen, in
-/// bounded block frames.
-fn ship_missing(shared: &TcpShared, peer: &mut Peer, need: &Range<usize>) -> Result<()> {
+/// Queue the sub-ranges of `need` this peer's session has not seen, in
+/// bounded block frames encoded straight from the dataset into pooled
+/// buffers (no intermediate matrix copy). Shipped-coverage advances at
+/// enqueue: frames drain in order, and a dead session's replacement
+/// clears the coverage at handshake anyway.
+fn ship_missing(
+    shared: &TcpShared,
+    peer: &mut Peer,
+    need: &Range<usize>,
+    pool: &mut Vec<Vec<u8>>,
+) -> Result<()> {
     for span in peer.sent.missing(need) {
         let d = shared.data.dim();
         let mut lo = span.start;
         while lo < span.end {
             let hi = (lo + DATA_BLOCK_POINTS).min(span.end);
             let sw = Instant::now();
-            let block = Matrix {
-                rows: hi - lo,
-                cols: d,
-                data: shared.data.points.data[lo * d..hi * d].to_vec(),
-            };
-            let frame = wire::data_frame(lo, &block)?;
+            let mut buf = pool.pop().unwrap_or_default();
+            buf.clear();
+            wire::data_rows_frame_into(
+                &mut buf,
+                lo,
+                hi - lo,
+                d,
+                &shared.data.points.data[lo * d..hi * d],
+            )?;
             shared.stats.add_ser(sw.elapsed());
-            shared.stats.add_bytes(frame.len() as u64);
-            shared.stats.add_dataset((frame.len() - wire::HEADER_LEN) as u64);
-            let stream = peer
-                .stream
-                .as_mut()
-                .ok_or_else(|| Error::Coordinator("peer has no live session".into()))?;
-            stream
-                .write_all(&frame)
-                .map_err(|e| Error::Coordinator(format!("tcp data ship: {e}")))?;
+            let acct = FrameAcct {
+                bytes: buf.len() as u64,
+                dataset: (buf.len() - wire::HEADER_LEN) as u64,
+                ..FrameAcct::default()
+            };
+            enqueue_frame(peer, FrameBytes::Owned(buf), acct);
             lo = hi;
         }
         peer.sent.add(span);
@@ -695,10 +982,13 @@ fn ship_missing(shared: &TcpShared, peer: &mut Peer, need: &Range<usize>) -> Res
 ///   `full_snapshot_fallbacks`.
 ///
 /// The peer reconstructs bit-exactly by construction (raw f32 bit
-/// patterns both ways), and `peer.snap` is only advanced after the
-/// write succeeded — a broken write leaves the mirror cleared, so the
-/// next ship re-bases in full instead of trusting a half-installed
-/// cache.
+/// patterns both ways). The mirror (`peer.snap`) advances at *enqueue*:
+/// frames drain strictly in order, so the session will hold `id` before
+/// any later frame that references it — and every write failure forces
+/// a replacement session whose handshake clears the mirror again, so a
+/// half-installed cache is never trusted. The install's stats (wire
+/// bytes, delta bytes, fallback count) stay deferred until the frame
+/// actually drains.
 fn ensure_snapshot(
     shared: &TcpShared,
     peer: &mut Peer,
@@ -731,13 +1021,13 @@ fn ensure_snapshot(
         }
         None => None,
     };
-    // The memoized frame is *borrowed*, not cloned: the bytes encode
-    // once per wave and every peer writes the same buffer, so per-wave
-    // memcpy stays O(snapshot), not O(P · snapshot).
-    let (frame, is_delta): (&[u8], bool) = match rebase {
+    // The memoized frame is `Arc`-shared, not cloned: the bytes encode
+    // once per wave and every peer queues the same allocation, so
+    // per-wave memcpy stays O(snapshot), not O(P · snapshot).
+    let (frame, is_delta): (Arc<Vec<u8>>, bool) = match rebase {
         Some((base_id, base_rows)) => {
             let frame = match memo.deltas.entry((id, base_id)) {
-                std::collections::hash_map::Entry::Occupied(e) => &*e.into_mut(),
+                std::collections::hash_map::Entry::Occupied(e) => e.get().clone(),
                 std::collections::hash_map::Entry::Vacant(e) => {
                     let d = m.cols;
                     let tail = Matrix {
@@ -746,44 +1036,39 @@ fn ensure_snapshot(
                         data: m.data[base_rows * d..].to_vec(),
                     };
                     let delta = wire::SnapshotDelta { id, base_id, base_rows, tail };
-                    let bytes = wire::snapshot_delta_frame(&delta)?;
+                    let mut bytes = Vec::new();
+                    wire::snapshot_delta_frame_into(&mut bytes, &delta)?;
                     shared.stats.add_unique(bytes.len() as u64);
-                    &*e.insert(bytes)
+                    e.insert(Arc::new(bytes)).clone()
                 }
             };
             (frame, true)
         }
         None => {
             let frame = match memo.fulls.entry(id) {
-                std::collections::hash_map::Entry::Occupied(e) => &*e.into_mut(),
+                std::collections::hash_map::Entry::Occupied(e) => e.get().clone(),
                 std::collections::hash_map::Entry::Vacant(e) => {
-                    let bytes = wire::snapshot_frame(id, m)?;
+                    let mut bytes = Vec::new();
+                    wire::snapshot_frame_into(&mut bytes, id, m)?;
                     shared.stats.add_unique(bytes.len() as u64);
-                    &*e.insert(bytes)
+                    e.insert(Arc::new(bytes)).clone()
                 }
             };
             (frame, false)
         }
     };
     shared.stats.add_ser(sw.elapsed());
-    peer.snap = None; // cleared until the write proves out
-    let stream = peer
-        .stream
-        .as_mut()
-        .ok_or_else(|| Error::Coordinator("peer has no live session".into()))?;
-    stream
-        .write_all(frame)
-        .map_err(|e| Error::Coordinator(format!("tcp snapshot ship: {e}")))?;
-    // Accounted only after the write succeeded: a broken write is
-    // retried on a fresh session, and counting the failed attempt
-    // would double-book the install (and break the strict
-    // `full_snapshot_fallbacks` equalities the tests assert).
-    shared.stats.add_wire(frame.len() as u64);
-    if is_delta {
-        shared.stats.add_delta((frame.len() - wire::HEADER_LEN) as u64);
-    } else {
-        shared.stats.add_full_snapshot_fallback();
-    }
+    // Accounting rides the frame and applies when it drains: a broken
+    // session's undelivered install is retried (and re-counted) on a
+    // fresh session, never double-booked — which keeps the strict
+    // `full_snapshot_fallbacks` equalities the tests assert.
+    let acct = FrameAcct {
+        wire: frame.len() as u64,
+        delta: if is_delta { (frame.len() - wire::HEADER_LEN) as u64 } else { 0 },
+        full_fallback: !is_delta,
+        ..FrameAcct::default()
+    };
+    enqueue_frame(peer, FrameBytes::Shared(frame), acct);
     peer.snap = Some((id, m.clone()));
     Ok(())
 }
@@ -809,30 +1094,31 @@ fn snap_ref_id(shared: &TcpShared, peer: &Peer, m: &Arc<Matrix>, memo: &mut Snap
         .or_insert_with(|| shared.next_snap_id.fetch_add(1, Ordering::Relaxed))
 }
 
-/// Ship a wave job's data needs and snapshot, then write its frame.
+/// Queue a wave job's data needs, snapshot and frame, then push as much
+/// as the kernel will take. Anything it refuses stays on the peer's
+/// pending-write queue under write-readiness interest, drained by the
+/// gather / readiness loops.
 fn write_wave_job(
     shared: &TcpShared,
+    reactor: &mut Option<Reactor>,
     peer: &mut Peer,
     wj: &WaveJob,
     memo: &mut SnapMemo,
+    pool: &mut Vec<Vec<u8>>,
 ) -> Result<()> {
     if let Some(need) = &wj.need {
-        ship_missing(shared, peer, need)?;
+        ship_missing(shared, peer, need, pool)?;
     }
     if let Some((id, m)) = &wj.snap {
         ensure_snapshot(shared, peer, *id, m, memo)?;
     }
-    let stream = peer
-        .stream
-        .as_mut()
-        .ok_or_else(|| Error::Coordinator("peer has no live session".into()))?;
-    stream
-        .write_all(&wj.frame)
-        .map_err(|e| Error::Coordinator(format!("tcp scatter: {e}")))?;
-    // Post-write, like the snapshot accounting above: a failed write is
-    // retried on a fresh session, and pre-write accounting would
-    // double-book the frame.
-    shared.stats.add_wire(wj.frame.len() as u64);
+    enqueue_frame(
+        peer,
+        FrameBytes::Shared(wj.frame.clone()),
+        FrameAcct { wire: wj.frame.len() as u64, ..FrameAcct::default() },
+    );
+    let drained = flush_peer(shared, peer, pool)?;
+    sync_write_interest(reactor, peer, !drained);
     Ok(())
 }
 
@@ -840,29 +1126,32 @@ fn write_wave_job(
 /// the delivery once on a fresh session.
 fn deliver(
     shared: &TcpShared,
+    reactor: &mut Option<Reactor>,
     peer: &mut Peer,
     wj: &WaveJob,
     memo: &mut SnapMemo,
+    pool: &mut Vec<Vec<u8>>,
 ) -> Result<()> {
     if peer.stream.is_none() {
-        reconnect(shared, peer)?;
+        reconnect(shared, reactor, peer)?;
     }
-    match write_wave_job(shared, peer, wj, memo) {
+    match write_wave_job(shared, reactor, peer, wj, memo, pool) {
         Ok(()) => Ok(()),
         Err(_) => {
-            reconnect(shared, peer)?;
-            write_wave_job(shared, peer, wj, memo)
+            reconnect(shared, reactor, peer)?;
+            write_wave_job(shared, reactor, peer, wj, memo, pool)
         }
     }
 }
 
 /// Connect with bounded retries — workers may come up slightly after the
-/// coordinator, so the initial connect gets `1 + attempts` tries.
+/// coordinator, so the initial connect gets `1 + attempts` tries, spaced
+/// by the same deterministic exponential backoff reconnects use.
 fn connect_with_retry(addr: &str, attempts: usize) -> Result<TcpStream> {
     let mut last: Option<std::io::Error> = None;
     for attempt in 0..=attempts {
         if attempt > 0 {
-            std::thread::sleep(RECONNECT_DELAY);
+            std::thread::sleep(backoff_delay(attempt - 1));
         }
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
@@ -882,6 +1171,15 @@ fn connect_with_retry(addr: &str, attempts: usize) -> Result<TcpStream> {
 pub struct TcpPlane {
     shared: Arc<TcpShared>,
     peers: Vec<Peer>,
+    /// The plane's readiness queue under `io = "reactor"` — every live
+    /// session's socket is registered, and every blocking wait on this
+    /// plane lands in [`Reactor::wait`]. `None` under `io = "poll"`: the
+    /// legacy sleep-slice loops, kept as the A/B baseline.
+    reactor: Option<Reactor>,
+    /// Recycled frame-encode buffers (bounded by [`FRAME_POOL_CAP`]):
+    /// owned frames return their allocation here when fully written, so
+    /// steady-state encoding stops allocating per wave.
+    pool: Vec<Vec<u8>>,
     /// Incremental reply-parse buffer per peer (bytes drained from the
     /// nonblocking socket, not yet a complete frame).
     bufs: Vec<Vec<u8>>,
@@ -913,14 +1211,21 @@ pub fn spawn_planes(
         next_snap_id: AtomicU64::new(1),
         stats,
     });
-    let compute =
-        TcpPlane::init(&shared, &backend, PeerRole::Compute, topo.procs, &topo.compute_peers)?;
+    let compute = TcpPlane::init(
+        &shared,
+        &backend,
+        PeerRole::Compute,
+        topo.procs,
+        &topo.compute_peers,
+        topo.io,
+    )?;
     let validate = TcpPlane::init(
         &shared,
         &backend,
         PeerRole::Validate,
         topo.validators,
         &topo.validator_peers,
+        topo.io,
     )?;
     Ok((compute, validate))
 }
@@ -945,15 +1250,24 @@ pub fn spawn_local(
 
 impl TcpPlane {
     /// Build one plane: addressed remote peers when `addrs` is non-empty,
-    /// loopback thread peers otherwise. Every peer is handshaken before
-    /// the plane is handed out.
+    /// loopback thread peers otherwise. Every peer is handshaken (still in
+    /// blocking mode), then switched nonblocking for the life of the
+    /// session and — under `io = "reactor"` — registered with the plane's
+    /// readiness queue before the plane is handed out.
     fn init(
         shared: &Arc<TcpShared>,
         backend: &Arc<dyn ComputeBackend>,
         role: PeerRole,
         n: usize,
         addrs: &[String],
+        io: IoKind,
     ) -> Result<TcpPlane> {
+        let mut reactor = match io {
+            IoKind::Reactor => Some(Reactor::new().map_err(|e| {
+                Error::Coordinator(format!("reactor setup: {e}"))
+            })?),
+            IoKind::Poll => None,
+        };
         let count = if addrs.is_empty() { n } else { addrs.len() };
         let shutdown = Arc::new(AtomicBool::new(false));
         let mut handles = Vec::new();
@@ -1002,14 +1316,18 @@ impl TcpPlane {
                 hello,
                 sent: Coverage::default(),
                 snap: None,
+                outq: VecDeque::new(),
             };
             let (bytes, took) = do_handshake(&mut peer)?;
             shared.stats.add_bytes(bytes as u64);
             shared.stats.add_handshake(took);
+            finish_session_open(&mut reactor, &mut peer)?;
             peers.push(peer);
         }
         Ok(TcpPlane {
             shared: shared.clone(),
+            reactor,
+            pool: Vec::new(),
             bufs: vec![Vec::new(); count],
             owed: vec![VecDeque::new(); count],
             pending: VecDeque::new(),
@@ -1069,14 +1387,25 @@ impl TcpPlane {
                 let wj = match job_snapshot(job) {
                     Some(m) => {
                         let ref_id = snap_ref_id(&shared, &self.peers[i], m, &mut memo);
-                        let frame = wire::snapref_job_frame(job, ref_id)?;
-                        unique += frame.len();
-                        WaveJob { frame, need, snap: Some((ref_id, m.clone())) }
+                        let mut buf = self.pool.pop().unwrap_or_default();
+                        buf.clear();
+                        wire::snapref_job_frame_into(&mut buf, job, ref_id)?;
+                        unique += buf.len();
+                        WaveJob {
+                            frame: Arc::new(buf),
+                            need,
+                            snap: Some((ref_id, m.clone())),
+                        }
                     }
                     None => {
-                        let frame = wire::job_frame(job)?;
-                        unique += frame.len();
-                        WaveJob { frame, need, snap: None }
+                        let mut buf = self.pool.pop().unwrap_or_default();
+                        buf.clear();
+                        let payload = wire::encode_job(job);
+                        wire::frame_into(&mut buf, wire::KIND_JOB, |b| {
+                            b.extend_from_slice(&payload)
+                        })?;
+                        unique += buf.len();
+                        WaveJob { frame: Arc::new(buf), need, snap: None }
                     }
                 };
                 out.push(wj);
@@ -1084,13 +1413,13 @@ impl TcpPlane {
             shared.stats.add_unique(unique as u64);
             out
         } else {
-            let wave = wire::job_frames(&jobs)?;
+            let wave = wire::job_frames_pooled(&jobs, &mut self.pool)?;
             let total: usize = wave.frames.iter().map(|f| f.len()).sum();
             shared.stats.add_unique((total - wave.spliced_payload_bytes) as u64);
             wave.frames
                 .into_iter()
                 .zip(needs)
-                .map(|(frame, need)| WaveJob { frame, need, snap: None })
+                .map(|(frame, need)| WaveJob { frame: Arc::new(frame), need, snap: None })
                 .collect()
         };
         shared.stats.add_ser(sw.elapsed());
@@ -1105,7 +1434,14 @@ impl TcpPlane {
         };
         let mut first_err: Option<Error> = None;
         for i in 0..n {
-            match deliver(&shared, &mut self.peers[i], &wave.jobs[i], &mut memo) {
+            match deliver(
+                &shared,
+                &mut self.reactor,
+                &mut self.peers[i],
+                &wave.jobs[i],
+                &mut memo,
+                &mut self.pool,
+            ) {
                 Ok(()) => self.owed[i].push_back(seq),
                 Err(e) => {
                     // This peer owes no reply for the wave: its slot is a
@@ -1119,7 +1455,7 @@ impl TcpPlane {
                     if first_err.is_none() {
                         first_err = Some(Error::Coordinator(msg));
                     }
-                    self.peers[i].stream = None;
+                    drop_stream(&mut self.reactor, &mut self.peers[i]);
                 }
             }
         }
@@ -1182,8 +1518,10 @@ impl TcpPlane {
     }
 
     /// Nonblocking pump of one peer: drain readable bytes into its buffer
-    /// and route every complete frame. `Err` means the stream is dead or
-    /// desynced — the caller recovers.
+    /// and route every complete frame. The socket is already in
+    /// nonblocking mode — sessions are switched exactly once, at open
+    /// ([`finish_session_open`]); the hot path never flips modes. `Err`
+    /// means the stream is dead or desynced — the caller recovers.
     fn pump_peer(&mut self, i: usize) -> Result<()> {
         loop {
             // Parse first: a previous pump may have buffered complete
@@ -1198,15 +1536,8 @@ impl TcpPlane {
                     self.peers[i].describe()
                 )));
             };
-            if stream.set_nonblocking(true).is_err() {
-                return Err(Error::Coordinator(format!(
-                    "{} socket rejected nonblocking mode",
-                    self.peers[i].describe()
-                )));
-            }
             let mut tmp = [0u8; 64 * 1024];
             let read = (&*stream).read(&mut tmp);
-            let _ = stream.set_nonblocking(false);
             match read {
                 Ok(0) => {
                     return Err(Error::Coordinator("peer closed its stream mid-wave".into()))
@@ -1232,6 +1563,108 @@ impl TcpPlane {
         }
     }
 
+    /// Bytes still queued for write across all peers (0 = fully flushed).
+    fn queued_bytes(&self) -> usize {
+        self.peers
+            .iter()
+            .flat_map(|p| p.outq.iter())
+            .map(|f| f.bytes.as_slice().len() - f.sent)
+            .sum()
+    }
+
+    /// Push queued writes on every peer with a live session, keeping
+    /// write-readiness interest in sync with queue emptiness. A write
+    /// failure takes the bounded recovery path inline — the waves'
+    /// retained frames resend on the fresh session.
+    fn flush_all(&mut self) {
+        for i in 0..self.peers.len() {
+            if self.peers[i].outq.is_empty() || self.peers[i].stream.is_none() {
+                continue;
+            }
+            let shared = self.shared.clone();
+            match flush_peer(&shared, &mut self.peers[i], &mut self.pool) {
+                Ok(drained) => {
+                    sync_write_interest(&mut self.reactor, &self.peers[i], !drained)
+                }
+                Err(e) => self.recover_peer(i, e),
+            }
+        }
+    }
+
+    /// The plane's single park point. Reactor mode blocks in
+    /// [`Reactor::wait`] until a registered socket turns ready, the
+    /// wakeup fd is signaled, or the capped timeout lapses; poll mode
+    /// sleeps one legacy slice. Every return ticks `reactor_wakeups`
+    /// once — "times the event loop came back from a wait" — which is
+    /// exactly the count the reactor-vs-poll bench gate compares.
+    fn wait_io(&mut self, cap: Duration) {
+        match self.reactor.as_mut() {
+            Some(r) => {
+                let _ = r.wait(cap.min(WAIT_CAP));
+            }
+            None => std::thread::sleep(cap.min(POLL_NAP)),
+        }
+        self.shared.stats.add_reactor_wakeup();
+    }
+
+    /// Park a reconnect backoff for `delay`. Poll mode just sleeps.
+    /// Reactor mode spends the delay in [`Reactor::wait`] while pumping
+    /// the *other* peers, so their replies keep draining while peer
+    /// `dead` is down. A pump error on another peer only drops that
+    /// session here — the outer sweep's recovery picks it up.
+    fn recovery_pause(&mut self, delay: Duration, dead: usize) {
+        if self.reactor.is_none() {
+            std::thread::sleep(delay);
+            return;
+        }
+        let deadline = Instant::now() + delay;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            self.wait_io(deadline - now);
+            for i in 0..self.peers.len() {
+                if i == dead || self.owed[i].is_empty() || self.peers[i].stream.is_none() {
+                    continue;
+                }
+                if self.pump_peer(i).is_err() {
+                    drop_stream(&mut self.reactor, &mut self.peers[i]);
+                }
+            }
+        }
+    }
+
+    /// Block until this plane (probably) has progress to make: pump and
+    /// flush first — if that advanced anything, report immediately —
+    /// otherwise park in [`TcpPlane::wait_io`] and sweep once more.
+    /// Spurious `Ok(true)` is allowed; the caller re-checks its waves.
+    pub fn wait_input(&mut self, timeout: Duration) -> Result<bool> {
+        let owed_before: usize = self.owed.iter().map(|q| q.len()).sum();
+        let queued_before = self.queued_bytes();
+        self.pump_all();
+        self.flush_all();
+        let progressed = |plane: &TcpPlane| {
+            plane.owed.iter().map(|q| q.len()).sum::<usize>() != owed_before
+                || plane.queued_bytes() != queued_before
+        };
+        if progressed(self) {
+            return Ok(true);
+        }
+        self.wait_io(timeout.min(WAIT_CAP));
+        self.pump_all();
+        self.flush_all();
+        Ok(progressed(self))
+    }
+
+    /// A cross-thread handle that cuts [`TcpPlane::wait_input`] short
+    /// (reactor mode only; poll-mode waits always run out their slice).
+    pub fn waker(&self) -> Option<Arc<dyn super::transport::PlaneWaker>> {
+        self.reactor
+            .as_ref()
+            .map(|r| Arc::new(r.wakeup()) as Arc<dyn super::transport::PlaneWaker>)
+    }
+
     /// The recovery path: peer `i`'s session died with replies owed.
     /// Bounded attempts; each opens a fresh session (remote replacement
     /// worker, or the persistent loopback listener), re-ships the retained
@@ -1249,9 +1682,9 @@ impl TcpPlane {
         let mut last = cause;
         'attempt: for attempt in 0..attempts {
             if attempt > 0 {
-                std::thread::sleep(RECONNECT_DELAY);
+                self.recovery_pause(backoff_delay(attempt - 1), i);
             }
-            if let Err(e) = open_session(&shared, &mut self.peers[i]) {
+            if let Err(e) = open_session(&shared, &mut self.reactor, &mut self.peers[i]) {
                 last = e;
                 continue;
             }
@@ -1262,8 +1695,14 @@ impl TcpPlane {
                     .iter()
                     .find(|w| w.seq == seq)
                     .expect("owed seq has a pending wave");
-                if let Err(e) = write_wave_job(&shared, &mut self.peers[i], &wave.jobs[i], &mut memo)
-                {
+                if let Err(e) = write_wave_job(
+                    &shared,
+                    &mut self.reactor,
+                    &mut self.peers[i],
+                    &wave.jobs[i],
+                    &mut memo,
+                    &mut self.pool,
+                ) {
                     last = e;
                     continue 'attempt;
                 }
@@ -1271,10 +1710,10 @@ impl TcpPlane {
             return; // back in the sweep; replies arrive in resend order
         }
         let msg = format!(
-            "{} dropped mid-wave and stayed unreachable after {attempts} reconnect attempts: {last}",
+            "{} dropped mid-wave, unreachable after {attempts} reconnect attempts: {last}",
             self.peers[i].describe()
         );
-        self.peers[i].stream = None;
+        drop_stream(&mut self.reactor, &mut self.peers[i]);
         for seq in owed {
             let wave = self
                 .pending
@@ -1295,8 +1734,11 @@ impl TcpPlane {
 
     /// Non-blocking readiness check: true when every reply of `wave` has
     /// arrived (buffered into its slots), so its gather will not block.
+    /// Also pushes any queued writes — a probe must never leave frames
+    /// parked when the kernel would take them.
     pub fn try_ready(&mut self, wave: WaveId) -> Result<bool> {
         self.pump_all();
+        self.flush_all();
         self.remaining(wave)
             .map(|r| r == 0)
             .ok_or_else(|| Error::Coordinator("try_ready on an unknown wave".into()))
@@ -1311,11 +1753,14 @@ impl TcpPlane {
     }
 
     /// Retire one outstanding wave by id: outputs sorted by peer id plus
-    /// the critical-path busy time. Blocks — readiness-polled with a short
-    /// sleep when nothing is readable anywhere (accounted in
-    /// `gather_wait_time`) — until the wave is fully drained; replies for
-    /// other in-flight waves arriving meanwhile buffer into their own
-    /// slots.
+    /// the critical-path busy time. Blocks until the wave is fully
+    /// drained: each turn pumps replies and flushes queued writes, and
+    /// when neither direction moved, parks in [`TcpPlane::wait_io`] —
+    /// actual readiness under the reactor, one legacy sleep slice under
+    /// `io = "poll"`. The parked time is what `gather_wait_time`
+    /// measures: true wall-clock blocked on the slowest peers. Replies
+    /// for other in-flight waves arriving meanwhile buffer into their
+    /// own slots.
     pub fn gather(&mut self, wave: WaveId) -> Result<(Vec<JobOutput>, Duration)> {
         assert!(
             self.pending.iter().any(|w| w.seq == wave),
@@ -1327,15 +1772,16 @@ impl TcpPlane {
                 break;
             }
             let owed_before: usize = self.owed.iter().map(|q| q.len()).sum();
+            let queued_before = self.queued_bytes();
             self.pump_all();
+            self.flush_all();
             let owed_after: usize = self.owed.iter().map(|q| q.len()).sum();
             let done = self.remaining(wave).expect("wave registered") == 0;
-            if !done && owed_after == owed_before {
-                // Nothing readable anywhere: yield briefly instead of
-                // spinning. The sleep slices are what gather_wait_time
-                // measures — wall-clock spent waiting on the slowest peers.
+            let progressed =
+                owed_after != owed_before || self.queued_bytes() != queued_before;
+            if !done && !progressed {
                 let sw = Instant::now();
-                std::thread::sleep(Duration::from_micros(200));
+                self.wait_io(WAIT_CAP);
                 idle += sw.elapsed();
             }
         }
@@ -1345,9 +1791,18 @@ impl TcpPlane {
         if let Some(e) = wave.err {
             return Err(e);
         }
+        // Reclaim the retired wave's frame buffers: an Arc this plane is
+        // the last owner of goes back to the scratch pool, so
+        // steady-state waves stop allocating.
+        let TcpWave { jobs, outputs, max_busy, .. } = wave;
+        for wj in jobs {
+            if let Ok(buf) = Arc::try_unwrap(wj.frame) {
+                recycle(&mut self.pool, buf);
+            }
+        }
         Ok((
-            wave.outputs.into_iter().map(|o| o.expect("peer replied")).collect(),
-            wave.max_busy,
+            outputs.into_iter().map(|o| o.expect("peer replied")).collect(),
+            max_busy,
         ))
     }
 
@@ -1361,7 +1816,49 @@ impl TcpPlane {
     /// takes the reconnect/recovery path against the peer's address.
     #[cfg(test)]
     fn kill_session(&mut self, i: usize) {
-        self.peers[i].stream = None;
+        drop_stream(&mut self.reactor, &mut self.peers[i]);
+    }
+
+    /// Make every later write on peer `i`'s current session fail hard
+    /// (tests): shutting down the local write half turns queued writes
+    /// into immediate errors instead of `WouldBlock`, without touching
+    /// the read half.
+    #[cfg(test)]
+    fn break_session_writes(&mut self, i: usize) {
+        if let Some(s) = &self.peers[i].stream {
+            let _ = s.shutdown(std::net::Shutdown::Write);
+        }
+    }
+
+    /// Clamp peer `i`'s session send buffer to the kernel minimum
+    /// (tests): a snapshot frame then takes many partial vectored writes
+    /// to leave, exercising the pending-queue continuation path.
+    #[cfg(all(test, target_os = "linux"))]
+    fn shrink_sndbuf(&mut self, i: usize) {
+        extern "C" {
+            fn setsockopt(
+                fd: i32,
+                level: i32,
+                name: i32,
+                value: *const std::ffi::c_void,
+                len: u32,
+            ) -> i32;
+        }
+        const SOL_SOCKET: i32 = 1;
+        const SO_SNDBUF: i32 = 7;
+        if let Some(s) = &self.peers[i].stream {
+            let val: i32 = 1; // the kernel clamps this up to its floor
+            let rc = unsafe {
+                setsockopt(
+                    stream_fd(s),
+                    SOL_SOCKET,
+                    SO_SNDBUF,
+                    (&val as *const i32).cast(),
+                    std::mem::size_of::<i32>() as u32,
+                )
+            };
+            assert_eq!(rc, 0, "setsockopt(SO_SNDBUF) failed");
+        }
     }
 }
 
@@ -1381,6 +1878,15 @@ impl super::transport::PlaneIo for TcpPlane {
     fn gather(&mut self, wave: WaveId) -> Result<(Vec<JobOutput>, Duration)> {
         TcpPlane::gather(self, wave)
     }
+    fn wait_input(&mut self, timeout: Duration) -> Result<bool> {
+        TcpPlane::wait_input(self, timeout)
+    }
+    fn waker(&self) -> Option<Arc<dyn super::transport::PlaneWaker>> {
+        TcpPlane::waker(self)
+    }
+    fn note_idle_wait(&self) {
+        self.shared.stats.add_reactor_wakeup();
+    }
 }
 
 impl Drop for TcpPlane {
@@ -1388,6 +1894,14 @@ impl Drop for TcpPlane {
         // Stop the persistent listeners from serving replacement sessions
         // before anything else — recovery during teardown makes no sense.
         self.shutdown.store(true, Ordering::SeqCst);
+        // Sessions live nonblocking; teardown is not the hot path, so
+        // restore blocking mode once here — the reply drain below relies
+        // on read timeouts, and the shutdown frames on blocking writes.
+        for p in self.peers.iter() {
+            if let Some(s) = &p.stream {
+                let _ = s.set_nonblocking(false);
+            }
+        }
         // Drain outstanding replies (bounded per read) so no peer blocks
         // writing into a socket nobody reads. Frames must come off the
         // per-peer parse buffer first: a pump may have left a partial
@@ -1419,12 +1933,15 @@ impl Drop for TcpPlane {
             }
             let _ = stream.set_read_timeout(None);
         }
-        // Shutdown frames are best-effort: a dead peer's socket just
-        // errors, and closing the stream below unblocks it anyway.
+        // Shutdown frames are best-effort, but a failed write is recorded
+        // by dropping that session immediately: the peer then sees EOF
+        // instead of half a frame, and teardown never retries or hangs.
         if let Ok(frame) = wire::job_frame(&Job::Shutdown) {
             for p in self.peers.iter_mut() {
                 if let Some(stream) = &mut p.stream {
-                    let _ = stream.write_all(&frame);
+                    if stream.write_all(&frame).is_err() {
+                        p.stream = None;
+                    }
                 }
             }
         }
@@ -1761,6 +2278,7 @@ mod tests {
             validator_peers: vec![slow_addr, fast_addr],
             reconnect_attempts: 1,
             frugal_wire: true,
+            io: IoKind::from_env(),
         };
         let (_compute, mut validate) =
             spawn_planes(data, backend, &topo, Arc::new(SharedStats::default())).unwrap();
@@ -1821,6 +2339,7 @@ mod tests {
             validator_peers: vec![av],
             reconnect_attempts: 2,
             frugal_wire: true,
+            io: IoKind::from_env(),
         };
         let (mut compute, validate) =
             spawn_planes(data.clone(), backend.clone(), &topo, Arc::new(SharedStats::default()))
@@ -1889,6 +2408,7 @@ mod tests {
             validator_peers: vec![],
             reconnect_attempts: 8,
             frugal_wire: true,
+            io: IoKind::from_env(),
         };
         let (mut compute, _validate) =
             spawn_planes(data.clone(), backend, &topo, Arc::new(SharedStats::default()))
@@ -2003,6 +2523,7 @@ mod tests {
             validator_peers: vec![],
             reconnect_attempts: 1,
             frugal_wire: true,
+            io: IoKind::from_env(),
         };
         let (mut compute, _validate) =
             spawn_planes(data.clone(), backend, &topo, Arc::new(SharedStats::default()))
@@ -2025,5 +2546,102 @@ mod tests {
             .to_string();
         assert!(err.contains("reconnect") || err.contains("unreachable"), "{err}");
         // drop must not hang
+    }
+
+    // -- Readiness-reactor I/O plane ---------------------------------------
+
+    /// Satellite: a socket killed mid-write surfaces as a typed session
+    /// error and takes the recovery path — never a silent hang or a
+    /// dropped wave. The write half of peer 0's session is shut down so
+    /// the next delivery's flush fails hard (EPIPE, not `WouldBlock`);
+    /// the bounded reconnect must then serve the wave bit-identically on
+    /// a replacement session.
+    #[test]
+    fn socket_killed_mid_write_surfaces_and_recovers() {
+        let (data, backend) = data_and_backend(80);
+        let (mut compute, _validate) = spawn_local(data.clone(), backend.clone(), 2, 1).unwrap();
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        let centers = Arc::new(centers);
+        let mk = || -> Vec<Job> {
+            split_range(0..80, 2)
+                .into_iter()
+                .map(|range| Job::Nearest { range, centers: centers.clone() })
+                .collect()
+        };
+        let handshakes_before = compute.stats().handshake_time;
+        compute.break_session_writes(0);
+        let (outs, _) = compute.scatter_gather(mk()).unwrap();
+        let pool = super::super::engine::WorkerPool::spawn(data.clone(), backend, 2);
+        let (want, _) = pool.scatter_gather(mk()).unwrap();
+        assert_nearest_bits_equal(&outs, &want);
+        assert!(
+            compute.stats().handshake_time > handshakes_before,
+            "the broken write half must force a re-handshake, not a silent retry"
+        );
+        // The plane stays fully usable afterwards.
+        let (again, _) = compute.scatter_gather(mk()).unwrap();
+        assert_nearest_bits_equal(&again, &want);
+    }
+
+    /// A frame bigger than the socket's send buffer leaves through many
+    /// partial vectored writes: the unwritten tail parks on the peer's
+    /// pending-write queue and continues from `sent` on later flushes,
+    /// with bit-identical results. Linux-only: relies on clamping
+    /// SO_SNDBUF to the kernel floor.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn partial_writes_continue_under_tiny_sndbuf() {
+        let (data, backend) = data_and_backend(64);
+        let (mut compute, _validate) = spawn_local(data.clone(), backend.clone(), 1, 1).unwrap();
+        // A snapshot far larger than the clamped send buffer (~4.6 KB):
+        // 2048 rows × 8 f32 ≈ 64 KB of payload.
+        let mut centers = Matrix::zeros(0, 8);
+        for i in 0..2048 {
+            centers.push_row(data.point(i % 64));
+        }
+        let centers = Arc::new(centers);
+        let mk = || vec![Job::Nearest { range: 0..64, centers: centers.clone() }];
+        compute.shrink_sndbuf(0);
+        let batches_before = compute.stats().writev_batches;
+        let (outs, _) = compute.scatter_gather(mk()).unwrap();
+        assert!(
+            compute.stats().writev_batches > batches_before + 1,
+            "a 64 KB snapshot through a minimum send buffer must take \
+             several vectored writes, got {}",
+            compute.stats().writev_batches - batches_before
+        );
+        let pool = super::super::engine::WorkerPool::spawn(data.clone(), backend, 1);
+        let (want, _) = pool.scatter_gather(mk()).unwrap();
+        assert_nearest_bits_equal(&outs, &want);
+    }
+
+    /// Satellite: sessions are switched to nonblocking exactly once, at
+    /// open — the pump/flush/gather hot path never toggles modes. The
+    /// counter is thread-local and every session here opens on this
+    /// thread, so the count is race-free under the parallel test runner.
+    #[test]
+    fn sockets_stay_nonblocking_without_hot_path_mode_flips() {
+        let (data, backend) = data_and_backend(60);
+        let (mut compute, _validate) = spawn_local(data.clone(), backend, 2, 1).unwrap();
+        let flips_after_open = mode_flips();
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        let centers = Arc::new(centers);
+        let mk = || -> Vec<Job> {
+            split_range(0..60, 2)
+                .into_iter()
+                .map(|range| Job::Nearest { range, centers: centers.clone() })
+                .collect()
+        };
+        for _ in 0..3 {
+            compute.scatter_gather(mk()).unwrap();
+        }
+        assert_eq!(
+            mode_flips(),
+            flips_after_open,
+            "three waves of scatter/pump/flush/gather must not flip a \
+             socket's blocking mode"
+        );
     }
 }

@@ -328,51 +328,57 @@ impl SpliceCache {
 
 fn encode_job_into(job: &Job, cache: &mut SpliceCache) -> Vec<u8> {
     let mut b = Vec::new();
+    encode_job_to(&mut b, job, cache);
+    b
+}
+
+/// Append a job payload to `b` (no frame header) — the in-place twin of
+/// [`encode_job`] for reusable scratch buffers.
+fn encode_job_to(b: &mut Vec<u8>, job: &Job, cache: &mut SpliceCache) {
     match job {
         Job::Nearest { range, centers } => {
-            put_u8(&mut b, JOB_NEAREST);
-            put_range(&mut b, range);
-            cache.splice(&mut b, Arc::as_ptr(centers) as usize, |b| put_matrix(b, centers));
+            put_u8(b, JOB_NEAREST);
+            put_range(b, range);
+            cache.splice(b, Arc::as_ptr(centers) as usize, |b| put_matrix(b, centers));
         }
         Job::SuffStats { range, assignments, k } => {
-            put_u8(&mut b, JOB_SUFFSTATS);
-            put_range(&mut b, range);
-            cache.splice(&mut b, Arc::as_ptr(assignments) as usize, |b| {
+            put_u8(b, JOB_SUFFSTATS);
+            put_range(b, range);
+            cache.splice(b, Arc::as_ptr(assignments) as usize, |b| {
                 put_u32_slice(b, assignments.as_slice())
             });
-            put_usize(&mut b, *k);
+            put_usize(b, *k);
         }
         Job::BpDescend { range, features, sweeps } => {
-            put_u8(&mut b, JOB_BP_DESCEND);
-            put_range(&mut b, range);
-            cache.splice(&mut b, Arc::as_ptr(features) as usize, |b| put_matrix(b, features));
-            put_usize(&mut b, *sweeps);
+            put_u8(b, JOB_BP_DESCEND);
+            put_range(b, range);
+            cache.splice(b, Arc::as_ptr(features) as usize, |b| put_matrix(b, features));
+            put_usize(b, *sweeps);
         }
         Job::BpStats { range, z, k } => {
-            put_u8(&mut b, JOB_BP_STATS);
-            put_range(&mut b, range);
-            cache.splice(&mut b, Arc::as_ptr(z) as usize, |b| {
+            put_u8(b, JOB_BP_STATS);
+            put_range(b, range);
+            cache.splice(b, Arc::as_ptr(z) as usize, |b| {
                 put_usize(b, z.len());
                 for row in z.iter() {
                     put_bool_slice(b, row);
                 }
             });
-            put_usize(&mut b, *k);
+            put_usize(b, *k);
         }
         Job::PairCache { vectors, positions, shards } => {
-            put_u8(&mut b, JOB_PAIR_CACHE);
-            cache.splice(&mut b, Arc::as_ptr(vectors) as usize, |b| put_matrix(b, vectors));
-            put_u32_slice(&mut b, positions);
-            put_usize(&mut b, shards.len());
+            put_u8(b, JOB_PAIR_CACHE);
+            cache.splice(b, Arc::as_ptr(vectors) as usize, |b| put_matrix(b, vectors));
+            put_u32_slice(b, positions);
+            put_usize(b, shards.len());
             for shard in shards {
-                put_u32_slice(&mut b, shard);
+                put_u32_slice(b, shard);
             }
         }
         Job::Shutdown => {
-            put_u8(&mut b, JOB_SHUTDOWN);
+            put_u8(b, JOB_SHUTDOWN);
         }
     }
-    b
 }
 
 /// Serialize a job payload (no frame header).
@@ -396,13 +402,22 @@ pub struct WaveFrames {
 /// share by `Arc` (snapshots, assignment vectors) are encoded once and
 /// spliced into each later frame.
 pub fn job_frames(jobs: &[Job]) -> Result<WaveFrames> {
+    job_frames_pooled(jobs, &mut Vec::new())
+}
+
+/// [`job_frames`] drawing its frame buffers from `pool` instead of the
+/// allocator: each returned frame reuses a pooled `Vec`'s capacity
+/// (cleared, never shrunk). The TCP plane returns drained frames to the
+/// pool, so steady-state waves stop allocating. Byte-identical output.
+pub fn job_frames_pooled(jobs: &[Job], pool: &mut Vec<Vec<u8>>) -> Result<WaveFrames> {
     let mut cache = SpliceCache::default();
     let mut frames = Vec::with_capacity(jobs.len());
     let mut payload_total = 0usize;
     for job in jobs {
-        let payload = encode_job_into(job, &mut cache);
-        payload_total += payload.len();
-        frames.push(frame(KIND_JOB, payload)?);
+        let mut buf = pool.pop().unwrap_or_default();
+        buf.clear();
+        payload_total += frame_into(&mut buf, KIND_JOB, |b| encode_job_to(b, job, &mut cache))?;
+        frames.push(buf);
     }
     Ok(WaveFrames {
         frames,
@@ -922,18 +937,87 @@ pub fn decode_output(r: &mut Reader) -> Result<JobOutput> {
 // Frames
 // ---------------------------------------------------------------------------
 
-/// Wrap a payload in a framed message.
-pub fn frame(kind: u16, payload: Vec<u8>) -> Result<Vec<u8>> {
-    if payload.len() > MAX_FRAME as usize {
-        return Err(wire_err(format!("oversized frame: {} bytes", payload.len())));
-    }
-    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+/// Append a complete framed message to `out`, building the payload in
+/// place with `build` — the amortized-zero-allocation twin of [`frame`]
+/// for the reusable per-session encode buffers on the TCP hot path. The
+/// 12-byte header goes down first with a length placeholder, the
+/// payload is encoded directly behind it, and the length is patched
+/// afterwards; the bytes produced are identical to [`frame`]'s. Returns
+/// the payload length.
+pub fn frame_into(
+    out: &mut Vec<u8>,
+    kind: u16,
+    build: impl FnOnce(&mut Vec<u8>),
+) -> Result<usize> {
+    let head = out.len();
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&kind.to_le_bytes());
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&payload);
+    out.extend_from_slice(&0u32.to_le_bytes()); // patched below
+    let start = out.len();
+    build(out);
+    let len = out.len() - start;
+    if len > MAX_FRAME as usize {
+        return Err(wire_err(format!("oversized frame: {len} bytes")));
+    }
+    out[head + 8..head + 12].copy_from_slice(&(len as u32).to_le_bytes());
+    Ok(len)
+}
+
+/// Wrap a payload in a framed message.
+pub fn frame(kind: u16, payload: Vec<u8>) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    frame_into(&mut out, kind, |b| b.extend_from_slice(&payload))?;
     Ok(out)
+}
+
+/// Append a complete dataset-block frame to `out`, encoding `rows`
+/// points of width `cols` straight from the dataset's backing slice —
+/// no intermediate `Matrix` copy. Byte-identical to
+/// [`data_frame`] over `Matrix { rows, cols, data: data.to_vec() }`.
+pub fn data_rows_frame_into(
+    out: &mut Vec<u8>,
+    offset: usize,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+) -> Result<usize> {
+    debug_assert_eq!(data.len(), rows * cols);
+    frame_into(out, KIND_DATA, |b| {
+        put_usize(b, offset);
+        put_usize(b, rows);
+        put_usize(b, cols);
+        for &x in data {
+            put_f32(b, x);
+        }
+    })
+}
+
+/// Append a complete full-snapshot frame to `out` (see
+/// [`snapshot_frame`]).
+pub fn snapshot_frame_into(out: &mut Vec<u8>, id: u64, m: &Matrix) -> Result<usize> {
+    frame_into(out, KIND_SNAPSHOT, |b| {
+        put_u64(b, id);
+        put_matrix(b, m);
+    })
+}
+
+/// Append a complete snapshot-delta frame to `out` (see
+/// [`snapshot_delta_frame`]).
+pub fn snapshot_delta_frame_into(out: &mut Vec<u8>, d: &SnapshotDelta) -> Result<usize> {
+    frame_into(out, KIND_SNAPSHOT_DELTA, |b| {
+        put_u64(b, d.id);
+        put_u64(b, d.base_id);
+        put_usize(b, d.base_rows);
+        put_matrix(b, &d.tail);
+    })
+}
+
+/// Append a complete snapshot-referencing job frame to `out` (see
+/// [`snapref_job_frame`]).
+pub fn snapref_job_frame_into(out: &mut Vec<u8>, job: &Job, snap_id: u64) -> Result<usize> {
+    let payload = encode_snapref_job(job, snap_id)?;
+    frame_into(out, KIND_JOB, |b| b.extend_from_slice(&payload))
 }
 
 /// A complete job frame, ready to write.

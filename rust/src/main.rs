@@ -60,6 +60,7 @@ fn app() -> App {
                     Some("hash"),
                 )
                 .flag("transport", "inproc | tcp", Some("inproc"))
+                .flag("io", "reactor | poll (event-loop blocking mode)", Some("reactor"))
                 .flag("validator-shards", "validator peers (0 = procs/2, min 1)", Some("0"))
                 .flag("peers", "comma-separated host:port of occd worker compute peers", None)
                 .flag(
@@ -197,6 +198,9 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     if let Some(v) = p.get("transport") {
         cfg.transport = TransportKind::parse(v)?;
     }
+    if let Some(v) = p.get("io") {
+        cfg.io = occml::config::IoKind::parse(v)?;
+    }
     if let Some(v) = p.get_parse::<usize>("validator-shards")? {
         cfg.validator_shards = v;
     }
@@ -259,6 +263,9 @@ fn cmd_run(p: &Parsed) -> Result<i32> {
         }
         println!("sharding    : {}", cfg.sharding.name());
         println!("transport   : {}", cfg.transport.name());
+        if cfg.transport == TransportKind::Tcp {
+            println!("io          : {}", cfg.io.name());
+        }
         println!("points      : {}", cfg.n);
         println!("P x b       : {} x {} = {} per epoch", cfg.procs, cfg.block, cfg.points_per_epoch());
         println!("{kind:<12}: {}", out.model.k());

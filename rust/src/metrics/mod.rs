@@ -117,6 +117,16 @@ pub struct EpochRecord {
     /// (the initial per-peer handshake happens before the first epoch and
     /// is reported in [`RunSummary::transport`]).
     pub handshake_time: Duration,
+    /// Times the event loop's blocking wait returned during this epoch:
+    /// reactor wait returns under `io = "reactor"`, sleep slices under
+    /// `io = "poll"`. The reactor's whole point is that this number
+    /// tracks actual events, not elapsed time ÷ sleep quantum — the
+    /// equivalence suite asserts it strictly shrinks. Zero in-proc.
+    pub reactor_wakeups: u64,
+    /// Successful vectored (`writev`) flushes on the TCP hot path this
+    /// epoch. Each batch replaces what used to be several per-frame
+    /// `write_all` syscalls. Zero in-proc.
+    pub writev_batches: u64,
 }
 
 impl EpochRecord {
@@ -149,6 +159,8 @@ impl EpochRecord {
             ("gather_wait_ms", Json::Num(self.gather_wait_time.as_secs_f64() * 1e3)),
             ("dataset_bytes", Json::Num(self.dataset_bytes as f64)),
             ("handshake_ms", Json::Num(self.handshake_time.as_secs_f64() * 1e3)),
+            ("reactor_wakeups", Json::Num(self.reactor_wakeups as f64)),
+            ("writev_batches", Json::Num(self.writev_batches as f64)),
         ])
     }
 }
@@ -265,6 +277,15 @@ impl RunSummary {
     pub fn total_gather_wait(&self) -> Duration {
         self.epochs.iter().map(|e| e.gather_wait_time).sum()
     }
+    /// Total event-loop wait returns across epochs (reactor wakeups or
+    /// poll-mode sleep slices; zero in-proc).
+    pub fn total_reactor_wakeups(&self) -> u64 {
+        self.epochs.iter().map(|e| e.reactor_wakeups).sum()
+    }
+    /// Total vectored write batches across epochs (zero in-proc).
+    pub fn total_writev_batches(&self) -> u64 {
+        self.epochs.iter().map(|e| e.writev_batches).sum()
+    }
 }
 
 /// Where metrics lines go.
@@ -365,6 +386,8 @@ mod tests {
             gather_wait_time: Duration::from_micros(40),
             dataset_bytes: 32,
             handshake_time: Duration::from_micros(100),
+            reactor_wakeups: 3,
+            writev_batches: 2,
         }
     }
 
@@ -397,6 +420,8 @@ mod tests {
         assert_eq!(s.total_ser_time(), Duration::from_micros(750));
         assert_eq!(s.total_gather_wait(), Duration::from_micros(120));
         assert_eq!(s.total_dataset_bytes(), 3 * 32);
+        assert_eq!(s.total_reactor_wakeups(), 9);
+        assert_eq!(s.total_writev_batches(), 6);
     }
 
     #[test]
@@ -423,6 +448,8 @@ mod tests {
         assert!(j.get("gather_wait_ms").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("dataset_bytes").unwrap().as_usize(), Some(32));
         assert!(j.get("handshake_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("reactor_wakeups").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("writev_batches").unwrap().as_usize(), Some(2));
     }
 
     #[test]
