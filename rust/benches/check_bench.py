@@ -30,6 +30,12 @@ five gates:
    blocking points, not a timing) and strictly beat it on p50 per-epoch
    latency. Skipped with a notice on schema-3 artifacts, which predate
    the io column.
+6. Streaming admission latency (schema 5): the ingest experiment's
+   io=reactor row must strictly beat its io=poll twin on the
+   admission->uptake p50 (admission_p50_ms) — the seal-to-scheduler
+   wakeup path that `occd serve` rides. Relative within one run, like
+   gate 5, so it carries no recorded baseline number. Skipped with a
+   notice on schema-4 artifacts, which predate the ingest experiment.
 """
 
 import json
@@ -174,6 +180,30 @@ def main() -> int:
             failures += 1
     else:
         print("io gate: skipped (schema < 4 artifact has no io column)")
+
+    # Gate 6: the streaming ingest experiment — the reactor's cross-thread
+    # seal wakeup must strictly beat the poll plane's idle-slice sleep on
+    # the admission->uptake p50. Relative within one run (both twins ran
+    # on the same machine seconds apart), so no recorded baseline number.
+    if bench.get("schema", 0) >= 5:
+        ing_reactor = row("dpmeans", "tcp", "pipelined", True, speculation=2,
+                          io="reactor", experiment="ingest")
+        ing_poll = row("dpmeans", "tcp", "pipelined", True, speculation=2,
+                       io="poll", experiment="ingest")
+        ra50, pa50 = ing_reactor["admission_p50_ms"], ing_poll["admission_p50_ms"]
+        print(
+            f"ingest gate: reactor admission p50={ra50:.3f} ms vs "
+            f"poll admission p50={pa50:.3f} ms"
+        )
+        if ra50 >= pa50:
+            print(
+                f"reactor admission->uptake p50 must strictly beat poll "
+                f"({ra50:.3f} ms vs {pa50:.3f} ms)",
+                file=sys.stderr,
+            )
+            failures += 1
+    else:
+        print("ingest gate: skipped (schema < 5 artifact has no ingest experiment)")
 
     if failures:
         return 1

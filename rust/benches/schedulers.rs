@@ -44,6 +44,15 @@
 //! strictly fewer times *and* strictly beats poll on p50 epoch latency
 //! (gate 5 in `check_bench.py` holds the line across PRs).
 //!
+//! Schema 5 adds a **streaming ingest experiment** (`experiment =
+//! "ingest"`): a paced producer feeds mini-epochs through a `LiveSource`
+//! into `run_streaming` — the `occd serve` admission path minus the TCP
+//! gateway — measuring the admission→uptake wait under `io = "reactor"`
+//! vs `io = "poll"` (`admission_p50_ms` / `admission_p95_ms` columns).
+//! The reactor's cross-thread wakeup must strictly beat the poll plane's
+//! idle-slice sleep on p50 (gate 6 in `check_bench.py`), with the
+//! streamed twins bit-identical.
+//!
 //! Defaults keep single-machine runtime in seconds; pass `--n=…`, `--pb=…`,
 //! `--procs=…`, `--reps=…` to scale up.
 
@@ -531,10 +540,176 @@ fn main() {
         lat_table.print();
     }
 
+    // --- Streaming ingest latency: admission → uptake per io plane -------
+    // The schema-5 experiment drives `run_streaming` directly: a paced
+    // producer seals one mini-epoch at a time into a `LiveSource` — the
+    // same publish-dataset-then-announce-then-wake path `occd serve` uses,
+    // minus the TCP gateway — and spins until the engine takes it before
+    // sealing the next. `admission_wait` is therefore a pure wakeup-path
+    // measurement (sealed → the scheduler's `poll_epoch` uptake), not a
+    // queueing artifact. The reactor's cross-thread wakeup must strictly
+    // beat the poll plane's idle-slice sleep on p50 (gate 6 in
+    // `check_bench.py`), and the twins must stay bit-identical.
+    {
+        use occml::coordinator::serve::{LiveSource, SealedBatch, WakerSlot};
+        use occml::data::{DataCell, Dataset};
+        use occml::linalg::Matrix;
+        use occml::metrics::MetricsSink;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::time::Instant;
+
+        let ing_n: usize = args.get_or("ing_n", 2048).min(n);
+        let ing_batch: usize = 64;
+        let ing_base = RunConfig {
+            algo: Algo::DpMeans,
+            lambda: 2.0,
+            procs,
+            block: 32,
+            iterations: 1,
+            bootstrap_div: 0,
+            seed: 12,
+            dim: 16,
+            transport: TransportKind::Tcp,
+            scheduler: SchedulerKind::Pipelined,
+            speculation: 2,
+            ..RunConfig::default()
+        };
+        // One shared point pool; every run streams the identical batches.
+        let gen_cfg =
+            RunConfig { n: ing_n, source: DataSource::DpClusters, ..ing_base.clone() };
+        let pool = Arc::new(driver::load_or_generate(&gen_cfg).expect("generate"));
+        let mut ing_table =
+            Table::new(&["io", "wall", "adm_p50", "adm_p95", "wakeups", "identical"]);
+        let mut ing_twins: Vec<(IoKind, driver::RunOutput)> = Vec::new();
+        for io in [IoKind::Reactor, IoKind::Poll] {
+            let cfg = RunConfig { io, ..ing_base.clone() };
+            let mut best: Option<driver::RunOutput> = None;
+            for _ in 0..reps {
+                let cell = Arc::new(DataCell::new(Arc::new(Dataset {
+                    points: Matrix::zeros(0, pool.dim()),
+                    labels: None,
+                })));
+                let (tx, rx) = std::sync::mpsc::channel();
+                let depth = Arc::new(AtomicUsize::new(0));
+                let waker = Arc::new(WakerSlot::new());
+                let mut source = LiveSource::new(rx, depth.clone());
+                let producer = {
+                    let (cell, depth, waker, pool) =
+                        (cell.clone(), depth.clone(), waker.clone(), pool.clone());
+                    std::thread::spawn(move || {
+                        let d = pool.dim();
+                        let mut lo = 0;
+                        while lo < pool.len() {
+                            let hi = (lo + ing_batch).min(pool.len());
+                            // Grown generation published BEFORE the epoch
+                            // is announced — the serve admission protocol.
+                            cell.set(Arc::new(Dataset {
+                                points: Matrix {
+                                    rows: hi,
+                                    cols: d,
+                                    data: pool.points.data[..hi * d].to_vec(),
+                                },
+                                labels: None,
+                            }));
+                            let qd = depth.fetch_add(1, Ordering::SeqCst) + 1;
+                            if tx
+                                .send(SealedBatch {
+                                    span: lo..hi,
+                                    sealed_at: Instant::now(),
+                                    queue_depth: qd,
+                                })
+                                .is_err()
+                            {
+                                return;
+                            }
+                            waker.wake();
+                            // Paced: wait for uptake so the recorded wait
+                            // isolates the wakeup path, not queue depth.
+                            while depth.load(Ordering::SeqCst) > 0 {
+                                std::thread::yield_now();
+                            }
+                            lo = hi;
+                        }
+                        // `tx` drops here → the source ends → the engine
+                        // drains and finalizes.
+                    })
+                };
+                let mut sink = MetricsSink::Null;
+                let out = driver::run_streaming(&cfg, cell, &mut source, &mut sink, |w| {
+                    waker.set(w)
+                })
+                .expect("streaming bench run");
+                producer.join().expect("producer thread");
+                let better = match &best {
+                    None => true,
+                    Some(b) => {
+                        out.summary.admission_wait_p50() < b.summary.admission_wait_p50()
+                    }
+                };
+                if better {
+                    best = Some(out);
+                }
+            }
+            ing_twins.push((io, best.expect("at least one rep")));
+        }
+        let identical = models_identical(&ing_twins[0].1.model, &ing_twins[1].1.model);
+        if !identical {
+            failures.push(
+                "ingest: io=reactor and io=poll streamed models diverged — the admitted \
+                 order no longer determines the model"
+                    .into(),
+            );
+        }
+        let ms = |d: Option<Duration>| d.map(|d| d.as_secs_f64() * 1e3).unwrap_or(0.0);
+        let (r50, p50) = (
+            ms(ing_twins[0].1.summary.admission_wait_p50()),
+            ms(ing_twins[1].1.summary.admission_wait_p50()),
+        );
+        if r50 >= p50 {
+            failures.push(format!(
+                "io=reactor admission→uptake p50 must strictly beat io=poll \
+                 ({r50:.3} ms vs {p50:.3} ms)"
+            ));
+        }
+        println!(
+            "\n=== streaming ingest latency: io=reactor vs io=poll (dpmeans tcp \
+             pipelined/2, N={ing_n}, batch={ing_batch}) — best of {reps} ==="
+        );
+        for (io, out) in &ing_twins {
+            let s = &out.summary;
+            let (a50, a95) = (ms(s.admission_wait_p50()), ms(s.admission_wait_p95()));
+            ing_table.row(vec![
+                io.name().to_string(),
+                fmt_duration(s.total_time),
+                format!("{a50:.3} ms"),
+                format!("{a95:.3} ms"),
+                s.transport.reactor_wakeups.to_string(),
+                identical.to_string(),
+            ]);
+            rows.push(obj(vec![
+                ("experiment", Json::Str("ingest".to_string())),
+                ("algo", Json::Str("dpmeans".to_string())),
+                ("scheduler", Json::Str(SchedulerKind::Pipelined.name().to_string())),
+                ("speculation", Json::Num(2.0)),
+                ("sharding", Json::Str(ShardingKind::Hash.name().to_string())),
+                ("transport", Json::Str(TransportKind::Tcp.name().to_string())),
+                ("io", Json::Str(io.name().to_string())),
+                ("frugal_wire", Json::Bool(true)),
+                ("wall_ms", Json::Num(s.total_time.as_secs_f64() * 1e3)),
+                ("epochs", Json::Num(s.epochs.len() as f64)),
+                ("admission_p50_ms", Json::Num(a50)),
+                ("admission_p95_ms", Json::Num(a95)),
+                ("max_ingest_queue_depth", Json::Num(s.max_ingest_queue_depth() as f64)),
+                ("reactor_wakeups", Json::Num(s.transport.reactor_wakeups as f64)),
+            ]));
+        }
+        ing_table.print();
+    }
+
     // Machine-readable results for cross-PR perf tracking (schema in the
     // README; consumed by CI's bench-smoke regression gate).
     let doc = obj(vec![
-        ("schema", Json::Num(4.0)),
+        ("schema", Json::Num(5.0)),
         ("bench", Json::Str("schedulers".to_string())),
         (
             "params",

@@ -382,6 +382,19 @@ pub struct RunConfig {
     pub theta: f64,
     /// Where to write JSONL metrics (stdout if `None`).
     pub metrics_path: Option<PathBuf>,
+    /// Streaming ingest (`occd serve`): points per mini-epoch before the
+    /// admission stage seals a batch. `0` (the default) means "one epoch's
+    /// worth" — `P·b`, so a saturated firehose reproduces the static epoch
+    /// geometry exactly. See [`RunConfig::effective_batch_points`].
+    pub batch_points: usize,
+    /// Streaming ingest: latency SLA in milliseconds — a non-full pending
+    /// batch is sealed once its oldest point has waited this long, so a
+    /// trickling client still sees bounded admission→commit latency.
+    pub batch_latency_ms: u64,
+    /// Streaming ingest: bound on sealed-but-unconsumed mini-epochs. When
+    /// the admission queue is this deep, further ingest chunks are refused
+    /// with a typed `Throttled` ack until the wave engine catches up.
+    pub ingest_queue: usize,
 }
 
 impl Default for RunConfig {
@@ -413,7 +426,27 @@ impl Default for RunConfig {
             dim: 16,
             theta: 1.0,
             metrics_path: None,
+            batch_points: env_usize("OCCML_BATCH_POINTS", 0),
+            batch_latency_ms: env_usize("OCCML_BATCH_LATENCY_MS", 50) as u64,
+            ingest_queue: env_usize("OCCML_INGEST_QUEUE", 64),
         }
+    }
+}
+
+/// Environment-overridable numeric default (the `OCCML_TRANSPORT` pattern
+/// for the streaming knobs: CI sweeps them without touching configs). An
+/// invalid value panics rather than falling back — the var exists to force
+/// a setting under test.
+fn env_usize(name: &str, default: usize) -> usize {
+    match std::env::var(name) {
+        Ok(s) => s
+            .trim()
+            .parse::<usize>()
+            .unwrap_or_else(|_| panic!("{name}: cannot parse `{s}` as an integer")),
+        Err(std::env::VarError::NotUnicode(v)) => {
+            panic!("{name} is set but not valid unicode: {v:?}")
+        }
+        Err(std::env::VarError::NotPresent) => default,
     }
 }
 
@@ -500,6 +533,18 @@ impl RunConfig {
         }
         if let Some(s) = doc.get_str("run.metrics") {
             cfg.metrics_path = Some(PathBuf::from(s));
+        }
+        if let Some(v) = doc.get_int("run.batch_points") {
+            cfg.batch_points = usize::try_from(v)
+                .map_err(|_| Error::config("run.batch_points must be ≥ 0"))?;
+        }
+        if let Some(v) = doc.get_int("run.batch_latency_ms") {
+            cfg.batch_latency_ms = u64::try_from(v)
+                .map_err(|_| Error::config("run.batch_latency_ms must be ≥ 0"))?;
+        }
+        if let Some(v) = doc.get_int("run.ingest_queue") {
+            cfg.ingest_queue = usize::try_from(v)
+                .map_err(|_| Error::config("run.ingest_queue must be ≥ 1"))?;
         }
         if let Some(s) = doc.get_str("data.source") {
             cfg.source = DataSource::parse(s)?;
@@ -606,12 +651,40 @@ impl RunConfig {
                 self.reconnect_attempts
             )));
         }
+        if self.ingest_queue == 0 || self.ingest_queue > 1 << 20 {
+            return Err(Error::config(format!(
+                "ingest_queue out of range (1 ..= 2^20): {}",
+                self.ingest_queue
+            )));
+        }
+        if self.batch_latency_ms > 600_000 {
+            return Err(Error::config(format!(
+                "batch_latency_ms out of range (≤ 600000): {}",
+                self.batch_latency_ms
+            )));
+        }
         Ok(())
     }
 
     /// Points per epoch, `P·b`.
     pub fn points_per_epoch(&self) -> usize {
         self.procs * self.block
+    }
+
+    /// Mini-epoch size the admission stage seals at: the explicit
+    /// `batch_points` knob, or one static epoch's worth (`P·b`) when it is
+    /// left at `0`.
+    pub fn effective_batch_points(&self) -> usize {
+        if self.batch_points == 0 {
+            self.points_per_epoch()
+        } else {
+            self.batch_points
+        }
+    }
+
+    /// The admission latency SLA as a [`std::time::Duration`].
+    pub fn batch_latency(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.batch_latency_ms)
     }
 
     /// Resolved speculation policy: [`SpeculationSpec::Auto`] when
@@ -894,6 +967,34 @@ mod tests {
         .unwrap();
         assert_eq!(RunConfig::from_doc(&doc).unwrap().peers, vec!["a:1", "b:2"]);
         assert_eq!(split_peer_list(" a:1, ,b:2 ,"), vec!["a:1", "b:2"]);
+    }
+
+    #[test]
+    fn streaming_knobs_extract_and_validate() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.batch_points, 0, "0 = one epoch's worth");
+        assert_eq!(cfg.effective_batch_points(), cfg.points_per_epoch());
+        assert_eq!(cfg.batch_latency_ms, 50);
+        assert_eq!(cfg.batch_latency(), std::time::Duration::from_millis(50));
+        assert_eq!(cfg.ingest_queue, 64);
+
+        let doc = toml::parse(
+            "[run]\nbatch_points = 128\nbatch_latency_ms = 5\ningest_queue = 4\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.batch_points, 128);
+        assert_eq!(cfg.effective_batch_points(), 128);
+        assert_eq!(cfg.batch_latency_ms, 5);
+        assert_eq!(cfg.ingest_queue, 4);
+
+        // A zero-deep admission queue cannot admit anything.
+        assert!(RunConfig::from_doc(&toml::parse("[run]\ningest_queue = 0\n").unwrap()).is_err());
+        // Absurd SLA values are configuration mistakes, not policies.
+        assert!(RunConfig::from_doc(
+            &toml::parse("[run]\nbatch_latency_ms = 700000\n").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

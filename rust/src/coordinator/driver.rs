@@ -21,8 +21,10 @@
 //! identical across schedulers (`rust/tests/scheduler_equivalence.rs`).
 
 use super::engine::{split_range_chunked, Job, JobOutput};
-use super::scheduler::{self, EpochAlgo, EpochCounts, JobSpec, Kernel, PackSpec, Scheduler};
-use super::transport::{Cluster, Topology, ValidatePlane};
+use super::scheduler::{
+    self, EpochAlgo, EpochCounts, EpochSource, JobSpec, Kernel, PackSpec, Scheduler,
+};
+use super::transport::{Cluster, PlaneWaker, Topology, ValidatePlane};
 use super::validator::{
     bp_validate, dp_validate_clustered, ofl_validate_clustered, BpProposal, DpProposal,
     OflProposal,
@@ -32,7 +34,7 @@ use crate::algorithms::dpmeans::DpModel;
 use crate::algorithms::objective;
 use crate::algorithms::ofl::{ofl_draws, OflModel};
 use crate::config::{Algo, BackendKind, DataSource, RunConfig, ShardingKind};
-use crate::data::{generators, Dataset};
+use crate::data::{generators, DataCell, Dataset};
 use crate::error::{Error, Result};
 use crate::linalg::{blocked, cholesky, Matrix};
 use crate::metrics::{EpochRecord, MetricsSink, RunSummary, Stopwatch};
@@ -199,6 +201,149 @@ fn patch_nearest(
     Ok(())
 }
 
+/// Phase 2 (DP-means / OFL state shape): recompute `centers` as the means
+/// of their assigned points via parallel suffstats, and log the recompute
+/// pseudo-epoch (`epoch = usize::MAX`). Shared by the static per-pass loop
+/// and the streaming post-drain recompute.
+#[allow(clippy::too_many_arguments)]
+fn dp_recompute(
+    cluster: &mut Cluster,
+    procs: usize,
+    n: usize,
+    pass: usize,
+    assignments: &[u32],
+    centers: &mut Matrix,
+    sink: &mut MetricsSink,
+    epochs_log: &mut Vec<EpochRecord>,
+) -> Result<()> {
+    let net0 = cluster.stats();
+    let recompute_sw = Stopwatch::start();
+    let k = centers.rows;
+    let d = centers.cols;
+    if k == 0 {
+        return Ok(());
+    }
+    let shared = Arc::new(assignments.to_vec());
+    let jobs: Vec<Job> = split_range_chunked(0..n, procs)
+        .into_iter()
+        .map(|range| Job::SuffStats { range, assignments: shared.clone(), k })
+        .collect();
+    let (outs, worker_time) = cluster.scatter_gather(jobs)?;
+    // Deterministic reduce: combine per-chunk partials in global chunk
+    // order, independent of the worker count.
+    let mut all_chunks = Vec::new();
+    for out in outs {
+        let JobOutput::SuffStats { chunks } = out else {
+            return Err(Error::Coordinator("unexpected job output".into()));
+        };
+        all_chunks.extend(chunks);
+    }
+    all_chunks.sort_by_key(|(id, _, _)| *id);
+    let mut sums = Matrix::zeros(k, d);
+    let mut counts = vec![0u64; k];
+    for (_, s, c) in &all_chunks {
+        for kk in 0..k {
+            counts[kk] += c[kk];
+            crate::linalg::axpy(1.0, s.row(kk), sums.row_mut(kk));
+        }
+    }
+    blocked::finalize_means(&sums, &counts, centers);
+    let net = cluster.stats().since(&net0);
+    let rec = EpochRecord {
+        iteration: pass,
+        epoch: usize::MAX, // convention: the recompute "epoch"
+        points: n,
+        centers: k,
+        worker_time,
+        total_time: recompute_sw.elapsed(),
+        wire_bytes: net.wire_bytes,
+        unique_payload_bytes: net.unique_payload_bytes,
+        delta_bytes: net.delta_bytes,
+        full_snapshot_fallbacks: net.full_snapshot_fallbacks,
+        ser_time: net.ser_time,
+        gather_wait_time: net.gather_wait_time,
+        dataset_bytes: net.dataset_bytes,
+        handshake_time: net.handshake_time,
+        reactor_wakeups: net.reactor_wakeups,
+        writev_batches: net.writev_batches,
+        ..Default::default()
+    };
+    sink.emit(&rec);
+    epochs_log.push(rec);
+    Ok(())
+}
+
+/// Phase 2 (BP-means): `F ← (ZᵀZ + εI)⁻¹ ZᵀX` via parallel partials, and
+/// log the recompute pseudo-epoch. Shared like [`dp_recompute`].
+#[allow(clippy::too_many_arguments)]
+fn bp_recompute(
+    cluster: &mut Cluster,
+    procs: usize,
+    n: usize,
+    pass: usize,
+    assignments: &[Vec<bool>],
+    features: &mut Matrix,
+    sink: &mut MetricsSink,
+    epochs_log: &mut Vec<EpochRecord>,
+) -> Result<()> {
+    let net0 = cluster.stats();
+    let recompute_sw = Stopwatch::start();
+    let k = features.rows;
+    let d = features.cols;
+    if k == 0 {
+        return Ok(());
+    }
+    let shared = Arc::new(assignments.to_vec());
+    let jobs: Vec<Job> = split_range_chunked(0..n, procs)
+        .into_iter()
+        .map(|range| Job::BpStats { range, z: shared.clone(), k })
+        .collect();
+    let (outs, worker_time) = cluster.scatter_gather(jobs)?;
+    // Deterministic reduce in global chunk order (see SuffStats).
+    let mut all_chunks = Vec::new();
+    for out in outs {
+        let JobOutput::BpStats { chunks } = out else {
+            return Err(Error::Coordinator("unexpected job output".into()));
+        };
+        all_chunks.extend(chunks);
+    }
+    all_chunks.sort_by_key(|(id, _, _)| *id);
+    let mut ztz = Matrix::zeros(k, k);
+    let mut ztx = Matrix::zeros(k, d);
+    for (_, a, b) in &all_chunks {
+        for i in 0..k * k {
+            ztz.data[i] += a.data[i];
+        }
+        for i in 0..k * d {
+            ztx.data[i] += b.data[i];
+        }
+    }
+    *features = cholesky::solve_ridge(&ztz, &ztx, RIDGE_EPS)?;
+    let net = cluster.stats().since(&net0);
+    let rec = EpochRecord {
+        iteration: pass,
+        epoch: usize::MAX,
+        points: n,
+        centers: k,
+        worker_time,
+        total_time: recompute_sw.elapsed(),
+        wire_bytes: net.wire_bytes,
+        unique_payload_bytes: net.unique_payload_bytes,
+        delta_bytes: net.delta_bytes,
+        full_snapshot_fallbacks: net.full_snapshot_fallbacks,
+        ser_time: net.ser_time,
+        gather_wait_time: net.gather_wait_time,
+        dataset_bytes: net.dataset_bytes,
+        handshake_time: net.handshake_time,
+        reactor_wakeups: net.reactor_wakeups,
+        writev_batches: net.writev_batches,
+        ..Default::default()
+    };
+    sink.emit(&rec);
+    epochs_log.push(rec);
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // OCC DP-means (Alg 3)
 // ---------------------------------------------------------------------------
@@ -208,10 +353,10 @@ fn patch_nearest(
 /// the wave engine's dedicated validation thread for the pass.
 struct DpPass<'a> {
     vplane: &'a mut ValidatePlane,
-    data: &'a Arc<Dataset>,
+    data: &'a DataCell,
     backend: &'a Arc<dyn ComputeBackend>,
     centers: &'a mut Matrix,
-    assignments: &'a mut [u32],
+    assignments: &'a mut Vec<u32>,
     lambda2: f32,
     shards: usize,
     sharding: ShardingKind,
@@ -221,10 +366,20 @@ struct DpPass<'a> {
 
 /// The packing half of a pass's [`JobSpec`]: conflict packing needs the
 /// dataset to key points against the scatter-time snapshot.
-fn pack_spec(sharding: ShardingKind, data: &Arc<Dataset>) -> PackSpec {
+fn pack_spec(sharding: ShardingKind, data: &DataCell) -> PackSpec {
     match sharding {
         ShardingKind::Hash => PackSpec::Hash,
-        ShardingKind::Conflict => PackSpec::Conflict { data: data.clone() },
+        ShardingKind::Conflict => PackSpec::Conflict { data: data.get() },
+    }
+}
+
+/// Grow a per-point vector to cover every index `ranges` touches — a
+/// no-op for static runs (sized up front), the growth step for live
+/// sources whose dataset extends between epochs.
+fn ensure_len<T: Clone>(v: &mut Vec<T>, ranges: &[Range<usize>], fill: T) {
+    let needed = ranges.iter().map(|r| r.end).max().unwrap_or(0);
+    if v.len() < needed {
+        v.resize(needed, fill);
     }
 }
 
@@ -251,10 +406,13 @@ impl EpochAlgo for DpPass<'_> {
         ranges: &[Range<usize>],
         stale_rows: usize,
     ) -> Result<()> {
-        patch_nearest(self.data, self.backend, self.centers, stale_rows, outs, ranges)
+        let data = self.data.get();
+        patch_nearest(&data, self.backend, self.centers, stale_rows, outs, ranges)
     }
 
     fn validate(&mut self, outs: &[JobOutput], ranges: &[Range<usize>]) -> Result<EpochCounts> {
+        let data = self.data.get();
+        ensure_len(self.assignments, ranges, u32::MAX);
         let base = self.centers.rows;
         // Merge results by index; collect proposals (with their conflict
         // key: the proposing point's nearest committed center) in index
@@ -267,7 +425,7 @@ impl EpochAlgo for DpPass<'_> {
             for (off, i) in ranges[w].clone().enumerate() {
                 if d2[off] > self.lambda2 {
                     pairs.push((
-                        DpProposal { idx: i as u32, center: self.data.point(i).to_vec() },
+                        DpProposal { idx: i as u32, center: data.point(i).to_vec() },
                         idx[off],
                     ));
                 } else if self.assignments[i] != idx[off] {
@@ -318,9 +476,10 @@ pub fn run_dpmeans(
     let n = data.len();
     let d = data.dim();
     let lambda2 = (cfg.lambda * cfg.lambda) as f32;
-    let mut cluster = Cluster::spawn_topology(
+    let cell = Arc::new(DataCell::new(data.clone()));
+    let mut cluster = Cluster::spawn_topology_cell(
         cfg.transport,
-        data.clone(),
+        cell.clone(),
         backend.clone(),
         &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
@@ -362,7 +521,7 @@ pub fn run_dpmeans(
         let shards = cfg.procs.max(cluster.validators);
         let mut st = DpPass {
             vplane: &mut cluster.validate,
-            data: &data,
+            data: &cell,
             backend: &backend,
             centers: &mut centers,
             assignments: &mut assignments,
@@ -376,59 +535,7 @@ pub fn run_dpmeans(
         let changed = st.changed;
         created_per_pass.push(st.created);
 
-        // Phase 2: recompute centers as means (parallel suffstats).
-        let net0 = cluster.stats();
-        let recompute_sw = Stopwatch::start();
-        let k = centers.rows;
-        if k > 0 {
-            let shared = Arc::new(assignments.clone());
-            let jobs: Vec<Job> = split_range_chunked(0..n, cfg.procs)
-                .into_iter()
-                .map(|range| Job::SuffStats { range, assignments: shared.clone(), k })
-                .collect();
-            let (outs, worker_time) = cluster.scatter_gather(jobs)?;
-            // Deterministic reduce: combine per-chunk partials in global
-            // chunk order, independent of the worker count.
-            let mut all_chunks = Vec::new();
-            for out in outs {
-                let JobOutput::SuffStats { chunks } = out else {
-                    return Err(Error::Coordinator("unexpected job output".into()));
-                };
-                all_chunks.extend(chunks);
-            }
-            all_chunks.sort_by_key(|(id, _, _)| *id);
-            let mut sums = Matrix::zeros(k, d);
-            let mut counts = vec![0u64; k];
-            for (_, s, c) in &all_chunks {
-                for kk in 0..k {
-                    counts[kk] += c[kk];
-                    crate::linalg::axpy(1.0, s.row(kk), sums.row_mut(kk));
-                }
-            }
-            blocked::finalize_means(&sums, &counts, &mut centers);
-            let net = cluster.stats().since(&net0);
-            let rec = EpochRecord {
-                iteration: pass,
-                epoch: usize::MAX, // convention: the recompute "epoch"
-                points: n,
-                centers: k,
-                worker_time,
-                total_time: recompute_sw.elapsed(),
-                wire_bytes: net.wire_bytes,
-                unique_payload_bytes: net.unique_payload_bytes,
-                delta_bytes: net.delta_bytes,
-                full_snapshot_fallbacks: net.full_snapshot_fallbacks,
-                ser_time: net.ser_time,
-                gather_wait_time: net.gather_wait_time,
-                dataset_bytes: net.dataset_bytes,
-                handshake_time: net.handshake_time,
-                reactor_wakeups: net.reactor_wakeups,
-                writev_batches: net.writev_batches,
-                ..Default::default()
-            };
-            sink.emit(&rec);
-            epochs_log.push(rec);
-        }
+        dp_recompute(&mut cluster, cfg.procs, n, pass, &assignments, &mut centers, sink, &mut epochs_log)?;
 
         if !changed {
             converged = true;
@@ -460,12 +567,17 @@ pub fn run_dpmeans(
 /// The OFL single pass's mutable state, driven by a scheduler.
 struct OflPass<'a> {
     vplane: &'a mut ValidatePlane,
-    data: &'a Arc<Dataset>,
+    data: &'a DataCell,
     backend: &'a Arc<dyn ComputeBackend>,
     centers: &'a mut Matrix,
-    assignments: &'a mut [u32],
+    assignments: &'a mut Vec<u32>,
     opened_by: &'a mut Vec<u32>,
-    draws: &'a [f64],
+    /// Per-point uniform draws, shared with the serial algorithm. Grown on
+    /// demand under a live source: [`ofl_draws`] is prefix-stable (one
+    /// fixed PCG stream), so extending the vector never changes the draws
+    /// earlier points already consumed.
+    draws: &'a mut Vec<f64>,
+    seed: u64,
     lambda2: f64,
     shards: usize,
     sharding: ShardingKind,
@@ -494,10 +606,20 @@ impl EpochAlgo for OflPass<'_> {
         ranges: &[Range<usize>],
         stale_rows: usize,
     ) -> Result<()> {
-        patch_nearest(self.data, self.backend, self.centers, stale_rows, outs, ranges)
+        let data = self.data.get();
+        patch_nearest(&data, self.backend, self.centers, stale_rows, outs, ranges)
     }
 
     fn validate(&mut self, outs: &[JobOutput], ranges: &[Range<usize>]) -> Result<EpochCounts> {
+        let data = self.data.get();
+        ensure_len(self.assignments, ranges, u32::MAX);
+        let needed = ranges.iter().map(|r| r.end).max().unwrap_or(0);
+        if self.draws.len() < needed {
+            // Prefix-stable regeneration: the first `len` draws come out
+            // bit-identical, so streamed points see the exact draws a
+            // static run over the final dataset would give them.
+            *self.draws = ofl_draws(needed, self.seed);
+        }
         let base = self.centers.rows;
         let mut pairs: Vec<(OflProposal, u32)> = Vec::new();
         for (w, out) in outs.iter().enumerate() {
@@ -515,7 +637,7 @@ impl EpochAlgo for OflPass<'_> {
                     pairs.push((
                         OflProposal {
                             idx: i as u32,
-                            center: self.data.point(i).to_vec(),
+                            center: data.point(i).to_vec(),
                             d2_prev,
                             idx_prev: idx[off],
                         },
@@ -529,7 +651,7 @@ impl EpochAlgo for OflPass<'_> {
         pairs.sort_by_key(|(p, _)| p.idx);
         let (proposals, keys): (Vec<OflProposal>, Vec<u32>) = pairs.into_iter().unzip();
 
-        let draws = self.draws;
+        let draws: &[f64] = self.draws;
         let outcome = ofl_validate_clustered(
             self.vplane,
             self.centers,
@@ -567,16 +689,17 @@ pub fn run_ofl(
     let n = data.len();
     let d = data.dim();
     let lambda2 = cfg.lambda * cfg.lambda;
-    let mut cluster = Cluster::spawn_topology(
+    let cell = Arc::new(DataCell::new(data.clone()));
+    let mut cluster = Cluster::spawn_topology_cell(
         cfg.transport,
-        data.clone(),
+        cell.clone(),
         backend.clone(),
         &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
     let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io);
     let total = Stopwatch::start();
 
-    let draws = ofl_draws(n, cfg.seed);
+    let mut draws = ofl_draws(n, cfg.seed);
     let mut centers = Matrix::zeros(0, d);
     let mut assignments = vec![u32::MAX; n];
     let mut opened_by = Vec::new();
@@ -587,12 +710,13 @@ pub fn run_ofl(
     let shards = cfg.procs.max(cluster.validators);
     let mut st = OflPass {
         vplane: &mut cluster.validate,
-        data: &data,
+        data: &cell,
         backend: &backend,
         centers: &mut centers,
         assignments: &mut assignments,
         opened_by: &mut opened_by,
-        draws: &draws,
+        draws: &mut draws,
+        seed: cfg.seed,
         lambda2,
         shards,
         sharding: cfg.sharding,
@@ -629,7 +753,7 @@ fn z_eq(a: &[bool], b: &[bool]) -> bool {
 /// reduction of per-feature terms, so the pipelined scheduler redoes the
 /// epoch when speculation conflicts with newly-accepted features.
 struct BpPass<'a> {
-    data: &'a Arc<Dataset>,
+    data: &'a DataCell,
     features: &'a mut Matrix,
     assignments: &'a mut Vec<Vec<bool>>,
     lambda2: f32,
@@ -669,6 +793,7 @@ impl EpochAlgo for BpPass<'_> {
     }
 
     fn validate(&mut self, outs: &[JobOutput], ranges: &[Range<usize>]) -> Result<EpochCounts> {
+        ensure_len(self.assignments, ranges, Vec::new());
         let base = self.features.rows;
         let d = self.features.cols;
         let mut proposals = Vec::new();
@@ -736,9 +861,10 @@ pub fn run_bpmeans(
     // would never receive a job: one placeholder peer keeps the Cluster
     // invariants without the thread/socket cost (extra validator_peers
     // addresses are dropped by the topology).
-    let mut cluster = Cluster::spawn_topology(
+    let cell = Arc::new(DataCell::new(data.clone()));
+    let mut cluster = Cluster::spawn_topology_cell(
         cfg.transport,
-        data.clone(),
+        cell.clone(),
         backend.clone(),
         &Topology::of_config(cfg, 1),
     )?;
@@ -789,7 +915,7 @@ pub fn run_bpmeans(
 
         let epochs = epoch_ranges(start, n, cfg.points_per_epoch());
         let mut st = BpPass {
-            data: &data,
+            data: &cell,
             features: &mut features,
             assignments: &mut assignments,
             lambda2,
@@ -803,59 +929,16 @@ pub fn run_bpmeans(
         created_per_pass.push(st.created);
 
         // Phase 2: F ← (ZᵀZ + εI)⁻¹ ZᵀX via parallel partials.
-        let net0 = cluster.stats();
-        let recompute_sw = Stopwatch::start();
-        let k = features.rows;
-        if k > 0 {
-            let shared = Arc::new(assignments.clone());
-            let jobs: Vec<Job> = split_range_chunked(0..n, cfg.procs)
-                .into_iter()
-                .map(|range| Job::BpStats { range, z: shared.clone(), k })
-                .collect();
-            let (outs, worker_time) = cluster.scatter_gather(jobs)?;
-            // Deterministic reduce in global chunk order (see SuffStats).
-            let mut all_chunks = Vec::new();
-            for out in outs {
-                let JobOutput::BpStats { chunks } = out else {
-                    return Err(Error::Coordinator("unexpected job output".into()));
-                };
-                all_chunks.extend(chunks);
-            }
-            all_chunks.sort_by_key(|(id, _, _)| *id);
-            let mut ztz = Matrix::zeros(k, k);
-            let mut ztx = Matrix::zeros(k, d);
-            for (_, a, b) in &all_chunks {
-                for i in 0..k * k {
-                    ztz.data[i] += a.data[i];
-                }
-                for i in 0..k * d {
-                    ztx.data[i] += b.data[i];
-                }
-            }
-            features = cholesky::solve_ridge(&ztz, &ztx, RIDGE_EPS)?;
-            let net = cluster.stats().since(&net0);
-            let rec = EpochRecord {
-                iteration: pass,
-                epoch: usize::MAX,
-                points: n,
-                centers: k,
-                worker_time,
-                total_time: recompute_sw.elapsed(),
-                wire_bytes: net.wire_bytes,
-                unique_payload_bytes: net.unique_payload_bytes,
-                delta_bytes: net.delta_bytes,
-                full_snapshot_fallbacks: net.full_snapshot_fallbacks,
-                ser_time: net.ser_time,
-                gather_wait_time: net.gather_wait_time,
-                dataset_bytes: net.dataset_bytes,
-                handshake_time: net.handshake_time,
-                reactor_wakeups: net.reactor_wakeups,
-                writev_batches: net.writev_batches,
-                ..Default::default()
-            };
-            sink.emit(&rec);
-            epochs_log.push(rec);
-        }
+        bp_recompute(
+            &mut cluster,
+            cfg.procs,
+            n,
+            pass,
+            &assignments,
+            &mut features,
+            sink,
+            &mut epochs_log,
+        )?;
 
         if !changed {
             converged = true;
@@ -882,6 +965,180 @@ pub fn run_bpmeans(
         transport: cluster.stats(),
     };
     Ok(RunOutput { summary, model: Model::Bp(model) })
+}
+
+// ---------------------------------------------------------------------------
+// Streaming ingest (the `occd serve` engine half)
+// ---------------------------------------------------------------------------
+
+/// Run one streaming pass of the configured algorithm against an
+/// [`EpochSource`] instead of a pre-split static dataset.
+///
+/// The `cell` is the shared dataset generation the transport planes read
+/// from; whoever feeds `source` (the live admission queue, or a
+/// [`scheduler::StaticSource`] replay) must publish each grown generation
+/// into the cell *before* announcing the epoch that reads it. Model state
+/// is growable: `validate` extends assignments (and OFL's per-point draws,
+/// prefix-stably) to cover whatever spans the source admits, so DP-means,
+/// OFL and BP-means run unmodified.
+///
+/// Replaying the same admitted spans over the same final dataset through
+/// this same function yields a bit-identical model — the streamed result
+/// *is* the static result for the admitted order (Thm 3.1 doesn't care
+/// when the points arrived). `rust/tests/serve_stream.rs` holds that
+/// keystone to the bit.
+///
+/// `publish_waker` receives the compute plane's waker (None in poll mode /
+/// in-proc) right after the cluster spawns — the admission side uses it to
+/// pop the engine out of its reactor park the moment a batch seals,
+/// instead of waiting out the idle-poll cap.
+///
+/// Streaming is single-pass with a post-drain recompute phase; DP/BP
+/// models report `iterations = 1, converged = false`. `bootstrap_div`
+/// must be 0: there is no dataset prefix to bootstrap over before the
+/// stream starts.
+pub fn run_streaming(
+    cfg: &RunConfig,
+    cell: Arc<DataCell>,
+    source: &mut dyn EpochSource,
+    sink: &mut MetricsSink,
+    publish_waker: impl FnOnce(Option<Arc<dyn PlaneWaker>>),
+) -> Result<RunOutput> {
+    cfg.validate()?;
+    if cfg.bootstrap_div != 0 {
+        return Err(Error::Config(
+            "streaming runs take bootstrap_div = 0 (no prefix to bootstrap over)".into(),
+        ));
+    }
+    let backend = make_backend(cfg)?;
+    // BP validation has no sharded variant (see `run_bpmeans`).
+    let validators = match cfg.algo {
+        Algo::BpMeans => 1,
+        _ => cfg.effective_validators(),
+    };
+    let mut cluster = Cluster::spawn_topology_cell(
+        cfg.transport,
+        cell.clone(),
+        backend.clone(),
+        &Topology::of_config(cfg, validators),
+    )?;
+    publish_waker(cluster.compute.waker());
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io);
+    let total = Stopwatch::start();
+    let d = cell.get().dim();
+    let mut epochs_log = Vec::new();
+
+    let (model, objective) = match cfg.algo {
+        Algo::DpMeans => {
+            let lambda2 = (cfg.lambda * cfg.lambda) as f32;
+            let mut centers = Matrix::zeros(0, d);
+            let mut assignments: Vec<u32> = Vec::new();
+            let shards = cfg.procs.max(cluster.validators);
+            let mut st = DpPass {
+                vplane: &mut cluster.validate,
+                data: &cell,
+                backend: &backend,
+                centers: &mut centers,
+                assignments: &mut assignments,
+                lambda2,
+                shards,
+                sharding: cfg.sharding,
+                changed: false,
+                created: 0,
+            };
+            sched.run_source(&mut cluster.compute, &mut st, source, 0, sink, &mut epochs_log)?;
+            let created = st.created;
+            drop(st);
+            let data = cell.get();
+            let n = data.len();
+            assignments.resize(n, u32::MAX);
+            dp_recompute(&mut cluster, cfg.procs, n, 0, &assignments, &mut centers, sink, &mut epochs_log)?;
+            let model = DpModel {
+                centers: centers.clone(),
+                assignments,
+                iterations: 1,
+                converged: false,
+                created_per_pass: vec![created],
+            };
+            let obj = objective::dp_objective(&data, &centers, cfg.lambda);
+            (Model::Dp(model), Some(obj))
+        }
+        Algo::Ofl => {
+            let lambda2 = cfg.lambda * cfg.lambda;
+            let mut centers = Matrix::zeros(0, d);
+            let mut assignments: Vec<u32> = Vec::new();
+            let mut opened_by = Vec::new();
+            // Grown on demand, prefix-stably — see `OflPass::draws`.
+            let mut draws: Vec<f64> = Vec::new();
+            let shards = cfg.procs.max(cluster.validators);
+            let mut st = OflPass {
+                vplane: &mut cluster.validate,
+                data: &cell,
+                backend: &backend,
+                centers: &mut centers,
+                assignments: &mut assignments,
+                opened_by: &mut opened_by,
+                draws: &mut draws,
+                seed: cfg.seed,
+                lambda2,
+                shards,
+                sharding: cfg.sharding,
+            };
+            sched.run_source(&mut cluster.compute, &mut st, source, 0, sink, &mut epochs_log)?;
+            drop(st);
+            let data = cell.get();
+            assignments.resize(data.len(), u32::MAX);
+            let model = OflModel { centers: centers.clone(), assignments, opened_by };
+            let obj = objective::dp_objective(&data, &centers, cfg.lambda);
+            (Model::Ofl(model), Some(obj))
+        }
+        Algo::BpMeans => {
+            let lambda2 = (cfg.lambda * cfg.lambda) as f32;
+            // No grand-mean init (Alg 7 needs the full dataset up front):
+            // the stream starts from an empty dictionary and the first
+            // proposal — the first point's own residual — seeds it.
+            let mut features = Matrix::zeros(0, d);
+            let mut assignments: Vec<Vec<bool>> = Vec::new();
+            let mut st = BpPass {
+                data: &cell,
+                features: &mut features,
+                assignments: &mut assignments,
+                lambda2,
+                sweeps: 2,
+                sharding: cfg.sharding,
+                changed: false,
+                created: 0,
+            };
+            sched.run_source(&mut cluster.compute, &mut st, source, 0, sink, &mut epochs_log)?;
+            let created = st.created;
+            drop(st);
+            let data = cell.get();
+            let n = data.len();
+            assignments.resize(n, Vec::new());
+            bp_recompute(&mut cluster, cfg.procs, n, 0, &assignments, &mut features, sink, &mut epochs_log)?;
+            for z in assignments.iter_mut() {
+                z.resize(features.rows, false);
+            }
+            let obj = objective::bp_objective(&data, &features, &assignments, cfg.lambda);
+            let model = BpModel {
+                features: features.clone(),
+                assignments,
+                iterations: 1,
+                converged: false,
+                created_per_pass: vec![created],
+            };
+            (Model::Bp(model), Some(obj))
+        }
+    };
+
+    let summary = RunSummary {
+        epochs: epochs_log,
+        final_centers: model.k(),
+        objective,
+        total_time: total.elapsed(),
+        transport: cluster.stats(),
+    };
+    Ok(RunOutput { summary, model })
 }
 
 #[cfg(test)]

@@ -96,6 +96,7 @@ pub mod driver;
 pub mod engine;
 pub mod reactor;
 pub mod scheduler;
+pub mod serve;
 pub mod soft;
 pub mod tcp;
 pub mod transport;
@@ -105,3 +106,39 @@ pub mod wire;
 pub use driver::{run, run_with, Model, RunOutput};
 pub use tcp::serve_peer;
 pub use transport::{Cluster, PlaneHandle, PlaneIo, Topology, ValidatePlane};
+
+#[cfg(test)]
+mod no_sleep_tests {
+    /// Every `thread::sleep` on a coordinator path must be a *declared*
+    /// poll-mode (or stub) arm, tagged with a trailing `// poll-mode`
+    /// marker — under `io = "reactor"` nothing may hard-sleep; blocking
+    /// moments belong in [`super::reactor::Reactor::wait`]. This is the
+    /// grep the reviewer would run, frozen as a unit test. Test modules
+    /// (everything from their `mod tests` line on) are exempt: tests
+    /// sleep to stage races.
+    #[test]
+    fn every_coordinator_sleep_is_a_declared_poll_mode_arm() {
+        let sources: &[(&str, &str)] = &[
+            ("driver.rs", include_str!("driver.rs")),
+            ("reactor.rs", include_str!("reactor.rs")),
+            ("scheduler.rs", include_str!("scheduler.rs")),
+            ("serve.rs", include_str!("serve.rs")),
+            ("tcp.rs", include_str!("tcp.rs")),
+            ("transport.rs", include_str!("transport.rs")),
+        ];
+        for (name, src) in sources {
+            let non_test = src.split("mod tests").next().expect("split never empties");
+            for (lineno, line) in non_test.lines().enumerate() {
+                if line.contains("thread::sleep") && !line.trim_start().starts_with("//") {
+                    assert!(
+                        line.contains("// poll-mode"),
+                        "{name}:{}: undeclared thread::sleep on a coordinator \
+                         path — park in the reactor, or tag the line with \
+                         `// poll-mode` if it IS the poll-mode arm:\n    {line}",
+                        lineno + 1
+                    );
+                }
+            }
+        }
+    }
+}

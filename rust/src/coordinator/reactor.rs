@@ -483,6 +483,24 @@ impl Reactor {
         }
     }
 
+    /// Park until `deadline`, absorbing readiness events and wakeup
+    /// signals along the way — the reactor-path replacement for a
+    /// `thread::sleep` backoff. Unlike [`Reactor::wait`], spurious
+    /// wakeups (a readable peer, a coalesced commit signal) do *not*
+    /// end the park early: the loop re-waits for the remaining time,
+    /// so the caller observes a plain bounded delay while the fd set
+    /// stays armed and signals keep coalescing instead of piling into
+    /// a stale sleep.
+    pub fn wait_until(&mut self, deadline: Instant) -> io::Result<()> {
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(());
+            }
+            self.wait(deadline - now)?;
+        }
+    }
+
     /// Test hook: make the next `n` kernel waits look `EINTR`-ed.
     #[cfg(test)]
     fn inject_eintr(&self, n: u32) {
@@ -522,7 +540,7 @@ impl Reactor {
 
     /// No readiness source: nap for the timeout, report nothing fired.
     pub fn wait(&mut self, timeout: Duration) -> io::Result<bool> {
-        std::thread::sleep(timeout.min(Duration::from_millis(1)));
+        std::thread::sleep(timeout.min(Duration::from_millis(1))); // poll-mode: non-unix stub has no readiness source
         Ok(false)
     }
 
@@ -530,6 +548,15 @@ impl Reactor {
         Wakeup {
             _stub: Arc::new(()),
         }
+    }
+
+    /// Sleep-stub twin of the unix `wait_until`: naps to the deadline.
+    pub fn wait_until(&mut self, deadline: std::time::Instant) -> io::Result<()> {
+        let now = std::time::Instant::now();
+        if deadline > now {
+            std::thread::sleep(deadline - now); // poll-mode: non-unix stub has no readiness source
+        }
+        Ok(())
     }
 }
 
@@ -623,6 +650,27 @@ mod tests {
         assert!(r.wait(Duration::from_millis(500)).unwrap());
         r.set_write_interest(a.as_raw_fd(), false).unwrap();
         assert!(!r.wait(Duration::from_millis(10)).unwrap());
+    }
+
+    /// `wait_until` is a real park: mid-park wakeup signals are absorbed
+    /// (the fd set stays armed) but the deadline still holds — the backoff
+    /// delay the caller asked for is the delay it gets.
+    #[test]
+    fn wait_until_absorbs_wakeups_and_holds_the_deadline() {
+        let mut r = Reactor::new().unwrap();
+        let w = r.wakeup();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            w.wake();
+            std::thread::sleep(Duration::from_millis(10));
+            w.wake();
+        });
+        let start = std::time::Instant::now();
+        r.wait_until(std::time::Instant::now() + Duration::from_millis(80)).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(75));
+        // The signals were drained inside the park: nothing pending now.
+        assert!(!r.wait(Duration::from_millis(10)).unwrap());
+        t.join().unwrap();
     }
 
     #[test]

@@ -158,6 +158,23 @@
 //! algorithms never emit the signal (their stale waves are patched, not
 //! wasted) and so stay at `max`. The depth in effect when a wave was
 //! scattered is recorded as [`EpochRecord::effective_speculation`].
+//!
+//! ## Where epochs come from ([`EpochSource`])
+//!
+//! The engine does not own its epoch list: it *polls* an [`EpochSource`]
+//! in the fill stage. [`StaticSource`] replays a precomputed span list —
+//! the classic batch pass, reached through the [`Scheduler::run_pass`]
+//! convenience — while the streaming ingest service (`occd serve`) hands
+//! the engine a live source backed by its admission queue, whose
+//! mini-epochs materialize as clients push points. A source that reports
+//! [`SourcePoll::Pending`] leaves the fill stage early; the engine keeps
+//! draining its resident waves and parks on the plane's readiness wait,
+//! which the admission stage interrupts (through the plane's waker) when
+//! the next batch seals. Everything downstream of the fill stage is
+//! source-agnostic, so DP/OFL/BP — and every Thm 3.1 argument above —
+//! run unmodified over either source; the keystone streaming test replays
+//! a live run's admitted spans through a [`StaticSource`] and asserts the
+//! models match bit for bit.
 
 use super::engine::{split_range, Job, JobOutput};
 use super::transport::{PlaneHandle, PlaneWaker, WaveId};
@@ -385,6 +402,74 @@ pub trait EpochAlgo: Send {
     fn validate(&mut self, outs: &[JobOutput], ranges: &[Range<usize>]) -> Result<EpochCounts>;
 }
 
+/// One epoch handed to the engine by its source: the point span plus —
+/// for live admission — when the mini-epoch was sealed and how deep the
+/// admission queue stood when it was (both `None`/0 for static replay).
+#[derive(Debug, Clone)]
+pub struct SourcedEpoch {
+    /// Contiguous point span of this epoch in the dataset (which may still
+    /// be growing behind a live source — the source publishes the grown
+    /// dataset generation *before* announcing the epoch that reads it).
+    pub span: Range<usize>,
+    /// When the admission stage sealed this mini-epoch (`None` = static
+    /// replay). The span from here to the epoch's commit is the
+    /// admission→commit latency recorded per epoch.
+    pub admitted_at: Option<Instant>,
+    /// Admission-queue depth observed when this epoch was sealed.
+    pub queue_depth: usize,
+}
+
+impl SourcedEpoch {
+    /// A static-replay epoch: a bare span, no admission metadata.
+    pub fn replay(span: Range<usize>) -> SourcedEpoch {
+        SourcedEpoch { span, admitted_at: None, queue_depth: 0 }
+    }
+}
+
+/// What an [`EpochSource`] has for the engine right now.
+pub enum SourcePoll {
+    /// The next epoch, in order.
+    Ready(SourcedEpoch),
+    /// No epoch *yet* — more may arrive (a live stream mid-flight). The
+    /// engine keeps draining its resident waves and parks on the plane's
+    /// readiness wait; the admission stage wakes it when a batch seals.
+    Pending,
+    /// The stream is over: no further epoch will ever arrive.
+    Ended,
+}
+
+/// Where a pass's epochs come from: static replay of a precomputed span
+/// list ([`StaticSource`]) or the live admission queue of the streaming
+/// ingest service ([`super::serve`]). The engine polls — never blocks in —
+/// the source, so schedulers and algorithms run unmodified over either.
+pub trait EpochSource {
+    /// Poll for the next epoch. Epochs come out in strict epoch order;
+    /// once `Ended` is returned the source must keep returning `Ended`.
+    fn poll_epoch(&mut self) -> SourcePoll;
+}
+
+/// Static replay: yield a fixed span list, then end — the classic batch
+/// pass, and the replay twin the streaming keystone test compares against.
+pub struct StaticSource {
+    spans: std::vec::IntoIter<Range<usize>>,
+}
+
+impl StaticSource {
+    /// Replay `spans` in order.
+    pub fn new(spans: Vec<Range<usize>>) -> StaticSource {
+        StaticSource { spans: spans.into_iter() }
+    }
+}
+
+impl EpochSource for StaticSource {
+    fn poll_epoch(&mut self) -> SourcePoll {
+        match self.spans.next() {
+            Some(span) => SourcePoll::Ready(SourcedEpoch::replay(span)),
+            None => SourcePoll::Ended,
+        }
+    }
+}
+
 /// An epoch scheduling policy.
 pub trait Scheduler {
     /// Policy name (metrics / logs).
@@ -396,11 +481,33 @@ pub trait Scheduler {
     /// (`wire_bytes`, `ser_time`, …) is recorded as per-epoch deltas of
     /// the cluster-wide stats; traffic of overlapped waves is attributed
     /// to the epoch whose commit window it fell into.
+    ///
+    /// This is the static-replay convenience over [`Scheduler::run_source`]
+    /// — the span list becomes a [`StaticSource`].
     fn run_pass(
         &self,
         compute: &mut PlaneHandle,
         algo: &mut dyn EpochAlgo,
         epochs: &[Range<usize>],
+        pass: usize,
+        sink: &mut MetricsSink,
+        log: &mut Vec<EpochRecord>,
+    ) -> Result<()> {
+        if epochs.is_empty() {
+            return Ok(());
+        }
+        self.run_source(compute, algo, &mut StaticSource::new(epochs.to_vec()), pass, sink, log)
+    }
+
+    /// Drive one pass whose epochs arrive from `source` — static replay or
+    /// a live admission queue; see [`EpochSource`]. Same contract as
+    /// [`Scheduler::run_pass`] otherwise: one [`EpochRecord`] per epoch,
+    /// in epoch order, at commit time.
+    fn run_source(
+        &self,
+        compute: &mut PlaneHandle,
+        algo: &mut dyn EpochAlgo,
+        source: &mut dyn EpochSource,
         pass: usize,
         sink: &mut MetricsSink,
         log: &mut Vec<EpochRecord>,
@@ -645,18 +752,15 @@ impl Scheduler for WaveEngine {
         }
     }
 
-    fn run_pass(
+    fn run_source(
         &self,
         compute: &mut PlaneHandle,
         algo: &mut dyn EpochAlgo,
-        epochs: &[Range<usize>],
+        source: &mut dyn EpochSource,
         pass: usize,
         sink: &mut MetricsSink,
         log: &mut Vec<EpochRecord>,
     ) -> Result<()> {
-        if epochs.is_empty() {
-            return Ok(());
-        }
         let max_depth = self.depth.max(1);
         let spec = algo.job_spec();
         let patchable = algo.can_patch();
@@ -687,19 +791,36 @@ impl Scheduler for WaveEngine {
                 scope.spawn(move || validation_loop(algo, req_rx, res_tx, waker));
 
             let mut live: VecDeque<Wave> = VecDeque::new();
+            // Every epoch the source has yielded so far, by epoch index —
+            // static replay knows this list up front, a live source grows
+            // it as mini-epochs seal.
+            let mut meta: Vec<SourcedEpoch> = Vec::new();
+            let mut ended = false; // the source returned `Ended`
             let mut next_scatter = 0usize; // next epoch to scatter
             let mut next_dispatch = 0usize; // next epoch to hand to validation
             let mut next_commit = 0usize; // next epoch expecting a commit
 
             let run = (|| -> Result<()> {
-                while next_commit < epochs.len() {
+                while !ended || next_commit < meta.len() {
                     let mut progressed = false;
 
                     // 1. Fill the pipeline up to the speculation depth
                     //    (the adaptive controller's current bound; the
-                    //    fixed depth otherwise).
-                    while next_scatter < epochs.len() && next_scatter - next_commit < cur_depth {
-                        let span = epochs[next_scatter].clone();
+                    //    fixed depth otherwise) from the epoch source. A
+                    //    `Pending` source leaves the fill short — resident
+                    //    waves keep draining and the idle arm below parks
+                    //    until the admission stage wakes the plane.
+                    while !ended && next_scatter - next_commit < cur_depth {
+                        let sourced = match source.poll_epoch() {
+                            SourcePoll::Ready(se) => se,
+                            SourcePoll::Pending => break,
+                            SourcePoll::Ended => {
+                                ended = true;
+                                break;
+                            }
+                        };
+                        let span = sourced.span.clone();
+                        meta.push(sourced);
                         let plan = spec.plan(span.clone(), procs, &snap);
                         let id = compute.scatter(spec.jobs(&snap, &plan.ranges))?;
                         let now = Instant::now();
@@ -874,7 +995,7 @@ impl Scheduler for WaveEngine {
                         } else {
                             // Nothing validating and nothing readable:
                             // yield briefly before the next readiness poll.
-                            std::thread::sleep(Duration::from_micros(100));
+                            std::thread::sleep(Duration::from_micros(100)); // poll-mode: legacy sleep-slice arm
                             compute.note_idle_wait();
                             None
                         };
@@ -941,10 +1062,17 @@ impl Scheduler for WaveEngine {
                         let net_now = compute.stats();
                         let net = net_now.since(&net0);
                         net0 = net_now;
+                        // Admission→commit latency: only live sources
+                        // stamp their epochs; static replay records zero.
+                        let src = &meta[w.epoch];
+                        let admission_wait = src
+                            .admitted_at
+                            .map(|t| now.duration_since(t))
+                            .unwrap_or(Duration::ZERO);
                         let rec = EpochRecord {
                             iteration: pass,
                             epoch: w.epoch,
-                            points: epochs[w.epoch].len(),
+                            points: src.span.len(),
                             proposed: commit.counts.proposed,
                             accepted: commit.counts.accepted,
                             rejected: commit.counts.rejected,
@@ -970,6 +1098,8 @@ impl Scheduler for WaveEngine {
                             handshake_time: net.handshake_time,
                             reactor_wakeups: net.reactor_wakeups,
                             writev_batches: net.writev_batches,
+                            admission_wait,
+                            ingest_queue_depth: src.queue_depth,
                         };
                         sink.emit(&rec);
                         log.push(rec);
@@ -1340,6 +1470,96 @@ mod tests {
         let engine = WaveEngine { depth: 4, adaptive: true, io: IoKind::from_env() };
         let log = drive_epochs(engine, epochs, &mut algo);
         assert!(log.iter().all(|r| r.effective_speculation == 4), "{log:?}");
+    }
+
+    /// A live-style source: epochs trickle out with interleaved `Pending`
+    /// polls (as an admission queue mid-stream would), stamped with
+    /// admission metadata.
+    struct Trickle {
+        spans: Vec<Range<usize>>,
+        next: usize,
+        polls: usize,
+        sealed: Instant,
+    }
+
+    impl EpochSource for Trickle {
+        fn poll_epoch(&mut self) -> SourcePoll {
+            self.polls += 1;
+            if self.next >= self.spans.len() {
+                return SourcePoll::Ended;
+            }
+            if self.polls % 2 == 1 {
+                return SourcePoll::Pending; // every other poll comes up dry
+            }
+            let span = self.spans[self.next].clone();
+            self.next += 1;
+            SourcePoll::Ready(SourcedEpoch {
+                span,
+                admitted_at: Some(self.sealed),
+                queue_depth: self.next,
+            })
+        }
+    }
+
+    #[test]
+    fn run_source_drains_a_trickling_live_source() {
+        let mut cluster = cluster2();
+        let mut algo = Scripted::new(true, true);
+        let mut sink = MetricsSink::Null;
+        let mut log = Vec::new();
+        let mut src = Trickle {
+            spans: vec![0..16, 16..32, 32..48, 48..64],
+            next: 0,
+            polls: 0,
+            sealed: Instant::now(),
+        };
+        WaveEngine { depth: 2, adaptive: false, io: IoKind::from_env() }
+            .run_source(&mut cluster.compute, &mut algo, &mut src, 0, &mut sink, &mut log)
+            .unwrap();
+        // Every span committed, in epoch order, despite the dry polls.
+        assert_eq!(log.iter().map(|r| r.epoch).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(
+            algo.calls.iter().filter(|c| c.starts_with("validate")).count(),
+            4,
+            "{:?}",
+            algo.calls
+        );
+        // Admission metadata flows into the records: a positive wait and
+        // the queue depth each epoch was sealed behind.
+        assert!(log.iter().all(|r| r.admission_wait > Duration::ZERO), "{log:?}");
+        assert_eq!(
+            log.iter().map(|r| r.ingest_queue_depth).collect::<Vec<_>>(),
+            vec![1, 2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn static_replay_records_no_admission_metadata() {
+        let mut algo = Scripted::new(true, true);
+        let log = drive(2, &mut algo);
+        assert!(log
+            .iter()
+            .all(|r| r.admission_wait == Duration::ZERO && r.ingest_queue_depth == 0));
+    }
+
+    #[test]
+    fn run_source_with_an_immediately_ended_source_is_a_noop() {
+        let mut cluster = cluster2();
+        let mut algo = Scripted::new(true, true);
+        let mut sink = MetricsSink::Null;
+        let mut log = Vec::new();
+        WaveEngine { depth: 2, adaptive: false, io: IoKind::from_env() }
+            .run_source(
+                &mut cluster.compute,
+                &mut algo,
+                &mut StaticSource::new(vec![]),
+                0,
+                &mut sink,
+                &mut log,
+            )
+            .unwrap();
+        assert!(log.is_empty());
+        assert!(algo.calls.is_empty());
     }
 
     #[test]

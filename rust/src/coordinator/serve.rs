@@ -1,0 +1,849 @@
+//! The streaming ingest service behind `occd serve`.
+//!
+//! `serve` splits the process in two:
+//!
+//! * The **gateway thread** owns the client-facing [`TcpListener`] and a
+//!   private [`Reactor`](super::reactor::Reactor): every client socket is
+//!   nonblocking and registered for readiness, so one thread multiplexes
+//!   the whole firehose without a hard sleep. Clients speak the
+//!   [`wire`] ingest vocabulary — [`wire::KIND_INGEST`] chunks in,
+//!   typed [`wire::KIND_INGEST_ACK`]s out, [`wire::KIND_QUERY`] answered
+//!   with a model snapshot. The gateway's **admission stage** batches
+//!   admitted points into mini-epochs by size (`batch_points`) *or*
+//!   latency SLA (`batch_latency_ms`), whichever trips first, and
+//!   publishes each grown dataset generation into the shared [`DataCell`]
+//!   *before* announcing the epoch that reads it. The sealed-batch queue
+//!   is bounded (`ingest_queue`): while the engine is `ingest_queue`
+//!   batches behind, new chunks get a typed `Throttled` ack and are *not*
+//!   admitted — backpressure the client can see and retry.
+//!
+//! * The **engine** (the calling thread) runs
+//!   [`driver::run_streaming`] over a [`LiveSource`] view of that queue —
+//!   the same wave engine, validators and transports as a static run,
+//!   pointed at a different [`EpochSource`]. Each sealed batch wakes the
+//!   engine out of its reactor park through the compute plane's
+//!   [`PlaneWaker`], so admission→commit latency is bounded by work, not
+//!   by the idle-poll cap.
+//!
+//! Determinism: the model depends only on the *admitted point order* —
+//! replaying the same order as a static span list through the same
+//! `run_streaming` yields a bit-identical model (Thm 3.1 doesn't care
+//! when points arrived). `rust/tests/serve_stream.rs` pins this.
+
+use super::driver::{self, Model, RunOutput};
+use super::reactor::Reactor;
+use super::scheduler::{EpochSource, SourcePoll, SourcedEpoch};
+use super::transport::PlaneWaker;
+use super::wire::{self, IngestAck, IngestStatus};
+use crate::config::{RunConfig, ShardingKind, TransportKind};
+use crate::data::{DataCell, Dataset};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::metrics::MetricsSink;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Gateway idle-wait cap: bounds how stale an un-flushed ack or an
+/// SLA-deadline check can go when no socket readiness fires.
+const GATEWAY_WAIT_CAP: Duration = Duration::from_millis(10);
+
+/// How long the gateway lingers after the final model is out and every
+/// owed byte is flushed, giving clients time to read and close first.
+const LINGER: Duration = Duration::from_secs(2);
+
+#[cfg(unix)]
+fn fd_of<T: std::os::unix::io::AsRawFd>(s: &T) -> i32 {
+    s.as_raw_fd()
+}
+#[cfg(not(unix))]
+fn fd_of<T>(_s: &T) -> i32 {
+    0 // the non-unix Reactor stub ignores fds entirely
+}
+
+// ---------------------------------------------------------------------------
+// Engine waker hand-off
+// ---------------------------------------------------------------------------
+
+/// Late-bound handle to the engine's compute-plane waker. The gateway
+/// starts before the cluster spawns; `run_streaming` publishes the waker
+/// into this slot once it exists, and every batch seal afterwards pops
+/// the engine out of its reactor park. A seal that lands before the slot
+/// is filled is safe to miss: the engine polls the source before its
+/// first park.
+pub struct WakerSlot(Mutex<Option<Arc<dyn PlaneWaker>>>);
+
+impl WakerSlot {
+    /// An empty slot.
+    pub fn new() -> WakerSlot {
+        WakerSlot(Mutex::new(None))
+    }
+
+    /// Install the engine's waker (or `None` — poll mode has none).
+    pub fn set(&self, w: Option<Arc<dyn PlaneWaker>>) {
+        *self.0.lock().expect("waker slot poisoned") = w;
+    }
+
+    /// Wake the engine, if a waker has been published.
+    pub fn wake(&self) {
+        if let Some(w) = self.0.lock().expect("waker slot poisoned").as_ref() {
+            w.wake();
+        }
+    }
+}
+
+impl Default for WakerSlot {
+    fn default() -> Self {
+        WakerSlot::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The live epoch source
+// ---------------------------------------------------------------------------
+
+/// One sealed mini-epoch, queued from the admission stage to the engine.
+#[derive(Debug)]
+pub struct SealedBatch {
+    /// Point span in the (already published) dataset generation.
+    pub span: Range<usize>,
+    /// When the admission stage sealed it — the start of the
+    /// admission→commit latency clock.
+    pub sealed_at: Instant,
+    /// Queue depth right after this batch was enqueued.
+    pub queue_depth: usize,
+}
+
+/// The engine's view of the admission queue: an [`EpochSource`] that
+/// yields sealed mini-epochs as they form, `Pending` while the stream is
+/// quiet, and `Ended` once the gateway closes admission (EOS) and the
+/// queue drains.
+pub struct LiveSource {
+    rx: Receiver<SealedBatch>,
+    depth: Arc<AtomicUsize>,
+    ended: bool,
+}
+
+impl LiveSource {
+    /// Wrap the admission queue's receiving half.
+    pub fn new(rx: Receiver<SealedBatch>, depth: Arc<AtomicUsize>) -> LiveSource {
+        LiveSource { rx, depth, ended: false }
+    }
+}
+
+impl EpochSource for LiveSource {
+    fn poll_epoch(&mut self) -> SourcePoll {
+        if self.ended {
+            return SourcePoll::Ended;
+        }
+        match self.rx.try_recv() {
+            Ok(b) => {
+                // The bound covers sealed-but-not-yet-scheduled batches;
+                // the engine taking one frees an admission slot.
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                SourcePoll::Ready(SourcedEpoch {
+                    span: b.span,
+                    admitted_at: Some(b.sealed_at),
+                    queue_depth: b.queue_depth,
+                })
+            }
+            Err(TryRecvError::Empty) => SourcePoll::Pending,
+            // Sender dropped = admission closed; buffered batches above
+            // were delivered first, so this really is the end.
+            Err(TryRecvError::Disconnected) => {
+                self.ended = true;
+                SourcePoll::Ended
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Final-model hand-back (engine → gateway)
+// ---------------------------------------------------------------------------
+
+/// What the engine publishes when `run_streaming` returns, for the
+/// gateway to answer queries and the deferred EOS ack with.
+#[derive(Clone)]
+struct FinalState {
+    /// The learned model matrix (centers / facilities / features); empty
+    /// on a failed run.
+    model: Matrix,
+    /// The run error, if any (turns the EOS ack into `Rejected`).
+    err: Option<String>,
+}
+
+/// State shared between the engine thread and the gateway thread.
+struct Shared {
+    waker: WakerSlot,
+    fin: Mutex<Option<FinalState>>,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared { waker: WakerSlot::new(), fin: Mutex::new(None) }
+    }
+
+    fn publish(&self, f: FinalState) {
+        *self.fin.lock().expect("final slot poisoned") = Some(f);
+    }
+
+    fn final_state(&self) -> Option<FinalState> {
+        self.fin.lock().expect("final slot poisoned").clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The admission stage (socket-free core)
+// ---------------------------------------------------------------------------
+
+/// Size-or-SLA batching of admitted points into sealed mini-epochs, plus
+/// the grown-generation publish protocol. Kept free of sockets so the
+/// sealing rules are unit-testable; the [`Gateway`] feeds it decoded
+/// frames.
+struct Admission {
+    dim: usize,
+    batch_points: usize,
+    latency: Duration,
+    bound: usize,
+    cell: Arc<DataCell>,
+    /// Master copy of every admitted point, staged + sealed.
+    points: Matrix,
+    /// Rows already sealed (and published); `points.rows - sealed_rows`
+    /// rows are staged, waiting for size or SLA.
+    sealed_rows: usize,
+    /// When the oldest staged point arrived (SLA clock). Restarted on
+    /// each seal that leaves a remainder.
+    oldest: Option<Instant>,
+    tx: Option<Sender<SealedBatch>>,
+    depth: Arc<AtomicUsize>,
+    waker: Option<Arc<Shared>>,
+    /// Points admitted over the session (the Accepted ack detail).
+    admitted: u64,
+    /// Mini-epochs sealed (the model-snapshot id).
+    sealed_batches: u64,
+}
+
+impl Admission {
+    fn new(
+        cfg: &RunConfig,
+        cell: Arc<DataCell>,
+        tx: Sender<SealedBatch>,
+        depth: Arc<AtomicUsize>,
+        waker: Option<Arc<Shared>>,
+    ) -> Admission {
+        Admission {
+            dim: cfg.dim,
+            batch_points: cfg.effective_batch_points(),
+            latency: cfg.batch_latency(),
+            bound: cfg.ingest_queue,
+            cell,
+            points: Matrix::zeros(0, cfg.dim),
+            sealed_rows: 0,
+            oldest: None,
+            tx: Some(tx),
+            depth,
+            waker,
+            admitted: 0,
+            sealed_batches: 0,
+        }
+    }
+
+    fn staged_rows(&self) -> usize {
+        self.points.rows - self.sealed_rows
+    }
+
+    fn closed(&self) -> bool {
+        self.tx.is_none()
+    }
+
+    /// Offer one decoded non-EOS ingest chunk; returns the typed ack.
+    /// Admits whole chunks or nothing — a throttled chunk leaves no
+    /// partial state, so the client can re-send it verbatim.
+    fn offer(&mut self, seq: u64, chunk: &Matrix) -> IngestAck {
+        if self.closed() {
+            return IngestAck {
+                seq,
+                status: IngestStatus::Rejected,
+                detail: 0,
+                message: "admission closed (end-of-stream already seen)".into(),
+            };
+        }
+        if self.depth.load(Ordering::SeqCst) >= self.bound {
+            return IngestAck {
+                seq,
+                status: IngestStatus::Throttled,
+                detail: self.bound as u64,
+                message: String::new(),
+            };
+        }
+        if chunk.cols != self.dim {
+            return IngestAck {
+                seq,
+                status: IngestStatus::Rejected,
+                detail: 0,
+                message: format!("point dim {} != configured dim {}", chunk.cols, self.dim),
+            };
+        }
+        if self.oldest.is_none() {
+            self.oldest = Some(Instant::now());
+        }
+        self.points.data.extend_from_slice(&chunk.data);
+        self.points.rows += chunk.rows;
+        self.admitted += chunk.rows as u64;
+        while self.staged_rows() >= self.batch_points {
+            self.seal(self.batch_points);
+        }
+        IngestAck {
+            seq,
+            status: IngestStatus::Accepted,
+            detail: self.admitted,
+            message: String::new(),
+        }
+    }
+
+    /// Seal the next `rows` staged rows into a mini-epoch: publish the
+    /// grown generation *first*, then announce the span, then wake the
+    /// engine.
+    fn seal(&mut self, rows: usize) {
+        let span = self.sealed_rows..self.sealed_rows + rows;
+        self.sealed_rows = span.end;
+        self.oldest = if self.staged_rows() > 0 { Some(Instant::now()) } else { None };
+        // Every sealed row is published, staged rows ride along harmlessly
+        // (no epoch names them yet).
+        self.cell.set(Arc::new(Dataset { points: self.points.clone(), labels: None }));
+        let queue_depth = self.depth.fetch_add(1, Ordering::SeqCst) + 1;
+        self.sealed_batches += 1;
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(SealedBatch { span, sealed_at: Instant::now(), queue_depth });
+        }
+        if let Some(s) = &self.waker {
+            s.waker.wake();
+        }
+    }
+
+    /// The SLA deadline for the oldest staged point, if any.
+    fn deadline(&self) -> Option<Instant> {
+        self.oldest.map(|t| t + self.latency)
+    }
+
+    /// Seal a partial batch if the SLA deadline has passed.
+    fn tick(&mut self, now: Instant) {
+        if let Some(dl) = self.deadline() {
+            if now >= dl && self.staged_rows() > 0 {
+                // SLA seals ignore the queue bound: these points were
+                // already admitted (acked Accepted) — holding them would
+                // break the latency promise they were admitted under.
+                self.seal(self.staged_rows());
+            }
+        }
+    }
+
+    /// End of stream: seal any remainder and close admission. Dropping
+    /// the sender is what eventually turns the engine's source `Ended`.
+    fn eos(&mut self) {
+        if self.staged_rows() > 0 {
+            self.seal(self.staged_rows());
+        }
+        self.tx = None;
+        if let Some(s) = &self.waker {
+            s.waker.wake();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The gateway
+// ---------------------------------------------------------------------------
+
+/// One connected ingest client.
+struct Client {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outq: Vec<u8>,
+    /// Set on a framing error or EOF: stop reading, flush what's owed,
+    /// then close.
+    closing: bool,
+}
+
+/// The gateway thread's state: listener + clients on one reactor, the
+/// admission stage, and the deferred EOS ack.
+struct Gateway {
+    listener: TcpListener,
+    reactor: Reactor,
+    clients: Vec<Client>,
+    admission: Admission,
+    shared: Arc<Shared>,
+    /// The EOS frame's origin (client index, seq) — acked only once the
+    /// model is final.
+    eos: Option<(usize, u64)>,
+    eos_acked: bool,
+    saw_client: bool,
+    linger_from: Option<Instant>,
+}
+
+impl Gateway {
+    fn new(
+        listener: TcpListener,
+        reactor: Reactor,
+        admission: Admission,
+        shared: Arc<Shared>,
+    ) -> Gateway {
+        Gateway {
+            listener,
+            reactor,
+            clients: Vec::new(),
+            admission,
+            shared,
+            eos: None,
+            eos_acked: false,
+            saw_client: false,
+            linger_from: None,
+        }
+    }
+
+    fn accept_new(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = self.reactor.register(fd_of(&stream));
+                    self.saw_client = true;
+                    self.clients.push(Client {
+                        stream,
+                        inbuf: Vec::new(),
+                        outq: Vec::new(),
+                        closing: false,
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Drain one client's socket and handle every complete frame.
+    fn pump_client(&mut self, ci: usize) {
+        let mut tmp = [0u8; 64 * 1024];
+        loop {
+            let c = &mut self.clients[ci];
+            if c.closing {
+                return;
+            }
+            match c.stream.read(&mut tmp) {
+                Ok(0) => {
+                    c.closing = true;
+                    break;
+                }
+                Ok(n) => c.inbuf.extend_from_slice(&tmp[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    c.closing = true;
+                    break;
+                }
+            }
+        }
+        loop {
+            let parsed = wire::poll_frame(&mut self.clients[ci].inbuf);
+            match parsed {
+                Ok(Some((kind, payload))) => self.handle_frame(ci, kind, &payload),
+                Ok(None) => break,
+                Err(e) => {
+                    // Framing is gone; one last typed word, then close.
+                    self.push_ack(
+                        ci,
+                        IngestAck {
+                            seq: 0,
+                            status: IngestStatus::Rejected,
+                            detail: 0,
+                            message: format!("unreadable frame: {e}"),
+                        },
+                    );
+                    self.clients[ci].closing = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    fn handle_frame(&mut self, ci: usize, kind: u16, payload: &[u8]) {
+        match kind {
+            wire::KIND_INGEST => match wire::decode_ingest(payload) {
+                Ok(ing) if ing.is_eos() => {
+                    if self.admission.closed() {
+                        self.push_ack(
+                            ci,
+                            IngestAck {
+                                seq: ing.seq,
+                                status: IngestStatus::Rejected,
+                                detail: 0,
+                                message: "admission closed (end-of-stream already seen)".into(),
+                            },
+                        );
+                    } else {
+                        self.admission.eos();
+                        self.eos = Some((ci, ing.seq));
+                    }
+                }
+                Ok(ing) => {
+                    let ack = self.admission.offer(ing.seq, &ing.points);
+                    self.push_ack(ci, ack);
+                }
+                Err(e) => self.push_ack(
+                    ci,
+                    IngestAck {
+                        seq: 0,
+                        status: IngestStatus::Rejected,
+                        detail: 0,
+                        message: format!("bad ingest payload: {e}"),
+                    },
+                ),
+            },
+            wire::KIND_QUERY => {
+                let (id, model) = match self.shared.final_state() {
+                    Some(f) => (self.admission.sealed_batches, f.model),
+                    None => (0, Matrix::zeros(0, self.admission.dim)),
+                };
+                if let Ok(frame) = wire::snapshot_frame(id, &model) {
+                    self.clients[ci].outq.extend_from_slice(&frame);
+                }
+            }
+            other => self.push_ack(
+                ci,
+                IngestAck {
+                    seq: 0,
+                    status: IngestStatus::Rejected,
+                    detail: 0,
+                    message: format!("unexpected frame kind {other} on an ingest session"),
+                },
+            ),
+        }
+    }
+
+    fn push_ack(&mut self, ci: usize, ack: IngestAck) {
+        if let Ok(frame) = wire::ingest_ack_frame(&ack) {
+            self.clients[ci].outq.extend_from_slice(&frame);
+        }
+    }
+
+    /// Send the deferred EOS ack once the engine has published the final
+    /// model: `Accepted` with the admitted total, or `Rejected` carrying
+    /// the run error.
+    fn flush_eos_ack(&mut self) {
+        if self.eos_acked {
+            return;
+        }
+        let Some((ci, seq)) = self.eos else { return };
+        let Some(fin) = self.shared.final_state() else { return };
+        let ack = match fin.err {
+            None => IngestAck {
+                seq,
+                status: IngestStatus::Accepted,
+                detail: self.admission.admitted,
+                message: String::new(),
+            },
+            Some(msg) => IngestAck {
+                seq,
+                status: IngestStatus::Rejected,
+                detail: 0,
+                message: format!("run failed: {msg}"),
+            },
+        };
+        if ci < self.clients.len() {
+            self.push_ack(ci, ack);
+        }
+        self.eos_acked = true;
+    }
+
+    /// Write every client's owed bytes until the sockets push back.
+    fn flush_out(&mut self) {
+        for c in &mut self.clients {
+            while !c.outq.is_empty() {
+                match c.stream.write(&c.outq) {
+                    Ok(0) => {
+                        c.closing = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.outq.drain(..n);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.closing = true;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drop clients that are closing and owe nothing.
+    fn reap(&mut self) {
+        let mut i = 0;
+        while i < self.clients.len() {
+            if self.clients[i].closing && self.clients[i].outq.is_empty() {
+                let c = self.clients.remove(i);
+                self.reactor.deregister(fd_of(&c.stream));
+                // A reaped client can no longer receive the deferred EOS
+                // ack; shifting indices would misdirect it.
+                match &mut self.eos {
+                    Some((ei, _)) if *ei == i => self.eos_acked = true,
+                    Some((ei, _)) if *ei > i => *ei -= 1,
+                    _ => {}
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One full service pass; returns false when the gateway is done.
+    fn run(mut self) {
+        let _ = self.listener.set_nonblocking(true);
+        let _ = self.reactor.register(fd_of(&self.listener));
+        loop {
+            self.accept_new();
+            for ci in 0..self.clients.len() {
+                self.pump_client(ci);
+            }
+            let now = Instant::now();
+            self.admission.tick(now);
+            // A fully departed firehose ends the stream implicitly: no
+            // client is left to send EOS, and the engine must not wait
+            // forever on a queue nobody feeds.
+            if self.saw_client && self.clients.is_empty() && !self.admission.closed() {
+                self.admission.eos();
+            }
+            self.flush_eos_ack();
+            self.flush_out();
+            self.reap();
+
+            if self.shared.final_state().is_some() {
+                let drained = self.clients.iter().all(|c| c.outq.is_empty());
+                let acked = self.eos.is_none() || self.eos_acked;
+                if drained && acked {
+                    if self.clients.is_empty() {
+                        break;
+                    }
+                    match self.linger_from {
+                        None => self.linger_from = Some(Instant::now()),
+                        Some(t) if t.elapsed() >= LINGER => break,
+                        Some(_) => {}
+                    }
+                }
+            }
+
+            let timeout = self
+                .admission
+                .deadline()
+                .map(|dl| dl.saturating_duration_since(Instant::now()))
+                .unwrap_or(GATEWAY_WAIT_CAP)
+                .min(GATEWAY_WAIT_CAP);
+            let _ = self.reactor.wait(timeout);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry point
+// ---------------------------------------------------------------------------
+
+/// Run the streaming ingest service on an already-bound listener until
+/// the firehose ends, and return the streamed run's output.
+///
+/// The config is taken as-is except for the serve invariants: transport
+/// is forced to TCP (workers must read the dataset through the shipping
+/// path — an `Arc` snapshot taken at spawn would go stale as the stream
+/// grows it), sharding to `hash` (conflict packing keys off a full
+/// dataset scan), and `bootstrap_div` to 0 (no prefix exists to
+/// bootstrap over before the stream starts).
+pub fn serve(cfg: &RunConfig, listener: TcpListener) -> Result<RunOutput> {
+    let mut cfg = cfg.clone();
+    cfg.transport = TransportKind::Tcp;
+    cfg.sharding = ShardingKind::Hash;
+    cfg.bootstrap_div = 0;
+    cfg.validate()?;
+
+    let cell = Arc::new(DataCell::new(Arc::new(Dataset {
+        points: Matrix::zeros(0, cfg.dim),
+        labels: None,
+    })));
+    let (tx, rx) = mpsc::channel();
+    let depth = Arc::new(AtomicUsize::new(0));
+    let shared = Arc::new(Shared::new());
+    // Created here (not in the thread) so a reactor failure is a typed
+    // serve error instead of a silent empty run.
+    let reactor = Reactor::new().map_err(Error::Io)?;
+    let admission = Admission::new(&cfg, cell.clone(), tx, depth.clone(), Some(shared.clone()));
+    let gateway = Gateway::new(listener, reactor, admission, shared.clone());
+    let gw = std::thread::Builder::new()
+        .name("occ-gateway".into())
+        .spawn(move || gateway.run())
+        .map_err(Error::Io)?;
+
+    let mut source = LiveSource::new(rx, depth);
+    let mut sink = MetricsSink::open(cfg.metrics_path.as_deref())?;
+    let result = driver::run_streaming(&cfg, cell, &mut source, &mut sink, |w| {
+        shared.waker.set(w)
+    });
+    sink.flush();
+
+    let fin = match &result {
+        Ok(out) => FinalState { model: model_matrix(&out.model), err: None },
+        Err(e) => FinalState { model: Matrix::zeros(0, cfg.dim), err: Some(e.to_string()) },
+    };
+    shared.publish(fin);
+    let _ = gw.join();
+    result
+}
+
+/// The queryable face of a model: centers / facilities / features.
+fn model_matrix(m: &Model) -> Matrix {
+    match m {
+        Model::Dp(m) => m.centers.clone(),
+        Model::Ofl(m) => m.centers.clone(),
+        Model::Bp(m) => m.features.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(dim: usize, batch_points: usize, latency_ms: u64, queue: usize) -> RunConfig {
+        RunConfig {
+            dim,
+            batch_points,
+            batch_latency_ms: latency_ms,
+            ingest_queue: queue,
+            ..RunConfig::default()
+        }
+    }
+
+    fn cell(dim: usize) -> Arc<DataCell> {
+        Arc::new(DataCell::new(Arc::new(Dataset {
+            points: Matrix::zeros(0, dim),
+            labels: None,
+        })))
+    }
+
+    fn chunk(rows: usize, dim: usize, fill: f32) -> Matrix {
+        Matrix { rows, cols: dim, data: vec![fill; rows * dim] }
+    }
+
+    fn admission(
+        c: &RunConfig,
+    ) -> (Admission, Receiver<SealedBatch>, Arc<AtomicUsize>, Arc<DataCell>) {
+        let (tx, rx) = mpsc::channel();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let dc = cell(c.dim);
+        let a = Admission::new(c, dc.clone(), tx, depth.clone(), None);
+        (a, rx, depth, dc)
+    }
+
+    #[test]
+    fn seals_by_size_and_publishes_before_announcing() {
+        let c = cfg(3, 4, 60_000, 64);
+        let (mut a, rx, depth, dc) = admission(&c);
+        let ack = a.offer(7, &chunk(10, 3, 1.0));
+        assert_eq!(ack.status, IngestStatus::Accepted);
+        assert_eq!(ack.seq, 7);
+        assert_eq!(ack.detail, 10);
+        // 10 admitted at batch_points=4: two sealed batches, 2 staged.
+        let b0 = rx.try_recv().unwrap();
+        let b1 = rx.try_recv().unwrap();
+        assert_eq!(b0.span, 0..4);
+        assert_eq!(b1.span, 4..8);
+        assert!(rx.try_recv().is_err());
+        assert_eq!(depth.load(Ordering::SeqCst), 2);
+        assert_eq!(b0.queue_depth, 1);
+        assert_eq!(b1.queue_depth, 2);
+        // The published generation covers (at least) every sealed row.
+        assert!(dc.get().len() >= 8);
+        assert_eq!(a.staged_rows(), 2);
+    }
+
+    #[test]
+    fn seals_partial_batch_on_latency_sla() {
+        let c = cfg(2, 100, 0, 64); // SLA trips immediately
+        let (mut a, rx, _depth, dc) = admission(&c);
+        a.offer(1, &chunk(3, 2, 0.5));
+        assert!(rx.try_recv().is_err(), "size alone must not seal 3 < 100");
+        a.tick(Instant::now());
+        let b = rx.try_recv().unwrap();
+        assert_eq!(b.span, 0..3);
+        assert_eq!(dc.get().len(), 3);
+        assert_eq!(a.staged_rows(), 0);
+        assert!(a.deadline().is_none(), "SLA clock clears once staged drains");
+    }
+
+    #[test]
+    fn throttles_whole_chunks_at_the_queue_bound() {
+        let c = cfg(2, 2, 60_000, 1);
+        let (mut a, rx, depth, _dc) = admission(&c);
+        assert_eq!(a.offer(1, &chunk(2, 2, 1.0)).status, IngestStatus::Accepted);
+        assert_eq!(depth.load(Ordering::SeqCst), 1);
+        // Queue full: the next chunk bounces, admitting nothing.
+        let ack = a.offer(2, &chunk(2, 2, 2.0));
+        assert_eq!(ack.status, IngestStatus::Throttled);
+        assert_eq!(ack.detail, 1, "detail = the configured bound");
+        assert_eq!(a.admitted, 2);
+        assert_eq!(a.staged_rows(), 0);
+        // The engine draining the queue reopens admission.
+        let _ = rx.try_recv().unwrap();
+        depth.fetch_sub(1, Ordering::SeqCst);
+        assert_eq!(a.offer(2, &chunk(2, 2, 2.0)).status, IngestStatus::Accepted);
+    }
+
+    #[test]
+    fn rejects_dim_mismatch_with_a_typed_reason() {
+        let c = cfg(4, 8, 60_000, 64);
+        let (mut a, rx, _depth, _dc) = admission(&c);
+        let ack = a.offer(3, &chunk(2, 3, 1.0));
+        assert_eq!(ack.status, IngestStatus::Rejected);
+        assert!(ack.message.contains("dim 3"), "{}", ack.message);
+        assert_eq!(a.admitted, 0);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn eos_seals_the_remainder_and_ends_the_source() {
+        let c = cfg(2, 100, 60_000, 64);
+        let (mut a, rx, depth, _dc) = admission(&c);
+        a.offer(1, &chunk(5, 2, 1.0));
+        a.eos();
+        assert!(a.closed());
+        let mut src = LiveSource::new(rx, depth);
+        // Buffered batches come out before Ended.
+        let SourcePoll::Ready(e) = src.poll_epoch() else { panic!("expected the remainder") };
+        assert_eq!(e.span, 0..5);
+        assert!(e.admitted_at.is_some());
+        assert!(matches!(src.poll_epoch(), SourcePoll::Ended));
+        assert!(matches!(src.poll_epoch(), SourcePoll::Ended), "Ended is sticky");
+        // Admission stays closed.
+        assert_eq!(a.offer(9, &chunk(1, 2, 0.0)).status, IngestStatus::Rejected);
+    }
+
+    #[test]
+    fn live_source_is_pending_while_the_stream_is_quiet() {
+        let c = cfg(2, 4, 60_000, 64);
+        let (mut a, rx, depth, _dc) = admission(&c);
+        let mut src = LiveSource::new(rx, depth.clone());
+        assert!(matches!(src.poll_epoch(), SourcePoll::Pending));
+        a.offer(1, &chunk(4, 2, 1.0));
+        let SourcePoll::Ready(e) = src.poll_epoch() else { panic!("sealed batch owed") };
+        assert_eq!(e.span, 0..4);
+        assert_eq!(e.queue_depth, 1);
+        assert_eq!(depth.load(Ordering::SeqCst), 0, "engine uptake frees the slot");
+        assert!(matches!(src.poll_epoch(), SourcePoll::Pending));
+    }
+}

@@ -150,7 +150,7 @@ use super::reactor::Reactor;
 use super::transport::{SharedStats, Topology, TransportStats, WaveId};
 use super::wire::{self, Hello, HelloAck, PeerRole};
 use crate::config::IoKind;
-use crate::data::Dataset;
+use crate::data::{DataCell, Dataset};
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::runtime::ComputeBackend;
@@ -203,6 +203,26 @@ fn backoff_delay(attempt: usize) -> Duration {
 /// backlog whose accept loop is gone (a genuinely dead loopback thread),
 /// and without a bound the master would block forever on the ack.
 pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Whole-drain deadline for the teardown owed-reply drain
+/// ([`TcpPlane::drain_owed`]): one budget shared across *all* peers, so a
+/// plane with several wedged sessions still tears down in bounded time
+/// (the old shape spent a fresh 10 s read timeout per peer).
+pub const DRAIN_DEADLINE: Duration = Duration::from_secs(2);
+
+/// Park a reconnect/connect backoff delay. Under `io = "reactor"` the
+/// delay is spent in [`Reactor::wait_until`] — the fd set stays armed, so
+/// readiness edges and cross-thread wakeups coalesce into the park
+/// instead of being missed behind a hard sleep. Under `io = "poll"`
+/// there is no readiness source and the legacy sleep is the park.
+fn park_backoff(reactor: &mut Option<Reactor>, delay: Duration) {
+    match reactor.as_mut() {
+        Some(r) => {
+            let _ = r.wait_until(Instant::now() + delay);
+        }
+        None => std::thread::sleep(delay), // poll-mode: no readiness source
+    }
+}
 
 /// Points per dataset-block frame: bounds any single frame to
 /// `16384 · d · 4` payload bytes (256 MiB at the `dim ≤ 4096` config cap),
@@ -278,12 +298,35 @@ impl Coverage {
 // Peer side: the serve loop behind `occd worker` and loopback threads
 // ---------------------------------------------------------------------------
 
+/// Cumulative times any worker session served by this process came back
+/// from its readiness park ([`worker_reactor_wakeups`]).
+static WORKER_WAKEUPS: AtomicU64 = AtomicU64::new(0);
+
+/// Times the [`serve_peer`] readiness loops of this process woke from
+/// their reactor park (or, with no reactor, their legacy poll slice) —
+/// the worker-side counterpart of the master's `reactor_wakeups` stat.
+/// Process-wide and monotone; tests diff it around a wave.
+pub fn worker_reactor_wakeups() -> u64 {
+    WORKER_WAKEUPS.load(Ordering::Relaxed)
+}
+
 /// Serve one master session on an accepted connection: a [`wire::Hello`]
 /// handshake, then dataset blocks, snapshots and jobs in the master's
 /// order until a shutdown frame or EOF. This is the single peer loop
 /// behind standalone `occd worker` processes *and* the loopback thread
 /// peers — one code path, so every in-process TCP test exercises the real
 /// multi-host protocol.
+///
+/// After the (blocking, [`HANDSHAKE_TIMEOUT`]-bounded) handshake the
+/// socket turns nonblocking for the rest of the session and the loop
+/// parks in its own [`Reactor`]: frames are popped off an incremental
+/// [`wire::poll_frame`] buffer, empty reads park in [`Reactor::wait`]
+/// until bytes arrive, and reply writes that hit a full send buffer park
+/// under write-readiness interest instead of busy-spinning. Every park
+/// return ticks the process-wide [`worker_reactor_wakeups`] counter. If
+/// the reactor cannot be built (fd exhaustion), the socket stays blocking
+/// and the kernel itself is the park — same protocol, no readiness
+/// metering.
 ///
 /// Failure containment: a job that decodes but cannot run (panic, bad
 /// geometry), a job whose payload fails decode validation, and a job whose
@@ -298,8 +341,12 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
     // Handshake: the first frame must be a Hello carrying this peer's shard
     // assignment and the dataset geometry. It is read version-tolerantly so
     // a coordinator built at a different wire version gets a reportable
-    // rejection ack instead of a silent hangup.
-    let (version, kind, payload) = wire::read_frame_any_version(&mut stream)?;
+    // rejection ack instead of a silent hangup — and bounded: a master
+    // that connects and then wedges must not pin this thread forever.
+    let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    let handshake = wire::read_frame_any_version(&mut stream);
+    let _ = stream.set_read_timeout(None);
+    let (version, kind, payload) = handshake?;
     if version != wire::VERSION {
         let ack = HelloAck {
             proto: wire::VERSION,
@@ -364,9 +411,45 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
     let mut snap_err: Option<String> = None;
     let empty = Dataset { points: Matrix::zeros(0, 0), labels: None };
 
+    // The session's readiness loop: nonblocking from here on, parked in
+    // its own reactor. A failed nonblocking switch or reactor build falls
+    // back to the blocking shape (reads park in the kernel instead).
+    let mut reactor = Reactor::new().ok();
+    if reactor.is_some() && stream.set_nonblocking(true).is_err() {
+        reactor = None;
+    }
+    if let Some(r) = reactor.as_mut() {
+        let _ = r.register(stream_fd(&stream));
+    }
+    let mut inbuf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 64 * 1024];
+
     loop {
-        let Ok((kind, payload)) = wire::read_frame(&mut stream) else {
-            return Ok(()); // master gone (EOF) or framing lost
+        // Parse-first: pop a buffered frame before touching the socket.
+        let next = match wire::poll_frame(&mut inbuf) {
+            Ok(Some(f)) => Some(f),
+            Ok(None) => None,
+            Err(_) => return Ok(()), // framing lost
+        };
+        let Some((kind, payload)) = next else {
+            match (&stream).read(&mut tmp) {
+                Ok(0) => return Ok(()), // master gone (EOF)
+                Ok(k) => inbuf.extend_from_slice(&tmp[..k]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    match reactor.as_mut() {
+                        Some(r) => {
+                            let _ = r.wait(WAIT_CAP);
+                        }
+                        // A blocking socket never reaches here; park one
+                        // slice if an OS returns it spuriously anyway.
+                        None => std::thread::sleep(POLL_NAP), // poll-mode
+                    }
+                    WORKER_WAKEUPS.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return Ok(()), // stream dead
+            }
+            continue;
         };
         match kind {
             wire::KIND_DATA => {
@@ -425,7 +508,12 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
                     Err(e) => Err(e), // decode-invalid job: reply, stay alive
                 };
                 let busy = start.elapsed();
-                if wire::write_reply(&mut stream, hello.peer_id, busy, &output).is_err() {
+                let sent = wire::reply_frame(hello.peer_id, busy, &output)
+                    .map_err(|_| ())
+                    .and_then(|f| {
+                        write_session_reply(&stream, &mut reactor, &f).map_err(|_| ())
+                    });
+                if sent.is_err() {
                     return Ok(()); // master gone
                 }
             }
@@ -439,6 +527,56 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
             }
         }
     }
+}
+
+/// Write one encoded reply frame on the session's (usually nonblocking)
+/// stream: partial writes continue from their offset, and a full send
+/// buffer parks under write-readiness interest in the session's reactor
+/// instead of busy-spinning. `Err` means the stream is dead.
+fn write_session_reply(
+    stream: &TcpStream,
+    reactor: &mut Option<Reactor>,
+    bytes: &[u8],
+) -> std::io::Result<()> {
+    let mut at = 0;
+    let mut armed = false;
+    let res = loop {
+        if at == bytes.len() {
+            break Ok(());
+        }
+        match (&*stream).write(&bytes[at..]) {
+            Ok(0) => {
+                break Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "tcp write accepted 0 bytes of a reply",
+                ))
+            }
+            Ok(k) => at += k,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                match reactor.as_mut() {
+                    Some(r) => {
+                        if !armed {
+                            let _ = r.set_write_interest(stream_fd(stream), true);
+                            armed = true;
+                        }
+                        let _ = r.wait(WAIT_CAP);
+                    }
+                    // A blocking socket never reaches here; park one
+                    // slice if an OS returns it spuriously anyway.
+                    None => std::thread::sleep(POLL_NAP), // poll-mode
+                }
+                WORKER_WAKEUPS.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => break Err(e),
+        }
+    };
+    if armed {
+        if let Some(r) = reactor.as_mut() {
+            let _ = r.set_write_interest(stream_fd(stream), false);
+        }
+    }
+    res
 }
 
 /// Check a job's data needs against the peer's store; returns the dataset
@@ -478,16 +616,19 @@ fn install_block(
     let end = offset
         .checked_add(block.rows)
         .ok_or_else(|| Error::Coordinator("dataset block offset overflow".into()))?;
-    if block.cols != d || end > n {
+    if block.cols != d {
         return Err(Error::Coordinator(format!(
             "dataset block {offset}..{end} ({} cols) outside the {n} x {d} geometry",
             block.cols
         )));
     }
-    // Same plausibility cap as `.occb` loading: refuse to allocate a store
-    // for a nonsensical geometry.
-    if n.checked_mul(d).is_none() || n * d > (1 << 33) {
-        return Err(Error::Coordinator(format!("implausible dataset geometry {n} x {d}")));
+    // Streaming ingest (`occd serve`) grows the master's dataset past the
+    // `n` this session handshook with, so blocks beyond it are legal: the
+    // store grows to cover them (zero-filled, same width). The same
+    // plausibility cap as `.occb` loading applies to the *grown* geometry.
+    let rows = n.max(end);
+    if rows.checked_mul(d).is_none() || rows * d > (1 << 33) {
+        return Err(Error::Coordinator(format!("implausible dataset geometry {rows} x {d}")));
     }
     // Dense full-size store, filled sparsely: global point indices stay
     // valid for the shared job executor at the cost of allocating n × d
@@ -498,6 +639,10 @@ fn install_block(
         points: Matrix::zeros(n, d),
         labels: None,
     });
+    if ds.points.rows < end {
+        ds.points.data.resize(end * d, 0.0);
+        ds.points.rows = end;
+    }
     ds.points.data[offset * d..end * d].copy_from_slice(&block.data);
     covered.add(offset..end);
     Ok(())
@@ -826,7 +971,10 @@ fn snap_relation(base: &Matrix, new: &Matrix) -> SnapRelation {
 /// the compute plane (event loop) and the validation plane (validation
 /// thread) account into the same [`SharedStats`].
 struct TcpShared {
-    data: Arc<Dataset>,
+    /// The dataset behind a swappable cell: static runs set it once;
+    /// `occd serve` grows it between mini-epochs (each ship takes one
+    /// immutable generation snapshot, so in-flight waves stay bit-stable).
+    data: Arc<DataCell>,
     reconnect_attempts: usize,
     /// Snapshot delta-shipping + validator row-subset shipping (default);
     /// `false` restores the PR 3 embed-everything wire shape for A/B runs.
@@ -908,13 +1056,15 @@ fn open_session(shared: &TcpShared, reactor: &mut Option<Reactor>, peer: &mut Pe
 }
 
 /// Re-open a dead peer's session under the bounded reconnect policy
-/// (deterministic exponential backoff between attempts).
+/// (deterministic exponential backoff between attempts, parked in the
+/// reactor under `io = "reactor"` — never a hard sleep on the
+/// coordinator thread).
 fn reconnect(shared: &TcpShared, reactor: &mut Option<Reactor>, peer: &mut Peer) -> Result<()> {
     drop_stream(reactor, peer);
     let mut last: Option<Error> = None;
     for attempt in 0..shared.reconnect_attempts {
         if attempt > 0 {
-            std::thread::sleep(backoff_delay(attempt - 1));
+            park_backoff(reactor, backoff_delay(attempt - 1));
         }
         match open_session(shared, reactor, peer) {
             Ok(()) => return Ok(()),
@@ -940,8 +1090,11 @@ fn ship_missing(
     need: &Range<usize>,
     pool: &mut Vec<Vec<u8>>,
 ) -> Result<()> {
+    // One generation snapshot per ship: `occd serve` may publish a grown
+    // generation concurrently, but this frame encodes from exactly one.
+    let data = shared.data.get();
     for span in peer.sent.missing(need) {
-        let d = shared.data.dim();
+        let d = data.dim();
         let mut lo = span.start;
         while lo < span.end {
             let hi = (lo + DATA_BLOCK_POINTS).min(span.end);
@@ -953,7 +1106,7 @@ fn ship_missing(
                 lo,
                 hi - lo,
                 d,
-                &shared.data.points.data[lo * d..hi * d],
+                &data.points.data[lo * d..hi * d],
             )?;
             shared.stats.add_ser(sw.elapsed());
             let acct = FrameAcct {
@@ -1146,12 +1299,17 @@ fn deliver(
 
 /// Connect with bounded retries — workers may come up slightly after the
 /// coordinator, so the initial connect gets `1 + attempts` tries, spaced
-/// by the same deterministic exponential backoff reconnects use.
-fn connect_with_retry(addr: &str, attempts: usize) -> Result<TcpStream> {
+/// by the same deterministic exponential backoff reconnects use (and
+/// parked the same way: in the plane's reactor when one is armed).
+fn connect_with_retry(
+    addr: &str,
+    attempts: usize,
+    reactor: &mut Option<Reactor>,
+) -> Result<TcpStream> {
     let mut last: Option<std::io::Error> = None;
     for attempt in 0..=attempts {
         if attempt > 0 {
-            std::thread::sleep(backoff_delay(attempt - 1));
+            park_backoff(reactor, backoff_delay(attempt - 1));
         }
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
@@ -1200,6 +1358,19 @@ pub struct TcpPlane {
 /// behind persistent ephemeral listeners.
 pub fn spawn_planes(
     data: Arc<Dataset>,
+    backend: Arc<dyn ComputeBackend>,
+    topo: &Topology,
+    stats: Arc<SharedStats>,
+) -> Result<(TcpPlane, TcpPlane)> {
+    spawn_planes_cell(Arc::new(DataCell::new(data)), backend, topo, stats)
+}
+
+/// [`spawn_planes`] over a shared, *growable* dataset cell — the
+/// `occd serve` entry point: the admission stage keeps a clone of the
+/// cell and publishes grown generations between mini-epochs, and every
+/// dataset ship snapshots the generation current at encode time.
+pub fn spawn_planes_cell(
+    data: Arc<DataCell>,
     backend: Arc<dyn ComputeBackend>,
     topo: &Topology,
     stats: Arc<SharedStats>,
@@ -1273,17 +1444,24 @@ impl TcpPlane {
         let mut handles = Vec::new();
         let mut listener_addrs = Vec::new();
         let mut peers = Vec::with_capacity(count);
+        // Handshake geometry is the generation current at plane build;
+        // streamed growth past it is legal (peer stores grow on demand).
+        let geometry = shared.data.get();
         for id in 0..count {
             let hello = Hello {
                 proto: wire::VERSION,
                 role,
                 peer_id: id as u32,
                 peers_in_plane: count as u32,
-                n: shared.data.len() as u64,
-                dim: shared.data.dim() as u64,
+                n: geometry.len() as u64,
+                dim: geometry.dim() as u64,
             };
             let (stream, addr, loopback) = if let Some(a) = addrs.get(id) {
-                (connect_with_retry(a, shared.reconnect_attempts)?, a.clone(), false)
+                (
+                    connect_with_retry(a, shared.reconnect_attempts, &mut reactor)?,
+                    a.clone(),
+                    false,
+                )
             } else {
                 // Loopback thread peer: a persistent listener serving one
                 // session at a time, so a broken session re-opens under
@@ -1602,7 +1780,7 @@ impl TcpPlane {
             Some(r) => {
                 let _ = r.wait(cap.min(WAIT_CAP));
             }
-            None => std::thread::sleep(cap.min(POLL_NAP)),
+            None => std::thread::sleep(cap.min(POLL_NAP)), // poll-mode
         }
         self.shared.stats.add_reactor_wakeup();
     }
@@ -1614,7 +1792,7 @@ impl TcpPlane {
     /// session here — the outer sweep's recovery picks it up.
     fn recovery_pause(&mut self, delay: Duration, dead: usize) {
         if self.reactor.is_none() {
-            std::thread::sleep(delay);
+            std::thread::sleep(delay); // poll-mode: no readiness source
             return;
         }
         let deadline = Instant::now() + delay;
@@ -1812,6 +1990,90 @@ impl TcpPlane {
         self.gather(wave)
     }
 
+    /// Teardown drain: read every owed reply off every live session under
+    /// **one** whole-drain `deadline` shared across all peers (the old
+    /// shape hard-coded a fresh 10 s read timeout per peer, so P wedged
+    /// peers cost P × 10 s). Sessions are restored to blocking mode first
+    /// — per-read timeouts are the bound, re-armed with the *remaining*
+    /// budget before each read. Failures are typed and returned, never
+    /// swallowed: a desynced parse buffer, a wedged peer that eats the
+    /// deadline, a mid-drain EOF and an unarmable read timeout each
+    /// surface as their own error; `Drop` treats them as best-effort,
+    /// tests assert on them directly.
+    fn drain_owed(&mut self, deadline: Instant) -> Vec<Error> {
+        let mut errs = Vec::new();
+        // Teardown only: sessions leave their permanent nonblocking state
+        // here, because the read-timeout bound below needs blocking reads.
+        for p in self.peers.iter() {
+            if let Some(s) = &p.stream {
+                let _ = s.set_nonblocking(false);
+            }
+        }
+        for i in 0..self.peers.len() {
+            let mut owed = self.owed[i].len();
+            if owed == 0 {
+                continue;
+            }
+            let Some(stream) = &self.peers[i].stream else { continue };
+            let mut tmp = [0u8; 64 * 1024];
+            while owed > 0 {
+                // Frames come off the parse buffer first: a pump may have
+                // left a partial reply in `bufs`, and reading the raw
+                // socket from mid-frame would desync instead of draining.
+                match wire::poll_frame(&mut self.bufs[i]) {
+                    Ok(Some(_)) => {
+                        owed -= 1;
+                        continue;
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        errs.push(Error::Coordinator(format!(
+                            "{} desynced during teardown drain: {e}",
+                            self.peers[i].describe()
+                        )));
+                        break;
+                    }
+                }
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    errs.push(Error::Coordinator(format!(
+                        "teardown drain deadline lapsed with {owed} replies still \
+                         owed by {}",
+                        self.peers[i].describe()
+                    )));
+                    break;
+                }
+                if let Err(e) = stream.set_read_timeout(Some(left)) {
+                    errs.push(Error::Coordinator(format!(
+                        "{} teardown drain could not arm its read deadline: {e}",
+                        self.peers[i].describe()
+                    )));
+                    break;
+                }
+                match (&*stream).read(&mut tmp) {
+                    Ok(0) => {
+                        errs.push(Error::Coordinator(format!(
+                            "{} closed with {owed} replies still owed",
+                            self.peers[i].describe()
+                        )));
+                        break;
+                    }
+                    Ok(k) => self.bufs[i].extend_from_slice(&tmp[..k]),
+                    Err(e) => {
+                        errs.push(Error::Coordinator(format!(
+                            "{} wedged during teardown drain ({owed} replies \
+                             still owed): {e}",
+                            self.peers[i].describe()
+                        )));
+                        break;
+                    }
+                }
+            }
+            let _ = stream.set_read_timeout(None);
+        }
+        errs
+    }
+
     /// Sever peer `i`'s current session (tests): the next delivery or pump
     /// takes the reconnect/recovery path against the peer's address.
     #[cfg(test)]
@@ -1894,45 +2156,13 @@ impl Drop for TcpPlane {
         // Stop the persistent listeners from serving replacement sessions
         // before anything else — recovery during teardown makes no sense.
         self.shutdown.store(true, Ordering::SeqCst);
-        // Sessions live nonblocking; teardown is not the hot path, so
-        // restore blocking mode once here — the reply drain below relies
-        // on read timeouts, and the shutdown frames on blocking writes.
-        for p in self.peers.iter() {
-            if let Some(s) = &p.stream {
-                let _ = s.set_nonblocking(false);
-            }
-        }
-        // Drain outstanding replies (bounded per read) so no peer blocks
-        // writing into a socket nobody reads. Frames must come off the
-        // per-peer parse buffer first: a pump may have left a partial
-        // reply in `bufs`, and reading the raw socket from mid-frame
-        // would desync (or stall on a garbage length) instead of
-        // draining.
-        for i in 0..self.peers.len() {
-            let mut owed = self.owed[i].len();
-            if owed == 0 {
-                continue;
-            }
-            let Some(stream) = &self.peers[i].stream else { continue };
-            let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
-            let mut tmp = [0u8; 64 * 1024];
-            while owed > 0 {
-                match wire::poll_frame(&mut self.bufs[i]) {
-                    Ok(Some(_)) => {
-                        owed -= 1;
-                        continue;
-                    }
-                    Ok(None) => {}
-                    Err(_) => break, // desynced: closing the socket below is the only move
-                }
-                match (&*stream).read(&mut tmp) {
-                    Ok(0) => break,
-                    Ok(k) => self.bufs[i].extend_from_slice(&tmp[..k]),
-                    Err(_) => break, // timeout or dead stream
-                }
-            }
-            let _ = stream.set_read_timeout(None);
-        }
+        // Drain outstanding replies under one whole-plane deadline so no
+        // peer blocks writing into a socket nobody reads — best-effort
+        // here (a wedged or desynced peer's last replies are abandoned;
+        // its socket closes below either way). The drain restores
+        // blocking mode itself, which the shutdown writes below also
+        // rely on.
+        let _ = self.drain_owed(Instant::now() + DRAIN_DEADLINE);
         // Shutdown frames are best-effort, but a failed write is recorded
         // by dropping that session immediately: the peer then sees EOF
         // instead of half a frame, and teardown never retries or hangs.
@@ -2642,6 +2872,204 @@ mod tests {
             flips_after_open,
             "three waves of scatter/pump/flush/gather must not flip a \
              socket's blocking mode"
+        );
+    }
+
+    /// Bugfix regression: a reconnect backoff must park in the reactor,
+    /// not a hard `thread::sleep` — another peer's reply that arrives
+    /// while the backoff timer runs is routed *during* the park, not
+    /// after it. Peer 0's worker dies mid-wave and rejects two reconnect
+    /// attempts (forcing two backoff pauses); peer 1 replies ~80 ms in,
+    /// squarely inside the first pause. After `recover_peer` returns —
+    /// and before anything else pumps — peer 1's reply must already be
+    /// retired into the wave.
+    #[test]
+    fn reconnect_backoff_routes_other_peers_replies_mid_park() {
+        let (data, backend) = data_and_backend(40);
+        // Peer 0: session 1 handshakes, reads its job, drops dead. The
+        // next two connects are accepted and hung up pre-handshake (each
+        // reconnect attempt fails fast, so recovery parks its backoff in
+        // between); the fourth session is a healthy replacement.
+        let flaky_listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let flaky_addr = flaky_listener.local_addr().unwrap().to_string();
+        let flaky_backend = backend.clone();
+        let flaky = std::thread::spawn(move || {
+            let (mut s, _) = flaky_listener.accept().unwrap();
+            let (kind, payload) = wire::read_frame(&mut s).unwrap();
+            assert_eq!(kind, wire::KIND_HELLO);
+            let _ = wire::decode_hello(&payload).unwrap();
+            let ack = HelloAck { proto: wire::VERSION, ok: true, message: String::new() };
+            s.write_all(&wire::hello_ack_frame(&ack).unwrap()).unwrap();
+            loop {
+                let (kind, _) = wire::read_frame(&mut s).unwrap();
+                if kind == wire::KIND_JOB {
+                    break;
+                }
+            }
+            drop(s);
+            for _ in 0..2 {
+                let (s, _) = flaky_listener.accept().unwrap();
+                drop(s);
+            }
+            let (s, _) = flaky_listener.accept().unwrap();
+            let _ = serve_peer(s, flaky_backend);
+        });
+        // Peer 1: healthy, but replies only after a nap that lands inside
+        // peer 0's first backoff pause.
+        let slow_listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let slow_addr = slow_listener.local_addr().unwrap().to_string();
+        let slow = std::thread::spawn(move || {
+            let (mut s, _) = slow_listener.accept().unwrap();
+            let (kind, payload) = wire::read_frame(&mut s).unwrap();
+            assert_eq!(kind, wire::KIND_HELLO);
+            let hello = wire::decode_hello(&payload).unwrap();
+            let ack = HelloAck { proto: wire::VERSION, ok: true, message: String::new() };
+            s.write_all(&wire::hello_ack_frame(&ack).unwrap()).unwrap();
+            loop {
+                let (kind, _) = wire::read_frame(&mut s).unwrap();
+                if kind == wire::KIND_JOB {
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(80));
+            let out = Ok(JobOutput::PairCache { pairs: vec![] });
+            wire::write_reply(&mut s, hello.peer_id, Duration::ZERO, &out).unwrap();
+            let _ = wire::read_frame(&mut s); // hold until teardown
+        });
+        let topo = Topology {
+            procs: 1,
+            validators: 2,
+            compute_peers: vec![],
+            validator_peers: vec![flaky_addr, slow_addr],
+            reconnect_attempts: 3,
+            frugal_wire: true,
+            io: IoKind::from_env(),
+        };
+        let (_compute, mut validate) =
+            spawn_planes(data, backend, &topo, Arc::new(SharedStats::default())).unwrap();
+        let mut vectors = Matrix::zeros(0, 2);
+        vectors.push_row(&[0.0, 0.0]);
+        let vectors = Arc::new(vectors);
+        let mk_jobs = || -> Vec<Job> {
+            (0..2)
+                .map(|_| Job::PairCache {
+                    vectors: vectors.clone(),
+                    positions: vec![],
+                    shards: vec![],
+                })
+                .collect()
+        };
+        let wave = validate.scatter(mk_jobs()).unwrap();
+        validate.kill_session(0);
+        validate.recover_peer(0, Error::Coordinator("test kill".into()));
+        assert_eq!(
+            validate.remaining(wave),
+            Some(1),
+            "peer 1's reply must retire during peer 0's backoff park — \
+             only peer 0's resent reply may still be outstanding"
+        );
+        validate.gather(wave).unwrap();
+        drop(validate);
+        flaky.join().unwrap();
+        slow.join().unwrap();
+    }
+
+    /// Bugfix regression: the teardown owed-reply drain runs under ONE
+    /// whole-drain deadline (the old shape spent a fresh 10 s read
+    /// timeout per peer) and surfaces typed errors instead of swallowing
+    /// them. Peer 0 desyncs its stream with garbage bytes; peer 1 wedges
+    /// silently and eats the remaining budget.
+    #[test]
+    fn teardown_drain_bounds_wedged_peers_under_one_deadline() {
+        let (data, backend) = data_and_backend(40);
+        let desync_listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let desync_addr = desync_listener.local_addr().unwrap().to_string();
+        let desync = std::thread::spawn(move || {
+            let (mut s, _) = desync_listener.accept().unwrap();
+            let (kind, payload) = wire::read_frame(&mut s).unwrap();
+            assert_eq!(kind, wire::KIND_HELLO);
+            let _ = wire::decode_hello(&payload).unwrap();
+            let ack = HelloAck { proto: wire::VERSION, ok: true, message: String::new() };
+            s.write_all(&wire::hello_ack_frame(&ack).unwrap()).unwrap();
+            let _ = wire::read_frame(&mut s); // the job
+            s.write_all(&[0xAB; 16]).unwrap(); // not a frame: desync
+            let _ = wire::read_frame(&mut s); // hold until teardown
+        });
+        let wedged_listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let wedged_addr = wedged_listener.local_addr().unwrap().to_string();
+        let wedged = std::thread::spawn(move || {
+            let (mut s, _) = wedged_listener.accept().unwrap();
+            let (kind, payload) = wire::read_frame(&mut s).unwrap();
+            assert_eq!(kind, wire::KIND_HELLO);
+            let _ = wire::decode_hello(&payload).unwrap();
+            let ack = HelloAck { proto: wire::VERSION, ok: true, message: String::new() };
+            s.write_all(&wire::hello_ack_frame(&ack).unwrap()).unwrap();
+            let _ = wire::read_frame(&mut s); // the job — never replied to
+            let _ = wire::read_frame(&mut s); // hold until teardown
+        });
+        let topo = Topology {
+            procs: 1,
+            validators: 2,
+            compute_peers: vec![],
+            validator_peers: vec![desync_addr, wedged_addr],
+            reconnect_attempts: 1,
+            frugal_wire: true,
+            io: IoKind::from_env(),
+        };
+        let (_compute, mut validate) =
+            spawn_planes(data, backend, &topo, Arc::new(SharedStats::default())).unwrap();
+        let mut vectors = Matrix::zeros(0, 2);
+        vectors.push_row(&[0.0, 0.0]);
+        let vectors = Arc::new(vectors);
+        let jobs: Vec<Job> = (0..2)
+            .map(|_| Job::PairCache {
+                vectors: vectors.clone(),
+                positions: vec![],
+                shards: vec![],
+            })
+            .collect();
+        validate.scatter(jobs).unwrap();
+        let sw = Instant::now();
+        let errs = validate.drain_owed(Instant::now() + Duration::from_millis(300));
+        let took = sw.elapsed();
+        assert!(
+            took < Duration::from_secs(3),
+            "one 300 ms whole-drain deadline must bound BOTH peers, took {took:?}"
+        );
+        assert_eq!(errs.len(), 2, "both failures must surface typed: {errs:?}");
+        let text = errs.iter().map(|e| e.to_string()).collect::<Vec<_>>().join(" / ");
+        assert!(text.contains("desynced"), "typed desync error expected: {text}");
+        assert!(
+            text.contains("wedged") || text.contains("deadline lapsed"),
+            "typed wedged/deadline error expected: {text}"
+        );
+        // Keep the Drop below from re-draining the same dead sessions.
+        validate.owed[0].clear();
+        validate.owed[1].clear();
+        drop(validate);
+        desync.join().unwrap();
+        wedged.join().unwrap();
+    }
+
+    /// Satellite: worker sessions park in their own reactor and meter
+    /// every park return through the process-wide wakeup counter.
+    #[test]
+    fn worker_sessions_meter_their_reactor_wakeups() {
+        let (data, backend) = data_and_backend(40);
+        let before = worker_reactor_wakeups();
+        let (mut compute, _validate) = spawn_local(data.clone(), backend, 1, 1).unwrap();
+        // The idle sessions are parked waiting for their first job; give
+        // them at least one full WAIT_CAP slice to wake through.
+        std::thread::sleep(Duration::from_millis(120));
+        let mut centers = Matrix::zeros(0, 8);
+        centers.push_row(data.point(0));
+        let centers = Arc::new(centers);
+        compute
+            .scatter_gather(vec![Job::Nearest { range: 0..40, centers }])
+            .unwrap();
+        assert!(
+            worker_reactor_wakeups() > before,
+            "worker readiness loops must tick the wakeup counter"
         );
     }
 }

@@ -341,7 +341,7 @@ pub trait PlaneIo: Send {
     /// nap that cannot be cut short — planes with a real readiness
     /// source override it.
     fn wait_input(&mut self, timeout: Duration) -> Result<bool> {
-        std::thread::sleep(timeout);
+        std::thread::sleep(timeout); // poll-mode: default nap, no readiness source
         Ok(false)
     }
 
@@ -630,6 +630,26 @@ impl Cluster {
         backend: Arc<dyn ComputeBackend>,
         topo: &Topology,
     ) -> Result<Cluster> {
+        Cluster::spawn_topology_cell(
+            kind,
+            Arc::new(crate::data::DataCell::new(data)),
+            backend,
+            topo,
+        )
+    }
+
+    /// [`Cluster::spawn_topology`] over a shared, *growable* dataset cell
+    /// — the streaming ingest (`occd serve`) entry point. Requires the
+    /// TCP transport: in-proc workers capture an `Arc` snapshot of the
+    /// dataset at spawn and would never observe growth, while TCP peers
+    /// are shipped blocks from the generation current at each encode.
+    pub fn spawn_topology_cell(
+        kind: TransportKind,
+        cell: Arc<crate::data::DataCell>,
+        backend: Arc<dyn ComputeBackend>,
+        topo: &Topology,
+    ) -> Result<Cluster> {
+        let data = cell.get();
         let procs = topo.effective_procs();
         let validators = topo.effective_validators().max(1);
         assert!(procs >= 1, "a cluster needs at least one compute peer");
@@ -657,7 +677,7 @@ impl Cluster {
                     let mut topo = topo.clone();
                     topo.validators = validators;
                     let (c, v) =
-                        super::tcp::spawn_planes(data, backend, &topo, stats.clone())?;
+                        super::tcp::spawn_planes_cell(cell, backend, &topo, stats.clone())?;
                     ("tcp", Box::new(c), Box::new(v))
                 }
             };

@@ -10,6 +10,7 @@
 //! magic   := 0x4D43434F ("OCCM" in LE byte order)
 //! kind    := 1 job | 2 reply-ok | 3 reply-err | 4 hello | 5 hello-ack
 //!          | 6 dataset-block | 7 snapshot | 8 snapshot-delta
+//!          | 9 ingest | 10 ingest-ack | 11 query
 //! ```
 //!
 //! * **f32 values travel as their IEEE-754 bit patterns** (`to_bits` /
@@ -47,6 +48,28 @@
 //! opens a session with a [`Hello`]/[`HelloAck`] exchange that fixes its
 //! shard assignment and the dataset geometry, then receives exactly the
 //! point ranges its jobs read (see [`super::tcp`]).
+//!
+//! ## Streaming ingest (`occd serve`)
+//!
+//! Three client-facing kinds serve the front-end gateway of the streaming
+//! ingest service (see [`super::serve`]); they flow on *client* sessions,
+//! never on worker sessions:
+//!
+//! * [`KIND_INGEST`] — client → gateway: `{seq: u64, points: Matrix}`, a
+//!   chunk of points offered for admission. An **empty matrix (0 rows)
+//!   marks end-of-stream**: the gateway seals any pending mini-epoch,
+//!   closes admission, and acknowledges the EOS frame only once the model
+//!   is final.
+//! * [`KIND_INGEST_ACK`] — gateway → client: `{seq: u64, status: u8,
+//!   detail: u64, message: str}` echoing the chunk's `seq`. Status is
+//!   typed ([`IngestStatus`]): `Accepted` (detail = points admitted so
+//!   far), `Throttled` (the bounded admission queue is full — detail =
+//!   the configured bound; the chunk was **not** admitted, re-send it), or
+//!   `Rejected` (malformed payload; detail = 0, message says why — the
+//!   session survives, framing was intact).
+//! * [`KIND_QUERY`] — client → gateway: empty payload; the gateway replies
+//!   with a [`KIND_SNAPSHOT`] frame carrying the current model matrix
+//!   (id = committed batches; a 0-row matrix while no model is final).
 //!
 //! ## Shared-payload splicing
 //!
@@ -94,6 +117,15 @@ pub const KIND_DATA: u16 = 6;
 pub const KIND_SNAPSHOT: u16 = 7;
 /// Frame kind: a snapshot delta (re-base) flowing master → peer.
 pub const KIND_SNAPSHOT_DELTA: u16 = 8;
+/// Frame kind: a chunk of points offered for admission, client → gateway
+/// (`occd serve`). An empty matrix marks end-of-stream.
+pub const KIND_INGEST: u16 = 9;
+/// Frame kind: the gateway's typed admission acknowledgement for one
+/// ingest chunk, gateway → client.
+pub const KIND_INGEST_ACK: u16 = 10;
+/// Frame kind: a live model query, client → gateway; answered with a
+/// [`KIND_SNAPSHOT`] frame.
+pub const KIND_QUERY: u16 = 11;
 
 fn wire_err(msg: impl Into<String>) -> Error {
     Error::Data(format!("wire: {}", msg.into()))
@@ -819,6 +851,137 @@ pub fn decode_snapshot_delta(payload: &[u8]) -> Result<SnapshotDelta> {
     let tail = get_matrix(&mut r)?;
     r.finish()?;
     Ok(SnapshotDelta { id, base_id, base_rows, tail })
+}
+
+// ---------------------------------------------------------------------------
+// Streaming ingest: chunks, acks, queries (`occd serve` client sessions)
+// ---------------------------------------------------------------------------
+
+/// One client chunk offered for admission: a client-chosen sequence number
+/// (echoed in the ack, so a pipelining client can match acks to chunks)
+/// and the points themselves. A 0-row matrix is the end-of-stream marker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ingest {
+    /// Client-chosen chunk sequence number, echoed verbatim in the ack.
+    pub seq: u64,
+    /// Points offered for admission; 0 rows = end-of-stream.
+    pub points: Matrix,
+}
+
+impl Ingest {
+    /// True if this chunk is the end-of-stream marker.
+    pub fn is_eos(&self) -> bool {
+        self.points.rows == 0
+    }
+}
+
+/// Typed admission outcome carried in a [`KIND_INGEST_ACK`] frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IngestStatus {
+    /// The chunk was admitted; ack `detail` = total points admitted so far.
+    Accepted,
+    /// The bounded admission queue is full; the chunk was **not** admitted
+    /// (re-send it). Ack `detail` = the configured queue bound.
+    Throttled,
+    /// The payload failed to decode or validate; the chunk was not
+    /// admitted and will never be (`message` says why). Framing stayed
+    /// intact, so the session survives.
+    Rejected,
+}
+
+impl IngestStatus {
+    fn code(self) -> u8 {
+        match self {
+            IngestStatus::Accepted => 0,
+            IngestStatus::Throttled => 1,
+            IngestStatus::Rejected => 2,
+        }
+    }
+    fn from_code(c: u8) -> Result<IngestStatus> {
+        match c {
+            0 => Ok(IngestStatus::Accepted),
+            1 => Ok(IngestStatus::Throttled),
+            2 => Ok(IngestStatus::Rejected),
+            other => Err(wire_err(format!("unknown ingest-ack status {other}"))),
+        }
+    }
+    /// Status name (logs / errors).
+    pub fn name(self) -> &'static str {
+        match self {
+            IngestStatus::Accepted => "accepted",
+            IngestStatus::Throttled => "throttled",
+            IngestStatus::Rejected => "rejected",
+        }
+    }
+}
+
+/// The gateway's per-chunk admission acknowledgement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IngestAck {
+    /// The chunk's `seq`, echoed verbatim.
+    pub seq: u64,
+    /// Typed admission outcome.
+    pub status: IngestStatus,
+    /// Status-dependent detail (admitted total / queue bound / 0).
+    pub detail: u64,
+    /// Human-readable rejection reason (empty otherwise).
+    pub message: String,
+}
+
+/// Serialize an ingest chunk (no frame header).
+pub fn encode_ingest(i: &Ingest) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, i.seq);
+    put_matrix(&mut b, &i.points);
+    b
+}
+
+/// A complete ingest frame, ready to write.
+pub fn ingest_frame(i: &Ingest) -> Result<Vec<u8>> {
+    frame(KIND_INGEST, encode_ingest(i))
+}
+
+/// Deserialize an ingest chunk. Geometry is validated (a rows×cols
+/// overflow or truncated payload is a typed error, never a panic) — the
+/// gateway turns such errors into `Rejected` acks rather than dropping
+/// the session.
+pub fn decode_ingest(payload: &[u8]) -> Result<Ingest> {
+    let mut r = Reader::new(payload);
+    let seq = r.u64()?;
+    let points = get_matrix(&mut r)?;
+    r.finish()?;
+    Ok(Ingest { seq, points })
+}
+
+/// Serialize an admission acknowledgement (no frame header).
+pub fn encode_ingest_ack(a: &IngestAck) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, a.seq);
+    put_u8(&mut b, a.status.code());
+    put_u64(&mut b, a.detail);
+    put_str(&mut b, &a.message);
+    b
+}
+
+/// A complete ingest-ack frame, ready to write.
+pub fn ingest_ack_frame(a: &IngestAck) -> Result<Vec<u8>> {
+    frame(KIND_INGEST_ACK, encode_ingest_ack(a))
+}
+
+/// Deserialize an admission acknowledgement.
+pub fn decode_ingest_ack(payload: &[u8]) -> Result<IngestAck> {
+    let mut r = Reader::new(payload);
+    let seq = r.u64()?;
+    let status = IngestStatus::from_code(r.u8()?)?;
+    let detail = r.u64()?;
+    let message = get_str(&mut r)?;
+    r.finish()?;
+    Ok(IngestAck { seq, status, detail, message })
+}
+
+/// A complete (empty-payload) model-query frame, ready to write.
+pub fn query_frame() -> Result<Vec<u8>> {
+    frame(KIND_QUERY, Vec::new())
 }
 
 // ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ pub mod generators;
 pub mod io;
 
 use crate::linalg::Matrix;
+use std::sync::{Arc, Mutex};
 
 /// A dense dataset of `n` points in `d` dimensions.
 #[derive(Debug, Clone)]
@@ -55,6 +56,39 @@ impl Dataset {
             seen.insert(l);
         }
         Some(seen.len())
+    }
+}
+
+/// A swappable handle on the current dataset generation.
+///
+/// Static runs build one [`Dataset`] up front and never touch it again;
+/// the streaming ingest service (`occd serve`) *grows* the dataset as
+/// mini-epochs are admitted. Read sites (job planning, block shipping,
+/// validation) take an `Arc` snapshot with [`DataCell::get`] — cheap, a
+/// mutex-guarded `Arc::clone` — and work against that immutable
+/// generation; the admission stage publishes a grown generation with
+/// [`DataCell::set`] *before* announcing the mini-epoch that reads it, so
+/// every epoch's span is always covered by the generation any later
+/// snapshot observes. Existing snapshots are unaffected (generations are
+/// immutable), which is what keeps in-flight waves bit-stable.
+#[derive(Debug)]
+pub struct DataCell(Mutex<Arc<Dataset>>);
+
+impl DataCell {
+    /// Wrap a dataset generation.
+    pub fn new(data: Arc<Dataset>) -> DataCell {
+        DataCell(Mutex::new(data))
+    }
+
+    /// Snapshot the current generation.
+    pub fn get(&self) -> Arc<Dataset> {
+        self.0.lock().expect("data cell poisoned").clone()
+    }
+
+    /// Publish a new generation. The new dataset must extend the old one
+    /// (same prefix rows, same width) — callers only ever append.
+    pub fn set(&self, data: Arc<Dataset>) {
+        *self.0.lock().expect("data cell poisoned") = data;
     }
 }
 

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!
 //! * `run`       — run OCC DP-means / OFL / BP-means end to end
+//! * `serve`     — streaming ingest gateway: admit a TCP firehose of
+//!   points into mini-epochs and learn online (see the README runbook)
+//! * `firehose`  — stream synthetic points into a running `occd serve`
 //! * `worker`    — serve the compute/validator peer loop for a remote
 //!   coordinator (the multi-host building block; see the README runbook)
 //! * `gen-data`  — generate a synthetic dataset to an `.occb` file
@@ -88,6 +91,57 @@ fn app() -> App {
                 .switch("quiet", "suppress the run report"),
         )
         .command(
+            Command::new("serve", "streaming ingest gateway: admit a point firehose, learn online")
+                .flag("config", "TOML config file", None)
+                .flag("listen", "host:port for ingest clients (port 0 = ephemeral)", Some("127.0.0.1:0"))
+                .flag("algo", "dpmeans | ofl | bpmeans", Some("dpmeans"))
+                .flag("lambda", "distance threshold λ", Some("1.0"))
+                .flag("procs", "worker processors P", Some("4"))
+                .flag("block", "points per processor per epoch b", Some("256"))
+                .flag("backend", "native | xla", Some("native"))
+                .flag("scheduler", "bsp | pipelined", Some("bsp"))
+                .flag(
+                    "speculation",
+                    "wave-engine depth K under --scheduler pipelined (1 = BSP), or `auto`",
+                    Some("2"),
+                )
+                .flag("io", "reactor | poll (event-loop blocking mode)", Some("reactor"))
+                .flag("validator-shards", "validator peers (0 = procs/2, min 1)", Some("0"))
+                .flag("peers", "comma-separated host:port of occd worker compute peers", None)
+                .flag(
+                    "validator-peers",
+                    "comma-separated host:port of occd worker validator peers",
+                    None,
+                )
+                .flag("batch-points", "points per mini-epoch (0 = P·b)", Some("0"))
+                .flag(
+                    "batch-latency-ms",
+                    "seal a partial mini-epoch after this wait (the admission SLA)",
+                    Some("50"),
+                )
+                .flag(
+                    "ingest-queue",
+                    "sealed mini-epochs the engine may lag before clients are throttled",
+                    Some("64"),
+                )
+                .flag("dim", "dimensionality", Some("16"))
+                .flag("seed", "RNG seed", Some("0"))
+                .flag("metrics", "metrics JSONL path (- for stdout)", None)
+                .switch("quiet", "suppress the run report"),
+        )
+        .command(
+            Command::new("firehose", "stream synthetic points into a running `occd serve`")
+                .flag("connect", "host:port of the gateway", Some("127.0.0.1:7400"))
+                .flag("data", "dp | bp | separable | file:<path>", Some("dp"))
+                .flag("n", "points to stream", Some("16384"))
+                .flag("dim", "dimensionality", Some("16"))
+                .flag("theta", "stick-breaking concentration", Some("1.0"))
+                .flag("seed", "RNG seed", Some("0"))
+                .flag("chunk", "points per ingest frame", Some("512"))
+                .switch("query", "fetch the final model snapshot after the EOS ack")
+                .switch("quiet", "suppress the session report"),
+        )
+        .command(
             Command::new("worker", "serve peer jobs for a remote occd coordinator")
                 .flag("listen", "host:port to listen on (port 0 = ephemeral)", Some("127.0.0.1:0"))
                 .flag("backend", "native | xla", Some("native"))
@@ -138,6 +192,8 @@ fn real_main(argv: &[String]) -> Result<i32> {
         }
         Dispatch::Run(cmd, parsed) => match cmd.name {
             "run" => cmd_run(&parsed),
+            "serve" => cmd_serve(&parsed),
+            "firehose" => cmd_firehose(&parsed),
             "worker" => cmd_worker(&parsed),
             "gen-data" => cmd_gen_data(&parsed),
             "simulate" => cmd_simulate(&parsed),
@@ -237,6 +293,15 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     if let Some(v) = p.get("metrics") {
         cfg.metrics_path = Some(PathBuf::from(v));
     }
+    if let Some(v) = p.get_parse::<usize>("batch-points")? {
+        cfg.batch_points = v;
+    }
+    if let Some(v) = p.get_parse::<u64>("batch-latency-ms")? {
+        cfg.batch_latency_ms = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("ingest-queue")? {
+        cfg.ingest_queue = v;
+    }
     cfg.normalize();
     cfg.validate()?;
     Ok(cfg)
@@ -293,6 +358,175 @@ fn cmd_run(p: &Parsed) -> Result<i32> {
             println!("dataset     : {} bytes shipped", out.summary.transport.dataset_bytes);
         }
         println!("wall clock  : {}", benchlib::fmt_duration(out.summary.total_time));
+    }
+    Ok(0)
+}
+
+/// `occd serve` — bind the ingest gateway and learn online from whatever
+/// firehose connects. Blocks until a client ends the stream (or the last
+/// client departs), then reports like `run`.
+fn cmd_serve(p: &Parsed) -> Result<i32> {
+    let cfg = build_config(p)?;
+    let listen = p.get("listen").unwrap_or("127.0.0.1:0");
+    let listener = bind_with_retry(listen)?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| Error::config(format!("serve local_addr: {e}")))?;
+    println!("occd serve ({}) listening on {addr}", cfg.algo.name());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    let out = occml::coordinator::serve::serve(&cfg, listener)?;
+    if !p.switch("quiet") {
+        let kind = match &out.model {
+            Model::Dp(_) => "clusters",
+            Model::Ofl(_) => "facilities",
+            Model::Bp(_) => "features",
+        };
+        let streamed: usize = out
+            .summary
+            .epochs
+            .iter()
+            .filter(|e| e.epoch != usize::MAX)
+            .map(|e| e.points)
+            .sum();
+        let batches = out.summary.epochs.iter().filter(|e| e.epoch != usize::MAX).count();
+        println!("algo        : {}", cfg.algo.name());
+        println!("scheduler   : {}", cfg.scheduler.name());
+        println!("io          : {}", cfg.io.name());
+        println!("streamed    : {streamed} points in {batches} mini-epochs");
+        println!("{kind:<12}: {}", out.model.k());
+        if let (Some(p50), Some(p95)) =
+            (out.summary.admission_wait_p50(), out.summary.admission_wait_p95())
+        {
+            println!(
+                "adm→commit  : p50 {} / p95 {}",
+                benchlib::fmt_duration(p50),
+                benchlib::fmt_duration(p95)
+            );
+        }
+        println!("queue depth : {} max (bound {})", out.summary.max_ingest_queue_depth(), cfg.ingest_queue);
+        if let Some(j) = out.summary.objective {
+            println!("objective J : {j:.4}");
+        }
+        println!("wall clock  : {}", benchlib::fmt_duration(out.summary.total_time));
+    }
+    Ok(0)
+}
+
+/// `occd firehose` — the synthetic ingest client: stream a generated
+/// dataset into a gateway chunk by chunk, honoring `Throttled` acks by
+/// re-sending, then end the stream and wait for the final ack.
+fn cmd_firehose(p: &Parsed) -> Result<i32> {
+    use occml::coordinator::wire::{self, Ingest, IngestStatus};
+    use std::io::Write as _;
+
+    let gen_cfg = RunConfig {
+        source: DataSource::parse(p.get("data").unwrap_or("dp"))?,
+        n: p.get_parse("n")?.unwrap_or(16384),
+        dim: p.get_parse("dim")?.unwrap_or(16),
+        theta: p.get_parse("theta")?.unwrap_or(1.0),
+        seed: p.get_parse("seed")?.unwrap_or(0),
+        ..RunConfig::default()
+    };
+    let ds = driver::load_or_generate(&gen_cfg)?;
+    let chunk = p.get_parse::<usize>("chunk")?.unwrap_or(512).max(1);
+    let addr = p.get("connect").unwrap_or("127.0.0.1:7400");
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| Error::config(format!("firehose connect {addr}: {e}")))?;
+    stream.set_nodelay(true).ok();
+
+    // Blocking-read one complete frame off the session.
+    let mut inbuf: Vec<u8> = Vec::new();
+    fn read_frame(
+        stream: &mut std::net::TcpStream,
+        inbuf: &mut Vec<u8>,
+    ) -> Result<(u16, Vec<u8>)> {
+        use std::io::Read as _;
+        let mut tmp = [0u8; 64 * 1024];
+        loop {
+            if let Some(f) = occml::coordinator::wire::poll_frame(inbuf)? {
+                return Ok(f);
+            }
+            let n = stream.read(&mut tmp).map_err(Error::Io)?;
+            if n == 0 {
+                return Err(Error::config("gateway closed the connection mid-session"));
+            }
+            inbuf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    let d = ds.dim();
+    let started = std::time::Instant::now();
+    let mut seq = 0u64;
+    let mut throttled = 0u64;
+    let mut lo = 0usize;
+    while lo < ds.len() {
+        let hi = (lo + chunk).min(ds.len());
+        let points = occml::linalg::Matrix {
+            rows: hi - lo,
+            cols: d,
+            data: ds.points.data[lo * d..hi * d].to_vec(),
+        };
+        loop {
+            let frame = wire::ingest_frame(&Ingest { seq, points: points.clone() })?;
+            stream.write_all(&frame).map_err(Error::Io)?;
+            let (kind, payload) = read_frame(&mut stream, &mut inbuf)?;
+            if kind != wire::KIND_INGEST_ACK {
+                return Err(Error::config(format!("expected ingest ack, got frame kind {kind}")));
+            }
+            let ack = wire::decode_ingest_ack(&payload)?;
+            match ack.status {
+                IngestStatus::Accepted => break,
+                IngestStatus::Throttled => {
+                    // Client-side backoff: the gateway told us the engine
+                    // is `detail` mini-epochs behind; ease off and re-send.
+                    throttled += 1;
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                IngestStatus::Rejected => {
+                    return Err(Error::config(format!(
+                        "chunk {seq} rejected: {}",
+                        ack.message
+                    )))
+                }
+            }
+        }
+        seq += 1;
+        lo = hi;
+    }
+
+    // End of stream; the ack arrives only once the model is final.
+    let eos = wire::ingest_frame(&Ingest { seq, points: occml::linalg::Matrix::zeros(0, d) })?;
+    stream.write_all(&eos).map_err(Error::Io)?;
+    let (kind, payload) = read_frame(&mut stream, &mut inbuf)?;
+    if kind != wire::KIND_INGEST_ACK {
+        return Err(Error::config(format!("expected final ack, got frame kind {kind}")));
+    }
+    let fin = wire::decode_ingest_ack(&payload)?;
+    if fin.status != IngestStatus::Accepted {
+        return Err(Error::config(format!("stream not accepted: {}", fin.message)));
+    }
+
+    let model_k = if p.switch("query") {
+        stream.write_all(&wire::query_frame()?).map_err(Error::Io)?;
+        let (kind, payload) = read_frame(&mut stream, &mut inbuf)?;
+        if kind != wire::KIND_SNAPSHOT {
+            return Err(Error::config(format!("expected snapshot, got frame kind {kind}")));
+        }
+        let (_, m) = wire::decode_snapshot(&payload)?;
+        Some(m.rows)
+    } else {
+        None
+    };
+
+    if !p.switch("quiet") {
+        println!("streamed    : {} points in {} chunks of ≤{}", ds.len(), seq, chunk);
+        println!("admitted    : {} (gateway total)", fin.detail);
+        println!("throttled   : {throttled} re-sends");
+        if let Some(k) = model_k {
+            println!("model rows  : {k}");
+        }
+        println!("wall clock  : {}", benchlib::fmt_duration(started.elapsed()));
     }
     Ok(0)
 }

@@ -127,6 +127,15 @@ pub struct EpochRecord {
     /// epoch. Each batch replaces what used to be several per-frame
     /// `write_all` syscalls. Zero in-proc.
     pub writev_batches: u64,
+    /// Admission→commit latency (`occd serve` only): wall-clock from the
+    /// admission stage sealing this mini-epoch to its commit. Zero for
+    /// static replay, whose epochs were never admitted. JSONL:
+    /// `admission_wait_ms`.
+    pub admission_wait: Duration,
+    /// Admission-queue depth observed when this mini-epoch was sealed
+    /// (`occd serve` only; 0 for static replay). A depth pinned at the
+    /// configured bound means clients are being throttled.
+    pub ingest_queue_depth: usize,
 }
 
 impl EpochRecord {
@@ -161,6 +170,8 @@ impl EpochRecord {
             ("handshake_ms", Json::Num(self.handshake_time.as_secs_f64() * 1e3)),
             ("reactor_wakeups", Json::Num(self.reactor_wakeups as f64)),
             ("writev_batches", Json::Num(self.writev_batches as f64)),
+            ("admission_wait_ms", Json::Num(self.admission_wait.as_secs_f64() * 1e3)),
+            ("ingest_queue_depth", Json::Num(self.ingest_queue_depth as f64)),
         ])
     }
 }
@@ -286,6 +297,38 @@ impl RunSummary {
     pub fn total_writev_batches(&self) -> u64 {
         self.epochs.iter().map(|e| e.writev_batches).sum()
     }
+    /// Admission→commit latency percentile across epochs that were
+    /// actually admitted (static-replay epochs, whose wait is zero, are
+    /// excluded). `q` in `[0, 1]` (nearest-rank on the sorted waits);
+    /// `None` when no epoch was admitted.
+    pub fn admission_wait_percentile(&self, q: f64) -> Option<Duration> {
+        let mut waits: Vec<Duration> = self
+            .epochs
+            .iter()
+            .filter(|e| e.admission_wait > Duration::ZERO)
+            .map(|e| e.admission_wait)
+            .collect();
+        if waits.is_empty() {
+            return None;
+        }
+        waits.sort_unstable();
+        let idx = ((waits.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        Some(waits[idx])
+    }
+    /// Median admission→commit latency (`occd serve`).
+    pub fn admission_wait_p50(&self) -> Option<Duration> {
+        self.admission_wait_percentile(0.50)
+    }
+    /// 95th-percentile admission→commit latency (`occd serve`).
+    pub fn admission_wait_p95(&self) -> Option<Duration> {
+        self.admission_wait_percentile(0.95)
+    }
+    /// Deepest admission queue any mini-epoch was sealed behind (0 for
+    /// static replay). Pinned at the configured bound = clients were
+    /// being throttled.
+    pub fn max_ingest_queue_depth(&self) -> usize {
+        self.epochs.iter().map(|e| e.ingest_queue_depth).max().unwrap_or(0)
+    }
 }
 
 /// Where metrics lines go.
@@ -388,6 +431,8 @@ mod tests {
             handshake_time: Duration::from_micros(100),
             reactor_wakeups: 3,
             writev_batches: 2,
+            admission_wait: Duration::from_millis(3),
+            ingest_queue_depth: 4,
         }
     }
 
@@ -450,6 +495,51 @@ mod tests {
         assert!(j.get("handshake_ms").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("reactor_wakeups").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("writev_batches").unwrap().as_usize(), Some(2));
+        assert!(j.get("admission_wait_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("ingest_queue_depth").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn admission_percentiles_skip_static_epochs() {
+        let mut epochs: Vec<EpochRecord> = (0..10)
+            .map(|i| {
+                let mut r = rec(0, i, 1, 1);
+                r.admission_wait = Duration::from_millis((i as u64 + 1) * 10);
+                r.ingest_queue_depth = i;
+                r
+            })
+            .collect();
+        // One static-replay epoch: zero wait, must not drag the median down.
+        let mut stat = rec(0, 10, 1, 1);
+        stat.admission_wait = Duration::ZERO;
+        stat.ingest_queue_depth = 0;
+        epochs.push(stat);
+        let s = RunSummary {
+            epochs,
+            final_centers: 1,
+            objective: None,
+            total_time: Duration::from_millis(1),
+            transport: Default::default(),
+        };
+        // Waits are 10..=100 ms; index round(9 * 0.5) = 5 → 60 ms.
+        assert_eq!(s.admission_wait_p50(), Some(Duration::from_millis(60)));
+        assert_eq!(s.admission_wait_p95(), Some(Duration::from_millis(100)));
+        assert_eq!(s.max_ingest_queue_depth(), 9);
+
+        let none = RunSummary {
+            epochs: vec![stat_rec()],
+            final_centers: 1,
+            objective: None,
+            total_time: Duration::from_millis(1),
+            transport: Default::default(),
+        };
+        assert_eq!(none.admission_wait_p50(), None);
+    }
+
+    fn stat_rec() -> EpochRecord {
+        let mut r = rec(0, 0, 1, 1);
+        r.admission_wait = Duration::ZERO;
+        r
     }
 
     #[test]

@@ -1,0 +1,456 @@
+//! `occd serve` end-to-end: the streaming ingest keystone.
+//!
+//! Each test stands up the real gateway (`serve::serve`) on an ephemeral
+//! loopback listener and drives it with a wire-level firehose client. The
+//! keystone property: the model learned from the live stream is
+//! **bit-identical** to replaying the same admitted spans as a static
+//! span list over the final dataset through the same `run_streaming`
+//! engine — when the points arrived must not matter, only the order they
+//! were admitted in (Thm 3.1).
+//!
+//! Around the keystone: typed rejection acks for malformed frames,
+//! observable `Throttled` backpressure at the bounded admission queue,
+//! and a chaos run that kills a worker process mid-stream and still
+//! demands the bit-identical model after recovery.
+
+use occml::config::{Algo, RunConfig, SchedulerKind, ShardingKind, TransportKind};
+use occml::coordinator::driver::{self, Model, RunOutput};
+use occml::coordinator::scheduler::StaticSource;
+use occml::coordinator::serve;
+use occml::coordinator::wire::{self, Ingest, IngestAck, IngestStatus};
+use occml::data::generators::{bp_features, dp_clusters, GenConfig};
+use occml::data::{DataCell, Dataset};
+use occml::linalg::Matrix;
+use occml::metrics::MetricsSink;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------------
+
+/// Watchdog: fail fast instead of wedging CI on a hung stream.
+fn with_timeout<T: Send + 'static>(
+    secs: u64,
+    name: &'static str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            let _ = t.join();
+            v
+        }
+        Err(_) => panic!("{name}: timed out after {secs}s — wedged gateway or engine"),
+    }
+}
+
+fn gen_data(algo: Algo, n: usize, dim: usize, seed: u64) -> Arc<Dataset> {
+    let gen = GenConfig { n, dim, theta: 1.0, seed };
+    Arc::new(match algo {
+        Algo::BpMeans => bp_features(&gen),
+        _ => dp_clusters(&gen),
+    })
+}
+
+/// The serve invariants, written out explicitly so the replay config is
+/// *identical* to what the gateway runs (serve re-forces them anyway).
+fn stream_cfg(algo: Algo, dim: usize, seed: u64) -> RunConfig {
+    RunConfig {
+        algo,
+        lambda: 1.0,
+        procs: 2,
+        block: 8, // default mini-epoch = P·b = 16 points
+        iterations: 1,
+        bootstrap_div: 0,
+        validator_shards: 1,
+        transport: TransportKind::Tcp,
+        sharding: ShardingKind::Hash,
+        scheduler: SchedulerKind::Pipelined,
+        speculation: 2,
+        seed,
+        dim,
+        ..RunConfig::default()
+    }
+}
+
+/// Launch `serve` on an ephemeral listener; returns the address and the
+/// join handle for the run's output.
+fn spawn_serve(
+    cfg: RunConfig,
+) -> (String, std::thread::JoinHandle<occml::Result<RunOutput>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind gateway listener");
+    let addr = listener.local_addr().expect("gateway addr").to_string();
+    let h = std::thread::spawn(move || serve::serve(&cfg, listener));
+    (addr, h)
+}
+
+/// A minimal wire-level firehose client.
+struct Firehose {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+}
+
+impl Firehose {
+    fn connect(addr: &str) -> Firehose {
+        let stream = TcpStream::connect(addr).expect("connect to gateway");
+        stream.set_nodelay(true).ok();
+        Firehose { stream, inbuf: Vec::new() }
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) {
+        self.stream.write_all(bytes).expect("write to gateway");
+    }
+
+    /// Blocking-read the next complete frame.
+    fn read_frame(&mut self) -> (u16, Vec<u8>) {
+        let mut tmp = [0u8; 64 * 1024];
+        loop {
+            if let Some(f) = wire::poll_frame(&mut self.inbuf).expect("client-side framing") {
+                return f;
+            }
+            let n = self.stream.read(&mut tmp).expect("read from gateway");
+            assert!(n > 0, "gateway closed the connection mid-session");
+            self.inbuf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    fn read_ack(&mut self) -> IngestAck {
+        let (kind, payload) = self.read_frame();
+        assert_eq!(kind, wire::KIND_INGEST_ACK, "expected an ingest ack");
+        wire::decode_ingest_ack(&payload).expect("decodable ack")
+    }
+
+    /// One ingest attempt (no retry) for `points`.
+    fn offer(&mut self, seq: u64, points: Matrix) -> IngestAck {
+        let frame = wire::ingest_frame(&Ingest { seq, points }).expect("encode ingest");
+        self.send_raw(&frame);
+        self.read_ack()
+    }
+
+    /// Stream the whole dataset in `chunk`-point frames, re-sending on
+    /// `Throttled`; returns how many throttle bounces were observed.
+    fn stream_all(&mut self, ds: &Dataset, chunk: usize) -> u64 {
+        let d = ds.dim();
+        let mut throttled = 0;
+        let mut seq = 0u64;
+        let mut lo = 0;
+        while lo < ds.len() {
+            let hi = (lo + chunk).min(ds.len());
+            let m = Matrix {
+                rows: hi - lo,
+                cols: d,
+                data: ds.points.data[lo * d..hi * d].to_vec(),
+            };
+            loop {
+                match self.offer(seq, m.clone()) {
+                    IngestAck { status: IngestStatus::Accepted, .. } => break,
+                    IngestAck { status: IngestStatus::Throttled, .. } => throttled += 1,
+                    ack => panic!("chunk {seq} rejected: {}", ack.message),
+                }
+            }
+            seq += 1;
+            lo = hi;
+        }
+        throttled
+    }
+
+    /// End the stream; blocks until the gateway's deferred final ack.
+    fn eos(&mut self, seq: u64, dim: usize) -> IngestAck {
+        let frame = wire::ingest_frame(&Ingest { seq, points: Matrix::zeros(0, dim) })
+            .expect("encode eos");
+        self.send_raw(&frame);
+        self.read_ack()
+    }
+
+    /// Fetch the final model snapshot.
+    fn query(&mut self) -> Matrix {
+        self.send_raw(&wire::query_frame().expect("encode query"));
+        let (kind, payload) = self.read_frame();
+        assert_eq!(kind, wire::KIND_SNAPSHOT, "expected a model snapshot");
+        wire::decode_snapshot(&payload).expect("decodable snapshot").1
+    }
+}
+
+/// Reconstruct the admitted mini-epoch spans from the live run's epoch
+/// records (commit order = epoch order; recompute pseudo-epochs excluded).
+fn admitted_spans(out: &RunOutput) -> Vec<Range<usize>> {
+    let mut spans = Vec::new();
+    let mut lo = 0;
+    for e in out.summary.epochs.iter().filter(|e| e.epoch != usize::MAX) {
+        spans.push(lo..lo + e.points);
+        lo += e.points;
+    }
+    spans
+}
+
+/// Replay the admitted spans as a static source over the final dataset —
+/// the same engine, the same config, a different [`EpochSource`].
+fn replay(cfg: &RunConfig, ds: &Arc<Dataset>, spans: Vec<Range<usize>>) -> RunOutput {
+    let cell = Arc::new(DataCell::new(ds.clone()));
+    let mut src = StaticSource::new(spans);
+    let mut sink = MetricsSink::Null;
+    driver::run_streaming(cfg, cell, &mut src, &mut sink, |_| {})
+        .expect("static replay of the admitted order")
+}
+
+/// Bit-exact model comparison (no tolerance: serializability is exact).
+fn assert_models_identical(a: &Model, b: &Model, ctx: &str) {
+    match (a, b) {
+        (Model::Dp(x), Model::Dp(y)) => {
+            assert_eq!(x.centers.data, y.centers.data, "{ctx}: centers");
+            assert_eq!(x.assignments, y.assignments, "{ctx}: assignments");
+            assert_eq!(x.created_per_pass, y.created_per_pass, "{ctx}: created_per_pass");
+        }
+        (Model::Ofl(x), Model::Ofl(y)) => {
+            assert_eq!(x.centers.data, y.centers.data, "{ctx}: facilities");
+            assert_eq!(x.assignments, y.assignments, "{ctx}: assignments");
+            assert_eq!(x.opened_by, y.opened_by, "{ctx}: opened_by");
+        }
+        (Model::Bp(x), Model::Bp(y)) => {
+            assert_eq!(x.features.data, y.features.data, "{ctx}: features");
+            assert_eq!(x.assignments, y.assignments, "{ctx}: assignments");
+            assert_eq!(x.created_per_pass, y.created_per_pass, "{ctx}: created_per_pass");
+        }
+        _ => panic!("{ctx}: model kinds differ"),
+    }
+}
+
+fn model_matrix(m: &Model) -> &Matrix {
+    match m {
+        Model::Dp(m) => &m.centers,
+        Model::Ofl(m) => &m.centers,
+        Model::Bp(m) => &m.features,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Keystone: stream ≡ replay, bit for bit, for all three algorithms
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streamed_model_bitidentical_to_static_replay_across_algos() {
+    with_timeout(300, "stream-vs-replay keystone", || {
+        for algo in [Algo::DpMeans, Algo::Ofl, Algo::BpMeans] {
+            let seed = 11;
+            let dim = 8;
+            let ds = gen_data(algo, 230, dim, seed);
+            let cfg = stream_cfg(algo, dim, seed);
+            let (addr, h) = spawn_serve(cfg.clone());
+
+            let mut client = Firehose::connect(&addr);
+            // 17-point chunks: never a multiple of the 16-point mini-epoch,
+            // so size seals and SLA seals both occur.
+            client.stream_all(&ds, 17);
+            let fin = client.eos(u64::MAX, dim);
+            assert_eq!(fin.status, IngestStatus::Accepted, "{algo:?}: {}", fin.message);
+            assert_eq!(fin.detail, 230, "{algo:?}: every offered point admitted");
+            let snapshot = client.query();
+            drop(client);
+
+            let live = h.join().expect("serve thread").expect("streamed run");
+            assert_eq!(
+                model_matrix(&live.model).data,
+                snapshot.data,
+                "{algo:?}: the queried snapshot IS the final model"
+            );
+
+            let spans = admitted_spans(&live);
+            let n: usize = spans.iter().map(|s| s.len()).sum();
+            assert_eq!(n, 230, "{algo:?}: admitted spans must cover the stream");
+            assert!(
+                spans.len() > 230 / 16,
+                "{algo:?}: expected at least one SLA-sealed partial mini-epoch"
+            );
+            // Live admission metadata must have been recorded.
+            assert!(live.summary.admission_wait_p50().is_some(), "{algo:?}: p50");
+            assert!(
+                live.summary.admission_wait_p95() >= live.summary.admission_wait_p50(),
+                "{algo:?}: percentile ordering"
+            );
+
+            let rep = replay(&cfg, &ds, spans);
+            assert_models_identical(
+                &live.model,
+                &rep.model,
+                &format!("{algo:?}: live stream vs static replay"),
+            );
+            assert_eq!(
+                live.summary.objective, rep.summary.objective,
+                "{algo:?}: objectives must match bit for bit"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Gateway robustness: typed rejections, the session survives
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_frames_get_typed_rejection_acks() {
+    with_timeout(120, "typed rejections", || {
+        let cfg = stream_cfg(Algo::DpMeans, 4, 3);
+        let (addr, h) = spawn_serve(cfg);
+        let mut client = Firehose::connect(&addr);
+
+        // Wrong dimensionality: typed Rejected, session survives.
+        let ack = client.offer(1, Matrix::zeros(3, 7));
+        assert_eq!(ack.status, IngestStatus::Rejected);
+        assert!(ack.message.contains("dim"), "untyped rejection: {}", ack.message);
+
+        // A frame kind that has no business on an ingest session: typed
+        // Rejected, session survives.
+        let stray = wire::snapshot_frame(0, &Matrix::zeros(0, 4)).unwrap();
+        client.send_raw(&stray);
+        let ack = client.read_ack();
+        assert_eq!(ack.status, IngestStatus::Rejected);
+        assert!(
+            ack.message.contains("unexpected frame kind"),
+            "untyped rejection: {}",
+            ack.message
+        );
+
+        // The session genuinely survived: a well-formed chunk still lands.
+        let ack = client.offer(2, Matrix::zeros(2, 4));
+        assert_eq!(ack.status, IngestStatus::Accepted);
+        assert_eq!(ack.detail, 2);
+
+        // Garbage bytes kill framing: one last typed Rejected, then the
+        // gateway closes the connection.
+        client.send_raw(b"definitely not an OCCM frame");
+        let ack = client.read_ack();
+        assert_eq!(ack.status, IngestStatus::Rejected);
+        assert!(ack.message.contains("unreadable frame"), "{}", ack.message);
+        let mut tail = Vec::new();
+        let closed = client.stream.read_to_end(&mut tail).map(|n| n == 0).unwrap_or(true);
+        assert!(closed, "gateway must close a session with broken framing");
+        drop(client);
+
+        // The departed client ends the stream implicitly; the run still
+        // completes over whatever was admitted.
+        let out = h.join().expect("serve thread").expect("run over 2 admitted points");
+        let n: usize = admitted_spans(&out).iter().map(|s| s.len()).sum();
+        assert_eq!(n, 2, "only the well-formed chunk was admitted");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Backpressure: the bounded queue throttles, visibly, and stays exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn backpressure_throttles_at_the_queue_bound_and_stays_bitexact() {
+    with_timeout(240, "bounded-queue backpressure", || {
+        let seed = 17;
+        let dim = 6;
+        let ds = gen_data(Algo::DpMeans, 48, dim, seed);
+        // One point per mini-epoch and a 2-deep queue: a full engine wave
+        // per point, so a tight-loop client must outrun it and bounce.
+        let mut cfg = stream_cfg(Algo::DpMeans, dim, seed);
+        cfg.scheduler = SchedulerKind::Bsp;
+        cfg.batch_points = 1;
+        cfg.ingest_queue = 2;
+        let (addr, h) = spawn_serve(cfg.clone());
+
+        let mut client = Firehose::connect(&addr);
+        let throttled = client.stream_all(&ds, 1);
+        let fin = client.eos(u64::MAX, dim);
+        assert_eq!(fin.status, IngestStatus::Accepted, "{}", fin.message);
+        assert_eq!(fin.detail, 48, "throttled chunks are re-sent, never lost");
+        drop(client);
+
+        let live = h.join().expect("serve thread").expect("throttled run");
+        assert!(
+            throttled > 0,
+            "a tight-loop client against a 2-deep queue must observe Throttled"
+        );
+        let max_depth = live.summary.max_ingest_queue_depth();
+        assert!(
+            (1..=2).contains(&max_depth),
+            "recorded queue depth must stay within the bound: {max_depth}"
+        );
+
+        // Backpressure must not bend the model: replay is still identical.
+        let spans = admitted_spans(&live);
+        assert_eq!(spans.iter().map(|s| s.len()).sum::<usize>(), 48);
+        let rep = replay(&cfg, &ds, spans);
+        assert_models_identical(&live.model, &rep.model, "throttled stream vs replay");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Chaos: kill a worker process mid-stream
+// ---------------------------------------------------------------------------
+
+/// Spawn `occd worker --listen <listen> --persist` (see process_cluster.rs).
+fn spawn_worker_on(listen: &str) -> (std::process::Child, String) {
+    use std::io::{BufRead, BufReader};
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_occd"))
+        .args(["worker", "--listen", listen, "--persist"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn occd worker");
+    let stdout = child.stdout.take().expect("worker stdout piped");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("worker banner");
+    let addr = line.trim().rsplit(' ').next().expect("worker addr").to_string();
+    assert!(addr.contains(':'), "bad worker banner: {line:?}");
+    (child, addr)
+}
+
+#[test]
+fn chaos_worker_kill_mid_stream_recovers_and_stays_bitexact() {
+    with_timeout(300, "mid-stream worker kill", || {
+        let seed = 23;
+        let dim = 8;
+        let ds = gen_data(Algo::DpMeans, 4_000, dim, seed);
+        let (mut w1, w1_addr) = spawn_worker_on("127.0.0.1:0");
+        let (mut victim, victim_addr) = spawn_worker_on("127.0.0.1:0");
+        let mut cfg = stream_cfg(Algo::DpMeans, dim, seed);
+        cfg.peers = vec![w1_addr, victim_addr.clone()];
+        cfg.reconnect_attempts = 40;
+        cfg.normalize();
+        let (addr, h) = spawn_serve(cfg.clone());
+
+        // The assassin: kill the victim mid-stream, stand up a replacement
+        // on the same port (the coordinator's reconnect target).
+        let killer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            let _ = victim.kill();
+            let _ = victim.wait();
+            spawn_worker_on(&victim_addr).0
+        });
+
+        let mut client = Firehose::connect(&addr);
+        client.stream_all(&ds, 64);
+        let fin = client.eos(u64::MAX, dim);
+        assert_eq!(fin.status, IngestStatus::Accepted, "{}", fin.message);
+        assert_eq!(fin.detail, 4_000);
+        drop(client);
+
+        let live = h.join().expect("serve thread").expect("stream must survive the kill");
+        let mut replacement = killer.join().expect("killer thread");
+
+        let spans = admitted_spans(&live);
+        assert_eq!(spans.iter().map(|s| s.len()).sum::<usize>(), 4_000);
+        // Replay on plain loopback threads (no processes): the model must
+        // not care that a worker died and was replaced mid-stream.
+        let mut replay_cfg = cfg.clone();
+        replay_cfg.peers = Vec::new();
+        let rep = replay(&replay_cfg, &ds, spans);
+        assert_models_identical(&live.model, &rep.model, "killed worker mid-stream vs replay");
+
+        let _ = replacement.kill();
+        let _ = replacement.wait();
+        let _ = w1.kill();
+        let _ = w1.wait();
+    });
+}
