@@ -5,7 +5,7 @@ Usage: check_bench.py BENCH_schedulers.json schedulers_baseline.json
 
 Reads the machine-readable bench output (one row per algo x scheduler x
 speculation x sharding x transport x io x frugal_wire cell) and applies
-five gates:
+seven gates:
 
 1. Wire bytes (BSP): the dpmeans tcp wire bytes per epoch, relative to the
    run's own full-snapshot (frugal_wire=false) measurement. The baseline
@@ -36,6 +36,13 @@ five gates:
    wakeup path that `occd serve` rides. Relative within one run, like
    gate 5, so it carries no recorded baseline number. Skipped with a
    notice on schema-4 artifacts, which predate the ingest experiment.
+7. Assignment-kernel throughput (schema 6): the assign experiment's
+   kernel=panel row must strictly beat its kernel=scalar twin on
+   points_per_sec. The bench itself asserts the two kernels agree
+   bitwise before timing, so this gate is purely about the cache-tiled
+   kernel earning its keep. Relative within one run, like gates 5/6, so
+   no recorded baseline number. Skipped with a notice on schema-5
+   artifacts, which predate the kernel knob.
 """
 
 import json
@@ -204,6 +211,36 @@ def main() -> int:
             failures += 1
     else:
         print("ingest gate: skipped (schema < 5 artifact has no ingest experiment)")
+
+    # Gate 7: the cache-tiled panel kernel must strictly beat the scalar
+    # reference on assignment throughput. Bit-identity across kernels is
+    # asserted inside the bench before timing, so a regression here is a
+    # pure performance loss, never a correctness trade.
+    if bench.get("schema", 0) >= 6:
+        def kernel_row(kernel):
+            for r in bench["rows"]:
+                if r.get("experiment") == "assign" and r.get("kernel") == kernel:
+                    return r
+            print(f"missing assign row for kernel={kernel}", file=sys.stderr)
+            sys.exit(1)
+
+        panel = kernel_row("panel")
+        scalar = kernel_row("scalar")
+        pps, sps = panel["points_per_sec"], scalar["points_per_sec"]
+        print(
+            f"kernel gate: panel={pps:.0f} points/sec vs scalar={sps:.0f} points/sec "
+            f"({panel['points']:.0f} pts x {panel['centers']:.0f} centers, "
+            f"d={panel['dim']:.0f})"
+        )
+        if pps <= sps:
+            print(
+                f"panel kernel must strictly beat scalar on points/sec "
+                f"({pps:.0f} vs {sps:.0f})",
+                file=sys.stderr,
+            )
+            failures += 1
+    else:
+        print("kernel gate: skipped (schema < 6 artifact has no assign experiment)")
 
     if failures:
         return 1

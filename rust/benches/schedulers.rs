@@ -53,6 +53,14 @@
 //! idle-slice sleep on p50 (gate 6 in `check_bench.py`), with the
 //! streamed twins bit-identical.
 //!
+//! Schema 6 adds an **assignment-kernel throughput experiment**
+//! (`experiment = "assign"`): one nearest-center sweep of a point block
+//! against an L2-busting k×d snapshot, `kernel = "panel"` (tiled, cached
+//! norms) vs `kernel = "scalar"` (flat reference), through the same
+//! `ComputeBackend::nearest_with` dispatch the workers use, reporting
+//! `points_per_sec` per kernel. The kernels must agree bitwise before
+//! timing; gate 7 in `check_bench.py` asserts panel strictly wins.
+//!
 //! Defaults keep single-machine runtime in seconds; pass `--n=…`, `--pb=…`,
 //! `--procs=…`, `--reps=…` to scale up.
 
@@ -585,10 +593,8 @@ fn main() {
             let cfg = RunConfig { io, ..ing_base.clone() };
             let mut best: Option<driver::RunOutput> = None;
             for _ in 0..reps {
-                let cell = Arc::new(DataCell::new(Arc::new(Dataset {
-                    points: Matrix::zeros(0, pool.dim()),
-                    labels: None,
-                })));
+                let cell =
+                    Arc::new(DataCell::new(Arc::new(Dataset::new(Matrix::zeros(0, pool.dim()), None))));
                 let (tx, rx) = std::sync::mpsc::channel();
                 let depth = Arc::new(AtomicUsize::new(0));
                 let waker = Arc::new(WakerSlot::new());
@@ -603,14 +609,15 @@ fn main() {
                             let hi = (lo + ing_batch).min(pool.len());
                             // Grown generation published BEFORE the epoch
                             // is announced — the serve admission protocol.
-                            cell.set(Arc::new(Dataset {
-                                points: Matrix {
+                            cell.set(Arc::new(Dataset::with_norms(
+                                Matrix {
                                     rows: hi,
                                     cols: d,
                                     data: pool.points.data[..hi * d].to_vec(),
                                 },
-                                labels: None,
-                            }));
+                                None,
+                                pool.norms[..hi].to_vec(),
+                            )));
                             let qd = depth.fetch_add(1, Ordering::SeqCst) + 1;
                             if tx
                                 .send(SealedBatch {
@@ -706,10 +713,96 @@ fn main() {
         ing_table.print();
     }
 
+    // --- Assignment-kernel throughput: kernel = "panel" vs "scalar" ------
+    // The schema-6 experiment times the worker-side hot loop in isolation:
+    // one nearest-center sweep of a point block against a k×d snapshot too
+    // large for L2, through the same `ComputeBackend::nearest_with`
+    // dispatch the cluster workers use. The panel kernel re-uses each
+    // ≤32-center tile across a 64-point panel (plus the memoized norms);
+    // the scalar reference re-streams all k×d center bytes per point.
+    // Bit-identity of (idx, d²) across kernels is asserted BEFORE timing —
+    // the speedup is only meaningful because the answer is unchanged.
+    // Gate 7 in `check_bench.py` asserts panel strictly wins points/sec.
+    {
+        use occml::config::KernelKind;
+        use occml::data::generators::{dp_clusters, GenConfig};
+        use occml::linalg::panel::center_norms;
+        use occml::runtime::{Block, ComputeBackend};
+        use std::time::Instant;
+
+        let asn: usize = args.get_or("asn", 4096).min(n);
+        let (ak, ad) = (8192usize, 64usize);
+        let points = dp_clusters(&GenConfig { n: asn, dim: ad, theta: 1.0, seed: 7 });
+        let centers = dp_clusters(&GenConfig { n: ak, dim: ad, theta: 1.0, seed: 99 }).points;
+        let cnorms = center_norms(&centers);
+
+        let sweep = |kernel: KernelKind| {
+            let backend = NativeBackend::with_kernel(kernel);
+            let (mut idx, mut d2) = (vec![0u32; asn], vec![0.0f32; asn]);
+            // One warm sweep outside the clock, then best of `reps`.
+            backend
+                .nearest_with(
+                    Block::of_dataset(&points, 0..asn),
+                    &centers,
+                    Some(&cnorms),
+                    &mut idx,
+                    &mut d2,
+                )
+                .expect("assign sweep");
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let t = Instant::now();
+                backend
+                    .nearest_with(
+                        Block::of_dataset(&points, 0..asn),
+                        &centers,
+                        Some(&cnorms),
+                        &mut idx,
+                        &mut d2,
+                    )
+                    .expect("assign sweep");
+                best = best.min(t.elapsed().as_secs_f64());
+            }
+            (idx, d2, best)
+        };
+        let (pi, pd, pt) = sweep(KernelKind::Panel);
+        let (si, sd, st) = sweep(KernelKind::Scalar);
+        if pi != si || pd.iter().zip(&sd).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            failures.push(
+                "assign: panel and scalar kernels disagree bitwise — tiling leaked into \
+                 the arithmetic"
+                    .into(),
+            );
+        }
+        let mut asn_table = Table::new(&["kernel", "sweep", "points/sec"]);
+        println!(
+            "\n=== assignment kernel throughput: {asn} points × {ak} centers, d={ad} — \
+             best of {reps} ==="
+        );
+        for (kernel, secs) in [(KernelKind::Panel, pt), (KernelKind::Scalar, st)] {
+            let pps = asn as f64 / secs.max(1e-12);
+            asn_table.row(vec![
+                kernel.name().to_string(),
+                format!("{:.2} ms", secs * 1e3),
+                format!("{pps:.0}"),
+            ]);
+            rows.push(obj(vec![
+                ("experiment", Json::Str("assign".to_string())),
+                ("kernel", Json::Str(kernel.name().to_string())),
+                ("points", Json::Num(asn as f64)),
+                ("centers", Json::Num(ak as f64)),
+                ("dim", Json::Num(ad as f64)),
+                ("wall_ms", Json::Num(secs * 1e3)),
+                ("points_per_sec", Json::Num(pps)),
+            ]));
+        }
+        asn_table.print();
+    }
+
     // Machine-readable results for cross-PR perf tracking (schema in the
     // README; consumed by CI's bench-smoke regression gate).
     let doc = obj(vec![
-        ("schema", Json::Num(5.0)),
+        ("schema", Json::Num(6.0)),
         ("bench", Json::Str("schedulers".to_string())),
         (
             "params",

@@ -40,6 +40,22 @@ pub fn descend_z(
     residual: &mut [f32],
     sweeps: usize,
 ) -> f32 {
+    descend_z_with(x, features, None, z, residual, sweeps)
+}
+
+/// [`descend_z`] with an optional memoized `norm2` per feature row —
+/// block callers hoist the norms out of their point loop (features are
+/// invariant across a block call). `fnorms[k]` must equal
+/// `norm2(features.row(k))` bitwise; passing `None` recomputes,
+/// bit-identically.
+pub fn descend_z_with(
+    x: &[f32],
+    features: &Matrix,
+    fnorms: Option<&[f32]>,
+    z: &mut [bool],
+    residual: &mut [f32],
+    sweeps: usize,
+) -> f32 {
     debug_assert_eq!(z.len(), features.rows);
     debug_assert_eq!(x.len(), residual.len());
     // residual = x − Σ_{k: z_k} f_k
@@ -53,7 +69,10 @@ pub fn descend_z(
         let mut changed = false;
         for k in 0..features.rows {
             let f = features.row(k);
-            let fn2 = norm2(f);
+            let fn2 = match fnorms {
+                Some(v) => v[k],
+                None => norm2(f),
+            };
             if fn2 == 0.0 {
                 continue;
             }
@@ -201,7 +220,7 @@ mod tests {
             pts.extend_from_slice(&[0.0, 5.0, 0.0]);
             pts.extend_from_slice(&[5.0, 5.0, 0.0]);
         }
-        Dataset { points: Matrix::from_vec(12, 3, pts), labels: None }
+        Dataset::new(Matrix::from_vec(12, 3, pts), None)
     }
 
     #[test]
@@ -271,7 +290,7 @@ mod tests {
 
     #[test]
     fn empty_dataset_ok() {
-        let ds = Dataset { points: Matrix::zeros(0, 3), labels: None };
+        let ds = Dataset::new(Matrix::zeros(0, 3), None);
         let m = serial_bp_means(&ds, 1.0, 3, 1);
         assert_eq!(m.features.rows, 0);
         assert!(m.converged);

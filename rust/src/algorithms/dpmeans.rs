@@ -38,7 +38,9 @@ pub fn serial_dp_means(data: &Dataset, lambda: f64, max_iters: usize) -> DpModel
     let n = data.len();
     let d = data.dim();
     let lambda2 = (lambda * lambda) as f32;
-    let mut centers = Matrix::zeros(0, d);
+    // Seed a modest row capacity so early cluster creation doesn't realloc;
+    // push_row doubles geometrically from there.
+    let mut centers = Matrix::with_row_capacity(32.min(n), d);
     let mut assignments = vec![u32::MAX; n];
     let mut created_per_pass = Vec::new();
     let mut converged = false;
@@ -84,7 +86,7 @@ pub fn serial_dp_means(data: &Dataset, lambda: f64, max_iters: usize) -> DpModel
 /// centers created from scratch on one pass of the data.
 pub fn serial_dp_first_pass(data: &Dataset, lambda: f64) -> Matrix {
     let lambda2 = (lambda * lambda) as f32;
-    let mut centers = Matrix::zeros(0, data.dim());
+    let mut centers = Matrix::with_row_capacity(32.min(data.len()), data.dim());
     for i in 0..data.len() {
         let x = data.point(i);
         let (_, d2) = crate::linalg::nearest(x, &centers);
@@ -107,7 +109,7 @@ mod tests {
             0.0, 0.0, 0.1, 0.0, 0.0, 0.1, //
             10.0, 10.0, 10.1, 10.0, 10.0, 10.1,
         ];
-        Dataset { points: Matrix::from_vec(6, 2, pts), labels: None }
+        Dataset::new(Matrix::from_vec(6, 2, pts), None)
     }
 
     #[test]
@@ -178,7 +180,7 @@ mod tests {
 
     #[test]
     fn empty_dataset() {
-        let ds = Dataset { points: Matrix::zeros(0, 4), labels: None };
+        let ds = Dataset::new(Matrix::zeros(0, 4), None);
         let m = serial_dp_means(&ds, 1.0, 3);
         assert_eq!(m.centers.rows, 0);
         assert!(m.converged);

@@ -5,7 +5,7 @@
 //! the representation error under binary feature combinations.
 
 use crate::data::Dataset;
-use crate::linalg::{blocked, Matrix};
+use crate::linalg::{panel, Matrix};
 
 /// DP-means / facility-location objective `J(C)` (Eq. 5).
 pub fn dp_objective(data: &Dataset, centers: &Matrix, lambda: f64) -> f64 {
@@ -14,7 +14,7 @@ pub fn dp_objective(data: &Dataset, centers: &Matrix, lambda: f64) -> f64 {
     }
     let mut idx = vec![0u32; data.len()];
     let mut d2 = vec![0.0f32; data.len()];
-    blocked::nearest_blocked(&data.points, centers, &mut idx, &mut d2);
+    panel::nearest_panel(&data.points, Some(&data.norms), centers, None, &mut idx, &mut d2);
     let service: f64 = d2.iter().map(|&v| v as f64).sum();
     service + lambda * lambda * centers.rows as f64
 }
@@ -47,10 +47,7 @@ mod tests {
     use crate::data::Dataset;
 
     fn ds() -> Dataset {
-        Dataset {
-            points: Matrix::from_vec(3, 2, vec![0.0, 0.0, 2.0, 0.0, 0.0, 2.0]),
-            labels: None,
-        }
+        Dataset::new(Matrix::from_vec(3, 2, vec![0.0, 0.0, 2.0, 0.0, 0.0, 2.0]), None)
     }
 
     #[test]
@@ -66,17 +63,14 @@ mod tests {
 
     #[test]
     fn dp_objective_empty_cases() {
-        let empty = Dataset { points: Matrix::zeros(0, 2), labels: None };
+        let empty = Dataset::new(Matrix::zeros(0, 2), None);
         assert_eq!(dp_objective(&empty, &Matrix::zeros(0, 2), 1.0), 0.0);
         assert!(dp_objective(&ds(), &Matrix::zeros(0, 2), 1.0).is_infinite());
     }
 
     #[test]
     fn bp_objective_hand_computed() {
-        let data = Dataset {
-            points: Matrix::from_vec(2, 2, vec![1.0, 0.0, 1.0, 1.0]),
-            labels: None,
-        };
+        let data = Dataset::new(Matrix::from_vec(2, 2, vec![1.0, 0.0, 1.0, 1.0]), None);
         let mut f = Matrix::zeros(0, 2);
         f.push_row(&[1.0, 0.0]);
         f.push_row(&[0.0, 1.0]);

@@ -78,7 +78,7 @@ mod tests {
 
     #[test]
     fn first_point_always_opens() {
-        let ds = Dataset { points: Matrix::from_vec(1, 2, vec![3.0, 4.0]), labels: None };
+        let ds = Dataset::new(Matrix::from_vec(1, 2, vec![3.0, 4.0]), None);
         let m = serial_ofl_with(&ds, 1.0, |_| 0.999_999);
         assert_eq!(m.centers.rows, 1);
         assert_eq!(m.opened_by, vec![0]);
@@ -88,7 +88,7 @@ mod tests {
     fn far_points_always_open() {
         // Distances >> λ force p_open = 1 regardless of draws.
         let pts = vec![0.0, 0.0, 100.0, 0.0, 0.0, 100.0];
-        let ds = Dataset { points: Matrix::from_vec(3, 2, pts), labels: None };
+        let ds = Dataset::new(Matrix::from_vec(3, 2, pts), None);
         let m = serial_ofl_with(&ds, 1.0, |_| 0.999_999);
         assert_eq!(m.centers.rows, 3);
     }
@@ -97,7 +97,7 @@ mod tests {
     fn near_duplicates_rarely_open() {
         // Second point at distance 0 never opens (p = 0).
         let pts = vec![1.0, 1.0, 1.0, 1.0];
-        let ds = Dataset { points: Matrix::from_vec(2, 2, pts), labels: None };
+        let ds = Dataset::new(Matrix::from_vec(2, 2, pts), None);
         let m = serial_ofl_with(&ds, 1.0, |_| 0.0000001);
         // First opens; second has d²=0 → p=0 → cannot open even with tiny u.
         assert_eq!(m.centers.rows, 1);
@@ -108,7 +108,7 @@ mod tests {
     fn acceptance_probability_is_distance_scaled() {
         // A point at squared distance 0.25·λ² opens iff u < 0.25.
         let pts = vec![0.0, 0.0, 0.5, 0.0];
-        let ds = Dataset { points: Matrix::from_vec(2, 2, pts), labels: None };
+        let ds = Dataset::new(Matrix::from_vec(2, 2, pts), None);
         let opened = serial_ofl_with(&ds, 1.0, |i| if i == 0 { 0.0 } else { 0.24 });
         assert_eq!(opened.centers.rows, 2);
         let not_opened = serial_ofl_with(&ds, 1.0, |i| if i == 0 { 0.0 } else { 0.26 });

@@ -58,7 +58,8 @@ pub fn dp_divide_and_conquer(data: &Arc<Dataset>, lambda: f64, procs: usize) -> 
     locals.sort_by_key(|(_, lo)| *lo);
 
     // Level 2: re-cluster all intermediate centers at the master.
-    let mut intermediate = Matrix::zeros(0, d);
+    let total_rows: usize = locals.iter().map(|(local, _)| local.rows).sum();
+    let mut intermediate = Matrix::with_row_capacity(total_rows, d);
     for (local, _) in &locals {
         for k in 0..local.rows {
             intermediate.push_row(local.row(k));
@@ -74,10 +75,17 @@ pub fn dp_divide_and_conquer(data: &Arc<Dataset>, lambda: f64, procs: usize) -> 
         }
     }
 
-    // Final assignment pass.
+    // Final assignment pass (canonical panel kernel, cached point norms).
     let mut assignments = vec![0u32; n];
     let mut d2 = vec![0.0f32; n];
-    crate::linalg::blocked::nearest_blocked(&data.points, &centers, &mut assignments, &mut d2);
+    crate::linalg::panel::nearest_panel(
+        &data.points,
+        Some(&data.norms),
+        &centers,
+        None,
+        &mut assignments,
+        &mut d2,
+    );
 
     DncDpResult { centers, assignments, intermediate_centers }
 }

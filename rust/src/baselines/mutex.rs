@@ -80,9 +80,25 @@ mod tests {
         assert!(out.assignments.iter().all(|&a| (a as usize) < out.centers.rows));
         // Every point within λ of its center at creation time ⇒ ≤ λ of some
         // center now (centers are data points here, not re-estimated).
-        for i in 0..data.len() {
-            let (_, d2) = crate::linalg::nearest(data.point(i), &out.centers);
-            assert!(d2 <= 1.0 + 1e-5);
+        // threshold_panel's strict-> verdict must agree with the per-point
+        // canonical fold.
+        let n = data.len();
+        let (mut idx, mut d2) = (vec![0u32; n], vec![0.0f32; n]);
+        let mut over = vec![true; n];
+        crate::linalg::panel::threshold_panel(
+            &data.points,
+            Some(&data.norms),
+            &out.centers,
+            None,
+            1.0 + 1e-5,
+            &mut idx,
+            &mut d2,
+            &mut over,
+        );
+        for i in 0..n {
+            let (_, sd) = crate::linalg::nearest(data.point(i), &out.centers);
+            assert_eq!(d2[i].to_bits(), sd.to_bits());
+            assert!(!over[i], "point {i} at d²={} exceeds λ²", d2[i]);
         }
     }
 

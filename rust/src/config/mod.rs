@@ -269,6 +269,61 @@ impl IoKind {
     }
 }
 
+/// Which assignment-distance kernel the native backend runs: the
+/// cache-tiled panel kernel (the default) or the same-schedule scalar
+/// reference, kept as the A/B baseline.
+///
+/// Both kernels evaluate the canonical reduction schedule
+/// (`linalg::sqdist_norms` over the 8-lane `dot`) pair by pair, so they
+/// are bit-identical by construction (`linalg::panel` property-tests
+/// this); the knob changes *memory traversal*, never arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Tile point panels against L1-resident center tiles
+    /// (`linalg::panel::nearest_panel`) with cached point/center norms —
+    /// each center tile is loaded once per panel instead of once per
+    /// point.
+    Panel,
+    /// Flat point-major reference loop (`linalg::panel::nearest_scalar`):
+    /// identical per-pair arithmetic, re-streams all `k×d` center bytes
+    /// per point. Retained so benches and CI can measure what the tiling
+    /// buys.
+    Scalar,
+}
+
+impl KernelKind {
+    /// Parse a kernel name.
+    pub fn parse(s: &str) -> Result<KernelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "panel" | "tiled" | "blocked" => Ok(KernelKind::Panel),
+            "scalar" | "reference" => Ok(KernelKind::Scalar),
+            other => Err(Error::config(format!("unknown kernel `{other}` (panel|scalar)"))),
+        }
+    }
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Panel => "panel",
+            KernelKind::Scalar => "scalar",
+        }
+    }
+    /// Default kernel: the `OCCML_KERNEL` environment override if set (CI
+    /// uses it to sweep the scalar reference across the whole suite),
+    /// panel otherwise.
+    ///
+    /// Like `OCCML_IO`, an *invalid* value panics rather than falling
+    /// back: the env var exists to force a kernel under test.
+    pub fn from_env() -> KernelKind {
+        match std::env::var("OCCML_KERNEL") {
+            Ok(s) => KernelKind::parse(&s).unwrap_or_else(|e| panic!("OCCML_KERNEL: {e}")),
+            Err(std::env::VarError::NotUnicode(v)) => {
+                panic!("OCCML_KERNEL is set but not valid unicode: {v:?}")
+            }
+            Err(std::env::VarError::NotPresent) => KernelKind::Panel,
+        }
+    }
+}
+
 /// Data source for a run.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DataSource {
@@ -345,6 +400,10 @@ pub struct RunConfig {
     /// legacy sleep-slice poller. Bit-identical either way; only the
     /// waits change.
     pub io: IoKind,
+    /// Assignment-distance kernel: cache-tiled panel (default) vs the
+    /// same-schedule scalar reference. Bit-identical either way; only
+    /// the memory traversal changes.
+    pub kernel: KernelKind,
     /// Validator-shard peers on the validation plane. `0` (the default)
     /// means "half of `procs`, min 1" — see
     /// [`RunConfig::effective_validators`].
@@ -414,6 +473,7 @@ impl Default for RunConfig {
             sharding: ShardingKind::Hash,
             transport: TransportKind::from_env(),
             io: IoKind::from_env(),
+            kernel: KernelKind::from_env(),
             validator_shards: 0,
             peers: Vec::new(),
             validator_peers: Vec::new(),
@@ -507,6 +567,9 @@ impl RunConfig {
         }
         if let Some(s) = doc.get_str("run.io") {
             cfg.io = IoKind::parse(s)?;
+        }
+        if let Some(s) = doc.get_str("run.kernel") {
+            cfg.kernel = KernelKind::parse(s)?;
         }
         if let Some(v) = doc.get_int("run.validator_shards") {
             cfg.validator_shards = usize::try_from(v)
@@ -909,6 +972,24 @@ mod tests {
         let doc = toml::parse("[run]\nprocs = 2\n").unwrap();
         assert_eq!(RunConfig::from_doc(&doc).unwrap().io, IoKind::from_env());
         assert!(RunConfig::from_doc(&toml::parse("[run]\nio = \"rdma\"\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn kernel_knob_parses_rejects_and_extracts() {
+        assert_eq!(KernelKind::parse("panel").unwrap(), KernelKind::Panel);
+        assert_eq!(KernelKind::parse("TILED").unwrap(), KernelKind::Panel);
+        assert_eq!(KernelKind::parse("scalar").unwrap(), KernelKind::Scalar);
+        assert_eq!(KernelKind::parse("reference").unwrap(), KernelKind::Scalar);
+        let err = KernelKind::parse("gpu").unwrap_err().to_string();
+        assert!(err.contains("gpu") && err.contains("panel") && err.contains("scalar"));
+        assert_eq!(KernelKind::Panel.name(), "panel");
+        assert_eq!(KernelKind::Scalar.name(), "scalar");
+        // Extracts from TOML; absent key keeps the default.
+        let doc = toml::parse("[run]\nkernel = \"scalar\"\n").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().kernel, KernelKind::Scalar);
+        let doc = toml::parse("[run]\nprocs = 2\n").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().kernel, KernelKind::from_env());
+        assert!(RunConfig::from_doc(&toml::parse("[run]\nkernel = \"simd\"\n").unwrap()).is_err());
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::algorithms::bpmeans::{descend_z, BpModel, RIDGE_EPS};
 use crate::algorithms::dpmeans::DpModel;
 use crate::algorithms::objective;
 use crate::algorithms::ofl::{ofl_draws, OflModel};
-use crate::config::{Algo, BackendKind, DataSource, RunConfig, ShardingKind};
+use crate::config::{Algo, BackendKind, DataSource, KernelKind, RunConfig, ShardingKind};
 use crate::data::{generators, DataCell, Dataset};
 use crate::error::{Error, Result};
 use crate::linalg::{blocked, cholesky, Matrix};
@@ -87,7 +87,7 @@ pub fn load_or_generate(cfg: &RunConfig) -> Result<Dataset> {
 /// Build the configured compute backend.
 pub fn make_backend(cfg: &RunConfig) -> Result<Arc<dyn ComputeBackend>> {
     match cfg.backend {
-        BackendKind::Native => Ok(Arc::new(NativeBackend::new())),
+        BackendKind::Native => Ok(Arc::new(NativeBackend::with_kernel(cfg.kernel))),
         BackendKind::Xla => Ok(Arc::new(XlaBackend::load(&cfg.artifacts_dir)?)),
     }
 }
@@ -145,8 +145,17 @@ fn epoch_ranges(start: usize, n: usize, per_epoch: usize) -> Vec<Range<usize>> {
 /// `stale_rows` committed rows so they equal a fresh scan of the full
 /// committed set, bit for bit: query the delta rows and fold with the
 /// kernel's first-minimum tie-break (delta rows sit at strictly higher
-/// indices, so they win only on strictly smaller d²). See
-/// [`scheduler`](super::scheduler) for why this preserves Thm 3.1.
+/// indices, so they win only on strictly smaller d²).
+///
+/// No re-query escape hatch is needed: the canonical kernel computes every
+/// point×center distance independently — one fixed reduction schedule, one
+/// per-*pair* clamp (see [`crate::linalg`]) — so the stale scan, the delta
+/// scan and a full scan produce identical distance bits per pair, and the
+/// strict-< fold reproduces the full scan's first-minimum exactly. (The old
+/// tiled kernel clamped its *running best* per center tile, which could
+/// erase sub-zero ordering across the stale/delta boundary and forced a
+/// per-point re-query on zeros.) See [`scheduler`](super::scheduler) for
+/// why this preserves Thm 3.1.
 fn patch_nearest(
     data: &Dataset,
     backend: &Arc<dyn ComputeBackend>,
@@ -174,25 +183,9 @@ fn patch_nearest(
         let n = range.len();
         let mut di = vec![0u32; n];
         let mut dd = vec![0.0f32; n];
-        backend.nearest(Block::of(&data.points, range), &delta, &mut di, &mut dd)?;
+        backend.nearest_with(Block::of_dataset(data, range), &delta, None, &mut di, &mut dd)?;
         for off in 0..n {
-            if stale_rows > 0 && (d2[off] == 0.0 || dd[off] == 0.0) {
-                // A zero here may be the kernel clamping a
-                // cancellation-negative running best (it clamps per center
-                // tile), which erases the sub-zero ordering a single full
-                // scan would have seen across the stale/delta boundary.
-                // Re-query this one point against the full committed set —
-                // the exact BSP computation, tile geometry and clamping
-                // included. Only reachable when the point coincides with a
-                // center to within f32 cancellation error, so the re-query
-                // is rare and cheap.
-                let i = range.start + off;
-                let mut one_i = [u32::MAX; 1];
-                let mut one_d = [f32::INFINITY; 1];
-                backend.nearest(Block::of(&data.points, i..i + 1), centers, &mut one_i, &mut one_d)?;
-                idx[off] = one_i[0];
-                d2[off] = one_d[0];
-            } else if dd[off] < d2[off] {
+            if dd[off] < d2[off] {
                 d2[off] = dd[off];
                 idx[off] = (stale_rows as u32) + di[off];
             }
@@ -213,6 +206,7 @@ fn dp_recompute(
     pass: usize,
     assignments: &[u32],
     centers: &mut Matrix,
+    kernel: KernelKind,
     sink: &mut MetricsSink,
     epochs_log: &mut Vec<EpochRecord>,
 ) -> Result<()> {
@@ -255,6 +249,8 @@ fn dp_recompute(
         points: n,
         centers: k,
         worker_time,
+        compute_time: worker_time,
+        kernel: kernel.name(),
         total_time: recompute_sw.elapsed(),
         wire_bytes: net.wire_bytes,
         unique_payload_bytes: net.unique_payload_bytes,
@@ -283,6 +279,7 @@ fn bp_recompute(
     pass: usize,
     assignments: &[Vec<bool>],
     features: &mut Matrix,
+    kernel: KernelKind,
     sink: &mut MetricsSink,
     epochs_log: &mut Vec<EpochRecord>,
 ) -> Result<()> {
@@ -326,6 +323,8 @@ fn bp_recompute(
         points: n,
         centers: k,
         worker_time,
+        compute_time: worker_time,
+        kernel: kernel.name(),
         total_time: recompute_sw.elapsed(),
         wire_bytes: net.wire_bytes,
         unique_payload_bytes: net.unique_payload_bytes,
@@ -483,7 +482,7 @@ pub fn run_dpmeans(
         backend.clone(),
         &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
-    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io);
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io, cfg.kernel);
     let total = Stopwatch::start();
 
     let mut centers = Matrix::zeros(0, d);
@@ -535,7 +534,7 @@ pub fn run_dpmeans(
         let changed = st.changed;
         created_per_pass.push(st.created);
 
-        dp_recompute(&mut cluster, cfg.procs, n, pass, &assignments, &mut centers, sink, &mut epochs_log)?;
+        dp_recompute(&mut cluster, cfg.procs, n, pass, &assignments, &mut centers, cfg.kernel, sink, &mut epochs_log)?;
 
         if !changed {
             converged = true;
@@ -696,7 +695,7 @@ pub fn run_ofl(
         backend.clone(),
         &Topology::of_config(cfg, cfg.effective_validators()),
     )?;
-    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io);
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io, cfg.kernel);
     let total = Stopwatch::start();
 
     let mut draws = ofl_draws(n, cfg.seed);
@@ -868,7 +867,7 @@ pub fn run_bpmeans(
         backend.clone(),
         &Topology::of_config(cfg, 1),
     )?;
-    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io);
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io, cfg.kernel);
     let total = Stopwatch::start();
 
     // Init (Alg 7): one feature = grand mean, z_i,0 = 1 for all i.
@@ -936,6 +935,7 @@ pub fn run_bpmeans(
             pass,
             &assignments,
             &mut features,
+            cfg.kernel,
             sink,
             &mut epochs_log,
         )?;
@@ -1023,7 +1023,7 @@ pub fn run_streaming(
         &Topology::of_config(cfg, validators),
     )?;
     publish_waker(cluster.compute.waker());
-    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io);
+    let sched = scheduler::make(cfg.scheduler, cfg.speculation_spec(), cfg.io, cfg.kernel);
     let total = Stopwatch::start();
     let d = cell.get().dim();
     let mut epochs_log = Vec::new();
@@ -1052,7 +1052,7 @@ pub fn run_streaming(
             let data = cell.get();
             let n = data.len();
             assignments.resize(n, u32::MAX);
-            dp_recompute(&mut cluster, cfg.procs, n, 0, &assignments, &mut centers, sink, &mut epochs_log)?;
+            dp_recompute(&mut cluster, cfg.procs, n, 0, &assignments, &mut centers, cfg.kernel, sink, &mut epochs_log)?;
             let model = DpModel {
                 centers: centers.clone(),
                 assignments,
@@ -1115,7 +1115,7 @@ pub fn run_streaming(
             let data = cell.get();
             let n = data.len();
             assignments.resize(n, Vec::new());
-            bp_recompute(&mut cluster, cfg.procs, n, 0, &assignments, &mut features, sink, &mut epochs_log)?;
+            bp_recompute(&mut cluster, cfg.procs, n, 0, &assignments, &mut features, cfg.kernel, sink, &mut epochs_log)?;
             for z in assignments.iter_mut() {
                 z.resize(features.rows, false);
             }

@@ -26,6 +26,7 @@
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};
+use crate::linalg::panel::PANEL_POINTS;
 use crate::linalg::Matrix;
 use crate::runtime::{Block, ComputeBackend};
 use std::cell::{Cell, RefCell};
@@ -126,6 +127,10 @@ impl Job {
 /// result *bit-identical for every worker count* (f32 addition is not
 /// associative; P-dependent partial boundaries would leak into the state).
 pub const REDUCE_CHUNK: usize = 4096;
+
+// Reduction chunks must themselves be panel-aligned so the chunked split is
+// automatically a panel-aligned split too.
+const _: () = assert!(REDUCE_CHUNK % PANEL_POINTS == 0);
 
 /// Result payload of one job.
 pub enum JobOutput {
@@ -470,9 +475,23 @@ pub(crate) fn run_job(
     backend: &Arc<dyn ComputeBackend>,
     job: Job,
 ) -> Result<JobOutput> {
+    run_job_with(data, backend, job, None)
+}
+
+/// [`run_job`] with an optional cached per-center squared-norm slice for
+/// `Nearest` jobs (one `norm2` per snapshot row, canonical schedule). The
+/// TCP peer keeps such a cache keyed to its installed snapshot and extends
+/// it on deltas; passing `None` makes the kernel derive the norms itself —
+/// bit-identical either way, the cache only saves the recompute.
+pub(crate) fn run_job_with(
+    data: &Dataset,
+    backend: &Arc<dyn ComputeBackend>,
+    job: Job,
+    cnorms: Option<&[f32]>,
+) -> Result<JobOutput> {
     match job {
         Job::Shutdown => Err(Error::Coordinator("shutdown is not a computable job".into())),
-        Job::Nearest { range, centers } => run_nearest(data, backend, range, &centers),
+        Job::Nearest { range, centers } => run_nearest(data, backend, range, &centers, cnorms),
         Job::SuffStats { range, assignments, k } => {
             run_suffstats(data, backend, range, &assignments, k)
         }
@@ -518,12 +537,15 @@ fn run_nearest(
     backend: &Arc<dyn ComputeBackend>,
     range: Range<usize>,
     centers: &Matrix,
+    cnorms: Option<&[f32]>,
 ) -> Result<JobOutput> {
     let n = range.end - range.start;
     let mut idx = vec![0u32; n];
     let mut d2 = vec![0.0f32; n];
     if n > 0 {
-        backend.nearest(Block::of(&data.points, range), centers, &mut idx, &mut d2)?;
+        // Block::of_dataset carries the dataset's cached point norms, so the
+        // panel kernel skips the per-point norm2 recompute.
+        backend.nearest_with(Block::of_dataset(data, range), centers, cnorms, &mut idx, &mut d2)?;
     }
     Ok(JobOutput::Nearest { idx, d2 })
 }
@@ -687,18 +709,23 @@ fn run_bp_stats(
     Ok(JobOutput::BpStats { chunks })
 }
 
-/// Split `range` into `procs` near-equal contiguous chunks (first chunks get
-/// the remainder) — used for the worker-block scatter within an epoch.
+/// Split `range` into `procs` contiguous pieces whose boundaries fall on
+/// `range.start + k ·` [`PANEL_POINTS`] — each worker's block starts on a
+/// panel boundary of the assignment kernel, so only the final piece can end
+/// with a partial panel. Panels are dealt near-equally (first pieces get the
+/// remainder); when there are fewer panels than workers the trailing pieces
+/// are empty. Used for the worker-block scatter within an epoch.
 pub fn split_range(range: Range<usize>, procs: usize) -> Vec<Range<usize>> {
-    let n = range.end - range.start;
-    let base = n / procs;
-    let rem = n % procs;
+    let n_panels = (range.end - range.start).div_ceil(PANEL_POINTS);
+    let base = n_panels / procs;
+    let rem = n_panels % procs;
     let mut out = Vec::with_capacity(procs);
     let mut at = range.start;
     for p in 0..procs {
-        let len = base + usize::from(p < rem);
-        out.push(at..at + len);
-        at += len;
+        let len_panels = base + usize::from(p < rem);
+        let end = (at + len_panels * PANEL_POINTS).min(range.end);
+        out.push(at..end);
+        at = end;
     }
     out
 }
@@ -754,7 +781,7 @@ mod tests {
                 for (off, i) in ranges[w].clone().enumerate() {
                     let (bi, bd) = crate::linalg::nearest(data.point(i), &centers);
                     assert_eq!(idx[off], bi as u32);
-                    assert!((d2[off] - bd).abs() < 1e-4);
+                    assert_eq!(d2[off].to_bits(), bd.to_bits());
                 }
             } else {
                 panic!("wrong output kind");
@@ -808,14 +835,27 @@ mod tests {
     }
 
     #[test]
-    fn split_range_covers_exactly() {
-        for &(s, e, p) in &[(0usize, 10usize, 3usize), (5, 5, 2), (0, 7, 7), (2, 103, 8)] {
+    fn split_range_covers_exactly_and_aligns_to_panels() {
+        for &(s, e, p) in &[
+            (0usize, 10usize, 3usize),
+            (5, 5, 2),
+            (0, 7, 7),
+            (2, 103, 8),
+            (0, PANEL_POINTS * 5 + 17, 3),
+            (PANEL_POINTS, PANEL_POINTS * 9 + 1, 4),
+        ] {
             let parts = split_range(s..e, p);
             assert_eq!(parts.len(), p);
             assert_eq!(parts[0].start, s);
             assert_eq!(parts.last().unwrap().end, e);
             for w in parts.windows(2) {
                 assert_eq!(w[0].end, w[1].start);
+            }
+            // Every boundary sits on a panel multiple relative to the range
+            // start (or at the range end): only the end panel is partial.
+            for r in &parts {
+                assert!(r.start == e || (r.start - s) % PANEL_POINTS == 0, "{r:?}");
+                assert!(r.end == e || (r.end - s) % PANEL_POINTS == 0, "{r:?}");
             }
         }
     }

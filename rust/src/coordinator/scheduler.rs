@@ -178,7 +178,7 @@
 
 use super::engine::{split_range, Job, JobOutput};
 use super::transport::{PlaneHandle, PlaneWaker, WaveId};
-use crate::config::IoKind;
+use crate::config::{IoKind, KernelKind};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
@@ -524,6 +524,7 @@ pub fn make(
     kind: crate::config::SchedulerKind,
     speculation: crate::config::SpeculationSpec,
     io: IoKind,
+    kernel: KernelKind,
 ) -> Box<dyn Scheduler> {
     let (depth, adaptive) = match kind {
         crate::config::SchedulerKind::Bsp => (1, false),
@@ -532,7 +533,7 @@ pub fn make(
             crate::config::SpeculationSpec::Auto { max } => (max.max(1), true),
         },
     };
-    Box::new(WaveEngine { depth, adaptive, io })
+    Box::new(WaveEngine { depth, adaptive, io, kernel })
 }
 
 /// Wave lifecycle within the engine's table. `Committed` and `Respun` are
@@ -741,6 +742,10 @@ pub struct WaveEngine {
     /// plane's readiness reactor (commit wakeup included) vs the legacy
     /// sleep-slice schedule. See "Where the event loop blocks" above.
     pub io: IoKind,
+    /// Which assignment kernel the run was configured with. The engine
+    /// itself never computes distances — workers do — but it stamps each
+    /// epoch record so bench output can be grouped by kernel.
+    pub kernel: KernelKind,
 }
 
 impl Scheduler for WaveEngine {
@@ -1100,6 +1105,8 @@ impl Scheduler for WaveEngine {
                             writev_batches: net.writev_batches,
                             admission_wait,
                             ingest_queue_depth: src.queue_depth,
+                            compute_time: w.flight.iter().map(|(s, e)| e.duration_since(*s)).sum(),
+                            kernel: self.kernel.name(),
                         };
                         sink.emit(&rec);
                         log.push(rec);
@@ -1230,7 +1237,7 @@ mod tests {
 
     fn drive(depth: usize, algo: &mut Scripted) -> Vec<EpochRecord> {
         drive_epochs(
-            WaveEngine { depth, adaptive: false, io: IoKind::from_env() },
+            WaveEngine { depth, adaptive: false, io: IoKind::from_env(), kernel: KernelKind::from_env() },
             vec![0..16, 16..32, 32..48, 48..64],
             algo,
         )
@@ -1337,7 +1344,7 @@ mod tests {
         let mut algo = Scripted::new(true, true);
         let mut sink = MetricsSink::Null;
         let mut log = Vec::new();
-        WaveEngine { depth: 2, adaptive: false, io: IoKind::from_env() }
+        WaveEngine { depth: 2, adaptive: false, io: IoKind::from_env(), kernel: KernelKind::from_env() }
             .run_pass(&mut cluster.compute, &mut algo, &[], 0, &mut sink, &mut log)
             .unwrap();
         assert!(log.is_empty());
@@ -1353,7 +1360,7 @@ mod tests {
     #[test]
     fn factory_maps_config_kinds_and_depths() {
         use crate::config::{SchedulerKind, SpeculationSpec};
-        let mk = |kind, spec| make(kind, spec, IoKind::from_env());
+        let mk = |kind, spec| make(kind, spec, IoKind::from_env(), KernelKind::from_env());
         assert_eq!(mk(SchedulerKind::Bsp, SpeculationSpec::Fixed(4)).name(), "bsp");
         assert_eq!(mk(SchedulerKind::Pipelined, SpeculationSpec::Fixed(1)).name(), "bsp");
         assert_eq!(mk(SchedulerKind::Pipelined, SpeculationSpec::Fixed(2)).name(), "wave");
@@ -1437,7 +1444,7 @@ mod tests {
         // at depth 1 (BSP) and stop paying respins entirely.
         let epochs: Vec<Range<usize>> = (0..8).map(|e| e * 8..(e + 1) * 8).collect();
         let mut algo = Scripted::new(false, true);
-        let engine = WaveEngine { depth: 4, adaptive: true, io: IoKind::from_env() };
+        let engine = WaveEngine { depth: 4, adaptive: true, io: IoKind::from_env(), kernel: KernelKind::from_env() };
         let log = drive_epochs(engine, epochs, &mut algo);
         assert_eq!(log.len(), 8);
         assert!(log.iter().all(|r| (1..=4).contains(&r.effective_speculation)), "{log:?}");
@@ -1459,7 +1466,7 @@ mod tests {
         let epochs: Vec<Range<usize>> = (0..8).map(|e| e * 8..(e + 1) * 8).collect();
         for patchable in [true, false] {
             let mut algo = Scripted::new(patchable, false);
-            let engine = WaveEngine { depth: 4, adaptive: true, io: IoKind::from_env() };
+            let engine = WaveEngine { depth: 4, adaptive: true, io: IoKind::from_env(), kernel: KernelKind::from_env() };
             let log = drive_epochs(engine, epochs.clone(), &mut algo);
             assert!(log.iter().all(|r| r.effective_speculation == 4), "{log:?}");
             assert_eq!(log.iter().map(|r| r.respins).sum::<usize>(), 0);
@@ -1467,7 +1474,7 @@ mod tests {
         // Patchable growth is absorbed by patching, not respins — it must
         // not shrink the bound either.
         let mut algo = Scripted::new(true, true);
-        let engine = WaveEngine { depth: 4, adaptive: true, io: IoKind::from_env() };
+        let engine = WaveEngine { depth: 4, adaptive: true, io: IoKind::from_env(), kernel: KernelKind::from_env() };
         let log = drive_epochs(engine, epochs, &mut algo);
         assert!(log.iter().all(|r| r.effective_speculation == 4), "{log:?}");
     }
@@ -1513,7 +1520,7 @@ mod tests {
             polls: 0,
             sealed: Instant::now(),
         };
-        WaveEngine { depth: 2, adaptive: false, io: IoKind::from_env() }
+        WaveEngine { depth: 2, adaptive: false, io: IoKind::from_env(), kernel: KernelKind::from_env() }
             .run_source(&mut cluster.compute, &mut algo, &mut src, 0, &mut sink, &mut log)
             .unwrap();
         // Every span committed, in epoch order, despite the dry polls.
@@ -1548,7 +1555,7 @@ mod tests {
         let mut algo = Scripted::new(true, true);
         let mut sink = MetricsSink::Null;
         let mut log = Vec::new();
-        WaveEngine { depth: 2, adaptive: false, io: IoKind::from_env() }
+        WaveEngine { depth: 2, adaptive: false, io: IoKind::from_env(), kernel: KernelKind::from_env() }
             .run_source(
                 &mut cluster.compute,
                 &mut algo,

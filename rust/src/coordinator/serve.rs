@@ -213,6 +213,9 @@ struct Admission {
     cell: Arc<DataCell>,
     /// Master copy of every admitted point, staged + sealed.
     points: Matrix,
+    /// Per-point squared norms, extended incrementally per admitted chunk
+    /// so a seal never recomputes the whole prefix.
+    norms: Vec<f32>,
     /// Rows already sealed (and published); `points.rows - sealed_rows`
     /// rows are staged, waiting for size or SLA.
     sealed_rows: usize,
@@ -243,6 +246,7 @@ impl Admission {
             bound: cfg.ingest_queue,
             cell,
             points: Matrix::zeros(0, cfg.dim),
+            norms: Vec::new(),
             sealed_rows: 0,
             oldest: None,
             tx: Some(tx),
@@ -294,6 +298,11 @@ impl Admission {
         }
         self.points.data.extend_from_slice(&chunk.data);
         self.points.rows += chunk.rows;
+        self.norms.extend(crate::linalg::panel::point_norms(
+            &chunk.data,
+            chunk.rows,
+            chunk.cols,
+        ));
         self.admitted += chunk.rows as u64;
         while self.staged_rows() >= self.batch_points {
             self.seal(self.batch_points);
@@ -315,7 +324,11 @@ impl Admission {
         self.oldest = if self.staged_rows() > 0 { Some(Instant::now()) } else { None };
         // Every sealed row is published, staged rows ride along harmlessly
         // (no epoch names them yet).
-        self.cell.set(Arc::new(Dataset { points: self.points.clone(), labels: None }));
+        self.cell.set(Arc::new(Dataset::with_norms(
+            self.points.clone(),
+            None,
+            self.norms.clone(),
+        )));
         let queue_depth = self.depth.fetch_add(1, Ordering::SeqCst) + 1;
         self.sealed_batches += 1;
         if let Some(tx) = &self.tx {
@@ -673,10 +686,10 @@ pub fn serve(cfg: &RunConfig, listener: TcpListener) -> Result<RunOutput> {
     cfg.bootstrap_div = 0;
     cfg.validate()?;
 
-    let cell = Arc::new(DataCell::new(Arc::new(Dataset {
-        points: Matrix::zeros(0, cfg.dim),
-        labels: None,
-    })));
+    let cell = Arc::new(DataCell::new(Arc::new(Dataset::new(
+        Matrix::zeros(0, cfg.dim),
+        None,
+    ))));
     let (tx, rx) = mpsc::channel();
     let depth = Arc::new(AtomicUsize::new(0));
     let shared = Arc::new(Shared::new());
@@ -730,10 +743,7 @@ mod tests {
     }
 
     fn cell(dim: usize) -> Arc<DataCell> {
-        Arc::new(DataCell::new(Arc::new(Dataset {
-            points: Matrix::zeros(0, dim),
-            labels: None,
-        })))
+        Arc::new(DataCell::new(Arc::new(Dataset::new(Matrix::zeros(0, dim), None))))
     }
 
     fn chunk(rows: usize, dim: usize, fill: f32) -> Matrix {

@@ -145,7 +145,7 @@
 //! frames, closes every socket, wakes the persistent listeners and joins
 //! the peer threads — infallibly.
 
-use super::engine::{panic_message, run_job, Job, JobOutput};
+use super::engine::{panic_message, run_job_with, Job, JobOutput};
 use super::reactor::Reactor;
 use super::transport::{SharedStats, Topology, TransportStats, WaveId};
 use super::wire::{self, Hello, HelloAck, PeerRole};
@@ -409,7 +409,13 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
     // boundary stays intact either way.
     let mut snap: Option<(u64, Arc<Matrix>)> = None;
     let mut snap_err: Option<String> = None;
-    let empty = Dataset { points: Matrix::zeros(0, 0), labels: None };
+    // Per-center norm cache keyed to the session snapshot: rebuilt whole on
+    // a full snapshot frame, extended by the appended rows on a delta, and
+    // handed to `Nearest` jobs whose centers resolved against the cached
+    // matrix (reference-shipped jobs). Inline-matrix jobs get `None` and
+    // the kernel computes center norms per call.
+    let mut cnorms = crate::linalg::panel::NormCache::new();
+    let empty = Dataset::new(Matrix::zeros(0, 0), None);
 
     // The session's readiness loop: nonblocking from here on, parked in
     // its own reactor. A failed nonblocking switch or reactor build falls
@@ -461,6 +467,7 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
             }
             wire::KIND_SNAPSHOT => match wire::decode_snapshot(&payload) {
                 Ok((id, m)) => {
+                    cnorms.rebuild(&m);
                     snap = Some((id, Arc::new(m)));
                     snap_err = None;
                 }
@@ -477,6 +484,7 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
                 });
                 match applied {
                     Ok((id, m)) => {
+                        cnorms.extend_to(&m);
                         snap = Some((id, Arc::new(m)));
                         snap_err = None;
                     }
@@ -500,8 +508,18 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
                     Ok(job) => run_covered(&job.data_range(), &data_err, &store, &covered)
                         .and_then(|data| {
                             let data = data.unwrap_or(&empty);
+                            // The session norm cache applies exactly when the
+                            // job's centers ARE the cached snapshot matrix.
+                            let norms: Option<&[f32]> = match (&job, &snap) {
+                                (Job::Nearest { centers, .. }, Some((_, held)))
+                                    if Arc::ptr_eq(centers, held) =>
+                                {
+                                    Some(cnorms.norms())
+                                }
+                                _ => None,
+                            };
                             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                                run_job(data, &backend, job)
+                                run_job_with(data, &backend, job, norms)
                             }))
                             .unwrap_or_else(|p| Err(Error::Coordinator(panic_message(&*p))))
                         }),
@@ -635,15 +653,15 @@ fn install_block(
     // zeros even though only ~2·n/P rows ever arrive. Fine for RAM-sized
     // data; an offset-keyed block store is the ROADMAP item for datasets
     // that only fit sharded.
-    let ds = store.get_or_insert_with(|| Dataset {
-        points: Matrix::zeros(n, d),
-        labels: None,
-    });
+    let ds = store.get_or_insert_with(|| Dataset::new(Matrix::zeros(n, d), None));
     if ds.points.rows < end {
         ds.points.data.resize(end * d, 0.0);
         ds.points.rows = end;
     }
     ds.points.data[offset * d..end * d].copy_from_slice(&block.data);
+    // Keep the point-norm cache coherent with the rows just written (and
+    // grow it if the store grew past the handshook geometry).
+    ds.refresh_norms(offset, end);
     covered.add(offset..end);
     Ok(())
 }

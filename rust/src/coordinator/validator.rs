@@ -19,10 +19,12 @@
 //! ([`ConflictCache::tree_reduce`]), then a serial merge walks all
 //! proposals in point-index order, reading a cached distance when one
 //! exists and computing it inline otherwise. Because a cached
-//! `sqdist(a, b)` is bit-identical to the inline one, the merge's
-//! accept/reject decisions — and therefore the appended state — are
-//! bit-for-bit those of the serial validator for *any* key assignment and
-//! shard count.
+//! `sqdist(a, b)` is bit-identical to the inline one — every path computes
+//! distances on the canonical reduction schedule of [`crate::linalg`]
+//! (8-lane strided dot, fixed combine order, per-pair clamp), regardless of
+//! the configured assignment kernel — the merge's accept/reject decisions —
+//! and therefore the appended state — are bit-for-bit those of the serial
+//! validator for *any* key assignment and shard count.
 //!
 //! The shard caches can come from two places: scoped threads inside this
 //! process (`dp_validate_sharded` / `ofl_validate_sharded` — the zero-setup

@@ -88,7 +88,7 @@ pub fn dp_clusters(cfg: &GenConfig) -> Dataset {
         points.push_row(&buf);
         labels.push(k as u32);
     }
-    Dataset { points, labels: Some(labels) }
+    Dataset::new(points, Some(labels))
 }
 
 /// Beta-process latent-feature data via truncated stick-breaking
@@ -154,7 +154,7 @@ pub fn bp_features_trunc(cfg: &GenConfig, trunc_eps: f64) -> Dataset {
         points.push_row(&buf);
         labels.push(mask);
     }
-    Dataset { points, labels: Some(labels) }
+    Dataset::new(points, Some(labels))
 }
 
 /// App C.1 separable clusters: proportions from DP stick-breaking (θ),
@@ -198,7 +198,7 @@ pub fn separable_clusters(cfg: &GenConfig) -> Dataset {
         points.push_row(&buf);
         labels.push(k as u32);
     }
-    Dataset { points, labels: Some(labels) }
+    Dataset::new(points, Some(labels))
 }
 
 #[cfg(test)]

@@ -79,7 +79,7 @@ pub fn read_occb(path: &Path) -> Result<Dataset> {
     } else {
         None
     };
-    Ok(Dataset { points: Matrix::from_vec(n, d, data), labels })
+    Ok(Dataset::new(Matrix::from_vec(n, d, data), labels))
 }
 
 /// Export points (and labels, if any) as CSV with a header row.

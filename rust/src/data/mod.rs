@@ -24,9 +24,39 @@ pub struct Dataset {
     pub points: Matrix,
     /// Ground-truth latent component per point (generator metadata), if known.
     pub labels: Option<Vec<u32>>,
+    /// Canonical squared norm (`linalg::norm2`) per point, computed once
+    /// at construction — points never change, so the assignment kernels
+    /// read these instead of recomputing `‖x‖²` per epoch. Always
+    /// `points.rows` long; bit-identical to recomputing (norm caches are
+    /// pure memoization of the canonical schedule).
+    pub norms: Vec<f32>,
 }
 
 impl Dataset {
+    /// Build a dataset, computing the per-point norm cache.
+    pub fn new(points: Matrix, labels: Option<Vec<u32>>) -> Dataset {
+        let norms = crate::linalg::panel::point_norms(&points.data, points.rows, points.cols);
+        Dataset { points, labels, norms }
+    }
+
+    /// Build from parts with an already-computed norm cache (streaming
+    /// admission extends its norms incrementally per admitted chunk).
+    /// `norms[i]` must equal `linalg::norm2(points.row(i))` bitwise.
+    pub fn with_norms(points: Matrix, labels: Option<Vec<u32>>, norms: Vec<f32>) -> Dataset {
+        debug_assert_eq!(norms.len(), points.rows);
+        Dataset { points, labels, norms }
+    }
+
+    /// Recompute the norm cache for rows `lo..hi` (after an in-place row
+    /// write, e.g. a demand-shipped block landing in a worker's store),
+    /// growing the cache if the matrix grew.
+    pub fn refresh_norms(&mut self, lo: usize, hi: usize) {
+        self.norms.resize(self.points.rows, 0.0);
+        for i in lo..hi.min(self.points.rows) {
+            self.norms[i] = crate::linalg::norm2(self.points.row(i));
+        }
+    }
+
     /// Number of points.
     pub fn len(&self) -> usize {
         self.points.rows
@@ -148,12 +178,33 @@ mod tests {
 
     #[test]
     fn distinct_components_counts_prefix() {
-        let ds = Dataset {
-            points: Matrix::zeros(5, 1),
-            labels: Some(vec![0, 0, 1, 2, 1]),
-        };
+        let ds = Dataset::new(Matrix::zeros(5, 1), Some(vec![0, 0, 1, 2, 1]));
         assert_eq!(ds.distinct_components(1), Some(1));
         assert_eq!(ds.distinct_components(3), Some(2));
         assert_eq!(ds.distinct_components(5), Some(3));
+    }
+
+    #[test]
+    fn norm_cache_tracks_rows() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 4.0, 0.0, 2.0]);
+        let ds = Dataset::new(m, None);
+        assert_eq!(ds.norms, vec![25.0, 4.0]);
+        // In-place row writes refresh their norm range (worker block
+        // arrival), growing the cache with the matrix.
+        let mut grown = ds.clone();
+        grown.points.data.extend_from_slice(&[1.0, 1.0]);
+        grown.points.rows = 3;
+        grown.refresh_norms(2, 3);
+        assert_eq!(grown.norms, vec![25.0, 4.0, 2.0]);
+        grown.points.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        grown.refresh_norms(0, 1);
+        assert_eq!(grown.norms[0], 1.0);
+        // The cached value is bitwise what the kernel would recompute.
+        for i in 0..3 {
+            assert_eq!(
+                grown.norms[i].to_bits(),
+                crate::linalg::norm2(grown.points.row(i)).to_bits()
+            );
+        }
     }
 }

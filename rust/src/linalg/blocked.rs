@@ -1,132 +1,13 @@
-//! Blocked distance kernels — the native backend's hot path.
+//! Suffstats reduction helpers for the mean-recompute phase.
 //!
-//! Computing `argmin_k ‖x_i − μ_k‖²` for a block of points against all
-//! centers is the dominant compute of every algorithm in the paper (workers
-//! spend N/P · K · D flops per pass on it). The blocked kernel uses the
-//! classical decomposition
-//!
-//! ```text
-//! ‖x − μ‖² = ‖x‖² − 2·x·μ + ‖μ‖²
-//! ```
-//!
-//! so the inner loop is a small GEMM tile (points×centers), which the
-//! compiler vectorizes, and stays in L1/L2 cache — the same structure the
-//! L1 Pallas kernel uses to hit the MXU on TPU.
+//! The assignment distance kernels formerly here moved to [`super::panel`]
+//! when the canonical reduction schedule was defined (this file's old
+//! tile-level clamp and rank-1-update reduction order were *not*
+//! bit-identical to the scalar path — the panel kernels are, by
+//! construction). What remains is the suffstats accumulate/finalize pair
+//! shared by the serial algorithms and the native backend.
 
 use super::Matrix;
-
-/// Borrowed row-major view used by the raw kernel entry point.
-struct RawView<'a> {
-    data: &'a [f32],
-    rows: usize,
-    cols: usize,
-}
-
-impl<'a> RawView<'a> {
-    #[inline]
-    fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.cols..(i + 1) * self.cols]
-    }
-}
-
-/// Tile sizes chosen so that a (TP×D + TK×D + TP×TK) f32 working set fits
-/// comfortably in a 32 KiB L1d for D ≤ 64.
-const TILE_POINTS: usize = 64;
-const TILE_CENTERS: usize = 32;
-
-/// For each row of `points`, the index and squared distance of the nearest
-/// row of `centers`. Writes into `out_idx` / `out_d2` (must be `points.rows`
-/// long). `centers.rows == 0` yields `u32::MAX` / `+inf`.
-pub fn nearest_blocked(
-    points: &Matrix,
-    centers: &Matrix,
-    out_idx: &mut [u32],
-    out_d2: &mut [f32],
-) {
-    nearest_blocked_raw(&points.data, points.rows, points.cols, centers, out_idx, out_d2)
-}
-
-/// [`nearest_blocked`] over a raw row-major slice — lets callers pass a
-/// sub-range of a larger matrix without copying (the native backend's hot
-/// path does exactly that every epoch).
-pub fn nearest_blocked_raw(
-    pdata: &[f32],
-    prows: usize,
-    pcols: usize,
-    centers: &Matrix,
-    out_idx: &mut [u32],
-    out_d2: &mut [f32],
-) {
-    let points = RawView { data: pdata, rows: prows, cols: pcols };
-    assert_eq!(points.cols, centers.cols, "dimension mismatch");
-    assert_eq!(pdata.len(), prows * pcols, "raw view length mismatch");
-    assert_eq!(out_idx.len(), points.rows);
-    assert_eq!(out_d2.len(), points.rows);
-    out_idx.fill(u32::MAX);
-    out_d2.fill(f32::INFINITY);
-    if centers.rows == 0 || points.rows == 0 {
-        return;
-    }
-    let d = points.cols;
-
-    // Precompute center norms once per call.
-    let mut cnorm = vec![0.0f32; centers.rows];
-    for (k, cn) in cnorm.iter_mut().enumerate() {
-        *cn = super::norm2(centers.row(k));
-    }
-
-    // Center tile packed d-major (`ct[dd*TILE_CENTERS + j] = μ_{k0+j}[dd]`)
-    // so the rank-1-update microkernel below reads contiguously and the
-    // compiler vectorizes the j-loop with FMA — ~6× over a dot-per-pair
-    // formulation (EXPERIMENTS.md §Perf).
-    let mut ct = vec![0.0f32; TILE_CENTERS * pcols];
-    let mut acc = [0.0f32; TILE_CENTERS];
-
-    let mut k0 = 0;
-    while k0 < centers.rows {
-        let kn = TILE_CENTERS.min(centers.rows - k0);
-        // Pack the center tile once per k0 (amortized over all points).
-        for dd in 0..d {
-            let dst = &mut ct[dd * TILE_CENTERS..dd * TILE_CENTERS + kn];
-            for (jj, t) in dst.iter_mut().enumerate() {
-                *t = centers.get(k0 + jj, dd);
-            }
-        }
-        let mut p0 = 0;
-        while p0 < points.rows {
-            let pn = TILE_POINTS.min(points.rows - p0);
-            for i in 0..pn {
-                let x = points.row(p0 + i);
-                // acc[j] = x · μ_{k0+j} via d rank-1 updates; the inner loop
-                // is a contiguous fused multiply-add over TILE_CENTERS lanes.
-                let a = &mut acc[..TILE_CENTERS];
-                a.fill(0.0);
-                for (dd, &xv) in x.iter().enumerate() {
-                    let crow = &ct[dd * TILE_CENTERS..(dd + 1) * TILE_CENTERS];
-                    for j in 0..TILE_CENTERS {
-                        a[j] += xv * crow[j];
-                    }
-                }
-                // Combine: d² = ‖x‖² − 2·dot + ‖μ‖², fused argmin.
-                let base = super::norm2(x);
-                let mut best = out_d2[p0 + i];
-                let mut best_k = out_idx[p0 + i];
-                for (jj, &t) in a.iter().take(kn).enumerate() {
-                    let d2 = base - 2.0 * t + cnorm[k0 + jj];
-                    if d2 < best {
-                        best = d2;
-                        best_k = (k0 + jj) as u32;
-                    }
-                }
-                // Clamp tiny negatives from cancellation.
-                out_d2[p0 + i] = if best < 0.0 { 0.0 } else { best };
-                out_idx[p0 + i] = best_k;
-            }
-            p0 += pn;
-        }
-        k0 += kn;
-    }
-}
 
 /// Sufficient statistics for the mean-recompute phase: per-center sums and
 /// counts, accumulated from `points` with assignment `idx`. `sums` must be
@@ -172,49 +53,7 @@ pub fn finalize_means(sums: &Matrix, counts: &[u64], centers: &mut Matrix) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{nearest, Matrix};
-    use crate::rng::Pcg64;
-
-    fn random_matrix(rng: &mut Pcg64, rows: usize, cols: usize) -> Matrix {
-        let data = (0..rows * cols).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
-        Matrix::from_vec(rows, cols, data)
-    }
-
-    #[test]
-    fn blocked_matches_scalar_nearest() {
-        let mut rng = Pcg64::new(17);
-        for &(n, k, d) in &[(1, 1, 1), (7, 3, 5), (130, 70, 16), (257, 33, 16), (64, 32, 24)] {
-            let pts = random_matrix(&mut rng, n, d);
-            let ctr = random_matrix(&mut rng, k, d);
-            let mut idx = vec![0u32; n];
-            let mut d2 = vec![0.0f32; n];
-            nearest_blocked(&pts, &ctr, &mut idx, &mut d2);
-            for i in 0..n {
-                let (bi, bd) = nearest(pts.row(i), &ctr);
-                // Tie-breaking can differ; distances must match.
-                assert!(
-                    (d2[i] - bd).abs() < 1e-3 * (1.0 + bd.abs()),
-                    "n={n} k={k} i={i}: blocked {} vs scalar {}",
-                    d2[i],
-                    bd
-                );
-                let d_via_idx = crate::linalg::sqdist(pts.row(i), ctr.row(idx[i] as usize));
-                assert!((d_via_idx - bd).abs() < 1e-3 * (1.0 + bd.abs()));
-                let _ = bi;
-            }
-        }
-    }
-
-    #[test]
-    fn empty_centers_yield_infinity() {
-        let pts = Matrix::from_vec(3, 2, vec![0.0; 6]);
-        let ctr = Matrix::zeros(0, 2);
-        let mut idx = vec![0u32; 3];
-        let mut d2 = vec![0.0f32; 3];
-        nearest_blocked(&pts, &ctr, &mut idx, &mut d2);
-        assert!(idx.iter().all(|&i| i == u32::MAX));
-        assert!(d2.iter().all(|&d| d.is_infinite()));
-    }
+    use crate::linalg::Matrix;
 
     #[test]
     fn suffstats_and_means() {

@@ -1,12 +1,47 @@
 //! Dense linear algebra substrate.
 //!
 //! Everything the algorithms need and nothing more: a row-major `f32`
-//! [`Matrix`], squared-distance kernels (scalar and blocked — the native
-//! backend's hot path), and a Cholesky solver for the BP-means feature
-//! re-estimate `F ← (ZᵀZ + εI)⁻¹ ZᵀX`.
+//! [`Matrix`], the canonical squared-distance kernels (scalar here, the
+//! cache-tiled panel variant in [`panel`]), and a Cholesky solver for the
+//! BP-means feature re-estimate `F ← (ZᵀZ + εI)⁻¹ ZᵀX`.
+//!
+//! # Canonical reduction schedule
+//!
+//! Every distance the system compares — worker assignment kernels, the
+//! serial baselines, validator pair caches, objectives — must be **bit
+//! identical**, because OCC serializability (Pan et al., Thm 3.1) folds
+//! worker-computed distances against master-recomputed ones and OFL's
+//! send probability `min(d²/λ², 1)` feeds pre-drawn uniforms. One
+//! reduction schedule is therefore defined here, once, and every path
+//! routes through it:
+//!
+//! * [`dot`]`(a, b)`: eight strided f32 accumulators; element `j` is
+//!   multiplied and added into lane `j mod 8` in increasing-`j` order;
+//!   lanes combine as `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`. One lane
+//!   block is one 8×f32 vector register, so this auto-vectorizes without
+//!   the compiler needing (forbidden) reassociation.
+//! * [`norm2`]`(a)` = `dot(a, a)`.
+//! * [`sqdist_norms`]`(na, a, b, nb)` = `clamp⁰((na − 2·dot(a,b)) + nb)`
+//!   where `clamp⁰(v)` is `v` if `v > 0.0` else `0.0` — the decomposed
+//!   `‖a−b‖² = ‖a‖² − 2a·b + ‖b‖²` with exactly that association, clamped
+//!   **per pair** (not per tile, not at write-back) so cached-norm kernels,
+//!   the scalar reference, and any incremental argmin fold all compare the
+//!   same clamped values.
+//! * [`sqdist`]`(a, b)` = `sqdist_norms(norm2(a), a, b, norm2(b))` — the
+//!   decomposed form is canonical even without a cache; subtract-then-
+//!   square is **not** used anywhere distances are compared.
+//! * [`nearest`]: strict `<` first-minimum over centers in increasing row
+//!   order; no centers → `(usize::MAX, f32::INFINITY)`.
+//!
+//! For identical vectors the decomposed form is still exactly `0.0`:
+//! `na = nb = dot = s`, `s − 2s = −s` exactly (power-of-two multiply),
+//! `−s + s = +0.0`. Norm caches are pure memoization of [`norm2`], so a
+//! kernel recomputing a missing norm is bit-identical to one reading it
+//! from a cache.
 
 pub mod blocked;
 pub mod cholesky;
+pub mod panel;
 
 /// Row-major dense `f32` matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -23,6 +58,13 @@ impl Matrix {
     /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Empty matrix with storage pre-reserved for `rows` rows — use when
+    /// the final row count (or a good bound) is known before a
+    /// `push_row` loop, so growth never reallocates.
+    pub fn with_row_capacity(rows: usize, cols: usize) -> Self {
+        Matrix { rows: 0, cols, data: Vec::with_capacity(rows * cols) }
     }
 
     /// Build from existing row-major storage.
@@ -44,8 +86,18 @@ impl Matrix {
     }
 
     /// Append a row (grows the matrix).
+    ///
+    /// Growth doubles capacity explicitly, so `n` appends cost `O(n)`
+    /// amortized with at most `log₂ n` reallocations — a `push_row` loop
+    /// never degrades to quadratic copying even if the underlying `Vec`
+    /// growth policy changes.
     pub fn push_row(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.cols);
+        let need = self.data.len() + self.cols;
+        if need > self.data.capacity() {
+            let target = need.max(self.data.capacity().saturating_mul(2));
+            self.data.reserve_exact(target - self.data.len());
+        }
         self.data.extend_from_slice(row);
         self.rows += 1;
     }
@@ -82,60 +134,60 @@ impl Matrix {
     }
 }
 
-/// Dot product of two equal-length slices (f64 accumulator).
+/// Dot product of two equal-length slices under the canonical schedule:
+/// eight strided f32 lanes (element `j` into lane `j mod 8`, increasing
+/// `j`), combined `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    // 4-way unrolled: the compiler auto-vectorizes this reliably.
-    let mut i = 0;
     let n = a.len();
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut acc2 = 0.0f32;
-    let mut acc3 = 0.0f32;
-    while i + 4 <= n {
-        acc0 += a[i] * b[i];
-        acc1 += a[i + 1] * b[i + 1];
-        acc2 += a[i + 2] * b[i + 2];
-        acc3 += a[i + 3] * b[i + 3];
-        i += 4;
+    let mut l = [0.0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        l[0] += a[i] * b[i];
+        l[1] += a[i + 1] * b[i + 1];
+        l[2] += a[i + 2] * b[i + 2];
+        l[3] += a[i + 3] * b[i + 3];
+        l[4] += a[i + 4] * b[i + 4];
+        l[5] += a[i + 5] * b[i + 5];
+        l[6] += a[i + 6] * b[i + 6];
+        l[7] += a[i + 7] * b[i + 7];
+        i += 8;
     }
+    let mut j = 0;
     while i < n {
-        acc += a[i] * b[i];
+        l[j] += a[i] * b[i];
         i += 1;
+        j += 1;
     }
-    acc + acc0 + acc1 + acc2 + acc3
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
 }
 
-/// Squared Euclidean distance between two vectors.
+/// Squared L2 norm under the canonical schedule: `dot(a, a)`.
+#[inline]
+pub fn norm2(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// Canonical squared distance given both precomputed norms:
+/// `clamp⁰((na − 2·dot(a,b)) + nb)`. The clamp is per pair — every
+/// comparison anywhere in the system sees this clamped value.
+#[inline]
+pub fn sqdist_norms(na: f32, a: &[f32], b: &[f32], nb: f32) -> f32 {
+    let v = (na - 2.0 * dot(a, b)) + nb;
+    if v > 0.0 {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// Canonical squared Euclidean distance: the decomposed clamped form with
+/// norms computed on the spot. Bit-identical to any cached-norm path.
 #[inline]
 pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let mut i = 0;
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut acc2 = 0.0f32;
-    let mut acc3 = 0.0f32;
-    while i + 4 <= n {
-        let d0 = a[i] - b[i];
-        let d1 = a[i + 1] - b[i + 1];
-        let d2 = a[i + 2] - b[i + 2];
-        let d3 = a[i + 3] - b[i + 3];
-        acc0 += d0 * d0;
-        acc1 += d1 * d1;
-        acc2 += d2 * d2;
-        acc3 += d3 * d3;
-        i += 4;
-    }
-    let mut acc = acc0 + acc1 + acc2 + acc3;
-    while i < n {
-        let d = a[i] - b[i];
-        acc += d * d;
-        i += 1;
-    }
-    acc
+    sqdist_norms(norm2(a), a, b, norm2(b))
 }
 
 /// `y += alpha * x`.
@@ -147,14 +199,9 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// Squared L2 norm.
-#[inline]
-pub fn norm2(a: &[f32]) -> f32 {
-    dot(a, a)
-}
-
 /// Nearest row of `centers` to `x`: returns `(index, squared distance)`.
-/// `centers.rows == 0` returns `(usize::MAX, f32::INFINITY)`.
+/// Strict `<` first-minimum in increasing row order (the canonical
+/// tie-break); `centers.rows == 0` returns `(usize::MAX, f32::INFINITY)`.
 #[inline]
 pub fn nearest(x: &[f32], centers: &Matrix) -> (usize, f32) {
     let mut best = usize::MAX;
@@ -184,6 +231,57 @@ mod tests {
     }
 
     #[test]
+    fn sqdist_of_identical_vectors_is_exactly_zero() {
+        // na = nb = dot = s; s − 2s = −s exactly; −s + s = +0.0.
+        for v in [
+            vec![0.1f32, -2.5, 3e7, 1e-40],
+            vec![16777216.0f32],
+            vec![0.0f32, -0.0],
+        ] {
+            assert_eq!(sqdist(&v, &v), 0.0);
+            assert_eq!(sqdist(&v, &v).to_bits(), 0.0f32.to_bits());
+        }
+    }
+
+    #[test]
+    fn sqdist_clamps_negative_cancellation_to_zero() {
+        // Nearly-identical large-magnitude vectors: the true distance is
+        // ~ULP², far below the rounding noise of the three big reduction
+        // terms, so the unclamped decomposed value lands on either side
+        // of zero depending on rounding. The sweep must hit genuinely
+        // negative raw values (else this regression test has gone stale),
+        // and the clamp must floor every one of them at exactly 0.0.
+        let mut rng = crate::rng::Pcg64::new(7);
+        let mut saw_negative = false;
+        for _ in 0..256 {
+            let a: Vec<f32> = (0..8).map(|_| (rng.next_f32() - 0.5) * 2e4).collect();
+            let mut b = a.clone();
+            // Nudge one element by one ULP.
+            b[7] = f32::from_bits(b[7].to_bits() + 1);
+            let raw = (norm2(&a) - 2.0 * dot(&a, &b)) + norm2(&b);
+            saw_negative |= raw < 0.0;
+            let d = sqdist(&a, &b);
+            assert!(d >= 0.0);
+            let expect = if raw > 0.0 { raw } else { 0.0 };
+            assert_eq!(d.to_bits(), expect.to_bits());
+        }
+        assert!(saw_negative, "sweep never produced a negative raw distance");
+    }
+
+    #[test]
+    fn sqdist_handles_signed_zero_and_subnormals() {
+        assert_eq!(sqdist(&[0.0f32], &[-0.0f32]), 0.0);
+        let sub = f32::MIN_POSITIVE / 2.0; // subnormal
+        let d = sqdist(&[sub], &[0.0f32]);
+        assert!(d >= 0.0 && d.is_finite());
+        // Cached-norm path is bit-identical to the on-the-spot path.
+        let a = [sub, -0.0, 1.5e-39];
+        let b = [0.0f32, sub, -1.5e-39];
+        let cached = sqdist_norms(norm2(&a), &a, &b, norm2(&b));
+        assert_eq!(cached.to_bits(), sqdist(&a, &b).to_bits());
+    }
+
+    #[test]
     fn matrix_rows_and_push() {
         let mut m = Matrix::zeros(0, 3);
         m.push_row(&[1.0, 2.0, 3.0]);
@@ -191,6 +289,26 @@ mod tests {
         assert_eq!(m.rows, 2);
         assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
         assert_eq!(m.get(0, 2), 3.0);
+    }
+
+    #[test]
+    fn push_row_grows_capacity_geometrically() {
+        let mut m = Matrix::zeros(0, 8);
+        let mut caps = std::collections::BTreeSet::new();
+        for i in 0..1024 {
+            m.push_row(&[i as f32; 8]);
+            caps.insert(m.data.capacity());
+        }
+        // Doubling growth: ~log₂(1024·8) distinct capacities, not O(n).
+        assert!(caps.len() <= 14, "push_row reallocated {} times", caps.len());
+        // Pre-sized matrices never reallocate.
+        let mut pre = Matrix::with_row_capacity(1024, 8);
+        let cap0 = pre.data.capacity();
+        for i in 0..1024 {
+            pre.push_row(&[i as f32; 8]);
+        }
+        assert_eq!(pre.data.capacity(), cap0);
+        assert_eq!(pre.rows, 1024);
     }
 
     #[test]
@@ -206,7 +324,7 @@ mod tests {
     }
 
     #[test]
-    fn nearest_picks_minimum() {
+    fn nearest_picks_minimum_and_breaks_ties_low() {
         let mut c = Matrix::zeros(0, 2);
         c.push_row(&[0.0, 0.0]);
         c.push_row(&[10.0, 0.0]);
@@ -218,6 +336,9 @@ mod tests {
         let (k, d) = nearest(&[0.0, 0.0], &empty);
         assert_eq!(k, usize::MAX);
         assert!(d.is_infinite());
+        // Duplicate rows: strict < keeps the first minimum.
+        let dup = Matrix::from_vec(2, 2, vec![1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(nearest(&[0.0, 0.0], &dup).0, 0);
     }
 
     #[test]

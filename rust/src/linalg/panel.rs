@@ -1,0 +1,397 @@
+//! Cache-tiled assignment kernels over the canonical reduction schedule.
+//!
+//! [`nearest_panel`] tiles a panel of [`PANEL_POINTS`] points against
+//! center tiles of [`TILE_CENTERS`] rows, so each center tile (≤ 32 rows
+//! of f32) is pulled into L1 once per *panel* instead of once per
+//! *point* — for a `k×d` snapshot larger than L1/L2 this cuts center
+//! traffic by `PANEL_POINTS×`. Per (point, center) pair it evaluates
+//! exactly [`super::sqdist_norms`] — the decomposed clamped form over the
+//! canonical 8-lane [`super::dot`] — and folds the first minimum with
+//! strict `<` in increasing center order, visiting tiles in increasing
+//! row order. Tiling therefore changes only the *memory traversal*, never
+//! the arithmetic or the compare order: [`nearest_panel`] is bit-identical
+//! to [`nearest_scalar`] (the same-schedule reference kept as the
+//! `kernel = "scalar"` A/B baseline) and to a per-point
+//! [`super::nearest`] loop, by construction.
+//!
+//! Norms are pure memoization: a caller holding per-point norms (computed
+//! once at dataset-block arrival) or per-center norms (a [`NormCache`]
+//! extended incrementally on snapshot deltas) passes them in; a caller
+//! without them passes `None` and the kernel recomputes with the same
+//! [`super::norm2`] — bit-identical either way.
+
+use super::{norm2, sqdist_norms, Matrix};
+use std::borrow::Cow;
+
+/// Points per panel: 64 rows keep a `d ≤ 64` panel (≤ 16 KiB) L1-resident
+/// alongside one center tile. Job splits align to this so only range-end
+/// panels are partial.
+pub const PANEL_POINTS: usize = 64;
+
+/// Centers per tile: 32 rows × `d ≤ 64` × 4 B ≤ 8 KiB — comfortably
+/// L1-resident while the point panel streams through it.
+pub const TILE_CENTERS: usize = 32;
+
+/// Canonical norms for each row of a row-major slice.
+pub fn point_norms(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    (0..rows).map(|i| norm2(&data[i * cols..(i + 1) * cols])).collect()
+}
+
+/// Canonical norms for each row of `m`.
+pub fn center_norms(m: &Matrix) -> Vec<f32> {
+    point_norms(&m.data, m.rows, m.cols)
+}
+
+fn resolve<'a>(cached: Option<&'a [f32]>, data: &[f32], rows: usize, cols: usize) -> Cow<'a, [f32]> {
+    match cached {
+        Some(v) => {
+            debug_assert!(v.len() >= rows);
+            Cow::Borrowed(v)
+        }
+        None => Cow::Owned(point_norms(data, rows, cols)),
+    }
+}
+
+/// Tiled nearest-center assignment over a raw row-major point slice.
+///
+/// `pnorms`/`cnorms` are optional memoized [`norm2`] rows (recomputed
+/// bit-identically when absent). Empty centers yield
+/// `(u32::MAX, f32::INFINITY)` per point.
+#[allow(clippy::too_many_arguments)]
+pub fn nearest_panel_raw(
+    pdata: &[f32],
+    prows: usize,
+    pcols: usize,
+    pnorms: Option<&[f32]>,
+    centers: &Matrix,
+    cnorms: Option<&[f32]>,
+    out_idx: &mut [u32],
+    out_d2: &mut [f32],
+) {
+    debug_assert_eq!(out_idx.len(), prows);
+    debug_assert_eq!(out_d2.len(), prows);
+    out_idx.fill(u32::MAX);
+    out_d2.fill(f32::INFINITY);
+    if prows == 0 || centers.rows == 0 {
+        return;
+    }
+    debug_assert_eq!(centers.cols, pcols);
+    let d = pcols;
+    let pn = resolve(pnorms, pdata, prows, d);
+    let cn = resolve(cnorms, &centers.data, centers.rows, d);
+    let mut p0 = 0;
+    while p0 < prows {
+        let p1 = (p0 + PANEL_POINTS).min(prows);
+        // Center tiles in increasing row order: for every point the
+        // global visit order over j is 0..k, so the strict-< fold picks
+        // the same first minimum as a flat scalar loop.
+        let mut k0 = 0;
+        while k0 < centers.rows {
+            let k1 = (k0 + TILE_CENTERS).min(centers.rows);
+            for i in p0..p1 {
+                let x = &pdata[i * d..(i + 1) * d];
+                let xn = pn[i];
+                let mut bi = out_idx[i];
+                let mut bd = out_d2[i];
+                for j in k0..k1 {
+                    let dist = sqdist_norms(xn, x, centers.row(j), cn[j]);
+                    if dist < bd {
+                        bd = dist;
+                        bi = j as u32;
+                    }
+                }
+                out_idx[i] = bi;
+                out_d2[i] = bd;
+            }
+            k0 = k1;
+        }
+        p0 = p1;
+    }
+}
+
+/// [`nearest_panel_raw`] over a [`Matrix`] of points.
+pub fn nearest_panel(
+    points: &Matrix,
+    pnorms: Option<&[f32]>,
+    centers: &Matrix,
+    cnorms: Option<&[f32]>,
+    out_idx: &mut [u32],
+    out_d2: &mut [f32],
+) {
+    nearest_panel_raw(&points.data, points.rows, points.cols, pnorms, centers, cnorms, out_idx, out_d2)
+}
+
+/// The same-schedule scalar reference: one flat point-major loop, the
+/// identical per-pair [`sqdist_norms`] and strict-< fold. Bit-identical
+/// to [`nearest_panel_raw`]; kept as the `kernel = "scalar"` A/B
+/// baseline (it re-streams all `k×d` center bytes per point).
+#[allow(clippy::too_many_arguments)]
+pub fn nearest_scalar_raw(
+    pdata: &[f32],
+    prows: usize,
+    pcols: usize,
+    pnorms: Option<&[f32]>,
+    centers: &Matrix,
+    cnorms: Option<&[f32]>,
+    out_idx: &mut [u32],
+    out_d2: &mut [f32],
+) {
+    debug_assert_eq!(out_idx.len(), prows);
+    debug_assert_eq!(out_d2.len(), prows);
+    out_idx.fill(u32::MAX);
+    out_d2.fill(f32::INFINITY);
+    if prows == 0 || centers.rows == 0 {
+        return;
+    }
+    debug_assert_eq!(centers.cols, pcols);
+    let d = pcols;
+    let pn = resolve(pnorms, pdata, prows, d);
+    let cn = resolve(cnorms, &centers.data, centers.rows, d);
+    for i in 0..prows {
+        let x = &pdata[i * d..(i + 1) * d];
+        let xn = pn[i];
+        let mut bi = u32::MAX;
+        let mut bd = f32::INFINITY;
+        for j in 0..centers.rows {
+            let dist = sqdist_norms(xn, x, centers.row(j), cn[j]);
+            if dist < bd {
+                bd = dist;
+                bi = j as u32;
+            }
+        }
+        out_idx[i] = bi;
+        out_d2[i] = bd;
+    }
+}
+
+/// Nearest assignment plus a threshold verdict per point:
+/// `out_over[i] = d²ᵢ > lambda2` (strictly — a point exactly on the
+/// boundary is *not* over, matching the serial DP-means open rule).
+#[allow(clippy::too_many_arguments)]
+pub fn threshold_panel(
+    points: &Matrix,
+    pnorms: Option<&[f32]>,
+    centers: &Matrix,
+    cnorms: Option<&[f32]>,
+    lambda2: f32,
+    out_idx: &mut [u32],
+    out_d2: &mut [f32],
+    out_over: &mut [bool],
+) {
+    nearest_panel(points, pnorms, centers, cnorms, out_idx, out_d2);
+    for (o, &dd) in out_over.iter_mut().zip(out_d2.iter()) {
+        *o = dd > lambda2;
+    }
+}
+
+/// Generation-extending cache of per-center [`norm2`] rows.
+///
+/// The TCP worker session keeps one of these beside its snapshot cache:
+/// a full snapshot (re-base, reconnect re-ship) rebuilds it; a snapshot
+/// delta — whose apply keeps prefix rows bit-identical and appends a
+/// tail — extends it with norms for the new rows only. Either path
+/// stores exactly `norm2(row)`, so kernels fed from the cache are
+/// bit-identical to kernels that recompute.
+#[derive(Debug, Default)]
+pub struct NormCache {
+    norms: Vec<f32>,
+}
+
+impl NormCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        NormCache { norms: Vec::new() }
+    }
+
+    /// Recompute all norms for `m` (full snapshot / re-base).
+    pub fn rebuild(&mut self, m: &Matrix) {
+        self.norms.clear();
+        self.norms.reserve(m.rows);
+        for i in 0..m.rows {
+            self.norms.push(norm2(m.row(i)));
+        }
+    }
+
+    /// `m` extends the previously cached matrix: compute norms only for
+    /// the appended tail. A shrink (shouldn't happen on the delta path,
+    /// but re-bases may) falls back to a full rebuild.
+    pub fn extend_to(&mut self, m: &Matrix) {
+        if m.rows < self.norms.len() {
+            self.rebuild(m);
+            return;
+        }
+        for i in self.norms.len()..m.rows {
+            self.norms.push(norm2(m.row(i)));
+        }
+    }
+
+    /// Cached norms, one per cached row.
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    /// Number of rows cached.
+    pub fn len(&self) -> usize {
+        self.norms.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.norms.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_matrix(rng: &mut Pcg64, rows: usize, cols: usize, scale: f32) -> Matrix {
+        Matrix::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| (rng.next_f32() - 0.5) * scale).collect(),
+        )
+    }
+
+    /// Random points/centers with adversarial rows spliced in: all +0.0,
+    /// all -0.0, subnormals, an exact copy of a center row (exact-zero
+    /// distance), and a one-ULP nudge of a center row (large-magnitude
+    /// cancellation near zero).
+    fn adversarial_pair(rng: &mut Pcg64, n: usize, k: usize, d: usize) -> (Matrix, Matrix) {
+        let mut pts = random_matrix(rng, n, d, 2e4);
+        let mut ctr = random_matrix(rng, k, d, 2e4);
+        if k >= 2 {
+            // Duplicate center rows: ties must break to the lower index
+            // identically in both kernels.
+            let first = ctr.row(0).to_vec();
+            ctr.row_mut(1).copy_from_slice(&first);
+        }
+        let splices = n.min(5);
+        for i in 0..splices {
+            match i {
+                0 => pts.row_mut(0).fill(0.0),
+                1 => pts.row_mut(1).fill(-0.0),
+                2 => pts.row_mut(2).fill(f32::MIN_POSITIVE / 2.0),
+                3 => {
+                    let c = ctr.row(i % k).to_vec();
+                    pts.row_mut(3).copy_from_slice(&c);
+                }
+                _ => {
+                    let mut c = ctr.row(i % k).to_vec();
+                    c[d - 1] = f32::from_bits(c[d - 1].to_bits() + 1);
+                    pts.row_mut(4).copy_from_slice(&c);
+                }
+            }
+        }
+        (pts, ctr)
+    }
+
+    fn run_both(pts: &Matrix, ctr: &Matrix) -> (Vec<u32>, Vec<f32>, Vec<u32>, Vec<f32>) {
+        let n = pts.rows;
+        let (mut pi, mut pd) = (vec![0u32; n], vec![0.0f32; n]);
+        let (mut si, mut sd) = (vec![0u32; n], vec![0.0f32; n]);
+        nearest_panel(pts, None, ctr, None, &mut pi, &mut pd);
+        nearest_scalar_raw(&pts.data, n, pts.cols, None, ctr, None, &mut si, &mut sd);
+        (pi, pd, si, sd)
+    }
+
+    #[test]
+    fn panel_scalar_and_serial_are_bit_identical() {
+        let mut rng = Pcg64::new(11);
+        for &(n, k, d) in
+            &[(1usize, 1usize, 1usize), (7, 3, 5), (64, 32, 24), (130, 70, 16), (257, 33, 19), (96, 129, 8)]
+        {
+            let (pts, ctr) = adversarial_pair(&mut rng, n, k, d);
+            let (pi, pd, si, sd) = run_both(&pts, &ctr);
+            for i in 0..n {
+                assert_eq!(pi[i], si[i], "idx diverged at point {i} (n={n} k={k} d={d})");
+                assert_eq!(
+                    pd[i].to_bits(),
+                    sd[i].to_bits(),
+                    "d2 diverged at point {i} (n={n} k={k} d={d})"
+                );
+                // Both equal the per-point serial canonical fold.
+                let (bk, bd) = crate::linalg::nearest(pts.row(i), &ctr);
+                assert_eq!(pi[i] as usize, bk);
+                assert_eq!(pd[i].to_bits(), bd.to_bits());
+                assert!(pd[i] >= 0.0, "clamped distance went negative at point {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_norms_match_recomputed_bitwise() {
+        let mut rng = Pcg64::new(23);
+        let (pts, ctr) = adversarial_pair(&mut rng, 100, 37, 12);
+        let pn = point_norms(&pts.data, pts.rows, pts.cols);
+        let cn = center_norms(&ctr);
+        let n = pts.rows;
+        let (mut ci, mut cd) = (vec![0u32; n], vec![0.0f32; n]);
+        let (mut ui, mut ud) = (vec![0u32; n], vec![0.0f32; n]);
+        nearest_panel(&pts, Some(&pn), &ctr, Some(&cn), &mut ci, &mut cd);
+        nearest_panel(&pts, None, &ctr, None, &mut ui, &mut ud);
+        assert_eq!(ci, ui);
+        for i in 0..n {
+            assert_eq!(cd[i].to_bits(), ud[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn norm_cache_extend_matches_rebuild() {
+        let mut rng = Pcg64::new(31);
+        let mut m = random_matrix(&mut rng, 9, 6, 100.0);
+        let mut cache = NormCache::new();
+        cache.rebuild(&m);
+        assert_eq!(cache.len(), 9);
+        // Delta path: append rows, extend incrementally.
+        for _ in 0..7 {
+            let row: Vec<f32> = (0..6).map(|_| rng.next_f32() * 50.0).collect();
+            m.push_row(&row);
+        }
+        cache.extend_to(&m);
+        let mut fresh = NormCache::new();
+        fresh.rebuild(&m);
+        assert_eq!(cache.len(), fresh.len());
+        for (a, b) in cache.norms().iter().zip(fresh.norms()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Re-base to a smaller snapshot falls back to a full rebuild.
+        let small = random_matrix(&mut rng, 3, 6, 100.0);
+        cache.extend_to(&small);
+        assert_eq!(cache.len(), 3);
+        for i in 0..3 {
+            assert_eq!(cache.norms()[i].to_bits(), norm2(small.row(i)).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_inputs_yield_sentinels() {
+        let pts = Matrix::zeros(4, 3);
+        let empty = Matrix::zeros(0, 3);
+        let (mut idx, mut d2) = (vec![0u32; 4], vec![0.0f32; 4]);
+        nearest_panel(&pts, None, &empty, None, &mut idx, &mut d2);
+        assert!(idx.iter().all(|&i| i == u32::MAX));
+        assert!(d2.iter().all(|&d| d.is_infinite()));
+        let (mut none_i, mut none_d) = (vec![0u32; 0], vec![0.0f32; 0]);
+        nearest_panel(&empty, None, &pts, None, &mut none_i, &mut none_d);
+    }
+
+    #[test]
+    fn threshold_is_strictly_greater() {
+        let pts = Matrix::from_vec(3, 1, vec![0.0, 2.0, 3.0]);
+        let ctr = Matrix::from_vec(1, 1, vec![0.0]);
+        let (mut idx, mut d2) = (vec![0u32; 3], vec![0.0f32; 3]);
+        let mut over = vec![false; 3];
+        threshold_panel(&pts, None, &ctr, None, 4.0, &mut idx, &mut d2, &mut over);
+        assert_eq!(idx, vec![0, 0, 0]);
+        // d² = 0, 4, 9 against λ² = 4: the boundary point is not over.
+        assert_eq!(over, vec![false, false, true]);
+    }
+
+    #[test]
+    fn panel_constants_stay_pow2_aligned() {
+        assert!(PANEL_POINTS.is_power_of_two());
+        assert!(TILE_CENTERS.is_power_of_two());
+    }
+}

@@ -64,6 +64,7 @@ fn app() -> App {
                 )
                 .flag("transport", "inproc | tcp", Some("inproc"))
                 .flag("io", "reactor | poll (event-loop blocking mode)", Some("reactor"))
+                .flag("kernel", "panel | scalar (assignment distance kernel)", Some("panel"))
                 .flag("validator-shards", "validator peers (0 = procs/2, min 1)", Some("0"))
                 .flag("peers", "comma-separated host:port of occd worker compute peers", None)
                 .flag(
@@ -106,6 +107,7 @@ fn app() -> App {
                     Some("2"),
                 )
                 .flag("io", "reactor | poll (event-loop blocking mode)", Some("reactor"))
+                .flag("kernel", "panel | scalar (assignment distance kernel)", Some("panel"))
                 .flag("validator-shards", "validator peers (0 = procs/2, min 1)", Some("0"))
                 .flag("peers", "comma-separated host:port of occd worker compute peers", None)
                 .flag(
@@ -257,6 +259,9 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     if let Some(v) = p.get("io") {
         cfg.io = occml::config::IoKind::parse(v)?;
     }
+    if let Some(v) = p.get("kernel") {
+        cfg.kernel = occml::config::KernelKind::parse(v)?;
+    }
     if let Some(v) = p.get_parse::<usize>("validator-shards")? {
         cfg.validator_shards = v;
     }
@@ -331,6 +336,7 @@ fn cmd_run(p: &Parsed) -> Result<i32> {
         if cfg.transport == TransportKind::Tcp {
             println!("io          : {}", cfg.io.name());
         }
+        println!("kernel      : {}", cfg.kernel.name());
         println!("points      : {}", cfg.n);
         println!("P x b       : {} x {} = {} per epoch", cfg.procs, cfg.block, cfg.points_per_epoch());
         println!("{kind:<12}: {}", out.model.k());

@@ -136,6 +136,16 @@ pub struct EpochRecord {
     /// (`occd serve` only; 0 for static replay). A depth pinned at the
     /// configured bound means clients are being throttled.
     pub ingest_queue_depth: usize,
+    /// Wall-clock of worker compute in flight for this epoch, summed over
+    /// the wave's completed scatter→gather intervals (respun waves
+    /// included — cancelled speculative compute was real work). Unlike
+    /// `worker_time` (critical path, max over workers), this is the
+    /// throughput-side denominator for points/sec. JSONL: `compute_ms`.
+    pub compute_time: Duration,
+    /// Assignment-kernel name the run was configured with (`panel` or
+    /// `scalar`), stamped so bench output can be grouped per kernel.
+    /// Empty for records that predate the knob.
+    pub kernel: &'static str,
 }
 
 impl EpochRecord {
@@ -172,6 +182,8 @@ impl EpochRecord {
             ("writev_batches", Json::Num(self.writev_batches as f64)),
             ("admission_wait_ms", Json::Num(self.admission_wait.as_secs_f64() * 1e3)),
             ("ingest_queue_depth", Json::Num(self.ingest_queue_depth as f64)),
+            ("compute_ms", Json::Num(self.compute_time.as_secs_f64() * 1e3)),
+            ("kernel", Json::Str(self.kernel.to_string())),
         ])
     }
 }
@@ -433,6 +445,8 @@ mod tests {
             writev_batches: 2,
             admission_wait: Duration::from_millis(3),
             ingest_queue_depth: 4,
+            compute_time: Duration::from_millis(9),
+            kernel: "panel",
         }
     }
 
@@ -497,6 +511,8 @@ mod tests {
         assert_eq!(j.get("writev_batches").unwrap().as_usize(), Some(2));
         assert!(j.get("admission_wait_ms").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("ingest_queue_depth").unwrap().as_usize(), Some(4));
+        assert!(j.get("compute_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("kernel").unwrap().as_str(), Some("panel"));
     }
 
     #[test]

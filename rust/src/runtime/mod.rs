@@ -25,6 +25,7 @@ pub mod xla;
 #[path = "xla_stub.rs"]
 pub mod xla;
 
+use crate::data::Dataset;
 use crate::error::Result;
 use crate::linalg::Matrix;
 
@@ -37,15 +38,29 @@ pub struct Block<'a> {
     pub n: usize,
     /// Dimensionality.
     pub d: usize,
+    /// Memoized canonical `norm2` per row, when the caller holds them
+    /// (datasets cache point norms at construction). `None` is always
+    /// valid — kernels recompute bit-identically.
+    pub norms: Option<&'a [f32]>,
 }
 
 impl<'a> Block<'a> {
-    /// Block over rows `range` of a matrix.
+    /// Block over rows `range` of a matrix (no norm cache).
     pub fn of(m: &'a Matrix, range: std::ops::Range<usize>) -> Self {
         Block {
             data: &m.data[range.start * m.cols..range.end * m.cols],
             n: range.end - range.start,
             d: m.cols,
+            norms: None,
+        }
+    }
+    /// Block over rows `range` of a dataset, carrying its point-norm cache.
+    pub fn of_dataset(ds: &'a Dataset, range: std::ops::Range<usize>) -> Self {
+        Block {
+            data: &ds.points.data[range.start * ds.points.cols..range.end * ds.points.cols],
+            n: range.end - range.start,
+            d: ds.points.cols,
+            norms: ds.norms.get(range.start..range.end),
         }
     }
     /// Row accessor.
@@ -79,6 +94,23 @@ pub trait ComputeBackend: Send + Sync {
         out_idx: &mut [u32],
         out_d2: &mut [f32],
     ) -> Result<()>;
+
+    /// [`ComputeBackend::nearest`] with an optional memoized per-center
+    /// norm cache (e.g. a TCP worker session's snapshot-generation cache).
+    /// Norm caches are pure memoization of the canonical `norm2`, so the
+    /// default implementation — ignore the cache and recompute — is
+    /// bit-identical; backends override this only to skip the recompute.
+    fn nearest_with(
+        &self,
+        block: Block<'_>,
+        centers: &Matrix,
+        cnorms: Option<&[f32]>,
+        out_idx: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> Result<()> {
+        let _ = cnorms;
+        self.nearest(block, centers, out_idx, out_d2)
+    }
 
     /// Accumulate per-center sums and counts for `block` under `idx`
     /// (values `>= sums.rows` are skipped). Adds into `sums`/`counts`.

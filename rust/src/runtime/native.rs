@@ -1,22 +1,46 @@
-//! Pure-Rust compute backend: blocked kernels from [`crate::linalg`].
+//! Pure-Rust compute backend: canonical panel kernels from
+//! [`crate::linalg::panel`].
 //!
 //! Always available (no artifacts needed), bit-deterministic, and the
 //! roofline reference the XLA artifacts are compared against in the
-//! `backends` bench.
+//! `backends` bench. Carries the [`KernelKind`] knob: `panel` (the
+//! default, cache-tiled) or `scalar` (the same-schedule flat reference) —
+//! bit-identical by construction, A/B-able via `OCCML_KERNEL`.
 
 use super::{Block, BpDescendOut, ComputeBackend};
-use crate::algorithms::bpmeans::descend_z;
+use crate::algorithms::bpmeans::descend_z_with;
+use crate::config::KernelKind;
 use crate::error::Result;
-use crate::linalg::{blocked, Matrix};
+use crate::linalg::{panel, Matrix};
 
-/// The native (pure-Rust) backend. Zero-sized; cheap to share.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct NativeBackend;
+/// The native (pure-Rust) backend. Two words; cheap to copy and share.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeBackend {
+    kernel: KernelKind,
+}
 
 impl NativeBackend {
-    /// Construct.
+    /// Construct with the ambient kernel choice (`OCCML_KERNEL` override
+    /// if set, panel otherwise) — so a CI sweep of the env var reaches
+    /// every test that builds a backend directly.
     pub fn new() -> Self {
-        NativeBackend
+        NativeBackend { kernel: KernelKind::from_env() }
+    }
+
+    /// Construct with an explicit kernel choice.
+    pub fn with_kernel(kernel: KernelKind) -> Self {
+        NativeBackend { kernel }
+    }
+
+    /// Which assignment kernel this backend runs.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
     }
 }
 
@@ -32,7 +56,25 @@ impl ComputeBackend for NativeBackend {
         out_idx: &mut [u32],
         out_d2: &mut [f32],
     ) -> Result<()> {
-        blocked::nearest_blocked_raw(block.data, block.n, block.d, centers, out_idx, out_d2);
+        self.nearest_with(block, centers, None, out_idx, out_d2)
+    }
+
+    fn nearest_with(
+        &self,
+        block: Block<'_>,
+        centers: &Matrix,
+        cnorms: Option<&[f32]>,
+        out_idx: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> Result<()> {
+        match self.kernel {
+            KernelKind::Panel => panel::nearest_panel_raw(
+                block.data, block.n, block.d, block.norms, centers, cnorms, out_idx, out_d2,
+            ),
+            KernelKind::Scalar => panel::nearest_scalar_raw(
+                block.data, block.n, block.d, block.norms, centers, cnorms, out_idx, out_d2,
+            ),
+        }
         Ok(())
     }
 
@@ -62,13 +104,16 @@ impl ComputeBackend for NativeBackend {
         sweeps: usize,
     ) -> Result<BpDescendOut> {
         let k = features.rows;
+        // Feature norms are loop-invariant across the whole block call:
+        // memoize them once (bit-identical to per-point recompute).
+        let fnorms: Vec<f32> = (0..k).map(|j| crate::linalg::norm2(features.row(j))).collect();
         let mut z = vec![false; block.n * k];
         let mut residuals = vec![0.0f32; block.n * block.d];
         let mut r2 = vec![0.0f32; block.n];
         for i in 0..block.n {
             let zi = &mut z[i * k..(i + 1) * k];
             let ri = &mut residuals[i * block.d..(i + 1) * block.d];
-            r2[i] = descend_z(block.row(i), features, zi, ri, sweeps);
+            r2[i] = descend_z_with(block.row(i), features, Some(&fnorms), zi, ri, sweeps);
         }
         Ok(BpDescendOut { z, residuals, r2 })
     }
@@ -77,6 +122,7 @@ impl ComputeBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algorithms::bpmeans::descend_z;
     use crate::rng::Pcg64;
 
     fn random_matrix(rng: &mut Pcg64, rows: usize, cols: usize) -> Matrix {
@@ -84,17 +130,39 @@ mod tests {
     }
 
     #[test]
-    fn nearest_matches_scalar() {
+    fn nearest_matches_scalar_bitwise() {
         let mut rng = Pcg64::new(1);
         let pts = random_matrix(&mut rng, 50, 8);
         let ctr = random_matrix(&mut rng, 7, 8);
+        for be in [
+            NativeBackend::with_kernel(KernelKind::Panel),
+            NativeBackend::with_kernel(KernelKind::Scalar),
+        ] {
+            let mut idx = vec![0u32; 20];
+            let mut d2 = vec![0.0f32; 20];
+            be.nearest(Block::of(&pts, 10..30), &ctr, &mut idx, &mut d2).unwrap();
+            for (off, i) in (10..30).enumerate() {
+                let (bk, bd) = crate::linalg::nearest(pts.row(i), &ctr);
+                assert_eq!(idx[off] as usize, bk);
+                assert_eq!(d2[off].to_bits(), bd.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_with_center_norm_cache_is_bit_identical() {
+        let mut rng = Pcg64::new(5);
+        let pts = random_matrix(&mut rng, 40, 6);
+        let ctr = random_matrix(&mut rng, 9, 6);
+        let cn = panel::center_norms(&ctr);
         let be = NativeBackend::new();
-        let mut idx = vec![0u32; 20];
-        let mut d2 = vec![0.0f32; 20];
-        be.nearest(Block::of(&pts, 10..30), &ctr, &mut idx, &mut d2).unwrap();
-        for (off, i) in (10..30).enumerate() {
-            let (_, bd) = crate::linalg::nearest(pts.row(i), &ctr);
-            assert!((d2[off] - bd).abs() < 1e-4);
+        let (mut ia, mut da) = (vec![0u32; 40], vec![0.0f32; 40]);
+        let (mut ib, mut db) = (vec![0u32; 40], vec![0.0f32; 40]);
+        be.nearest_with(Block::of(&pts, 0..40), &ctr, Some(&cn), &mut ia, &mut da).unwrap();
+        be.nearest(Block::of(&pts, 0..40), &ctr, &mut ib, &mut db).unwrap();
+        assert_eq!(ia, ib);
+        for i in 0..40 {
+            assert_eq!(da[i].to_bits(), db[i].to_bits());
         }
     }
 
@@ -122,7 +190,8 @@ mod tests {
             let mut z = vec![false; 4];
             let r2 = descend_z(pts.row(i), &feats, &mut z, &mut r, 2);
             assert_eq!(&out.z[i * 4..(i + 1) * 4], z.as_slice());
-            assert!((out.r2[i] - r2).abs() < 1e-5);
+            // The hoisted feature-norm path is bit-identical.
+            assert_eq!(out.r2[i].to_bits(), r2.to_bits());
         }
     }
 }

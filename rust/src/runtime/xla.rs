@@ -183,6 +183,7 @@ impl ComputeBackend for XlaBackend {
                         data: &block.data[lo * block.d..hi * block.d],
                         n: hi - lo,
                         d: block.d,
+                        norms: None,
                     };
                     self.nearest(sub, centers, &mut out_idx[lo..hi], &mut out_d2[lo..hi])?;
                     lo = hi;
@@ -227,6 +228,7 @@ impl ComputeBackend for XlaBackend {
                         data: &block.data[lo * block.d..hi * block.d],
                         n: hi - lo,
                         d: block.d,
+                        norms: None,
                     };
                     self.suffstats(sub, &idx[lo..hi], sums, counts)?;
                     lo = hi;
@@ -286,6 +288,7 @@ impl ComputeBackend for XlaBackend {
                         data: &block.data[lo * block.d..hi * block.d],
                         n: hi - lo,
                         d: block.d,
+                        norms: None,
                     };
                     let part = self.bp_descend(sub, features, _sweeps)?;
                     out.z.extend(part.z);

@@ -112,7 +112,7 @@ fn modeled_dp(cfg: &RunConfig, data: &Dataset, backend: &dyn ComputeBackend) -> 
                 let bn = r.end - r.start;
                 let mut idx = vec![0u32; bn];
                 let mut d2 = vec![0.0f32; bn];
-                backend.nearest(Block::of(&data.points, r.clone()), &centers, &mut idx, &mut d2)?;
+                backend.nearest(Block::of_dataset(data, r.clone()), &centers, &mut idx, &mut d2)?;
                 for (off, i) in r.clone().enumerate() {
                     if d2[off] > lambda2 {
                         proposals.push(DpProposal { idx: i as u32, center: data.point(i).to_vec() });
@@ -185,7 +185,7 @@ fn modeled_ofl(cfg: &RunConfig, data: &Dataset, backend: &dyn ComputeBackend) ->
             let bn = r.end - r.start;
             let mut idx = vec![0u32; bn];
             let mut d2 = vec![0.0f32; bn];
-            backend.nearest(Block::of(&data.points, r.clone()), &centers, &mut idx, &mut d2)?;
+            backend.nearest(Block::of_dataset(data, r.clone()), &centers, &mut idx, &mut d2)?;
             for (off, i) in r.clone().enumerate() {
                 let d2_prev = if base == 0 { f32::INFINITY } else { d2[off] };
                 let p_send = if d2_prev.is_infinite() { 1.0 } else { (d2_prev as f64 / lambda2).min(1.0) };

@@ -64,7 +64,7 @@ fn ofl_adversarial_order_still_bounded() {
     for &i in &order {
         sorted_points.push_row(random.point(i));
     }
-    let adversarial = Arc::new(Dataset { points: sorted_points, labels: None });
+    let adversarial = Arc::new(Dataset::new(sorted_points, None));
 
     let dp = serial_dp_means(&adversarial, lambda, 5);
     let j_dp = dp_objective(&adversarial, &dp.centers, lambda);
