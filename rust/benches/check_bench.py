@@ -43,6 +43,14 @@ seven gates:
    kernel earning its keep. Relative within one run, like gates 5/6, so
    no recorded baseline number. Skipped with a notice on schema-5
    artifacts, which predate the kernel knob.
+8. Peer residency (schema 7): the residency experiment's store=sparse row
+   must report a nonzero peak per-peer resident_data_bytes strictly below
+   its store=dense twin, and the dense twin must equal the full n*dim*4
+   matrix (a dense peer materializes everything on its first shipped
+   block). Coverage and shipped bytes are deterministic for a fixed
+   config, so this is a sharp structural gate. The bench asserts the
+   twins are bit-identical before the footprint is compared. Skipped
+   with a notice on schema-6 artifacts, which predate the store knob.
 """
 
 import json
@@ -241,6 +249,44 @@ def main() -> int:
             failures += 1
     else:
         print("kernel gate: skipped (schema < 6 artifact has no assign experiment)")
+
+    # Gate 8: the out-of-core block store must earn its keep — a sparse
+    # peer's peak resident footprint stays strictly below the dense
+    # matrix the old data plane materialized, with the dense twin pinned
+    # at exactly n*dim*4 so the comparison can never drift.
+    if bench.get("schema", 0) >= 7:
+        def store_row(store):
+            for r in bench["rows"]:
+                if r.get("experiment") == "residency" and r.get("store") == store:
+                    return r
+            print(f"missing residency row for store={store}", file=sys.stderr)
+            sys.exit(1)
+
+        sparse = store_row("sparse")
+        dense = store_row("dense")
+        sres, dres = sparse["resident_data_bytes"], dense["resident_data_bytes"]
+        full_matrix = sparse["n"] * sparse["dim"] * 4
+        print(
+            f"residency gate: sparse={sres:.0f} B vs dense={dres:.0f} B "
+            f"(n={sparse['n']:.0f}, dim={sparse['dim']:.0f}, "
+            f"matrix={full_matrix:.0f} B)"
+        )
+        if dres != full_matrix:
+            print(
+                f"dense peer residency must equal the full matrix "
+                f"({dres:.0f} vs {full_matrix:.0f})",
+                file=sys.stderr,
+            )
+            failures += 1
+        if sres <= 0 or sres >= dres:
+            print(
+                f"sparse peer residency must be nonzero and strictly below dense "
+                f"({sres:.0f} vs {dres:.0f})",
+                file=sys.stderr,
+            )
+            failures += 1
+    else:
+        print("residency gate: skipped (schema < 7 artifact has no residency experiment)")
 
     if failures:
         return 1

@@ -61,6 +61,14 @@
 //! `points_per_sec` per kernel. The kernels must agree bitwise before
 //! timing; gate 7 in `check_bench.py` asserts panel strictly wins.
 //!
+//! Schema 7 adds a **peer-residency experiment** (`experiment =
+//! "residency"`): the same sharded multi-worker tcp dpmeans run twice —
+//! `store = "sparse"` (offset-keyed, panel-aligned block store) vs
+//! `store = "dense"` (the full n×d session matrix) — reporting the
+//! coordinator's peak per-peer `resident_data_bytes` gauge per variant.
+//! The twins must be bit-identical; gate 8 in `check_bench.py` asserts the
+//! sparse peer footprint stays strictly below the dense `n·d·4` matrix.
+//!
 //! Defaults keep single-machine runtime in seconds; pass `--n=…`, `--pb=…`,
 //! `--procs=…`, `--reps=…` to scale up.
 
@@ -799,10 +807,93 @@ fn main() {
         asn_table.print();
     }
 
+    // --- Peer data-plane residency: store = "sparse" vs "dense" ----------
+    // The schema-7 experiment measures what the out-of-core block store
+    // buys: the same sharded multi-worker tcp dpmeans run under both store
+    // variants, comparing the coordinator's peak per-peer
+    // `resident_data_bytes` gauge. A dense peer materializes the whole
+    // n×d matrix on its first shipped block; a sparse peer holds only the
+    // panel-aligned blocks covering its shipped ranges, so under an equal
+    // split across `procs` workers its footprint is ~1/procs of the
+    // matrix. Bit-identity across variants is the invariant (the store is
+    // a memory-layout knob, never arithmetic); gate 8 in `check_bench.py`
+    // holds the strictly-below line across PRs. Shipped bytes and coverage
+    // are deterministic, so one rep measures the gauge exactly.
+    {
+        use occml::config::StoreKind;
+
+        let res_n: usize = args.get_or("res_n", 8192).min(n);
+        let res_base = RunConfig {
+            algo: Algo::DpMeans,
+            lambda: 2.0,
+            procs,
+            block: (res_n / (procs * 4)).max(1),
+            iterations: 2,
+            bootstrap_div: 16,
+            source: DataSource::DpClusters,
+            n: res_n,
+            seed: 12,
+            transport: TransportKind::Tcp,
+            ..RunConfig::default()
+        };
+        let data = Arc::new(driver::load_or_generate(&res_base).expect("generate"));
+        let mut res_table =
+            Table::new(&["store", "wall", "resident", "dense nd4", "identical"]);
+        let mut res_twins: Vec<(StoreKind, driver::RunOutput)> = Vec::new();
+        for store in [StoreKind::Sparse, StoreKind::Dense] {
+            let cfg = RunConfig { store, ..res_base.clone() };
+            let out = driver::run_with(&cfg, data.clone(), Arc::new(NativeBackend::new()))
+                .expect("residency run");
+            res_twins.push((store, out));
+        }
+        let identical = models_identical(&res_twins[0].1.model, &res_twins[1].1.model);
+        if !identical {
+            failures.push(
+                "residency: store=sparse and store=dense models diverged — the block \
+                 store leaked into the arithmetic"
+                    .into(),
+            );
+        }
+        let dense_full = (res_n * data.dim() * 4) as u64;
+        let sparse_resident = res_twins[0].1.summary.transport.resident_data_bytes;
+        if sparse_resident == 0 || sparse_resident >= dense_full {
+            failures.push(format!(
+                "store=sparse peak peer residency must be nonzero and strictly below the \
+                 dense matrix ({sparse_resident} vs {dense_full})"
+            ));
+        }
+        println!(
+            "\n=== peer data-plane residency: store=sparse vs store=dense (dpmeans tcp, \
+             N={res_n}, P={procs}) ==="
+        );
+        for (store, out) in &res_twins {
+            let resident = out.summary.transport.resident_data_bytes;
+            res_table.row(vec![
+                store.name().to_string(),
+                fmt_duration(out.summary.total_time),
+                format!("{resident} B"),
+                format!("{dense_full} B"),
+                identical.to_string(),
+            ]);
+            rows.push(obj(vec![
+                ("experiment", Json::Str("residency".to_string())),
+                ("algo", Json::Str("dpmeans".to_string())),
+                ("store", Json::Str(store.name().to_string())),
+                ("transport", Json::Str(TransportKind::Tcp.name().to_string())),
+                ("sharding", Json::Str(ShardingKind::Hash.name().to_string())),
+                ("n", Json::Num(res_n as f64)),
+                ("dim", Json::Num(data.dim() as f64)),
+                ("wall_ms", Json::Num(out.summary.total_time.as_secs_f64() * 1e3)),
+                ("resident_data_bytes", Json::Num(resident as f64)),
+            ]));
+        }
+        res_table.print();
+    }
+
     // Machine-readable results for cross-PR perf tracking (schema in the
     // README; consumed by CI's bench-smoke regression gate).
     let doc = obj(vec![
-        ("schema", Json::Num(6.0)),
+        ("schema", Json::Num(7.0)),
         ("bench", Json::Str("schedulers".to_string())),
         (
             "params",

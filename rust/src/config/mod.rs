@@ -324,6 +324,60 @@ impl KernelKind {
     }
 }
 
+/// Which peer-side dataset store a worker session assembles its shipped
+/// blocks into: the offset-keyed sparse block store (the default — a
+/// peer's resident footprint is O(covered rows)) or the dense `n × d`
+/// matrix, kept as the A/B baseline.
+///
+/// Bit-identical either way: block boundaries are panel boundaries
+/// (`data::store::BLOCK_POINTS == linalg::panel::PANEL_POINTS`), so the
+/// knob changes allocation shape and memory traversal, never arithmetic
+/// or compare order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreKind {
+    /// Offset-keyed 64-row blocks (`data::store::BlockStore`), allocated
+    /// only where shipped spans landed — resident bytes are O(covered
+    /// rows), the unlock for datasets that only fit sharded.
+    Sparse,
+    /// One dense `n × d` matrix allocated on the first shipped block and
+    /// filled sparsely. Retained so benches and CI can measure what the
+    /// block store saves (`resident_data_bytes`).
+    Dense,
+}
+
+impl StoreKind {
+    /// Parse a store name.
+    pub fn parse(s: &str) -> Result<StoreKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sparse" | "block" | "blocks" => Ok(StoreKind::Sparse),
+            "dense" | "full" => Ok(StoreKind::Dense),
+            other => Err(Error::config(format!("unknown store `{other}` (sparse|dense)"))),
+        }
+    }
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreKind::Sparse => "sparse",
+            StoreKind::Dense => "dense",
+        }
+    }
+    /// Default store: the `OCCML_STORE` environment override if set (CI
+    /// uses it to sweep the dense baseline across the whole suite),
+    /// sparse otherwise.
+    ///
+    /// Like `OCCML_KERNEL`, an *invalid* value panics rather than falling
+    /// back: the env var exists to force a store under test.
+    pub fn from_env() -> StoreKind {
+        match std::env::var("OCCML_STORE") {
+            Ok(s) => StoreKind::parse(&s).unwrap_or_else(|e| panic!("OCCML_STORE: {e}")),
+            Err(std::env::VarError::NotUnicode(v)) => {
+                panic!("OCCML_STORE is set but not valid unicode: {v:?}")
+            }
+            Err(std::env::VarError::NotPresent) => StoreKind::Sparse,
+        }
+    }
+}
+
 /// Data source for a run.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DataSource {
@@ -404,6 +458,10 @@ pub struct RunConfig {
     /// same-schedule scalar reference. Bit-identical either way; only
     /// the memory traversal changes.
     pub kernel: KernelKind,
+    /// Peer-side dataset store: offset-keyed sparse blocks (default) vs
+    /// the dense `n × d` matrix baseline. Bit-identical either way; only
+    /// the resident footprint changes (`resident_data_bytes`).
+    pub store: StoreKind,
     /// Validator-shard peers on the validation plane. `0` (the default)
     /// means "half of `procs`, min 1" — see
     /// [`RunConfig::effective_validators`].
@@ -474,6 +532,7 @@ impl Default for RunConfig {
             transport: TransportKind::from_env(),
             io: IoKind::from_env(),
             kernel: KernelKind::from_env(),
+            store: StoreKind::from_env(),
             validator_shards: 0,
             peers: Vec::new(),
             validator_peers: Vec::new(),
@@ -570,6 +629,9 @@ impl RunConfig {
         }
         if let Some(s) = doc.get_str("run.kernel") {
             cfg.kernel = KernelKind::parse(s)?;
+        }
+        if let Some(s) = doc.get_str("run.store") {
+            cfg.store = StoreKind::parse(s)?;
         }
         if let Some(v) = doc.get_int("run.validator_shards") {
             cfg.validator_shards = usize::try_from(v)
@@ -990,6 +1052,24 @@ mod tests {
         let doc = toml::parse("[run]\nprocs = 2\n").unwrap();
         assert_eq!(RunConfig::from_doc(&doc).unwrap().kernel, KernelKind::from_env());
         assert!(RunConfig::from_doc(&toml::parse("[run]\nkernel = \"simd\"\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn store_knob_parses_rejects_and_extracts() {
+        assert_eq!(StoreKind::parse("sparse").unwrap(), StoreKind::Sparse);
+        assert_eq!(StoreKind::parse("BLOCKS").unwrap(), StoreKind::Sparse);
+        assert_eq!(StoreKind::parse("dense").unwrap(), StoreKind::Dense);
+        assert_eq!(StoreKind::parse("full").unwrap(), StoreKind::Dense);
+        let err = StoreKind::parse("mmap").unwrap_err().to_string();
+        assert!(err.contains("mmap") && err.contains("sparse") && err.contains("dense"));
+        assert_eq!(StoreKind::Sparse.name(), "sparse");
+        assert_eq!(StoreKind::Dense.name(), "dense");
+        // Extracts from TOML; absent key keeps the default.
+        let doc = toml::parse("[run]\nstore = \"dense\"\n").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().store, StoreKind::Dense);
+        let doc = toml::parse("[run]\nprocs = 2\n").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().store, StoreKind::from_env());
+        assert!(RunConfig::from_doc(&toml::parse("[run]\nstore = \"disk\"\n").unwrap()).is_err());
     }
 
     #[test]

@@ -244,6 +244,7 @@ fn dp_recompute(
     blocked::finalize_means(&sums, &counts, centers);
     let net = cluster.stats().since(&net0);
     let rec = EpochRecord {
+        resident_data_bytes: net.resident_data_bytes,
         iteration: pass,
         epoch: usize::MAX, // convention: the recompute "epoch"
         points: n,
@@ -318,6 +319,7 @@ fn bp_recompute(
     *features = cholesky::solve_ridge(&ztz, &ztx, RIDGE_EPS)?;
     let net = cluster.stats().since(&net0);
     let rec = EpochRecord {
+        resident_data_bytes: net.resident_data_bytes,
         iteration: pass,
         epoch: usize::MAX,
         points: n,

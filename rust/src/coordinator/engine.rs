@@ -24,11 +24,12 @@
 //! gather reports the error and the pool remains joinable, so dropping a
 //! pool mid-wave can never hang the master.
 
+use crate::data::store::DataView;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::panel::PANEL_POINTS;
 use crate::linalg::Matrix;
-use crate::runtime::{Block, ComputeBackend};
+use crate::runtime::ComputeBackend;
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::ops::Range;
@@ -475,30 +476,32 @@ pub(crate) fn run_job(
     backend: &Arc<dyn ComputeBackend>,
     job: Job,
 ) -> Result<JobOutput> {
-    run_job_with(data, backend, job, None)
+    run_job_with(DataView::Dense(data), backend, job, None)
 }
 
-/// [`run_job`] with an optional cached per-center squared-norm slice for
-/// `Nearest` jobs (one `norm2` per snapshot row, canonical schedule). The
-/// TCP peer keeps such a cache keyed to its installed snapshot and extends
-/// it on deltas; passing `None` makes the kernel derive the norms itself —
-/// bit-identical either way, the cache only saves the recompute.
+/// [`run_job`] over any [`DataView`] (dense dataset or sparse block
+/// store — the TCP peer's `store` knob decides), with an optional cached
+/// per-center squared-norm slice for `Nearest` jobs (one `norm2` per
+/// snapshot row, canonical schedule). The TCP peer keeps such a cache
+/// keyed to its installed snapshot and extends it on deltas; passing
+/// `None` makes the kernel derive the norms itself — bit-identical either
+/// way, the cache only saves the recompute.
 pub(crate) fn run_job_with(
-    data: &Dataset,
+    view: DataView<'_>,
     backend: &Arc<dyn ComputeBackend>,
     job: Job,
     cnorms: Option<&[f32]>,
 ) -> Result<JobOutput> {
     match job {
         Job::Shutdown => Err(Error::Coordinator("shutdown is not a computable job".into())),
-        Job::Nearest { range, centers } => run_nearest(data, backend, range, &centers, cnorms),
+        Job::Nearest { range, centers } => run_nearest(view, backend, range, &centers, cnorms),
         Job::SuffStats { range, assignments, k } => {
-            run_suffstats(data, backend, range, &assignments, k)
+            run_suffstats(view, backend, range, &assignments, k)
         }
         Job::BpDescend { range, features, sweeps } => {
-            run_bp_descend(data, backend, range, &features, sweeps)
+            run_bp_descend(view, backend, range, &features, sweeps)
         }
-        Job::BpStats { range, z, k } => run_bp_stats(data, range, &z, k),
+        Job::BpStats { range, z, k } => run_bp_stats(view, range, &z, k),
         Job::PairCache { vectors, positions, shards } => {
             run_pair_cache(&vectors, &positions, &shards)
         }
@@ -533,7 +536,7 @@ fn worker_loop(
 }
 
 fn run_nearest(
-    data: &Dataset,
+    view: DataView<'_>,
     backend: &Arc<dyn ComputeBackend>,
     range: Range<usize>,
     centers: &Matrix,
@@ -542,16 +545,20 @@ fn run_nearest(
     let n = range.end - range.start;
     let mut idx = vec![0u32; n];
     let mut d2 = vec![0.0f32; n];
-    if n > 0 {
-        // Block::of_dataset carries the dataset's cached point norms, so the
-        // panel kernel skips the per-point norm2 recompute.
-        backend.nearest_with(Block::of_dataset(data, range), centers, cnorms, &mut idx, &mut d2)?;
+    // Nearest is per-point independent and every view piece carries its
+    // cached point norms, so computing piece-by-piece into the range's
+    // output slots is bit-identical to one dense pass (pieces break only
+    // on 64-row block boundaries — always panel boundaries).
+    for (r, block) in view.pieces(&range) {
+        let off = r.start - range.start;
+        let len = r.end - r.start;
+        backend.nearest_with(block, centers, cnorms, &mut idx[off..off + len], &mut d2[off..off + len])?;
     }
     Ok(JobOutput::Nearest { idx, d2 })
 }
 
 fn run_suffstats(
-    data: &Dataset,
+    view: DataView<'_>,
     backend: &Arc<dyn ComputeBackend>,
     range: Range<usize>,
     assignments: &Arc<Vec<u32>>,
@@ -559,19 +566,18 @@ fn run_suffstats(
 ) -> Result<JobOutput> {
     // One partial per globally-aligned REDUCE_CHUNK so the master's
     // combination order is P-independent (range is chunk-aligned by
-    // split_range_chunked).
+    // split_range_chunked). Within a chunk the pieces accumulate into the
+    // same partial in ascending row order — the exact per-point addition
+    // sequence of the one-slice dense pass.
     let mut chunks = Vec::new();
     let mut lo = range.start;
     while lo < range.end {
         let hi = ((lo / REDUCE_CHUNK + 1) * REDUCE_CHUNK).min(range.end);
-        let mut sums = Matrix::zeros(k, data.dim());
+        let mut sums = Matrix::zeros(k, view.dim());
         let mut counts = vec![0u64; k];
-        backend.suffstats(
-            Block::of(&data.points, lo..hi),
-            &assignments[lo..hi],
-            &mut sums,
-            &mut counts,
-        )?;
+        for (r, block) in view.pieces(&(lo..hi)) {
+            backend.suffstats(block, &assignments[r.start..r.end], &mut sums, &mut counts)?;
+        }
         chunks.push((lo / REDUCE_CHUNK, sums, counts));
         lo = hi;
     }
@@ -579,7 +585,7 @@ fn run_suffstats(
 }
 
 fn run_bp_descend(
-    data: &Dataset,
+    view: DataView<'_>,
     backend: &Arc<dyn ComputeBackend>,
     range: Range<usize>,
     features: &Matrix,
@@ -589,8 +595,18 @@ fn run_bp_descend(
     if n == 0 {
         return Ok(JobOutput::BpDescend { z: vec![], k: features.rows, residuals: vec![], r2: vec![] });
     }
-    let out = backend.bp_descend(Block::of(&data.points, range), features, sweeps)?;
-    Ok(JobOutput::BpDescend { z: out.z, k: features.rows, residuals: out.residuals, r2: out.r2 })
+    // Coordinate descent is per-point independent, so concatenating the
+    // per-piece outputs in row order is bit-identical to one dense pass.
+    let mut z = Vec::with_capacity(n * features.rows);
+    let mut residuals = Vec::with_capacity(n * view.dim());
+    let mut r2 = Vec::with_capacity(n);
+    for (_, block) in view.pieces(&range) {
+        let out = backend.bp_descend(block, features, sweeps)?;
+        z.extend(out.z);
+        residuals.extend(out.residuals);
+        r2.extend(out.r2);
+    }
+    Ok(JobOutput::BpDescend { z, k: features.rows, residuals, r2 })
 }
 
 /// Validate a `PairCache` job's geometry: when `positions` is non-empty it
@@ -672,12 +688,12 @@ fn run_pair_cache(
 }
 
 fn run_bp_stats(
-    data: &Dataset,
+    view: DataView<'_>,
     range: Range<usize>,
     z: &Arc<Vec<Vec<bool>>>,
     k: usize,
 ) -> Result<JobOutput> {
-    let d = data.dim();
+    let d = view.dim();
     let mut chunks = Vec::new();
     let mut lo = range.start;
     while lo < range.end {
@@ -686,7 +702,7 @@ fn run_bp_stats(
         let mut ztx = Matrix::zeros(k, d);
         for i in lo..hi {
             let zi = &z[i];
-            let x = data.point(i);
+            let x = view.point(i);
             for a in 0..zi.len().min(k) {
                 if !zi[a] {
                     continue;

@@ -1103,6 +1103,7 @@ impl Scheduler for WaveEngine {
                             handshake_time: net.handshake_time,
                             reactor_wakeups: net.reactor_wakeups,
                             writev_batches: net.writev_batches,
+                            resident_data_bytes: net.resident_data_bytes,
                             admission_wait,
                             ingest_queue_depth: src.queue_depth,
                             compute_time: w.flight.iter().map(|(s, e)| e.duration_since(*s)).sum(),

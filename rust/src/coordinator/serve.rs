@@ -35,7 +35,8 @@ use super::reactor::Reactor;
 use super::scheduler::{EpochSource, SourcePoll, SourcedEpoch};
 use super::transport::PlaneWaker;
 use super::wire::{self, IngestAck, IngestStatus};
-use crate::config::{RunConfig, ShardingKind, TransportKind};
+use crate::config::{RunConfig, ShardingKind, StoreKind, TransportKind};
+use crate::data::store::{BlockStore, BLOCK_POINTS};
 use crate::data::{DataCell, Dataset};
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
@@ -210,13 +211,24 @@ struct Admission {
     batch_points: usize,
     latency: Duration,
     bound: usize,
+    store: StoreKind,
     cell: Arc<DataCell>,
-    /// Master copy of every admitted point, staged + sealed.
+    /// Master copy of the admitted points. Under `store = "dense"` this
+    /// holds staged + sealed rows (chunks append directly); under
+    /// `store = "sparse"` only sealed rows — staged chunks wait in
+    /// `staging` until a seal materializes them.
     points: Matrix,
-    /// Per-point squared norms, extended incrementally per admitted chunk
-    /// so a seal never recomputes the whole prefix.
+    /// Per-point squared norms, extended incrementally (per admitted
+    /// chunk, or per sealed span from the staging blocks) so a seal
+    /// never recomputes the whole prefix.
     norms: Vec<f32>,
-    /// Rows already sealed (and published); `points.rows - sealed_rows`
+    /// Un-sealed chunks, staged in the same panel-aligned [`BlockStore`]
+    /// the peer data plane uses (`store = "sparse"`); sealed blocks are
+    /// evicted once materialized, so the buffer's footprint is O(staged).
+    staging: BlockStore,
+    /// Rows currently staged in `staging` (sparse mode only).
+    staged: usize,
+    /// Rows already sealed (and published); [`Admission::staged_rows`]
     /// rows are staged, waiting for size or SLA.
     sealed_rows: usize,
     /// When the oldest staged point arrived (SLA clock). Restarted on
@@ -244,9 +256,12 @@ impl Admission {
             batch_points: cfg.effective_batch_points(),
             latency: cfg.batch_latency(),
             bound: cfg.ingest_queue,
+            store: cfg.store,
             cell,
             points: Matrix::zeros(0, cfg.dim),
             norms: Vec::new(),
+            staging: BlockStore::new(cfg.dim),
+            staged: 0,
             sealed_rows: 0,
             oldest: None,
             tx: Some(tx),
@@ -258,7 +273,10 @@ impl Admission {
     }
 
     fn staged_rows(&self) -> usize {
-        self.points.rows - self.sealed_rows
+        match self.store {
+            StoreKind::Dense => self.points.rows - self.sealed_rows,
+            StoreKind::Sparse => self.staged,
+        }
     }
 
     fn closed(&self) -> bool {
@@ -296,13 +314,23 @@ impl Admission {
         if self.oldest.is_none() {
             self.oldest = Some(Instant::now());
         }
-        self.points.data.extend_from_slice(&chunk.data);
-        self.points.rows += chunk.rows;
-        self.norms.extend(crate::linalg::panel::point_norms(
-            &chunk.data,
-            chunk.rows,
-            chunk.cols,
-        ));
+        match self.store {
+            StoreKind::Dense => {
+                self.points.data.extend_from_slice(&chunk.data);
+                self.points.rows += chunk.rows;
+                self.norms.extend(crate::linalg::panel::point_norms(
+                    &chunk.data,
+                    chunk.rows,
+                    chunk.cols,
+                ));
+            }
+            StoreKind::Sparse => {
+                // Stage at the chunk's global row offset; install
+                // computes the canonical per-row norms in the blocks.
+                self.staging.install(self.sealed_rows + self.staged, &chunk.data, chunk.rows);
+                self.staged += chunk.rows;
+            }
+        }
         self.admitted += chunk.rows as u64;
         while self.staged_rows() >= self.batch_points {
             self.seal(self.batch_points);
@@ -320,6 +348,24 @@ impl Admission {
     /// engine.
     fn seal(&mut self, rows: usize) {
         let span = self.sealed_rows..self.sealed_rows + rows;
+        if self.store == StoreKind::Sparse {
+            // Materialize the span out of the staging blocks into the
+            // master copy, reusing their per-block norms (the canonical
+            // `norm2` — bitwise what the dense append path computes),
+            // then evict what no longer backs staged rows.
+            let d = self.dim;
+            self.points.grow_rows(span.end);
+            for (r, block) in self.staging.pieces(&span) {
+                self.points.data[r.start * d..r.end * d].copy_from_slice(block.data);
+                self.norms.extend_from_slice(block.norms.expect("staging blocks carry norms"));
+            }
+            self.staged -= rows;
+            // A block straddling the seal boundary stays only while it
+            // still backs staged rows; a fully-drained staging buffer
+            // holds nothing.
+            self.staging
+                .evict_below(if self.staged == 0 { span.end + BLOCK_POINTS } else { span.end });
+        }
         self.sealed_rows = span.end;
         self.oldest = if self.staged_rows() > 0 { Some(Instant::now()) } else { None };
         // Every sealed row is published, staged rows ride along harmlessly
@@ -841,6 +887,50 @@ mod tests {
         assert!(matches!(src.poll_epoch(), SourcePoll::Ended), "Ended is sticky");
         // Admission stays closed.
         assert_eq!(a.offer(9, &chunk(1, 2, 0.0)).status, IngestStatus::Rejected);
+    }
+
+    #[test]
+    fn staging_store_variants_publish_identical_generations() {
+        // The sparse staging buffer (block store + seal-time
+        // materialization) must publish byte-for-byte the generations the
+        // dense append path does — points and norms.
+        let mut published: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+        for kind in [StoreKind::Sparse, StoreKind::Dense] {
+            let mut c = cfg(3, 70, 60_000, 64); // unaligned batch: seals cut inside blocks
+            c.store = kind;
+            let (mut a, _rx, _depth, dc) = admission(&c);
+            // Chunk sizes chosen to straddle 64-row block boundaries.
+            for (i, rows) in [50usize, 30, 100, 7].into_iter().enumerate() {
+                let mut m = chunk(rows, 3, 0.0);
+                for (j, v) in m.data.iter_mut().enumerate() {
+                    *v = ((i * 131 + j) as f32).sin();
+                }
+                assert_eq!(a.offer(i as u64, &m).status, IngestStatus::Accepted);
+            }
+            a.eos(); // seals the remainder: every admitted row publishes
+            let ds = dc.get();
+            assert_eq!(ds.len(), 187);
+            published.push((
+                ds.points.data.iter().map(|v| v.to_bits()).collect(),
+                ds.norms.iter().map(|v| v.to_bits()).collect(),
+            ));
+        }
+        assert_eq!(published[0].0, published[1].0, "points must match bitwise");
+        assert_eq!(published[0].1, published[1].1, "norms must match bitwise");
+    }
+
+    #[test]
+    fn sparse_staging_evicts_sealed_blocks() {
+        let mut c = cfg(2, 64, 60_000, 64);
+        c.store = StoreKind::Sparse;
+        let (mut a, _rx, _depth, _dc) = admission(&c);
+        a.offer(1, &chunk(200, 2, 1.5)); // seals 0..64, 64..128, 128..192
+        assert_eq!(a.staged_rows(), 8);
+        // Only the straddling block 3 (rows 192..200 staged) survives.
+        assert_eq!(a.staging.block_count(), 1);
+        a.eos();
+        assert_eq!(a.staging.block_count(), 0, "eos seal evicts the tail");
+        assert_eq!(a.points.rows, 200);
     }
 
     #[test]

@@ -149,7 +149,8 @@ use super::engine::{panic_message, run_job_with, Job, JobOutput};
 use super::reactor::Reactor;
 use super::transport::{SharedStats, Topology, TransportStats, WaveId};
 use super::wire::{self, Hello, HelloAck, PeerRole};
-use crate::config::IoKind;
+use crate::config::{IoKind, StoreKind};
+use crate::data::store::{DataView, PeerStore, BLOCK_POINTS};
 use crate::data::{DataCell, Dataset};
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
@@ -229,70 +230,11 @@ fn park_backoff(reactor: &mut Option<Reactor>, delay: Duration) {
 /// comfortably under [`wire::MAX_FRAME`].
 pub const DATA_BLOCK_POINTS: usize = 16_384;
 
-// ---------------------------------------------------------------------------
-// Coverage: which point ranges a peer holds
-// ---------------------------------------------------------------------------
-
-/// A set of disjoint, sorted point ranges — which parts of the dataset a
-/// peer has been shipped (master side) or has installed (peer side).
-#[derive(Debug, Clone, Default)]
-pub struct Coverage {
-    spans: Vec<Range<usize>>,
-}
-
-impl Coverage {
-    /// Add a range, merging with overlapping or adjacent spans.
-    pub fn add(&mut self, r: Range<usize>) {
-        if r.start >= r.end {
-            return;
-        }
-        self.spans.push(r);
-        self.spans.sort_by_key(|s| s.start);
-        let mut merged: Vec<Range<usize>> = Vec::with_capacity(self.spans.len());
-        for s in self.spans.drain(..) {
-            match merged.last_mut() {
-                Some(last) if s.start <= last.end => last.end = last.end.max(s.end),
-                _ => merged.push(s),
-            }
-        }
-        self.spans = merged;
-    }
-
-    /// True if every point of `r` is covered.
-    pub fn covers(&self, r: &Range<usize>) -> bool {
-        r.start >= r.end || self.spans.iter().any(|s| s.start <= r.start && r.end <= s.end)
-    }
-
-    /// The sub-ranges of `r` not yet covered, in order.
-    pub fn missing(&self, r: &Range<usize>) -> Vec<Range<usize>> {
-        let mut out = Vec::new();
-        let mut at = r.start;
-        for s in &self.spans {
-            if at >= r.end {
-                break;
-            }
-            if s.end <= at {
-                continue;
-            }
-            if s.start >= r.end {
-                break;
-            }
-            if s.start > at {
-                out.push(at..s.start.min(r.end));
-            }
-            at = at.max(s.end);
-        }
-        if at < r.end {
-            out.push(at..r.end);
-        }
-        out
-    }
-
-    /// Forget everything (a fresh peer session holds nothing).
-    pub fn clear(&mut self) {
-        self.spans.clear();
-    }
-}
+/// Re-exported from [`crate::data::store`] (where it moved alongside the
+/// block store it gates): the disjoint sorted range set tracking which
+/// parts of the dataset a peer has been shipped (master side) or has
+/// installed (peer side).
+pub use crate::data::store::Coverage;
 
 // ---------------------------------------------------------------------------
 // Peer side: the serve loop behind `occd worker` and loopback threads
@@ -336,6 +278,20 @@ pub fn worker_reactor_wakeups() -> u64 {
 /// terminates the session; that returns `Ok` because it is how masters
 /// normally leave.
 pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result<()> {
+    serve_peer_with(stream, backend, StoreKind::from_env())
+}
+
+/// [`serve_peer`] with an explicit peer-side [`StoreKind`] — which
+/// structure the session assembles its shipped blocks into: the
+/// offset-keyed sparse [`crate::data::store::BlockStore`] (default) or
+/// the dense `n × d` matrix baseline. Loopback planes pass their
+/// topology's knob; standalone `occd worker` processes resolve it from
+/// `--store` / `OCCML_STORE` through the plain wrapper.
+pub fn serve_peer_with(
+    stream: TcpStream,
+    backend: Arc<dyn ComputeBackend>,
+    store_kind: StoreKind,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut stream = stream;
     // Handshake: the first frame must be a Hello carrying this peer's shard
@@ -396,11 +352,12 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
     let ack = HelloAck { proto: wire::VERSION, ok: true, message: String::new() };
     stream.write_all(&wire::hello_ack_frame(&ack)?)?;
 
-    // Local dataset store, assembled from shipped blocks. Allocated lazily
-    // on the first block: validator peers never receive one and so never
-    // pay for an n × d matrix.
-    let mut store: Option<Dataset> = None;
-    let mut covered = Coverage::default();
+    // Local dataset store, assembled from shipped blocks. Nothing is
+    // allocated until the first block arrives: validator peers never
+    // receive one and so never pay a byte. Reads are coverage-gated by
+    // the store itself — a row no install ever wrote (and its norm) is
+    // structurally unreadable on either store variant.
+    let mut store = PeerStore::new(store_kind);
     let mut data_err: Option<String> = None;
     // The session's single-entry snapshot cache: the `(id, matrix)` the
     // master last installed, which snapshot-referencing jobs resolve
@@ -459,7 +416,7 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
         };
         match kind {
             wire::KIND_DATA => {
-                if let Err(e) = install_block(&hello, &payload, &mut store, &mut covered) {
+                if let Err(e) = install_block(&hello, &payload, &mut store) {
                     // The frame boundary is intact; remember the failure and
                     // surface it on the next job that needs the data.
                     data_err = Some(e.to_string());
@@ -505,9 +462,9 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
                 let start = Instant::now();
                 let output = match job {
                     Ok(Job::Shutdown) => return Ok(()),
-                    Ok(job) => run_covered(&job.data_range(), &data_err, &store, &covered)
-                        .and_then(|data| {
-                            let data = data.unwrap_or(&empty);
+                    Ok(job) => run_covered(&job.data_range(), &data_err, &store)
+                        .and_then(|view| {
+                            let view = view.unwrap_or(DataView::Dense(&empty));
                             // The session norm cache applies exactly when the
                             // job's centers ARE the cached snapshot matrix.
                             let norms: Option<&[f32]> = match (&job, &snap) {
@@ -519,7 +476,7 @@ pub fn serve_peer(stream: TcpStream, backend: Arc<dyn ComputeBackend>) -> Result
                                 _ => None,
                             };
                             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                                run_job_with(data, &backend, job, norms)
+                                run_job_with(view, &backend, job, norms)
                             }))
                             .unwrap_or_else(|p| Err(Error::Coordinator(panic_message(&*p))))
                         }),
@@ -597,14 +554,14 @@ fn write_session_reply(
     res
 }
 
-/// Check a job's data needs against the peer's store; returns the dataset
-/// to run against (`None` for jobs that read no points).
+/// Check a job's data needs against the peer's store; returns the
+/// coverage-gated view to run against (`None` for jobs that read no
+/// points).
 fn run_covered<'a>(
     need: &Option<Range<usize>>,
     data_err: &Option<String>,
-    store: &'a Option<Dataset>,
-    covered: &Coverage,
-) -> Result<Option<&'a Dataset>> {
+    store: &'a PeerStore,
+) -> Result<Option<DataView<'a>>> {
     let Some(range) = need else { return Ok(None) };
     if range.start >= range.end {
         return Ok(None); // an empty block reads no points (tail epochs)
@@ -612,22 +569,13 @@ fn run_covered<'a>(
     if let Some(e) = data_err {
         return Err(Error::Coordinator(format!("dataset block error: {e}")));
     }
-    match store {
-        Some(ds) if covered.covers(range) => Ok(Some(ds)),
-        _ => Err(Error::Coordinator(format!(
-            "job range {}..{} not covered by shipped dataset blocks",
-            range.start, range.end
-        ))),
-    }
+    store.view(need)
 }
 
-/// Install one dataset-block frame into the peer's store.
-fn install_block(
-    hello: &Hello,
-    payload: &[u8],
-    store: &mut Option<Dataset>,
-    covered: &mut Coverage,
-) -> Result<()> {
+/// Decode and geometry-check one dataset-block frame, then install it
+/// into the peer's store (dense matrix or sparse block store — the
+/// session's knob decides; coverage advances either way).
+fn install_block(hello: &Hello, payload: &[u8], store: &mut PeerStore) -> Result<()> {
     let (offset, block) = wire::decode_data_block(payload)?;
     let n = hello.n as usize;
     let d = hello.dim as usize;
@@ -642,27 +590,13 @@ fn install_block(
     }
     // Streaming ingest (`occd serve`) grows the master's dataset past the
     // `n` this session handshook with, so blocks beyond it are legal: the
-    // store grows to cover them (zero-filled, same width). The same
-    // plausibility cap as `.occb` loading applies to the *grown* geometry.
+    // store grows to cover them. The same plausibility cap as `.occb`
+    // loading applies to the *grown* geometry.
     let rows = n.max(end);
     if rows.checked_mul(d).is_none() || rows * d > (1 << 33) {
         return Err(Error::Coordinator(format!("implausible dataset geometry {rows} x {d}")));
     }
-    // Dense full-size store, filled sparsely: global point indices stay
-    // valid for the shared job executor at the cost of allocating n × d
-    // zeros even though only ~2·n/P rows ever arrive. Fine for RAM-sized
-    // data; an offset-keyed block store is the ROADMAP item for datasets
-    // that only fit sharded.
-    let ds = store.get_or_insert_with(|| Dataset::new(Matrix::zeros(n, d), None));
-    if ds.points.rows < end {
-        ds.points.data.resize(end * d, 0.0);
-        ds.points.rows = end;
-    }
-    ds.points.data[offset * d..end * d].copy_from_slice(&block.data);
-    // Keep the point-norm cache coherent with the rows just written (and
-    // grow it if the store grew past the handshook geometry).
-    ds.refresh_norms(offset, end);
-    covered.add(offset..end);
+    store.install(n, d, offset, &block);
     Ok(())
 }
 
@@ -1000,6 +934,11 @@ struct TcpShared {
     /// Monotone snapshot-id source (ids are never reused, so a stale
     /// reference can only miss, never alias).
     next_snap_id: AtomicU64,
+    /// Which structure peer sessions assemble shipped blocks into —
+    /// decides the resident-footprint model the master accounts under
+    /// `resident_data_bytes` (and is what loopback planes hand to
+    /// [`serve_peer_with`]).
+    store: StoreKind,
     stats: Arc<SharedStats>,
 }
 
@@ -1136,6 +1075,19 @@ fn ship_missing(
             lo = hi;
         }
         peer.sent.add(span);
+    }
+    // Account the peer's resident dataset footprint from the coverage just
+    // shipped — the master-side model of what the session's store holds.
+    // Dense sessions allocate the full handshook geometry (grown if blocks
+    // landed past it); sparse sessions pay only for panel-aligned blocks
+    // that coverage touches. Peak across peers, kept as a gauge.
+    if !peer.sent.is_empty() {
+        let d = data.dim();
+        let bytes = match shared.store {
+            StoreKind::Dense => (peer.hello.n as usize).max(peer.sent.max_end()) * d * 4,
+            StoreKind::Sparse => peer.sent.aligned_blocks(BLOCK_POINTS) * BLOCK_POINTS * d * 4,
+        };
+        shared.stats.note_resident(bytes as u64);
     }
     Ok(())
 }
@@ -1398,6 +1350,7 @@ pub fn spawn_planes_cell(
         reconnect_attempts: topo.reconnect_attempts,
         frugal: topo.frugal_wire,
         next_snap_id: AtomicU64::new(1),
+        store: topo.store,
         stats,
     });
     let compute = TcpPlane::init(
@@ -1492,12 +1445,13 @@ impl TcpPlane {
                 let addr = local.to_string();
                 let backend = backend.clone();
                 let stop = shutdown.clone();
+                let store = shared.store;
                 handles.push(std::thread::spawn(move || loop {
                     let Ok((s, _)) = listener.accept() else { return };
                     if stop.load(Ordering::SeqCst) {
                         return;
                     }
-                    let _ = serve_peer(s, backend.clone());
+                    let _ = serve_peer_with(s, backend.clone(), store);
                 }));
                 listener_addrs.push(addr.clone());
                 let stream = TcpStream::connect(local)
@@ -2239,34 +2193,7 @@ mod tests {
         }
     }
 
-    // -- Coverage ----------------------------------------------------------
-
-    #[test]
-    fn coverage_add_merges_and_covers() {
-        let mut c = Coverage::default();
-        assert!(c.covers(&(5..5)), "empty range is always covered");
-        c.add(10..20);
-        c.add(30..40);
-        c.add(18..30); // bridges the two spans
-        assert!(c.covers(&(10..40)));
-        assert!(!c.covers(&(9..12)));
-        assert!(!c.covers(&(35..41)));
-        c.add(0..0); // empty add is a no-op
-        assert!(!c.covers(&(0..1)));
-    }
-
-    #[test]
-    fn coverage_missing_returns_exact_gaps() {
-        let mut c = Coverage::default();
-        c.add(10..20);
-        c.add(30..40);
-        assert_eq!(c.missing(&(0..50)), vec![0..10, 20..30, 40..50]);
-        assert_eq!(c.missing(&(12..18)), Vec::<Range<usize>>::new());
-        assert_eq!(c.missing(&(15..35)), vec![20..30]);
-        assert_eq!(c.missing(&(40..40)), Vec::<Range<usize>>::new());
-        c.clear();
-        assert_eq!(c.missing(&(1..3)), vec![1..3]);
-    }
+    // Coverage unit tests live in `crate::data::store` alongside the type.
 
     // -- Waves -------------------------------------------------------------
 
@@ -2527,6 +2454,7 @@ mod tests {
             reconnect_attempts: 1,
             frugal_wire: true,
             io: IoKind::from_env(),
+            store: StoreKind::from_env(),
         };
         let (_compute, mut validate) =
             spawn_planes(data, backend, &topo, Arc::new(SharedStats::default())).unwrap();
@@ -2588,6 +2516,7 @@ mod tests {
             reconnect_attempts: 2,
             frugal_wire: true,
             io: IoKind::from_env(),
+            store: StoreKind::from_env(),
         };
         let (mut compute, validate) =
             spawn_planes(data.clone(), backend.clone(), &topo, Arc::new(SharedStats::default()))
@@ -2657,6 +2586,7 @@ mod tests {
             reconnect_attempts: 8,
             frugal_wire: true,
             io: IoKind::from_env(),
+            store: StoreKind::from_env(),
         };
         let (mut compute, _validate) =
             spawn_planes(data.clone(), backend, &topo, Arc::new(SharedStats::default()))
@@ -2772,6 +2702,7 @@ mod tests {
             reconnect_attempts: 1,
             frugal_wire: true,
             io: IoKind::from_env(),
+            store: StoreKind::from_env(),
         };
         let (mut compute, _validate) =
             spawn_planes(data.clone(), backend, &topo, Arc::new(SharedStats::default()))
@@ -2962,6 +2893,7 @@ mod tests {
             reconnect_attempts: 3,
             frugal_wire: true,
             io: IoKind::from_env(),
+            store: StoreKind::from_env(),
         };
         let (_compute, mut validate) =
             spawn_planes(data, backend, &topo, Arc::new(SharedStats::default())).unwrap();
@@ -3033,6 +2965,7 @@ mod tests {
             reconnect_attempts: 1,
             frugal_wire: true,
             io: IoKind::from_env(),
+            store: StoreKind::from_env(),
         };
         let (_compute, mut validate) =
             spawn_planes(data, backend, &topo, Arc::new(SharedStats::default())).unwrap();

@@ -38,7 +38,7 @@
 //! across `{inproc, tcp} × speculation depths`.
 
 use super::engine::{Job, JobOutput, JobReply, WorkerPool, WAKER_SENTINEL};
-use crate::config::{IoKind, TransportKind};
+use crate::config::{IoKind, StoreKind, TransportKind};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
@@ -91,6 +91,14 @@ pub struct TransportStats {
     /// batch replaces what used to be several per-frame `write_all`
     /// syscalls (zero in-proc).
     pub writev_batches: u64,
+    /// Peak modeled resident dataset footprint of any single peer's
+    /// session store, in bytes (zero in-proc, where peers share the
+    /// dataset by `Arc`). A *gauge*, not a counter: under
+    /// `store = "dense"` it is the full grown `n × d × 4` a session
+    /// allocates; under `store = "sparse"` only the panel-aligned blocks
+    /// its shipped coverage touches. [`TransportStats::since`] passes it
+    /// through undifferenced.
+    pub resident_data_bytes: u64,
 }
 
 impl TransportStats {
@@ -111,6 +119,10 @@ impl TransportStats {
             gather_wait_time: self.gather_wait_time.saturating_sub(earlier.gather_wait_time),
             reactor_wakeups: self.reactor_wakeups.saturating_sub(earlier.reactor_wakeups),
             writev_batches: self.writev_batches.saturating_sub(earlier.writev_batches),
+            // A gauge (current peak), not a cumulative counter —
+            // differencing it would report ~0 for every epoch after the
+            // first ship.
+            resident_data_bytes: self.resident_data_bytes,
         }
     }
 }
@@ -132,6 +144,7 @@ pub struct SharedStats {
     gather_wait_nanos: AtomicU64,
     reactor_wakeups: AtomicU64,
     writev_batches: AtomicU64,
+    resident_data_bytes: AtomicU64,
 }
 
 impl SharedStats {
@@ -183,6 +196,11 @@ impl SharedStats {
     pub fn add_writev_batch(&self) {
         self.writev_batches.fetch_add(1, Ordering::Relaxed);
     }
+    /// Record one peer session's modeled resident dataset footprint;
+    /// the gauge keeps the peak across peers and ships (`fetch_max`).
+    pub fn note_resident(&self, bytes: u64) {
+        self.resident_data_bytes.fetch_max(bytes, Ordering::Relaxed);
+    }
     /// Render the counters as one coherent [`TransportStats`].
     pub fn snapshot(&self) -> TransportStats {
         TransportStats {
@@ -198,6 +216,7 @@ impl SharedStats {
             ),
             reactor_wakeups: self.reactor_wakeups.load(Ordering::Relaxed),
             writev_batches: self.writev_batches.load(Ordering::Relaxed),
+            resident_data_bytes: self.resident_data_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -231,6 +250,12 @@ pub struct Topology {
     /// Event-loop blocking mode for the planes this topology spawns:
     /// readiness reactor (default) vs the legacy sleep-slice poller.
     pub io: IoKind,
+    /// Which structure TCP peer sessions assemble shipped dataset blocks
+    /// into: the offset-keyed sparse block store (default, resident
+    /// footprint proportional to shipped coverage) or the dense `n × d`
+    /// matrix baseline. Bit-identical models either way; ignored in-proc
+    /// (workers share the dataset by `Arc`).
+    pub store: StoreKind,
 }
 
 /// Default reconnect budget for dropped peers.
@@ -253,6 +278,7 @@ impl Topology {
             reconnect_attempts: DEFAULT_RECONNECT_ATTEMPTS,
             frugal_wire: true,
             io: IoKind::from_env(),
+            store: StoreKind::from_env(),
         }
     }
 
@@ -279,6 +305,7 @@ impl Topology {
             reconnect_attempts: cfg.reconnect_attempts,
             frugal_wire: cfg.frugal_wire,
             io: cfg.io,
+            store: cfg.store,
         }
     }
 
@@ -874,6 +901,7 @@ mod tests {
             gather_wait_time: Duration::from_millis(2),
             reactor_wakeups: 6,
             writev_batches: 3,
+            resident_data_bytes: 4096,
         };
         let b = TransportStats {
             wire_bytes: 250,
@@ -886,6 +914,7 @@ mod tests {
             gather_wait_time: Duration::from_millis(9),
             reactor_wakeups: 20,
             writev_batches: 10,
+            resident_data_bytes: 8192,
         };
         let d = b.since(&a);
         assert_eq!(d.wire_bytes, 150);
@@ -898,6 +927,7 @@ mod tests {
         assert_eq!(d.gather_wait_time, Duration::from_millis(7));
         assert_eq!(d.reactor_wakeups, 14);
         assert_eq!(d.writev_batches, 7);
+        assert_eq!(d.resident_data_bytes, 8192, "gauge passes through undifferenced");
     }
 
     #[test]
@@ -915,6 +945,8 @@ mod tests {
         s.add_reactor_wakeup();
         s.add_reactor_wakeup();
         s.add_writev_batch();
+        s.note_resident(640);
+        s.note_resident(512); // peak gauge: a smaller peer never lowers it
         let t = s.snapshot();
         assert_eq!(t.wire_bytes, 15);
         assert_eq!(t.unique_payload_bytes, 12);
@@ -926,6 +958,7 @@ mod tests {
         assert_eq!(t.gather_wait_time, Duration::from_micros(11));
         assert_eq!(t.reactor_wakeups, 2);
         assert_eq!(t.writev_batches, 1);
+        assert_eq!(t.resident_data_bytes, 640);
     }
 
     #[test]
@@ -942,6 +975,7 @@ mod tests {
             reconnect_attempts: 1,
             frugal_wire: true,
             io: IoKind::Reactor,
+            store: StoreKind::Sparse,
         };
         assert_eq!(t.effective_procs(), 3, "addresses define the plane size");
         assert_eq!(t.effective_validators(), 1);
@@ -960,6 +994,7 @@ mod tests {
             reconnect_attempts: 0,
             frugal_wire: true,
             io: IoKind::Reactor,
+            store: StoreKind::Sparse,
         };
         let err = Cluster::spawn_topology(TransportKind::InProc, data, backend, &topo)
             .unwrap_err()

@@ -13,6 +13,7 @@
 
 pub mod generators;
 pub mod io;
+pub mod store;
 
 use crate::linalg::Matrix;
 use std::sync::{Arc, Mutex};
@@ -192,8 +193,8 @@ mod tests {
         // In-place row writes refresh their norm range (worker block
         // arrival), growing the cache with the matrix.
         let mut grown = ds.clone();
-        grown.points.data.extend_from_slice(&[1.0, 1.0]);
-        grown.points.rows = 3;
+        grown.points.grow_rows(3);
+        grown.points.row_mut(2).copy_from_slice(&[1.0, 1.0]);
         grown.refresh_norms(2, 3);
         assert_eq!(grown.norms, vec![25.0, 4.0, 2.0]);
         grown.points.row_mut(0).copy_from_slice(&[1.0, 0.0]);

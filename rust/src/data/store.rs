@@ -1,0 +1,687 @@
+//! Out-of-core peer data plane: the offset-keyed, panel-aligned block
+//! store behind `store = "sparse"`.
+//!
+//! A worker only ever reads the ~`2·n/P` rows its jobs cover, yet the
+//! dense peer store allocates the full `n × d` zero matrix up front. The
+//! [`BlockStore`] replaces that with independently-allocated 64-row
+//! blocks ([`BLOCK_POINTS`] — deliberately the panel size, so a block
+//! boundary is always a legal kernel panel boundary), keyed by block
+//! index in a `BTreeMap`: a peer's resident footprint is O(covered
+//! rows), not O(n), and a dataset that only fits sharded across the
+//! cluster becomes runnable.
+//!
+//! # Block lifecycle
+//!
+//! 1. **Install.** A demand-shipped dataset frame lands at an arbitrary
+//!    row offset ([`BlockStore::install`]). Every 64-row block the span
+//!    touches is allocated on first touch (zero-filled, `64 × d`), the
+//!    overlapping rows are copied in, and the per-row canonical
+//!    [`crate::linalg::norm2`] is recomputed for exactly those rows —
+//!    the block's norm slice is the same pure memoization a [`Dataset`]
+//!    carries, so kernels reading it are bit-identical to recomputing.
+//!    Re-ships (reconnect recovery, overlapping spans) simply rewrite
+//!    rows and their norms; installs are idempotent.
+//! 2. **Read.** The executor never touches blocks directly: it asks the
+//!    owning [`PeerStore`] for a [`DataView`] over a job's row range,
+//!    which is granted only when the session's [`Coverage`] proves every
+//!    row of the range was installed — an uncovered row (and therefore a
+//!    stale or zero norm) is *impossible to read*, structurally, on both
+//!    the sparse and the dense variant. [`DataView::pieces`] then yields
+//!    the range as contiguous `(global_range, Block)` slices — one per
+//!    resident block for the sparse store, a single slice for the dense
+//!    one — each carrying its norm sub-slice.
+//! 3. **Drop.** Blocks live for the session; a reconnected replacement
+//!    session starts from an empty store and is re-shipped its coverage.
+//!
+//! The same structure backs the master's streaming admission buffer
+//! (`occd serve` stages un-sealed chunks in a [`BlockStore`] before a
+//! seal materializes the published generation), which is exactly the
+//! ROADMAP's "the ingest buffer and the block store are the same
+//! structure".
+
+use crate::config::StoreKind;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::{norm2, Matrix};
+use crate::runtime::Block;
+use std::collections::BTreeMap;
+use std::ops::Range;
+
+/// Rows per store block. Equal to [`crate::linalg::panel::PANEL_POINTS`]
+/// by construction (const-asserted below): a block boundary is always a
+/// panel boundary, so handing per-block slices to the panel kernels
+/// changes memory traversal, never arithmetic or compare order.
+pub const BLOCK_POINTS: usize = crate::linalg::panel::PANEL_POINTS;
+const _: () = assert!(BLOCK_POINTS == 64);
+
+// ---------------------------------------------------------------------------
+// Coverage: which point ranges a peer holds
+// ---------------------------------------------------------------------------
+
+/// A set of disjoint, sorted point ranges — which parts of the dataset a
+/// peer has been shipped (master side) or has installed (peer side).
+#[derive(Debug, Clone, Default)]
+pub struct Coverage {
+    spans: Vec<Range<usize>>,
+}
+
+impl Coverage {
+    /// Add a range, merging with overlapping or adjacent spans.
+    pub fn add(&mut self, r: Range<usize>) {
+        if r.start >= r.end {
+            return;
+        }
+        self.spans.push(r);
+        self.spans.sort_by_key(|s| s.start);
+        let mut merged: Vec<Range<usize>> = Vec::with_capacity(self.spans.len());
+        for s in self.spans.drain(..) {
+            match merged.last_mut() {
+                Some(last) if s.start <= last.end => last.end = last.end.max(s.end),
+                _ => merged.push(s),
+            }
+        }
+        self.spans = merged;
+    }
+
+    /// True if every point of `r` is covered.
+    pub fn covers(&self, r: &Range<usize>) -> bool {
+        r.start >= r.end || self.spans.iter().any(|s| s.start <= r.start && r.end <= s.end)
+    }
+
+    /// The sub-ranges of `r` not yet covered, in order.
+    pub fn missing(&self, r: &Range<usize>) -> Vec<Range<usize>> {
+        let mut out = Vec::new();
+        let mut at = r.start;
+        for s in &self.spans {
+            if at >= r.end {
+                break;
+            }
+            if s.end <= at {
+                continue;
+            }
+            if s.start >= r.end {
+                break;
+            }
+            if s.start > at {
+                out.push(at..s.start.min(r.end));
+            }
+            at = at.max(s.end);
+        }
+        if at < r.end {
+            out.push(at..r.end);
+        }
+        out
+    }
+
+    /// Forget everything (a fresh peer session holds nothing).
+    pub fn clear(&mut self) {
+        self.spans.clear();
+    }
+
+    /// True if nothing is covered.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// One past the highest covered row (0 when empty).
+    pub fn max_end(&self) -> usize {
+        self.spans.last().map(|s| s.end).unwrap_or(0)
+    }
+
+    /// Number of distinct `block_points`-aligned blocks the spans touch —
+    /// exactly the blocks a sparse [`BlockStore`] holding this coverage
+    /// has allocated, which is how the master models a peer's residency.
+    pub fn aligned_blocks(&self, block_points: usize) -> usize {
+        let mut count = 0usize;
+        let mut last: Option<usize> = None;
+        for s in &self.spans {
+            let b0 = s.start / block_points;
+            let b1 = (s.end - 1) / block_points;
+            let from = match last {
+                Some(l) if l + 1 > b0 => l + 1,
+                _ => b0,
+            };
+            if from <= b1 {
+                count += b1 - from + 1;
+            }
+            last = Some(match last {
+                Some(l) => l.max(b1),
+                None => b1,
+            });
+        }
+        count
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BlockStore: offset-keyed 64-row blocks with per-block norm slices
+// ---------------------------------------------------------------------------
+
+/// One resident block: `BLOCK_POINTS × d` row-major points (zero-filled
+/// where no install has written yet) plus the canonical per-row norms
+/// for the written rows.
+#[derive(Debug, Clone)]
+struct StoreBlock {
+    points: Vec<f32>,
+    norms: Vec<f32>,
+}
+
+/// Offset-keyed sparse point store: 64-row panel-aligned blocks,
+/// allocated only where installs landed. See the module docs for the
+/// block lifecycle.
+#[derive(Debug, Clone)]
+pub struct BlockStore {
+    dim: usize,
+    blocks: BTreeMap<usize, StoreBlock>,
+}
+
+impl BlockStore {
+    /// Empty store for `dim`-wide points.
+    pub fn new(dim: usize) -> BlockStore {
+        BlockStore { dim, blocks: BTreeMap::new() }
+    }
+
+    /// Dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of resident blocks.
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Resident point-storage bytes: `blocks × BLOCK_POINTS × d × 4`.
+    /// The dense equivalent is `n × d × 4` — the A/B the
+    /// `resident_data_bytes` metric compares.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.blocks.len() * BLOCK_POINTS * self.dim * 4) as u64
+    }
+
+    /// Install `rows` rows of row-major `data` at global row `offset`,
+    /// allocating the touched blocks on first touch and refreshing the
+    /// written rows' norms. Overlapping installs rewrite in place.
+    pub fn install(&mut self, offset: usize, data: &[f32], rows: usize) {
+        let d = self.dim;
+        debug_assert_eq!(data.len(), rows * d);
+        let end = offset + rows;
+        let mut at = offset;
+        while at < end {
+            let b = at / BLOCK_POINTS;
+            let b_lo = b * BLOCK_POINTS;
+            let hi = end.min(b_lo + BLOCK_POINTS);
+            let blk = self.blocks.entry(b).or_insert_with(|| StoreBlock {
+                points: vec![0.0; BLOCK_POINTS * d],
+                norms: vec![0.0; BLOCK_POINTS],
+            });
+            let local = at - b_lo;
+            let len = hi - at;
+            blk.points[local * d..(local + len) * d]
+                .copy_from_slice(&data[(at - offset) * d..(hi - offset) * d]);
+            for i in local..local + len {
+                blk.norms[i] = norm2(&blk.points[i * d..(i + 1) * d]);
+            }
+            at = hi;
+        }
+    }
+
+    /// Borrow global point `i`. Panics when `i`'s block is not resident —
+    /// readers must hold a coverage-checked [`DataView`].
+    pub fn point(&self, i: usize) -> &[f32] {
+        let d = self.dim;
+        let blk = self
+            .blocks
+            .get(&(i / BLOCK_POINTS))
+            .unwrap_or_else(|| panic!("point {i} read from a non-resident block"));
+        let local = i % BLOCK_POINTS;
+        &blk.points[local * d..(local + 1) * d]
+    }
+
+    /// Drop blocks lying entirely below global row `row`. The streaming
+    /// admission stage evicts staged blocks once a seal has materialized
+    /// them into the published generation; a block straddling `row`
+    /// stays resident (its upper rows may still be staged).
+    pub fn evict_below(&mut self, row: usize) {
+        self.blocks = self.blocks.split_off(&(row / BLOCK_POINTS));
+    }
+
+    /// The contiguous `(global_range, Block)` slices covering `range`, in
+    /// ascending row order — one per resident block the range touches.
+    /// Callers must have coverage-checked the range: a gap in residency
+    /// silently shortens the output, which a checked range cannot have.
+    pub fn pieces(&self, range: &Range<usize>) -> Vec<(Range<usize>, Block<'_>)> {
+        let mut out = Vec::new();
+        if range.start >= range.end {
+            return out;
+        }
+        let d = self.dim;
+        let b0 = range.start / BLOCK_POINTS;
+        let b1 = (range.end - 1) / BLOCK_POINTS;
+        for (b, blk) in self.blocks.range(b0..=b1) {
+            let b_lo = b * BLOCK_POINTS;
+            let lo = range.start.max(b_lo);
+            let hi = range.end.min(b_lo + BLOCK_POINTS);
+            let local = lo - b_lo;
+            let n = hi - lo;
+            out.push((
+                lo..hi,
+                Block {
+                    data: &blk.points[local * d..(local + n) * d],
+                    n,
+                    d,
+                    norms: Some(&blk.norms[local..local + n]),
+                },
+            ));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DataView: what the executor reads — dense or block-sparse, same API
+// ---------------------------------------------------------------------------
+
+/// A read view over point rows, handed to the job executor. Kernels see
+/// [`Block`] slices either way; the dense variant yields its range as a
+/// single slice, so the dense path is byte-for-byte the pre-store code.
+#[derive(Debug, Clone, Copy)]
+pub enum DataView<'a> {
+    /// A dense dataset (the in-proc path, and `store = "dense"` peers).
+    Dense(&'a Dataset),
+    /// A sparse block store (`store = "sparse"` peers).
+    Blocks(&'a BlockStore),
+}
+
+impl<'a> DataView<'a> {
+    /// Dimensionality.
+    pub fn dim(&self) -> usize {
+        match self {
+            DataView::Dense(ds) => ds.dim(),
+            DataView::Blocks(bs) => bs.dim(),
+        }
+    }
+
+    /// Borrow global point `i`.
+    pub fn point(&self, i: usize) -> &[f32] {
+        match self {
+            DataView::Dense(ds) => ds.point(i),
+            DataView::Blocks(bs) => bs.point(i),
+        }
+    }
+
+    /// The contiguous `(global_range, Block)` slices covering `range`, in
+    /// ascending row order. Per-point kernels are order- and
+    /// grouping-independent, and the sequential reducers iterate pieces
+    /// in ascending row order, so any piece partition of a range is
+    /// bit-identical to the one-slice dense view.
+    pub fn pieces(&self, range: &Range<usize>) -> Vec<(Range<usize>, Block<'a>)> {
+        match self {
+            DataView::Dense(ds) => {
+                if range.start >= range.end {
+                    Vec::new()
+                } else {
+                    vec![(range.clone(), Block::of_dataset(ds, range.clone()))]
+                }
+            }
+            DataView::Blocks(bs) => bs.pieces(range),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PeerStore: the session store — coverage-gated reads over either variant
+// ---------------------------------------------------------------------------
+
+/// A peer session's dataset store: installs land in either a dense
+/// [`Dataset`] or a sparse [`BlockStore`] (per the `store` knob), and
+/// *every* read goes through [`PeerStore::view`], which refuses any range
+/// the session's [`Coverage`] does not prove installed — the structural
+/// fix for stale-norm reads on rows a grow zero-filled but no install
+/// ever wrote.
+#[derive(Debug)]
+pub struct PeerStore {
+    kind: StoreKind,
+    covered: Coverage,
+    dense: Option<Dataset>,
+    sparse: Option<BlockStore>,
+}
+
+impl PeerStore {
+    /// Empty store of the given kind. Nothing is allocated until the
+    /// first install — validator peers never receive data and never pay.
+    pub fn new(kind: StoreKind) -> PeerStore {
+        PeerStore { kind, covered: Coverage::default(), dense: None, sparse: None }
+    }
+
+    /// The store variant in force.
+    pub fn kind(&self) -> StoreKind {
+        self.kind
+    }
+
+    /// The installed coverage.
+    pub fn covered(&self) -> &Coverage {
+        &self.covered
+    }
+
+    /// Install a shipped block of `rows × d` points at row `offset`.
+    /// `n_hint` is the handshook dataset length — the dense variant
+    /// allocates its full `max(n_hint, end) × d` matrix on first install
+    /// (growing zero-filled past it when streaming ships beyond the
+    /// handshook geometry); the sparse variant allocates only the touched
+    /// 64-row blocks.
+    pub fn install(&mut self, n_hint: usize, d: usize, offset: usize, block: &Matrix) {
+        debug_assert_eq!(block.cols, d);
+        let end = offset + block.rows;
+        match self.kind {
+            StoreKind::Dense => {
+                let ds =
+                    self.dense.get_or_insert_with(|| Dataset::new(Matrix::zeros(n_hint, d), None));
+                if ds.points.rows < end {
+                    ds.points.grow_rows(end);
+                }
+                ds.points.data[offset * d..end * d].copy_from_slice(&block.data);
+                // Keep the point-norm cache coherent with the rows just
+                // written (and grow it if the store grew past the
+                // handshook geometry).
+                ds.refresh_norms(offset, end);
+            }
+            StoreKind::Sparse => {
+                let bs = self.sparse.get_or_insert_with(|| BlockStore::new(d));
+                bs.install(offset, &block.data, block.rows);
+            }
+        }
+        self.covered.add(offset..end);
+    }
+
+    /// Coverage-gated read view for a job's data need. `Ok(None)` when
+    /// the job reads no points (no range, or an empty one — tail epochs);
+    /// `Err` when any row of the range was never installed.
+    pub fn view(&self, need: &Option<Range<usize>>) -> Result<Option<DataView<'_>>> {
+        let Some(range) = need else { return Ok(None) };
+        if range.start >= range.end {
+            return Ok(None);
+        }
+        if !self.covered.covers(range) {
+            return Err(Error::Coordinator(format!(
+                "job range {}..{} not covered by shipped dataset blocks",
+                range.start, range.end
+            )));
+        }
+        match self.kind {
+            StoreKind::Dense => {
+                Ok(Some(DataView::Dense(self.dense.as_ref().expect("covered implies installed"))))
+            }
+            StoreKind::Sparse => {
+                Ok(Some(DataView::Blocks(self.sparse.as_ref().expect("covered implies installed"))))
+            }
+        }
+    }
+
+    /// Resident point-storage bytes: the dense matrix's `rows × d × 4`,
+    /// or the block store's `blocks × 64 × d × 4`. 0 before any install.
+    pub fn resident_bytes(&self) -> u64 {
+        match self.kind {
+            StoreKind::Dense => self
+                .dense
+                .as_ref()
+                .map(|ds| (ds.points.rows * ds.points.cols * 4) as u64)
+                .unwrap_or(0),
+            StoreKind::Sparse => self.sparse.as_ref().map(|bs| bs.resident_bytes()).unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| (rng.next_f32() - 0.5) * 8.0).collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    /// Gather a view's pieces back into one dense row-major buffer.
+    fn materialize(view: &DataView<'_>, range: &Range<usize>) -> (Vec<f32>, Vec<f32>) {
+        let d = view.dim();
+        let mut points = Vec::new();
+        let mut norms = Vec::new();
+        let mut at = range.start;
+        for (r, block) in view.pieces(range) {
+            assert_eq!(r.start, at, "pieces must tile the range contiguously");
+            assert_eq!(block.n, r.end - r.start);
+            points.extend_from_slice(block.data);
+            norms.extend_from_slice(block.norms.expect("store views carry norms"));
+            at = r.end;
+        }
+        assert_eq!(at, range.end, "pieces must cover the whole range");
+        assert_eq!(points.len(), (range.end - range.start) * d);
+        (points, norms)
+    }
+
+    #[test]
+    fn coverage_merges_and_answers() {
+        let mut c = Coverage::default();
+        c.add(10..20);
+        c.add(30..40);
+        assert!(c.covers(&(10..20)));
+        assert!(!c.covers(&(10..21)));
+        assert!(!c.covers(&(25..26)));
+        assert!(c.covers(&(15..15))); // empty is always covered
+        c.add(20..30); // adjacent: merges all three
+        assert!(c.covers(&(10..40)));
+        assert_eq!(c.missing(&(0..50)), vec![0..10, 40..50]);
+        assert_eq!(c.max_end(), 40);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.missing(&(5..8)), vec![5..8]);
+        assert_eq!(c.max_end(), 0);
+    }
+
+    #[test]
+    fn coverage_counts_aligned_blocks_without_double_counting() {
+        let mut c = Coverage::default();
+        assert_eq!(c.aligned_blocks(64), 0);
+        c.add(0..10);
+        c.add(20..30); // same block as the first span
+        assert_eq!(c.aligned_blocks(64), 1);
+        c.add(60..70); // straddles blocks 0 and 1
+        assert_eq!(c.aligned_blocks(64), 2);
+        c.add(256..384); // blocks 4 and 5
+        assert_eq!(c.aligned_blocks(64), 4);
+        // Mirrors what a sparse store holding this coverage allocates.
+        let mut bs = BlockStore::new(3);
+        for s in [0..10, 20..30, 60..70, 256..384] {
+            let m = mat(s.end - s.start, 3, s.start as u64 + 1);
+            bs.install(s.start, &m.data, m.rows);
+        }
+        assert_eq!(bs.block_count(), c.aligned_blocks(64));
+    }
+
+    #[test]
+    fn out_of_order_installs_read_back_bitwise() {
+        // Spans installed out of order, at unaligned offsets, across
+        // block boundaries — the view must read back the exact bytes
+        // with canonical norms.
+        let d = 5;
+        let src = mat(400, d, 7);
+        let mut ps = PeerStore::new(StoreKind::Sparse);
+        for span in [200..340usize, 0..100, 100..200] {
+            let rows = span.end - span.start;
+            let m = Matrix::from_vec(rows, d, src.data[span.start * d..span.end * d].to_vec());
+            ps.install(400, d, span.start, &m);
+        }
+        let range = 0..340;
+        let view = ps.view(&Some(range.clone())).unwrap().unwrap();
+        let (points, norms) = materialize(&view, &range);
+        assert_eq!(points, src.data[..340 * d]);
+        for (i, nrm) in norms.iter().enumerate() {
+            assert_eq!(nrm.to_bits(), norm2(src.row(i)).to_bits(), "norm of row {i}");
+        }
+        // Per-point reads agree with the piece view.
+        for i in [0usize, 63, 64, 199, 339] {
+            assert_eq!(view.point(i), src.row(i));
+        }
+    }
+
+    #[test]
+    fn overlapping_reship_rewrites_rows_and_norms() {
+        // A reconnect re-ships a span that partially overlaps an earlier
+        // install with different bytes: the rewrite must win, rows *and*
+        // norms, on both store variants.
+        let d = 4;
+        let first = mat(128, d, 11);
+        let second = mat(96, d, 23);
+        for kind in [StoreKind::Sparse, StoreKind::Dense] {
+            let mut ps = PeerStore::new(kind);
+            ps.install(128, d, 0, &first);
+            ps.install(128, d, 32, &second); // rewrites rows 32..128
+            let range = 0..128;
+            let view = ps.view(&Some(range.clone())).unwrap().unwrap();
+            let (points, norms) = materialize(&view, &range);
+            assert_eq!(&points[..32 * d], &first.data[..32 * d]);
+            assert_eq!(&points[32 * d..], &second.data[..]);
+            for i in 0..128 {
+                let expect = if i < 32 { norm2(first.row(i)) } else { norm2(second.row(i - 32)) };
+                assert_eq!(norms[i].to_bits(), expect.to_bits(), "{:?} norm of row {i}", kind);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_coverage_gates_reads_on_both_variants() {
+        // Readable ⇔ covered: a range is viewable exactly when every row
+        // was installed. Uncovered gap rows (dense zero-fill between
+        // installs) must be impossible to read — the norm-staleness fix
+        // is structural, not numerical.
+        let d = 3;
+        for kind in [StoreKind::Sparse, StoreKind::Dense] {
+            let mut ps = PeerStore::new(kind);
+            let lo = mat(64, d, 3);
+            let hi = mat(64, d, 4);
+            ps.install(512, d, 0, &lo);
+            ps.install(512, d, 256, &hi); // gap: 64..256 never installed
+            assert!(ps.view(&Some(0..64)).unwrap().is_some());
+            assert!(ps.view(&Some(256..320)).unwrap().is_some());
+            assert!(ps.view(&None).unwrap().is_none());
+            assert!(ps.view(&Some(10..10)).unwrap().is_none(), "empty range reads no points");
+            for bad in [0..65, 63..70, 100..200, 200..300, 0..320] {
+                let err = ps.view(&Some(bad.clone())).unwrap_err().to_string();
+                assert!(err.contains("not covered"), "{:?} {:?}: {err}", kind, bad);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_gap_rows_unreadable_even_after_grow() {
+        // The dense-path regression for the norm-coherence satellite: an
+        // install past the handshook n grows the matrix, zero-filling the
+        // gap and leaving gap norms unrefreshed (refresh_norms only
+        // covers the installed span). Those rows must stay unreadable.
+        let d = 2;
+        let mut ps = PeerStore::new(StoreKind::Dense);
+        ps.install(64, d, 0, &mat(64, d, 9));
+        // Streaming grew the master's dataset: a block lands past n=64.
+        ps.install(64, d, 192, &mat(32, d, 10));
+        assert!(ps.view(&Some(0..64)).unwrap().is_some());
+        assert!(ps.view(&Some(192..224)).unwrap().is_some());
+        // The zero-filled grow region between 64 and 192 is not covered.
+        assert!(ps.view(&Some(64..192)).unwrap_err().to_string().contains("not covered"));
+        assert!(ps.view(&Some(0..224)).unwrap_err().to_string().contains("not covered"));
+        assert_eq!(ps.resident_bytes(), (224 * d * 4) as u64, "dense resident is O(grown n)");
+    }
+
+    #[test]
+    fn pieces_align_to_panel_boundaries() {
+        // Sparse pieces break exactly at 64-row block boundaries (which
+        // are panel boundaries by construction) and nowhere else.
+        let d = 2;
+        let src = mat(256, d, 31);
+        let mut ps = PeerStore::new(StoreKind::Sparse);
+        ps.install(256, d, 0, &src);
+        let range = 10..250;
+        let view = ps.view(&Some(range.clone())).unwrap().unwrap();
+        let pieces = view.pieces(&range);
+        assert_eq!(
+            pieces.iter().map(|(r, _)| r.clone()).collect::<Vec<_>>(),
+            vec![10..64, 64..128, 128..192, 192..250]
+        );
+        for (r, b) in &pieces {
+            assert!(r.start == range.start || r.start % BLOCK_POINTS == 0);
+            assert_eq!(b.n, r.end - r.start);
+        }
+        // The dense view is one unbroken slice — the pre-store shape.
+        let ds = Dataset::new(src.clone(), None);
+        let dense = DataView::Dense(&ds);
+        assert_eq!(dense.pieces(&range).len(), 1);
+        assert!(dense.pieces(&(0..0)).is_empty());
+    }
+
+    #[test]
+    fn reconnect_reships_onto_a_fresh_store() {
+        // A replacement session starts from an empty PeerStore and is
+        // re-shipped its coverage: the fresh store must answer the same
+        // ranges with the same bytes, and nothing beyond them.
+        let d = 6;
+        let src = mat(300, d, 17);
+        let spans = [0..64usize, 128..300];
+        let run = |kind: StoreKind| {
+            let mut ps = PeerStore::new(kind);
+            for s in &spans {
+                let rows = s.end - s.start;
+                let m = Matrix::from_vec(rows, d, src.data[s.start * d..s.end * d].to_vec());
+                ps.install(300, d, s.start, &m);
+            }
+            ps
+        };
+        for kind in [StoreKind::Sparse, StoreKind::Dense] {
+            let old = run(kind);
+            let fresh = run(kind); // the re-ship, from Coverage::missing
+            for s in &spans {
+                let a = materialize(&old.view(&Some(s.clone())).unwrap().unwrap(), s);
+                let b = materialize(&fresh.view(&Some(s.clone())).unwrap().unwrap(), s);
+                assert_eq!(a, b);
+            }
+            assert!(fresh.view(&Some(64..128)).is_err());
+        }
+    }
+
+    #[test]
+    fn sparse_residency_is_o_covered_not_o_n() {
+        let d = 8;
+        let n = 4096;
+        let mut sparse = PeerStore::new(StoreKind::Sparse);
+        let mut dense = PeerStore::new(StoreKind::Dense);
+        assert_eq!(sparse.resident_bytes(), 0);
+        assert_eq!(dense.resident_bytes(), 0);
+        let m = mat(256, d, 5);
+        sparse.install(n, d, 1024, &m);
+        dense.install(n, d, 1024, &m);
+        assert_eq!(sparse.resident_bytes(), (256 * d * 4) as u64);
+        assert_eq!(dense.resident_bytes(), (n * d * 4) as u64);
+        assert!(sparse.resident_bytes() < dense.resident_bytes());
+        // A partial block still costs one whole block.
+        let mut ps = PeerStore::new(StoreKind::Sparse);
+        ps.install(n, d, 10, &mat(4, d, 6));
+        assert_eq!(ps.resident_bytes(), (BLOCK_POINTS * d * 4) as u64);
+    }
+
+    #[test]
+    fn evict_below_drops_only_fully_sealed_blocks() {
+        let d = 2;
+        let src = mat(200, d, 41);
+        let mut bs = BlockStore::new(d);
+        bs.install(0, &src.data, 200); // blocks 0..=3
+        assert_eq!(bs.block_count(), 4);
+        bs.evict_below(100); // row 100 straddles block 1: it must survive
+        assert_eq!(bs.block_count(), 3);
+        assert_eq!(bs.point(100), src.row(100));
+        assert_eq!(bs.point(199), src.row(199));
+        bs.evict_below(128); // block-aligned bound drops block 1 exactly
+        assert_eq!(bs.block_count(), 2);
+        bs.evict_below(500);
+        assert_eq!(bs.block_count(), 0);
+        assert_eq!(bs.resident_bytes(), 0);
+    }
+}

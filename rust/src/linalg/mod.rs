@@ -102,6 +102,24 @@ impl Matrix {
         self.rows += 1;
     }
 
+    /// Grow to `new_rows` rows, zero-filling the new ones (no-op when
+    /// already that tall). The single sanctioned way to extend a matrix
+    /// in place — callers never touch `rows`/`data` bookkeeping — with
+    /// the same explicit capacity doubling as [`Matrix::push_row`], so
+    /// repeated small grows stay `O(n)` amortized.
+    pub fn grow_rows(&mut self, new_rows: usize) {
+        if new_rows <= self.rows {
+            return;
+        }
+        let need = new_rows * self.cols;
+        if need > self.data.capacity() {
+            let target = need.max(self.data.capacity().saturating_mul(2));
+            self.data.reserve_exact(target - self.data.len());
+        }
+        self.data.resize(need, 0.0);
+        self.rows = new_rows;
+    }
+
     /// Element accessor.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f32 {
@@ -309,6 +327,29 @@ mod tests {
         }
         assert_eq!(pre.data.capacity(), cap0);
         assert_eq!(pre.rows, 1024);
+    }
+
+    #[test]
+    fn grow_rows_zero_fills_and_reserves_geometrically() {
+        let mut m = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        m.grow_rows(4);
+        assert_eq!(m.rows, 4);
+        assert_eq!(m.data.len(), 12);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(3), &[0.0, 0.0, 0.0]);
+        // Shrinking and same-size calls are no-ops.
+        m.grow_rows(2);
+        m.grow_rows(4);
+        assert_eq!(m.rows, 4);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        // Repeated one-row grows reallocate O(log n) times, like push_row.
+        let mut g = Matrix::zeros(0, 8);
+        let mut caps = std::collections::BTreeSet::new();
+        for r in 1..=1024 {
+            g.grow_rows(r);
+            caps.insert(g.data.capacity());
+        }
+        assert!(caps.len() <= 14, "grow_rows reallocated {} times", caps.len());
     }
 
     #[test]

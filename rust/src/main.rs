@@ -65,6 +65,7 @@ fn app() -> App {
                 .flag("transport", "inproc | tcp", Some("inproc"))
                 .flag("io", "reactor | poll (event-loop blocking mode)", Some("reactor"))
                 .flag("kernel", "panel | scalar (assignment distance kernel)", Some("panel"))
+                .flag("store", "sparse | dense (peer-side dataset block store)", Some("sparse"))
                 .flag("validator-shards", "validator peers (0 = procs/2, min 1)", Some("0"))
                 .flag("peers", "comma-separated host:port of occd worker compute peers", None)
                 .flag(
@@ -108,6 +109,7 @@ fn app() -> App {
                 )
                 .flag("io", "reactor | poll (event-loop blocking mode)", Some("reactor"))
                 .flag("kernel", "panel | scalar (assignment distance kernel)", Some("panel"))
+                .flag("store", "sparse | dense (peer-side dataset block store)", Some("sparse"))
                 .flag("validator-shards", "validator peers (0 = procs/2, min 1)", Some("0"))
                 .flag("peers", "comma-separated host:port of occd worker compute peers", None)
                 .flag(
@@ -148,6 +150,7 @@ fn app() -> App {
                 .flag("listen", "host:port to listen on (port 0 = ephemeral)", Some("127.0.0.1:0"))
                 .flag("backend", "native | xla", Some("native"))
                 .flag("artifacts", "artifacts directory (xla backend)", Some("artifacts"))
+                .flag("store", "sparse | dense (session dataset block store)", Some("sparse"))
                 .switch("persist", "keep serving new coordinator sessions after one ends"),
         )
         .command(
@@ -262,6 +265,9 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
     if let Some(v) = p.get("kernel") {
         cfg.kernel = occml::config::KernelKind::parse(v)?;
     }
+    if let Some(v) = p.get("store") {
+        cfg.store = occml::config::StoreKind::parse(v)?;
+    }
     if let Some(v) = p.get_parse::<usize>("validator-shards")? {
         cfg.validator_shards = v;
     }
@@ -335,6 +341,7 @@ fn cmd_run(p: &Parsed) -> Result<i32> {
         println!("transport   : {}", cfg.transport.name());
         if cfg.transport == TransportKind::Tcp {
             println!("io          : {}", cfg.io.name());
+            println!("store       : {}", cfg.store.name());
         }
         println!("kernel      : {}", cfg.kernel.name());
         println!("points      : {}", cfg.n);
@@ -562,11 +569,15 @@ fn cmd_worker(p: &Parsed) -> Result<i32> {
     use std::io::Write as _;
     std::io::stdout().flush().ok();
     let persist = p.switch("persist");
+    let store = match p.get("store") {
+        Some(v) => occml::config::StoreKind::parse(v)?,
+        None => occml::config::StoreKind::from_env(),
+    };
     loop {
         let (stream, peer) = listener
             .accept()
             .map_err(|e| Error::config(format!("worker accept: {e}")))?;
-        match occml::coordinator::tcp::serve_peer(stream, backend.clone()) {
+        match occml::coordinator::tcp::serve_peer_with(stream, backend.clone(), store) {
             Ok(()) => eprintln!("occd worker: session from {peer} ended"),
             Err(e) => eprintln!("occd worker: session from {peer} failed: {e}"),
         }

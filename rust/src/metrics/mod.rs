@@ -146,6 +146,13 @@ pub struct EpochRecord {
     /// `scalar`), stamped so bench output can be grouped per kernel.
     /// Empty for records that predate the knob.
     pub kernel: &'static str,
+    /// Peak modeled resident dataset footprint of any single peer's
+    /// session store, in bytes, as of this epoch (a gauge, not a
+    /// per-epoch delta; zero in-proc). Under `store = "dense"` this is
+    /// the full grown `n × d × 4` a session allocates; under
+    /// `store = "sparse"` only the panel-aligned blocks its shipped
+    /// coverage touches.
+    pub resident_data_bytes: u64,
 }
 
 impl EpochRecord {
@@ -184,6 +191,7 @@ impl EpochRecord {
             ("ingest_queue_depth", Json::Num(self.ingest_queue_depth as f64)),
             ("compute_ms", Json::Num(self.compute_time.as_secs_f64() * 1e3)),
             ("kernel", Json::Str(self.kernel.to_string())),
+            ("resident_data_bytes", Json::Num(self.resident_data_bytes as f64)),
         ])
     }
 }
@@ -341,6 +349,13 @@ impl RunSummary {
     pub fn max_ingest_queue_depth(&self) -> usize {
         self.epochs.iter().map(|e| e.ingest_queue_depth).max().unwrap_or(0)
     }
+    /// Peak per-peer resident dataset footprint over the run (a gauge —
+    /// max, not sum; zero in-proc). The headline number the `store`
+    /// knob's A/B compares: sparse peers sit strictly below the dense
+    /// `n × d × 4`.
+    pub fn max_resident_data_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.resident_data_bytes).max().unwrap_or(0)
+    }
 }
 
 /// Where metrics lines go.
@@ -447,6 +462,7 @@ mod tests {
             ingest_queue_depth: 4,
             compute_time: Duration::from_millis(9),
             kernel: "panel",
+            resident_data_bytes: 128,
         }
     }
 
@@ -481,6 +497,7 @@ mod tests {
         assert_eq!(s.total_dataset_bytes(), 3 * 32);
         assert_eq!(s.total_reactor_wakeups(), 9);
         assert_eq!(s.total_writev_batches(), 6);
+        assert_eq!(s.max_resident_data_bytes(), 128, "gauge: max, not sum");
     }
 
     #[test]
@@ -513,6 +530,7 @@ mod tests {
         assert_eq!(j.get("ingest_queue_depth").unwrap().as_usize(), Some(4));
         assert!(j.get("compute_ms").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("kernel").unwrap().as_str(), Some("panel"));
+        assert_eq!(j.get("resident_data_bytes").unwrap().as_usize(), Some(128));
     }
 
     #[test]

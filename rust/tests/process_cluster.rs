@@ -18,7 +18,9 @@
 //! Every test body runs under a hard timeout so a hung handshake or a
 //! wedged wave fails fast instead of wedging CI.
 
-use occml::config::{Algo, DataSource, RunConfig, SchedulerKind, ShardingKind, TransportKind};
+use occml::config::{
+    Algo, DataSource, RunConfig, SchedulerKind, ShardingKind, StoreKind, TransportKind,
+};
 use occml::coordinator::{driver, Model};
 use occml::data::generators::{bp_features, dp_clusters, GenConfig};
 use occml::data::Dataset;
@@ -53,12 +55,17 @@ impl Drop for WorkerProc {
 }
 
 /// Spawn `occd worker --listen <listen>` and wait for its "listening on"
-/// line, which carries the resolved (possibly ephemeral) address.
-fn spawn_worker_on(listen: &str, persist: bool) -> WorkerProc {
+/// line, which carries the resolved (possibly ephemeral) address. `store`
+/// pins the session block store via `--store`, overriding any ambient
+/// `OCCML_STORE` so store-pinned tests mean what they say in every CI job.
+fn spawn_worker_cfg(listen: &str, persist: bool, store: Option<&str>) -> WorkerProc {
     let mut cmd = Command::new(env!("CARGO_BIN_EXE_occd"));
     cmd.args(["worker", "--listen", listen]).stdout(Stdio::piped()).stderr(Stdio::null());
     if persist {
         cmd.arg("--persist");
+    }
+    if let Some(s) = store {
+        cmd.args(["--store", s]);
     }
     let mut child = cmd.spawn().expect("spawn occd worker");
     let stdout = child.stdout.take().expect("worker stdout piped");
@@ -74,6 +81,10 @@ fn spawn_worker_on(listen: &str, persist: bool) -> WorkerProc {
         .to_string();
     assert!(addr.contains(':'), "worker banner did not end in an address: {line:?}");
     WorkerProc { child, addr }
+}
+
+fn spawn_worker_on(listen: &str, persist: bool) -> WorkerProc {
+    spawn_worker_cfg(listen, persist, None)
 }
 
 fn spawn_worker(persist: bool) -> WorkerProc {
@@ -329,6 +340,57 @@ fn chaos_killed_worker_recovers_via_replacement_on_same_port() {
         assert!(
             stats.full_snapshot_fallbacks >= 2,
             "cold sessions and re-bases must be counted as full installs"
+        );
+    });
+}
+
+/// The chaos-replacement schedule again, this time pinned to the sparse
+/// block store on both sides of the wire: the replacement session's
+/// re-shipped coverage lands on a fresh `BlockStore`, the model stays
+/// bit-identical to the in-proc dense reference, and the coordinator's
+/// peak-residency gauge shows the peers held strictly less than the
+/// dense `n x d` matrix would have cost them.
+#[test]
+fn chaos_replacement_under_sparse_store_bitidentical_and_bounded_resident() {
+    with_timeout(240, "chaos sparse store", || {
+        let w1 = spawn_worker_cfg("127.0.0.1:0", true, Some("sparse"));
+        let mut victim = spawn_worker_cfg("127.0.0.1:0", true, Some("sparse"));
+        let seed = 37;
+        let data = gen_data(Algo::DpMeans, 12_000, seed);
+        let reference = run(&base_cfg(Algo::DpMeans, &data, 2, 64, seed), &data).unwrap();
+        let cfg = RunConfig {
+            transport: TransportKind::Tcp,
+            // Conflict packing gives each peer an uneven, component-aligned
+            // slice — exactly the coverage shape the block store exists for.
+            sharding: ShardingKind::Conflict,
+            store: StoreKind::Sparse,
+            peers: vec![w1.addr.clone(), victim.addr.clone()],
+            validator_peers: vec![],
+            reconnect_attempts: 40,
+            ..base_cfg(Algo::DpMeans, &data, 2, 64, seed)
+        };
+        let victim_addr = victim.addr.clone();
+        let run_data = data.clone();
+        let handle = std::thread::spawn(move || run(&cfg, &run_data));
+        std::thread::sleep(Duration::from_millis(200));
+        victim.kill();
+        let _replacement = spawn_worker_cfg(&victim_addr, true, Some("sparse"));
+        let out = handle
+            .join()
+            .expect("coordinator thread")
+            .expect("run must recover via the replacement worker");
+        assert_models_identical(
+            &reference.model,
+            &out.model,
+            "sparse store chaos replacement",
+        );
+        let resident = out.summary.transport.resident_data_bytes;
+        let dense_full = (data.len() * data.dim() * 4) as u64;
+        assert!(resident > 0, "sparse residency gauge must be recorded");
+        assert!(
+            resident < dense_full,
+            "a half-coverage sparse peer must hold strictly less than the \
+             dense matrix: {resident} >= {dense_full}"
         );
     });
 }
